@@ -1,0 +1,68 @@
+//! Edge-serving scenario: a trained quantized MLP served over TCP with
+//! dynamic batching on the simulated macro; a multi-threaded client drives
+//! load and the server reports latency/throughput/energy.
+//!
+//! Run: `cargo run --release --example edge_serve [requests]`
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::deployment::{argmax, MlpDeployment};
+use cimsim::coordinator::{serve, Client, ServeConfig};
+use cimsim::mapping::NativeBackend;
+use cimsim::nn::dataset::BlobDataset;
+use cimsim::nn::mlp::{train, Mlp};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let n_req: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+
+    // Train + quantize the edge model.
+    let mut ds = BlobDataset::new(12, 0.05, 21);
+    let data: Vec<(Vec<f32>, usize)> =
+        ds.batch(300).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let mut mlp = Mlp::new(&[144, 32, 10], 4);
+    let acc = train(&mut mlp, &data, 8, 0.05, 2);
+    let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
+    let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+    println!("model trained (float acc {:.1}%), quantized to 4b:4b", acc * 100.0);
+
+    // Serve on the simulated macro with dynamic batching.
+    let backend = Box::new(NativeBackend::new(cfg.clone()));
+    let handle = serve(
+        dep,
+        backend,
+        ServeConfig { max_batch: 16, batch_timeout: std::time::Duration::from_millis(1) },
+    )?;
+    println!("serving on {} (max batch 16, 1 ms window)", handle.addr);
+
+    // 8 concurrent clients.
+    let addr = handle.addr;
+    let per_client = n_req / 8;
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let reqs: Vec<(Vec<f32>, usize)> = BlobDataset::new(12, 0.05, 100 + t)
+            .batch(per_client)
+            .into_iter()
+            .map(|s| (s.image.data, s.label))
+            .collect();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).expect("connect");
+            let mut correct = 0usize;
+            for (x, y) in &reqs {
+                if argmax(&c.infer(x).expect("infer")) == *y {
+                    correct += 1;
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let metrics = handle.shutdown();
+    println!(
+        "accuracy on CIM under load: {:.1}% over {} requests",
+        100.0 * correct as f64 / (per_client * 8) as f64,
+        per_client * 8
+    );
+    println!("{}", metrics.report(cfg.mac.clock_mhz * 1e6).render());
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! End-to-end driver (DESIGN.md "E2E"): train a small MLP in float on a
+//! real (synthetic) 10-class image workload — logging the loss curve —
+//! post-training-quantize it to the macro's 4-b formats, deploy it on the
+//! simulated CIM macro in every enhancement mode, and report accuracy,
+//! throughput and energy. When `artifacts/` exists, the same deployment
+//! also runs through the AOT-compiled XLA path.
+//!
+//! Run: `cargo run --release --example mlp_train_and_deploy`
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::deployment::{argmax, MlpDeployment};
+use cimsim::mapping::{CimBackend, DigitalBackend, NativeBackend};
+use cimsim::nn::dataset::BlobDataset;
+use cimsim::nn::mlp::Mlp;
+use cimsim::util::rng::{Rng, Xoshiro256};
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = Config::default();
+
+    // ---- 1. data + float training (a few hundred SGD steps) ----
+    let mut ds = BlobDataset::new(12, 0.05, 17);
+    let train_set: Vec<(Vec<f32>, usize)> =
+        ds.batch(400).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let test_set: Vec<(Vec<f32>, usize)> =
+        ds.batch(400).into_iter().map(|s| (s.image.data, s.label)).collect();
+
+    let mut mlp = Mlp::new(&[144, 32, 10], 5);
+    let mut order: Vec<usize> = (0..train_set.len()).collect();
+    let mut rng = Xoshiro256::seeded(9);
+    println!("== float training (SGD, lr 0.05) ==");
+    let mut step = 0usize;
+    for epoch in 0..8 {
+        rng.shuffle(&mut order);
+        let mut loss_sum = 0f32;
+        for &i in &order {
+            let (x, y) = &train_set[i];
+            loss_sum += mlp.train_step(x, *y, 0.05);
+            step += 1;
+        }
+        println!(
+            "epoch {epoch} (step {step}): mean loss {:.4}, train acc {:.1}%",
+            loss_sum / order.len() as f32,
+            100.0 * cimsim::nn::mlp::accuracy(&mlp, &train_set)
+        );
+    }
+    let float_acc = cimsim::nn::mlp::accuracy(&mlp, &test_set);
+    println!("float test accuracy: {:.1}%\n", float_acc * 100.0);
+
+    // ---- 2. post-training quantization to 4-b ----
+    let cal: Vec<Vec<f32>> = train_set.iter().take(64).map(|(x, _)| x.clone()).collect();
+    let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+    let xs: Vec<Vec<f32>> = test_set.iter().map(|(x, _)| x.clone()).collect();
+    let digital_logits = dep.run_digital(&xs);
+    let digital_acc = test_set
+        .iter()
+        .zip(&digital_logits)
+        .filter(|((_, y), l)| argmax(l) == **&y)
+        .count() as f64
+        / test_set.len() as f64;
+    println!("4-b quantized (exact digital) accuracy: {:.1}%\n", digital_acc * 100.0);
+
+    // ---- 3. deploy on the simulated macro, every enhancement mode ----
+    println!("== deployment on the simulated 16 Kb CIM macro ==");
+    println!("{:<12} {:>9} {:>12} {:>12} {:>12} {:>10}", "mode", "accuracy", "core ops", "µJ total", "TOPS/W", "ms/img*");
+    for enh in [
+        EnhanceConfig::default(),
+        EnhanceConfig::fold_only(),
+        EnhanceConfig::boost_only(),
+        EnhanceConfig::both(),
+    ] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        let mut backend = NativeBackend::new(c.clone());
+        let t0 = Instant::now();
+        let logits = dep.run_native(&mut backend, &xs)?;
+        let wall = t0.elapsed();
+        let acc = test_set
+            .iter()
+            .zip(&logits)
+            .filter(|((_, y), l)| argmax(l) == **&y)
+            .count() as f64
+            / test_set.len() as f64;
+        let st = backend.stats();
+        let ops = st.core_ops as f64 * (c.mac.engines * c.mac.rows * 2) as f64;
+        let device_ms =
+            st.total_cycles as f64 / (c.mac.clock_mhz * 1e6) * 1e3 / test_set.len() as f64;
+        println!(
+            "{:<12} {:>8.1}% {:>12} {:>12.2} {:>12.1} {:>10.4}",
+            c.enhance.label(),
+            acc * 100.0,
+            st.core_ops,
+            st.energy_fj() * 1e-9,
+            ops / (st.energy_fj() * 1e-15) / 1e12,
+            device_ms,
+        );
+        let _ = wall;
+    }
+    println!("(*device time per image at {:.0} MHz; simulator wall time excluded)", cfg.mac.clock_mhz);
+
+    // digital-backend sanity row
+    let mut dig = DigitalBackend::new(cfg.clone());
+    let dl = dep.run_native(&mut dig, &xs)?;
+    let dacc = test_set.iter().zip(&dl).filter(|((_, y), l)| argmax(l) == **&y).count() as f64
+        / test_set.len() as f64;
+    println!("digital backend check: {:.1}% (must equal exact digital)\n", dacc * 100.0);
+
+    // ---- 4. XLA artifact path (compiled L2/L1), if available ----
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.toml").exists() {
+        println!("== XLA (AOT Pallas kernel) path, fold+boost ==");
+        let mut c = cfg.clone();
+        c.enhance = EnhanceConfig::both();
+        match cimsim::runtime::xla_backend::XlaBackend::new(c.clone(), dir) {
+            Ok(mut be) => {
+                let sample: Vec<Vec<f32>> = xs.iter().take(64).cloned().collect();
+                let t0 = Instant::now();
+                let logits = dep.run_native(&mut be, &sample)?;
+                let acc = test_set
+                    .iter()
+                    .take(64)
+                    .zip(&logits)
+                    .filter(|((_, y), l)| argmax(l) == **&y)
+                    .count() as f64
+                    / 64.0;
+                println!(
+                    "artifact {}: accuracy {:.1}% over 64 images ({:.2} s wall)",
+                    be.artifact_name(),
+                    acc * 100.0,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => println!("skipping XLA path: {e}"),
+        }
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the XLA path");
+    }
+    Ok(())
+}

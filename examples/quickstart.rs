@@ -1,0 +1,52 @@
+//! Quickstart: load weights into the simulated 16 Kb macro, run one core
+//! operation, and compare the analog result against the exact digital MAC.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cimsim::cim::MacroSim;
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::energy::{core_op_energy, efficiency_tops_w};
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Configure the paper's macro with both signal-margin enhancements.
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    let mut sim = MacroSim::new(cfg.clone());
+
+    // Load 64x16 signed 4-b weights into core 0 (a column per engine).
+    let mut rng = Xoshiro256::seeded(7);
+    let weights: Vec<Vec<i64>> = (0..cfg.mac.rows)
+        .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+        .collect();
+    sim.load_core(0, &weights)?;
+
+    // One 64-way analog MAC + 9-b cell-embedded readout on random acts.
+    let acts: Vec<i64> = (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+    let result = sim.core_op(0, &acts, &mut rng)?;
+    let exact = sim.golden(0, &acts)?;
+
+    println!("engine |  exact MAC | chip code | reconstructed |  error");
+    println!("-------+------------+-----------+---------------+-------");
+    for e in 0..cfg.mac.engines {
+        println!(
+            "  {:>4} | {:>10} | {:>9} | {:>13.1} | {:>6.1}",
+            e,
+            exact[e],
+            result.codes[e],
+            result.values[e],
+            result.values[e] - exact[e] as f64
+        );
+    }
+
+    let energy = core_op_energy(&cfg, &result.stats);
+    println!(
+        "\nop took {} cycles ({:.1} ns at {:.0} MHz), {:.2} pJ -> {:.1} TOPS/W",
+        result.stats.total_cycles,
+        result.stats.total_cycles as f64 / cfg.mac.clock_mhz * 1e3,
+        cfg.mac.clock_mhz,
+        energy.total_fj() / 1e3,
+        efficiency_tops_w(&cfg, &energy),
+    );
+    Ok(())
+}

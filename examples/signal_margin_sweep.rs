@@ -1,0 +1,51 @@
+//! Signal-margin study: how the 1σ readout error and the signal margin move
+//! with the enhancement techniques and with the analog accumulation
+//! parallelism (rows per conversion) — the trade Figs 1/2/4 revolve around.
+//!
+//! Run: `cargo run --release --example signal_margin_sweep`
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::harness::accuracy::sigma_error_pct;
+use cimsim::util::table::{fmt_pct, fmt_sig, Table};
+
+fn main() {
+    let cfg = Config::default();
+
+    let mut t = Table::new(
+        "1σ readout error by mode (4000 random points)",
+        &["mode", "DTC scale", "sigma (%FS)", "paper"],
+    );
+    for (enh, paper) in [
+        (EnhanceConfig::default(), "1.30%"),
+        (EnhanceConfig::fold_only(), "-"),
+        (EnhanceConfig::boost_only(), "-"),
+        (EnhanceConfig::both(), "0.64%"),
+    ] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        t.row(&[
+            c.enhance.label().to_string(),
+            fmt_sig(c.enhance.dtc_scale(), 4),
+            fmt_pct(sigma_error_pct(&c, 4000, 1) / 100.0),
+            paper.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    let mut t2 = Table::new(
+        "1σ error vs analog accumulation parallelism (fold+boost)",
+        &["rows per conversion", "MAC range (units)", "sigma (%FS)"],
+    );
+    for rows in [16usize, 32, 64, 128, 256] {
+        let mut c = cfg.clone();
+        c.mac.rows = rows;
+        c.enhance = EnhanceConfig::both();
+        t2.row(&[
+            rows.to_string(),
+            c.mac.mac_range().to_string(),
+            fmt_pct(sigma_error_pct(&c, 2500, 2) / 100.0),
+        ]);
+    }
+    println!("{}", t2.to_markdown());
+    println!("(the paper's choice of 64 rows balances readout amortization against margin)");
+}

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: one CIM core operation (MAC phase + cell-embedded ADC),
+vectorized over a batch of activation vectors.
+
+Hardware adaptation (DESIGN.md §3 "Hardware-Adaptation"): the analog array
+is modeled as a dense [rows=64, kbits=3, engines=16] discharge tensor held
+in VMEM; the per-row accumulation is expressed as an MXU-shaped contraction
+(`einsum brk,rke->bre` + row reduce), and the 9-step binary search is an
+unrolled vector loop over the engine lanes. The grid tiles the batch
+dimension; weights and per-instance statics use constant index maps
+(weight-stationary, like the chip). `interpret=True` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example).
+
+VMEM budget per grid step (f32, B_TILE=16): weights 64·16, statics
+64·3·16·4B ≈ 12 KiB, batch blocks ≈ (16·64 + 16·64·3 + 16·16·17)·4B ≈
+230 KiB — far under the ~16 MiB VMEM of a real TPU core; the MXU would see
+a 64-deep contraction per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import ADC_BITS, KBITS, CoreParams
+
+B_TILE = 16
+
+
+def _kernel(p: CoreParams,
+            acts_ref, w_ref, cell_ref, sa_ref, cap_ref, step_ref,
+            zjit_ref, zstep_ref, zcmp_ref,
+            codes_ref, values_ref):
+    """Pallas kernel body: one batch tile through MAC + readout."""
+    acts = acts_ref[...]          # [TB, R]
+    w = w_ref[...]                # [R, E] signed
+    cell = cell_ref[...]          # [R, K, E]
+    sa = sa_ref[...]              # [E]
+    cap = cap_ref[...]            # [E]
+    step = step_ref[...]          # [E, 8]
+    z_jit = zjit_ref[...]         # [TB, R, K]
+    z_step = zstep_ref[...]       # [TB, E, 8]
+    z_cmp = zcmp_ref[...]         # [TB, E, 9]
+
+    w_bits, w_sign = ref.split_weights(w)
+    rbl, rblb = ref.mac_phase(p, acts, w_bits, w_sign, cell, cap, z_jit)
+    codes = ref.readout(p, rbl, rblb, sa, cap, step, z_step, z_cmp)
+    codes_ref[...] = codes
+    values_ref[...] = ref.reconstruct(p, codes, w)
+
+
+def core_op_pallas(p: CoreParams, acts, w_signed, cell_mism, sa_off, cap,
+                   step_static, z_jit, z_step, z_cmp):
+    """Batched core op via pallas_call. Shapes as in `ref.core_op`; the batch
+    must be a multiple of B_TILE (pad with zero rows otherwise)."""
+    b, r = acts.shape
+    e = w_signed.shape[1]
+    assert b % B_TILE == 0, f"batch {b} must be a multiple of {B_TILE}"
+    grid = (b // B_TILE,)
+
+    bspec = lambda shape, bm: pl.BlockSpec(shape, bm)
+    batch_map = lambda i: (i,) + (0,) * 0
+
+    kernel = functools.partial(_kernel, p)
+    codes, values = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_TILE, r), lambda i: (i, 0)),          # acts
+            pl.BlockSpec((r, e), lambda i: (0, 0)),               # weights
+            pl.BlockSpec((r, KBITS, e), lambda i: (0, 0, 0)),     # cell mism
+            pl.BlockSpec((e,), lambda i: (0,)),                   # sa offset
+            pl.BlockSpec((e,), lambda i: (0,)),                   # cap mism
+            pl.BlockSpec((e, ADC_BITS - 1), lambda i: (0, 0)),    # step static
+            pl.BlockSpec((B_TILE, r, KBITS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((B_TILE, e, ADC_BITS - 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((B_TILE, e, ADC_BITS), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B_TILE, e), lambda i: (i, 0)),
+            pl.BlockSpec((B_TILE, e), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, e), jnp.float32),
+            jax.ShapeDtypeStruct((b, e), jnp.float32),
+        ],
+        interpret=True,
+    )(acts, w_signed, cell_mism, sa_off, cap, step_static, z_jit, z_step, z_cmp)
+    return codes, values
+
+
+def zero_statics(p: CoreParams):
+    """Ideal-instance statics (no fabrication mismatch)."""
+    return (
+        jnp.zeros((p.rows, KBITS, p.engines), jnp.float32),   # cell
+        jnp.zeros((p.engines,), jnp.float32),                 # sa
+        jnp.zeros((p.engines,), jnp.float32),                 # cap
+        jnp.zeros((p.engines, ADC_BITS - 1), jnp.float32),    # step
+    )
+
+
+def zero_noise(p: CoreParams, batch: int):
+    """Zero dynamic-noise draws (deterministic op)."""
+    return (
+        jnp.zeros((batch, p.rows, KBITS), jnp.float32),
+        jnp.zeros((batch, p.engines, ADC_BITS - 1), jnp.float32),
+        jnp.zeros((batch, p.engines, ADC_BITS), jnp.float32),
+    )

@@ -1,0 +1,176 @@
+"""Pure-jnp oracle for the CIM core operation (L1 correctness reference).
+
+Mirrors `rust/src/cim/{engine,adc}.rs` exactly — the same discharge physics,
+unit conventions (τ0 pulse widths, `u` voltage units) and the tie-down
+mid-rise binary-search quantizer. The Pallas kernel in `cim_engine.py` is
+checked against this module by pytest; the Rust native model is checked
+against the AOT artifact of the kernel by `cargo test` — closing the
+three-way equivalence loop.
+
+All inputs are f32 tensors holding integer values where noted.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+KBITS = 3  # weight magnitude bits (4-b sign-magnitude)
+ADC_BITS = 9
+
+
+@dataclass(frozen=True)
+class CoreParams:
+    """Compile-time configuration baked into one artifact (one enhancement
+    mode); mirrors `config::{MacroConfig, EnhanceConfig, NoiseConfig}`."""
+
+    rows: int = 64
+    engines: int = 16
+    fold: bool = False
+    boost: bool = False
+    fold_offset: int = 8
+    fold_gain: float = 1.875
+    boost_gain: float = 2.0
+    noise: bool = True
+    sigma_t_floor: float = 3.40
+    sigma_t_small: float = 48.5
+    t_knee: float = 2.0
+    t_pow: float = 1.0
+    sigma_sa_cmp: float = 6.0
+    sigma_step_rel: float = 0.004
+    # Geometry-derived constants (defaults match the 16 Kb macro).
+    vpp: float = 6720.0
+    act_max: int = 15
+
+    @property
+    def dtc_scale(self) -> float:
+        s = 1.0
+        if self.fold:
+            s *= self.fold_gain
+        if self.boost:
+            s *= self.boost_gain
+        return s
+
+    @property
+    def fullscale(self) -> float:
+        return 2.0 * self.vpp
+
+    @property
+    def adc_lsb(self) -> float:
+        return self.fullscale / (1 << ADC_BITS)
+
+    def label(self) -> str:
+        return {(False, False): "baseline", (True, False): "fold",
+                (False, True): "boost", (True, True): "fold_boost"}[(self.fold, self.boost)]
+
+
+def split_weights(w_signed):
+    """Signed weights [R, E] → (mag_bits [R, KBITS, E], sign [R, E] ±1)."""
+    w = jnp.asarray(w_signed, jnp.float32)
+    sign = jnp.where(w < 0, -1.0, 1.0)
+    mag = jnp.abs(w)
+    bits = jnp.stack(
+        [jnp.floor(mag / (1 << k)) % 2.0 for k in range(KBITS)], axis=1
+    )
+    return bits.astype(jnp.float32), sign.astype(jnp.float32)
+
+
+def mac_phase(p: CoreParams, acts, w_bits, w_sign, cell_mism, cap, z_jit):
+    """MAC phase: per-engine RBL/RBLB discharge (u).
+
+    acts      [B, R]      unsigned activations (integer-valued f32)
+    w_bits    [R, K, E]   weight magnitude bits
+    w_sign    [R, E]      ±1
+    cell_mism [R, K, E]   relative branch mismatch
+    cap       [E]         RBL/RBLB capacitor mismatch δ
+    z_jit     [B, R, K]   standard normals (pulse-timing noise)
+    returns (rbl_drop [B, E], rblb_drop [B, E])
+    """
+    s = p.dtc_scale
+    a_eff = acts - (p.fold_offset if p.fold else 0)
+    mag = jnp.abs(a_eff)  # [B, R]
+    a_pos = a_eff > 0  # [B, R]
+
+    # Per-bit pulse widths mag·2^k·s, built from scalar constants so the
+    # expression stays pallas-capturable (no non-scalar closure constants).
+    nominal = jnp.stack(
+        [mag * (float(1 << k) * s) for k in range(KBITS)], axis=-1
+    )  # [B, R, K]
+    if p.noise:
+        # Hyperbolic narrow-pulse penalty (mirrors cim::noise::jitter_sigma).
+        sigma = jnp.where(
+            nominal > 0,
+            p.sigma_t_floor + p.sigma_t_small
+            * (p.t_knee / jnp.maximum(nominal, 1e-20)) ** p.t_pow,
+            0.0,
+        )
+        width = jnp.maximum(nominal + sigma * z_jit, 0.0)
+    else:
+        width = nominal
+
+    # Per-cell discharge: width ⊗ (1+mism) gated by the weight bit.
+    cellw = w_bits * (1.0 + cell_mism)  # [R, K, E]
+    per_row = jnp.einsum("brk,rke->bre", width, cellw)  # [B, R, E]
+
+    to_rbl = (a_pos[:, :, None] == (w_sign > 0)[None, :, :]).astype(jnp.float32)
+    rbl = jnp.sum(per_row * to_rbl, axis=1)  # [B, E]
+    rblb = jnp.sum(per_row * (1.0 - to_rbl), axis=1)
+
+    # Capacitor mismatch and physical headroom clamp.
+    rbl = jnp.minimum(rbl * (1.0 - cap)[None, :], p.vpp)
+    rblb = jnp.minimum(rblb * (1.0 + cap)[None, :], p.vpp)
+    return rbl, rblb
+
+
+def readout(p: CoreParams, rbl_drop, rblb_drop, sa_off, cap, step_static, z_step, z_cmp):
+    """Cell-embedded binary-search ADC, unrolled 9 steps.
+
+    sa_off      [E]        static SA offset (u)
+    step_static [E, 8]     static per-step relative error
+    z_step      [B, E, 8]  dynamic step noise
+    z_cmp       [B, E, 9]  SA comparison noise
+    returns codes [B, E] (integer-valued f32, −256..255)
+    """
+    v_rbl = p.vpp - rbl_drop
+    v_rblb = p.vpp - rblb_drop
+    est_half = jnp.zeros_like(rbl_drop)
+    for d in range(ADC_BITS):
+        noise = p.sigma_sa_cmp * z_cmp[:, :, d] if p.noise else 0.0
+        bit = (v_rblb - v_rbl) + sa_off[None, :] + noise > 0.0
+        est_half = est_half + jnp.where(bit, 1.0, -1.0) * float(1 << (ADC_BITS - 1 - d))
+        if d + 1 < ADC_BITS:
+            nominal = p.fullscale / float(1 << (d + 2))
+            err = step_static[None, :, d]
+            if p.noise:
+                err = err + p.sigma_step_rel * z_step[:, :, d]
+            q = jnp.maximum(nominal * (1.0 + err), 0.0)
+            v_rblb = jnp.where(bit, jnp.maximum(v_rblb - q * (1.0 + cap)[None, :], 0.0), v_rblb)
+            v_rbl = jnp.where(bit, v_rbl, jnp.maximum(v_rbl - q * (1.0 - cap)[None, :], 0.0))
+    return jnp.floor(est_half / 2.0)
+
+
+def reconstruct(p: CoreParams, codes, w_signed):
+    """Digital reconstruction: mid-rise dequant + fold correction."""
+    col_sum = jnp.sum(jnp.asarray(w_signed, jnp.float32), axis=0)  # [E]
+    corr = (p.fold_offset * col_sum)[None, :] if p.fold else 0.0
+    return (codes + 0.5) * p.adc_lsb / p.dtc_scale + corr
+
+
+def core_op(p: CoreParams, acts, w_signed, cell_mism, sa_off, cap, step_static,
+            z_jit, z_step, z_cmp):
+    """Full core operation. Returns (codes [B,E], values [B,E])."""
+    w_bits, w_sign = split_weights(w_signed)
+    rbl, rblb = mac_phase(p, acts, w_bits, w_sign, cell_mism, cap, z_jit)
+    codes = readout(p, rbl, rblb, sa_off, cap, step_static, z_step, z_cmp)
+    return codes, reconstruct(p, codes, w_signed)
+
+
+def ideal_codes(p: CoreParams, acts, w_signed):
+    """Noise-free golden: quantize the exact folded MAC (tie-down mid-rise),
+    mirroring `cim::golden::ideal_code`."""
+    w = jnp.asarray(w_signed, jnp.float32)
+    a_eff = acts - (p.fold_offset if p.fold else 0)
+    d = jnp.einsum("br,re->be", a_eff.astype(jnp.float32), w)
+    x = d * p.dtc_scale / p.adc_lsb
+    code = jnp.ceil(x) - 1.0
+    half = float(1 << (ADC_BITS - 1))
+    return jnp.clip(code, -half, half - 1)

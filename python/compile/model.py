@@ -1,0 +1,165 @@
+"""L2 JAX model: the batched CIM macro op and a quantized MLP forward whose
+every matrix product runs through the L1 Pallas kernel (tiled 64×16, cores
+assigned round-robin) — the compute graph the Rust coordinator serves after
+AOT lowering.
+
+Python never runs at inference time: `aot.py` lowers these functions to HLO
+text once; `rust/src/runtime` loads and executes them via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cim_engine
+from .kernels.cim_engine import B_TILE
+from .kernels.ref import ADC_BITS, KBITS, CoreParams
+
+CORES = 4
+ROWS = 64
+ENGINES = 16
+
+# Noise-bundle layout per tile (f32 per batch element).
+Z_JIT = ROWS * KBITS           # 192
+Z_STEP = ENGINES * (ADC_BITS - 1)  # 128
+Z_CMP = ENGINES * ADC_BITS     # 144
+Z_PER_TILE = Z_JIT + Z_STEP + Z_CMP  # 464
+
+
+def macro_op_fn(p: CoreParams):
+    """Returns the jittable single-core batched op:
+    (acts [B,64], w [64,16], cell, sa, cap, step, z_jit, z_step, z_cmp)
+    → (codes [B,16], values [B,16])."""
+
+    def fn(acts, w, cell, sa, cap, step, z_jit, z_step, z_cmp):
+        codes, values = cim_engine.core_op_pallas(
+            p, acts, w, cell, sa, cap, step, z_jit, z_step, z_cmp
+        )
+        return codes, values
+
+    return fn
+
+
+def _slice_tile_noise(z, tile_idx, batch):
+    """Carve one tile's (z_jit, z_step, z_cmp) out of the [B, NZ] bundle."""
+    off = tile_idx * Z_PER_TILE
+    zj = z[:, off:off + Z_JIT].reshape(batch, ROWS, KBITS)
+    zs = z[:, off + Z_JIT:off + Z_JIT + Z_STEP].reshape(batch, ENGINES, ADC_BITS - 1)
+    zc = z[:, off + Z_JIT + Z_STEP:off + Z_PER_TILE].reshape(batch, ENGINES, ADC_BITS)
+    return zj, zs, zc
+
+
+def _pad_to(x, rows, axis):
+    pad = rows - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def cim_matmul(p: CoreParams, acts_q, w_q, statics, z, tile_base):
+    """Tiled integer matrix product on the macro: acts_q [B,K] (0..15
+    integer-valued f32) × w_q [K,N] (±7) → int-sum estimates [B,N] (product
+    units). Tiles are mapped to cores round-robin starting at `tile_base`;
+    returns (result, tiles_used)."""
+    b, k = acts_q.shape
+    n = w_q.shape[1]
+    cell_all, sa_all, cap_all, step_all = statics
+    n_rt = -(-k // ROWS)
+    n_ct = -(-n // ENGINES)
+    out = jnp.zeros((b, n_ct * ENGINES), jnp.float32)
+    tile = 0
+    for rt in range(n_rt):
+        a_tile = _pad_to(acts_q[:, rt * ROWS:(rt + 1) * ROWS], ROWS, 1)
+        for ct in range(n_ct):
+            w_tile = _pad_to(
+                _pad_to(w_q[rt * ROWS:(rt + 1) * ROWS, ct * ENGINES:(ct + 1) * ENGINES],
+                        ROWS, 0),
+                ENGINES, 1,
+            )
+            core = (tile_base + tile) % CORES
+            zj, zs, zc = _slice_tile_noise(z, tile_base + tile, b)
+            _, values = cim_engine.core_op_pallas(
+                p, a_tile, w_tile,
+                cell_all[core], sa_all[core], cap_all[core], step_all[core],
+                zj, zs, zc,
+            )
+            out = out.at[:, ct * ENGINES:(ct + 1) * ENGINES].add(values)
+            tile += 1
+    return out[:, :n], tile
+
+
+def mlp_tiles(dims):
+    """Number of macro tiles each layer of an MLP consumes."""
+    per_layer = []
+    for k, n in zip(dims[:-1], dims[1:]):
+        per_layer.append((-(-k // ROWS)) * (-(-n // ENGINES)))
+    return per_layer
+
+
+def mlp_forward_fn(p: CoreParams, dims=(144, 32, 10)):
+    """Quantized-MLP forward through the macro.
+
+    Inputs:
+      x        [B, dims[0]]  raw features (≥0)
+      w1_q     [dims0, dims1]  integer-valued f32 (±7)
+      b1       [dims1]        float bias (real units)
+      w2_q     [dims1, dims2]
+      b2       [dims2]
+      scales   [4]: a0_scale, w1_scale, a1_cal, w2_scale
+      statics  cell [4,64,3,16], sa [4,16], cap [4,16], step [4,16,8]
+      z        [B, n_tiles·Z_PER_TILE]  standard normals
+    Output: logits [B, dims2].
+    """
+    t1, t2 = mlp_tiles(dims)
+
+    def fn(x, w1_q, b1, w2_q, b2, scales, cell, sa, cap, step, z):
+        statics = (cell, sa, cap, step)
+        a0_scale = scales[0]
+        w1_scale = scales[1]
+        a1_cal = scales[2]
+        w2_scale = scales[3]
+
+        # Input quantization (unsigned 4-b).
+        x_q = jnp.clip(jnp.round(x / a0_scale), 0, 15)
+
+        # Layer 1 on the macro.
+        s1, used = cim_matmul(p, x_q, w1_q, statics, z, 0)
+        assert used == t1
+        y1 = s1 * (a0_scale * w1_scale) + b1[None, :]
+        y1 = jnp.maximum(y1, 0.0)
+
+        # Re-quantize hidden activations (fixed calibration max).
+        a1_scale = a1_cal / 15.0
+        h_q = jnp.clip(jnp.round(y1 / a1_scale), 0, 15)
+
+        # Layer 2 on the macro.
+        s2, used2 = cim_matmul(p, h_q, w2_q, statics, z, t1)
+        assert used2 == t2
+        logits = s2 * (a1_scale * w2_scale) + b2[None, :]
+        return (logits,)
+
+    return fn
+
+
+def mlp_noise_len(dims=(144, 32, 10)):
+    return sum(mlp_tiles(dims)) * Z_PER_TILE
+
+
+def example_mlp_inputs(batch=B_TILE, dims=(144, 32, 10), seed=0):
+    """Deterministic example inputs with the right shapes (for lowering and
+    tests)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((batch, dims[0])).astype(np.float32))
+    w1 = jnp.asarray(rng.integers(-7, 8, (dims[0], dims[1])).astype(np.float32))
+    b1 = jnp.asarray(rng.normal(0, 0.1, dims[1]).astype(np.float32))
+    w2 = jnp.asarray(rng.integers(-7, 8, (dims[1], dims[2])).astype(np.float32))
+    b2 = jnp.asarray(rng.normal(0, 0.1, dims[2]).astype(np.float32))
+    scales = jnp.asarray(np.array([1.0 / 15, 0.05, 4.0, 0.05], np.float32))
+    cell = jnp.asarray(rng.normal(0, 0.02, (CORES, ROWS, KBITS, ENGINES)).astype(np.float32))
+    sa = jnp.asarray(rng.normal(0, 8, (CORES, ENGINES)).astype(np.float32))
+    cap = jnp.asarray(rng.normal(0, 0.001, (CORES, ENGINES)).astype(np.float32))
+    step = jnp.asarray(rng.normal(0, 0.002, (CORES, ENGINES, ADC_BITS - 1)).astype(np.float32))
+    z = jnp.asarray(rng.normal(0, 1, (batch, mlp_noise_len(dims))).astype(np.float32))
+    return (x, w1, b1, w2, b2, scales, cell, sa, cap, step, z)

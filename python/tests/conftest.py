@@ -1,0 +1,8 @@
+"""pytest bootstrap: make `compile` and `tests.helpers` importable when
+running from the python/ directory or the repo root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))

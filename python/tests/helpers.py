@@ -1,0 +1,30 @@
+"""Shared helpers for the L1/L2 test suite."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels.ref import ADC_BITS, KBITS, CoreParams
+
+ALL_MODES = [
+    CoreParams(),
+    CoreParams(fold=True),
+    CoreParams(boost=True),
+    CoreParams(fold=True, boost=True),
+]
+
+
+def random_inputs(p: CoreParams, batch: int, seed: int, *, sparsity=0.0):
+    """Full random input bundle for one core op."""
+    rng = np.random.default_rng(seed)
+    acts = rng.integers(0, p.act_max + 1, (batch, p.rows)).astype(np.float32)
+    if sparsity > 0:
+        acts *= rng.random((batch, p.rows)) >= sparsity
+    w = rng.integers(-7, 8, (p.rows, p.engines)).astype(np.float32)
+    cell = rng.normal(0, 0.02, (p.rows, KBITS, p.engines)).astype(np.float32)
+    sa = rng.normal(0, 8.0, p.engines).astype(np.float32)
+    cap = rng.normal(0, 0.001, p.engines).astype(np.float32)
+    step = rng.normal(0, 0.002, (p.engines, ADC_BITS - 1)).astype(np.float32)
+    zj = rng.normal(0, 1, (batch, p.rows, KBITS)).astype(np.float32)
+    zs = rng.normal(0, 1, (batch, p.engines, ADC_BITS - 1)).astype(np.float32)
+    zc = rng.normal(0, 1, (batch, p.engines, ADC_BITS)).astype(np.float32)
+    return tuple(jnp.asarray(a) for a in (acts, w, cell, sa, cap, step, zj, zs, zc))

@@ -1,0 +1,104 @@
+"""L2 model tests: tiled cim_matmul against exact integer matmul, and the
+full quantized-MLP forward graph (shapes, determinism, digital-reference
+agreement in the noise-free limit)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import ADC_BITS, KBITS, CoreParams
+
+
+def statics_zero():
+    c, r, e, k = model.CORES, model.ROWS, model.ENGINES, KBITS
+    return (
+        jnp.zeros((c, r, k, e), jnp.float32),
+        jnp.zeros((c, e), jnp.float32),
+        jnp.zeros((c, e), jnp.float32),
+        jnp.zeros((c, e, ADC_BITS - 1), jnp.float32),
+    )
+
+
+def test_cim_matmul_tiles_and_accuracy():
+    p = CoreParams(fold=True, boost=True, noise=False)
+    rng = np.random.default_rng(4)
+    b, k, n = 16, 144, 32
+    acts = jnp.asarray(rng.integers(0, 16, (b, k)).astype(np.float32))
+    w = jnp.asarray(rng.integers(-7, 8, (k, n)).astype(np.float32))
+    n_tiles = model.mlp_tiles((k, n))[0]
+    z = jnp.zeros((b, n_tiles * model.Z_PER_TILE), jnp.float32)
+    out, used = model.cim_matmul(p, acts, w, statics_zero(), z, 0)
+    assert used == n_tiles == 6  # 3 row tiles × 2 col tiles
+    exact = np.asarray(acts) @ np.asarray(w)
+    # Each of the 3 row tiles contributes ≤ step/2 quantization error.
+    step = p.adc_lsb / p.dtc_scale
+    bound = 3 * step / 2 + 1e-3
+    assert np.abs(np.asarray(out) - exact).max() <= bound
+
+
+def test_mlp_forward_shapes_and_determinism():
+    p = CoreParams(fold=True, boost=True)
+    fn = model.mlp_forward_fn(p)
+    inputs = model.example_mlp_inputs(batch=16, seed=1)
+    (logits1,) = fn(*inputs)
+    (logits2,) = fn(*inputs)
+    assert logits1.shape == (16, 10)
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+    assert np.isfinite(np.asarray(logits1)).all()
+
+
+def test_mlp_noise_free_matches_digital_reference():
+    """With zero statics/noise the macro-MLP must track an exact integer
+    quantized MLP within accumulated quantization steps."""
+    p = CoreParams(fold=True, boost=True, noise=False)
+    fn = model.mlp_forward_fn(p)
+    x, w1, b1, w2, b2, scales, *_ = model.example_mlp_inputs(batch=16, seed=2)
+    st = statics_zero()
+    z = jnp.zeros((16, model.mlp_noise_len()), jnp.float32)
+    (logits,) = fn(x, w1, b1, w2, b2, scales, *st, z)
+
+    # Digital reference of the same quantized pipeline.
+    a0, w1s, a1c, w2s = [float(v) for v in np.asarray(scales)]
+    xq = np.clip(np.round(np.asarray(x) / a0), 0, 15)
+    y1 = xq @ np.asarray(w1) * (a0 * w1s) + np.asarray(b1)
+    y1 = np.maximum(y1, 0)
+    hq = np.clip(np.round(y1 / (a1c / 15.0)), 0, 15)
+    want = hq @ np.asarray(w2) * ((a1c / 15.0) * w2s) + np.asarray(b2)
+
+    got = np.asarray(logits)
+    # Error budget: layer1 ADC (3 row tiles × step/2 × scales) propagates
+    # through requantization; allow a conservative absolute bound.
+    step1 = p.adc_lsb / p.dtc_scale * (a0 * w1s) * 3
+    step2 = p.adc_lsb / p.dtc_scale * ((a1c / 15.0) * w2s)
+    # Requant can flip a hidden code by 1 → w2 row magnitude · scales.
+    requant_slack = 7 * 2 * ((a1c / 15.0) * w2s) * 4
+    bound = step1 * 50 + step2 + requant_slack  # dominated by requant flips
+    assert np.abs(got - want).max() <= bound, (np.abs(got - want).max(), bound)
+
+
+def test_mlp_jits_and_lowers():
+    p = CoreParams(fold=True, boost=True)
+    fn = model.mlp_forward_fn(p)
+    from compile.aot import mlp_specs, to_hlo_text
+
+    lowered = jax.jit(fn).lower(*mlp_specs(16))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 10_000
+
+
+def test_macro_lowering_all_modes():
+    from compile.aot import MODES, macro_specs, to_hlo_text
+
+    for mode, p in MODES.items():
+        fn = model.macro_op_fn(p)
+        lowered = jax.jit(fn).lower(*macro_specs(16))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text, mode
+
+
+def test_noise_bundle_length():
+    # 7 tiles × 464 floats for the default MLP.
+    assert model.mlp_tiles((144, 32, 10)) == [6, 1]
+    assert model.mlp_noise_len() == 7 * 464

@@ -1,0 +1,29 @@
+//! Regenerate every paper table/figure (Figs 1–7) and time each driver.
+//! Run: `cargo bench --bench fig_tables` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::Bench;
+use cimsim::config::Config;
+use cimsim::harness::{ablation, figs};
+
+fn main() {
+    let cfg = Config::default();
+    let b = Bench::default();
+    for id in 1..=7usize {
+        let quick = std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1");
+        let tables = figs::run_figure(&cfg, id, quick || id == 5);
+        println!("==================== Figure {id} ====================");
+        for t in &tables {
+            println!("{}", t.to_markdown());
+        }
+        if id == 3 {
+            // Time the cheap driver as a representative harness cost.
+            b.run_slow(&format!("harness/fig{id}"), 3, || {
+                let _ = figs::run_figure(&cfg, id, true);
+            });
+        }
+    }
+    println!("==================== Ablations ====================");
+    for t in ablation::run_all(&cfg) {
+        println!("{}", t.to_markdown());
+    }
+}

@@ -1,0 +1,73 @@
+//! Hot-path performance benches (EXPERIMENTS.md §Perf): the native analog
+//! core op (the simulator's inner loop), the tiled layer executor, the XLA
+//! artifact execution, and the end-to-end serving loop.
+
+use cimsim::bench::{black_box, Bench};
+use cimsim::cim::noise::NoiseDraw;
+use cimsim::cim::MacroSim;
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::{CimBackend, NativeBackend};
+use cimsim::nn::tensor::Tensor;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+fn main() {
+    let b = Bench::default();
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+
+    // --- native core op (noisy + noise-free) ---
+    let mut sim = MacroSim::new(cfg.clone());
+    let mut rng = Xoshiro256::seeded(1);
+    let w: Vec<Vec<i64>> = (0..64).map(|_| (0..16).map(|_| rng.next_range_i64(-7, 7)).collect()).collect();
+    sim.load_core(0, &w).unwrap();
+    let acts: Vec<i64> = (0..64).map(|_| rng.next_range_i64(0, 15)).collect();
+    let m = b.run("native/core_op (noisy)", || {
+        black_box(sim.core_op(0, &acts, &mut rng).unwrap());
+    });
+    let macs_per_op = 1024.0;
+    println!("  -> {}", m.throughput_line(2.0 * macs_per_op, "simulated ops"));
+
+    let draw = NoiseDraw::draw(&cfg.mac, &mut rng);
+    let m = b.run("native/core_op (fixed draw)", || {
+        black_box(sim.core_op_with_noise(0, &acts, &draw).unwrap());
+    });
+    println!("  -> {}", m.throughput_line(2.0 * macs_per_op, "simulated ops"));
+
+    let mut ideal = cfg.clone();
+    ideal.noise.enabled = false;
+    let mut sim2 = MacroSim::new(ideal);
+    sim2.load_core(0, &w).unwrap();
+    b.run("native/core_op (noise-free)", || {
+        black_box(sim2.core_op(0, &acts, &mut rng).unwrap());
+    });
+
+    // --- tiled layer executor (144x32 layer, batch 64) ---
+    let wcols = {
+        let mut r = Xoshiro256::seeded(2);
+        Tensor::from_vec(&[144, 32], (0..144 * 32).map(|_| r.next_f32() - 0.5).collect())
+    };
+    let lin = CimLinear::new(&wcols, vec![0.0; 32], 1.0, &cfg);
+    let xs: Vec<Vec<f32>> = (0..64).map(|i| (0..144).map(|j| ((i * j) % 17) as f32 / 17.0).collect()).collect();
+    let mut nat = NativeBackend::new(cfg.clone());
+    let m = b.run_slow("native/layer 144x32 b64", 10, || {
+        black_box(lin.run_batch(&mut nat, &xs).unwrap());
+    });
+    println!("  -> {}", m.throughput_line(64.0, "inferences"));
+
+    // --- XLA artifact path ---
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.toml").exists() {
+        match cimsim::runtime::xla_backend::XlaBackend::new(cfg.clone(), dir) {
+            Ok(mut be) => {
+                be.load_core(0, &w).unwrap();
+                let batch: Vec<Vec<i64>> = (0..16).map(|_| acts.clone()).collect();
+                let m = b.run_slow("xla/core_op_batch b16", 10, || {
+                    black_box(be.core_op_batch(0, &batch).unwrap());
+                });
+                println!("  -> {}", m.throughput_line(16.0 * 2.0 * macs_per_op, "simulated ops"));
+            }
+            Err(e) => println!("xla path skipped: {e}"),
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! ADC linearity metrics: transfer curve, DNL and INL (Fig. 5).
+//!
+//! DNL/INL are *static* linearity metrics: chip measurement averages dynamic
+//! noise away, which in the simulator corresponds to sweeping the transfer
+//! with dynamic noise zeroed while fabrication mismatch stays active. The
+//! transition level T(k) is the input at which the output first reaches code
+//! k; DNL(k) = (T(k+1) − T(k))/LSB − 1 and INL is measured against the
+//! endpoint-fit line, both in LSB.
+
+/// A measured static transfer: monotone input sweep with the observed code
+/// per input.
+#[derive(Clone, Debug)]
+pub struct Transfer {
+    pub inputs: Vec<f64>,
+    pub codes: Vec<i32>,
+}
+
+/// Transition levels extracted from a static transfer: `levels[i]` is the
+/// input at which the code first reaches `first_code + 1 + i`.
+#[derive(Clone, Debug)]
+pub struct Transitions {
+    pub first_code: i32,
+    pub levels: Vec<f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Linearity {
+    /// DNL per code bin, LSB.
+    pub dnl: Vec<f64>,
+    /// INL per transition (endpoint fit), LSB.
+    pub inl: Vec<f64>,
+    pub dnl_max_abs: f64,
+    pub inl_max_abs: f64,
+}
+
+impl Transfer {
+    /// Extract code-transition levels. The sweep must be fine enough that
+    /// every code in the covered range is visited; codes may glitch locally
+    /// (non-monotone ADC) — the first crossing is used, the standard
+    /// convention for a sweep measurement.
+    pub fn transitions(&self) -> Transitions {
+        assert_eq!(self.inputs.len(), self.codes.len());
+        assert!(!self.inputs.is_empty());
+        let first_code = *self.codes.iter().min().unwrap();
+        let last_code = *self.codes.iter().max().unwrap();
+        let mut levels = Vec::new();
+        let mut reached = first_code;
+        for (i, &c) in self.codes.iter().enumerate() {
+            while reached < c && reached < last_code {
+                reached += 1;
+                // Midpoint between this sample and the previous one.
+                let x = if i == 0 {
+                    self.inputs[0]
+                } else {
+                    0.5 * (self.inputs[i - 1] + self.inputs[i])
+                };
+                levels.push(x);
+            }
+        }
+        Transitions { first_code, levels }
+    }
+}
+
+impl Transitions {
+    /// Compute DNL/INL in units of `lsb`. Requires ≥ 3 transition levels.
+    pub fn linearity(&self, lsb: f64) -> Linearity {
+        let t = &self.levels;
+        if t.len() < 3 {
+            return Linearity::default();
+        }
+        let n = t.len();
+        let mut dnl = Vec::with_capacity(n - 1);
+        for i in 0..n - 1 {
+            dnl.push((t[i + 1] - t[i]) / lsb - 1.0);
+        }
+        // Endpoint-fit INL: line through (0, t[0]) .. (n−1, t[n−1]).
+        let slope = (t[n - 1] - t[0]) / (n - 1) as f64;
+        let mut inl = Vec::with_capacity(n);
+        for (i, &x) in t.iter().enumerate() {
+            inl.push((x - (t[0] + slope * i as f64)) / lsb);
+        }
+        let dnl_max_abs = dnl.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        let inl_max_abs = inl.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+        Linearity { dnl, inl, dnl_max_abs, inl_max_abs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a transfer for an ideal mid-rise ADC with the given LSB.
+    fn ideal_transfer(lsb: f64, lo: f64, hi: f64, step: f64) -> Transfer {
+        let mut inputs = Vec::new();
+        let mut codes = Vec::new();
+        let mut x = lo;
+        while x <= hi {
+            inputs.push(x);
+            codes.push((x / lsb).ceil() as i32 - 1);
+            x += step;
+        }
+        Transfer { inputs, codes }
+    }
+
+    #[test]
+    fn ideal_adc_has_zero_dnl_inl() {
+        let lsb = 26.25;
+        let tr = ideal_transfer(lsb, -10.0 * lsb, 10.0 * lsb, lsb / 50.0);
+        let t = tr.transitions();
+        let lin = t.linearity(lsb);
+        assert!(lin.dnl_max_abs < 0.05, "dnl {}", lin.dnl_max_abs);
+        assert!(lin.inl_max_abs < 0.05, "inl {}", lin.inl_max_abs);
+        // 20 codes → 20 transitions (roughly).
+        assert!(t.levels.len() >= 19);
+    }
+
+    #[test]
+    fn detects_a_wide_code() {
+        // Stretch code 2 to span [2,5) — three LSB wide instead of one.
+        let lsb = 1.0;
+        let mut inputs = Vec::new();
+        let mut codes = Vec::new();
+        let mut x: f64 = 0.0;
+        while x < 10.0 {
+            let c = if x < 3.0 {
+                (x / lsb).ceil() as i32 - 1
+            } else if x < 5.0 {
+                2
+            } else {
+                ((x - 2.0) / lsb).ceil() as i32 - 1
+            };
+            inputs.push(x);
+            codes.push(c);
+            x += 0.01;
+        }
+        let lin = Transfer { inputs, codes }.transitions().linearity(lsb);
+        // The stretched bin reads ≈ +2 LSB DNL.
+        let max_dnl = lin.dnl.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((max_dnl - 2.0).abs() < 0.1, "max dnl {max_dnl}");
+        assert!(lin.inl_max_abs > 0.4);
+    }
+
+    #[test]
+    fn transition_positions_are_midpoints() {
+        let tr = Transfer {
+            inputs: vec![0.0, 1.0, 2.0, 3.0],
+            codes: vec![0, 0, 1, 1],
+        };
+        let t = tr.transitions();
+        assert_eq!(t.first_code, 0);
+        assert_eq!(t.levels, vec![1.5]);
+    }
+
+    #[test]
+    fn too_few_transitions_yield_default() {
+        let tr = Transfer { inputs: vec![0.0, 1.0], codes: vec![0, 1] };
+        let lin = tr.transitions().linearity(1.0);
+        assert!(lin.dnl.is_empty());
+    }
+}

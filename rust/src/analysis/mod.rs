@@ -1,0 +1,8 @@
+//! Measurement analysis: summary statistics, histograms, and ADC linearity
+//! (transfer curve / DNL / INL) used by the Fig. 1–7 harness.
+
+pub mod linearity;
+pub mod stats;
+
+pub use linearity::{Linearity, Transfer, Transitions};
+pub use stats::{linfit, Histogram, Stats};

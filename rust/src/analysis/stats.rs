@@ -1,0 +1,215 @@
+//! Summary statistics and histograms used by every accuracy experiment.
+
+/// Streaming mean/variance/extrema accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
+        for x in xs {
+            self.push(x);
+        }
+    }
+
+    /// Merge another accumulator (parallel reduction).
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// RMS of the pushed values (√(mean²+var)).
+    pub fn rms(&self) -> f64 {
+        (self.mean * self.mean + self.var()).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to the edge
+/// bins (counted, never dropped — the harness reports clip rates from this).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * n as f64).floor() as i64).clamp(0, n as i64 - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Fraction of samples in bin `i`.
+    pub fn frac(&self, i: usize) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.bins[i] as f64 / t as f64
+        }
+    }
+}
+
+/// Ordinary least squares fit y = a + b·x, returning (a, b, r²).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxx, mut sxy, mut syy) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+        syy += (y - my) * (y - my);
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut s = Stats::new();
+        s.extend(xs.iter().copied());
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 5.0;
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 16.0);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Stats::new();
+        all.extend(xs.iter().copied());
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        a.extend(xs[..37].iter().copied());
+        b.extend(xs[37..].iter().copied());
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-10);
+        assert!((a.var() - all.var()).abs() < 1e-10);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn rms_identity() {
+        let mut s = Stats::new();
+        s.extend([3.0, -3.0, 3.0, -3.0]);
+        assert!((s.rms() - 3.0).abs() < 1e-12);
+        assert!(s.mean().abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.5); // bin 0
+        h.push(9.99); // bin 9
+        h.push(-5.0); // clamps to 0
+        h.push(50.0); // clamps to 9
+        h.push(5.0); // bin 5
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.bins[5], 1);
+        assert_eq!(h.total(), 5);
+        assert!((h.bin_center(5) - 5.5).abs() < 1e-12);
+        assert!((h.frac(0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.5 * x).collect();
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.5).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+}

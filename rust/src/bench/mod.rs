@@ -1,0 +1,233 @@
+//! Criterion-lite measurement harness (the offline environment vendors no
+//! `criterion`). Each `rust/benches/*.rs` target sets `harness = false` and
+//! drives this module, which provides warmup, adaptive iteration-count
+//! selection, and robust summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub samples: Vec<f64>, // seconds per iteration, one per sample batch
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn throughput_line(&self, items_per_iter: f64, unit: &str) -> String {
+        let per_sec = items_per_iter / self.mean_s;
+        format!(
+            "{:<44} {:>12}/iter  {:>14} {}/s",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_sig3(per_sec),
+            unit
+        )
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  σ {:>9}  ({} iters × {} samples)",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p95_s),
+            fmt_duration(self.std_s),
+            self.iters,
+            self.samples.len(),
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    quiet: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // CIMSIM_BENCH_FAST=1 trims times for CI smoke runs.
+        let fast = std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            samples: if fast { 8 } else { 20 },
+            quiet: false,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call. The runner
+    /// first estimates the per-call cost during warmup, then picks an
+    /// iteration count per sample so each sample batch runs long enough for
+    /// the clock to be trustworthy.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let est_per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let per_sample_target = (self.measure.as_secs_f64() / self.samples as f64).max(1e-4);
+        let iters = ((per_sample_target / est_per_iter).ceil() as u64).clamp(1, 10_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let m = summarize(name, iters, samples);
+        if !self.quiet {
+            println!("{}", m.report_line());
+        }
+        m
+    }
+
+    /// Variant for benchmarks whose single iteration is already long (>~50ms):
+    /// runs `f` exactly `n` times with no inner loop.
+    pub fn run_slow<F: FnMut()>(&self, name: &str, n: usize, mut f: F) -> Measurement {
+        f(); // single warmup
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n.max(2) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = summarize(name, 1, samples);
+        if !self.quiet {
+            println!("{}", m.report_line());
+        }
+        m
+    }
+}
+
+fn summarize(name: &str, iters: u64, mut samples: Vec<f64>) -> Measurement {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        p50_s: percentile(&samples, 0.50),
+        p95_s: percentile(&samples, 0.95),
+        min_s: samples[0],
+        samples,
+    }
+}
+
+/// Percentile on pre-sorted data with linear interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn fmt_sig3(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{:.2}", x)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std-only blackbox).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_fast() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 5,
+            quiet: true,
+        };
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.mean_s > 0.0 && m.mean_s < 1e-3);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.p50_s <= m.p95_s);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(2e-3), "2.000 ms");
+        assert_eq!(fmt_duration(2e-6), "2.000 µs");
+        assert_eq!(fmt_duration(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn run_slow_collects_n_samples() {
+        let b = Bench::default().quiet();
+        let m = b.run_slow("slow", 3, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.mean_s >= 1e-3);
+    }
+}

@@ -1,0 +1,263 @@
+//! Exact digital reference for the CIM pipeline: integer MAC, the ideal
+//! fold/boost/clip quantization transfer, and value reconstruction. Every
+//! accuracy experiment measures the analog model against this module.
+
+use crate::cim::weights::CoreWeights;
+use crate::config::{Config, EnhanceConfig};
+
+/// Exact integer dot products: `Σ_r act[r]·w[r][e]` per engine.
+pub fn mac_exact(weights: &CoreWeights, acts: &[i64]) -> Vec<i64> {
+    assert_eq!(acts.len(), weights.rows);
+    let mut out = vec![0i64; weights.engines];
+    for (r, &a) in acts.iter().enumerate() {
+        if a == 0 {
+            continue;
+        }
+        for (e, o) in out.iter_mut().enumerate() {
+            *o += a * weights.value(r, e);
+        }
+    }
+    out
+}
+
+/// The *folded* dot product the analog array actually computes:
+/// `Σ_r (act[r] − off)·w[r][e]` (== unfolded when folding is disabled).
+pub fn mac_folded(cfg: &Config, weights: &CoreWeights, acts: &[i64]) -> Vec<i64> {
+    let off = if cfg.enhance.fold { cfg.enhance.fold_offset } else { 0 };
+    let mut out = mac_exact(weights, acts);
+    if off != 0 {
+        for (e, o) in out.iter_mut().enumerate() {
+            *o -= off * weights.col_sum(e);
+        }
+    }
+    out
+}
+
+/// DTC scale as an exact rational `(num, den)` when the configured gains are
+/// the paper defaults (1.875 = 15/8, boost 2). Returns `None` for
+/// non-default gains, in which case quantization falls back to f64.
+pub fn scale_fraction(e: &EnhanceConfig) -> Option<(i64, i64)> {
+    let frac = |x: f64| -> Option<(i64, i64)> {
+        // Recognize small dyadic rationals exactly (covers 1.875, 2.0, 3.75).
+        for den in [1i64, 2, 4, 8, 16] {
+            let num = x * den as f64;
+            if (num - num.round()).abs() < 1e-12 {
+                return Some((num.round() as i64, den));
+            }
+        }
+        None
+    };
+    frac(e.dtc_scale())
+}
+
+/// Unclamped ideal code for a folded MAC value `d` (product units):
+/// mid-rise quantization of `d·s` against the fixed ADC LSB with code
+/// transitions at integer multiples of the LSB and *ties broken downward*
+/// (`ceil(x) − 1`), matching the binary search's `> 0` comparator. Exact
+/// integer arithmetic for the default (dyadic) gains.
+fn ideal_code_unclamped(cfg: &Config, d: i64) -> i64 {
+    match scale_fraction(&cfg.enhance) {
+        Some((num, den)) => {
+            // x = d·(num/den)/(fs/codes) = d·num·codes/(den·fs);
+            // ceil(n/m) − 1 == (n − 1).div_euclid(m) for m > 0.
+            let fs = 2 * cfg.mac.mac_range();
+            let numer = d as i128 * num as i128 * cfg.mac.adc_codes() as i128;
+            let denom = den as i128 * fs as i128;
+            (numer - 1).div_euclid(denom) as i64
+        }
+        None => {
+            let s = cfg.enhance.dtc_scale();
+            (d as f64 * s / cfg.mac.adc_lsb_units()).ceil() as i64 - 1
+        }
+    }
+}
+
+/// Ideal output code for a folded MAC value `d`, clipped to the code range.
+pub fn ideal_code(cfg: &Config, d: i64) -> i32 {
+    let half = cfg.mac.adc_codes() / 2;
+    ideal_code_unclamped(cfg, d).clamp(-half, half - 1) as i32
+}
+
+/// Reconstruct the digital MAC estimate from an output code: mid-rise
+/// dequantization back to product units, plus the fold-correction constant
+/// `off·Σw` restored digitally (computed at weight-load time on the chip).
+pub fn reconstruct(cfg: &Config, weights: &CoreWeights, engine: usize, code: i32) -> f64 {
+    let s = cfg.enhance.dtc_scale();
+    let deq = (code as f64 + 0.5) * cfg.mac.adc_lsb_units() / s;
+    let corr = if cfg.enhance.fold {
+        (cfg.enhance.fold_offset * weights.col_sum(engine)) as f64
+    } else {
+        0.0
+    };
+    deq + corr
+}
+
+/// End-to-end ideal pipeline: what a noise-free chip returns for `acts`,
+/// in reconstructed product units (per engine).
+pub fn ideal_pipeline(cfg: &Config, weights: &CoreWeights, acts: &[i64]) -> Vec<f64> {
+    mac_folded(cfg, weights, acts)
+        .iter()
+        .enumerate()
+        .map(|(e, &d)| reconstruct(cfg, weights, e, ideal_code(cfg, d)))
+        .collect()
+}
+
+/// Whether a folded MAC value clips in the current configuration (only
+/// possible with boosting, by design).
+pub fn clips(cfg: &Config, d: i64) -> bool {
+    let half = cfg.mac.adc_codes() / 2;
+    let c = ideal_code_unclamped(cfg, d);
+    c < -half || c > half - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, EnhanceConfig};
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn random_setup(seed: u64, cfg: &Config) -> (CoreWeights, Vec<i64>) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let w: Vec<Vec<i64>> = (0..cfg.mac.rows)
+            .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect();
+        let acts: Vec<i64> = (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+        (CoreWeights::from_signed(&cfg.mac, &w).unwrap(), acts)
+    }
+
+    #[test]
+    fn folded_equals_exact_minus_correction() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::fold_only();
+        let (w, acts) = random_setup(1, &cfg);
+        let exact = mac_exact(&w, &acts);
+        let folded = mac_folded(&cfg, &w, &acts);
+        for e in 0..cfg.mac.engines {
+            assert_eq!(folded[e], exact[e] - 8 * w.col_sum(e));
+        }
+    }
+
+    #[test]
+    fn scale_fractions_for_all_default_modes() {
+        assert_eq!(scale_fraction(&EnhanceConfig::default()), Some((1, 1)));
+        assert_eq!(scale_fraction(&EnhanceConfig::fold_only()), Some((15, 8)));
+        assert_eq!(scale_fraction(&EnhanceConfig::boost_only()), Some((2, 1)));
+        assert_eq!(scale_fraction(&EnhanceConfig::both()), Some((15, 4)));
+        let weird = EnhanceConfig { fold: true, fold_gain: 1.8701, ..EnhanceConfig::default() };
+        assert_eq!(scale_fraction(&weird), None);
+    }
+
+    #[test]
+    fn ideal_code_rational_matches_float() {
+        for enh in [
+            EnhanceConfig::default(),
+            EnhanceConfig::fold_only(),
+            EnhanceConfig::boost_only(),
+            EnhanceConfig::both(),
+        ] {
+            let mut cfg = Config::default();
+            cfg.enhance = enh;
+            let s = cfg.enhance.dtc_scale();
+            for d in (-7000..7000).step_by(137) {
+                let rational = ideal_code(&cfg, d);
+                let float = ((d as f64 * s / cfg.mac.adc_lsb_units()).ceil() as i64 - 1)
+                    .clamp(-256, 255) as i32;
+                assert_eq!(rational, float, "d={d} mode={}", cfg.enhance.label());
+            }
+        }
+    }
+
+    #[test]
+    fn fold_quantization_step_is_14_units() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::fold_only();
+        // s = 15/8, LSB = 26.25 u ⇒ one code per 14 product units, with
+        // transitions AT multiples of 14 breaking downward (mid-rise,
+        // matching the comparator's `> 0`).
+        assert_eq!(ideal_code(&cfg, 0), -1);
+        assert_eq!(ideal_code(&cfg, 1), 0);
+        assert_eq!(ideal_code(&cfg, 13), 0);
+        assert_eq!(ideal_code(&cfg, 14), 0);
+        assert_eq!(ideal_code(&cfg, 15), 1);
+        assert_eq!(ideal_code(&cfg, -1), -1);
+        assert_eq!(ideal_code(&cfg, -13), -1);
+        assert_eq!(ideal_code(&cfg, -14), -2);
+        assert_eq!(ideal_code(&cfg, -15), -2);
+    }
+
+    #[test]
+    fn boost_clips_beyond_1792() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both(); // s = 15/4 ⇒ 7 units per code
+        assert_eq!(ideal_code(&cfg, 1791), 255);
+        assert_eq!(ideal_code(&cfg, 1792), 255); // exactly at +FS/2 (tie down)
+        assert!(!clips(&cfg, 1792));
+        assert!(clips(&cfg, 1793));
+        assert!(!clips(&cfg, 1785));
+        assert_eq!(ideal_code(&cfg, -1792), -256);
+        assert!(clips(&cfg, -1793));
+    }
+
+    #[test]
+    fn reconstruction_error_bounded_by_half_step() {
+        // |reconstruct(ideal_code(d)) − d| ≤ step/2 when not clipping.
+        for enh in [EnhanceConfig::default(), EnhanceConfig::fold_only(), EnhanceConfig::both()] {
+            let mut cfg = Config::default();
+            cfg.enhance = enh;
+            let (w, acts) = random_setup(3, &cfg);
+            let step = cfg.mac.adc_lsb_units() / cfg.enhance.dtc_scale();
+            let folded = mac_folded(&cfg, &w, &acts);
+            let exact = mac_exact(&w, &acts);
+            let recon = ideal_pipeline(&cfg, &w, &acts);
+            for e in 0..cfg.mac.engines {
+                if clips(&cfg, folded[e]) {
+                    continue;
+                }
+                let err = (recon[e] - exact[e] as f64).abs();
+                assert!(err <= step / 2.0 + 1e-9, "err {err} vs step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn property_pipeline_consistent_across_modes() {
+        crate::util::proptest::check("golden-modes", 60, |g| {
+            let mut cfg = Config::default();
+            cfg.enhance = match g.usize_in(0, 3) {
+                0 => EnhanceConfig::default(),
+                1 => EnhanceConfig::fold_only(),
+                2 => EnhanceConfig::boost_only(),
+                _ => EnhanceConfig::both(),
+            };
+            let mut rng = Xoshiro256::seeded(g.case_seed ^ 0xABCD);
+            let w: Vec<Vec<i64>> = (0..cfg.mac.rows)
+                .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+                .collect();
+            let acts: Vec<i64> =
+                (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+            let w = CoreWeights::from_signed(&cfg.mac, &w).unwrap();
+            let folded = mac_folded(&cfg, &w, &acts);
+            let exact = mac_exact(&w, &acts);
+            let step = cfg.mac.adc_lsb_units() / cfg.enhance.dtc_scale();
+            for e in 0..cfg.mac.engines {
+                // folded must stay within the representable analog range
+                crate::prop_assert!(
+                    folded[e].abs() <= cfg.mac.mac_range(),
+                    "folded {} exceeds range",
+                    folded[e]
+                );
+                if !clips(&cfg, folded[e]) {
+                    let recon = reconstruct(&cfg, &w, e, ideal_code(&cfg, folded[e]));
+                    let err = (recon - exact[e] as f64).abs();
+                    crate::prop_assert!(
+                        err <= step / 2.0 + 1e-9,
+                        "mode {} engine {e}: err {err} > step/2 {}",
+                        cfg.enhance.label(),
+                        step / 2.0
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,325 @@
+//! The 16 Kb CIM macro facade: 4 cores × 16 engines × 64 rows, weight
+//! loading, and the full MAC + readout operation (native backend).
+
+use crate::cim::adc::{readout, Readout};
+use crate::cim::engine::{mac_phase, OpStats};
+use crate::cim::golden;
+use crate::cim::noise::{Fabrication, NoiseDraw};
+use crate::cim::timing::finalize_cycles;
+use crate::cim::weights::{CoreWeights, WeightError};
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// Result of one core operation.
+#[derive(Clone, Debug)]
+pub struct CoreOpResult {
+    /// Raw signed ADC codes per engine.
+    pub codes: Vec<i32>,
+    /// Digitally reconstructed MAC estimates (product units), including the
+    /// fold correction.
+    pub values: Vec<f64>,
+    pub stats: OpStats,
+}
+
+/// A simulated macro instance: configuration + one static fabrication draw
+/// + the resident weights of each core.
+pub struct MacroSim {
+    pub cfg: Config,
+    pub fab: Fabrication,
+    weights: Vec<Option<CoreWeights>>,
+}
+
+#[derive(Debug)]
+pub enum MacroError {
+    NoWeights(usize),
+    BadCore(usize),
+    Weights(WeightError),
+    BadAct { row: usize, value: i64 },
+}
+
+impl std::fmt::Display for MacroError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MacroError::NoWeights(c) => write!(f, "core {c} has no weights loaded"),
+            MacroError::BadCore(c) => write!(f, "core index {c} out of range"),
+            MacroError::Weights(e) => write!(f, "{e}"),
+            MacroError::BadAct { row, value } => {
+                write!(f, "activation {value} at row {row} out of range")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MacroError {}
+
+impl From<WeightError> for MacroError {
+    fn from(e: WeightError) -> Self {
+        MacroError::Weights(e)
+    }
+}
+
+impl MacroSim {
+    pub fn new(cfg: Config) -> Self {
+        let fab = Fabrication::draw(&cfg.mac, &cfg.noise);
+        let weights = (0..cfg.mac.cores).map(|_| None).collect();
+        Self { cfg, fab, weights }
+    }
+
+    /// Load signed weights (`[row][engine]`) into one core.
+    pub fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MacroError> {
+        if core >= self.cfg.mac.cores {
+            return Err(MacroError::BadCore(core));
+        }
+        self.weights[core] = Some(CoreWeights::from_signed(&self.cfg.mac, w)?);
+        Ok(())
+    }
+
+    pub fn load_core_weights(&mut self, core: usize, w: CoreWeights) -> Result<(), MacroError> {
+        if core >= self.cfg.mac.cores {
+            return Err(MacroError::BadCore(core));
+        }
+        self.weights[core] = Some(w);
+        Ok(())
+    }
+
+    pub fn core_weights(&self, core: usize) -> Result<&CoreWeights, MacroError> {
+        self.weights
+            .get(core)
+            .ok_or(MacroError::BadCore(core))?
+            .as_ref()
+            .ok_or(MacroError::NoWeights(core))
+    }
+
+    fn check_acts(&self, acts: &[i64]) -> Result<(), MacroError> {
+        let max = self.cfg.mac.act_max();
+        for (row, &a) in acts.iter().enumerate() {
+            if !(0..=max).contains(&a) {
+                return Err(MacroError::BadAct { row, value: a });
+            }
+        }
+        Ok(())
+    }
+
+    /// One core operation with an explicit noise draw (the form shared with
+    /// the XLA backend — identical draws give identical results).
+    pub fn core_op_with_noise(
+        &self,
+        core: usize,
+        acts: &[i64],
+        draw: &NoiseDraw,
+    ) -> Result<CoreOpResult, MacroError> {
+        let w = self.core_weights(core)?;
+        self.check_acts(acts)?;
+        let mac = mac_phase(&self.cfg, core, w, acts, &self.fab, draw);
+        let Readout { codes, adc_discharge_u, sa_compares } =
+            readout(&self.cfg, core, &mac, &self.fab, draw);
+        let mut stats = mac.stats.clone();
+        stats.adc_discharge_u = adc_discharge_u;
+        stats.sa_compares = sa_compares;
+        finalize_cycles(&self.cfg, &mut stats);
+        let values = codes
+            .iter()
+            .enumerate()
+            .map(|(e, &c)| golden::reconstruct(&self.cfg, w, e, c))
+            .collect();
+        Ok(CoreOpResult { codes, values, stats })
+    }
+
+    /// One core operation, drawing fresh dynamic noise from `rng`.
+    pub fn core_op<R: Rng>(
+        &self,
+        core: usize,
+        acts: &[i64],
+        rng: &mut R,
+    ) -> Result<CoreOpResult, MacroError> {
+        let draw = if self.cfg.noise.enabled {
+            NoiseDraw::draw(&self.cfg.mac, rng)
+        } else {
+            NoiseDraw::zeros(&self.cfg.mac)
+        };
+        self.core_op_with_noise(core, acts, &draw)
+    }
+
+    /// Hot-path variant: refills `scratch` in place instead of allocating a
+    /// fresh draw (the serving executor's inner loop).
+    pub fn core_op_scratch<R: Rng>(
+        &self,
+        core: usize,
+        acts: &[i64],
+        rng: &mut R,
+        scratch: &mut NoiseDraw,
+    ) -> Result<CoreOpResult, MacroError> {
+        if self.cfg.noise.enabled {
+            scratch.redraw(rng);
+            self.core_op_with_noise(core, acts, scratch)
+        } else {
+            self.core_op_with_noise(core, acts, &NoiseDraw::zeros(&self.cfg.mac))
+        }
+    }
+
+    /// Full macro operation: every loaded core fires in parallel on its own
+    /// activation vector. Returns per-core results in core order.
+    pub fn macro_op<R: Rng>(
+        &self,
+        acts_per_core: &[Vec<i64>],
+        rng: &mut R,
+    ) -> Result<Vec<CoreOpResult>, MacroError> {
+        assert_eq!(acts_per_core.len(), self.cfg.mac.cores);
+        let mut out = Vec::with_capacity(self.cfg.mac.cores);
+        for (c, acts) in acts_per_core.iter().enumerate() {
+            out.push(self.core_op(c, acts, rng)?);
+        }
+        Ok(out)
+    }
+
+    /// Exact digital reference for a loaded core.
+    pub fn golden(&self, core: usize, acts: &[i64]) -> Result<Vec<i64>, MacroError> {
+        Ok(golden::mac_exact(self.core_weights(core)?, acts))
+    }
+
+    /// Ideal (noise-free chip) codes for a loaded core.
+    pub fn ideal_codes(&self, core: usize, acts: &[i64]) -> Result<Vec<i32>, MacroError> {
+        let w = self.core_weights(core)?;
+        Ok(golden::mac_folded(&self.cfg, w, acts)
+            .iter()
+            .map(|&d| golden::ideal_code(&self.cfg, d))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, EnhanceConfig};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_weights(cfg: &Config, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..cfg.mac.rows)
+            .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect()
+    }
+
+    fn random_acts(cfg: &Config, seed: u64) -> Vec<i64> {
+        let mut rng = Xoshiro256::seeded(seed.wrapping_mul(31));
+        (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect()
+    }
+
+    /// With noise disabled the full analog pipeline must agree with the
+    /// ideal-code golden model EXACTLY, in every enhancement mode.
+    #[test]
+    fn noise_free_pipeline_matches_golden_all_modes() {
+        for enh in [
+            EnhanceConfig::default(),
+            EnhanceConfig::fold_only(),
+            EnhanceConfig::boost_only(),
+            EnhanceConfig::both(),
+        ] {
+            let mut cfg = Config::default();
+            cfg.noise.enabled = false;
+            cfg.enhance = enh;
+            let mut sim = MacroSim::new(cfg.clone());
+            sim.load_core(0, &random_weights(&cfg, 11)).unwrap();
+            let mut rng = Xoshiro256::seeded(5);
+            for t in 0..50 {
+                let acts = random_acts(&cfg, t);
+                let got = sim.core_op(0, &acts, &mut rng).unwrap();
+                let want = sim.ideal_codes(0, &acts).unwrap();
+                assert_eq!(got.codes, want, "mode {} trial {t}", cfg.enhance.label());
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_tracks_exact_mac() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::fold_only();
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(0, &random_weights(&cfg, 3)).unwrap();
+        let acts = random_acts(&cfg, 9);
+        let mut rng = Xoshiro256::seeded(1);
+        let got = sim.core_op(0, &acts, &mut rng).unwrap();
+        let exact = sim.golden(0, &acts).unwrap();
+        let step = cfg.mac.adc_lsb_units() / cfg.enhance.dtc_scale(); // 14 units
+        for e in 0..cfg.mac.engines {
+            let err = (got.values[e] - exact[e] as f64).abs();
+            assert!(err <= step / 2.0 + 1e-9, "engine {e}: err {err}");
+        }
+    }
+
+    #[test]
+    fn unloaded_core_and_bad_inputs_error() {
+        let cfg = Config::default();
+        let sim = MacroSim::new(cfg.clone());
+        let acts = vec![0i64; cfg.mac.rows];
+        assert!(matches!(sim.core_op_with_noise(0, &acts, &NoiseDraw::zeros(&cfg.mac)),
+            Err(MacroError::NoWeights(0))));
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(0, &random_weights(&cfg, 1)).unwrap();
+        let mut bad = acts.clone();
+        bad[7] = 16;
+        assert!(matches!(
+            sim.core_op_with_noise(0, &bad, &NoiseDraw::zeros(&cfg.mac)),
+            Err(MacroError::BadAct { row: 7, value: 16 })
+        ));
+        assert!(matches!(sim.load_core(9, &random_weights(&cfg, 1)), Err(MacroError::BadCore(9))));
+    }
+
+    #[test]
+    fn macro_op_runs_all_cores() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let mut sim = MacroSim::new(cfg.clone());
+        for c in 0..cfg.mac.cores {
+            sim.load_core(c, &random_weights(&cfg, c as u64)).unwrap();
+        }
+        let acts: Vec<Vec<i64>> = (0..cfg.mac.cores)
+            .map(|c| random_acts(&cfg, 100 + c as u64))
+            .collect();
+        let mut rng = Xoshiro256::seeded(2);
+        let res = sim.macro_op(&acts, &mut rng).unwrap();
+        assert_eq!(res.len(), 4);
+        for (c, r) in res.iter().enumerate() {
+            assert_eq!(r.codes, sim.ideal_codes(c, &acts[c]).unwrap());
+            assert_eq!(r.stats.sa_compares, 16 * 9);
+            assert!(r.stats.total_cycles >= 11);
+        }
+    }
+
+    #[test]
+    fn same_noise_draw_is_reproducible() {
+        let cfg = Config::default();
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(0, &random_weights(&cfg, 5)).unwrap();
+        let acts = random_acts(&cfg, 5);
+        let mut rng = Xoshiro256::seeded(77);
+        let draw = NoiseDraw::draw(&cfg.mac, &mut rng);
+        let a = sim.core_op_with_noise(0, &acts, &draw).unwrap();
+        let b = sim.core_op_with_noise(0, &acts, &draw).unwrap();
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    /// Statistical sanity: with default noise the measured codes stay close
+    /// to ideal (within a few LSB) — full calibration is tested in harness.
+    #[test]
+    fn noisy_codes_near_ideal() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(0, &random_weights(&cfg, 21)).unwrap();
+        let mut rng = Xoshiro256::seeded(9);
+        let mut worst = 0i32;
+        for t in 0..100 {
+            let acts = random_acts(&cfg, 1000 + t);
+            let got = sim.core_op(0, &acts, &mut rng).unwrap();
+            let want = sim.ideal_codes(0, &acts).unwrap();
+            for e in 0..cfg.mac.engines {
+                worst = worst.max((got.codes[e] - want[e]).abs());
+            }
+        }
+        assert!(worst <= 40, "worst code error {worst} implausibly large");
+        assert!(worst >= 1, "noise should perturb at least one code");
+    }
+}

@@ -1,0 +1,272 @@
+//! Noise machinery: the static "fabrication" draw for a macro instance and
+//! the per-operation dynamic noise draw.
+//!
+//! Both are plain arrays of standard-normal variates scaled at use-site, so
+//! the native Rust model and the AOT-compiled XLA/Pallas model can consume
+//! *identical* noise tensors — the equivalence tests rely on this.
+
+use crate::config::{Config, MacroConfig, NoiseConfig};
+use crate::util::rng::{fill_gaussian, Rng, Xoshiro256};
+
+/// Per-event pulse-timing σ in τ0, as a function of the pulse width in
+/// τ0-seconds: an absolute floor plus a hyperbolically-decaying narrow-pulse
+/// penalty `small·knee/width` (slew-limited pulse shaping: the delivered
+/// charge of a narrow pulse deviates inversely with its width). This curve
+/// is the mechanism behind the MAC-folding win (Fig. 4): folding (and
+/// boosting) widen the pulses, escaping the narrow-pulse region.
+#[inline]
+pub fn jitter_sigma(noise: &NoiseConfig, width_tau0: f64) -> f64 {
+    if width_tau0 <= 0.0 {
+        return 0.0; // no pulse, no event, no noise
+    }
+    if noise.t_pow == 1.0 {
+        // Hot-path special case: the default exponent needs no powf.
+        noise.sigma_t_floor + noise.sigma_t_small * noise.t_knee / width_tau0
+    } else {
+        noise.sigma_t_floor + noise.sigma_t_small * (noise.t_knee / width_tau0).powf(noise.t_pow)
+    }
+}
+
+/// Static per-instance mismatch ("fabrication"): drawn once from
+/// `noise.fab_seed`, shared by every op the instance runs.
+#[derive(Clone, Debug)]
+pub struct Fabrication {
+    cores: usize,
+    rows: usize,
+    engines: usize,
+    /// Relative discharge-current mismatch per MAC cell branch,
+    /// indexed `[core][row][bit k][engine]` (engine contiguous innermost to
+    /// match the per-SL inner loops).
+    cell: Vec<f32>,
+    /// Static SA input offset per `[core][engine]`, in u.
+    sa_off: Vec<f32>,
+    /// Relative RBL-vs-RBLB capacitor mismatch per `[core][engine]`:
+    /// discharges on RBL scale by (1+δ), on RBLB by (1−δ).
+    cap: Vec<f32>,
+    /// Static relative error of each readout step magnitude,
+    /// `[core][engine][step 0..8]` (8 discharge steps follow the first 8 of
+    /// 9 comparisons).
+    step: Vec<f32>,
+}
+
+impl Fabrication {
+    pub fn draw(mac: &MacroConfig, noise: &NoiseConfig) -> Self {
+        let root = Xoshiro256::seeded(noise.fab_seed);
+        let kbits = 3.max(mac.weight_bits as usize - 1);
+        let n_cell = mac.cores * mac.rows * kbits * mac.engines;
+        let n_eng = mac.cores * mac.engines;
+        let mut cell = vec![0f32; n_cell];
+        let mut sa_off = vec![0f32; n_eng];
+        let mut cap = vec![0f32; n_eng];
+        let mut step = vec![0f32; n_eng * 8];
+        fill_gaussian(&mut root.substream("cell"), noise.sigma_cell, &mut cell);
+        fill_gaussian(&mut root.substream("sa"), noise.sigma_sa_static, &mut sa_off);
+        fill_gaussian(&mut root.substream("cap"), noise.sigma_cap, &mut cap);
+        fill_gaussian(&mut root.substream("step"), noise.sigma_step_static, &mut step);
+        if !noise.enabled {
+            // Ideal instance: zero all static error.
+            cell.iter_mut().for_each(|x| *x = 0.0);
+            sa_off.iter_mut().for_each(|x| *x = 0.0);
+            cap.iter_mut().for_each(|x| *x = 0.0);
+            step.iter_mut().for_each(|x| *x = 0.0);
+        }
+        Self {
+            cores: mac.cores,
+            rows: mac.rows,
+            engines: mac.engines,
+            cell,
+            sa_off,
+            cap,
+            step,
+        }
+    }
+
+    pub fn ideal(mac: &MacroConfig) -> Self {
+        Self::draw(mac, &NoiseConfig::disabled())
+    }
+
+    #[inline]
+    pub fn cell(&self, core: usize, row: usize, k: usize, engine: usize) -> f32 {
+        let kbits = self.cell.len() / (self.cores * self.rows * self.engines);
+        self.cell[((core * self.rows + row) * kbits + k) * self.engines + engine]
+    }
+
+    /// Raw slice for one (core,row,bit): per-engine mismatch, used by hot loops.
+    #[inline]
+    pub fn cell_row(&self, core: usize, row: usize, k: usize) -> &[f32] {
+        let kbits = self.cell.len() / (self.cores * self.rows * self.engines);
+        let base = ((core * self.rows + row) * kbits + k) * self.engines;
+        &self.cell[base..base + self.engines]
+    }
+
+    #[inline]
+    pub fn sa_off(&self, core: usize, engine: usize) -> f32 {
+        self.sa_off[core * self.engines + engine]
+    }
+
+    #[inline]
+    pub fn cap(&self, core: usize, engine: usize) -> f32 {
+        self.cap[core * self.engines + engine]
+    }
+
+    #[inline]
+    pub fn step(&self, core: usize, engine: usize, d: usize) -> f32 {
+        self.step[(core * self.engines + engine) * 8 + d]
+    }
+
+    /// Flat views for exporting to the XLA path (same memory order as the
+    /// kernel inputs).
+    pub fn cell_flat(&self) -> &[f32] {
+        &self.cell
+    }
+    pub fn sa_off_flat(&self) -> &[f32] {
+        &self.sa_off
+    }
+    pub fn cap_flat(&self) -> &[f32] {
+        &self.cap
+    }
+    pub fn step_flat(&self) -> &[f32] {
+        &self.step
+    }
+}
+
+/// Dynamic standard-normal noise for ONE core operation. Scaled at use-site:
+/// * `z_jit[row][k]`   — pulse-timing error of the (row, bit) SL pulse
+///   (shared by all engines of the core, as the SL is shared);
+/// * `z_step[engine][d]` — readout-step charge error, d ∈ 0..8;
+/// * `z_cmp[engine][d]`  — SA comparison noise, d ∈ 0..9.
+#[derive(Clone, Debug, Default)]
+pub struct NoiseDraw {
+    pub z_jit: Vec<f32>,
+    pub z_step: Vec<f32>,
+    pub z_cmp: Vec<f32>,
+    pub rows: usize,
+    pub kbits: usize,
+    pub engines: usize,
+}
+
+impl NoiseDraw {
+    pub fn zeros(mac: &MacroConfig) -> Self {
+        let kbits = mac.weight_bits as usize - 1;
+        Self {
+            z_jit: vec![0.0; mac.rows * kbits],
+            z_step: vec![0.0; mac.engines * 8],
+            z_cmp: vec![0.0; mac.engines * 9],
+            rows: mac.rows,
+            kbits,
+            engines: mac.engines,
+        }
+    }
+
+    pub fn draw<R: Rng>(mac: &MacroConfig, rng: &mut R) -> Self {
+        let mut d = Self::zeros(mac);
+        d.redraw(rng);
+        d
+    }
+
+    /// Refill in place (hot path: avoids the three allocations of `draw`).
+    pub fn redraw<R: Rng>(&mut self, rng: &mut R) {
+        fill_gaussian(rng, 1.0, &mut self.z_jit);
+        fill_gaussian(rng, 1.0, &mut self.z_step);
+        fill_gaussian(rng, 1.0, &mut self.z_cmp);
+    }
+
+    #[inline]
+    pub fn jit(&self, row: usize, k: usize) -> f32 {
+        self.z_jit[row * self.kbits + k]
+    }
+
+    #[inline]
+    pub fn step(&self, engine: usize, d: usize) -> f32 {
+        self.z_step[engine * 8 + d]
+    }
+
+    #[inline]
+    pub fn cmp(&self, engine: usize, d: usize) -> f32 {
+        self.z_cmp[engine * 9 + d]
+    }
+}
+
+/// Convenience: a fabrication + per-op RNG bundle for a configured instance.
+pub fn op_rng(cfg: &Config, op_index: u64) -> Xoshiro256 {
+    Xoshiro256::seeded(cfg.sim.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(op_index + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn jitter_sigma_shape() {
+        let n = NoiseConfig::default();
+        assert_eq!(jitter_sigma(&n, 0.0), 0.0);
+        let narrow = jitter_sigma(&n, 1.0);
+        let wide = jitter_sigma(&n, 60.0);
+        assert!(narrow > wide, "narrow pulses must be noisier");
+        // Wide pulses approach the floor (hyperbolic tail: within
+        // small·knee/60 of it).
+        assert!(wide - n.sigma_t_floor <= n.sigma_t_small * n.t_knee / 60.0 + 1e-12);
+        // Monotone decreasing.
+        let mut prev = f64::INFINITY;
+        for w in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+            let s = jitter_sigma(&n, w);
+            assert!(s <= prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn fabrication_deterministic_in_seed() {
+        let cfg = Config::default();
+        let f1 = Fabrication::draw(&cfg.mac, &cfg.noise);
+        let f2 = Fabrication::draw(&cfg.mac, &cfg.noise);
+        assert_eq!(f1.cell_flat(), f2.cell_flat());
+        assert_eq!(f1.sa_off_flat(), f2.sa_off_flat());
+        let mut other = cfg.noise.clone();
+        other.fab_seed ^= 1;
+        let f3 = Fabrication::draw(&cfg.mac, &other);
+        assert_ne!(f1.cell_flat(), f3.cell_flat());
+    }
+
+    #[test]
+    fn fabrication_shapes_and_stats() {
+        let cfg = Config::default();
+        let f = Fabrication::draw(&cfg.mac, &cfg.noise);
+        assert_eq!(f.cell_flat().len(), 4 * 64 * 3 * 16);
+        assert_eq!(f.sa_off_flat().len(), 4 * 16);
+        assert_eq!(f.step_flat().len(), 4 * 16 * 8);
+        // Sample std close to configured sigma.
+        let v: f64 = f
+            .cell_flat()
+            .iter()
+            .map(|&x| (x as f64).powi(2))
+            .sum::<f64>()
+            / f.cell_flat().len() as f64;
+        assert!((v.sqrt() - cfg.noise.sigma_cell).abs() < 0.15 * cfg.noise.sigma_cell);
+    }
+
+    #[test]
+    fn disabled_noise_is_all_zero() {
+        let cfg = Config::default();
+        let f = Fabrication::ideal(&cfg.mac);
+        assert!(f.cell_flat().iter().all(|&x| x == 0.0));
+        assert!(f.sa_off_flat().iter().all(|&x| x == 0.0));
+        let d = NoiseDraw::zeros(&cfg.mac);
+        assert!(d.z_jit.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn indexing_is_consistent_with_flat_layout() {
+        let cfg = Config::default();
+        let f = Fabrication::draw(&cfg.mac, &cfg.noise);
+        // cell(core,row,k,engine) must match the documented flat order.
+        let (c, r, k, e) = (2, 17, 1, 9);
+        let flat = f.cell_flat()[((c * 64 + r) * 3 + k) * 16 + e];
+        assert_eq!(f.cell(c, r, k, e), flat);
+        assert_eq!(f.cell_row(c, r, k)[e], flat);
+        let d = NoiseDraw::zeros(&cfg.mac);
+        assert_eq!(d.z_jit.len(), 64 * 3);
+        assert_eq!(d.z_cmp.len(), 16 * 9);
+    }
+}

@@ -1,0 +1,199 @@
+//! Weight storage for one CIM core, mirroring the 9-T cell array layout:
+//! each of the `rows × engines` weights is stored sign-magnitude (W[3] sign
+//! bit in the sign-control column, W[2:0] magnitude in the three MAC-cell
+//! columns).
+
+use crate::config::MacroConfig;
+
+/// Weights resident in one core's SRAM array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreWeights {
+    pub rows: usize,
+    pub engines: usize,
+    /// Magnitude |w| per (row, engine), row-major, each in `0..=w_mag_max`.
+    mag: Vec<u8>,
+    /// Sign per (row, engine): +1 or −1 (W[3]). Zero weights store +1.
+    sign: Vec<i8>,
+    /// Column sums Σ_r w[r][e] — the digital fold-correction constant
+    /// `fold_offset · col_sum` is computed from these at load time.
+    col_sum: Vec<i64>,
+}
+
+#[derive(Debug)]
+pub enum WeightError {
+    Shape { expected: (usize, usize), got: (usize, usize) },
+    Range { row: usize, engine: usize, value: i64, max: i64 },
+}
+
+impl std::fmt::Display for WeightError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightError::Shape { expected, got } => {
+                write!(f, "weight shape {got:?} != core shape {expected:?}")
+            }
+            WeightError::Range { row, engine, value, max } => write!(
+                f,
+                "weight {value} at (row {row}, engine {engine}) outside ±{max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WeightError {}
+
+impl CoreWeights {
+    /// Load signed integer weights (row-major `[row][engine]`). Values must
+    /// fit the sign-magnitude range ±w_mag_max (±7 for 4-b).
+    pub fn from_signed(cfg: &MacroConfig, w: &[Vec<i64>]) -> Result<Self, WeightError> {
+        let (rows, engines) = (cfg.rows, cfg.engines);
+        if w.len() != rows || w.iter().any(|r| r.len() != engines) {
+            let got = (w.len(), w.first().map(|r| r.len()).unwrap_or(0));
+            return Err(WeightError::Shape { expected: (rows, engines), got });
+        }
+        let max = cfg.w_mag_max();
+        let mut mag = vec![0u8; rows * engines];
+        let mut sign = vec![1i8; rows * engines];
+        let mut col_sum = vec![0i64; engines];
+        for (r, row) in w.iter().enumerate() {
+            for (e, &v) in row.iter().enumerate() {
+                if v.abs() > max {
+                    return Err(WeightError::Range { row: r, engine: e, value: v, max });
+                }
+                mag[r * engines + e] = v.unsigned_abs() as u8;
+                sign[r * engines + e] = if v < 0 { -1 } else { 1 };
+                col_sum[e] += v;
+            }
+        }
+        Ok(Self { rows, engines, mag, sign, col_sum })
+    }
+
+    /// Flat constructor used by generators (values validated the same way).
+    pub fn from_flat(cfg: &MacroConfig, flat: &[i64]) -> Result<Self, WeightError> {
+        assert_eq!(flat.len(), cfg.rows * cfg.engines, "flat weight length");
+        let rows: Vec<Vec<i64>> = flat.chunks(cfg.engines).map(|c| c.to_vec()).collect();
+        Self::from_signed(cfg, &rows)
+    }
+
+    #[inline]
+    pub fn mag(&self, row: usize, engine: usize) -> u8 {
+        self.mag[row * self.engines + engine]
+    }
+
+    #[inline]
+    pub fn sign(&self, row: usize, engine: usize) -> i8 {
+        self.sign[row * self.engines + engine]
+    }
+
+    #[inline]
+    pub fn value(&self, row: usize, engine: usize) -> i64 {
+        self.sign(row, engine) as i64 * self.mag(row, engine) as i64
+    }
+
+    /// Whether magnitude bit `k` (0..3) of the weight is set — i.e. whether
+    /// the 9-T cell in bit-column `k` discharges when its SL pulses.
+    #[inline]
+    pub fn mag_bit(&self, row: usize, engine: usize, k: u32) -> bool {
+        (self.mag(row, engine) >> k) & 1 == 1
+    }
+
+    /// Σ_r w[r][e] for the fold correction.
+    #[inline]
+    pub fn col_sum(&self, engine: usize) -> i64 {
+        self.col_sum[engine]
+    }
+
+    /// Total set magnitude bits (storage activity metric).
+    pub fn set_bits(&self) -> usize {
+        self.mag.iter().map(|m| m.count_ones() as usize).sum()
+    }
+
+    /// Dense row-major signed values (for golden comparisons / export).
+    pub fn to_signed(&self) -> Vec<Vec<i64>> {
+        (0..self.rows)
+            .map(|r| (0..self.engines).map(|e| self.value(r, e)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MacroConfig;
+
+    fn cfg() -> MacroConfig {
+        MacroConfig::default()
+    }
+
+    fn ramp_weights(cfg: &MacroConfig) -> Vec<Vec<i64>> {
+        (0..cfg.rows)
+            .map(|r| {
+                (0..cfg.engines)
+                    .map(|e| (((r * 31 + e * 7) % 15) as i64) - 7)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sign_magnitude_roundtrip() {
+        let c = cfg();
+        let w = ramp_weights(&c);
+        let cw = CoreWeights::from_signed(&c, &w).unwrap();
+        assert_eq!(cw.to_signed(), w);
+        // spot-check bit extraction: value -5 = sign -1, mag 0b101
+        let (mut r5, mut e5) = (usize::MAX, usize::MAX);
+        'outer: for (r, row) in w.iter().enumerate() {
+            for (e, &v) in row.iter().enumerate() {
+                if v == -5 {
+                    (r5, e5) = (r, e);
+                    break 'outer;
+                }
+            }
+        }
+        assert_ne!(r5, usize::MAX, "ramp should contain -5");
+        assert_eq!(cw.sign(r5, e5), -1);
+        assert_eq!(cw.mag(r5, e5), 5);
+        assert!(cw.mag_bit(r5, e5, 0));
+        assert!(!cw.mag_bit(r5, e5, 1));
+        assert!(cw.mag_bit(r5, e5, 2));
+    }
+
+    #[test]
+    fn col_sums_match_manual() {
+        let c = cfg();
+        let w = ramp_weights(&c);
+        let cw = CoreWeights::from_signed(&c, &w).unwrap();
+        for e in 0..c.engines {
+            let manual: i64 = (0..c.rows).map(|r| w[r][e]).sum();
+            assert_eq!(cw.col_sum(e), manual);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_and_bad_shape() {
+        let c = cfg();
+        let mut w = ramp_weights(&c);
+        w[3][5] = 8; // > +7
+        assert!(matches!(
+            CoreWeights::from_signed(&c, &w),
+            Err(WeightError::Range { row: 3, engine: 5, value: 8, .. })
+        ));
+        let short = vec![vec![0i64; c.engines]; c.rows - 1];
+        assert!(matches!(
+            CoreWeights::from_signed(&c, &short),
+            Err(WeightError::Shape { .. })
+        ));
+    }
+
+    #[test]
+    fn minus_seven_and_plus_seven_ok() {
+        let c = cfg();
+        let mut w = vec![vec![0i64; c.engines]; c.rows];
+        w[0][0] = -7;
+        w[1][1] = 7;
+        let cw = CoreWeights::from_signed(&c, &w).unwrap();
+        assert_eq!(cw.value(0, 0), -7);
+        assert_eq!(cw.value(1, 1), 7);
+        assert_eq!(cw.set_bits(), 6);
+    }
+}

@@ -1,0 +1,254 @@
+//! Deployment bridge: a float-trained MLP → the quantized parameter bundle
+//! both inference paths consume (native tiled executor, and the AOT
+//! `mlp_fwd` artifact whose graph implements the identical pipeline).
+
+use crate::config::Config;
+use crate::mapping::executor::CimLinear;
+use crate::mapping::{CimBackend, MapError};
+use crate::nn::mlp::Mlp;
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+
+/// Quantized MLP ready for the macro: integer weight planes + the four
+/// scales the L2 graph takes (`a0_scale, w1_scale, a1_cal, w2_scale`).
+#[derive(Clone, Debug)]
+pub struct MlpDeployment {
+    pub dims: [usize; 3],
+    /// Integer-valued weights, column-major per layer: `[K][N]` in ±7.
+    pub w1_q: Tensor,
+    pub b1: Vec<f32>,
+    pub w2_q: Tensor,
+    pub b2: Vec<f32>,
+    pub a0_scale: f32,
+    pub w1_scale: f32,
+    pub a1_cal: f32,
+    pub w2_scale: f32,
+}
+
+impl MlpDeployment {
+    /// Post-training quantization. `cal_inputs` drives the hidden-activation
+    /// calibration (max over the set, the deployment-standard recipe).
+    pub fn quantize(mlp: &Mlp, cal_inputs: &[Vec<f32>], input_max: f32) -> Self {
+        assert_eq!(mlp.layers.len(), 2, "deployment expects a 2-layer MLP");
+        let l1 = &mlp.layers[0];
+        let l2 = &mlp.layers[1];
+        let dims = [l1.w.shape[1], l1.w.shape[0], l2.w.shape[0]];
+
+        // Transpose [out][in] → [in][out] (column per engine).
+        let to_cols = |w: &Tensor| -> Tensor {
+            let (o, i) = (w.shape[0], w.shape[1]);
+            let mut t = Tensor::zeros(&[i, o]);
+            for oo in 0..o {
+                for ii in 0..i {
+                    *t.at2_mut(ii, oo) = w.at2(oo, ii);
+                }
+            }
+            t
+        };
+        let w1_cols = to_cols(&l1.w);
+        let w2_cols = to_cols(&l2.w);
+        let p1 = QuantParams::signed(w1_cols.max_abs(), 4);
+        let p2 = QuantParams::signed(w2_cols.max_abs(), 4);
+        let quantize_plane = |t: &Tensor, p: &QuantParams| -> Tensor {
+            Tensor::from_vec(
+                &t.shape,
+                t.data.iter().map(|&v| p.quantize(v) as f32).collect(),
+            )
+        };
+
+        // Hidden calibration: max post-ReLU activation over the cal set.
+        let mut a1_cal = 1e-6f32;
+        for x in cal_inputs {
+            let acts = mlp.forward_trace(x);
+            for &v in &acts[1] {
+                a1_cal = a1_cal.max(v);
+            }
+        }
+
+        Self {
+            dims,
+            w1_q: quantize_plane(&w1_cols, &p1),
+            b1: l1.b.clone(),
+            w2_q: quantize_plane(&w2_cols, &p2),
+            b2: l2.b.clone(),
+            a0_scale: input_max / 15.0,
+            w1_scale: p1.scale,
+            a1_cal,
+            w2_scale: p2.scale,
+        }
+    }
+
+    /// Native-path inference: the same quantized pipeline as the `mlp_fwd`
+    /// artifact, executed through the tiled executor on any backend.
+    pub fn run_native(
+        &self,
+        backend: &mut dyn CimBackend,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>, MapError> {
+        let cfg: Config = backend.config().clone();
+        let unit_a = QuantParams { scale: 1.0, q_min: 0, q_max: 15 };
+        let unit_w = QuantParams { scale: 1.0, q_min: -7, q_max: 7 };
+        let lin1 = CimLinear::with_params(
+            &self.w1_q,
+            vec![0.0; self.dims[1]],
+            unit_w,
+            unit_a,
+            &cfg,
+        );
+        let lin2 = CimLinear::with_params(
+            &self.w2_q,
+            vec![0.0; self.dims[2]],
+            unit_w,
+            unit_a,
+            &cfg,
+        );
+
+        // Layer 1: quantize input, integer product, dequant + bias + ReLU.
+        let x_q: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                x.iter()
+                    .map(|&v| (v / self.a0_scale).round().clamp(0.0, 15.0))
+                    .collect()
+            })
+            .collect();
+        let s1 = lin1.run_batch(backend, &x_q)?;
+        let a1_scale = self.a1_cal / 15.0;
+        let h_q: Vec<Vec<f32>> = s1
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&self.b1)
+                    .map(|(&s, &b)| {
+                        let y = s * (self.a0_scale * self.w1_scale) + b;
+                        (y.max(0.0) / a1_scale).round().clamp(0.0, 15.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        // Layer 2.
+        let s2 = lin2.run_batch(backend, &h_q)?;
+        Ok(s2
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&self.b2)
+                    .map(|(&s, &b)| s * (a1_scale * self.w2_scale) + b)
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Exact digital reference of the quantized pipeline (no macro).
+    pub fn run_digital(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter()
+            .map(|x| {
+                let x_q: Vec<f32> = x
+                    .iter()
+                    .map(|&v| (v / self.a0_scale).round().clamp(0.0, 15.0))
+                    .collect();
+                let mut h = vec![0f32; self.dims[1]];
+                for (n, hv) in h.iter_mut().enumerate() {
+                    let mut acc = 0f32;
+                    for k in 0..self.dims[0] {
+                        acc += x_q[k] * self.w1_q.at2(k, n);
+                    }
+                    let y = acc * (self.a0_scale * self.w1_scale) + self.b1[n];
+                    let a1_scale = self.a1_cal / 15.0;
+                    *hv = (y.max(0.0) / a1_scale).round().clamp(0.0, 15.0);
+                }
+                (0..self.dims[2])
+                    .map(|n| {
+                        let mut acc = 0f32;
+                        for (k, &hv) in h.iter().enumerate() {
+                            acc += hv * self.w2_q.at2(k, n);
+                        }
+                        acc * ((self.a1_cal / 15.0) * self.w2_scale) + self.b2[n]
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Flattened inputs for the `mlp_fwd` artifact (scales vector order
+    /// matches `python/compile/model.py`).
+    pub fn scales(&self) -> [f32; 4] {
+        [self.a0_scale, self.w1_scale, self.a1_cal, self.w2_scale]
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mapping::DigitalBackend;
+    use crate::nn::dataset::BlobDataset;
+    use crate::nn::mlp::{train, Mlp};
+
+    fn trained_setup() -> (Mlp, Vec<(Vec<f32>, usize)>, MlpDeployment) {
+        let mut d = BlobDataset::new(12, 0.05, 17);
+        let data: Vec<(Vec<f32>, usize)> = d
+            .batch(250)
+            .into_iter()
+            .map(|s| (s.image.data, s.label))
+            .collect();
+        let mut mlp = Mlp::new(&[144, 32, 10], 5);
+        let acc = train(&mut mlp, &data, 6, 0.05, 9);
+        assert!(acc > 0.85, "float training failed: {acc}");
+        let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
+        let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+        (mlp, data, dep)
+    }
+
+    #[test]
+    fn digital_quantized_accuracy_close_to_float() {
+        let (mlp, data, dep) = trained_setup();
+        let xs: Vec<Vec<f32>> = data.iter().map(|(x, _)| x.clone()).collect();
+        let logits = dep.run_digital(&xs);
+        let q_acc = data
+            .iter()
+            .zip(&logits)
+            .filter(|((_, y), l)| argmax(l) == *y)
+            .count() as f64
+            / data.len() as f64;
+        let f_acc = crate::nn::mlp::accuracy(&mlp, &data);
+        assert!(
+            q_acc >= f_acc - 0.1,
+            "4-b quantization lost too much: float {f_acc}, quant {q_acc}"
+        );
+    }
+
+    #[test]
+    fn native_digital_backend_equals_run_digital() {
+        let (_, data, dep) = trained_setup();
+        let xs: Vec<Vec<f32>> = data.iter().take(20).map(|(x, _)| x.clone()).collect();
+        let mut be = DigitalBackend::new(Config::default());
+        let a = dep.run_native(&mut be, &xs).unwrap();
+        let b = dep.run_digital(&xs);
+        for (ra, rb) in a.iter().zip(&b) {
+            for (va, vb) in ra.iter().zip(rb) {
+                assert!((va - vb).abs() < 1e-3, "{va} vs {vb}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_fit_macro_format() {
+        let (_, _, dep) = trained_setup();
+        for t in [&dep.w1_q, &dep.w2_q] {
+            for &v in &t.data {
+                assert_eq!(v, v.round());
+                assert!((-7.0..=7.0).contains(&v));
+            }
+        }
+        assert!(dep.a1_cal > 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Serving metrics: latency percentiles, throughput, and per-request energy
+//! pulled from the backend's activity counters.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    pub requests: u64,
+    pub batches: u64,
+    pub core_ops: u64,
+    pub energy_fj: f64,
+    pub device_cycles: u64,
+    pub wall: Duration,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub energy_uj_per_req: f64,
+    pub device_utilization: f64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, batch_size: usize, latency: Duration) {
+        self.batches += 1;
+        self.requests += batch_size as u64;
+        for _ in 0..batch_size {
+            self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        }
+    }
+
+    pub fn report(&self, clock_hz: f64) -> MetricsReport {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            crate::bench::percentile(&lat, q) / 1e3
+        };
+        let wall_s = self.wall.as_secs_f64().max(1e-12);
+        MetricsReport {
+            requests: self.requests,
+            batches: self.batches,
+            mean_batch: self.requests as f64 / self.batches.max(1) as f64,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            throughput_rps: self.requests as f64 / wall_s,
+            energy_uj_per_req: self.energy_fj * 1e-9 / self.requests.max(1) as f64,
+            device_utilization: (self.device_cycles as f64 / clock_hz) / wall_s,
+        }
+    }
+}
+
+impl MetricsReport {
+    pub fn render(&self) -> String {
+        format!(
+            "requests {}  batches {} (mean {:.1})  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
+             throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.throughput_rps,
+            self.energy_uj_per_req,
+            100.0 * self.device_utilization
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_throughput() {
+        let mut m = Metrics::default();
+        for i in 1..=100 {
+            m.record_batch(1, Duration::from_micros(i * 100));
+        }
+        m.wall = Duration::from_secs(1);
+        m.energy_fj = 1e9; // 1 µJ total
+        let r = m.report(200e6);
+        assert_eq!(r.requests, 100);
+        assert!((r.p50_ms - 5.05).abs() < 0.15, "{}", r.p50_ms);
+        assert!(r.p99_ms > r.p95_ms && r.p95_ms > r.p50_ms);
+        assert!((r.throughput_rps - 100.0).abs() < 1e-9);
+        assert!((r.energy_uj_per_req - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(16, Duration::from_millis(2));
+        m.record_batch(8, Duration::from_millis(1));
+        let r = m.report(200e6);
+        assert_eq!(r.requests, 24);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 12.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordinator: the edge-AI serving story around the macro — deployment
+//! quantization, dynamic batching, TCP serving and metrics.
+
+pub mod deployment;
+pub mod metrics;
+pub mod server;
+
+pub use deployment::MlpDeployment;
+pub use metrics::{Metrics, MetricsReport};
+pub use server::{serve, Client, ServeConfig, ServerHandle};

@@ -1,0 +1,289 @@
+//! Edge-inference TCP server: accepts float feature vectors, batches them
+//! dynamically (size- or timeout-triggered), runs the deployed quantized
+//! MLP on the CIM backend, and streams logits back.
+//!
+//! Wire protocol (little-endian):
+//!   request  = u32 magic (0xC1A0_0001) | u32 n | n × f32
+//!   response = u32 magic (0xC1A0_0002) | u32 n | n × f32
+//! One request per round-trip per connection; connections are persistent.
+
+use crate::coordinator::deployment::MlpDeployment;
+use crate::coordinator::metrics::Metrics;
+use crate::mapping::CimBackend;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub const REQ_MAGIC: u32 = 0xC1A0_0001;
+pub const RESP_MAGIC: u32 = 0xC1A0_0002;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, batch_timeout: Duration::from_millis(2) }
+    }
+}
+
+struct Job {
+    input: Vec<f32>,
+    reply: Sender<Vec<f32>>,
+}
+
+/// Handle to a running server.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<Metrics>>,
+}
+
+impl ServerHandle {
+    /// Stop the server and return its accumulated metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        self.join.take().map(|j| j.join().expect("server thread")).unwrap_or_default()
+    }
+}
+
+/// Start serving on an ephemeral local port. The backend and deployment move
+/// into the inference thread.
+pub fn serve(
+    deployment: MlpDeployment,
+    mut backend: Box<dyn CimBackend + Send>,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (job_tx, job_rx) = channel::<Job>();
+
+    // Inference thread: dynamic batcher + device.
+    let stop_inf = stop.clone();
+    let clock_hz = backend.config().mac.clock_mhz * 1e6;
+    let _ = clock_hz;
+    let inference = std::thread::spawn(move || {
+        let mut metrics = Metrics::default();
+        let t_start = Instant::now();
+        loop {
+            let batch = collect_batch(&job_rx, &cfg, &stop_inf);
+            if batch.is_empty() {
+                if stop_inf.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            let t0 = Instant::now();
+            let inputs: Vec<Vec<f32>> = batch.iter().map(|j| j.input.clone()).collect();
+            let ops_before = backend.stats().core_ops;
+            let energy_before = backend.stats().energy_fj();
+            let cycles_before = backend.stats().total_cycles;
+            match deployment.run_native(&mut *backend, &inputs) {
+                Ok(logits) => {
+                    for (job, row) in batch.iter().zip(logits) {
+                        let _ = job.reply.send(row);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("inference error: {e}");
+                    for job in &batch {
+                        let _ = job.reply.send(vec![]);
+                    }
+                }
+            }
+            metrics.record_batch(batch.len(), t0.elapsed());
+            metrics.core_ops += backend.stats().core_ops - ops_before;
+            metrics.energy_fj += backend.stats().energy_fj() - energy_before;
+            metrics.device_cycles += backend.stats().total_cycles - cycles_before;
+        }
+        metrics.wall = t_start.elapsed();
+        metrics
+    });
+
+    // Accept loop thread.
+    let stop_acc = stop.clone();
+    let join = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop_acc.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let tx = job_tx.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(s, tx);
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+        drop(job_tx);
+        inference.join().expect("inference thread")
+    });
+
+    Ok(ServerHandle { addr, stop, join: Some(join) })
+}
+
+fn collect_batch(rx: &Receiver<Job>, cfg: &ServeConfig, stop: &AtomicBool) -> Vec<Job> {
+    let mut batch = Vec::new();
+    // Block for the first job (with a stop-poll heartbeat)...
+    loop {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(job) => {
+                batch.push(job);
+                break;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    return batch;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return batch,
+        }
+    }
+    // ... then fill until max_batch or the batching window closes.
+    let deadline = Instant::now() + cfg.batch_timeout;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(job) => batch.push(job),
+            Err(_) => break,
+        }
+    }
+    batch
+}
+
+fn handle_connection(mut s: TcpStream, jobs: Sender<Job>) -> std::io::Result<()> {
+    s.set_nodelay(true)?;
+    loop {
+        let mut head = [0u8; 8];
+        if s.read_exact(&mut head).is_err() {
+            return Ok(()); // client hung up
+        }
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        if magic != REQ_MAGIC || n > 1 << 20 {
+            return Ok(()); // protocol error: drop connection
+        }
+        let mut buf = vec![0u8; n * 4];
+        s.read_exact(&mut buf)?;
+        let input: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let (reply_tx, reply_rx) = channel();
+        if jobs.send(Job { input, reply: reply_tx }).is_err() {
+            return Ok(()); // server stopping
+        }
+        let logits = reply_rx.recv().unwrap_or_default();
+        let mut out = Vec::with_capacity(8 + logits.len() * 4);
+        out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+        for v in &logits {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        s.write_all(&out)?;
+    }
+}
+
+/// Blocking client for the wire protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream })
+    }
+
+    pub fn infer(&mut self, x: &[f32]) -> std::io::Result<Vec<f32>> {
+        let mut msg = Vec::with_capacity(8 + x.len() * 4);
+        msg.extend_from_slice(&REQ_MAGIC.to_le_bytes());
+        msg.extend_from_slice(&(x.len() as u32).to_le_bytes());
+        for v in x {
+            msg.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stream.write_all(&msg)?;
+        let mut head = [0u8; 8];
+        self.stream.read_exact(&mut head)?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        if magic != RESP_MAGIC {
+            return Err(std::io::Error::other("bad response magic"));
+        }
+        let mut buf = vec![0u8; n * 4];
+        self.stream.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::deployment::argmax;
+    use crate::mapping::DigitalBackend;
+    use crate::nn::dataset::BlobDataset;
+    use crate::nn::mlp::{train, Mlp};
+
+    #[test]
+    fn end_to_end_serve_roundtrip() {
+        let mut d = BlobDataset::new(12, 0.05, 3);
+        let data: Vec<(Vec<f32>, usize)> = d
+            .batch(200)
+            .into_iter()
+            .map(|s| (s.image.data, s.label))
+            .collect();
+        let mut mlp = Mlp::new(&[144, 32, 10], 5);
+        train(&mut mlp, &data, 6, 0.05, 9);
+        let cal: Vec<Vec<f32>> = data.iter().take(40).map(|(x, _)| x.clone()).collect();
+        let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+        let expected = dep.run_digital(&[data[0].0.clone()]);
+
+        let backend = Box::new(DigitalBackend::new(Config::default()));
+        let handle = serve(dep, backend, ServeConfig::default()).unwrap();
+
+        let mut client = Client::connect(handle.addr).unwrap();
+        let logits = client.infer(&data[0].0).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert_eq!(argmax(&logits), argmax(&expected[0]));
+
+        // Concurrent clients exercise the batcher.
+        let addr = handle.addr;
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let x = data[t + 1].0.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..5 {
+                    let l = c.infer(&x).unwrap();
+                    assert_eq!(l.len(), 10);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+
+        let metrics = handle.shutdown();
+        assert!(metrics.requests >= 21, "requests {}", metrics.requests);
+        let report = metrics.report(200e6);
+        assert!(report.throughput_rps > 0.0);
+    }
+}

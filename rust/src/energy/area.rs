@@ -1,0 +1,75 @@
+//! Area model (Fig. 7 area breakdown, Fig. 6 area-efficiency row).
+//!
+//! The paper's 790–1136 TOPS/W/mm² range is consistent with a single macro
+//! area of 0.121 mm² at both efficiency endpoints; the Fig. 7 area breakdown
+//! is partially illegible in the source text — the MOM-capacitor/pre-charge
+//! share is taken as the remainder (documented in DESIGN.md §8).
+
+use crate::config::Config;
+
+/// Fig. 7 area breakdown fractions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaBreakdown {
+    pub sa_analog: f64,
+    pub control: f64,
+    pub storage: f64,
+    pub mom_caps: f64,
+}
+
+pub const PAPER_AREA_BREAKDOWN: AreaBreakdown = AreaBreakdown {
+    sa_analog: 0.3604,
+    control: 0.0760,
+    storage: 0.0036,
+    mom_caps: 0.5600, // remainder assumption, see DESIGN.md §8
+};
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.sa_analog + self.control + self.storage + self.mom_caps
+    }
+
+    /// Absolute component areas in mm² for a macro of `area_mm2`.
+    pub fn absolute(&self, area_mm2: f64) -> [(&'static str, f64); 4] {
+        [
+            ("SA + analog modules", self.sa_analog * area_mm2),
+            ("Control logic", self.control * area_mm2),
+            ("Storage", self.storage * area_mm2),
+            ("MOM caps + precharge", self.mom_caps * area_mm2),
+        ]
+    }
+}
+
+/// Normalized energy-based area efficiency, TOPS/W/mm² (the Fig. 6 metric
+/// per [7]).
+pub fn area_efficiency(cfg: &Config, tops_per_watt: f64) -> f64 {
+    tops_per_watt / cfg.energy.area_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        assert!((PAPER_AREA_BREAKDOWN.total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_area_consistency() {
+        // 95.6/0.121 ≈ 790 and 137.5/0.121 ≈ 1136 — the Fig. 6 range.
+        let cfg = Config::default();
+        let lo = area_efficiency(&cfg, 95.6);
+        let hi = area_efficiency(&cfg, 137.5);
+        assert!((lo - 790.0).abs() < 3.0, "{lo}");
+        assert!((hi - 1136.0).abs() < 3.0, "{hi}");
+    }
+
+    #[test]
+    fn absolute_areas() {
+        let abs = PAPER_AREA_BREAKDOWN.absolute(0.121);
+        let total: f64 = abs.iter().map(|(_, a)| a).sum();
+        assert!((total - 0.121).abs() < 1e-12);
+        assert_eq!(abs[0].0, "SA + analog modules");
+    }
+}

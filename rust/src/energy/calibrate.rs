@@ -1,0 +1,246 @@
+//! Energy-constant calibration (DESIGN.md §7).
+//!
+//! Two measured anchors from the paper fix the activity-dependent and fixed
+//! array energy; the Fig. 7 dense power breakdown fixes the group split:
+//!
+//! * dense 4b:4b random inputs  → **95.6 TOPS/W**
+//! * 90 %-sparse random inputs  → **137.5 TOPS/W**
+//! * dense split: array/sign 64.75 %, pulse path 17.93 %, DTC+driver
+//!   14.19 %, SA+control 3.13 %.
+//!
+//! Everything else in the energy model (the sparsity *curve* between the
+//! anchors, enhancement-mode deltas, per-component sparsity response) is
+//! then a prediction. `cimsim calibrate` prints the solved constants; the
+//! solved values are frozen in `EnergyConfig::default` and
+//! `calibration_is_frozen` asserts the freeze.
+
+use crate::cim::{MacroSim, OpStats};
+use crate::config::{Config, EnergyConfig};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Paper anchors.
+pub const DENSE_TOPS_W: f64 = 95.6;
+pub const SPARSE_TOPS_W: f64 = 137.5;
+pub const SPARSE_FRACTION: f64 = 0.9;
+/// Fig. 7 dense power breakdown: array, pulse path, DTC, SA+ctrl.
+pub const POWER_SPLIT: [f64; 4] = [0.6475, 0.1793, 0.1419, 0.0313];
+/// SA comparison energy is fixed a-priori (a 40 nm strong-arm latch is a
+/// few fJ per decision); the solver back-fills control energy around it.
+pub const E_SA_FJ: f64 = 2.0;
+/// Fraction of DTC energy attributed to the per-pulse fixed cost (the rest
+/// scales with total pulse width).
+pub const DTC_PULSE_SPLIT: f64 = 0.5;
+
+/// Mean per-core-op activity for a random workload with the given input
+/// sparsity (fraction of zero activations).
+pub fn mean_stats(cfg: &Config, sparsity: f64, trials: usize, seed: u64) -> OpStats {
+    let mut sim_cfg = cfg.clone();
+    sim_cfg.noise.enabled = false; // activity counters, not accuracy
+    let mut sim = MacroSim::new(sim_cfg.clone());
+    let mut rng = Xoshiro256::seeded(seed);
+    let rows = cfg.mac.rows;
+    let w: Vec<Vec<i64>> = (0..rows)
+        .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+        .collect();
+    sim.load_core(0, &w).unwrap();
+
+    let mut acc = OpStats::default();
+    let mut cyc_sum = 0u64;
+    let mut mac_cyc_sum = 0u64;
+    for _ in 0..trials {
+        let acts: Vec<i64> = (0..rows)
+            .map(|_| {
+                if rng.next_bool(sparsity) {
+                    0
+                } else {
+                    rng.next_range_i64(1, cfg.mac.act_max())
+                }
+            })
+            .collect();
+        let r = sim.core_op(0, &acts, &mut rng).unwrap();
+        // accumulate() maxes cycles; averages need the sum.
+        cyc_sum += r.stats.total_cycles;
+        mac_cyc_sum += r.stats.mac_cycles;
+        acc.dtc_pulses += r.stats.dtc_pulses;
+        acc.dtc_tau_sum += r.stats.dtc_tau_sum;
+        acc.sl_toggles += r.stats.sl_toggles;
+        acc.mac_discharge_u += r.stats.mac_discharge_u;
+        acc.adc_discharge_u += r.stats.adc_discharge_u;
+        acc.sa_compares += r.stats.sa_compares;
+        acc.max_width_tau0 = acc.max_width_tau0.max(r.stats.max_width_tau0);
+    }
+    let n = trials as f64;
+    OpStats {
+        max_width_tau0: acc.max_width_tau0,
+        dtc_pulses: (acc.dtc_pulses as f64 / n).round() as usize,
+        dtc_tau_sum: acc.dtc_tau_sum / n,
+        sl_toggles: (acc.sl_toggles as f64 / n).round() as usize,
+        mac_discharge_u: acc.mac_discharge_u / n,
+        adc_discharge_u: acc.adc_discharge_u / n,
+        sa_compares: (acc.sa_compares as f64 / n).round() as usize,
+        mac_cycles: ((mac_cyc_sum as f64) / n).round() as u64,
+        total_cycles: ((cyc_sum as f64) / n).round() as u64,
+    }
+}
+
+#[derive(Debug)]
+pub struct CalibrationError(pub String);
+
+impl std::fmt::Display for CalibrationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "calibration failed: {}", self.0)
+    }
+}
+
+impl std::error::Error for CalibrationError {}
+
+/// Solve the energy constants from the anchors (see module docs).
+pub fn solve(cfg: &Config) -> Result<EnergyConfig, CalibrationError> {
+    let trials = 400;
+    let dense = mean_stats(cfg, 0.0, trials, 0xCA11);
+    let sparse = mean_stats(cfg, SPARSE_FRACTION, trials, 0xCA11);
+
+    // Per-core-op energy targets (fJ): macro op = `cores` core ops.
+    let ops = cfg.mac.ops_per_op() as f64 / cfg.mac.cores as f64;
+    let e_dense = ops / DENSE_TOPS_W * 1e3; // ops / (TOPS/W) in fJ
+    let e_sparse = ops / SPARSE_TOPS_W * 1e3;
+
+    let [f_array, f_path, f_dtc, f_sactrl] = POWER_SPLIT;
+    let a_d = f_array * e_dense;
+    let p_d = f_path * e_dense;
+    let d_d = f_dtc * e_dense;
+    let s_d = f_sactrl * e_dense;
+
+    let e_path_toggle = p_d / dense.sl_toggles as f64;
+    let e_dtc_pulse = DTC_PULSE_SPLIT * d_d / dense.dtc_pulses as f64;
+    let e_dtc_tau = (1.0 - DTC_PULSE_SPLIT) * d_d / dense.dtc_tau_sum;
+    let e_sa_cmp = E_SA_FJ;
+    let e_ctrl_cycle = (s_d - e_sa_cmp * dense.sa_compares as f64) / dense.total_cycles as f64;
+    if e_ctrl_cycle <= 0.0 {
+        return Err(CalibrationError(format!(
+            "control energy went non-positive ({e_ctrl_cycle:.3} fJ/cycle)"
+        )));
+    }
+
+    // Variable (non-array) energy of the sparse workload with these constants.
+    let v_sparse = e_dtc_pulse * sparse.dtc_pulses as f64
+        + e_dtc_tau * sparse.dtc_tau_sum
+        + e_path_toggle * sparse.sl_toggles as f64
+        + e_sa_cmp * sparse.sa_compares as f64
+        + e_ctrl_cycle * sparse.total_cycles as f64;
+
+    // Two equations for the array term:
+    //   e_u·dis_dense + e_fix = a_d
+    //   e_u·dis_sparse + e_fix = e_sparse − v_sparse
+    let dis_dense = dense.mac_discharge_u + dense.adc_discharge_u;
+    let dis_sparse = sparse.mac_discharge_u + sparse.adc_discharge_u;
+    let rhs_sparse = e_sparse - v_sparse;
+    let denom = dis_dense - dis_sparse;
+    if denom.abs() < 1e-6 {
+        return Err(CalibrationError("workloads have identical discharge".into()));
+    }
+    let e_array_unit = (a_d - rhs_sparse) / denom;
+    let e_array_fixed = a_d - e_array_unit * dis_dense;
+    if e_array_unit <= 0.0 || e_array_fixed <= 0.0 {
+        return Err(CalibrationError(format!(
+            "array split infeasible (unit {e_array_unit:.4}, fixed {e_array_fixed:.1})"
+        )));
+    }
+
+    Ok(EnergyConfig {
+        e_ctrl_cycle,
+        e_sa_cmp,
+        e_dtc_pulse,
+        e_dtc_tau,
+        e_path_toggle,
+        e_array_unit,
+        e_array_fixed,
+        area_mm2: cfg.energy.area_mm2,
+    })
+}
+
+/// Measured efficiency (TOPS/W) of a random workload at a given sparsity
+/// under the configured energy constants.
+pub fn measured_efficiency(cfg: &Config, sparsity: f64, trials: usize, seed: u64) -> f64 {
+    let stats = mean_stats(cfg, sparsity, trials, seed);
+    let b = super::core_op_energy(cfg, &stats);
+    super::efficiency_tops_w(cfg, &b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn solver_hits_both_anchors() {
+        let cfg = Config::default();
+        let solved = solve(&cfg).unwrap();
+        let mut c2 = cfg.clone();
+        c2.energy = solved;
+        let dense = measured_efficiency(&c2, 0.0, 400, 0xCA11);
+        let sparse = measured_efficiency(&c2, SPARSE_FRACTION, 400, 0xCA11);
+        assert!((dense - DENSE_TOPS_W).abs() < 1.0, "dense {dense}");
+        assert!((sparse - SPARSE_TOPS_W).abs() < 2.0, "sparse {sparse}");
+    }
+
+    #[test]
+    fn solver_reproduces_fig7_split_at_dense() {
+        let cfg = Config::default();
+        let solved = solve(&cfg).unwrap();
+        let mut c2 = cfg.clone();
+        c2.energy = solved;
+        let stats = mean_stats(&c2, 0.0, 400, 0xCA11);
+        let b = super::super::core_op_energy(&c2, &stats);
+        let f = b.fractions();
+        for (got, want) in f.iter().zip(POWER_SPLIT) {
+            assert!((got - want).abs() < 0.01, "fraction {got} vs {want}");
+        }
+    }
+
+    /// The frozen defaults in `EnergyConfig::default()` must match what the
+    /// solver derives (re-freeze whenever the activity model changes).
+    #[test]
+    fn calibration_is_frozen() {
+        let cfg = Config::default();
+        let solved = solve(&cfg).unwrap();
+        let frozen = cfg.energy.clone();
+        let close = |a: f64, b: f64, tag: &str| {
+            assert!(
+                (a - b).abs() <= 0.02 * b.abs().max(1e-9),
+                "{tag}: solved {a} vs frozen {b} — re-freeze EnergyConfig::default"
+            );
+        };
+        close(solved.e_ctrl_cycle, frozen.e_ctrl_cycle, "e_ctrl_cycle");
+        close(solved.e_sa_cmp, frozen.e_sa_cmp, "e_sa_cmp");
+        close(solved.e_dtc_pulse, frozen.e_dtc_pulse, "e_dtc_pulse");
+        close(solved.e_dtc_tau, frozen.e_dtc_tau, "e_dtc_tau");
+        close(solved.e_path_toggle, frozen.e_path_toggle, "e_path_toggle");
+        close(solved.e_array_unit, frozen.e_array_unit, "e_array_unit");
+        close(solved.e_array_fixed, frozen.e_array_fixed, "e_array_fixed");
+    }
+
+    #[test]
+    fn efficiency_monotone_in_sparsity() {
+        let cfg = Config::default();
+        let mut prev = 0.0;
+        for s in [0.0, 0.3, 0.6, 0.9] {
+            let e = measured_efficiency(&cfg, s, 150, 7);
+            assert!(e > prev, "sparsity {s}: {e} ≤ {prev}");
+            prev = e;
+        }
+    }
+}
+
+#[cfg(test)]
+mod freeze_helper {
+    /// `cargo test print_solved_constants -- --ignored --nocapture` prints
+    /// the solver output for re-freezing `EnergyConfig::default`.
+    #[test]
+    #[ignore]
+    fn print_solved_constants() {
+        let cfg = crate::config::Config::default();
+        let e = super::solve(&cfg).unwrap();
+        println!("{e:#?}");
+    }
+}

@@ -1,0 +1,85 @@
+//! The paper's figure of merit (Fig. 6 footnote 4):
+//! `FoM = ACT(bit) × W(bit) × OUT-ratio × Throughput(TOPS/Kb) × EE(TOPS/W)`
+//! evaluated at average performance, where
+//! `OUT-ratio = readout precision / full output precision` per [7].
+
+use crate::config::Config;
+
+/// Full output precision of an `act_bits × w_bits` MAC accumulated over
+/// `rows` terms: act + w + log2(rows) bits.
+pub fn full_output_bits(act_bits: u32, w_bits: u32, rows: usize) -> f64 {
+    act_bits as f64 + w_bits as f64 + (rows as f64).log2()
+}
+
+/// OUT-ratio for the configured macro (9 / 14 for the default geometry).
+pub fn out_ratio(cfg: &Config) -> f64 {
+    cfg.mac.adc_bits as f64
+        / full_output_bits(cfg.mac.act_bits, cfg.mac.weight_bits, cfg.mac.rows)
+}
+
+/// The FoM at a given operating point.
+pub fn fom(
+    act_bits: u32,
+    w_bits: u32,
+    out_ratio: f64,
+    gops_per_kb: f64,
+    tops_per_watt: f64,
+) -> f64 {
+    act_bits as f64 * w_bits as f64 * out_ratio * (gops_per_kb / 1e3) * tops_per_watt
+}
+
+/// FoM from (min, max) performance ranges evaluated at the averages, the
+/// paper's stated convention.
+pub fn fom_avg(
+    act_bits: u32,
+    w_bits: u32,
+    out_ratio: f64,
+    gops_per_kb: (f64, f64),
+    tops_w: (f64, f64),
+) -> f64 {
+    fom(
+        act_bits,
+        w_bits,
+        out_ratio,
+        0.5 * (gops_per_kb.0 + gops_per_kb.1),
+        0.5 * (tops_w.0 + tops_w.1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn default_out_ratio_is_9_over_14() {
+        let cfg = Config::default();
+        assert!((out_ratio(&cfg) - 9.0 / 14.0).abs() < 1e-12);
+        assert!((full_output_bits(4, 4, 64) - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn published_6_fom_reproduces_with_unity_ratio() {
+        // [6]: 4×4×1.0×0.00617×46.3 = 4.57 — confirms the paper computed
+        // [6] with OUT-ratio 1 (full-precision readout).
+        let f = fom(4, 4, 1.0, 6.17, 46.3);
+        assert!((f - 4.57).abs() < 0.01, "{f}");
+    }
+
+    #[test]
+    fn our_4b_fom_magnitude() {
+        // With our measured ranges (6.82–8.53 GOPS/Kb, 95.6–137.5 TOPS/W)
+        // and OUT-ratio 9/14 the FoM lands in the 9–10.5 region the paper
+        // reports as 10.4 (see EXPERIMENTS.md for the gap discussion).
+        let f = fom_avg(4, 4, 9.0 / 14.0, (6.82, 8.53), (95.6, 137.5));
+        assert!(f > 8.5 && f < 11.0, "{f}");
+    }
+
+    #[test]
+    fn fom_linear_in_each_factor() {
+        let base = fom(4, 4, 0.5, 5.0, 100.0);
+        assert!((fom(8, 4, 0.5, 5.0, 100.0) / base - 2.0).abs() < 1e-12);
+        assert!((fom(4, 4, 1.0, 5.0, 100.0) / base - 2.0).abs() < 1e-12);
+        assert!((fom(4, 4, 0.5, 10.0, 100.0) / base - 2.0).abs() < 1e-12);
+    }
+}

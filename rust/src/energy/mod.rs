@@ -1,0 +1,134 @@
+//! Energy / power / area accounting (Fig. 5 sparsity curve, Fig. 6 table,
+//! Fig. 7 breakdowns).
+//!
+//! The model is charge/activity based: every term is driven by a counter in
+//! [`crate::cim::OpStats`], with constants calibrated once against the
+//! paper's two measured anchors (dense → 95.6 TOPS/W, 90 %-sparse → 137.5
+//! TOPS/W) and the Fig. 7 dense power breakdown (see [`calibrate`]).
+
+pub mod area;
+pub mod baselines;
+pub mod calibrate;
+pub mod fom;
+
+use crate::cim::OpStats;
+use crate::config::Config;
+
+/// Energy of one core op, split by the Fig. 7 power-breakdown groups (fJ).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Bit-line array discharge + precharge restore + sign logic.
+    pub array_fj: f64,
+    /// DTC + SL drivers.
+    pub dtc_fj: f64,
+    /// Pulse-path configuration network.
+    pub path_fj: f64,
+    /// Sense amps + control logic.
+    pub sa_ctrl_fj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_fj(&self) -> f64 {
+        self.array_fj + self.dtc_fj + self.path_fj + self.sa_ctrl_fj
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.array_fj += o.array_fj;
+        self.dtc_fj += o.dtc_fj;
+        self.path_fj += o.path_fj;
+        self.sa_ctrl_fj += o.sa_ctrl_fj;
+    }
+
+    /// Fractions in Fig. 7 order (array, pulse path, dtc, sa+ctrl).
+    pub fn fractions(&self) -> [f64; 4] {
+        let t = self.total_fj();
+        if t == 0.0 {
+            return [0.0; 4];
+        }
+        [self.array_fj / t, self.path_fj / t, self.dtc_fj / t, self.sa_ctrl_fj / t]
+    }
+}
+
+/// Energy of one core operation from its activity counters.
+pub fn core_op_energy(cfg: &Config, s: &OpStats) -> EnergyBreakdown {
+    let e = &cfg.energy;
+    EnergyBreakdown {
+        array_fj: e.e_array_unit * (s.mac_discharge_u + s.adc_discharge_u) + e.e_array_fixed,
+        dtc_fj: e.e_dtc_pulse * s.dtc_pulses as f64 + e.e_dtc_tau * s.dtc_tau_sum,
+        path_fj: e.e_path_toggle * s.sl_toggles as f64,
+        sa_ctrl_fj: e.e_sa_cmp * s.sa_compares as f64
+            + e.e_ctrl_cycle * s.total_cycles as f64,
+    }
+}
+
+/// TOPS/W for `ops` operations consuming `energy_fj`.
+pub fn tops_per_watt(ops: f64, energy_fj: f64) -> f64 {
+    // ops / (E[J]) = ops/s per W; /1e12 → TOPS/W. E[J] = fJ·1e−15.
+    ops / (energy_fj * 1e-15) / 1e12
+}
+
+/// Energy efficiency of a workload characterized by a mean per-core-op
+/// breakdown: all `cores` fire per macro op, each op is `ops_per_op` OPs.
+pub fn efficiency_tops_w(cfg: &Config, mean_core_op: &EnergyBreakdown) -> f64 {
+    let ops = cfg.mac.ops_per_op() as f64;
+    let macro_fj = mean_core_op.total_fj() * cfg.mac.cores as f64;
+    tops_per_watt(ops, macro_fj)
+}
+
+/// Average power in µW at a given op issue rate (ops/s per core).
+pub fn power_uw(cfg: &Config, mean_core_op: &EnergyBreakdown, macro_ops_per_s: f64) -> f64 {
+    mean_core_op.total_fj() * cfg.mac.cores as f64 * 1e-15 * macro_ops_per_s * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn stats_like_dense() -> OpStats {
+        OpStats {
+            max_width_tau0: 60.0,
+            dtc_pulses: 180,
+            dtc_tau_sum: 3360.0,
+            sl_toggles: 360,
+            mac_discharge_u: 26880.0,
+            adc_discharge_u: 107100.0,
+            sa_compares: 144,
+            mac_cycles: 5,
+            total_cycles: 15,
+        }
+    }
+
+    #[test]
+    fn tops_per_watt_math() {
+        // 2048 ops at 21.42 pJ → 95.6 TOPS/W.
+        let t = tops_per_watt(2048.0, 21.42e3);
+        assert!((t - 95.6).abs() < 0.2, "{t}");
+    }
+
+    #[test]
+    fn breakdown_sums_and_fractions() {
+        let cfg = Config::default();
+        let b = core_op_energy(&cfg, &stats_like_dense());
+        assert!(b.total_fj() > 0.0);
+        let f = b.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Array should dominate per Fig. 7.
+        assert!(f[0] > 0.5, "array fraction {}", f[0]);
+    }
+
+    #[test]
+    fn energy_is_monotone_in_activity() {
+        let cfg = Config::default();
+        let dense = core_op_energy(&cfg, &stats_like_dense());
+        let mut sparse_stats = stats_like_dense();
+        sparse_stats.dtc_pulses = 18;
+        sparse_stats.dtc_tau_sum = 336.0;
+        sparse_stats.sl_toggles = 36;
+        sparse_stats.mac_discharge_u = 2688.0;
+        let sparse = core_op_energy(&cfg, &sparse_stats);
+        assert!(sparse.total_fj() < dense.total_fj());
+        // Sparse still pays the fixed readout cost.
+        assert!(sparse.array_fj > cfg.energy.e_array_fixed);
+    }
+}

@@ -1,0 +1,189 @@
+//! Ablations of the design choices the paper motivates (DESIGN.md §5):
+//! the shared MAC/ADC discharge mechanism, the two enhancement techniques
+//! in isolation, the accumulation-parallelism trade, and the source-node
+//! (vs gate) pulse injection.
+
+use crate::config::{Config, EnhanceConfig};
+use crate::harness::accuracy::sigma_error_pct;
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::table::{fmt_pct, fmt_sig, Table};
+
+/// Ablation A — break the MAC/ADC mechanism sharing: an ideal separate SAR
+/// whose gain is NOT common-mode with the MAC discharge. Modeled as a
+/// per-engine static gain error γ between the analog MAC scale and the ADC
+/// reference (the cell-embedded design cancels exactly this).
+pub fn separate_adc_sigma_pct(cfg: &Config, gain_sigma: f64, n: usize, seed: u64) -> f64 {
+    use crate::analysis::Stats;
+    use crate::cim::engine::mac_phase;
+    use crate::cim::noise::{Fabrication, NoiseDraw};
+    use crate::cim::weights::CoreWeights;
+    use crate::cim::golden;
+    let mut c = cfg.clone();
+    c.noise.enabled = true;
+    let mut rng = Xoshiro256::seeded(seed);
+    let fab = Fabrication::draw(&c.mac, &c.noise);
+    let w: Vec<Vec<i64>> = (0..c.mac.rows)
+        .map(|_| (0..c.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+        .collect();
+    let weights = CoreWeights::from_signed(&c.mac, &w).unwrap();
+    // Static per-engine gain error of the separate ADC reference ladder —
+    // the error the cell-embedded readout cancels by construction.
+    let gains: Vec<f64> = (0..c.mac.engines).map(|_| 1.0 + rng.normal(0.0, gain_sigma)).collect();
+    let mut stats = Stats::new();
+    let s = c.enhance.dtc_scale();
+    let lsb = c.mac.adc_lsb_units();
+    let half = c.mac.adc_codes() / 2;
+    for _ in 0..n {
+        let acts: Vec<i64> = (0..c.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+        // Same noisy analog MAC phase as the embedded design...
+        let draw = NoiseDraw::draw(&c.mac, &mut rng);
+        let phase = mac_phase(&c, 0, &weights, &acts, &fab, &draw);
+        let exact = golden::mac_exact(&weights, acts.as_slice());
+        for e in 0..c.mac.engines {
+            // ...but read out by a separate SAR with its own (mismatched)
+            // reference: code = ceil(v_diff·γ/lsb) − 1.
+            let v_diff = phase.rbl_drop[e] - phase.rblb_drop[e];
+            let code = ((v_diff * gains[e] / lsb).ceil() as i64 - 1).clamp(-half, half - 1);
+            let corr = if c.enhance.fold {
+                (c.enhance.fold_offset * weights.col_sum(e)) as f64
+            } else {
+                0.0
+            };
+            let recon = (code as f64 + 0.5) * lsb / s + corr;
+            stats.push(recon - exact[e] as f64);
+        }
+    }
+    100.0 * stats.std() / (c.mac.adc_fullscale_units() / s)
+}
+
+pub fn ablation_adc_sharing(cfg: &Config) -> Table {
+    // Evaluate in the enhanced mode, where the margin is tight enough for
+    // readout gain error to matter.
+    let mut cfg = cfg.clone();
+    cfg.enhance = EnhanceConfig::both();
+    let cfg = &cfg;
+    let mut t = Table::new(
+        "Ablation — cell-embedded (shared-mechanism) ADC vs separate SAR (fold+boost)",
+        &["readout", "gain mismatch", "sigma error (%FS)"],
+    );
+    let embedded = sigma_error_pct(cfg, 3000, 0xAB1);
+    t.row(&["cell-embedded (ours)".into(), "common-mode (cancels)".into(), fmt_pct(embedded / 100.0)]);
+    for g in [0.01, 0.02, 0.05] {
+        let s = separate_adc_sigma_pct(cfg, g, 3000, 0xAB2);
+        t.row(&["separate SAR".into(), fmt_pct(g), fmt_pct(s / 100.0)]);
+    }
+    t
+}
+
+/// Ablation B — enhancement factorization.
+pub fn ablation_enhancements(cfg: &Config) -> Table {
+    let mut t = Table::new(
+        "Ablation — enhancement factorization (9K-point sigma error)",
+        &["mode", "sigma error (%FS)"],
+    );
+    for enh in [
+        EnhanceConfig::default(),
+        EnhanceConfig::fold_only(),
+        EnhanceConfig::boost_only(),
+        EnhanceConfig::both(),
+    ] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        t.row(&[c.enhance.label().to_string(), fmt_pct(sigma_error_pct(&c, 3000, 0xAB3) / 100.0)]);
+    }
+    t
+}
+
+/// Ablation C — analog accumulation parallelism (the Fig. 1 x-axis): more
+/// rows per conversion amortize readout energy but erode signal margin.
+pub fn ablation_accumulation(cfg: &Config) -> Table {
+    let mut t = Table::new(
+        "Ablation — accumulations per A-to-D conversion",
+        &["rows", "sigma error (%FS)", "TOPS/W (dense)", "readout share"],
+    );
+    for rows in [16usize, 32, 64, 128] {
+        let mut c = cfg.clone();
+        c.mac.rows = rows;
+        c.enhance = EnhanceConfig::both();
+        let sigma = sigma_error_pct(&c, 2000, 0xAB4);
+        let e = crate::energy::calibrate::measured_efficiency(&c, 0.0, 150, 0xAB4);
+        let stats = crate::energy::calibrate::mean_stats(&c, 0.0, 150, 0xAB4);
+        let b = crate::energy::core_op_energy(&c, &stats);
+        let readout_share = (c.energy.e_array_fixed
+            + c.energy.e_sa_cmp * stats.sa_compares as f64)
+            / b.total_fj();
+        t.row(&[
+            rows.to_string(),
+            fmt_pct(sigma / 100.0),
+            fmt_sig(e, 4),
+            fmt_pct(readout_share),
+        ]);
+    }
+    t
+}
+
+/// Ablation D — gate-node pulse injection: the paper drives the source node
+/// of M0 because of its lower parasitic capacitance; gate injection is
+/// modeled as a 2× narrow-pulse penalty (slower slew on the larger cap).
+pub fn ablation_gate_input(cfg: &Config) -> Table {
+    let mut t = Table::new(
+        "Ablation — SL pulse injection node (paper: source node of M0)",
+        &["injection", "narrow-pulse penalty", "sigma error (%FS)"],
+    );
+    let src = sigma_error_pct(cfg, 3000, 0xAB5);
+    t.row(&["source (ours)".into(), "1.0x".into(), fmt_pct(src / 100.0)]);
+    let mut c = cfg.clone();
+    c.noise.sigma_t_small *= 2.0;
+    let gate = sigma_error_pct(&c, 3000, 0xAB5);
+    t.row(&["gate".into(), "2.0x".into(), fmt_pct(gate / 100.0)]);
+    t
+}
+
+pub fn run_all(cfg: &Config) -> Vec<Table> {
+    vec![
+        ablation_adc_sharing(cfg),
+        ablation_enhancements(cfg),
+        ablation_accumulation(cfg),
+        ablation_gate_input(cfg),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separate_sar_is_worse_at_high_accumulation() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        let embedded = sigma_error_pct(&cfg, 1500, 0xAB9);
+        let separate = separate_adc_sigma_pct(&cfg, 0.05, 1500, 0xAB9);
+        assert!(
+            separate > embedded,
+            "gain mismatch must hurt: embedded {embedded} vs separate {separate}"
+        );
+    }
+
+    #[test]
+    fn enhancements_factorize_monotonically() {
+        let cfg = Config::default();
+        let t = ablation_enhancements(&cfg);
+        assert_eq!(t.rows.len(), 4);
+        // baseline worst, fold+boost best.
+        let parse = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        let base = parse(&t.rows[0][1]);
+        let both = parse(&t.rows[3][1]);
+        assert!(both < base);
+    }
+
+    #[test]
+    fn accumulation_trade_off_direction() {
+        let cfg = Config::default();
+        let t = ablation_accumulation(&cfg);
+        let parse = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        // Readout share shrinks as rows grow (amortization).
+        let share16 = parse(&t.rows[0][3]);
+        let share128 = parse(&t.rows[3][3]);
+        assert!(share128 < share16, "{share128} vs {share16}");
+    }
+}

@@ -1,0 +1,608 @@
+//! Figure/table reproduction drivers (one per paper figure — DESIGN.md §5).
+//! Each returns [`Table`]s so the CLI, the benches and EXPERIMENTS.md share
+//! one rendering path.
+
+use crate::analysis::{Stats, Transfer};
+use crate::cim::adc::readout;
+use crate::cim::engine::{MacPhase, OpStats};
+use crate::cim::noise::{Fabrication, NoiseDraw};
+use crate::cim::{golden, timing, MacroSim};
+use crate::config::{Config, EnhanceConfig};
+use crate::energy::baselines::{cycles_for_full_precision, published, sar_readout_fj_per_mac};
+use crate::energy::calibrate::{mean_stats, measured_efficiency};
+use crate::energy::{area, core_op_energy, efficiency_tops_w, fom};
+use crate::harness::accuracy::{
+    sigma_error_pct, CONV_ACT_MEAN, CONV_ZERO_FRAC, N_TEST_POINTS,
+};
+use crate::util::rng::{Rng, Xoshiro256};
+use crate::util::table::{fmt_pct, fmt_sig, Table};
+
+/// Our design's measured operating envelope, reused by Figs 1 and 6.
+pub struct OurRow {
+    pub gops_kb_dense: f64,
+    pub gops_kb_sparse: f64,
+    pub tops_w_dense: f64,
+    pub tops_w_sparse: f64,
+    pub fom_4b: f64,
+    pub fom_8b: f64,
+}
+
+/// Measure our macro's Fig. 6 row from the simulator.
+pub fn measure_our_row(cfg: &Config) -> OurRow {
+    let dense_stats = mean_stats(cfg, 0.0, 300, 0xF16);
+    let small_act = {
+        // Small-magnitude workload (acts ≤ 3) — the fast/efficient end.
+        let mut c = cfg.clone();
+        c.mac.clock_mhz = cfg.mac.clock_mhz;
+        let mut sim_stats = OpStats::default();
+        let mut sim = MacroSim::new(c.clone());
+        let mut rng = Xoshiro256::seeded(0xF17);
+        let w: Vec<Vec<i64>> = (0..c.mac.rows)
+            .map(|_| (0..c.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect();
+        sim.load_core(0, &w).unwrap();
+        let mut cycles = 0u64;
+        let n = 200;
+        for _ in 0..n {
+            let acts: Vec<i64> = (0..c.mac.rows).map(|_| rng.next_range_i64(0, 3)).collect();
+            let r = sim.core_op(0, &acts, &mut rng).unwrap();
+            cycles += r.stats.total_cycles;
+            sim_stats.accumulate(&r.stats);
+        }
+        cycles as f64 / n as f64
+    };
+    let dense_cycles = dense_stats.total_cycles;
+    let gops_kb_dense = timing::gops_per_kb(cfg, dense_cycles);
+    let gops_kb_sparse = timing::gops_per_kb(cfg, small_act.round() as u64);
+    let tops_w_dense = measured_efficiency(cfg, 0.0, 300, 0xF18);
+    let tops_w_sparse = measured_efficiency(cfg, 0.9, 300, 0xF18);
+    let ratio = fom::out_ratio(cfg);
+    let fom_4b = fom::fom_avg(
+        cfg.mac.act_bits,
+        cfg.mac.weight_bits,
+        ratio,
+        (gops_kb_dense, gops_kb_sparse),
+        (tops_w_dense, tops_w_sparse),
+    );
+    // 8-b bit-serial: 4 passes → ¼ throughput at the same per-pass energy
+    // per op ⇒ ¼ efficiency when ops are counted at 8 b (Fig. 6 footnote).
+    let fom_8b = fom::fom_avg(
+        8,
+        8,
+        ratio,
+        (gops_kb_dense / 4.0, gops_kb_sparse / 4.0),
+        (tops_w_dense / 4.0, tops_w_sparse / 4.0),
+    );
+    OurRow { gops_kb_dense, gops_kb_sparse, tops_w_dense, tops_w_sparse, fom_4b, fom_8b }
+}
+
+/// Fig. 1 — parallelism / accuracy / energy-efficiency landscape + the
+/// SAR-vs-embedded readout energy comparison.
+pub fn fig1(cfg: &Config) -> Vec<Table> {
+    let our = measure_our_row(cfg);
+    let mut t = Table::new(
+        "Fig. 1 — CIM design landscape (4-b ResNet-20 mapping)",
+        &[
+            "design",
+            "analog acc/ADC",
+            "ACTxW per cycle",
+            "passes for 4bx4b",
+            "OUT-ratio",
+            "TOPS/W (avg)",
+            "readout fJ/MAC",
+        ],
+    );
+    for d in published() {
+        let readout_fj = sar_readout_fj_per_mac(d.adc_bits, d.acc_before_adc);
+        t.row(&[
+            d.name.to_string(),
+            d.acc_before_adc.to_string(),
+            format!("{}b x {}b", d.act_bits_per_cycle, d.w_bits_per_cycle),
+            cycles_for_full_precision(&d).to_string(),
+            fmt_sig(d.out_ratio, 3),
+            fmt_sig(0.5 * (d.tops_w.0 + d.tops_w.1), 4),
+            fmt_sig(readout_fj, 3),
+        ]);
+    }
+    // Our readout energy per MAC: the fixed array (readout ladder +
+    // precharge restore) + SA share of a dense core op over its 1024 MACs.
+    let dense = mean_stats(cfg, 0.0, 300, 0xF19);
+    let b = core_op_energy(cfg, &dense);
+    let macs = (cfg.mac.engines * cfg.mac.rows) as f64;
+    let our_readout = (cfg.energy.e_array_fixed
+        + cfg.energy.e_sa_cmp * dense.sa_compares as f64)
+        / macs;
+    let _ = b;
+    t.row(&[
+        "This design (measured)".into(),
+        cfg.mac.rows.to_string(),
+        format!("{}b x {}b", cfg.mac.act_bits, cfg.mac.weight_bits),
+        "1".into(),
+        fmt_sig(fom::out_ratio(cfg), 3),
+        fmt_sig(0.5 * (our.tops_w_dense + our.tops_w_sparse), 4),
+        fmt_sig(our_readout, 3),
+    ]);
+    vec![t]
+}
+
+/// Fig. 2 — signal-margin definition: step per unit and measured σ′ per
+/// enhancement mode.
+pub fn fig2(cfg: &Config) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 2 — signal margin SM = n*mu0 - 2*sigma' (units of u)",
+        &["mode", "step n*mu0 (u/unit)", "sigma' (u)", "SM margin (u/LSB)", "safe"],
+    );
+    for enh in [
+        EnhanceConfig::default(),
+        EnhanceConfig::fold_only(),
+        EnhanceConfig::boost_only(),
+        EnhanceConfig::both(),
+    ] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        // σ′ in u: σ% of FS → u.
+        let sigma_u =
+            sigma_error_pct(&c, 2_000, 0x516) / 100.0 * c.mac.adc_fullscale_units()
+                / c.enhance.dtc_scale()
+                * c.enhance.dtc_scale(); // voltage-referred
+        let step = c.mac.adc_lsb_units(); // one output LSB in u
+        let margin = step - 2.0 * sigma_u / (c.mac.adc_codes() as f64 / 2.0).sqrt();
+        let _ = margin;
+        let sm = crate::cim::SignalMargin { step_u: step, sigma_u: sigma_u / 8.0 };
+        t.row(&[
+            c.enhance.label().to_string(),
+            fmt_sig(crate::cim::step_per_unit_u(&c), 4),
+            fmt_sig(sigma_u, 4),
+            fmt_sig(sm.margin_u(), 4),
+            sm.is_safe().to_string(),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 3 — time-modulated MAC + binary-search readout: transfer samples
+/// and the cycle accounting of one op.
+pub fn fig3(cfg: &Config) -> Vec<Table> {
+    let mut ideal = cfg.clone();
+    ideal.noise.enabled = false;
+    let mut sim = MacroSim::new(ideal.clone());
+    // Weight pattern that reaches the full dynamic range: +7 / −7 halves.
+    let w: Vec<Vec<i64>> = (0..ideal.mac.rows)
+        .map(|r| vec![if r % 2 == 0 { 7 } else { -7 }; ideal.mac.engines])
+        .collect();
+    sim.load_core(0, &w).unwrap();
+    let mut t = Table::new(
+        "Fig. 3 — transfer samples (noise-free chip vs golden quantizer)",
+        &["target MAC (units)", "ideal code", "chip code", "reconstructed", "cycles"],
+    );
+    let mut rng = Xoshiro256::seeded(3);
+    for frac in [-0.95, -0.5, -0.1, -0.01, 0.0, 0.01, 0.1, 0.5, 0.95] {
+        let target = (frac * ideal.mac.mac_range() as f64) as i64;
+        // Achieve ~target with acts: positive rows get a, negative rows b.
+        let per_row = target as f64 / (ideal.mac.rows as f64 / 2.0) / 7.0;
+        let a = per_row.clamp(-15.0, 15.0);
+        let acts: Vec<i64> = (0..ideal.mac.rows)
+            .map(|r| {
+                if r % 2 == 0 {
+                    a.max(0.0).round() as i64
+                } else {
+                    (-a).max(0.0).round() as i64
+                }
+            })
+            .collect();
+        let exact = sim.golden(0, &acts).unwrap()[0];
+        let got = sim.core_op(0, &acts, &mut rng).unwrap();
+        let want = sim.ideal_codes(0, &acts).unwrap()[0];
+        t.row(&[
+            exact.to_string(),
+            want.to_string(),
+            got.codes[0].to_string(),
+            fmt_sig(got.values[0], 5),
+            got.stats.total_cycles.to_string(),
+        ]);
+    }
+    let mut t2 = Table::new(
+        "Fig. 3 — op cycle model",
+        &["workload", "MAC cycles", "readout", "precharge", "total", "GOPS/Kb @200MHz"],
+    );
+    for (name, maxw) in [("dense 4-b (act<=15)", 60.0), ("small acts (act<=3)", 12.0)] {
+        let mc = crate::cim::engine::mac_cycles(cfg, maxw);
+        let total = timing::op_cycles(cfg, mc);
+        t2.row(&[
+            name.to_string(),
+            mc.to_string(),
+            cfg.mac.adc_bits.to_string(),
+            "1".into(),
+            total.to_string(),
+            fmt_sig(timing::gops_per_kb(cfg, total), 4),
+        ]);
+    }
+    vec![t, t2]
+}
+
+/// Fig. 4 — the two signal-margin enhancement techniques.
+pub fn fig4(cfg: &Config) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 4a — MAC-folding: dynamic range & step",
+        &["quantity", "baseline", "fold", "ratio", "paper"],
+    );
+    let base_range = 2 * cfg.mac.mac_range();
+    let fold_range = 2 * cfg.mac.rows as i64 * 8 * cfg.mac.w_mag_max();
+    t.row(&[
+        "bit-line dynamic range (units)".into(),
+        base_range.to_string(),
+        fold_range.to_string(),
+        fmt_sig(base_range as f64 / fold_range as f64, 4),
+        "~2x".into(),
+    ]);
+    t.row(&[
+        "MAC step (u per unit)".into(),
+        "1.0".into(),
+        fmt_sig(cfg.enhance.fold_gain, 4),
+        fmt_sig(cfg.enhance.fold_gain, 4),
+        "1.87x".into(),
+    ]);
+
+    // Conv-layer accumulated noise, baseline vs fold, across activation
+    // concentration (the paper's single number 2.51–2.97x corresponds to
+    // one unpublished histogram; we report the sweep).
+    let mut t2 = Table::new(
+        "Fig. 4b — conv-layer accumulated noise error, baseline / fold",
+        &["act distribution (zeros, mean)", "baseline RMS (u)", "fold RMS (u)", "reduction", "paper"],
+    );
+    let mut c = cfg.clone();
+    for (p0, mean) in [(0.25, 3.5), (0.2, 4.5), (0.1, 6.0), (0.1, 9.0)] {
+        let measure = |cc: &Config| -> f64 {
+            // conv_layer_rms_error with the module-level distribution; here
+            // we inline a variant with explicit parameters.
+            let mut rng = Xoshiro256::seeded(0xF14);
+            let mut sim = MacroSim::new(cc.clone());
+            let w: Vec<Vec<i64>> = (0..cc.mac.rows)
+                .map(|_| (0..cc.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+                .collect();
+            sim.load_core(0, &w).unwrap();
+            let mut stats = Stats::new();
+            for _ in 0..10 {
+                for _ in 0..64 {
+                    let acts: Vec<i64> = (0..cc.mac.rows)
+                        .map(|_| {
+                            if rng.next_bool(p0) {
+                                0
+                            } else {
+                                let v = (-mean * (1.0 - rng.next_f64()).ln()).round() as i64;
+                                v.clamp(1, cc.mac.act_max())
+                            }
+                        })
+                        .collect();
+                    let exact = sim.golden(0, &acts).unwrap();
+                    let got = sim.core_op(0, &acts, &mut rng).unwrap();
+                    for e in 0..cc.mac.engines {
+                        stats.push(got.values[e] - exact[e] as f64);
+                    }
+                }
+            }
+            stats.rms()
+        };
+        c.enhance = EnhanceConfig::default();
+        let b = measure(&c);
+        c.enhance = EnhanceConfig::fold_only();
+        let f = measure(&c);
+        t2.row(&[
+            format!("({p0}, {mean})"),
+            fmt_sig(b, 4),
+            fmt_sig(f, 4),
+            format!("{:.2}x", b / f),
+            "2.51-2.97x".into(),
+        ]);
+    }
+
+    // Boosted-clipping: headroom utilization and clip rate.
+    let mut t3 = Table::new(
+        "Fig. 4c — boosted-clipping: headroom utilization & clipping",
+        &["mode", "sigma(MAC)/half-range", "clip rate (random)", "clip rate (conv-like)"],
+    );
+    for enh in [EnhanceConfig::fold_only(), EnhanceConfig::both()] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        let mut rng = Xoshiro256::seeded(0xF15);
+        let mut sim = MacroSim::new(c.clone());
+        let w: Vec<Vec<i64>> = (0..c.mac.rows)
+            .map(|_| (0..c.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect();
+        sim.load_core(0, &w).unwrap();
+        let mut mac_stats = Stats::new();
+        let mut clip_rand = 0usize;
+        let mut clip_conv = 0usize;
+        let n = 1000;
+        for i in 0..n {
+            let acts: Vec<i64> = (0..c.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+            let wref = sim.core_weights(0).unwrap();
+            for &d in golden::mac_folded(&c, wref, &acts).iter() {
+                mac_stats.push(d as f64);
+                if golden::clips(&c, d) {
+                    clip_rand += 1;
+                }
+            }
+            let conv_acts: Vec<i64> = (0..c.mac.rows)
+                .map(|_| {
+                    if rng.next_bool(CONV_ZERO_FRAC) {
+                        0
+                    } else {
+                        ((-CONV_ACT_MEAN * (1.0 - rng.next_f64()).ln()).round() as i64)
+                            .clamp(1, 15)
+                    }
+                })
+                .collect();
+            for &d in golden::mac_folded(&c, wref, &conv_acts).iter() {
+                if golden::clips(&c, d) {
+                    clip_conv += 1;
+                }
+            }
+            let _ = i;
+        }
+        let half_range = c.mac.adc_codes() as f64 / 2.0 * c.mac.adc_lsb_units()
+            / c.enhance.dtc_scale();
+        t3.row(&[
+            c.enhance.label().to_string(),
+            fmt_sig(mac_stats.std() / half_range, 3),
+            fmt_pct(clip_rand as f64 / (n * c.mac.engines) as f64 / 100.0 * 100.0),
+            fmt_pct(clip_conv as f64 / (n * c.mac.engines) as f64 / 100.0 * 100.0),
+        ]);
+    }
+    vec![t, t2, t3]
+}
+
+/// Static ADC linearity of one engine: sweep the differential voltage with
+/// dynamic noise off (fabrication mismatch on) and extract DNL/INL.
+pub fn measure_linearity(cfg: &Config, engine: usize) -> crate::analysis::Linearity {
+    let fab = Fabrication::draw(&cfg.mac, &cfg.noise);
+    let draw = NoiseDraw::zeros(&cfg.mac);
+    let mut static_cfg = cfg.clone();
+    static_cfg.noise.sigma_sa_cmp = 0.0;
+    static_cfg.noise.sigma_step_rel = 0.0;
+    let vpp = cfg.mac.vpp_units();
+    let lsb = cfg.mac.adc_lsb_units();
+    let mut inputs = Vec::new();
+    let mut codes = Vec::new();
+    let n_eng = cfg.mac.engines;
+    let mut v = -vpp;
+    while v <= vpp {
+        let mut rbl = vec![0.0; n_eng];
+        let mut rblb = vec![0.0; n_eng];
+        if v >= 0.0 {
+            rbl[engine] = v;
+        } else {
+            rblb[engine] = -v;
+        }
+        let phase = MacPhase { rbl_drop: rbl, rblb_drop: rblb, stats: OpStats::default() };
+        let r = readout(&static_cfg, 0, &phase, &fab, &draw);
+        inputs.push(v);
+        codes.push(r.codes[engine]);
+        v += lsb / 8.0;
+    }
+    Transfer { inputs, codes }.transitions().linearity(lsb)
+}
+
+/// Fig. 5 — measured accuracy (9K points), DNL/INL, and the sparsity sweep.
+pub fn fig5(cfg: &Config, quick: bool) -> Vec<Table> {
+    let n = if quick { 1_500 } else { N_TEST_POINTS };
+    let mut t = Table::new(
+        "Fig. 5a — 1-sigma readout error, 9K random points",
+        &["mode", "sigma error (%FS)", "paper"],
+    );
+    for (enh, paper) in [
+        (EnhanceConfig::default(), "1.30%"),
+        (EnhanceConfig::fold_only(), "-"),
+        (EnhanceConfig::boost_only(), "-"),
+        (EnhanceConfig::both(), "0.64%"),
+    ] {
+        let mut c = cfg.clone();
+        c.enhance = enh;
+        t.row(&[
+            c.enhance.label().to_string(),
+            fmt_pct(sigma_error_pct(&c, n, 0xF1C5) / 100.0),
+            paper.to_string(),
+        ]);
+    }
+
+    let mut t2 = Table::new(
+        "Fig. 5b — static linearity (cell-embedded ADC, engine 0)",
+        &["metric", "measured", "paper"],
+    );
+    let lin = measure_linearity(cfg, 0);
+    t2.row(&["max |DNL| (LSB)".into(), fmt_sig(lin.dnl_max_abs, 3), "<1 LSB".into()]);
+    t2.row(&["max |INL| (LSB)".into(), fmt_sig(lin.inl_max_abs, 3), "~1 LSB".into()]);
+    t2.row(&["codes covered".into(), format!("{}", lin.dnl.len() + 1), "512".into()]);
+
+    let mut t3 = Table::new(
+        "Fig. 5c — performance vs input sparsity",
+        &["sparsity", "TOPS/W", "GOPS/Kb", "paper TOPS/W"],
+    );
+    for s in [0.0, 0.25, 0.5, 0.75, 0.9] {
+        let e = measured_efficiency(cfg, s, if quick { 100 } else { 300 }, 0xF1C6);
+        let stats = mean_stats(cfg, s, if quick { 100 } else { 300 }, 0xF1C6);
+        let paper = if s == 0.0 {
+            "95.6"
+        } else if s == 0.9 {
+            "137.5"
+        } else {
+            "-"
+        };
+        t3.row(&[
+            format!("{:.0}%", s * 100.0),
+            fmt_sig(e, 4),
+            fmt_sig(timing::gops_per_kb(cfg, stats.total_cycles), 4),
+            paper.to_string(),
+        ]);
+    }
+    vec![t, t2, t3]
+}
+
+/// Fig. 6 — comparison with the state of the art.
+pub fn fig6(cfg: &Config) -> Vec<Table> {
+    let our = measure_our_row(cfg);
+    let mut t = Table::new(
+        "Fig. 6 — comparison with state-of-the-art CIM macros",
+        &[
+            "design",
+            "tech (nm)",
+            "CIM (Kb)",
+            "ACT:W",
+            "GOPS/Kb",
+            "TOPS/W",
+            "TOPS/W/mm2",
+            "4b FoM",
+            "8b FoM",
+        ],
+    );
+    let fmt_range_opt = |r: Option<(f64, f64)>| match r {
+        Some((a, b)) if a == b => fmt_sig(a, 4),
+        Some((a, b)) => format!("{}-{}", fmt_sig(a, 3), fmt_sig(b, 4)),
+        None => "-".into(),
+    };
+    for d in published() {
+        t.row(&[
+            d.name.to_string(),
+            d.tech_nm.to_string(),
+            d.memory_kb.to_string(),
+            format!("{}:{}", d.act_bits, d.w_bits),
+            fmt_range_opt(d.gops_per_kb),
+            fmt_range_opt(Some(d.tops_w)),
+            fmt_range_opt(d.area_eff),
+            d.fom_4b.map(|f| fmt_sig(f, 3)).unwrap_or("-".into()),
+            d.fom_8b.map(|f| fmt_sig(f, 3)).unwrap_or("-".into()),
+        ]);
+    }
+    t.row(&[
+        "This design (measured)".into(),
+        "40".into(),
+        format!("{:.0}", cfg.mac.macro_kb()),
+        format!("{}:{}", cfg.mac.act_bits, cfg.mac.weight_bits),
+        format!("{}-{}", fmt_sig(our.gops_kb_dense, 3), fmt_sig(our.gops_kb_sparse, 3)),
+        format!("{}-{}", fmt_sig(our.tops_w_dense, 3), fmt_sig(our.tops_w_sparse, 4)),
+        format!(
+            "{}-{}",
+            fmt_sig(area::area_efficiency(cfg, our.tops_w_dense), 3),
+            fmt_sig(area::area_efficiency(cfg, our.tops_w_sparse), 4)
+        ),
+        fmt_sig(our.fom_4b, 3),
+        fmt_sig(our.fom_8b, 3),
+    ]);
+    t.row(&[
+        "This design (paper)".into(),
+        "40".into(),
+        "16".into(),
+        "4:4".into(),
+        "6.82-8.53".into(),
+        "95.6-137.5".into(),
+        "790-1136".into(),
+        "10.4".into(),
+        "2.61".into(),
+    ]);
+    vec![t]
+}
+
+/// Fig. 7 — power & area breakdowns and the chip summary.
+pub fn fig7(cfg: &Config) -> Vec<Table> {
+    let dense = mean_stats(cfg, 0.0, 300, 0xF20);
+    let b = core_op_energy(cfg, &dense);
+    let f = b.fractions();
+    let mut t = Table::new(
+        "Fig. 7a — power breakdown (dense workload)",
+        &["component", "measured", "paper"],
+    );
+    for (name, got, paper) in [
+        ("Array + sign logic", f[0], 0.6475),
+        ("Pulse path", f[1], 0.1793),
+        ("DTC + driver", f[2], 0.1419),
+        ("SA + control logic", f[3], 0.0313),
+    ] {
+        t.row(&[name.to_string(), fmt_pct(got), fmt_pct(paper)]);
+    }
+    let mut t2 = Table::new("Fig. 7b — area breakdown", &["component", "mm2", "fraction"]);
+    for (name, a) in area::PAPER_AREA_BREAKDOWN.absolute(cfg.energy.area_mm2) {
+        t2.row(&[name.to_string(), fmt_sig(a, 3), fmt_pct(a / cfg.energy.area_mm2)]);
+    }
+    let mut t3 = Table::new("Fig. 7c — chip summary", &["quantity", "value"]);
+    t3.row(&["technology".into(), "TSMC 40 nm (modeled)".into()]);
+    t3.row(&["capacity".into(), format!("{:.0} Kb", cfg.mac.macro_kb())]);
+    t3.row(&["cores x engines x rows".into(),
+        format!("{} x {} x {}", cfg.mac.cores, cfg.mac.engines, cfg.mac.rows)]);
+    t3.row(&["clock".into(), format!("100-{:.0} MHz", cfg.mac.clock_mhz)]);
+    t3.row(&["area".into(), format!("{} mm2", cfg.energy.area_mm2)]);
+    t3.row(&[
+        "energy efficiency".into(),
+        format!("{} TOPS/W (dense-sparse)", {
+            let d = efficiency_tops_w(cfg, &b);
+            let s = measured_efficiency(cfg, 0.9, 300, 0xF20);
+            format!("{}-{}", fmt_sig(d, 3), fmt_sig(s, 4))
+        }),
+    ]);
+    vec![t, t2, t3]
+}
+
+/// Run one figure by id (1–7), or all with id 0.
+pub fn run_figure(cfg: &Config, id: usize, quick: bool) -> Vec<Table> {
+    match id {
+        1 => fig1(cfg),
+        2 => fig2(cfg),
+        3 => fig3(cfg),
+        4 => fig4(cfg),
+        5 => fig5(cfg, quick),
+        6 => fig6(cfg),
+        7 => fig7(cfg),
+        0 => (1..=7).flat_map(|i| run_figure(cfg, i, quick)).collect(),
+        _ => panic!("figure id must be 0..=7"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn our_row_matches_paper_envelope() {
+        let cfg = Config::default();
+        let our = measure_our_row(&cfg);
+        assert!((our.gops_kb_dense - 6.82).abs() < 0.15, "{}", our.gops_kb_dense);
+        assert!((our.gops_kb_sparse - 8.53).abs() < 0.25, "{}", our.gops_kb_sparse);
+        assert!((our.tops_w_dense - 95.6).abs() < 2.0, "{}", our.tops_w_dense);
+        assert!((our.tops_w_sparse - 137.5).abs() < 3.0, "{}", our.tops_w_sparse);
+        // FoM: paper reports 10.4 / 2.61; our measured values land in the
+        // same region (the gap is the OUT-ratio convention, EXPERIMENTS.md).
+        assert!(our.fom_4b > 8.0 && our.fom_4b < 12.0, "{}", our.fom_4b);
+        assert!(our.fom_8b > 2.0 && our.fom_8b < 3.0, "{}", our.fom_8b);
+    }
+
+    #[test]
+    fn linearity_is_sub_lsb() {
+        let cfg = Config::default();
+        let lin = measure_linearity(&cfg, 0);
+        assert!(lin.dnl.len() > 400, "covered {} codes", lin.dnl.len());
+        assert!(lin.dnl_max_abs < 1.0, "DNL {}", lin.dnl_max_abs);
+        assert!(lin.inl_max_abs < 2.0, "INL {}", lin.inl_max_abs);
+        // Mismatch must produce SOME nonlinearity.
+        assert!(lin.dnl_max_abs > 0.001);
+    }
+
+    #[test]
+    fn figures_all_render() {
+        let cfg = Config::default();
+        for t in run_figure(&cfg, 3, true) {
+            assert!(!t.to_markdown().is_empty());
+        }
+        for t in fig7(&cfg) {
+            assert!(!t.rows.is_empty());
+        }
+    }
+
+    #[test]
+    fn fig7_power_split_tracks_paper() {
+        let cfg = Config::default();
+        let dense = mean_stats(&cfg, 0.0, 200, 1);
+        let f = core_op_energy(&cfg, &dense).fractions();
+        for (got, want) in f.iter().zip([0.6475, 0.1793, 0.1419, 0.0313]) {
+            assert!((got - want).abs() < 0.02, "{got} vs {want}");
+        }
+    }
+}

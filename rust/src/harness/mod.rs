@@ -1,0 +1,7 @@
+//! Experiment harness: one driver per paper figure plus the ablations
+//! (DESIGN.md §5). Tables render through `util::table` so the CLI, the
+//! benches and EXPERIMENTS.md share one path.
+
+pub mod ablation;
+pub mod accuracy;
+pub mod figs;

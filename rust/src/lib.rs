@@ -1,0 +1,26 @@
+//! `cimsim` — a production-quality behavioral reproduction of
+//! *"A 137.5 TOPS/W SRAM Compute-in-Memory Macro with 9-b Memory
+//! Cell-Embedded ADCs and Signal Margin Enhancement Techniques for AI Edge
+//! Applications"* (Wang et al., 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: macro behavioral model, NN mapping,
+//!   edge-inference serving, energy/area accounting, experiment harness.
+//! * **L2/L1 (python, build-time only)** — JAX model + Pallas kernel,
+//!   AOT-lowered to HLO text and executed here through the `xla` crate
+//!   (PJRT CPU) by `runtime`.
+
+pub mod analysis;
+pub mod bench;
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod harness;
+pub mod mapping;
+pub mod nn;
+pub mod runtime;
+pub mod util;
+
+/// Crate version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

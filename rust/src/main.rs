@@ -1,0 +1,229 @@
+//! `cimsim` CLI — leader entrypoint of the L3 coordinator.
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::{serve, Client, MlpDeployment, ServeConfig};
+use cimsim::harness::{ablation, accuracy, figs};
+use cimsim::mapping::NativeBackend;
+use cimsim::nn::dataset::BlobDataset;
+use cimsim::nn::mlp::{train, Mlp};
+use cimsim::util::cli::{Args, Cli, CliError, CmdSpec, OptSpec};
+use std::path::Path;
+
+fn spec() -> Cli {
+    let common = |mut opts: Vec<OptSpec>| -> Vec<OptSpec> {
+        opts.push(OptSpec { name: "config", value_name: Some("FILE"), default: None, help: "TOML config file" });
+        opts.push(OptSpec { name: "fold", value_name: None, default: None, help: "enable MAC-folding" });
+        opts.push(OptSpec { name: "boost", value_name: None, default: None, help: "enable boosted-clipping" });
+        opts.push(OptSpec { name: "enhanced", value_name: None, default: None, help: "enable both enhancements" });
+        opts.push(OptSpec { name: "seed", value_name: Some("N"), default: Some("42"), help: "simulation seed" });
+        opts.push(OptSpec { name: "out", value_name: Some("DIR"), default: Some("out"), help: "output directory for tables" });
+        opts
+    };
+    Cli {
+        program: "cimsim",
+        about: "16Kb SRAM CIM macro simulator (Wang et al. 2023 reproduction)",
+        commands: vec![
+            CmdSpec { name: "info", about: "print macro geometry + operating point", opts: common(vec![]), positional: None },
+            CmdSpec {
+                name: "fig",
+                about: "reproduce a paper figure (tables to stdout + out/)",
+                opts: common(vec![
+                    OptSpec { name: "id", value_name: Some("0-7"), default: Some("0"), help: "figure id (0 = all)" },
+                    OptSpec { name: "quick", value_name: None, default: None, help: "reduced sample counts" },
+                ]),
+                positional: None,
+            },
+            CmdSpec { name: "ablation", about: "run the design-choice ablations", opts: common(vec![]), positional: None },
+            CmdSpec {
+                name: "calibrate",
+                about: "re-derive the noise + energy calibration constants",
+                opts: common(vec![OptSpec { name: "points", value_name: Some("N"), default: Some("3000"), help: "points per measurement" }]),
+                positional: None,
+            },
+            CmdSpec {
+                name: "sigma",
+                about: "9K-point 1-sigma error measurement (Fig. 5a)",
+                opts: common(vec![OptSpec { name: "points", value_name: Some("N"), default: Some("9000"), help: "test points" }]),
+                positional: None,
+            },
+            CmdSpec {
+                name: "serve",
+                about: "serve a trained+quantized MLP over TCP on the simulated macro",
+                opts: common(vec![
+                    OptSpec { name: "requests", value_name: Some("N"), default: Some("256"), help: "demo client requests" },
+                    OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "max dynamic batch" },
+                ]),
+                positional: None,
+            },
+            CmdSpec { name: "selftest", about: "quick end-to-end smoke test", opts: common(vec![]), positional: None },
+        ],
+    }
+}
+
+fn build_config(args: &Args) -> Result<Config, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_toml_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    if args.flag("enhanced") {
+        cfg.enhance = EnhanceConfig::both();
+    }
+    if args.flag("fold") {
+        cfg.enhance.fold = true;
+    }
+    if args.flag("boost") {
+        cfg.enhance.boost = true;
+    }
+    cfg.sim.seed = args.get_u64("seed")?;
+    cfg.sim.out_dir = args.get_string("out");
+    Ok(cfg)
+}
+
+fn emit_tables(cfg: &Config, slug: &str, tables: &[cimsim::util::table::Table]) {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.to_markdown());
+        let _ = t.write_to(Path::new(&cfg.sim.out_dir), &format!("{slug}_{i}"));
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = spec();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested(text)) => {
+            println!("{text}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = build_config(args)?;
+    match args.cmd.as_str() {
+        "info" => {
+            println!("cimsim v{} — {} mode", cimsim::VERSION, cfg.enhance.label());
+            println!(
+                "macro: {} cores x {} engines x {} rows = {:.0} Kb, {}b:{}b, {}-b readout",
+                cfg.mac.cores, cfg.mac.engines, cfg.mac.rows, cfg.mac.macro_kb(),
+                cfg.mac.act_bits, cfg.mac.weight_bits, cfg.mac.adc_bits
+            );
+            println!(
+                "clock {:.0} MHz, area {} mm2, {} MACs ({} OPS) per macro op",
+                cfg.mac.clock_mhz, cfg.energy.area_mm2,
+                cfg.mac.macs_per_op(), cfg.mac.ops_per_op()
+            );
+            let our = figs::measure_our_row(&cfg);
+            println!(
+                "measured: {:.2}-{:.2} GOPS/Kb, {:.1}-{:.1} TOPS/W, 4b FoM {:.1}, 8b FoM {:.2}",
+                our.gops_kb_dense, our.gops_kb_sparse,
+                our.tops_w_dense, our.tops_w_sparse, our.fom_4b, our.fom_8b
+            );
+        }
+        "fig" => {
+            let id = args.get_usize("id")?;
+            let tables = figs::run_figure(&cfg, id, args.flag("quick"));
+            emit_tables(&cfg, &format!("fig{id}"), &tables);
+        }
+        "ablation" => {
+            let tables = ablation::run_all(&cfg);
+            emit_tables(&cfg, "ablation", &tables);
+        }
+        "calibrate" => {
+            let n = args.get_usize("points")?;
+            println!("solving energy constants against the Fig. 5/6 anchors...");
+            let e = cimsim::energy::calibrate::solve(&cfg)?;
+            println!("{e:#?}");
+            println!("solving noise constants against 1.30% / 0.64% ...");
+            let nz = accuracy::calibrate_noise(&cfg, n).map_err(std::io::Error::other)?;
+            println!(
+                "sigma_t_small = {:.4}\nsigma_t_floor = {:.4}",
+                nz.sigma_t_small, nz.sigma_t_floor
+            );
+        }
+        "sigma" => {
+            let n = args.get_usize("points")?;
+            for enh in [EnhanceConfig::default(), EnhanceConfig::both()] {
+                let mut c = cfg.clone();
+                c.enhance = enh;
+                println!(
+                    "{:<11} {:.4}% (paper: {})",
+                    c.enhance.label(),
+                    accuracy::sigma_error_pct(&c, n, 0xF1C5),
+                    if c.enhance.fold { "0.64%" } else { "1.30%" }
+                );
+            }
+        }
+        "serve" => {
+            let mut c = cfg.clone();
+            c.enhance = EnhanceConfig::both();
+            println!("training the edge MLP (144-32-10) on the blob dataset...");
+            let mut d = BlobDataset::new(12, 0.05, c.sim.seed);
+            let data: Vec<(Vec<f32>, usize)> =
+                d.batch(300).into_iter().map(|s| (s.image.data, s.label)).collect();
+            let mut mlp = Mlp::new(&[144, 32, 10], c.sim.seed ^ 1);
+            let acc = train(&mut mlp, &data, 8, 0.05, c.sim.seed ^ 2);
+            println!("float train accuracy: {:.1}%", acc * 100.0);
+            let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
+            let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+            let backend = Box::new(NativeBackend::new(c.clone()));
+            let max_batch = args.get_usize("batch")?;
+            let handle = serve(dep, backend, ServeConfig { max_batch, ..Default::default() })?;
+            println!("serving on {}", handle.addr);
+            let n_req = args.get_usize("requests")?;
+            let addr = handle.addr;
+            let mut clients: Vec<std::thread::JoinHandle<usize>> = Vec::new();
+            for _ in 0..4usize {
+                let reqs: Vec<(Vec<f32>, usize)> = d
+                    .batch(n_req / 4)
+                    .into_iter()
+                    .map(|s| (s.image.data, s.label))
+                    .collect();
+                clients.push(std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let mut correct = 0;
+                    for (x, y) in &reqs {
+                        let l = c.infer(x).expect("infer");
+                        if cimsim::coordinator::deployment::argmax(&l) == *y {
+                            correct += 1;
+                        }
+                    }
+                    correct
+                }));
+            }
+            let correct: usize = clients.into_iter().map(|j| j.join().unwrap()).sum();
+            let m = handle.shutdown();
+            println!(
+                "CIM accuracy under serving: {:.1}% over {} requests",
+                100.0 * correct as f64 / n_req as f64,
+                n_req
+            );
+            println!("{}", m.report(c.mac.clock_mhz * 1e6).render());
+        }
+        "selftest" => {
+            let mut c = cfg.clone();
+            c.noise.enabled = false;
+            let mut sim = cimsim::cim::MacroSim::new(c.clone());
+            let w: Vec<Vec<i64>> = (0..c.mac.rows)
+                .map(|r| (0..c.mac.engines).map(|e| ((r + e) % 15) as i64 - 7).collect())
+                .collect();
+            sim.load_core(0, &w)?;
+            let acts: Vec<i64> = (0..c.mac.rows).map(|r| (r % 16) as i64).collect();
+            let mut rng = cimsim::util::rng::Xoshiro256::seeded(1);
+            let got = sim.core_op(0, &acts, &mut rng)?;
+            let want = sim.ideal_codes(0, &acts)?;
+            assert_eq!(got.codes, want, "noise-free chip must match golden");
+            println!("selftest OK: codes {:?}", &got.codes[..4]);
+        }
+        other => unreachable!("unknown command {other}"),
+    }
+    Ok(())
+}

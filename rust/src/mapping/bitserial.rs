@@ -1,0 +1,196 @@
+//! 8-b precision extension ("extendable precision" in Fig. 6): activations
+//! split into two radix-16 nibbles, weights into two radix-8 signed digits;
+//! four 4-b macro passes are combined by digital shift-add. This feeds the
+//! Fig. 6 8-b FoM row.
+//!
+//! Weight digits d1, d0 ∈ [−7, 7] represent w = 8·d1 + d0, covering ±63
+//! (an effective 7-b signed weight — the macro's sign-magnitude array
+//! cannot hold ±127 in two 4-b passes; documented in DESIGN.md §8).
+
+use crate::mapping::executor::CimLinear;
+use crate::mapping::{CimBackend, MapError};
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+
+/// Signed radix-8 digit decomposition: w = 8·hi + lo, hi/lo ∈ [−7, 7].
+pub fn weight_digits(w: i64) -> (i64, i64) {
+    assert!((-63..=63).contains(&w), "8b-extension weight {w} out of ±63");
+    let mut hi = (w as f64 / 8.0).round() as i64;
+    hi = hi.clamp(-7, 7);
+    let mut lo = w - 8 * hi;
+    if lo > 7 {
+        hi += 1;
+        lo = w - 8 * hi;
+    } else if lo < -7 {
+        hi -= 1;
+        lo = w - 8 * hi;
+    }
+    debug_assert!((-7..=7).contains(&hi) && (-7..=7).contains(&lo), "w={w} hi={hi} lo={lo}");
+    (hi, lo)
+}
+
+/// Unsigned radix-16 nibble decomposition: a = 16·hi + lo, hi/lo ∈ [0, 15].
+pub fn act_nibbles(a: i64) -> (i64, i64) {
+    assert!((0..=255).contains(&a), "8b activation {a} out of range");
+    (a >> 4, a & 0xF)
+}
+
+/// An 8-b K×N layer lowered to four 4-b CIM passes.
+pub struct BitSerialLinear {
+    pub k: usize,
+    pub n: usize,
+    pub w_params: QuantParams, // 8-b weights (±63 effective)
+    pub a_params: QuantParams, // 8-b activations (0..255)
+    pub bias: Vec<f32>,
+    /// Four sub-layers: (act-nibble, weight-digit) ∈ {hi,lo}².
+    pass_hi_w: CimLinear,
+    pass_lo_w: CimLinear,
+}
+
+impl BitSerialLinear {
+    pub fn new(
+        w_cols: &Tensor,
+        bias: Vec<f32>,
+        act_cal_max: f32,
+        cfg: &crate::config::Config,
+    ) -> Self {
+        assert_eq!(w_cols.rank(), 2);
+        let (k, n) = (w_cols.shape[0], w_cols.shape[1]);
+        // 8-b params: weights ±63 (radix-8 digit pair), acts 0..255.
+        let w_params = QuantParams { scale: w_cols.max_abs().max(1e-30) / 63.0, q_min: -63, q_max: 63 };
+        let a_params = QuantParams { scale: act_cal_max.max(1e-30) / 255.0, q_min: 0, q_max: 255 };
+
+        // Build the two weight-digit planes as float tensors whose 4-b
+        // quantization is exact (scale 1, values already in ±7).
+        let mut hi = Tensor::zeros(&[k, n]);
+        let mut lo = Tensor::zeros(&[k, n]);
+        for kk in 0..k {
+            for nn in 0..n {
+                let wq = w_params.quantize(w_cols.at2(kk, nn));
+                let (h, l) = weight_digits(wq);
+                *hi.at2_mut(kk, nn) = h as f32;
+                *lo.at2_mut(kk, nn) = l as f32;
+            }
+        }
+        // Digit planes hold exact integers in ±7: quantize with scale
+        // exactly 1 so the passes are lossless.
+        let unit_w = QuantParams { scale: 1.0, q_min: -7, q_max: 7 };
+        let unit_a = QuantParams { scale: 1.0, q_min: 0, q_max: 15 };
+        let pass_hi_w = CimLinear::with_params(&hi, vec![0.0; n], unit_w, unit_a, cfg);
+        let pass_lo_w = CimLinear::with_params(&lo, vec![0.0; n], unit_w, unit_a, cfg);
+        Self { k, n, w_params, a_params, bias, pass_hi_w, pass_lo_w }
+    }
+
+    /// Core ops per activation vector (4 passes worth).
+    pub fn ops_per_vector(&self) -> usize {
+        2 * (self.pass_hi_w.ops_per_vector() + self.pass_lo_w.ops_per_vector())
+    }
+
+    /// Run a batch of float vectors through the 4-pass pipeline.
+    pub fn run_batch(
+        &self,
+        backend: &mut dyn CimBackend,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>, MapError> {
+        let b = xs.len();
+        // Quantize to 8-b, split nibbles.
+        let mut a_hi = vec![vec![0i64; self.k]; b];
+        let mut a_lo = vec![vec![0i64; self.k]; b];
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.k);
+            for (j, &v) in x.iter().enumerate() {
+                let q = self.a_params.quantize(v);
+                let (h, l) = act_nibbles(q);
+                a_hi[i][j] = h;
+                a_lo[i][j] = l;
+            }
+        }
+        // Four passes with shift weights 16·8, 16·1, 1·8, 1·1. The sub-layer
+        // dequantization scales are (a_sub · w_sub) = 1·1 when the digit
+        // planes quantize with scale 1; recover raw integer sums by dividing
+        // the sub-scales back out.
+        let runs = [
+            (&a_hi, &self.pass_hi_w, 128.0f32),
+            (&a_hi, &self.pass_lo_w, 16.0),
+            (&a_lo, &self.pass_hi_w, 8.0),
+            (&a_lo, &self.pass_lo_w, 1.0),
+        ];
+        let mut acc = vec![vec![0f32; self.n]; b];
+        for (acts, layer, shift) in runs {
+            let sub_scale = layer.a_params.scale * layer.w_params.scale;
+            let y = layer.run_batch_q(backend, acts)?;
+            for (bi, row) in y.iter().enumerate() {
+                for (ni, &v) in row.iter().enumerate() {
+                    acc[bi][ni] += v / sub_scale * shift;
+                }
+            }
+        }
+        // Dequantize to real units and add bias.
+        let deq = self.a_params.scale * self.w_params.scale;
+        for row in acc.iter_mut() {
+            for (o, bia) in row.iter_mut().zip(&self.bias) {
+                *o = *o * deq + bia;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::mapping::DigitalBackend;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    #[test]
+    fn digit_decomposition_roundtrips() {
+        for w in -63..=63 {
+            let (h, l) = weight_digits(w);
+            assert_eq!(8 * h + l, w, "w={w}");
+            assert!((-7..=7).contains(&h) && (-7..=7).contains(&l));
+        }
+        for a in 0..=255 {
+            let (h, l) = act_nibbles(a);
+            assert_eq!(16 * h + l, a);
+            assert!((0..=15).contains(&h) && (0..=15).contains(&l));
+        }
+    }
+
+    #[test]
+    fn bitserial_digital_equals_exact_8b_product() {
+        let cfg = Config::default();
+        let (k, n) = (100, 10);
+        let mut rng = Xoshiro256::seeded(77);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        let bias: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let layer = BitSerialLinear::new(&w, bias.clone(), 1.0, &cfg);
+        let xs: Vec<Vec<f32>> = (0..2).map(|_| (0..k).map(|_| rng.next_f32()).collect()).collect();
+        let mut be = DigitalBackend::new(cfg.clone());
+        let got = layer.run_batch(&mut be, &xs).unwrap();
+        for (bi, x) in xs.iter().enumerate() {
+            for col in 0..n {
+                let mut acc = 0i64;
+                for kk in 0..k {
+                    let aq = layer.a_params.quantize(x[kk]);
+                    let wq = layer.w_params.quantize(w.at2(kk, col));
+                    acc += aq * wq;
+                }
+                let want =
+                    acc as f32 * layer.a_params.scale * layer.w_params.scale + bias[col];
+                let g = got[bi][col];
+                assert!((g - want).abs() < 2e-2 * want.abs().max(1.0), "{g} vs {want}");
+            }
+        }
+        assert_eq!(be.stats().core_ops as usize, layer.ops_per_vector() * xs.len());
+    }
+
+    #[test]
+    fn four_passes_cost_4x() {
+        let cfg = Config::default();
+        let w = Tensor::from_vec(&[64, 16], vec![0.25; 64 * 16]);
+        let l8 = BitSerialLinear::new(&w, vec![0.0; 16], 1.0, &cfg);
+        let l4 = crate::mapping::executor::CimLinear::new(&w, vec![0.0; 16], 1.0, &cfg);
+        assert_eq!(l8.ops_per_vector(), 4 * l4.ops_per_vector());
+    }
+}

@@ -1,0 +1,255 @@
+//! Mapping NN layers onto the CIM macro: backends, tiling, layer executors
+//! and the 8-b bit-serial precision extension.
+//!
+//! A layer's `K×N` integer matrix product is tiled into 64-row × 16-engine
+//! core operations (zero-padded at the edges); partial sums are accumulated
+//! digitally across row tiles, exactly as the chip's digital periphery
+//! would.
+
+pub mod bitserial;
+pub mod executor;
+
+use crate::cim::{golden, MacroError, MacroSim};
+use crate::config::Config;
+use crate::energy::{core_op_energy, EnergyBreakdown};
+use crate::util::rng::Xoshiro256;
+
+#[derive(Debug)]
+pub enum MapError {
+    Macro(MacroError),
+    Shape(String),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::Macro(e) => write!(f, "{e}"),
+            MapError::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
+
+impl From<MacroError> for MapError {
+    fn from(e: MacroError) -> Self {
+        MapError::Macro(e)
+    }
+}
+
+/// Cumulative execution statistics of a backend.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub core_ops: u64,
+    pub weight_loads: u64,
+    /// Sum of per-op cycles (macro ops on different cores may overlap; the
+    /// coordinator models concurrency — this is the serial device total).
+    pub total_cycles: u64,
+    pub energy: EnergyBreakdown,
+    /// Engine results whose folded MAC fell outside the boosted readout
+    /// range (boosted-clipping events).
+    pub clipped: u64,
+}
+
+impl ExecStats {
+    pub fn energy_fj(&self) -> f64 {
+        self.energy.total_fj()
+    }
+}
+
+/// Anything that can act as the 4-core CIM macro for the executors.
+pub trait CimBackend {
+    fn config(&self) -> &Config;
+    fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MapError>;
+    /// One core op on unsigned activations; returns reconstructed MAC
+    /// estimates (product units) per engine.
+    fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError>;
+
+    /// Batched core ops (default: loop). The XLA backend overrides this to
+    /// amortize one compiled execution across the whole batch.
+    fn core_op_batch(&mut self, core: usize, acts: &[Vec<i64>]) -> Result<Vec<Vec<f64>>, MapError> {
+        acts.iter().map(|a| self.core_op(core, a)).collect()
+    }
+
+    fn stats(&self) -> &ExecStats;
+    fn reset_stats(&mut self);
+}
+
+/// The native behavioral-model backend.
+pub struct NativeBackend {
+    pub sim: MacroSim,
+    rng: Xoshiro256,
+    stats: ExecStats,
+    scratch: crate::cim::NoiseDraw,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: Config) -> Self {
+        let rng = Xoshiro256::seeded(cfg.sim.seed ^ 0xBACC_E4D);
+        let scratch = crate::cim::NoiseDraw::zeros(&cfg.mac);
+        Self { sim: MacroSim::new(cfg), rng, stats: ExecStats::default(), scratch }
+    }
+}
+
+impl CimBackend for NativeBackend {
+    fn config(&self) -> &Config {
+        &self.sim.cfg
+    }
+
+    fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MapError> {
+        self.sim.load_core(core, w)?;
+        self.stats.weight_loads += 1;
+        Ok(())
+    }
+
+    fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError> {
+        let r = self.sim.core_op_scratch(core, acts, &mut self.rng, &mut self.scratch)?;
+        self.stats.core_ops += 1;
+        self.stats.total_cycles += r.stats.total_cycles;
+        self.stats.energy.add(&core_op_energy(&self.sim.cfg, &r.stats));
+        // Count boosted-clipping events against the ideal folded MAC.
+        if self.sim.cfg.enhance.boost {
+            let w = self.sim.core_weights(core)?;
+            for &d in golden::mac_folded(&self.sim.cfg, w, acts).iter() {
+                if golden::clips(&self.sim.cfg, d) {
+                    self.stats.clipped += 1;
+                }
+            }
+        }
+        Ok(r.values)
+    }
+
+    fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+}
+
+/// Exact-integer digital backend: same interface, no analog effects — the
+/// accuracy baseline every CIM experiment compares against.
+pub struct DigitalBackend {
+    cfg: Config,
+    weights: Vec<Option<Vec<Vec<i64>>>>,
+    stats: ExecStats,
+}
+
+impl DigitalBackend {
+    pub fn new(cfg: Config) -> Self {
+        let weights = (0..cfg.mac.cores).map(|_| None).collect();
+        Self { cfg, weights, stats: ExecStats::default() }
+    }
+}
+
+impl CimBackend for DigitalBackend {
+    fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MapError> {
+        if core >= self.cfg.mac.cores {
+            return Err(MapError::Macro(MacroError::BadCore(core)));
+        }
+        if w.len() != self.cfg.mac.rows || w.iter().any(|r| r.len() != self.cfg.mac.engines) {
+            return Err(MapError::Shape(format!(
+                "weights {}×{} vs core {}×{}",
+                w.len(),
+                w.first().map(|r| r.len()).unwrap_or(0),
+                self.cfg.mac.rows,
+                self.cfg.mac.engines
+            )));
+        }
+        self.weights[core] = Some(w.to_vec());
+        self.stats.weight_loads += 1;
+        Ok(())
+    }
+
+    fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError> {
+        let w = self.weights[core]
+            .as_ref()
+            .ok_or(MapError::Macro(MacroError::NoWeights(core)))?;
+        let engines = self.cfg.mac.engines;
+        let mut out = vec![0f64; engines];
+        for (r, &a) in acts.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            for (e, o) in out.iter_mut().enumerate() {
+                *o += (a * w[r][e]) as f64;
+            }
+        }
+        self.stats.core_ops += 1;
+        Ok(out)
+    }
+
+    fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::util::rng::Rng;
+
+    fn rand_weights(cfg: &Config, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..cfg.mac.rows)
+            .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn native_and_digital_agree_without_noise() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let w = rand_weights(&cfg, 1);
+        let mut nat = NativeBackend::new(cfg.clone());
+        let mut dig = DigitalBackend::new(cfg.clone());
+        nat.load_core(0, &w).unwrap();
+        dig.load_core(0, &w).unwrap();
+        let mut rng = Xoshiro256::seeded(3);
+        for _ in 0..20 {
+            let acts: Vec<i64> = (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+            let a = nat.core_op(0, &acts).unwrap();
+            let b = dig.core_op(0, &acts).unwrap();
+            let step = cfg.mac.adc_lsb_units() / cfg.enhance.dtc_scale();
+            for e in 0..cfg.mac.engines {
+                assert!((a[e] - b[e]).abs() <= step / 2.0 + 1e-9, "{} vs {}", a[e], b[e]);
+            }
+        }
+        assert_eq!(nat.stats().core_ops, 20);
+        assert!(nat.stats().energy_fj() > 0.0);
+        assert_eq!(dig.stats().core_ops, 20);
+    }
+
+    #[test]
+    fn stats_reset() {
+        let cfg = Config::default();
+        let mut nat = NativeBackend::new(cfg.clone());
+        nat.load_core(0, &rand_weights(&cfg, 2)).unwrap();
+        let acts = vec![5i64; cfg.mac.rows];
+        nat.core_op(0, &acts).unwrap();
+        assert_eq!(nat.stats().core_ops, 1);
+        nat.reset_stats();
+        assert_eq!(nat.stats().core_ops, 0);
+        assert_eq!(nat.stats().energy_fj(), 0.0);
+    }
+
+    #[test]
+    fn digital_validates_shapes() {
+        let cfg = Config::default();
+        let mut dig = DigitalBackend::new(cfg.clone());
+        let bad = vec![vec![0i64; 3]; 2];
+        assert!(matches!(dig.load_core(0, &bad), Err(MapError::Shape(_))));
+        let acts = vec![0i64; cfg.mac.rows];
+        assert!(dig.core_op(0, &acts).is_err()); // no weights
+    }
+}

@@ -1,0 +1,151 @@
+//! Deterministic synthetic datasets (the environment has no downloadable
+//! corpora): 10-class "oriented blob" images for the end-to-end MLP
+//! deployment example, and random CIFAR-shaped tensors for the ResNet-20
+//! mapping experiments.
+
+use crate::nn::tensor::Tensor;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// One labelled grayscale image.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub image: Tensor, // [1][H][W], values in [0,1]
+    pub label: usize,
+}
+
+/// 10-class oriented-blob dataset: class k places an anisotropic gaussian
+/// blob at angle kπ/10 around the image center, plus pixel noise. Linearly
+/// non-trivial but learnable to high accuracy by a small MLP — a stand-in
+/// for an MNIST-scale edge workload.
+pub struct BlobDataset {
+    pub side: usize,
+    pub noise: f64,
+    rng: Xoshiro256,
+}
+
+impl BlobDataset {
+    pub fn new(side: usize, noise: f64, seed: u64) -> Self {
+        Self { side, noise, rng: Xoshiro256::seeded(seed) }
+    }
+
+    pub fn sample(&mut self) -> Sample {
+        let label = self.rng.next_below(10) as usize;
+        let img = self.render(label);
+        Sample { image: img, label }
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<Sample> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+
+    fn render(&mut self, label: usize) -> Tensor {
+        let s = self.side;
+        let mut t = Tensor::zeros(&[1, s, s]);
+        let angle = label as f64 * std::f64::consts::PI / 10.0;
+        let (ca, sa) = (angle.cos(), angle.sin());
+        // Blob center jitters a little; elongation along the class angle.
+        let cx = s as f64 / 2.0 + self.rng.normal(0.0, 0.6);
+        let cy = s as f64 / 2.0 + self.rng.normal(0.0, 0.6);
+        let (sig_par, sig_perp) = (s as f64 / 3.2, s as f64 / 10.0);
+        for y in 0..s {
+            for x in 0..s {
+                let dx = x as f64 - cx;
+                let dy = y as f64 - cy;
+                let par = dx * ca + dy * sa;
+                let perp = -dx * sa + dy * ca;
+                let v = (-(par * par) / (2.0 * sig_par * sig_par)
+                    - (perp * perp) / (2.0 * sig_perp * sig_perp))
+                    .exp();
+                let noisy = v + self.rng.normal(0.0, self.noise);
+                *t.at3_mut(0, y, x) = noisy.clamp(0.0, 1.0) as f32;
+            }
+        }
+        t
+    }
+}
+
+/// Random CIFAR-shaped input ([3][32][32], values [0,1]) for mapping
+/// experiments that need realistic tensor shapes but not semantics.
+pub fn random_image(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seeded(seed);
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.next_f32()).collect())
+}
+
+/// ReLU-like activation tensor: zeros with probability `p0`, otherwise
+/// exponentially distributed small positive values (the distribution Fig. 4
+/// derives the MAC-folding win from).
+pub fn relu_like_acts(n: usize, p0: f64, mean: f64, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| {
+            if rng.next_bool(p0) {
+                0.0
+            } else {
+                (-mean * (1.0 - rng.next_f64()).ln()) as f32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_is_deterministic() {
+        let mut a = BlobDataset::new(16, 0.05, 7);
+        let mut b = BlobDataset::new(16, 0.05, 7);
+        let sa = a.sample();
+        let sb = b.sample();
+        assert_eq!(sa.label, sb.label);
+        assert_eq!(sa.image.data, sb.image.data);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of two different classes should differ substantially.
+        let mut d = BlobDataset::new(16, 0.02, 3);
+        let mut mean = vec![Tensor::zeros(&[1, 16, 16]); 10];
+        let mut counts = [0usize; 10];
+        for _ in 0..400 {
+            let s = d.sample();
+            counts[s.label] += 1;
+            for (m, &v) in mean[s.label].data.iter_mut().zip(&s.image.data) {
+                *m += v;
+            }
+        }
+        for k in 0..10 {
+            assert!(counts[k] > 10, "class {k} undersampled");
+            for m in mean[k].data.iter_mut() {
+                *m /= counts[k] as f32;
+            }
+        }
+        let dist: f32 = mean[0]
+            .data
+            .iter()
+            .zip(&mean[5].data)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum();
+        assert!(dist > 0.5, "classes 0/5 too similar: {dist}");
+    }
+
+    #[test]
+    fn pixel_range_and_shape() {
+        let mut d = BlobDataset::new(12, 0.1, 1);
+        let s = d.sample();
+        assert_eq!(s.image.shape, vec![1, 12, 12]);
+        assert!(s.image.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(s.label < 10);
+    }
+
+    #[test]
+    fn relu_like_sparsity() {
+        let xs = relu_like_acts(20_000, 0.5, 0.3, 9);
+        let zeros = xs.iter().filter(|&&x| x == 0.0).count() as f64 / xs.len() as f64;
+        assert!((zeros - 0.5).abs() < 0.02, "{zeros}");
+        let nz_mean: f64 = xs.iter().filter(|&&x| x > 0.0).map(|&x| x as f64).sum::<f64>()
+            / xs.iter().filter(|&&x| x > 0.0).count() as f64;
+        assert!((nz_mean - 0.3).abs() < 0.02, "{nz_mean}");
+    }
+}

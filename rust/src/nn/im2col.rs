@@ -1,0 +1,119 @@
+//! im2col: lower a convolution to a matrix product so conv layers map onto
+//! the macro's column-engine dot products exactly like FC layers do.
+
+use crate::nn::tensor::Tensor;
+
+/// Expand `x` ([C][H][W]) into a patch matrix [positions][C·kh·kw] such that
+/// `conv(x, w) == patches · w_flat` (with `w_flat` [C·kh·kw][out_c]).
+pub fn im2col(x: &Tensor, kh: usize, kw: usize, stride: usize, pad: usize) -> Tensor {
+    assert_eq!(x.rank(), 3);
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let k = c * kh * kw;
+    let mut out = Tensor::zeros(&[oh * ow, k]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for ci in 0..c {
+                for ky in 0..kh {
+                    let y_in = (oy * stride + ky) as isize - pad as isize;
+                    for kx in 0..kw {
+                        let x_in = (ox * stride + kx) as isize - pad as isize;
+                        let v = if y_in < 0 || y_in >= h as isize || x_in < 0 || x_in >= w as isize
+                        {
+                            0.0
+                        } else {
+                            x.at3(ci, y_in as usize, x_in as usize)
+                        };
+                        let col = (ci * kh + ky) * kw + kx;
+                        *out.at2_mut(row, col) = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Flatten conv weights [out_c][in_c][kh][kw] into [in_c·kh·kw][out_c]
+/// (column per output channel — one CIM engine per output channel).
+pub fn weights_to_cols(w: &Tensor) -> Tensor {
+    assert_eq!(w.rank(), 4);
+    let (oc, ic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let k = ic * kh * kw;
+    let mut out = Tensor::zeros(&[k, oc]);
+    for o in 0..oc {
+        for r in 0..k {
+            *out.at2_mut(r, o) = w.data[o * k + r];
+        }
+    }
+    out
+}
+
+/// Output spatial dims of a convolution.
+pub fn conv_out_dims(h: usize, w: usize, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
+    ((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops::conv2d;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn random_tensor(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| (rng.next_f32() - 0.5) * 2.0).collect())
+    }
+
+    /// im2col · w_cols must equal direct convolution for random tensors.
+    #[test]
+    fn im2col_matmul_equals_conv() {
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0)] {
+            let x = random_tensor(&[3, 8, 8], 42);
+            let w = random_tensor(&[5, 3, 3, 3], 43);
+            let direct = conv2d(&x, &w, None, stride, pad);
+            let patches = im2col(&x, 3, 3, stride, pad);
+            let wc = weights_to_cols(&w);
+            let (oh, ow) = conv_out_dims(8, 8, 3, 3, stride, pad);
+            assert_eq!(patches.shape, vec![oh * ow, 27]);
+            for row in 0..oh * ow {
+                for o in 0..5 {
+                    let mut acc = 0f32;
+                    for k in 0..27 {
+                        acc += patches.at2(row, k) * wc.at2(k, o);
+                    }
+                    let (oy, ox) = (row / ow, row % ow);
+                    let want = direct.at3(o, oy, ox);
+                    assert!(
+                        (acc - want).abs() < 1e-4,
+                        "stride {stride} pad {pad} row {row} oc {o}: {acc} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_produces_zero_borders() {
+        let x = random_tensor(&[1, 2, 2], 1);
+        let p = im2col(&x, 3, 3, 1, 1);
+        // First patch (output 0,0): top-left 3×3 window has 5 padded zeros.
+        let zeros = (0..9).filter(|&k| p.at2(0, k) == 0.0).count();
+        assert_eq!(zeros, 5);
+    }
+
+    #[test]
+    fn weight_flattening_layout() {
+        let w = Tensor::from_vec(&[2, 1, 1, 2], vec![1., 2., 3., 4.]);
+        let wc = weights_to_cols(&w);
+        assert_eq!(wc.shape, vec![2, 2]);
+        // column 0 = out-channel 0 weights [1,2]; column 1 = [3,4]
+        assert_eq!(wc.at2(0, 0), 1.0);
+        assert_eq!(wc.at2(1, 0), 2.0);
+        assert_eq!(wc.at2(0, 1), 3.0);
+        assert_eq!(wc.at2(1, 1), 4.0);
+    }
+}

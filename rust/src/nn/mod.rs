@@ -1,0 +1,14 @@
+//! Neural-network substrate: tensors, float reference ops, quantization to
+//! the macro's 4-b formats, the workloads (MLP + ResNet-20), a trainer, and
+//! synthetic datasets. The CIM mapping lives in `crate::mapping`.
+
+pub mod dataset;
+pub mod im2col;
+pub mod mlp;
+pub mod ops;
+pub mod quant;
+pub mod resnet;
+pub mod tensor;
+
+pub use quant::QuantParams;
+pub use tensor::Tensor;

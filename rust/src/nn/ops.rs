@@ -1,0 +1,194 @@
+//! Float NN primitives (reference path): conv2d, linear, ReLU, pooling,
+//! batch-norm folding, softmax. The CIM path replaces the inner dot products
+//! of `conv2d`/`linear` via `mapping::executor`; this module is the golden.
+
+use crate::nn::tensor::Tensor;
+
+/// ReLU in place.
+pub fn relu(t: Tensor) -> Tensor {
+    t.map(|x| x.max(0.0))
+}
+
+/// Softmax over a 1-D tensor (numerically stable).
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// 2-D convolution, CHW layout, stride `s`, symmetric zero padding `p`.
+/// `w` is [out_c][in_c][kh][kw]; `x` is [in_c][h][w].
+pub fn conv2d(x: &Tensor, w: &Tensor, b: Option<&[f32]>, stride: usize, pad: usize) -> Tensor {
+    assert_eq!(x.rank(), 3);
+    assert_eq!(w.rank(), 4);
+    let (ic, ih, iw) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oc, wic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(ic, wic, "channel mismatch");
+    let oh = (ih + 2 * pad - kh) / stride + 1;
+    let ow = (iw + 2 * pad - kw) / stride + 1;
+    let mut y = Tensor::zeros(&[oc, oh, ow]);
+    for o in 0..oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = b.map(|b| b[o]).unwrap_or(0.0);
+                for c in 0..ic {
+                    for ky in 0..kh {
+                        let y_in = (oy * stride + ky) as isize - pad as isize;
+                        if y_in < 0 || y_in >= ih as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let x_in = (ox * stride + kx) as isize - pad as isize;
+                            if x_in < 0 || x_in >= iw as isize {
+                                continue;
+                            }
+                            acc += x.at3(c, y_in as usize, x_in as usize)
+                                * w.data[((o * ic + c) * kh + ky) * kw + kx];
+                        }
+                    }
+                }
+                *y.at3_mut(o, oy, ox) = acc;
+            }
+        }
+    }
+    y
+}
+
+/// Global average pooling: [C][H][W] → [C].
+pub fn global_avg_pool(x: &Tensor) -> Vec<f32> {
+    assert_eq!(x.rank(), 3);
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let mut out = vec![0f32; c];
+    for ci in 0..c {
+        let mut s = 0f32;
+        for y in 0..h {
+            for xw in 0..w {
+                s += x.at3(ci, y, xw);
+            }
+        }
+        out[ci] = s / (h * w) as f32;
+    }
+    out
+}
+
+/// 2×2 average pooling with stride 2 (used when downsampling synthetic nets).
+pub fn avg_pool2(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 3);
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let s = x.at3(ci, 2 * oy, 2 * ox)
+                    + x.at3(ci, 2 * oy, 2 * ox + 1)
+                    + x.at3(ci, 2 * oy + 1, 2 * ox)
+                    + x.at3(ci, 2 * oy + 1, 2 * ox + 1);
+                *y.at3_mut(ci, oy, ox) = s / 4.0;
+            }
+        }
+    }
+    y
+}
+
+/// Batch-norm parameters folded into the preceding conv's weights/bias:
+/// ŵ = w·γ/σ, b̂ = (b − μ)·γ/σ + β. Standard deployment transformation —
+/// the CIM macro only ever sees folded weights.
+pub fn fold_batchnorm(
+    w: &mut Tensor,
+    b: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) {
+    assert_eq!(w.rank(), 4);
+    let oc = w.shape[0];
+    let per = w.data.len() / oc;
+    for o in 0..oc {
+        let g = gamma[o] / (var[o] + eps).sqrt();
+        for k in 0..per {
+            w.data[o * per + k] *= g;
+        }
+        b[o] = (b[o] - mean[o]) * g + beta[o];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 kernel with weight 1 reproduces the input.
+        let x = Tensor::from_vec(&[1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, None, 1, 0);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_3x3() {
+        // All-ones 3×3 kernel, pad 1: center output = sum of 3×3 patch.
+        let x = Tensor::from_vec(&[1, 3, 3], vec![1.; 9]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.; 9]);
+        let y = conv2d(&x, &w, None, 1, 1);
+        assert_eq!(y.shape, vec![1, 3, 3]);
+        assert_eq!(y.at3(0, 1, 1), 9.0); // full patch
+        assert_eq!(y.at3(0, 0, 0), 4.0); // corner sees 2×2
+        assert_eq!(y.at3(0, 0, 1), 6.0); // edge sees 2×3
+    }
+
+    #[test]
+    fn conv_stride_two() {
+        let x = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]);
+        let y = conv2d(&x, &w, None, 2, 0);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        assert_eq!(y.data, vec![0., 4., 16., 20.]);
+    }
+
+    #[test]
+    fn conv_bias_and_channels() {
+        let x = Tensor::from_vec(&[2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        // 1×1 kernel summing both channels.
+        let w = Tensor::from_vec(&[1, 2, 1, 1], vec![1.0, 0.1]);
+        let y = conv2d(&x, &w, Some(&[100.0]), 1, 0);
+        assert_eq!(y.data, vec![102.0, 104.0, 106.0, 108.0]);
+    }
+
+    #[test]
+    fn relu_and_softmax() {
+        let t = relu(Tensor::from_vec(&[4], vec![-1., 2., -3., 4.]));
+        assert_eq!(t.data, vec![0., 2., 0., 4.]);
+        let p = softmax(&[1.0, 1.0, 1.0, 1.0]);
+        for &x in &p {
+            assert!((x - 0.25).abs() < 1e-6);
+        }
+        let p = softmax(&[1000.0, 0.0]); // stability
+        assert!((p[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pooling() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1., 3., 5., 7.]);
+        assert_eq!(global_avg_pool(&x), vec![4.0]);
+        let y = avg_pool2(&x);
+        assert_eq!(y.shape, vec![1, 1, 1]);
+        assert_eq!(y.data, vec![4.0]);
+    }
+
+    #[test]
+    fn bn_folding_matches_explicit_bn() {
+        let mut w = Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]);
+        let mut b = vec![1.0];
+        let (gamma, beta, mean, var) = (vec![0.5], vec![0.2], vec![3.0], vec![4.0]);
+        let x = Tensor::from_vec(&[1, 1, 1], vec![5.0]);
+        // Explicit: conv → y=11; bn: (11−3)·0.5/2 + 0.2 = 2.2.
+        fold_batchnorm(&mut w, &mut b, &gamma, &beta, &mean, &var, 0.0);
+        let y = conv2d(&x, &w, Some(&b), 1, 0);
+        assert!((y.data[0] - 2.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,125 @@
+//! Post-training quantization for the CIM macro's number formats:
+//! * weights → signed sign-magnitude `±(2^(b−1)−1)` (±7 at 4-b),
+//! * activations (post-ReLU) → unsigned `0..2^b−1` (0..15 at 4-b),
+//! both with symmetric per-tensor power-free scales (max-abs calibration).
+
+use crate::nn::tensor::Tensor;
+
+/// Per-tensor quantization parameters: `real ≈ q · scale`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    /// Quantized integer range (inclusive).
+    pub q_min: i64,
+    pub q_max: i64,
+}
+
+impl QuantParams {
+    /// Symmetric signed params for weights with `bits` total (sign-magnitude:
+    /// the CIM array stores |w| ≤ 2^(bits−1)−1).
+    pub fn signed(max_abs: f32, bits: u32) -> Self {
+        let q_max = (1i64 << (bits - 1)) - 1;
+        let scale = if max_abs > 0.0 { max_abs / q_max as f32 } else { 1.0 };
+        Self { scale, q_min: -q_max, q_max }
+    }
+
+    /// Unsigned params for post-ReLU activations.
+    pub fn unsigned(max: f32, bits: u32) -> Self {
+        let q_max = (1i64 << bits) - 1;
+        let scale = if max > 0.0 { max / q_max as f32 } else { 1.0 };
+        Self { scale, q_min: 0, q_max }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i64 {
+        let q = (x / self.scale).round() as i64;
+        q.clamp(self.q_min, self.q_max)
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i64) -> f32 {
+        q as f32 * self.scale
+    }
+
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+}
+
+/// Quantize a weight tensor (max-abs calibration).
+pub fn quantize_weights(w: &Tensor, bits: u32) -> (Vec<i64>, QuantParams) {
+    let p = QuantParams::signed(w.max_abs(), bits);
+    (p.quantize_vec(&w.data), p)
+}
+
+/// Quantize a non-negative activation vector with a fixed calibration max
+/// (clipping above it, as a deployed pipeline would).
+pub fn quantize_acts(xs: &[f32], cal_max: f32, bits: u32) -> (Vec<i64>, QuantParams) {
+    let p = QuantParams::unsigned(cal_max, bits);
+    (p.quantize_vec(xs), p)
+}
+
+/// Mean-squared quantization error of a roundtrip (diagnostics/tests).
+pub fn roundtrip_mse(xs: &[f32], p: &QuantParams) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter()
+        .map(|&x| {
+            let e = (x - p.dequantize(p.quantize(x))) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signed_range_is_sign_magnitude() {
+        let p = QuantParams::signed(7.0, 4);
+        assert_eq!(p.q_max, 7);
+        assert_eq!(p.q_min, -7); // NOT −8: sign-magnitude array storage
+        assert_eq!(p.quantize(7.0), 7);
+        assert_eq!(p.quantize(-9.0), -7); // clamped
+        assert_eq!(p.quantize(0.4), 0);
+    }
+
+    #[test]
+    fn unsigned_range() {
+        let p = QuantParams::unsigned(1.5, 4);
+        assert_eq!(p.q_max, 15);
+        assert_eq!(p.quantize(1.5), 15);
+        assert_eq!(p.quantize(-0.3), 0);
+        assert_eq!(p.quantize(0.75), 8);
+    }
+
+    #[test]
+    fn roundtrip_error_within_half_step() {
+        let p = QuantParams::signed(1.0, 4);
+        for i in -20..=20 {
+            let x = i as f32 * 0.05;
+            let rt = p.dequantize(p.quantize(x));
+            assert!((x - rt).abs() <= p.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_quantization_uses_max_abs() {
+        let w = Tensor::from_vec(&[2, 2], vec![0.1, -0.7, 0.35, 0.0]);
+        let (q, p) = quantize_weights(&w, 4);
+        assert_eq!(q[1], -7); // the max-abs element pins the scale
+        assert_eq!(q[2], (0.35 / p.scale).round() as i64);
+        assert!(roundtrip_mse(&w.data, &p) < (p.scale as f64 / 2.0).powi(2));
+    }
+
+    #[test]
+    fn zero_tensor_does_not_divide_by_zero() {
+        let p = QuantParams::signed(0.0, 4);
+        assert_eq!(p.quantize(0.0), 0);
+        let p = QuantParams::unsigned(0.0, 4);
+        assert_eq!(p.quantize(0.0), 0);
+    }
+}

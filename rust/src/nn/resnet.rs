@@ -1,0 +1,213 @@
+//! ResNet-20 (CIFAR-style) — the network the paper maps onto the CIM cores
+//! for its comparison study ("mapping a 4-bit ResNet-20 to the CIM cores",
+//! Fig. 1 footnote). Weights are synthetic (He-initialized, BN pre-folded):
+//! the mapping/energy/accuracy-degradation experiments need realistic
+//! shapes and value distributions, not a trained checkpoint.
+
+use crate::nn::ops::{conv2d, global_avg_pool, relu};
+use crate::nn::tensor::{matvec, Tensor};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// One conv layer's folded parameters.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub w: Tensor, // [oc][ic][kh][kw]
+    pub b: Vec<f32>,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvLayer {
+    fn random(oc: usize, ic: usize, k: usize, stride: usize, rng: &mut Xoshiro256) -> Self {
+        let fan_in = ic * k * k;
+        let std = (2.0 / fan_in as f64).sqrt();
+        let data = (0..oc * ic * k * k)
+            .map(|_| rng.normal(0.0, std) as f32)
+            .collect();
+        Self {
+            w: Tensor::from_vec(&[oc, ic, k, k], data),
+            b: vec![0.0; oc],
+            stride,
+            pad: k / 2,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        conv2d(x, &self.w, Some(&self.b), self.stride, self.pad)
+    }
+}
+
+/// Basic residual block: conv-relu-conv + identity (1×1 projection when the
+/// shape changes), then ReLU.
+#[derive(Clone, Debug)]
+pub struct BasicBlock {
+    pub conv1: ConvLayer,
+    pub conv2: ConvLayer,
+    pub proj: Option<ConvLayer>,
+}
+
+impl BasicBlock {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let h = relu(self.conv1.forward(x));
+        let h = self.conv2.forward(&h);
+        let idn = match &self.proj {
+            Some(p) => p.forward(x),
+            None => x.clone(),
+        };
+        assert_eq!(h.shape, idn.shape);
+        let mut out = h;
+        for (o, i) in out.data.iter_mut().zip(&idn.data) {
+            *o += i;
+        }
+        relu(out)
+    }
+}
+
+/// ResNet-20: stem conv + 3 stages × 3 blocks (16/32/64 channels) + GAP + FC.
+#[derive(Clone, Debug)]
+pub struct ResNet20 {
+    pub stem: ConvLayer,
+    pub stages: Vec<Vec<BasicBlock>>,
+    pub fc_w: Tensor, // [10][64]
+    pub fc_b: Vec<f32>,
+}
+
+impl ResNet20 {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Xoshiro256::seeded(seed);
+        let stem = ConvLayer::random(16, 3, 3, 1, &mut rng);
+        let mut stages = Vec::new();
+        let chans = [16usize, 32, 64];
+        let mut in_c = 16;
+        for (si, &c) in chans.iter().enumerate() {
+            let mut blocks = Vec::new();
+            for bi in 0..3 {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let conv1 = ConvLayer::random(c, in_c, 3, stride, &mut rng);
+                let conv2 = ConvLayer::random(c, c, 3, 1, &mut rng);
+                let proj = if stride != 1 || in_c != c {
+                    Some(ConvLayer::random(c, in_c, 1, stride, &mut rng))
+                } else {
+                    None
+                };
+                blocks.push(BasicBlock { conv1, conv2, proj });
+                in_c = c;
+            }
+            stages.push(blocks);
+        }
+        let fc_w = Tensor::from_vec(
+            &[10, 64],
+            (0..640).map(|_| rng.normal(0.0, 0.1) as f32).collect(),
+        );
+        Self { stem, stages, fc_w, fc_b: vec![0.0; 10] }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Vec<f32> {
+        let mut h = relu(self.stem.forward(x));
+        for stage in &self.stages {
+            for block in stage {
+                h = block.forward(&h);
+            }
+        }
+        let pooled = global_avg_pool(&h);
+        matvec(&self.fc_w, &pooled, Some(&self.fc_b))
+    }
+
+    /// All conv layers in execution order with descriptive names — the
+    /// mapping experiments iterate these.
+    pub fn conv_layers(&self) -> Vec<(String, &ConvLayer)> {
+        let mut v = vec![("stem".to_string(), &self.stem)];
+        for (si, st) in self.stages.iter().enumerate() {
+            for (bi, b) in st.iter().enumerate() {
+                v.push((format!("s{si}b{bi}.conv1"), &b.conv1));
+                v.push((format!("s{si}b{bi}.conv2"), &b.conv2));
+                if let Some(p) = &b.proj {
+                    v.push((format!("s{si}b{bi}.proj"), p));
+                }
+            }
+        }
+        v
+    }
+
+    /// Total MAC count for a 32×32×3 input (mapping/energy accounting):
+    /// symbolic forward of the spatial dims, block structure respected
+    /// (projection convs read the block *input*, not its output).
+    pub fn total_macs(&self) -> usize {
+        let conv_macs = |l: &ConvLayer, h: usize, w: usize| -> (usize, usize, usize) {
+            let (oc, ic, kh, kw) = (l.w.shape[0], l.w.shape[1], l.w.shape[2], l.w.shape[3]);
+            let oh = (h + 2 * l.pad - kh) / l.stride + 1;
+            let ow = (w + 2 * l.pad - kw) / l.stride + 1;
+            (oc * ic * kh * kw * oh * ow, oh, ow)
+        };
+        let (mut macs, mut h, mut w) = conv_macs(&self.stem, 32, 32);
+        for stage in &self.stages {
+            for block in stage {
+                let (in_h, in_w) = (h, w);
+                let (m1, h1, w1) = conv_macs(&block.conv1, in_h, in_w);
+                let (m2, h2, w2) = conv_macs(&block.conv2, h1, w1);
+                macs += m1 + m2;
+                if let Some(p) = &block.proj {
+                    let (mp, _, _) = conv_macs(p, in_h, in_w);
+                    macs += mp;
+                }
+                h = h2;
+                w = w2;
+            }
+        }
+        macs + 64 * 10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dataset::random_image;
+
+    #[test]
+    fn twenty_layers() {
+        let net = ResNet20::new(1);
+        // 3 stages × 3 blocks × 2 convs + stem = 19 convs + FC = ResNet-20;
+        // plus 2 projection convs (stage transitions).
+        let convs = net.conv_layers();
+        let main: usize = convs.iter().filter(|(n, _)| !n.contains("proj")).count();
+        assert_eq!(main, 19);
+        let proj: usize = convs.iter().filter(|(n, _)| n.contains("proj")).count();
+        assert_eq!(proj, 2);
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let net = ResNet20::new(7);
+        let x = random_image(&[3, 32, 32], 3);
+        let y1 = net.forward(&x);
+        let y2 = net.forward(&x);
+        assert_eq!(y1.len(), 10);
+        assert_eq!(y1, y2);
+        assert!(y1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stage_dims_shrink() {
+        let net = ResNet20::new(2);
+        let x = random_image(&[3, 32, 32], 4);
+        let h = relu(net.stem.forward(&x));
+        assert_eq!(h.shape, vec![16, 32, 32]);
+        let h1 = net.stages[0][0].forward(&h);
+        assert_eq!(h1.shape, vec![16, 32, 32]);
+        let mut h2 = h1;
+        for b in &net.stages[0][1..] {
+            h2 = b.forward(&h2);
+        }
+        let h3 = net.stages[1][0].forward(&h2);
+        assert_eq!(h3.shape, vec![32, 16, 16]);
+    }
+
+    #[test]
+    fn mac_count_magnitude() {
+        // ResNet-20 on CIFAR is ~40.5M MACs; the estimate must be within a
+        // few percent.
+        let net = ResNet20::new(1);
+        let m = net.total_macs();
+        assert!(m > 35_000_000 && m < 48_000_000, "{m}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal dense tensor (f32, row-major) — the substrate for the NN layers
+//! mapped onto the CIM macro. Deliberately small: shapes up to 4-D, exact
+//! indexing, no broadcasting magic.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape without copying (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c + j]
+    }
+
+    /// CHW indexing for rank-3 tensors.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(c * self.shape[1] + h) * self.shape[2] + w]
+    }
+
+    #[inline]
+    pub fn at3_mut(&mut self, c: usize, h: usize, w: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 3);
+        let (s1, s2) = (self.shape[1], self.shape[2]);
+        &mut self.data[(c * s1 + h) * s2 + w]
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+        self
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// y = W·x + b for row-major W [out][in].
+pub fn matvec(w: &Tensor, x: &[f32], b: Option<&[f32]>) -> Vec<f32> {
+    assert_eq!(w.rank(), 2);
+    let (out, inp) = (w.shape[0], w.shape[1]);
+    assert_eq!(x.len(), inp);
+    let mut y = vec![0f32; out];
+    for o in 0..out {
+        let row = &w.data[o * inp..(o + 1) * inp];
+        let mut acc = 0f32;
+        for (wi, xi) in row.iter().zip(x) {
+            acc += wi * xi;
+        }
+        y[o] = acc + b.map(|b| b[o]).unwrap_or(0.0);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_indexing() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        *t.at2_mut(1, 2) = 5.0;
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.data[5], 5.0);
+        let t3 = Tensor::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t3.at3(1, 0, 1), 5.0);
+        assert_eq!(t3.at3(0, 1, 0), 2.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_reshape_panics() {
+        let _ = Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let w = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let y = matvec(&w, &[1., 1., 1.], Some(&[10., 20.]));
+        assert_eq!(y, vec![16.0, 35.0]);
+        let y = matvec(&w, &[1., 0., -1.], None);
+        assert_eq!(y, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn map_and_maxabs_and_argmax() {
+        let t = Tensor::from_vec(&[4], vec![-3.0, 1.0, 2.0, -0.5]).map(|x| x * 2.0);
+        assert_eq!(t.max_abs(), 6.0);
+        assert_eq!(t.argmax(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest: `artifacts/manifest.toml`, written by
+//! `python -m compile.aot`, parsed with the in-repo TOML subset parser.
+
+use crate::runtime::RuntimeError;
+use crate::util::tomlcfg::Doc;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Metadata of one AOT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "macro" (single-core batched op) or "mlp" (full forward graph).
+    pub kind: String,
+    /// Enhancement mode baked at lowering time.
+    pub mode: String,
+    /// Whether dynamic noise inputs are live in the graph.
+    pub noise: bool,
+    pub batch: usize,
+    /// MLP-only: layer dims and noise-bundle length.
+    pub dims: Vec<usize>,
+    pub noise_len: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self, RuntimeError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            RuntimeError::Manifest(format!("cannot read {}: {e} — run `make artifacts`", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self, RuntimeError> {
+        let doc = Doc::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        // Collect section names = artifact names.
+        let mut names: Vec<String> = Vec::new();
+        for key in doc.keys() {
+            if let Some((section, _)) = key.rsplit_once('.') {
+                if !names.iter().any(|n| n == section) {
+                    names.push(section.to_string());
+                }
+            }
+        }
+        let mut entries = BTreeMap::new();
+        for name in names {
+            let get_str = |k: &str| doc.str(&format!("{name}.{k}")).map(str::to_string);
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: get_str("file")
+                    .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing file")))?,
+                kind: get_str("kind").unwrap_or_else(|| "macro".into()),
+                mode: get_str("mode").unwrap_or_else(|| "baseline".into()),
+                noise: doc.bool(&format!("{name}.noise")).unwrap_or(true),
+                batch: doc.usize(&format!("{name}.batch")).unwrap_or(1),
+                dims: match doc.get(&format!("{name}.dims")) {
+                    Some(crate::util::tomlcfg::Value::Array(a)) => a
+                        .iter()
+                        .filter_map(|v| v.as_i64())
+                        .map(|v| v as usize)
+                        .collect(),
+                    _ => vec![],
+                },
+                noise_len: doc.usize(&format!("{name}.noise_len")).unwrap_or(0),
+            };
+            entries.insert(name, meta);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Find the macro artifact for (mode, noise) with the smallest batch
+    /// ≥ `min_batch` (or the largest available).
+    pub fn find_macro(&self, mode: &str, noise: bool, min_batch: usize) -> Option<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .entries
+            .values()
+            .filter(|m| m.kind == "macro" && m.mode == mode && m.noise == noise)
+            .collect();
+        candidates.sort_by_key(|m| m.batch);
+        candidates
+            .iter()
+            .find(|m| m.batch >= min_batch)
+            .copied()
+            .or(candidates.last().copied())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[cim_macro_baseline_b16]
+file = "cim_macro_baseline_b16.hlo.txt"
+kind = "macro"
+mode = "baseline"
+noise = true
+batch = 16
+
+[cim_macro_baseline_b128]
+file = "cim_macro_baseline_b128.hlo.txt"
+kind = "macro"
+mode = "baseline"
+noise = true
+batch = 128
+
+[mlp_fwd_b16]
+file = "mlp_fwd_b16.hlo.txt"
+kind = "mlp"
+mode = "fold_boost"
+noise = true
+batch = 16
+dims = [144, 32, 10]
+noise_len = 3248
+"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let mlp = m.get("mlp_fwd_b16").unwrap();
+        assert_eq!(mlp.kind, "mlp");
+        assert_eq!(mlp.dims, vec![144, 32, 10]);
+        assert_eq!(mlp.noise_len, 3248);
+        assert_eq!(mlp.batch, 16);
+    }
+
+    #[test]
+    fn find_macro_prefers_smallest_sufficient_batch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.find_macro("baseline", true, 1).unwrap().batch, 16);
+        assert_eq!(m.find_macro("baseline", true, 17).unwrap().batch, 128);
+        // Larger than anything available → largest.
+        assert_eq!(m.find_macro("baseline", true, 500).unwrap().batch, 128);
+        assert!(m.find_macro("fold", true, 1).is_none());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let broken = "[x]\nkind = \"macro\"\n";
+        assert!(Manifest::parse(broken).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When `make artifacts` has run, validate the real manifest.
+        let p = std::path::Path::new("artifacts/manifest.toml");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.get("mlp_fwd_b16").is_some());
+            assert!(m.find_macro("fold_boost", true, 16).is_some());
+            assert!(m.find_macro("baseline", false, 16).is_some());
+        }
+    }
+}

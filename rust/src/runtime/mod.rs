@@ -1,0 +1,129 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python -m compile.aot` and execute them on the CPU PJRT client — the
+//! request-path bridge to the L2/L1 compiled model (Python never runs here).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file
+//! → XlaComputation::from_proto → client.compile → execute`.
+
+pub mod artifact;
+pub mod xla_backend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use artifact::{ArtifactMeta, Manifest};
+
+#[derive(Debug)]
+pub enum RuntimeError {
+    Xla(xla::Error),
+    MissingArtifact(String),
+    Manifest(String),
+    Io(std::io::Error),
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e:?}"),
+            RuntimeError::MissingArtifact(n) => write!(
+                f,
+                "artifact `{n}` not found — run `make artifacts` first"
+            ),
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+            RuntimeError::Shape(m) => write!(f, "shape error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+/// PJRT client + compiled-executable cache keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.toml`).
+    pub fn open(dir: &Path) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(&dir.join("manifest.toml"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| RuntimeError::MissingArtifact(name.to_string()))?;
+            let path = self.dir.join(&meta.file);
+            if !path.exists() {
+                return Err(RuntimeError::MissingArtifact(name.to_string()));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path utf-8"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 tensors `(data, shape)`, returning the
+    /// flattened f32 outputs of the result tuple.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>, RuntimeError> {
+        // Build literals first (borrow rules: literals before executable).
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(RuntimeError::Shape(format!(
+                    "input data {} vs shape {:?}",
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+// Runtime integration tests live in rust/tests/runtime_equivalence.rs — they
+// need the artifacts directory produced by `make artifacts` (see Makefile).

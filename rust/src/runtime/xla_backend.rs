@@ -1,0 +1,255 @@
+//! [`CimBackend`] implementation backed by the AOT-compiled XLA artifacts:
+//! the "deployed model" path. Weight tiles live in Rust; each core op
+//! marshals activations + noise into the compiled macro op and reads codes
+//! and reconstructed values back.
+//!
+//! Equivalence contract (tested in rust/tests/runtime_equivalence.rs): fed
+//! the same weights, activations, fabrication statics and noise draws, this
+//! backend and [`NativeBackend`] produce identical codes.
+
+use crate::cim::engine::{mac_phase, OpStats};
+use crate::cim::noise::{Fabrication, NoiseDraw};
+use crate::cim::timing::finalize_cycles;
+use crate::cim::weights::CoreWeights;
+use crate::cim::{golden, MacroError};
+use crate::config::Config;
+use crate::energy::core_op_energy;
+use crate::mapping::{CimBackend, ExecStats, MapError};
+use crate::runtime::{Runtime, RuntimeError};
+use crate::util::rng::Xoshiro256;
+
+/// Map the Rust enhancement label onto the Python artifact mode tag.
+pub fn mode_tag(cfg: &Config) -> String {
+    cfg.enhance.label().replace('+', "_")
+}
+
+pub struct XlaBackend {
+    cfg: Config,
+    rt: Runtime,
+    artifact: String,
+    batch: usize,
+    fab: Fabrication,
+    weights: Vec<Option<CoreWeights>>,
+    w_flat: Vec<Option<Vec<f32>>>,
+    rng: Xoshiro256,
+    stats: ExecStats,
+}
+
+impl XlaBackend {
+    /// Open the runtime and select the macro artifact matching the config's
+    /// enhancement mode and noise setting.
+    pub fn new(cfg: Config, artifacts_dir: &std::path::Path) -> Result<Self, RuntimeError> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let tag = mode_tag(&cfg);
+        let meta = rt
+            .manifest
+            .find_macro(&tag, cfg.noise.enabled, 16)
+            .ok_or_else(|| {
+                RuntimeError::MissingArtifact(format!("macro mode={tag} noise={}", cfg.noise.enabled))
+            })?;
+        let artifact = meta.name.clone();
+        let batch = meta.batch;
+        let fab = Fabrication::draw(&cfg.mac, &cfg.noise);
+        let weights = (0..cfg.mac.cores).map(|_| None).collect();
+        let w_flat = (0..cfg.mac.cores).map(|_| None).collect();
+        let rng = Xoshiro256::seeded(cfg.sim.seed ^ 0x71A_BEEF);
+        Ok(Self { cfg, rt, artifact, batch, fab, weights, w_flat, rng, stats: ExecStats::default() })
+    }
+
+    pub fn artifact_name(&self) -> &str {
+        &self.artifact
+    }
+
+    /// Activity statistics for the energy/cycle model: the noise-free MAC
+    /// phase of the native model plus the fixed readout ladder (jitter is
+    /// zero-mean, so the noise-free counters are the correct expectation).
+    fn op_stats(&self, core: usize, acts: &[i64]) -> OpStats {
+        let w = self.weights[core].as_ref().expect("weights checked");
+        let mut ideal_cfg = self.cfg.clone();
+        ideal_cfg.noise.enabled = false;
+        let ideal_fab = Fabrication::ideal(&self.cfg.mac);
+        let draw = NoiseDraw::zeros(&self.cfg.mac);
+        let phase = mac_phase(&ideal_cfg, core, w, acts, &ideal_fab, &draw);
+        let mut stats = phase.stats;
+        let m = &self.cfg.mac;
+        let fs = m.adc_fullscale_units();
+        let ladder: f64 = (0..(m.adc_bits - 1))
+            .map(|d| fs / (1u64 << (d + 2)) as f64)
+            .sum();
+        stats.adc_discharge_u = ladder * m.engines as f64;
+        stats.sa_compares = m.engines * m.adc_bits as usize;
+        finalize_cycles(&self.cfg, &mut stats);
+        stats
+    }
+
+    fn statics_for(&self, core: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let m = &self.cfg.mac;
+        let kbits = m.weight_bits as usize - 1;
+        let cell_per = m.rows * kbits * m.engines;
+        let cell = self.fab.cell_flat()[core * cell_per..(core + 1) * cell_per].to_vec();
+        let sa = self.fab.sa_off_flat()[core * m.engines..(core + 1) * m.engines].to_vec();
+        let cap = self.fab.cap_flat()[core * m.engines..(core + 1) * m.engines].to_vec();
+        let step = self.fab.step_flat()[core * m.engines * 8..(core + 1) * m.engines * 8].to_vec();
+        (cell, sa, cap, step)
+    }
+
+    /// Run up to `self.batch` activation vectors in one artifact execution,
+    /// with an explicit noise draw per vector (for equivalence tests).
+    pub fn run_with_draws(
+        &mut self,
+        core: usize,
+        acts: &[Vec<i64>],
+        draws: &[NoiseDraw],
+    ) -> Result<Vec<Vec<f64>>, MapError> {
+        assert!(acts.len() <= self.batch, "chunking is the caller's job");
+        assert_eq!(acts.len(), draws.len());
+        let w = self.weights[core]
+            .as_ref()
+            .ok_or(MapError::Macro(MacroError::NoWeights(core)))?;
+        let m = self.cfg.mac.clone();
+        let kbits = m.weight_bits as usize - 1;
+        let b = self.batch;
+
+        // Marshal inputs (zero-padded to the artifact batch).
+        let mut acts_f = vec![0f32; b * m.rows];
+        let mut zj = vec![0f32; b * m.rows * kbits];
+        let mut zs = vec![0f32; b * m.engines * 8];
+        let mut zc = vec![0f32; b * m.engines * 9];
+        for (i, (a, d)) in acts.iter().zip(draws).enumerate() {
+            for (r, &v) in a.iter().enumerate() {
+                acts_f[i * m.rows + r] = v as f32;
+            }
+            zj[i * m.rows * kbits..(i + 1) * m.rows * kbits].copy_from_slice(&d.z_jit);
+            zs[i * m.engines * 8..(i + 1) * m.engines * 8].copy_from_slice(&d.z_step);
+            zc[i * m.engines * 9..(i + 1) * m.engines * 9].copy_from_slice(&d.z_cmp);
+        }
+        let w_flat = self.w_flat[core].clone().expect("flat weights");
+        let (cell, sa, cap, step) = self.statics_for(core);
+
+        let outs = self
+            .rt
+            .run_f32(
+                &self.artifact.clone(),
+                &[
+                    (&acts_f, &[b, m.rows]),
+                    (&w_flat, &[m.rows, m.engines]),
+                    (&cell, &[m.rows, kbits, m.engines]),
+                    (&sa, &[m.engines]),
+                    (&cap, &[m.engines]),
+                    (&step, &[m.engines, 8]),
+                    (&zj, &[b, m.rows, kbits]),
+                    (&zs, &[b, m.engines, 8]),
+                    (&zc, &[b, m.engines, 9]),
+                ],
+            )
+            .map_err(|e| MapError::Shape(e.to_string()))?;
+        // outs[0] = codes, outs[1] = values, both [b, engines].
+        let values = &outs[1];
+        let mut result = Vec::with_capacity(acts.len());
+        for (i, a) in acts.iter().enumerate() {
+            result.push(
+                values[i * m.engines..(i + 1) * m.engines]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect(),
+            );
+            // Account stats per logical op.
+            let stats = self.op_stats(core, a);
+            self.stats.core_ops += 1;
+            self.stats.total_cycles += stats.total_cycles;
+            self.stats.energy.add(&core_op_energy(&self.cfg, &stats));
+            if self.cfg.enhance.boost {
+                for &dd in golden::mac_folded(&self.cfg, w, a).iter() {
+                    if golden::clips(&self.cfg, dd) {
+                        self.stats.clipped += 1;
+                    }
+                }
+            }
+        }
+        Ok(result)
+    }
+
+    /// Raw codes for one batch with explicit draws (equivalence tests).
+    pub fn codes_with_draws(
+        &mut self,
+        core: usize,
+        acts: &[Vec<i64>],
+        draws: &[NoiseDraw],
+    ) -> Result<Vec<Vec<i32>>, MapError> {
+        let w = self.weights[core]
+            .as_ref()
+            .ok_or(MapError::Macro(MacroError::NoWeights(core)))?
+            .clone();
+        let vals = self.run_with_draws(core, acts, draws)?;
+        // Invert the in-graph reconstruction to recover codes exactly.
+        let s = self.cfg.enhance.dtc_scale();
+        let lsb = self.cfg.mac.adc_lsb_units();
+        Ok(vals
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(e, &v)| {
+                        let corr = if self.cfg.enhance.fold {
+                            (self.cfg.enhance.fold_offset * w.col_sum(e)) as f64
+                        } else {
+                            0.0
+                        };
+                        ((v - corr) * s / lsb - 0.5).round() as i32
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+impl CimBackend for XlaBackend {
+    fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MapError> {
+        let cw = CoreWeights::from_signed(&self.cfg.mac, w).map_err(MacroError::from)?;
+        let mut flat = vec![0f32; self.cfg.mac.rows * self.cfg.mac.engines];
+        for (r, row) in w.iter().enumerate() {
+            for (e, &v) in row.iter().enumerate() {
+                flat[r * self.cfg.mac.engines + e] = v as f32;
+            }
+        }
+        self.weights[core] = Some(cw);
+        self.w_flat[core] = Some(flat);
+        self.stats.weight_loads += 1;
+        Ok(())
+    }
+
+    fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError> {
+        let batch = vec![acts.to_vec()];
+        Ok(self.core_op_batch(core, &batch)?.pop().expect("one result"))
+    }
+
+    fn core_op_batch(&mut self, core: usize, acts: &[Vec<i64>]) -> Result<Vec<Vec<f64>>, MapError> {
+        let mut out = Vec::with_capacity(acts.len());
+        for chunk in acts.chunks(self.batch) {
+            let draws: Vec<NoiseDraw> = chunk
+                .iter()
+                .map(|_| {
+                    if self.cfg.noise.enabled {
+                        NoiseDraw::draw(&self.cfg.mac, &mut self.rng)
+                    } else {
+                        NoiseDraw::zeros(&self.cfg.mac)
+                    }
+                })
+                .collect();
+            out.extend(self.run_with_draws(core, chunk, &draws)?);
+        }
+        Ok(out)
+    }
+
+    fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+}

@@ -1,0 +1,291 @@
+//! Minimal declarative command-line parser (the environment vendors no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! typed extraction with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value_name: Option<&'static str>, // None => boolean flag
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Specification of a subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    /// Name of a trailing positional argument, if the command takes one.
+    pub positional: Option<&'static str>,
+}
+
+/// Parsed arguments for one invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    UnknownCommand(String),
+    UnknownOption(String, String),
+    MissingValue(String),
+    BadValue {
+        opt: String,
+        value: String,
+        expected: &'static str,
+    },
+    HelpRequested(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownCommand(c) => write!(f, "unknown command `{c}` (try `help`)"),
+            CliError::UnknownOption(cmd, o) => write!(f, "unknown option `{o}` for `{cmd}`"),
+            CliError::MissingValue(o) => write!(f, "option `{o}` expects a value"),
+            CliError::BadValue { opt, value, expected } => {
+                write!(f, "option `{opt}`: cannot parse `{value}` as {expected}")
+            }
+            CliError::HelpRequested(text) => write!(f, "{text}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// A full CLI: program name, blurb, and subcommands.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl Cli {
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [options]\n", self.program);
+        let _ = writeln!(s, "COMMANDS:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<14} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nRun `{} <command> --help` for command options.", self.program);
+        s
+    }
+
+    pub fn command_help(&self, cmd: &CmdSpec) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}\n", self.program, cmd.name, cmd.about);
+        let mut usage = format!("USAGE: {} {} [options]", self.program, cmd.name);
+        if let Some(p) = cmd.positional {
+            let _ = write!(usage, " <{p}>");
+        }
+        let _ = writeln!(s, "{usage}\n\nOPTIONS:");
+        for o in &cmd.opts {
+            let lhs = match o.value_name {
+                Some(v) => format!("--{} <{}>", o.name, v),
+                None => format!("--{}", o.name),
+            };
+            let dflt = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {:<28} {}{}", lhs, o.help, dflt);
+        }
+        s
+    }
+
+    /// Parse `argv[1..]`. `help`/`--help`/`-h` produce `HelpRequested` with the
+    /// rendered text so the caller can print it and exit 0.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        if argv.is_empty() {
+            return Err(CliError::HelpRequested(self.help_text()));
+        }
+        let cmd_name = argv[0].as_str();
+        if cmd_name == "help" || cmd_name == "--help" || cmd_name == "-h" {
+            if let Some(sub) = argv.get(1) {
+                if let Some(c) = self.commands.iter().find(|c| c.name == sub.as_str()) {
+                    return Err(CliError::HelpRequested(self.command_help(c)));
+                }
+            }
+            return Err(CliError::HelpRequested(self.help_text()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.to_string()))?;
+
+        let mut args = Args {
+            cmd: cmd.name.to_string(),
+            ..Default::default()
+        };
+        // Pre-fill defaults.
+        for o in &cmd.opts {
+            if let (Some(_), Some(d)) = (o.value_name, o.default) {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::HelpRequested(self.command_help(cmd)));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownOption(cmd.name.into(), tok.clone()))?;
+                match spec.value_name {
+                    None => {
+                        args.flags.insert(name.to_string(), true);
+                    }
+                    Some(_) => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError::MissingValue(name.into()))?
+                            }
+                        };
+                        args.values.insert(name.to_string(), v);
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let raw = self.values.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        raw.parse::<T>().map_err(|_| CliError::BadValue {
+            opt: name.into(),
+            value: raw.clone(),
+            expected: std::any::type_name::<T>(),
+        })
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get_parse(name)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get_parse(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get_parse(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            program: "cimsim",
+            about: "test cli",
+            commands: vec![
+                CmdSpec {
+                    name: "run",
+                    about: "run things",
+                    opts: vec![
+                        OptSpec { name: "steps", value_name: Some("N"), default: Some("10"), help: "step count" },
+                        OptSpec { name: "fast", value_name: None, default: None, help: "go fast" },
+                        OptSpec { name: "label", value_name: Some("S"), default: None, help: "tag" },
+                    ],
+                    positional: Some("input"),
+                },
+                CmdSpec { name: "info", about: "print info", opts: vec![], positional: None },
+            ],
+        }
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let a = cli().parse(&v(&["run"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 10);
+        assert!(!a.flag("fast"));
+
+        let a = cli().parse(&v(&["run", "--steps", "42", "--fast", "file.bin"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 42);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["file.bin".to_string()]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = cli().parse(&v(&["run", "--steps=7", "--label=x"])).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+        assert_eq!(a.get("label"), Some("x"));
+    }
+
+    #[test]
+    fn rejects_unknowns() {
+        assert!(matches!(cli().parse(&v(&["nope"])), Err(CliError::UnknownCommand(_))));
+        assert!(matches!(
+            cli().parse(&v(&["run", "--bogus"])),
+            Err(CliError::UnknownOption(..))
+        ));
+        assert!(matches!(
+            cli().parse(&v(&["run", "--label"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_reports_type() {
+        let a = cli().parse(&v(&["run", "--steps", "zebra"])).unwrap();
+        assert!(matches!(a.get_usize("steps"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(cli().parse(&v(&[])), Err(CliError::HelpRequested(_))));
+        assert!(matches!(cli().parse(&v(&["help"])), Err(CliError::HelpRequested(_))));
+        match cli().parse(&v(&["run", "--help"])) {
+            Err(CliError::HelpRequested(t)) => assert!(t.contains("--steps")),
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+}

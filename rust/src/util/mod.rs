@@ -1,0 +1,9 @@
+//! Foundation utilities built in-repo because the offline build environment
+//! vendors no `rand`/`clap`/`serde`/`rayon`/`proptest` (see DESIGN.md §2).
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+pub mod tomlcfg;

@@ -1,0 +1,171 @@
+//! Markdown / CSV table emission for the experiment harness. Every figure and
+//! table reproduction renders through this module so `EXPERIMENTS.md` and the
+//! bench output share one formatting path.
+
+/// A simple column-oriented table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {} in table `{}`",
+            cells.len(),
+            self.headers.len(),
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// GitHub-flavoured markdown rendering with aligned columns.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// RFC-4180-ish CSV (quotes cells containing commas/quotes/newlines).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write both renderings under `dir/<slug>.{md,csv}` and return the paths.
+    pub fn write_to(&self, dir: &std::path::Path, slug: &str) -> std::io::Result<[std::path::PathBuf; 2]> {
+        std::fs::create_dir_all(dir)?;
+        let md = dir.join(format!("{slug}.md"));
+        let csv = dir.join(format!("{slug}.csv"));
+        std::fs::write(&md, self.to_markdown())?;
+        std::fs::write(&csv, self.to_csv())?;
+        Ok([md, csv])
+    }
+}
+
+/// Format helpers used across the harness so units render consistently.
+pub fn fmt_sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, x)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+pub fn fmt_range(lo: f64, hi: f64, digits: usize) -> String {
+    format!("{}–{}", fmt_sig(lo, digits), fmt_sig(hi, digits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_rendering_aligns() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row_strs(&["alpha", "1"]).row_strs(&["b", "22222"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| alpha | 1     |"));
+        assert!(md.contains("| b     | 22222 |"));
+        // separator row present
+        assert!(md.lines().nth(3).unwrap().starts_with("|--"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["x,y", "quo\"te"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"quo\"\"te\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn sig_digit_formatting() {
+        assert_eq!(fmt_sig(137.54321, 4), "137.5");
+        assert_eq!(fmt_sig(0.0123456, 3), "0.0123");
+        assert_eq!(fmt_sig(95.6, 3), "95.6");
+        assert_eq!(fmt_pct(0.0064), "0.64%");
+        assert_eq!(fmt_range(95.6, 137.5, 4), "95.60–137.5");
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("cimsim_table_test");
+        let mut t = Table::new("T", &["a"]);
+        t.row_strs(&["1"]);
+        let [md, csv] = t.write_to(&dir, "t").unwrap();
+        assert!(std::fs::read_to_string(md).unwrap().contains("### T"));
+        assert!(std::fs::read_to_string(csv).unwrap().starts_with("a\n"));
+    }
+}

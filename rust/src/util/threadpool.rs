@@ -1,0 +1,118 @@
+//! Scoped data-parallel helpers (no `rayon` in the offline environment).
+//!
+//! The workloads here are embarrassingly parallel Monte-Carlo sweeps, so a
+//! simple static chunking over `std::thread::scope` is all that is needed.
+//! Each worker gets its own decorrelated RNG substream from the caller.
+
+/// Number of worker threads to use by default: all cores, capped so the
+/// simulator never oversubscribes small CI machines.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 32)
+}
+
+/// Run `f(chunk_index, start, end)` over `[0, n)` split into `workers`
+/// contiguous chunks, collecting the per-chunk results in order.
+pub fn parallel_chunks<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers == 1 {
+        return vec![f(0, 0, n)];
+    }
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<T>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(workers);
+        for (w, slot) in out.iter_mut().enumerate() {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            handles.push(s.spawn(move || {
+                *slot = Some(f(w, start, end));
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.expect("chunk missing")).collect()
+}
+
+/// Map each index in `[0, n)` to a value in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return out;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (w, piece) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in piece.iter_mut().enumerate() {
+                    *slot = f(w * chunk + j);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let n = 1003;
+        let hits = AtomicUsize::new(0);
+        let parts = parallel_chunks(n, 7, |_, start, end| {
+            hits.fetch_add(end - start, Ordering::SeqCst);
+            (start, end)
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), n);
+        // Contiguous, ordered, non-overlapping.
+        let mut expect = 0;
+        for (s, e) in parts {
+            assert_eq!(s, expect);
+            assert!(e >= s);
+            expect = e;
+        }
+        assert_eq!(expect, n);
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let serial: Vec<usize> = (0..257).map(|i| i * i).collect();
+        let par = parallel_map(257, 5, |i| i * i);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn single_worker_and_empty_are_fine() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(3, 1, |i| i), vec![0, 1, 2]);
+        let parts = parallel_chunks(5, 100, |_, s, e| e - s);
+        assert_eq!(parts.iter().sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn default_workers_sane() {
+        let w = default_workers();
+        assert!(w >= 1 && w <= 32);
+    }
+}

@@ -1,0 +1,287 @@
+//! TOML-subset parser for configuration files (no `serde`/`toml` crates in
+//! the offline environment).
+//!
+//! Supported grammar — everything `cimsim.toml` needs:
+//!
+//! ```toml
+//! # comment
+//! top_level = 1.5
+//! [section]
+//! int = 3            ; i64
+//! float = 2.5e-3     ; f64
+//! flag = true        ; bool
+//! name = "string"    ; quoted string
+//! list = [1, 2, 3]   ; homogeneous number arrays
+//! [section.sub]      ; nested tables via dotted headers
+//! ```
+//!
+//! Values are stored flat under dotted keys (`section.sub.key`) which keeps
+//! extraction trivial and order-independent.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: flat map of dotted keys to values.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated table header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ParseError { line: lineno, msg: "empty table name".into() });
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let (key, rhs) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, msg: "empty key".into() });
+            }
+            let value = parse_value(rhs.trim(), lineno)?;
+            let full = format!("{prefix}{key}");
+            if map.insert(full.clone(), value).is_some() {
+                return Err(ParseError { line: lineno, msg: format!("duplicate key `{full}`") });
+            }
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.i64(key).and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Keys under `section.` (for unknown-key validation).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let pfx = format!("{section}.");
+        self.map
+            .keys()
+            .filter(move |k| k.starts_with(&pfx))
+            .map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str, lineno: usize) -> Result<Value, ParseError> {
+    let err = |msg: String| ParseError { line: lineno, msg };
+    if tok.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = tok.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string".into()));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(body) = tok.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|s| parse_value(s.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    // Number: int if it parses as i64 and contains no float syntax.
+    let looks_float = tok.contains('.') || tok.contains('e') || tok.contains('E');
+    if !looks_float {
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    tok.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| err(format!("cannot parse value `{tok}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_supported_types() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            top = 1
+            [noise]
+            sigma_i = 0.015        # mismatch
+            enabled = true
+            label = "per-cell"
+            weights = [1, 2.5, 3]
+            [noise.sub]
+            deep = -4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.i64("top"), Some(1));
+        assert_eq!(doc.f64("noise.sigma_i"), Some(0.015));
+        assert_eq!(doc.bool("noise.enabled"), Some(true));
+        assert_eq!(doc.str("noise.label"), Some("per-cell"));
+        assert_eq!(doc.i64("noise.sub.deep"), Some(-4));
+        match doc.get("noise.weights").unwrap() {
+            Value::Array(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[1].as_f64(), Some(2.5));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = Doc::parse("a = 3\nb = 3.0\nc = 1e-3\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(doc.f64("c"), Some(1e-3));
+        // Int coerces to f64 on request.
+        assert_eq!(doc.f64("a"), Some(3.0));
+        // Float does not silently become int.
+        assert_eq!(doc.i64("b"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = Doc::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn section_key_listing() {
+        let doc = Doc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let keys: Vec<&str> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+}

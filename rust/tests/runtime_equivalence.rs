@@ -1,0 +1,203 @@
+//! Cross-layer equivalence: the AOT XLA artifacts (L2/L1 compiled) against
+//! the native Rust behavioral model (L3 golden). Requires `make artifacts`
+//! (the Makefile orders this before `cargo test`); tests self-skip when the
+//! artifacts are absent so plain `cargo test` still passes.
+
+use cimsim::cim::noise::NoiseDraw;
+use cimsim::cim::MacroSim;
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::CimBackend;
+use cimsim::runtime::xla_backend::XlaBackend;
+use cimsim::util::rng::{Rng, Xoshiro256};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.toml").exists() {
+        Some(p.to_path_buf())
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_weights(cfg: &Config, seed: u64) -> Vec<Vec<i64>> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..cfg.mac.rows)
+        .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+        .collect()
+}
+
+fn random_acts(cfg: &Config, rng: &mut Xoshiro256) -> Vec<i64> {
+    (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect()
+}
+
+/// Same weights + same noise draws ⇒ identical codes from both backends,
+/// in every enhancement mode (noisy graphs).
+#[test]
+fn xla_and_native_codes_agree_with_shared_noise() {
+    let Some(dir) = artifacts_dir() else { return };
+    for enh in [
+        EnhanceConfig::default(),
+        EnhanceConfig::fold_only(),
+        EnhanceConfig::boost_only(),
+        EnhanceConfig::both(),
+    ] {
+        let mut cfg = Config::default();
+        cfg.enhance = enh;
+        let w = random_weights(&cfg, 42);
+
+        let mut xla = XlaBackend::new(cfg.clone(), &dir).expect("open runtime");
+        xla.load_core(0, &w).unwrap();
+
+        let sim = {
+            let mut s = MacroSim::new(cfg.clone());
+            s.load_core(0, &w).unwrap();
+            s
+        };
+
+        let mut rng = Xoshiro256::seeded(7);
+        let batch: Vec<Vec<i64>> = (0..16).map(|_| random_acts(&cfg, &mut rng)).collect();
+        let draws: Vec<NoiseDraw> =
+            (0..16).map(|_| NoiseDraw::draw(&cfg.mac, &mut rng)).collect();
+
+        let xla_codes = xla.codes_with_draws(0, &batch, &draws).unwrap();
+        let mut mismatches = 0usize;
+        let mut total = 0usize;
+        for (i, acts) in batch.iter().enumerate() {
+            let native = sim.core_op_with_noise(0, acts, &draws[i]).unwrap();
+            for e in 0..cfg.mac.engines {
+                total += 1;
+                if native.codes[e] != xla_codes[i][e] {
+                    mismatches += 1;
+                    // f32 (XLA) vs f64 (native) can flip a comparison that
+                    // lands within float epsilon of a threshold — allow at
+                    // most ±1 code on a tiny fraction of points.
+                    assert!(
+                        (native.codes[e] - xla_codes[i][e]).abs() <= 1,
+                        "mode {}: engine {e} native {} xla {}",
+                        cfg.enhance.label(),
+                        native.codes[e],
+                        xla_codes[i][e]
+                    );
+                }
+            }
+        }
+        assert!(
+            mismatches * 100 <= total,
+            "mode {}: {mismatches}/{total} code mismatches (>1%)",
+            cfg.enhance.label()
+        );
+    }
+}
+
+/// Noise-free artifacts are bit-exact against the golden quantizer.
+#[test]
+fn ideal_artifacts_match_golden_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    for enh in [EnhanceConfig::default(), EnhanceConfig::both()] {
+        let mut cfg = Config::default();
+        cfg.enhance = enh;
+        cfg.noise.enabled = false;
+        let w = random_weights(&cfg, 3);
+
+        let mut xla = XlaBackend::new(cfg.clone(), &dir).expect("open runtime");
+        xla.load_core(0, &w).unwrap();
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(0, &w).unwrap();
+
+        let mut rng = Xoshiro256::seeded(11);
+        let batch: Vec<Vec<i64>> = (0..16).map(|_| random_acts(&cfg, &mut rng)).collect();
+        let draws: Vec<NoiseDraw> = (0..16).map(|_| NoiseDraw::zeros(&cfg.mac)).collect();
+        let codes = xla.codes_with_draws(0, &batch, &draws).unwrap();
+        for (i, acts) in batch.iter().enumerate() {
+            let ideal = sim.ideal_codes(0, acts).unwrap();
+            assert_eq!(codes[i], ideal, "mode {}", cfg.enhance.label());
+        }
+    }
+}
+
+/// The executor produces the same layer outputs on both backends
+/// (noise-free), proving the full tiling path composes over XLA.
+#[test]
+fn executor_layer_matches_across_backends() {
+    let Some(dir) = artifacts_dir() else { return };
+    use cimsim::mapping::executor::CimLinear;
+    use cimsim::mapping::DigitalBackend;
+    use cimsim::nn::tensor::Tensor;
+
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+
+    let (k, n) = (100, 20);
+    let mut rng = Xoshiro256::seeded(5);
+    let w = Tensor::from_vec(
+        &[k, n],
+        (0..k * n).map(|_| rng.next_f32() - 0.5).collect(),
+    );
+    let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| (0..k).map(|_| rng.next_f32()).collect()).collect();
+
+    let mut xla = XlaBackend::new(cfg.clone(), &dir).expect("open runtime");
+    let mut dig = DigitalBackend::new(cfg.clone());
+    let a = lin.run_batch(&mut xla, &xs).unwrap();
+    let b = lin.run_batch(&mut dig, &xs).unwrap();
+    let step_units = cfg.mac.adc_lsb_units() / cfg.enhance.dtc_scale();
+    let bound = lin.n_row_tiles() as f32 * (step_units as f32 / 2.0)
+        * lin.a_params.scale * lin.w_params.scale + 1e-3;
+    for (ra, rb) in a.iter().zip(&b) {
+        for (va, vb) in ra.iter().zip(rb) {
+            assert!((va - vb).abs() <= bound, "{va} vs {vb} (bound {bound})");
+        }
+    }
+    assert!(xla.stats().core_ops > 0);
+    assert!(xla.stats().energy_fj() > 0.0);
+}
+
+/// The MLP artifact loads, runs, and returns finite logits of the right
+/// shape through the raw runtime interface.
+#[test]
+fn mlp_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = cimsim::runtime::Runtime::open(&dir).unwrap();
+    let meta = rt.manifest.get("mlp_fwd_b16").expect("mlp artifact").clone();
+    assert_eq!(meta.dims, vec![144, 32, 10]);
+    let b = meta.batch;
+    let mut rng = Xoshiro256::seeded(1);
+    let rand = |n: usize, rng: &mut Xoshiro256| -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32()).collect()
+    };
+    let x = rand(b * 144, &mut rng);
+    let w1: Vec<f32> = (0..144 * 32).map(|_| rng.next_range_i64(-7, 7) as f32).collect();
+    let b1 = vec![0.1f32; 32];
+    let w2: Vec<f32> = (0..32 * 10).map(|_| rng.next_range_i64(-7, 7) as f32).collect();
+    let b2 = vec![0.0f32; 10];
+    let scales = vec![1.0 / 15.0, 0.05, 4.0, 0.05];
+    let cell = vec![0f32; 4 * 64 * 3 * 16];
+    let sa = vec![0f32; 4 * 16];
+    let cap = vec![0f32; 4 * 16];
+    let step = vec![0f32; 4 * 16 * 8];
+    let z = vec![0f32; b * meta.noise_len];
+    let outs = rt
+        .run_f32(
+            "mlp_fwd_b16",
+            &[
+                (&x, &[b, 144]),
+                (&w1, &[144, 32]),
+                (&b1, &[32]),
+                (&w2, &[32, 10]),
+                (&b2, &[10]),
+                (&scales, &[4]),
+                (&cell, &[4, 64, 3, 16]),
+                (&sa, &[4, 16]),
+                (&cap, &[4, 16]),
+                (&step, &[4, 16, 8]),
+                (&z, &[b, meta.noise_len]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].len(), b * 10);
+    assert!(outs[0].iter().all(|v| v.is_finite()));
+}
