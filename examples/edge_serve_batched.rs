@@ -1,13 +1,14 @@
-//! Edge-serving scenario: a trained quantized MLP served over TCP with
-//! dynamic batching on the simulated macro; a multi-threaded client drives
-//! load and the server reports latency/throughput/energy.
+//! Batched multi-macro serving: the same edge MLP as `edge_serve`, but on
+//! the sharded pipeline — weights placed ONCE on a pool of simulated macros,
+//! queued requests coalesced into single pooled calls that fan out across
+//! worker threads. Compare the reported occupancy/throughput with the
+//! single-backend `edge_serve` example.
 //!
-//! Run: `cargo run --release --example edge_serve [requests]`
+//! Run: `cargo run --release --example edge_serve_batched [requests]`
 
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::{argmax, MlpDeployment};
-use cimsim::coordinator::{serve, Client, ServeConfig};
-use cimsim::mapping::NativeBackend;
+use cimsim::coordinator::{serve_pipeline, Client, ServeConfig};
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::{train, Mlp};
 
@@ -26,18 +27,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
     println!("model trained (float acc {:.1}%), quantized to 4b:4b", acc * 100.0);
 
-    // Serve on the simulated macro with dynamic batching.
-    let backend = Box::new(NativeBackend::new(cfg.clone()));
-    let handle = serve(
-        dep,
-        backend,
-        ServeConfig {
-            max_batch: 16,
-            batch_timeout: std::time::Duration::from_millis(1),
-            ..ServeConfig::default()
-        },
-    )?;
-    println!("serving on {} (max batch 16, 1 ms window)", handle.addr);
+    // Serve on the macro pool: tiles resident, batch fan-out across workers.
+    let serve_cfg = ServeConfig {
+        max_batch: 32,
+        batch_timeout: std::time::Duration::from_millis(1),
+        workers: 0, // auto-size to the machine
+    };
+    let handle = serve_pipeline(dep, cfg.clone(), serve_cfg)?;
+    println!(
+        "serving on {} (pooled pipeline, max batch 32, 1 ms window)",
+        handle.addr
+    );
 
     // 8 concurrent clients.
     let addr = handle.addr;
@@ -63,10 +63,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
     let metrics = handle.shutdown();
     println!(
-        "accuracy on CIM under load: {:.1}% over {} requests",
+        "accuracy on the pooled CIM pipeline under load: {:.1}% over {} requests",
         100.0 * correct as f64 / (per_client * 8) as f64,
         per_client * 8
     );
-    println!("{}", metrics.report(cfg.mac.clock_mhz * 1e6).render());
+    let report = metrics.report(cfg.mac.clock_mhz * 1e6);
+    println!("{}", report.render());
+    println!(
+        "batch occupancy: mean {:.1}, peak {} (occupancy > 1 ⇒ requests amortized one pooled call)",
+        report.mean_batch, report.peak_batch
+    );
     Ok(())
 }

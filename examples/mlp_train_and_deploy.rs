@@ -106,6 +106,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("digital backend check: {:.1}% (must equal exact digital)\n", dacc * 100.0);
 
     // ---- 4. XLA artifact path (compiled L2/L1), if available ----
+    run_xla_path(&cfg, &dep, &xs, &test_set);
+    Ok(())
+}
+
+#[cfg(feature = "xla-runtime")]
+fn run_xla_path(
+    cfg: &Config,
+    dep: &MlpDeployment,
+    xs: &[Vec<f32>],
+    test_set: &[(Vec<f32>, usize)],
+) {
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.toml").exists() {
         println!("== XLA (AOT Pallas kernel) path, fold+boost ==");
@@ -115,7 +126,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             Ok(mut be) => {
                 let sample: Vec<Vec<f32>> = xs.iter().take(64).cloned().collect();
                 let t0 = Instant::now();
-                let logits = dep.run_native(&mut be, &sample)?;
+                let logits = dep.run_native(&mut be, &sample).expect("xla inference");
                 let acc = test_set
                     .iter()
                     .take(64)
@@ -135,5 +146,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     } else {
         println!("artifacts/ missing — run `make artifacts` for the XLA path");
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn run_xla_path(
+    _cfg: &Config,
+    _dep: &MlpDeployment,
+    _xs: &[Vec<f32>],
+    _test_set: &[(Vec<f32>, usize)],
+) {
+    println!("XLA path skipped: built without the `xla-runtime` feature");
 }

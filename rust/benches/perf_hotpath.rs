@@ -7,7 +7,7 @@ use cimsim::cim::noise::NoiseDraw;
 use cimsim::cim::MacroSim;
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
-use cimsim::mapping::{CimBackend, NativeBackend};
+use cimsim::mapping::NativeBackend;
 use cimsim::nn::tensor::Tensor;
 use cimsim::util::rng::{Rng, Xoshiro256};
 
@@ -55,19 +55,44 @@ fn main() {
     });
     println!("  -> {}", m.throughput_line(64.0, "inferences"));
 
-    // --- XLA artifact path ---
-    let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.toml").exists() {
-        match cimsim::runtime::xla_backend::XlaBackend::new(cfg.clone(), dir) {
-            Ok(mut be) => {
-                be.load_core(0, &w).unwrap();
-                let batch: Vec<Vec<i64>> = (0..16).map(|_| acts.clone()).collect();
-                let m = b.run_slow("xla/core_op_batch b16", 10, || {
-                    black_box(be.core_op_batch(0, &batch).unwrap());
-                });
-                println!("  -> {}", m.throughput_line(16.0 * 2.0 * macs_per_op, "simulated ops"));
-            }
-            Err(e) => println!("xla path skipped: {e}"),
-        }
+    // --- pooled batch pipeline (see benches/pipeline_throughput.rs for the
+    //     full single-vs-pooled comparison + JSON row) ---
+    {
+        use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin.clone(), &mut pool).unwrap();
+        let exec = BatchExecutor::new(0, 7);
+        let m = b.run_slow("pipeline/layer 144x32 b64 pooled", 10, || {
+            black_box(exec.run(&pool, &placed, &xs).unwrap());
+        });
+        println!("  -> {}", m.throughput_line(64.0, "inferences"));
     }
+
+    // --- XLA artifact path ---
+    bench_xla(&b, &cfg, &w, &acts, macs_per_op);
+}
+
+#[cfg(feature = "xla-runtime")]
+fn bench_xla(b: &Bench, cfg: &Config, w: &[Vec<i64>], acts: &[i64], macs_per_op: f64) {
+    use cimsim::mapping::CimBackend;
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.toml").exists() {
+        return;
+    }
+    match cimsim::runtime::xla_backend::XlaBackend::new(cfg.clone(), dir) {
+        Ok(mut be) => {
+            be.load_core(0, w).unwrap();
+            let batch: Vec<Vec<i64>> = (0..16).map(|_| acts.to_vec()).collect();
+            let m = b.run_slow("xla/core_op_batch b16", 10, || {
+                black_box(be.core_op_batch(0, &batch).unwrap());
+            });
+            println!("  -> {}", m.throughput_line(16.0 * 2.0 * macs_per_op, "simulated ops"));
+        }
+        Err(e) => println!("xla path skipped: {e}"),
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn bench_xla(_b: &Bench, _cfg: &Config, _w: &[Vec<i64>], _acts: &[i64], _macs_per_op: f64) {
+    println!("xla path skipped: built without the `xla-runtime` feature");
 }

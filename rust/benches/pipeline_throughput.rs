@@ -1,0 +1,82 @@
+//! Single-macro per-request execution vs the batched, sharded pipeline.
+//!
+//! The per-request baseline is the old serve path: every request runs the
+//! tiled executor on one `NativeBackend`, reloading the layer's tiles onto
+//! the 4 cores. The pooled path places every tile once on a `MacroPool` and
+//! fans the whole batch across worker threads with zero per-op allocation.
+//!
+//! Emits one comparable JSON row per batch size and writes the headline row
+//! (largest batch) to `BENCH_pipeline.json` in the working directory.
+//! Run: `cargo bench --bench pipeline_throughput` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{black_box, json_row, Bench, JsonField};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::NativeBackend;
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use cimsim::util::rng::{Rng, Xoshiro256};
+use cimsim::util::threadpool::default_workers;
+
+fn main() {
+    let b = Bench::default();
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+
+    // A 144×32 layer (the edge MLP's first layer): 3 row × 2 col = 6 tiles.
+    let (k, n) = (144usize, 32usize);
+    let mut rng = Xoshiro256::seeded(11);
+    let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+    let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+    let workers = default_workers();
+
+    let mut pool = MacroPool::new(cfg.clone());
+    let placed = PlacedLinear::place(lin.clone(), &mut pool).unwrap();
+    let exec = BatchExecutor::new(workers, 5);
+
+    let mut headline: Option<String> = None;
+    for batch in [1usize, 8, 32, 64] {
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|i| (0..k).map(|j| ((i * 7 + j * 3) % 17) as f32 / 17.0).collect())
+            .collect();
+
+        // Per-request: one request at a time on a single macro (tile reloads
+        // every request — the pre-pipeline serve loop).
+        let mut nat = NativeBackend::new(cfg.clone());
+        let seq = b.run_slow(&format!("per-request 144x32 b{batch}"), 10, || {
+            for x in &xs {
+                black_box(lin.run_batch(&mut nat, std::slice::from_ref(x)).unwrap());
+            }
+        });
+
+        // Pooled: one batched pipeline call across all workers.
+        let pooled = b.run_slow(&format!("pooled      144x32 b{batch} w{workers}"), 10, || {
+            black_box(exec.run(&pool, &placed, &xs).unwrap());
+        });
+
+        let speedup = seq.mean_s / pooled.mean_s;
+        let row = json_row(&[
+            JsonField::Str("bench", "pipeline_throughput"),
+            JsonField::Str("layer", "144x32"),
+            JsonField::Int("batch", batch as i64),
+            JsonField::Int("workers", workers as i64),
+            JsonField::Num("per_request_ms", seq.mean_s * 1e3),
+            JsonField::Num("pooled_ms", pooled.mean_s * 1e3),
+            JsonField::Num("req_per_s_pooled", batch as f64 / pooled.mean_s),
+            JsonField::Num("speedup", speedup),
+            JsonField::Str("source", "measured"),
+        ]);
+        println!("{row}");
+        if batch >= 8 {
+            headline = Some(row);
+        }
+    }
+
+    if let Some(row) = headline {
+        let path = "BENCH_pipeline.json";
+        match std::fs::write(path, format!("{row}\n")) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}

@@ -184,6 +184,34 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One field of a [`json_row`] (the environment vendors no `serde`).
+pub enum JsonField<'a> {
+    Str(&'a str, &'a str),
+    Int(&'a str, i64),
+    Num(&'a str, f64),
+}
+
+/// Render a flat JSON object, escaping string values. Benchmarks emit one
+/// row per comparison so results diff cleanly across machines/commits.
+pub fn json_row(fields: &[JsonField]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let body: Vec<String> = fields
+        .iter()
+        .map(|f| match f {
+            JsonField::Str(k, v) => format!("\"{}\": \"{}\"", esc(k), esc(v)),
+            JsonField::Int(k, v) => format!("\"{}\": {v}", esc(k)),
+            JsonField::Num(k, v) => {
+                if v.is_finite() {
+                    format!("\"{}\": {v:.6}", esc(k))
+                } else {
+                    format!("\"{}\": null", esc(k))
+                }
+            }
+        })
+        .collect();
+    format!("{{{}}}", body.join(", "))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +247,21 @@ mod tests {
         assert_eq!(fmt_duration(2e-3), "2.000 ms");
         assert_eq!(fmt_duration(2e-6), "2.000 µs");
         assert_eq!(fmt_duration(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn json_row_renders_and_escapes() {
+        let row = json_row(&[
+            JsonField::Str("bench", "pipeline \"pooled\""),
+            JsonField::Int("batch", 64),
+            JsonField::Num("speedup", 3.25),
+            JsonField::Num("bad", f64::NAN),
+        ]);
+        assert!(row.starts_with('{') && row.ends_with('}'));
+        assert!(row.contains("\"bench\": \"pipeline \\\"pooled\\\"\""));
+        assert!(row.contains("\"batch\": 64"));
+        assert!(row.contains("\"speedup\": 3.250000"));
+        assert!(row.contains("\"bad\": null"));
     }
 
     #[test]

@@ -37,13 +37,29 @@ pub fn readout(
     fab: &Fabrication,
     draw: &NoiseDraw,
 ) -> Readout {
+    let mut codes = Vec::with_capacity(cfg.mac.engines);
+    let (adc_discharge_u, sa_compares) = readout_into(cfg, core, mac, fab, draw, &mut codes);
+    Readout { codes, adc_discharge_u, sa_compares }
+}
+
+/// Buffer-reusing form of [`readout`]: clears and refills `codes`, returning
+/// `(adc_discharge_u, sa_compares)`. Identical arithmetic to the allocating
+/// form — the pipeline hot path uses it to run allocation-free per op.
+pub fn readout_into(
+    cfg: &Config,
+    core: usize,
+    mac: &MacPhase,
+    fab: &Fabrication,
+    draw: &NoiseDraw,
+    codes: &mut Vec<i32>,
+) -> (f64, usize) {
     let m = &cfg.mac;
     let bits = m.adc_bits as usize;
     let vpp = m.vpp_units();
     let fs = m.adc_fullscale_units();
     let noise_on = cfg.noise.enabled;
 
-    let mut codes = Vec::with_capacity(m.engines);
+    codes.clear();
     let mut total_dis = 0.0;
     let mut compares = 0;
 
@@ -96,7 +112,7 @@ pub fn readout(
         codes.push(est_half.div_euclid(2) as i32);
     }
 
-    Readout { codes, adc_discharge_u: total_dis, sa_compares: compares }
+    (total_dis, compares)
 }
 
 /// Ideal (noise-free, infinite-precision comparator) code for a differential

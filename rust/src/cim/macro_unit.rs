@@ -1,17 +1,17 @@
 //! The 16 Kb CIM macro facade: 4 cores × 16 engines × 64 rows, weight
 //! loading, and the full MAC + readout operation (native backend).
 
-use crate::cim::adc::{readout, Readout};
-use crate::cim::engine::{mac_phase, OpStats};
+use crate::cim::adc::readout_into;
+use crate::cim::engine::{mac_phase_into, MacPhase, OpStats};
 use crate::cim::golden;
 use crate::cim::noise::{Fabrication, NoiseDraw};
 use crate::cim::timing::finalize_cycles;
 use crate::cim::weights::{CoreWeights, WeightError};
-use crate::config::Config;
+use crate::config::{Config, MacroConfig};
 use crate::util::rng::Rng;
 
 /// Result of one core operation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct CoreOpResult {
     /// Raw signed ADC codes per engine.
     pub codes: Vec<i32>,
@@ -19,6 +19,23 @@ pub struct CoreOpResult {
     /// fold correction.
     pub values: Vec<f64>,
     pub stats: OpStats,
+}
+
+/// Reusable per-worker buffers for the allocation-free op path
+/// ([`MacroSim::core_op_into`]): the dynamic noise draw plus the MAC-phase
+/// line-drop vectors. One `OpScratch` per thread; never shared across
+/// differently-shaped configurations.
+#[derive(Clone, Debug)]
+pub struct OpScratch {
+    /// The per-op dynamic noise draw (redrawn in place when noise is on).
+    pub draw: NoiseDraw,
+    phase: MacPhase,
+}
+
+impl OpScratch {
+    pub fn new(mac: &MacroConfig) -> Self {
+        Self { draw: NoiseDraw::zeros(mac), phase: MacPhase::default() }
+    }
 }
 
 /// A simulated macro instance: configuration + one static fabrication draw
@@ -33,6 +50,8 @@ pub struct MacroSim {
 pub enum MacroError {
     NoWeights(usize),
     BadCore(usize),
+    /// A pool-wide slot id (`shard × cores + core`) with no resident shard.
+    BadSlot(usize),
     Weights(WeightError),
     BadAct { row: usize, value: i64 },
 }
@@ -42,6 +61,9 @@ impl std::fmt::Display for MacroError {
         match self {
             MacroError::NoWeights(c) => write!(f, "core {c} has no weights loaded"),
             MacroError::BadCore(c) => write!(f, "core index {c} out of range"),
+            MacroError::BadSlot(s) => {
+                write!(f, "pool slot {s} is beyond the resident shards")
+            }
             MacroError::Weights(e) => write!(f, "{e}"),
             MacroError::BadAct { row, value } => {
                 write!(f, "activation {value} at row {row} out of range")
@@ -100,6 +122,33 @@ impl MacroSim {
         Ok(())
     }
 
+    /// The single op implementation both public forms route through: MAC
+    /// phase into `phase`, readout into `out.codes`, stats + reconstruction
+    /// into `out`. No allocation when the buffers already have capacity.
+    fn core_op_draw_into(
+        &self,
+        core: usize,
+        acts: &[i64],
+        draw: &NoiseDraw,
+        phase: &mut MacPhase,
+        out: &mut CoreOpResult,
+    ) -> Result<(), MacroError> {
+        let w = self.core_weights(core)?;
+        self.check_acts(acts)?;
+        mac_phase_into(&self.cfg, core, w, acts, &self.fab, draw, phase);
+        let (adc_discharge_u, sa_compares) =
+            readout_into(&self.cfg, core, phase, &self.fab, draw, &mut out.codes);
+        out.stats = phase.stats.clone();
+        out.stats.adc_discharge_u = adc_discharge_u;
+        out.stats.sa_compares = sa_compares;
+        finalize_cycles(&self.cfg, &mut out.stats);
+        out.values.clear();
+        for (e, &c) in out.codes.iter().enumerate() {
+            out.values.push(golden::reconstruct(&self.cfg, w, e, c));
+        }
+        Ok(())
+    }
+
     /// One core operation with an explicit noise draw (the form shared with
     /// the XLA backend — identical draws give identical results).
     pub fn core_op_with_noise(
@@ -108,21 +157,28 @@ impl MacroSim {
         acts: &[i64],
         draw: &NoiseDraw,
     ) -> Result<CoreOpResult, MacroError> {
-        let w = self.core_weights(core)?;
-        self.check_acts(acts)?;
-        let mac = mac_phase(&self.cfg, core, w, acts, &self.fab, draw);
-        let Readout { codes, adc_discharge_u, sa_compares } =
-            readout(&self.cfg, core, &mac, &self.fab, draw);
-        let mut stats = mac.stats.clone();
-        stats.adc_discharge_u = adc_discharge_u;
-        stats.sa_compares = sa_compares;
-        finalize_cycles(&self.cfg, &mut stats);
-        let values = codes
-            .iter()
-            .enumerate()
-            .map(|(e, &c)| golden::reconstruct(&self.cfg, w, e, c))
-            .collect();
-        Ok(CoreOpResult { codes, values, stats })
+        let mut phase = MacPhase::default();
+        let mut out = CoreOpResult::default();
+        self.core_op_draw_into(core, acts, draw, &mut phase, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-allocation hot path for the batched pipeline: redraws the
+    /// scratch's noise in place (when noise is on), reuses its MAC-phase
+    /// buffers, and writes codes/values/stats into `out`. Identical results
+    /// to [`MacroSim::core_op`] given the same RNG state.
+    pub fn core_op_into<R: Rng>(
+        &self,
+        core: usize,
+        acts: &[i64],
+        rng: &mut R,
+        scratch: &mut OpScratch,
+        out: &mut CoreOpResult,
+    ) -> Result<(), MacroError> {
+        if self.cfg.noise.enabled {
+            scratch.draw.redraw(rng);
+        }
+        self.core_op_draw_into(core, acts, &scratch.draw, &mut scratch.phase, out)
     }
 
     /// One core operation, drawing fresh dynamic noise from `rng`.
@@ -138,23 +194,6 @@ impl MacroSim {
             NoiseDraw::zeros(&self.cfg.mac)
         };
         self.core_op_with_noise(core, acts, &draw)
-    }
-
-    /// Hot-path variant: refills `scratch` in place instead of allocating a
-    /// fresh draw (the serving executor's inner loop).
-    pub fn core_op_scratch<R: Rng>(
-        &self,
-        core: usize,
-        acts: &[i64],
-        rng: &mut R,
-        scratch: &mut NoiseDraw,
-    ) -> Result<CoreOpResult, MacroError> {
-        if self.cfg.noise.enabled {
-            scratch.redraw(rng);
-            self.core_op_with_noise(core, acts, scratch)
-        } else {
-            self.core_op_with_noise(core, acts, &NoiseDraw::zeros(&self.cfg.mac))
-        }
     }
 
     /// Full macro operation: every loaded core fires in parallel on its own

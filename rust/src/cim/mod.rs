@@ -13,7 +13,7 @@ pub mod timing;
 pub mod weights;
 
 pub use engine::OpStats;
-pub use macro_unit::{CoreOpResult, MacroError, MacroSim};
+pub use macro_unit::{CoreOpResult, MacroError, MacroSim, OpScratch};
 pub use noise::{Fabrication, NoiseDraw};
 pub use weights::CoreWeights;
 

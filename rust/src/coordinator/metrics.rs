@@ -8,6 +8,9 @@ pub struct Metrics {
     latencies_us: Vec<f64>,
     pub requests: u64,
     pub batches: u64,
+    /// Largest batch coalesced by the dynamic batcher — occupancy > 1 means
+    /// the batched serve loop actually amortized work across requests.
+    pub peak_batch: u64,
     pub core_ops: u64,
     pub energy_fj: f64,
     pub device_cycles: u64,
@@ -18,7 +21,9 @@ pub struct Metrics {
 pub struct MetricsReport {
     pub requests: u64,
     pub batches: u64,
+    /// Mean batch occupancy (requests per coalesced batch).
     pub mean_batch: f64,
+    pub peak_batch: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -31,6 +36,7 @@ impl Metrics {
     pub fn record_batch(&mut self, batch_size: usize, latency: Duration) {
         self.batches += 1;
         self.requests += batch_size as u64;
+        self.peak_batch = self.peak_batch.max(batch_size as u64);
         for _ in 0..batch_size {
             self.latencies_us.push(latency.as_secs_f64() * 1e6);
         }
@@ -50,6 +56,7 @@ impl Metrics {
             requests: self.requests,
             batches: self.batches,
             mean_batch: self.requests as f64 / self.batches.max(1) as f64,
+            peak_batch: self.peak_batch,
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
@@ -63,11 +70,12 @@ impl Metrics {
 impl MetricsReport {
     pub fn render(&self) -> String {
         format!(
-            "requests {}  batches {} (mean {:.1})  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  \
-             throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
+            "requests {}  batches {} (mean {:.1}, peak {})  p50 {:.2} ms  p95 {:.2} ms  \
+             p99 {:.2} ms  throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
             self.requests,
             self.batches,
             self.mean_batch,
+            self.peak_batch,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
@@ -107,5 +115,6 @@ mod tests {
         assert_eq!(r.requests, 24);
         assert_eq!(r.batches, 2);
         assert!((r.mean_batch - 12.0).abs() < 1e-12);
+        assert_eq!(r.peak_batch, 16);
     }
 }

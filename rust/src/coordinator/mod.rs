@@ -7,4 +7,7 @@ pub mod server;
 
 pub use deployment::MlpDeployment;
 pub use metrics::{Metrics, MetricsReport};
-pub use server::{serve, Client, ServeConfig, ServerHandle};
+pub use server::{
+    serve, serve_engine, serve_pipeline, BackendEngine, Client, InferenceEngine, ServeConfig,
+    ServerHandle,
+};

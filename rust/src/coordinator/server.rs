@@ -1,15 +1,23 @@
 //! Edge-inference TCP server: accepts float feature vectors, batches them
 //! dynamically (size- or timeout-triggered), runs the deployed quantized
-//! MLP on the CIM backend, and streams logits back.
+//! MLP on an [`InferenceEngine`], and streams logits back.
+//!
+//! Two engines ship: [`BackendEngine`] (the classic single-macro
+//! `CimBackend` path, via [`serve`]) and the pooled batched pipeline
+//! (`pipeline::PipelineDeployment`, via [`serve_pipeline`]), which coalesces
+//! up to `ServeConfig::max_batch` queued jobs into ONE pipeline call that
+//! fans the batch across worker threads.
 //!
 //! Wire protocol (little-endian):
 //!   request  = u32 magic (0xC1A0_0001) | u32 n | n × f32
 //!   response = u32 magic (0xC1A0_0002) | u32 n | n × f32
 //! One request per round-trip per connection; connections are persistent.
 
+use crate::config::Config;
 use crate::coordinator::deployment::MlpDeployment;
 use crate::coordinator::metrics::Metrics;
-use crate::mapping::CimBackend;
+use crate::mapping::{CimBackend, MapError};
+use crate::pipeline::PipelineDeployment;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,11 +32,65 @@ pub const RESP_MAGIC: u32 = 0xC1A0_0002;
 pub struct ServeConfig {
     pub max_batch: usize,
     pub batch_timeout: Duration,
+    /// Worker threads for the batched pipeline engine (0 = auto). Ignored by
+    /// the single-backend engine.
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 16, batch_timeout: Duration::from_millis(2) }
+        Self { max_batch: 16, batch_timeout: Duration::from_millis(2), workers: 0 }
+    }
+}
+
+/// A batch-inference engine the serve loop drives: one call per coalesced
+/// batch, plus cumulative device counters the loop diffs for metrics.
+pub trait InferenceEngine: Send {
+    fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError>;
+    fn core_ops(&self) -> u64;
+    fn energy_fj(&self) -> f64;
+    fn device_cycles(&self) -> u64;
+}
+
+/// The classic path: a quantized MLP on a single `CimBackend`.
+pub struct BackendEngine {
+    pub dep: MlpDeployment,
+    pub backend: Box<dyn CimBackend + Send>,
+}
+
+impl InferenceEngine for BackendEngine {
+    fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.dep.run_native(&mut *self.backend, xs)
+    }
+
+    fn core_ops(&self) -> u64 {
+        self.backend.stats().core_ops
+    }
+
+    fn energy_fj(&self) -> f64 {
+        self.backend.stats().energy_fj()
+    }
+
+    fn device_cycles(&self) -> u64 {
+        self.backend.stats().total_cycles
+    }
+}
+
+impl InferenceEngine for PipelineDeployment {
+    fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.run_batch(xs)
+    }
+
+    fn core_ops(&self) -> u64 {
+        self.stats().core_ops
+    }
+
+    fn energy_fj(&self) -> f64 {
+        self.stats().energy_fj()
+    }
+
+    fn device_cycles(&self) -> u64 {
+        self.stats().total_cycles
     }
 }
 
@@ -54,11 +116,32 @@ impl ServerHandle {
     }
 }
 
-/// Start serving on an ephemeral local port. The backend and deployment move
-/// into the inference thread.
+/// Start serving on an ephemeral local port with the classic single-backend
+/// engine. The backend and deployment move into the inference thread.
 pub fn serve(
     deployment: MlpDeployment,
-    mut backend: Box<dyn CimBackend + Send>,
+    backend: Box<dyn CimBackend + Send>,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    serve_engine(Box::new(BackendEngine { dep: deployment, backend }), cfg)
+}
+
+/// Batched pipeline serving: builds a `PipelineDeployment` (weights placed
+/// once on a macro pool) and coalesces queued jobs — up to
+/// `ServeConfig::max_batch` per window — into one pooled pipeline call.
+pub fn serve_pipeline(
+    deployment: MlpDeployment,
+    sim_cfg: Config,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    let engine =
+        PipelineDeployment::new(deployment, sim_cfg, cfg.workers).map_err(std::io::Error::other)?;
+    serve_engine(Box::new(engine), cfg)
+}
+
+/// Start serving on an ephemeral local port with any [`InferenceEngine`].
+pub fn serve_engine(
+    mut engine: Box<dyn InferenceEngine>,
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
@@ -68,8 +151,6 @@ pub fn serve(
 
     // Inference thread: dynamic batcher + device.
     let stop_inf = stop.clone();
-    let clock_hz = backend.config().mac.clock_mhz * 1e6;
-    let _ = clock_hz;
     let inference = std::thread::spawn(move || {
         let mut metrics = Metrics::default();
         let t_start = Instant::now();
@@ -83,26 +164,34 @@ pub fn serve(
             }
             let t0 = Instant::now();
             let inputs: Vec<Vec<f32>> = batch.iter().map(|j| j.input.clone()).collect();
-            let ops_before = backend.stats().core_ops;
-            let energy_before = backend.stats().energy_fj();
-            let cycles_before = backend.stats().total_cycles;
-            match deployment.run_native(&mut *backend, &inputs) {
+            let ops_before = engine.core_ops();
+            let energy_before = engine.energy_fj();
+            let cycles_before = engine.device_cycles();
+            match engine.infer_batch(&inputs) {
                 Ok(logits) => {
                     for (job, row) in batch.iter().zip(logits) {
                         let _ = job.reply.send(row);
                     }
                 }
                 Err(e) => {
-                    eprintln!("inference error: {e}");
+                    // A single malformed input must not poison the whole
+                    // coalesced batch: retry each job alone so only the
+                    // offending request gets an empty reply.
+                    eprintln!("batch inference error: {e}; retrying jobs individually");
                     for job in &batch {
-                        let _ = job.reply.send(vec![]);
+                        let row = engine
+                            .infer_batch(std::slice::from_ref(&job.input))
+                            .ok()
+                            .and_then(|mut rows| rows.pop())
+                            .unwrap_or_default();
+                        let _ = job.reply.send(row);
                     }
                 }
             }
             metrics.record_batch(batch.len(), t0.elapsed());
-            metrics.core_ops += backend.stats().core_ops - ops_before;
-            metrics.energy_fj += backend.stats().energy_fj() - energy_before;
-            metrics.device_cycles += backend.stats().total_cycles - cycles_before;
+            metrics.core_ops += engine.core_ops() - ops_before;
+            metrics.energy_fj += engine.energy_fj() - energy_before;
+            metrics.device_cycles += engine.device_cycles() - cycles_before;
         }
         metrics.wall = t_start.elapsed();
         metrics
@@ -236,7 +325,7 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::EnhanceConfig;
     use crate::coordinator::deployment::argmax;
     use crate::mapping::DigitalBackend;
     use crate::nn::dataset::BlobDataset;
@@ -285,5 +374,45 @@ mod tests {
         assert!(metrics.requests >= 21, "requests {}", metrics.requests);
         let report = metrics.report(200e6);
         assert!(report.throughput_rps > 0.0);
+    }
+
+    /// The pooled pipeline front-end answers the wire protocol with the same
+    /// logits as a direct (noise-free) pipeline call.
+    #[test]
+    fn pipeline_serve_roundtrip() {
+        let mut d = BlobDataset::new(12, 0.05, 8);
+        let data: Vec<(Vec<f32>, usize)> = d
+            .batch(150)
+            .into_iter()
+            .map(|s| (s.image.data, s.label))
+            .collect();
+        let mut mlp = Mlp::new(&[144, 32, 10], 2);
+        train(&mut mlp, &data, 4, 0.05, 3);
+        let cal: Vec<Vec<f32>> = data.iter().take(30).map(|(x, _)| x.clone()).collect();
+        let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let expected = {
+            let mut pipe =
+                crate::pipeline::PipelineDeployment::new(dep.clone(), cfg.clone(), 2).unwrap();
+            pipe.run_batch(&[data[0].0.clone()]).unwrap()
+        };
+
+        let handle = serve_pipeline(
+            dep,
+            cfg,
+            ServeConfig { workers: 2, ..ServeConfig::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(handle.addr).unwrap();
+        let logits = client.infer(&data[0].0).unwrap();
+        assert_eq!(logits, expected[0]);
+
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 1);
+        assert!(metrics.core_ops > 0);
+        assert!(metrics.energy_fj > 0.0);
     }
 }

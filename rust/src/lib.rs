@@ -3,12 +3,39 @@
 //! Cell-Embedded ADCs and Signal Margin Enhancement Techniques for AI Edge
 //! Applications"* (Wang et al., 2023).
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see README.md):
 //! * **L3 (this crate)** — coordinator: macro behavioral model, NN mapping,
 //!   edge-inference serving, energy/area accounting, experiment harness.
 //! * **L2/L1 (python, build-time only)** — JAX model + Pallas kernel,
 //!   AOT-lowered to HLO text and executed here through the `xla` crate
-//!   (PJRT CPU) by `runtime`.
+//!   (PJRT CPU) by `runtime` — gated behind the `xla-runtime` feature, since
+//!   the offline build image vendors no external crates.
+//!
+//! # Pipeline architecture
+//!
+//! The paper's macro wins by amortizing one cell-embedded readout over
+//! 64-way parallel analog accumulation. The [`pipeline`] module mirrors that
+//! at system scale with three layers:
+//!
+//! * **Pool** — [`pipeline::MacroPool`] owns N weight-stationary
+//!   [`cim::MacroSim`] shards. A layer's tiles are pinned one-per-slot
+//!   (`shard × core`) by [`pipeline::PlacedLinear`], so weights load once
+//!   and only activations move — the chip's usage pattern.
+//! * **Shard** — each shard is an independent die (own fabrication draw);
+//!   ops are read-only on the shards, so any number of threads stream
+//!   activations concurrently.
+//! * **Batch** — [`pipeline::BatchExecutor`] fans a `[batch][features]`
+//!   matrix across worker threads (`util::threadpool`), one RNG substream +
+//!   one reusable [`cim::OpScratch`] per worker: zero per-op allocation.
+//!
+//! `coordinator::server::serve_pipeline` puts a dynamic batcher in front:
+//! queued jobs coalesce (up to `ServeConfig::max_batch`) into one pooled
+//! pipeline call. **Sizing:** `max_batch` bounds tail latency — keep it at
+//! (requests/s × batch window) or a small multiple of the worker count;
+//! `ServeConfig::workers = 0` auto-sizes to the machine (one worker per
+//! core, capped at 32). Throughput scales with workers until the batch is
+//! thinner than the worker count; `cargo bench --bench pipeline_throughput`
+//! prints the machine's actual curve and writes `BENCH_pipeline.json`.
 
 pub mod analysis;
 pub mod bench;
@@ -19,6 +46,7 @@ pub mod energy;
 pub mod harness;
 pub mod mapping;
 pub mod nn;
+pub mod pipeline;
 pub mod runtime;
 pub mod util;
 

@@ -1,7 +1,7 @@
 //! `cimsim` CLI — leader entrypoint of the L3 coordinator.
 
 use cimsim::config::{Config, EnhanceConfig};
-use cimsim::coordinator::{serve, Client, MlpDeployment, ServeConfig};
+use cimsim::coordinator::{serve, serve_pipeline, Client, MlpDeployment, ServeConfig};
 use cimsim::harness::{ablation, accuracy, figs};
 use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::BlobDataset;
@@ -52,6 +52,8 @@ fn spec() -> Cli {
                 opts: common(vec![
                     OptSpec { name: "requests", value_name: Some("N"), default: Some("256"), help: "demo client requests" },
                     OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "max dynamic batch" },
+                    OptSpec { name: "pipeline", value_name: None, default: None, help: "serve on the pooled batched pipeline" },
+                    OptSpec { name: "workers", value_name: Some("N"), default: Some("0"), help: "pipeline worker threads (0 = auto)" },
                 ]),
                 positional: None,
             },
@@ -174,10 +176,19 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             println!("float train accuracy: {:.1}%", acc * 100.0);
             let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
             let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
-            let backend = Box::new(NativeBackend::new(c.clone()));
             let max_batch = args.get_usize("batch")?;
-            let handle = serve(dep, backend, ServeConfig { max_batch, ..Default::default() })?;
-            println!("serving on {}", handle.addr);
+            let handle = if args.flag("pipeline") {
+                let workers = args.get_usize("workers")?;
+                let serve_cfg = ServeConfig { max_batch, workers, ..Default::default() };
+                let h = serve_pipeline(dep, c.clone(), serve_cfg)?;
+                println!("serving on {} (pooled pipeline)", h.addr);
+                h
+            } else {
+                let backend = Box::new(NativeBackend::new(c.clone()));
+                let h = serve(dep, backend, ServeConfig { max_batch, ..Default::default() })?;
+                println!("serving on {}", h.addr);
+                h
+            };
             let n_req = args.get_usize("requests")?;
             let addr = handle.addr;
             let mut clients: Vec<std::thread::JoinHandle<usize>> = Vec::new();

@@ -79,6 +79,20 @@ impl CimLinear {
         self.tiles.first().map(|t| t.len()).unwrap_or(0)
     }
 
+    /// The padded rows×engines signed weight block of tile `(rt, ct)` — the
+    /// unit the pipeline pins to a pool shard.
+    pub fn tile_block(&self, rt: usize, ct: usize) -> &[Vec<i64>] {
+        &self.tiles[rt][ct]
+    }
+
+    pub fn rows_per_tile(&self) -> usize {
+        self.rows_per_tile
+    }
+
+    pub fn engines_per_tile(&self) -> usize {
+        self.engines_per_tile
+    }
+
     /// Core ops needed per activation vector.
     pub fn ops_per_vector(&self) -> usize {
         self.n_row_tiles() * self.n_col_tiles()

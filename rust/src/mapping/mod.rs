@@ -55,6 +55,36 @@ impl ExecStats {
     pub fn energy_fj(&self) -> f64 {
         self.energy.total_fj()
     }
+
+    /// Fold another counter set in (the pipeline merges per-worker stats).
+    pub fn merge(&mut self, o: &ExecStats) {
+        self.core_ops += o.core_ops;
+        self.weight_loads += o.weight_loads;
+        self.total_cycles += o.total_cycles;
+        self.energy.add(&o.energy);
+        self.clipped += o.clipped;
+    }
+}
+
+/// Per-op accounting shared by every macro-model backend: counters, energy,
+/// and the boosted-clipping scan against the ideal folded MAC.
+pub fn account_core_op(
+    cfg: &Config,
+    weights: &crate::cim::CoreWeights,
+    acts: &[i64],
+    op_stats: &crate::cim::OpStats,
+    stats: &mut ExecStats,
+) {
+    stats.core_ops += 1;
+    stats.total_cycles += op_stats.total_cycles;
+    stats.energy.add(&core_op_energy(cfg, op_stats));
+    if cfg.enhance.boost {
+        for &d in golden::mac_folded(cfg, weights, acts).iter() {
+            if golden::clips(cfg, d) {
+                stats.clipped += 1;
+            }
+        }
+    }
 }
 
 /// Anything that can act as the 4-core CIM macro for the executors.
@@ -80,14 +110,21 @@ pub struct NativeBackend {
     pub sim: MacroSim,
     rng: Xoshiro256,
     stats: ExecStats,
-    scratch: crate::cim::NoiseDraw,
+    scratch: crate::cim::OpScratch,
+    op: crate::cim::CoreOpResult,
 }
 
 impl NativeBackend {
     pub fn new(cfg: Config) -> Self {
         let rng = Xoshiro256::seeded(cfg.sim.seed ^ 0xBACC_E4D);
-        let scratch = crate::cim::NoiseDraw::zeros(&cfg.mac);
-        Self { sim: MacroSim::new(cfg), rng, stats: ExecStats::default(), scratch }
+        let scratch = crate::cim::OpScratch::new(&cfg.mac);
+        Self {
+            sim: MacroSim::new(cfg),
+            rng,
+            stats: ExecStats::default(),
+            scratch,
+            op: crate::cim::CoreOpResult::default(),
+        }
     }
 }
 
@@ -103,20 +140,11 @@ impl CimBackend for NativeBackend {
     }
 
     fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError> {
-        let r = self.sim.core_op_scratch(core, acts, &mut self.rng, &mut self.scratch)?;
-        self.stats.core_ops += 1;
-        self.stats.total_cycles += r.stats.total_cycles;
-        self.stats.energy.add(&core_op_energy(&self.sim.cfg, &r.stats));
-        // Count boosted-clipping events against the ideal folded MAC.
-        if self.sim.cfg.enhance.boost {
-            let w = self.sim.core_weights(core)?;
-            for &d in golden::mac_folded(&self.sim.cfg, w, acts).iter() {
-                if golden::clips(&self.sim.cfg, d) {
-                    self.stats.clipped += 1;
-                }
-            }
-        }
-        Ok(r.values)
+        self.sim
+            .core_op_into(core, acts, &mut self.rng, &mut self.scratch, &mut self.op)?;
+        let w = self.sim.core_weights(core)?;
+        account_core_op(&self.sim.cfg, w, acts, &self.op.stats, &mut self.stats);
+        Ok(self.op.values.clone())
     }
 
     fn stats(&self) -> &ExecStats {

@@ -1,0 +1,133 @@
+//! [`PoolBackend`]: a macro pool exposed through the [`CimBackend`] trait as
+//! ONE virtual macro with `n_shards × cores` cores. The tiled executors in
+//! `mapping::executor` read the core count from `config()`, so with enough
+//! virtual cores every tile of a layer lands on its own resident slot and
+//! weights load exactly once per `run_batch_q` call — the tile→shard
+//! placement story without changing a line of executor code.
+
+use crate::cim::{CoreOpResult, MacroError, OpScratch};
+use crate::config::Config;
+use crate::mapping::{account_core_op, CimBackend, ExecStats, MapError};
+use crate::pipeline::pool::MacroPool;
+use crate::util::rng::Xoshiro256;
+
+/// A fixed-size pool behind the single-macro backend interface. Virtual
+/// core `v` maps to shard `v / cores`, core `v % cores`.
+pub struct PoolBackend {
+    vcfg: Config,
+    pool: MacroPool,
+    rng: Xoshiro256,
+    scratch: OpScratch,
+    op: CoreOpResult,
+    stats: ExecStats,
+}
+
+impl PoolBackend {
+    pub fn new(cfg: Config, n_shards: usize) -> Self {
+        assert!(n_shards > 0, "pool needs at least one shard");
+        let pool = MacroPool::with_shards(cfg.clone(), n_shards);
+        let mut vcfg = cfg;
+        vcfg.mac.cores *= n_shards;
+        // Same RNG stream as NativeBackend: a 1-shard PoolBackend replays
+        // the single-macro backend's noise draws op for op.
+        let rng = Xoshiro256::seeded(vcfg.sim.seed ^ 0xBACC_E4D);
+        let scratch = OpScratch::new(&vcfg.mac);
+        Self {
+            vcfg,
+            pool,
+            rng,
+            scratch,
+            op: CoreOpResult::default(),
+            stats: ExecStats::default(),
+        }
+    }
+
+    pub fn pool(&self) -> &MacroPool {
+        &self.pool
+    }
+}
+
+impl CimBackend for PoolBackend {
+    /// The virtual config: identical to the shard config except `mac.cores`,
+    /// which is multiplied by the shard count.
+    fn config(&self) -> &Config {
+        &self.vcfg
+    }
+
+    fn load_core(&mut self, core: usize, w: &[Vec<i64>]) -> Result<(), MapError> {
+        if core >= self.pool.total_cores() {
+            return Err(MapError::Macro(MacroError::BadCore(core)));
+        }
+        self.pool.load_slot(core, w)?;
+        self.stats.weight_loads += 1;
+        Ok(())
+    }
+
+    fn core_op(&mut self, core: usize, acts: &[i64]) -> Result<Vec<f64>, MapError> {
+        self.pool
+            .op_into(core, acts, &mut self.rng, &mut self.scratch, &mut self.op)?;
+        let (s, c) = self.pool.locate(core);
+        let w = self.pool.shard(s).core_weights(c)?;
+        account_core_op(self.pool.cfg(), w, acts, &self.op.stats, &mut self.stats);
+        Ok(self.op.values.clone())
+    }
+
+    fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+    use crate::mapping::executor::CimLinear;
+    use crate::mapping::NativeBackend;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    /// The executor on a PoolBackend with enough virtual cores never reloads
+    /// a tile, and (noise-free) returns the exact single-macro results.
+    #[test]
+    fn executor_on_pool_backend_is_weight_stationary_and_exact() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::fold_only();
+        let (k, n) = (130, 33); // 3 × 3 = 9 tiles > 4 cores
+        let mut rng = Xoshiro256::seeded(2);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+        let xs: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..k).map(|_| rng.next_f32()).collect()).collect();
+
+        let mut nat = NativeBackend::new(cfg.clone());
+        let want = lin.run_batch(&mut nat, &xs).unwrap();
+
+        // 3 shards × 4 cores = 12 virtual cores ≥ 9 tiles.
+        let mut pb = PoolBackend::new(cfg.clone(), 3);
+        assert_eq!(pb.config().mac.cores, 12);
+        let got = lin.run_batch(&mut pb, &xs).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(pb.stats().weight_loads as usize, lin.ops_per_vector());
+        assert_eq!(
+            pb.stats().core_ops as usize,
+            lin.ops_per_vector() * xs.len()
+        );
+    }
+
+    #[test]
+    fn bad_virtual_core_is_rejected() {
+        let cfg = Config::default();
+        let mut pb = PoolBackend::new(cfg.clone(), 2);
+        let w = vec![vec![0i64; cfg.mac.engines]; cfg.mac.rows];
+        assert!(pb.load_core(7, &w).is_ok());
+        assert!(matches!(
+            pb.load_core(8, &w),
+            Err(MapError::Macro(MacroError::BadCore(8)))
+        ));
+    }
+}

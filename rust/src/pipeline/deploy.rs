@@ -1,0 +1,179 @@
+//! The two-layer MLP deployment on a macro pool: both layers' tiles are
+//! placed once at construction, then [`PipelineDeployment::run_batch`]
+//! streams whole batches through the resident pool. This is the engine
+//! behind `coordinator::server::serve_pipeline`.
+//!
+//! The quantized arithmetic mirrors
+//! [`MlpDeployment::run_native`] expression for expression, so with noise
+//! disabled the batched pipeline's logits are bit-identical to the
+//! sequential path (the concurrency test relies on this).
+
+use crate::config::Config;
+use crate::coordinator::deployment::MlpDeployment;
+use crate::mapping::executor::CimLinear;
+use crate::mapping::{ExecStats, MapError};
+use crate::nn::quant::QuantParams;
+use crate::pipeline::batch::BatchExecutor;
+use crate::pipeline::pool::{MacroPool, PlacedLinear};
+
+/// A quantized MLP resident on a [`MacroPool`], ready for batched serving.
+pub struct PipelineDeployment {
+    dep: MlpDeployment,
+    pool: MacroPool,
+    lin1: PlacedLinear,
+    lin2: PlacedLinear,
+    exec: BatchExecutor,
+    stats: ExecStats,
+}
+
+impl PipelineDeployment {
+    /// Place both layers on a fresh pool. `workers == 0` selects the
+    /// thread-pool default. Weights load exactly once, here.
+    pub fn new(dep: MlpDeployment, cfg: Config, workers: usize) -> Result<Self, MapError> {
+        let unit_a = QuantParams { scale: 1.0, q_min: 0, q_max: 15 };
+        let unit_w = QuantParams { scale: 1.0, q_min: -7, q_max: 7 };
+        let l1 = CimLinear::with_params(&dep.w1_q, vec![0.0; dep.dims[1]], unit_w, unit_a, &cfg);
+        let l2 = CimLinear::with_params(&dep.w2_q, vec![0.0; dep.dims[2]], unit_w, unit_a, &cfg);
+        let seed = cfg.sim.seed ^ 0x0051_A6ED;
+        let mut pool = MacroPool::new(cfg);
+        let lin1 = PlacedLinear::place(l1, &mut pool).map_err(MapError::Macro)?;
+        let lin2 = PlacedLinear::place(l2, &mut pool).map_err(MapError::Macro)?;
+        let stats = ExecStats {
+            weight_loads: (lin1.n_tiles() + lin2.n_tiles()) as u64,
+            ..ExecStats::default()
+        };
+        Ok(Self { dep, pool, lin1, lin2, exec: BatchExecutor::new(workers, seed), stats })
+    }
+
+    pub fn config(&self) -> &Config {
+        self.pool.cfg()
+    }
+
+    pub fn deployment(&self) -> &MlpDeployment {
+        &self.dep
+    }
+
+    pub fn pool(&self) -> &MacroPool {
+        &self.pool
+    }
+
+    pub fn workers(&self) -> usize {
+        self.exec.workers()
+    }
+
+    /// Cumulative device counters over every batch served.
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+    }
+
+    /// Batched inference: input quantization → layer 1 on the pool → ReLU +
+    /// hidden requantization → layer 2 on the pool → dequantized logits.
+    pub fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        let x_q: Vec<Vec<i64>> = xs
+            .iter()
+            .map(|x| {
+                x.iter()
+                    .map(|&v| (v / self.dep.a0_scale).round().clamp(0.0, 15.0) as i64)
+                    .collect()
+            })
+            .collect();
+        let (s1, st1) = self.exec.run_q(&self.pool, &self.lin1, &x_q)?;
+        self.stats.merge(&st1);
+
+        let a1_scale = self.dep.a1_cal / 15.0;
+        let h_q: Vec<Vec<i64>> = s1
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&self.dep.b1)
+                    .map(|(&s, &b)| {
+                        let y = s * (self.dep.a0_scale * self.dep.w1_scale) + b;
+                        (y.max(0.0) / a1_scale).round().clamp(0.0, 15.0) as i64
+                    })
+                    .collect()
+            })
+            .collect();
+        let (s2, st2) = self.exec.run_q(&self.pool, &self.lin2, &h_q)?;
+        self.stats.merge(&st2);
+
+        Ok(s2
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .zip(&self.dep.b2)
+                    .map(|(&s, &b)| s * (a1_scale * self.dep.w2_scale) + b)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+    use crate::mapping::NativeBackend;
+    use crate::nn::dataset::BlobDataset;
+    use crate::nn::mlp::{train, Mlp};
+
+    fn small_deployment(seed: u64) -> (MlpDeployment, Vec<Vec<f32>>) {
+        let mut d = BlobDataset::new(12, 0.05, seed);
+        let data: Vec<(Vec<f32>, usize)> =
+            d.batch(150).into_iter().map(|s| (s.image.data, s.label)).collect();
+        let mut mlp = Mlp::new(&[144, 32, 10], seed ^ 1);
+        train(&mut mlp, &data, 4, 0.05, seed ^ 2);
+        let cal: Vec<Vec<f32>> = data.iter().take(30).map(|(x, _)| x.clone()).collect();
+        let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+        let xs: Vec<Vec<f32>> = data.iter().take(20).map(|(x, _)| x.clone()).collect();
+        (dep, xs)
+    }
+
+    /// Noise-free, the pooled pipeline's logits are bit-identical to the
+    /// sequential `run_native` path, independent of worker count.
+    #[test]
+    fn pipeline_matches_run_native_noise_free() {
+        let (dep, xs) = small_deployment(41);
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let want = {
+            let mut be = NativeBackend::new(cfg.clone());
+            dep.run_native(&mut be, &xs).unwrap()
+        };
+        for workers in [1usize, 4] {
+            let mut pipe = PipelineDeployment::new(dep.clone(), cfg.clone(), workers).unwrap();
+            let got = pipe.run_batch(&xs).unwrap();
+            assert_eq!(got, want, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_across_batches() {
+        let (dep, xs) = small_deployment(43);
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        let mut pipe = PipelineDeployment::new(dep, cfg, 2).unwrap();
+        assert_eq!(
+            pipe.stats().weight_loads as usize,
+            pipe.lin1.n_tiles() + pipe.lin2.n_tiles()
+        );
+        pipe.run_batch(&xs[..4]).unwrap();
+        let ops1 = pipe.stats().core_ops;
+        assert_eq!(
+            ops1 as usize,
+            4 * (pipe.lin1.n_tiles() + pipe.lin2.n_tiles())
+        );
+        pipe.run_batch(&xs[4..8]).unwrap();
+        assert_eq!(pipe.stats().core_ops, 2 * ops1);
+        assert!(pipe.stats().energy_fj() > 0.0);
+        // Weights were never reloaded on the hot path.
+        assert_eq!(
+            pipe.stats().weight_loads as usize,
+            pipe.lin1.n_tiles() + pipe.lin2.n_tiles()
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Batched, sharded inference pipeline — the macro-level analogue of the
+//! paper's core argument. One cell-embedded readout amortizes over 64-way
+//! analog accumulation *inside* a macro; this module amortizes weight
+//! loading and per-op software overheads *across* a pool of macros:
+//!
+//! * [`MacroPool`] — N weight-stationary [`crate::cim::MacroSim`] shards.
+//!   Every tile of a layer is pinned to one `(shard, core)` slot, so weights
+//!   load exactly once and activations stream.
+//! * [`PlacedLinear`] — a [`crate::mapping::executor::CimLinear`] whose
+//!   row/column tiles have been placed on pool slots.
+//! * [`BatchExecutor`] — runs a `[batch][features]` activation matrix across
+//!   the resident tiles with `util::threadpool::parallel_chunks`, one RNG
+//!   substream and one reusable [`crate::cim::OpScratch`] per worker, so the
+//!   per-op hot path performs zero allocations.
+//! * [`PipelineDeployment`] — the two-layer MLP deployment on a pool: the
+//!   batched serve loop's engine (`coordinator::server::serve_pipeline`).
+//! * [`PoolBackend`] — the pool exposed as one virtual macro with
+//!   `shards × cores` cores through the [`crate::mapping::CimBackend`]
+//!   trait, so every existing tiled executor runs on the pool unchanged.
+//!
+//! Determinism contract: with noise disabled the batched pipeline is
+//! bit-identical to the sequential single-macro path (asserted by
+//! `tests/pipeline_equivalence.rs`). With noise enabled, results depend on
+//! the worker count and on the executor's per-call epoch: every `run_q`
+//! call mixes a fresh epoch into each worker's RNG substream, so each op
+//! consumes one fresh decorrelated draw and repeated batches do not replay
+//! one frozen noise realization.
+
+pub mod backend;
+pub mod batch;
+pub mod deploy;
+pub mod pool;
+
+pub use backend::PoolBackend;
+pub use batch::BatchExecutor;
+pub use deploy::PipelineDeployment;
+pub use pool::{MacroPool, PlacedLinear};

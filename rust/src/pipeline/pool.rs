@@ -1,0 +1,233 @@
+//! The macro pool and tile→shard placement.
+//!
+//! A *slot* is one `(shard, core)` pair, numbered `shard · cores + core`.
+//! Slots are claimed in order; the pool grows a shard at a time when every
+//! resident core is taken, so a layer of any size stays fully
+//! weight-stationary. Each shard is an independent chip instance: it gets
+//! its own fabrication draw (decorrelated `fab_seed`), exactly as a board
+//! of distinct dies would.
+
+use crate::cim::{CoreOpResult, MacroError, MacroSim, OpScratch};
+use crate::config::Config;
+use crate::mapping::executor::CimLinear;
+use crate::util::rng::Rng;
+
+/// A pool of weight-stationary macro shards.
+pub struct MacroPool {
+    cfg: Config,
+    shards: Vec<MacroSim>,
+    next_slot: usize,
+}
+
+impl MacroPool {
+    /// An empty pool; shards are added on demand by [`MacroPool::alloc_slot`].
+    pub fn new(cfg: Config) -> Self {
+        Self { cfg, shards: Vec::new(), next_slot: 0 }
+    }
+
+    /// A pool with `n_shards` pre-built shards.
+    pub fn with_shards(cfg: Config, n_shards: usize) -> Self {
+        let mut p = Self::new(cfg);
+        p.grow_to(n_shards);
+        p
+    }
+
+    fn shard_cfg(&self, index: usize) -> Config {
+        let mut c = self.cfg.clone();
+        // Decorrelate the static mismatch of each die; with noise disabled
+        // Fabrication zeroes itself, so shards stay bit-identical there.
+        c.noise.fab_seed = c
+            .noise
+            .fab_seed
+            .wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        c
+    }
+
+    /// Grow the pool to at least `n_shards` shards.
+    pub fn grow_to(&mut self, n_shards: usize) {
+        while self.shards.len() < n_shards {
+            let c = self.shard_cfg(self.shards.len());
+            self.shards.push(MacroSim::new(c));
+        }
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn cores_per_shard(&self) -> usize {
+        self.cfg.mac.cores
+    }
+
+    /// Total core slots currently resident.
+    pub fn total_cores(&self) -> usize {
+        self.shards.len() * self.cfg.mac.cores
+    }
+
+    /// Slots claimed so far.
+    pub fn slots_loaded(&self) -> usize {
+        self.next_slot
+    }
+
+    /// Map a slot id to its `(shard, core)` pair.
+    pub fn locate(&self, slot: usize) -> (usize, usize) {
+        (slot / self.cfg.mac.cores, slot % self.cfg.mac.cores)
+    }
+
+    pub fn shard(&self, index: usize) -> &MacroSim {
+        &self.shards[index]
+    }
+
+    /// Claim the next free slot, growing the pool by one shard when all
+    /// resident cores are taken.
+    pub fn alloc_slot(&mut self) -> usize {
+        let slot = self.next_slot;
+        if slot >= self.total_cores() {
+            let n = self.shards.len() + 1;
+            self.grow_to(n);
+        }
+        self.next_slot += 1;
+        slot
+    }
+
+    /// Load a rows×engines signed weight block into a slot (once, at
+    /// placement time — the hot path never reloads).
+    pub fn load_slot(&mut self, slot: usize, w: &[Vec<i64>]) -> Result<(), MacroError> {
+        let (s, c) = self.locate(slot);
+        if s >= self.shards.len() {
+            return Err(MacroError::BadSlot(slot));
+        }
+        self.shards[s].load_core(c, w)
+    }
+
+    /// One op on a slot. Takes `&self`: shards are read-only on the op path,
+    /// so any number of workers may stream activations concurrently, each
+    /// with its own RNG + scratch.
+    pub fn op_into<R: Rng>(
+        &self,
+        slot: usize,
+        acts: &[i64],
+        rng: &mut R,
+        scratch: &mut OpScratch,
+        out: &mut CoreOpResult,
+    ) -> Result<(), MacroError> {
+        let (s, c) = self.locate(slot);
+        let shard = self.shards.get(s).ok_or(MacroError::BadSlot(slot))?;
+        shard.core_op_into(c, acts, rng, scratch, out)
+    }
+}
+
+/// A tiled linear layer pinned to pool slots: `tile (rt, ct) → slot`.
+pub struct PlacedLinear {
+    lin: CimLinear,
+    slots: Vec<usize>,
+    n_ct: usize,
+}
+
+impl PlacedLinear {
+    /// Place every tile of `lin` on its own slot (claimed in `(rt, ct)`
+    /// order) and load the weights once.
+    pub fn place(lin: CimLinear, pool: &mut MacroPool) -> Result<Self, MacroError> {
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        let mut slots = Vec::with_capacity(n_rt * n_ct);
+        for rt in 0..n_rt {
+            for ct in 0..n_ct {
+                let slot = pool.alloc_slot();
+                pool.load_slot(slot, lin.tile_block(rt, ct))?;
+                slots.push(slot);
+            }
+        }
+        Ok(Self { lin, slots, n_ct })
+    }
+
+    pub fn linear(&self) -> &CimLinear {
+        &self.lin
+    }
+
+    pub fn slot(&self, rt: usize, ct: usize) -> usize {
+        self.slots[rt * self.n_ct + ct]
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn slots_grow_and_locate_consistently() {
+        let cfg = Config::default();
+        let mut pool = MacroPool::new(cfg.clone());
+        assert_eq!(pool.total_cores(), 0);
+        let w = vec![vec![1i64; cfg.mac.engines]; cfg.mac.rows];
+        for slot in 0..9 {
+            assert_eq!(pool.alloc_slot(), slot);
+            pool.load_slot(slot, &w).unwrap();
+        }
+        // 9 slots over 4-core shards ⇒ 3 shards resident.
+        assert_eq!(pool.n_shards(), 3);
+        assert_eq!(pool.locate(0), (0, 0));
+        assert_eq!(pool.locate(5), (1, 1));
+        assert_eq!(pool.locate(8), (2, 0));
+        assert_eq!(pool.slots_loaded(), 9);
+    }
+
+    #[test]
+    fn placement_loads_every_tile_once() {
+        let cfg = Config::default();
+        let (k, n) = (130, 20); // 3 row tiles × 2 col tiles = 6 slots
+        let mut rng = Xoshiro256::seeded(4);
+        let w = Tensor::from_vec(
+            &[k, n],
+            (0..k * n)
+                .map(|_| crate::util::rng::Rng::next_f32(&mut rng) - 0.5)
+                .collect(),
+        );
+        let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+        let mut pool = MacroPool::new(cfg);
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+        assert_eq!(placed.n_tiles(), 6);
+        assert_eq!(pool.slots_loaded(), 6);
+        assert_eq!(pool.n_shards(), 2);
+        // Slots are distinct and dense.
+        let mut seen: Vec<usize> = (0..3).flat_map(|rt| (0..2).map(move |ct| (rt, ct)))
+            .map(|(rt, ct)| placed.slot(rt, ct))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_op_matches_ideal_codes_noise_free() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let mut rng = Xoshiro256::seeded(8);
+        let w: Vec<Vec<i64>> = (0..cfg.mac.rows)
+            .map(|_| {
+                (0..cfg.mac.engines)
+                    .map(|_| crate::util::rng::Rng::next_range_i64(&mut rng, -7, 7))
+                    .collect()
+            })
+            .collect();
+        let mut pool = MacroPool::with_shards(cfg.clone(), 2);
+        let slot = 5; // shard 1, core 1
+        pool.load_slot(slot, &w).unwrap();
+        let acts: Vec<i64> = (0..cfg.mac.rows)
+            .map(|_| crate::util::rng::Rng::next_range_i64(&mut rng, 0, 15))
+            .collect();
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let mut out = CoreOpResult::default();
+        pool.op_into(slot, &acts, &mut rng, &mut scratch, &mut out).unwrap();
+        let want = pool.shard(1).ideal_codes(1, &acts).unwrap();
+        assert_eq!(out.codes, want);
+    }
+}

@@ -40,6 +40,20 @@ impl Gen {
         let len = self.usize_in(0, max_len.min(self.size.max(1)));
         (0..len).map(|_| self.i64_in(lo, hi)).collect()
     }
+
+    /// Uniform choice from a non-empty slice (enhancement modes, worker
+    /// counts, batch shapes...).
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "pick from empty slice");
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// A fixed-length f32 vector in `[lo, hi)` (activation batches).
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| lo + (hi - lo) * self.rng.next_f32())
+            .collect()
+    }
 }
 
 /// Outcome of a property check, with the failing seed when applicable.
@@ -149,6 +163,22 @@ mod tests {
             prop_assert!((3..=9).contains(&u), "usize_in out of range: {u}");
             let f = g.f64_in(-1.0, 1.0);
             prop_assert!((-1.0..1.0).contains(&f) || f == -1.0, "f64_in out of range: {f}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pick_and_vec_f32_stay_in_domain() {
+        check("gen-pick", 60, |g| {
+            let modes = ["a", "b", "c"];
+            let m = *g.pick(&modes);
+            prop_assert!(modes.contains(&m), "pick left the slice: {m}");
+            let v = g.vec_f32(17, 0.0, 2.0);
+            prop_assert!(v.len() == 17, "wrong length {}", v.len());
+            prop_assert!(
+                v.iter().all(|x| (0.0..2.0).contains(x)),
+                "vec_f32 out of range"
+            );
             Ok(())
         });
     }

@@ -1,0 +1,166 @@
+//! Golden-fixture regression test for the 9-b cell-embedded ADC transfer
+//! curve. The expected signed output codes across the full folded-MAC input
+//! range are checked in for all four enhancement modes (off / fold / boost /
+//! both); the step-spacing guards pin the paper's ×1.875 (MAC-folding) and
+//! ×2 (boosted-clipping) ratios in exact integer form. Any change to the
+//! quantizer — scale fractions, tie-breaking, clipping — trips this file.
+//!
+//! Fixture generation: `code(d) = clamp(ceil(d·num·512 / (den·13440)) − 1)`
+//! with (num, den) = (1,1) / (15,8) / (2,1) / (15,4), sampled every 320
+//! product units over ±6720 (the full MAC range).
+
+use cimsim::cim::adc::{ideal_code_from_voltage, readout};
+use cimsim::cim::engine::{MacPhase, OpStats};
+use cimsim::cim::golden::{ideal_code, scale_fraction};
+use cimsim::cim::noise::{Fabrication, NoiseDraw};
+use cimsim::cim::step_per_unit_u;
+use cimsim::config::{Config, EnhanceConfig};
+
+/// `d` sample grid: −6720 ..= 6720 in steps of 320 (43 points).
+fn sample_ds() -> Vec<i64> {
+    (-6720..=6720).step_by(320).collect()
+}
+
+fn mode_cfg(enh: EnhanceConfig) -> Config {
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = enh;
+    cfg
+}
+
+const EXPECTED_BASELINE: &[i32] = &[
+    -256, -244, -232, -220, -208, -196, -183, -171, -159, -147, -135, -122,
+    -110, -98, -86, -74, -61, -49, -37, -25, -13, -1, 12, 24,
+    36, 48, 60, 73, 85, 97, 109, 121, 134, 146, 158, 170,
+    182, 195, 207, 219, 231, 243, 255,
+];
+
+const EXPECTED_FOLD: &[i32] = &[
+    -256, -256, -256, -256, -256, -256, -256, -256, -256, -256, -252, -229,
+    -206, -183, -161, -138, -115, -92, -69, -46, -23, -1, 22, 45,
+    68, 91, 114, 137, 159, 182, 205, 228, 251, 255, 255, 255,
+    255, 255, 255, 255, 255, 255, 255,
+];
+
+const EXPECTED_BOOST: &[i32] = &[
+    -256, -256, -256, -256, -256, -256, -256, -256, -256, -256, -256, -244,
+    -220, -196, -171, -147, -122, -98, -74, -49, -25, -1, 24, 48,
+    73, 97, 121, 146, 170, 195, 219, 243, 255, 255, 255, 255,
+    255, 255, 255, 255, 255, 255, 255,
+];
+
+const EXPECTED_BOTH: &[i32] = &[
+    -256, -256, -256, -256, -256, -256, -256, -256, -256, -256, -256, -256,
+    -256, -256, -256, -256, -229, -183, -138, -92, -46, -1, 45, 91,
+    137, 182, 228, 255, 255, 255, 255, 255, 255, 255, 255, 255,
+    255, 255, 255, 255, 255, 255, 255,
+];
+
+fn modes() -> [(EnhanceConfig, &'static str, &'static [i32]); 4] {
+    [
+        (EnhanceConfig::default(), "baseline", EXPECTED_BASELINE),
+        (EnhanceConfig::fold_only(), "fold", EXPECTED_FOLD),
+        (EnhanceConfig::boost_only(), "boost", EXPECTED_BOOST),
+        (EnhanceConfig::both(), "fold+boost", EXPECTED_BOTH),
+    ]
+}
+
+/// The digital golden transfer matches the checked-in fixture codes.
+#[test]
+fn transfer_fixtures_hold_in_every_mode() {
+    let ds = sample_ds();
+    for (enh, name, expected) in modes() {
+        let cfg = mode_cfg(enh);
+        assert_eq!(expected.len(), ds.len(), "{name}: fixture length");
+        for (&d, &want) in ds.iter().zip(expected) {
+            assert_eq!(
+                ideal_code(&cfg, d),
+                want,
+                "{name}: transfer drifted at d = {d}"
+            );
+        }
+    }
+}
+
+/// The noise-free analog binary search reproduces the same fixtures when fed
+/// the equivalent bit-line differential `v = d · s` (within the MAC range —
+/// the analog path cannot exceed ±VPP).
+#[test]
+fn analog_readout_reproduces_fixtures() {
+    let ds = sample_ds();
+    for (enh, name, expected) in modes() {
+        let cfg = mode_cfg(enh);
+        let fab = Fabrication::ideal(&cfg.mac);
+        let draw = NoiseDraw::zeros(&cfg.mac);
+        let s = cfg.enhance.dtc_scale();
+        let vpp = cfg.mac.vpp_units();
+        for (&d, &want) in ds.iter().zip(expected) {
+            let v = d as f64 * s;
+            if v.abs() > vpp {
+                continue; // headroom-clamped on silicon; digital-only region
+            }
+            let n = cfg.mac.engines;
+            let mut phase = MacPhase {
+                rbl_drop: vec![0.0; n],
+                rblb_drop: vec![0.0; n],
+                stats: OpStats::default(),
+            };
+            // diff = V(RBLB) − V(RBL) = rbl_drop − rblb_drop.
+            if v >= 0.0 {
+                phase.rbl_drop.iter_mut().for_each(|x| *x = v);
+            } else {
+                phase.rblb_drop.iter_mut().for_each(|x| *x = -v);
+            }
+            let r = readout(&cfg, 0, &phase, &fab, &draw);
+            assert_eq!(
+                r.codes[0], want,
+                "{name}: analog code at d = {d} (v = {v} u)"
+            );
+            assert_eq!(r.codes[0], ideal_code_from_voltage(&cfg, v));
+        }
+    }
+}
+
+/// Exact step-ratio guards: folding enlarges the MAC step ×1.875 and
+/// boosting ×2 on top, which in integer form means one output code per
+/// 14 product units (fold), 7 (both), and 4 codes per 105 units (baseline)
+/// vs 8 per 105 (boost).
+#[test]
+fn step_ratios_are_exactly_1875_and_2x() {
+    let base = mode_cfg(EnhanceConfig::default());
+    let fold = mode_cfg(EnhanceConfig::fold_only());
+    let boost = mode_cfg(EnhanceConfig::boost_only());
+    let both = mode_cfg(EnhanceConfig::both());
+
+    assert!((step_per_unit_u(&fold) / step_per_unit_u(&base) - 1.875).abs() < 1e-12);
+    assert!((step_per_unit_u(&both) / step_per_unit_u(&fold) - 2.0).abs() < 1e-12);
+    assert_eq!(scale_fraction(&fold.enhance), Some((15, 8)));
+    assert_eq!(scale_fraction(&both.enhance), Some((15, 4)));
+
+    for d in (-1700..1700).step_by(13) {
+        assert_eq!(
+            ideal_code(&fold, d + 14) - ideal_code(&fold, d),
+            1,
+            "fold step must be exactly 14 units at d = {d}"
+        );
+        assert_eq!(
+            ideal_code(&both, d + 7) - ideal_code(&both, d),
+            1,
+            "fold+boost step must be exactly 7 units at d = {d}"
+        );
+    }
+    for d in (-6000..5800).step_by(97) {
+        assert_eq!(
+            ideal_code(&base, d + 105) - ideal_code(&base, d),
+            4,
+            "baseline: 105 units must span 4 codes at d = {d}"
+        );
+    }
+    for d in (-3000..2800).step_by(97) {
+        assert_eq!(
+            ideal_code(&boost, d + 105) - ideal_code(&boost, d),
+            8,
+            "boost: 105 units must span 8 codes at d = {d}"
+        );
+    }
+}

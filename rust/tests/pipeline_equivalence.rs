@@ -1,0 +1,201 @@
+//! Pipeline equivalence suite: property-based checks that the batched,
+//! sharded pool path is bit-identical to the sequential single-macro path
+//! and to the exact golden quantizer (noise-free), plus a concurrency test
+//! of the batched serve loop.
+
+use cimsim::cim::weights::CoreWeights;
+use cimsim::cim::{golden, CoreOpResult, OpScratch};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::deployment::MlpDeployment;
+use cimsim::coordinator::{serve_pipeline, Client, ServeConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::NativeBackend;
+use cimsim::nn::dataset::BlobDataset;
+use cimsim::nn::mlp::{train, Mlp};
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{BatchExecutor, MacroPool, PipelineDeployment, PlacedLinear};
+use cimsim::prop_assert;
+use cimsim::util::proptest::check;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+const MODES: [fn() -> EnhanceConfig; 4] = [
+    EnhanceConfig::default,
+    EnhanceConfig::fold_only,
+    EnhanceConfig::boost_only,
+    EnhanceConfig::both,
+];
+
+/// For random layer shapes, batches, enhancement modes and worker counts,
+/// the noise-free batched pool output equals the sequential single-macro
+/// executor bit for bit — catching shard-placement and accumulation-order
+/// bugs.
+#[test]
+fn property_batched_pipeline_equals_sequential() {
+    check("pipeline-vs-sequential", 25, |g| {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = g.pick(&MODES)();
+        let k = g.usize_in(1, 150);
+        let n = g.usize_in(1, 36);
+        let batch = g.usize_in(1, 8);
+        let workers = *g.pick(&[1usize, 2, 3, 7]);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0xD15C);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        let bias: Vec<f32> = (0..n).map(|i| (i as f32).sin() * 0.1).collect();
+        let lin = CimLinear::new(&w, bias, 1.0, &cfg);
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..k).map(|_| rng.next_f32()).collect())
+            .collect();
+
+        let mut nat = NativeBackend::new(cfg.clone());
+        let want = lin
+            .run_batch(&mut nat, &xs)
+            .map_err(|e| format!("sequential: {e}"))?;
+
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed =
+            PlacedLinear::place(lin, &mut pool).map_err(|e| format!("place: {e}"))?;
+        let exec = BatchExecutor::new(workers, g.case_seed);
+        let (got, stats) = exec
+            .run(&pool, &placed, &xs)
+            .map_err(|e| format!("pooled: {e}"))?;
+
+        prop_assert!(
+            got == want,
+            "mode {} k={k} n={n} batch={batch} workers={workers}: outputs differ",
+            cfg.enhance.label()
+        );
+        prop_assert!(
+            stats.core_ops as usize == placed.n_tiles() * batch,
+            "core op count {} != tiles {} × batch {batch}",
+            stats.core_ops,
+            placed.n_tiles()
+        );
+        Ok(())
+    });
+}
+
+/// A single random tile through the pool's allocation-free op path matches
+/// `cim::golden` exactly: codes from the ideal quantizer, values from the
+/// golden reconstruction.
+#[test]
+fn property_pool_op_matches_golden() {
+    check("pool-op-vs-golden", 40, |g| {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = g.pick(&MODES)();
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0x601D);
+        let w_rows: Vec<Vec<i64>> = (0..cfg.mac.rows)
+            .map(|_| (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect())
+            .collect();
+        let acts: Vec<i64> =
+            (0..cfg.mac.rows).map(|_| rng.next_range_i64(0, 15)).collect();
+
+        let shards = g.usize_in(1, 3);
+        let mut pool = MacroPool::with_shards(cfg.clone(), shards);
+        let slot = g.usize_in(0, pool.total_cores() - 1);
+        pool.load_slot(slot, &w_rows).map_err(|e| format!("load: {e}"))?;
+
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let mut out = CoreOpResult::default();
+        pool.op_into(slot, &acts, &mut rng, &mut scratch, &mut out)
+            .map_err(|e| format!("op: {e}"))?;
+
+        let cw = CoreWeights::from_signed(&cfg.mac, &w_rows).unwrap();
+        let folded = golden::mac_folded(&cfg, &cw, &acts);
+        let want_values = golden::ideal_pipeline(&cfg, &cw, &acts);
+        for e in 0..cfg.mac.engines {
+            let want_code = golden::ideal_code(&cfg, folded[e]);
+            prop_assert!(
+                out.codes[e] == want_code,
+                "mode {} slot {slot} engine {e}: code {} != golden {want_code}",
+                cfg.enhance.label(),
+                out.codes[e]
+            );
+            prop_assert!(
+                out.values[e] == want_values[e],
+                "engine {e}: value {} != golden {}",
+                out.values[e],
+                want_values[e]
+            );
+        }
+        Ok(())
+    });
+}
+
+fn trained_deployment(seed: u64) -> (MlpDeployment, Vec<Vec<f32>>) {
+    let mut ds = BlobDataset::new(12, 0.05, seed);
+    let data: Vec<(Vec<f32>, usize)> =
+        ds.batch(200).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let mut mlp = Mlp::new(&[144, 32, 10], seed ^ 1);
+    train(&mut mlp, &data, 5, 0.05, seed ^ 2);
+    let cal: Vec<Vec<f32>> = data.iter().take(40).map(|(x, _)| x.clone()).collect();
+    let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+    let xs: Vec<Vec<f32>> = data.iter().take(24).map(|(x, _)| x.clone()).collect();
+    (dep, xs)
+}
+
+/// N concurrent clients against the batched serve loop get exactly the
+/// single-client answers (noise-free determinism), and the dynamic batcher
+/// actually coalesces: batch occupancy > 1.
+#[test]
+fn concurrent_clients_get_single_client_results_and_batches_coalesce() {
+    let (dep, xs) = trained_deployment(61);
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+
+    // Ground truth: every input inferred alone on a fresh pipeline.
+    let expected: Vec<Vec<f32>> = {
+        let mut pipe = PipelineDeployment::new(dep.clone(), cfg.clone(), 2).unwrap();
+        xs.iter()
+            .map(|x| pipe.run_batch(std::slice::from_ref(x)).unwrap().remove(0))
+            .collect()
+    };
+
+    let n_clients = 6usize;
+    let rounds = 4usize;
+    let serve_cfg = ServeConfig {
+        max_batch: n_clients,
+        batch_timeout: std::time::Duration::from_millis(200),
+        workers: 2,
+    };
+    let handle = serve_pipeline(dep, cfg, serve_cfg).unwrap();
+    let addr = handle.addr;
+
+    let mut joins = Vec::new();
+    for t in 0..n_clients {
+        let mine: Vec<(usize, Vec<f32>)> = (0..rounds)
+            .map(|r| {
+                let idx = (r * n_clients + t) % xs.len();
+                (idx, xs[idx].clone())
+            })
+            .collect();
+        joins.push(std::thread::spawn(move || -> Vec<(usize, Vec<f32>)> {
+            let mut c = Client::connect(addr).unwrap();
+            mine.into_iter()
+                .map(|(idx, x)| (idx, c.infer(&x).unwrap()))
+                .collect()
+        }));
+    }
+    for j in joins {
+        for (idx, logits) in j.join().unwrap() {
+            assert_eq!(
+                logits, expected[idx],
+                "batched serving changed the answer for input {idx}"
+            );
+        }
+    }
+
+    let metrics = handle.shutdown();
+    assert_eq!(metrics.requests as usize, n_clients * rounds);
+    let report = metrics.report(200e6);
+    assert!(
+        report.mean_batch > 1.0,
+        "batcher never coalesced: mean occupancy {}",
+        report.mean_batch
+    );
+    assert!(report.peak_batch >= 2, "peak batch {}", report.peak_batch);
+    assert!(report.energy_uj_per_req > 0.0);
+}

@@ -1,7 +1,9 @@
 //! Cross-layer equivalence: the AOT XLA artifacts (L2/L1 compiled) against
 //! the native Rust behavioral model (L3 golden). Requires `make artifacts`
 //! (the Makefile orders this before `cargo test`); tests self-skip when the
-//! artifacts are absent so plain `cargo test` still passes.
+//! artifacts are absent so plain `cargo test` still passes. The whole file
+//! needs the `xla-runtime` feature (the offline image has no `xla` crate).
+#![cfg(feature = "xla-runtime")]
 
 use cimsim::cim::noise::NoiseDraw;
 use cimsim::cim::MacroSim;
