@@ -1,43 +1,53 @@
-//! Batched multi-macro serving: the same edge MLP as `edge_serve`, but on
-//! the sharded pipeline — weights placed ONCE on a pool of simulated macros,
-//! queued requests coalesced into single pooled calls that fan out across
-//! worker threads. Compare the reported occupancy/throughput with the
-//! single-backend `edge_serve` example.
+//! Batched multi-macro serving through the graph compiler: the same edge
+//! MLP as `edge_serve`, ingested into the compiler IR, calibrated, lowered
+//! and placed ONCE on a pool of simulated macros, then served as a
+//! [`cimsim::compiler::CompiledPlan`] — queued requests coalesce into
+//! single pooled calls that fan out across worker threads. Compare the
+//! reported occupancy/throughput with the single-backend `edge_serve`
+//! example.
 //!
 //! Run: `cargo run --release --example edge_serve_batched [requests]`
 
+use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
-use cimsim::coordinator::deployment::{argmax, MlpDeployment};
-use cimsim::coordinator::{serve_pipeline, Client, ServeConfig};
+use cimsim::coordinator::deployment::argmax;
+use cimsim::coordinator::{serve_plan, Client, ServeConfig};
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::{train, Mlp};
+use cimsim::nn::tensor::Tensor;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_req: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
     let mut cfg = Config::default();
     cfg.enhance = EnhanceConfig::both();
 
-    // Train + quantize the edge model.
+    // Train the edge model in float.
     let mut ds = BlobDataset::new(12, 0.05, 21);
     let data: Vec<(Vec<f32>, usize)> =
         ds.batch(300).into_iter().map(|s| (s.image.data, s.label)).collect();
     let mut mlp = Mlp::new(&[144, 32, 10], 4);
     let acc = train(&mut mlp, &data, 8, 0.05, 2);
-    let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
-    let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
-    println!("model trained (float acc {:.1}%), quantized to 4b:4b", acc * 100.0);
+    println!("model trained (float acc {:.1}%)", acc * 100.0);
 
-    // Serve on the macro pool: tiles resident, batch fan-out across workers.
+    // Compile onto the pool: ingest → calibrate → lower → place.
+    let graph = Graph::from_mlp(&mlp);
+    let cal: Vec<Tensor> = data
+        .iter()
+        .take(50)
+        .map(|(x, _)| Tensor::from_vec(&[144], x.clone()))
+        .collect();
+    let plan = compile(graph, &cal, &cfg, &CompileOptions::default())?;
+    println!("{}", plan.cost_report().table(&cfg).to_markdown());
+
+    // Serve the compiled plan: tiles resident, batch fan-out across workers
+    // (worker count is the plan's CompileOptions::workers — 0 = auto).
     let serve_cfg = ServeConfig {
         max_batch: 32,
         batch_timeout: std::time::Duration::from_millis(1),
-        workers: 0, // auto-size to the machine
+        workers: 0,
     };
-    let handle = serve_pipeline(dep, cfg.clone(), serve_cfg)?;
-    println!(
-        "serving on {} (pooled pipeline, max batch 32, 1 ms window)",
-        handle.addr
-    );
+    let handle = serve_plan(plan, serve_cfg)?;
+    println!("serving on {} (compiled plan, max batch 32, 1 ms window)", handle.addr);
 
     // 8 concurrent clients.
     let addr = handle.addr;
@@ -63,7 +73,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
     let metrics = handle.shutdown();
     println!(
-        "accuracy on the pooled CIM pipeline under load: {:.1}% over {} requests",
+        "accuracy on the compiled CIM plan under load: {:.1}% over {} requests",
         100.0 * correct as f64 / (per_client * 8) as f64,
         per_client * 8
     );

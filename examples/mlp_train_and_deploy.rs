@@ -1,17 +1,20 @@
 //! End-to-end driver (DESIGN.md "E2E"): train a small MLP in float on a
 //! real (synthetic) 10-class image workload — logging the loss curve —
-//! post-training-quantize it to the macro's 4-b formats, deploy it on the
-//! simulated CIM macro in every enhancement mode, and report accuracy,
-//! throughput and energy. When `artifacts/` exists, the same deployment
-//! also runs through the AOT-compiled XLA path.
+//! post-training-quantize it to the macro's 4-b formats, then compile it
+//! through the graph compiler (ingest → calibrate → lower → place) and run
+//! it on the macro pool in every enhancement mode, reporting accuracy,
+//! throughput and energy. When `artifacts/` exists, the quantized
+//! deployment also runs through the AOT-compiled XLA path.
 //!
 //! Run: `cargo run --release --example mlp_train_and_deploy`
 
+use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::{argmax, MlpDeployment};
-use cimsim::mapping::{CimBackend, DigitalBackend, NativeBackend};
+use cimsim::mapping::DigitalBackend;
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::Mlp;
+use cimsim::nn::tensor::Tensor;
 use cimsim::util::rng::{Rng, Xoshiro256};
 use std::time::Instant;
 
@@ -60,8 +63,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         / test_set.len() as f64;
     println!("4-b quantized (exact digital) accuracy: {:.1}%\n", digital_acc * 100.0);
 
-    // ---- 3. deploy on the simulated macro, every enhancement mode ----
-    println!("== deployment on the simulated 16 Kb CIM macro ==");
+    // ---- 3. compile onto the macro pool, every enhancement mode ----
+    println!("== graph-compiled deployment on the simulated CIM macro pool ==");
+    let graph = Graph::from_mlp(&mlp);
+    let cal_t: Vec<Tensor> =
+        cal.iter().map(|x| Tensor::from_vec(&[144], x.clone())).collect();
+    let xs_t: Vec<Tensor> = xs.iter().map(|x| Tensor::from_vec(&[144], x.clone())).collect();
     println!("{:<12} {:>9} {:>12} {:>12} {:>12} {:>10}", "mode", "accuracy", "core ops", "µJ total", "TOPS/W", "ms/img*");
     for enh in [
         EnhanceConfig::default(),
@@ -71,9 +78,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ] {
         let mut c = cfg.clone();
         c.enhance = enh;
-        let mut backend = NativeBackend::new(c.clone());
+        let mut plan = compile(graph.clone(), &cal_t, &c, &CompileOptions::default())?;
         let t0 = Instant::now();
-        let logits = dep.run_native(&mut backend, &xs)?;
+        let logits = plan.run_batch(&xs_t)?;
         let wall = t0.elapsed();
         let acc = test_set
             .iter()
@@ -81,7 +88,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             .filter(|((_, y), l)| argmax(l) == **&y)
             .count() as f64
             / test_set.len() as f64;
-        let st = backend.stats();
+        let st = plan.stats();
         let ops = st.core_ops as f64 * (c.mac.engines * c.mac.rows * 2) as f64;
         let device_ms =
             st.total_cycles as f64 / (c.mac.clock_mhz * 1e6) * 1e3 / test_set.len() as f64;
@@ -95,10 +102,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             device_ms,
         );
         let _ = wall;
+        // Placement + cost breakdown, once, for the fold+boost plan.
+        if c.enhance.fold && c.enhance.boost {
+            println!("\n{}", plan.cost_report().table(&c).to_markdown());
+        }
     }
     println!("(*device time per image at {:.0} MHz; simulator wall time excluded)", cfg.mac.clock_mhz);
 
-    // digital-backend sanity row
+    // digital-backend sanity row (the quantized deployment bundle).
     let mut dig = DigitalBackend::new(cfg.clone());
     let dl = dep.run_native(&mut dig, &xs)?;
     let dacc = test_set.iter().zip(&dl).filter(|((_, y), l)| argmax(l) == **&y).count() as f64

@@ -1,96 +1,132 @@
-//! Map a 4-bit ResNet-20 onto the CIM macro (the paper's Fig. 1 workload):
-//! run every conv layer of a full inference through the tiled executor and
-//! report per-layer SNR vs the exact digital pipeline, plus the end-to-end
-//! energy/throughput accounting of the mapping.
+//! Map a 4-bit ResNet-20 onto the CIM macro pool (the paper's Fig. 1
+//! workload) — through the graph compiler: ingest the network into the IR,
+//! calibrate + lower every layer, place the 282 tiles with the cost-model-
+//! driven placer, then run a full CIFAR-shaped inference end to end on the
+//! pool. Noise-free, the compiled execution is verified bit-identical to
+//! the sequential per-layer `CimConv` path, and the per-layer cycle/energy
+//! cost report (estimated vs observed) is printed.
 //!
-//! Run: `cargo run --release --example resnet20_cim [n_layers]`
+//! Run: `cargo run --release --example resnet20_cim [n_images]`
 
+use cimsim::compiler::{calibrate, compile, CompileOptions, Graph, Op};
 use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::deployment::argmax;
 use cimsim::mapping::executor::CimConv;
-use cimsim::mapping::{CimBackend, DigitalBackend, NativeBackend};
+use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::random_image;
-use cimsim::nn::ops::relu;
+use cimsim::nn::ops::{global_avg_pool, relu};
 use cimsim::nn::resnet::ResNet20;
 use cimsim::nn::tensor::Tensor;
 
-fn snr_db(reference: &Tensor, got: &Tensor) -> f64 {
-    let mut sig = 0f64;
-    let mut err = 0f64;
-    for (r, g) in reference.data.iter().zip(&got.data) {
-        sig += (*r as f64).powi(2);
-        err += (*r as f64 - *g as f64).powi(2);
-    }
-    10.0 * (sig / err.max(1e-30)).log10()
-}
-
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let n_layers: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let n_images: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
     let mut cfg = Config::default();
     cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false; // noise-free: bit-exact vs the sequential path
 
     let net = ResNet20::new(3);
-    let image = random_image(&[3, 32, 32], 7);
     println!(
-        "ResNet-20: {} conv layers, {:.1}M MACs per image; mapping {} layers onto the macro\n",
+        "ResNet-20: {} conv layers + FC, {:.1}M MACs per image — compiling onto the pool\n",
         net.conv_layers().len(),
-        net.total_macs() as f64 / 1e6,
-        n_layers
+        net.total_macs() as f64 / 1e6
     );
 
-    let mut cim = NativeBackend::new(cfg.clone());
-    let mut dig = DigitalBackend::new(cfg.clone());
+    // ---- ingest → calibrate → lower → place ----
+    let graph = Graph::from_resnet20(&net);
+    let cal_imgs: Vec<Tensor> = (0..2).map(|i| random_image(&[3, 32, 32], 100 + i)).collect();
+    let opts = CompileOptions { workers: 0, ..Default::default() };
+    let mut plan = compile(graph.clone(), &cal_imgs, &cfg, &opts)?;
+    println!("{}", plan.cost_report().table(&cfg).to_markdown());
 
-    println!(
-        "{:<12} {:>12} {:>10} {:>12} {:>12} {:>10}",
-        "layer", "shape", "tiles", "SNR (dB)", "µJ", "kcycles"
-    );
-    let mut x_cim = image.clone();
-    let mut x_dig = image.clone();
-    for (li, (name, layer)) in net.conv_layers().into_iter().enumerate() {
-        if li >= n_layers {
-            break;
-        }
-        // Activation calibration: max over the digital input (deployment
-        // recipe); inputs to conv are post-ReLU non-negative.
-        let cal = x_dig.max_abs().max(1e-6);
-        let conv = CimConv::new(
-            &layer.w,
-            layer.b.clone(),
-            layer.stride,
-            layer.pad,
-            cal,
-            &cfg,
-        );
-        let e0 = cim.stats().energy_fj();
-        let c0 = cim.stats().total_cycles;
-        let y_cim = relu(conv.run(&mut cim, &x_cim)?);
-        let y_dig = relu(conv.run(&mut dig, &x_dig)?);
-        let snr = snr_db(&y_dig, &y_cim);
-        println!(
-            "{:<12} {:>12} {:>10} {:>12.1} {:>12.2} {:>10.1}",
-            name,
-            format!("{:?}", y_cim.shape),
-            conv.linear.ops_per_vector(),
-            snr,
-            (cim.stats().energy_fj() - e0) * 1e-9,
-            (cim.stats().total_cycles - c0) as f64 / 1e3,
-        );
-        x_cim = y_cim;
-        x_dig = y_dig;
+    // ---- execute end to end on the pool ----
+    let imgs: Vec<Tensor> = (0..n_images).map(|i| random_image(&[3, 32, 32], 7 + i as u64)).collect();
+    let logits = plan.run_batch(&imgs)?;
+    for (i, row) in logits.iter().enumerate() {
+        println!("image {i}: argmax {} logits[0..4] {:?}", argmax(row), &row[..4]);
     }
 
-    let st = cim.stats();
+    // ---- verify: bit-identical to the sequential per-layer CimConv path ----
+    let cal = calibrate(&graph, &cal_imgs)?;
+    let direct = sequential_reference(&net, &graph, &cal, &cfg, &imgs[0])?;
+    assert_eq!(
+        logits[0], direct,
+        "compiled plan diverged from the sequential per-layer path"
+    );
+    println!("\nverified: compiled ≡ sequential per-layer CimConv path (bit-identical, noise-free)");
+
+    // ---- per-layer observed accounting (cycles predicted vs measured) ----
+    println!("\n{}", plan.observed_table().to_markdown());
+    let st = plan.stats();
     let macs = st.core_ops as f64 * (cfg.mac.engines * cfg.mac.rows) as f64;
     println!(
-        "\ntotals: {} core ops ({:.1}M MACs incl. padding), {:.1} µJ, {:.2} ms device time, {:.1} TOPS/W",
+        "totals: {} core ops ({:.1}M MACs incl. padding), {:.1} µJ, {:.2} ms device time/image, {:.1} TOPS/W",
         st.core_ops,
         macs / 1e6,
         st.energy_fj() * 1e-9,
-        st.total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3,
+        st.total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3 / n_images as f64,
         2.0 * macs / (st.energy_fj() * 1e-15) / 1e12,
     );
-    println!("boosted-clipping events: {} ({:.3}% of engine results)",
-        st.clipped,
-        100.0 * st.clipped as f64 / (st.core_ops as f64 * cfg.mac.engines as f64));
     Ok(())
+}
+
+/// The pre-compiler execution style: every conv through `CimConv` on a
+/// single macro, residuals and pooling in the float digital domain, using
+/// the compiler's own calibration values.
+fn sequential_reference(
+    net: &ResNet20,
+    graph: &Graph,
+    cal: &cimsim::compiler::Calibration,
+    cfg: &Config,
+    img: &Tensor,
+) -> Result<Vec<f32>, Box<dyn std::error::Error>> {
+    // Calibration max per layer name (from each conv's quantize node).
+    let act_max = |name: &str| -> f32 {
+        for node in &graph.nodes {
+            if node.name == name {
+                if let Op::Quantize { .. } = graph.nodes[node.inputs[0]].op {
+                    return cal.act_max(node.inputs[0]);
+                }
+            }
+        }
+        panic!("layer `{name}` not found in graph");
+    };
+    let run = |be: &mut NativeBackend, l: &cimsim::nn::resnet::ConvLayer, name: &str, x: &Tensor| {
+        CimConv::new(&l.w, l.b.clone(), l.stride, l.pad, act_max(name), cfg).run(be, x)
+    };
+
+    let mut be = NativeBackend::new(cfg.clone());
+    let mut h = relu(run(&mut be, &net.stem, "stem", img)?);
+    for (si, stage) in net.stages.iter().enumerate() {
+        for (bi, block) in stage.iter().enumerate() {
+            let p = format!("s{si}b{bi}");
+            let a = relu(run(&mut be, &block.conv1, &format!("{p}.conv1"), &h)?);
+            let a = run(&mut be, &block.conv2, &format!("{p}.conv2"), &a)?;
+            let idn = match &block.proj {
+                Some(proj) => run(&mut be, proj, &format!("{p}.proj"), &h)?,
+                None => h.clone(),
+            };
+            let mut sum = a;
+            for (o, i) in sum.data.iter_mut().zip(&idn.data) {
+                *o += i;
+            }
+            h = relu(sum);
+        }
+    }
+    let pooled = Tensor::from_vec(&[64], global_avg_pool(&h));
+    // FC layer: same lowered layer the plan holds (last layer), sequentially.
+    let fc_q = graph
+        .nodes
+        .iter()
+        .position(|n| n.name == "fc")
+        .map(|id| graph.nodes[id].inputs[0])
+        .expect("fc node");
+    let fc_cols = cimsim::compiler::transpose_rows_to_cols(&net.fc_w);
+    let fc = cimsim::mapping::executor::CimLinear::new(
+        &fc_cols,
+        net.fc_b.clone(),
+        cal.act_max(fc_q),
+        cfg,
+    );
+    Ok(fc.run_batch(&mut be, &[pooled.data])?.remove(0))
 }

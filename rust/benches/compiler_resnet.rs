@@ -1,0 +1,74 @@
+//! Compiler pipeline benchmark: compile ResNet-20 onto the pool (ingest →
+//! calibrate → lower → place → weight load) and run single-image compiled
+//! inference, noise-free. Emits comparable JSON rows and writes the
+//! headline row to `BENCH_compiler.json` in the working directory.
+//!
+//! Run: `cargo bench --bench compiler_resnet` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{black_box, json_row, Bench, JsonField};
+use cimsim::compiler::{compile, CompileOptions, Graph};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::nn::dataset::random_image;
+use cimsim::nn::resnet::ResNet20;
+use cimsim::nn::tensor::Tensor;
+use cimsim::util::threadpool::default_workers;
+
+fn main() {
+    let b = Bench::default();
+    let fast = std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+
+    let net = ResNet20::new(3);
+    let graph = Graph::from_resnet20(&net);
+    let cal: Vec<Tensor> = vec![random_image(&[3, 32, 32], 100)];
+    let workers = default_workers();
+    let opts = CompileOptions { workers, ..Default::default() };
+
+    // Compile (whole pipeline incl. placement + weight loading).
+    let compile_m = b.run_slow("compile resnet-20 (282 tiles)", if fast { 3 } else { 6 }, || {
+        black_box(compile(graph.clone(), &cal, &cfg, &opts).unwrap());
+    });
+
+    // Single-image compiled forward on the resident pool.
+    let mut plan = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+    let img = random_image(&[3, 32, 32], 7);
+    let fwd_m = b.run_slow(
+        &format!("compiled forward 1 img w{workers}"),
+        if fast { 3 } else { 8 },
+        || {
+            black_box(plan.run_batch(std::slice::from_ref(&img)).unwrap());
+        },
+    );
+
+    // One clean forward for the per-image device counters.
+    plan.reset_stats();
+    plan.run_batch(std::slice::from_ref(&img)).unwrap();
+    let device_ms = plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
+    let report = plan.cost_report();
+
+    let row = json_row(&[
+        JsonField::Str("bench", "compiler_resnet"),
+        JsonField::Str("network", "resnet20"),
+        JsonField::Int("tiles", report.total_tiles as i64),
+        JsonField::Int("shards", report.n_shards as i64),
+        JsonField::Int("workers", workers as i64),
+        JsonField::Num("compile_ms", compile_m.mean_s * 1e3),
+        JsonField::Num("forward_ms_per_img", fwd_m.mean_s * 1e3),
+        JsonField::Num("img_per_s", 1.0 / fwd_m.mean_s),
+        JsonField::Num("est_device_ms_per_img", device_ms),
+        JsonField::Num(
+            "est_kcycles_per_img",
+            report.total_est_cycles_per_input() as f64 / 1e3,
+        ),
+        JsonField::Str("source", "measured"),
+    ]);
+    println!("{row}");
+
+    let path = "BENCH_compiler.json";
+    match std::fs::write(path, format!("{row}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

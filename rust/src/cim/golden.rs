@@ -7,8 +7,17 @@ use crate::config::{Config, EnhanceConfig};
 
 /// Exact integer dot products: `Σ_r act[r]·w[r][e]` per engine.
 pub fn mac_exact(weights: &CoreWeights, acts: &[i64]) -> Vec<i64> {
+    let mut out = Vec::new();
+    mac_exact_into(weights, acts, &mut out);
+    out
+}
+
+/// Buffer-reusing form of [`mac_exact`] (the batched pipeline's per-op
+/// accounting path is allocation-free).
+pub fn mac_exact_into(weights: &CoreWeights, acts: &[i64], out: &mut Vec<i64>) {
     assert_eq!(acts.len(), weights.rows);
-    let mut out = vec![0i64; weights.engines];
+    out.clear();
+    out.resize(weights.engines, 0);
     for (r, &a) in acts.iter().enumerate() {
         if a == 0 {
             continue;
@@ -17,20 +26,25 @@ pub fn mac_exact(weights: &CoreWeights, acts: &[i64]) -> Vec<i64> {
             *o += a * weights.value(r, e);
         }
     }
-    out
 }
 
 /// The *folded* dot product the analog array actually computes:
 /// `Σ_r (act[r] − off)·w[r][e]` (== unfolded when folding is disabled).
 pub fn mac_folded(cfg: &Config, weights: &CoreWeights, acts: &[i64]) -> Vec<i64> {
+    let mut out = Vec::new();
+    mac_folded_into(cfg, weights, acts, &mut out);
+    out
+}
+
+/// Buffer-reusing form of [`mac_folded`].
+pub fn mac_folded_into(cfg: &Config, weights: &CoreWeights, acts: &[i64], out: &mut Vec<i64>) {
+    mac_exact_into(weights, acts, out);
     let off = if cfg.enhance.fold { cfg.enhance.fold_offset } else { 0 };
-    let mut out = mac_exact(weights, acts);
     if off != 0 {
         for (e, o) in out.iter_mut().enumerate() {
             *o -= off * weights.col_sum(e);
         }
     }
-    out
 }
 
 /// DTC scale as an exact rational `(num, den)` when the configured gains are

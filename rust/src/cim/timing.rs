@@ -17,6 +17,31 @@ pub fn finalize_cycles(cfg: &Config, stats: &mut OpStats) {
     stats.total_cycles = op_cycles(cfg, stats.mac_cycles);
 }
 
+/// Exact cycle count of one core op given its (padded, rows-long) unsigned
+/// activation tile — the compiler's cost-model primitive.
+///
+/// The controller allots the MAC window from the *programmed* DTC codes
+/// (nominal pulse widths), so the cycle count depends only on the
+/// activations and the configuration — never on the noise realization.
+/// This mirrors `engine::mac_phase_into` width accounting exactly: every
+/// row whose folded activation is non-zero pulses, and the widest pulse is
+/// the top weight-bit SL of the largest effective magnitude.
+pub fn op_cycles_for_acts(cfg: &Config, acts: &[i64]) -> u64 {
+    let kbits = (cfg.mac.weight_bits as usize).saturating_sub(1);
+    let s = cfg.enhance.dtc_scale();
+    let mut wmax = 0.0f64;
+    if kbits > 0 {
+        let top = (1u64 << (kbits - 1)) as f64;
+        for &a in acts {
+            let eff = crate::cim::engine::effective_act(cfg, a);
+            if eff != 0 {
+                wmax = wmax.max(eff.unsigned_abs() as f64 * top * s);
+            }
+        }
+    }
+    op_cycles(cfg, crate::cim::engine::mac_cycles(cfg, wmax))
+}
+
 /// Seconds for `cycles` at the configured clock.
 #[inline]
 pub fn cycles_to_seconds(cfg: &Config, cycles: u64) -> f64 {
@@ -64,6 +89,55 @@ mod tests {
         cfg.mac.clock_mhz = 100.0;
         let at100 = gops(&cfg, 15);
         assert!((at200 / at100 - 2.0).abs() < 1e-9);
+    }
+
+    /// The activation-based predictor reproduces the device's own cycle
+    /// accounting exactly — noise-free and noisy (nominal-width invariant),
+    /// in every enhancement mode.
+    #[test]
+    fn op_cycles_for_acts_matches_device() {
+        use crate::cim::MacroSim;
+        use crate::config::EnhanceConfig;
+        use crate::util::rng::{Rng, Xoshiro256};
+        for noise in [false, true] {
+            for enh in [
+                EnhanceConfig::default(),
+                EnhanceConfig::fold_only(),
+                EnhanceConfig::boost_only(),
+                EnhanceConfig::both(),
+            ] {
+                let mut cfg = Config::default();
+                cfg.noise.enabled = noise;
+                cfg.enhance = enh;
+                let mut sim = MacroSim::new(cfg.clone());
+                let mut rng = Xoshiro256::seeded(31);
+                let w: Vec<Vec<i64>> = (0..cfg.mac.rows)
+                    .map(|_| {
+                        (0..cfg.mac.engines).map(|_| rng.next_range_i64(-7, 7)).collect()
+                    })
+                    .collect();
+                sim.load_core(0, &w).unwrap();
+                for t in 0..12u64 {
+                    // Include all-zero and sparse tiles (padding patterns).
+                    let acts: Vec<i64> = (0..cfg.mac.rows)
+                        .map(|r| {
+                            if t == 0 || r % 3 == 0 {
+                                0
+                            } else {
+                                rng.next_range_i64(0, 15)
+                            }
+                        })
+                        .collect();
+                    let got = sim.core_op(0, &acts, &mut rng).unwrap();
+                    assert_eq!(
+                        got.stats.total_cycles,
+                        op_cycles_for_acts(&cfg, &acts),
+                        "noise={noise} mode={} t={t}",
+                        cfg.enhance.label()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! The compiler's graph IR: a small, explicitly-quantized dataflow graph
+//! over CHW tensors and flat vectors.
+//!
+//! Nodes are appended in topological order (inputs must refer to earlier
+//! nodes), so every pass is a single forward walk. Quantization boundaries
+//! are explicit [`Op::Quantize`] nodes: every `Conv2d`/`Linear` must consume
+//! one, and the lowerer fuses it into the placed layer (the macro's 4-b
+//! activation interface). [`Op::Dequantize`] is the digital periphery's
+//! affine return to float (`y = x·scale + bias`), used by graphs whose
+//! layers run with unit scales (e.g. [`Graph::from_deployment`]).
+
+use crate::coordinator::deployment::MlpDeployment;
+use crate::nn::im2col::conv_out_dims;
+use crate::nn::mlp::Mlp;
+use crate::nn::ops::{conv2d, global_avg_pool};
+use crate::nn::quant::QuantParams;
+use crate::nn::resnet::{ConvLayer, ResNet20};
+use crate::nn::tensor::Tensor;
+
+/// Index of a node in [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// One IR operation.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Network input placeholder; shape fixed at graph-build time.
+    Input { shape: Vec<usize> },
+    /// Activation quantization boundary feeding a `Conv2d`/`Linear`.
+    /// `None` ⇒ the params are calibrated from data at compile time
+    /// (unsigned, `act_bits`, max over the calibration set).
+    Quantize { params: Option<QuantParams> },
+    /// Affine return to float: `y = x·scale + bias` (`bias` may be empty;
+    /// when present the value must be rank-1 with matching length).
+    Dequantize { scale: f32, bias: Vec<f32> },
+    /// Convolution, CHW in/out. `w` is `[oc][ic][kh][kw]`. With
+    /// `w_params: None` the weights are float and quantized max-abs at
+    /// compile time, and dequant+bias are fused into the placed layer;
+    /// with explicit params (e.g. unit scales for pre-quantized integer
+    /// planes) the layer emits raw integer sums and the graph must scale
+    /// them back with a `Dequantize`.
+    Conv2d {
+        w: Tensor,
+        bias: Vec<f32>,
+        stride: usize,
+        pad: usize,
+        w_params: Option<QuantParams>,
+    },
+    /// Fully-connected layer; `w_cols` is `[K][N]` (column per output).
+    /// Same `w_params` convention as `Conv2d`.
+    Linear { w_cols: Tensor, bias: Vec<f32>, w_params: Option<QuantParams> },
+    /// Elementwise max(x, 0).
+    Relu,
+    /// Elementwise residual add of two equal-shaped values.
+    Add,
+    /// `[C][H][W]` → `[C]` mean pool.
+    GlobalAvgPool,
+}
+
+impl Op {
+    /// Number of inputs the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Input { .. } => 0,
+            Op::Add => 2,
+            _ => 1,
+        }
+    }
+
+    /// Short kind label for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "input",
+            Op::Quantize { .. } => "quantize",
+            Op::Dequantize { .. } => "dequantize",
+            Op::Conv2d { .. } => "conv",
+            Op::Linear { .. } => "linear",
+            Op::Relu => "relu",
+            Op::Add => "add",
+            Op::GlobalAvgPool => "gap",
+        }
+    }
+}
+
+/// One graph node: an op, its input value ids, and a report-friendly name.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub name: String,
+}
+
+/// A whole-network dataflow graph. Built by the `from_*` ingest helpers or
+/// by hand with [`Graph::add`].
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    output: Option<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node; its inputs must already exist (topological order by
+    /// construction). The last node added becomes the output unless
+    /// [`Graph::set_output`] overrides it.
+    pub fn add(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> NodeId {
+        let id = self.nodes.len();
+        assert_eq!(inputs.len(), op.arity(), "op arity");
+        for &i in inputs {
+            assert!(i < id, "node inputs must precede the node (got {i} for {id})");
+        }
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), name: name.into() });
+        self.output = Some(id);
+        id
+    }
+
+    pub fn set_output(&mut self, id: NodeId) {
+        assert!(id < self.nodes.len());
+        self.output = Some(id);
+    }
+
+    pub fn output(&self) -> NodeId {
+        self.output.expect("empty graph has no output")
+    }
+
+    /// The graph's input shape (exactly one `Input` node is required).
+    pub fn input_shape(&self) -> Result<&[usize], String> {
+        let mut found = None;
+        for n in &self.nodes {
+            if let Op::Input { shape } = &n.op {
+                if found.is_some() {
+                    return Err("graph has more than one Input node".into());
+                }
+                found = Some(shape.as_slice());
+            }
+        }
+        found.ok_or_else(|| "graph has no Input node".into())
+    }
+
+    /// Infer and validate every node's value shape.
+    pub fn infer_shapes(&self) -> Result<Vec<Vec<usize>>, String> {
+        self.input_shape()?;
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(self.nodes.len());
+        for (id, node) in self.nodes.iter().enumerate() {
+            let at = |i: usize| -> &Vec<usize> { &shapes[node.inputs[i]] };
+            let err = |m: String| format!("node {id} `{}`: {m}", node.name);
+            let shape = match &node.op {
+                Op::Input { shape } => shape.clone(),
+                Op::Quantize { .. } | Op::Relu => at(0).clone(),
+                Op::Dequantize { bias, .. } => {
+                    let s = at(0);
+                    if !bias.is_empty() && (s.len() != 1 || s[0] != bias.len()) {
+                        return Err(err(format!(
+                            "dequantize bias length {} vs value shape {s:?}",
+                            bias.len()
+                        )));
+                    }
+                    s.clone()
+                }
+                Op::Conv2d { w, stride, pad, .. } => {
+                    let s = at(0);
+                    if s.len() != 3 {
+                        return Err(err(format!("conv input must be CHW, got {s:?}")));
+                    }
+                    let (oc, ic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                    if s[0] != ic {
+                        return Err(err(format!("conv channels {} vs input {}", ic, s[0])));
+                    }
+                    let (oh, ow) = conv_out_dims(s[1], s[2], kh, kw, *stride, *pad);
+                    vec![oc, oh, ow]
+                }
+                Op::Linear { w_cols, bias, .. } => {
+                    let s = at(0);
+                    let (k, n) = (w_cols.shape[0], w_cols.shape[1]);
+                    if s.len() != 1 || s[0] != k {
+                        return Err(err(format!("linear expects [{k}], got {s:?}")));
+                    }
+                    if bias.len() != n {
+                        return Err(err(format!("linear bias {} vs N {n}", bias.len())));
+                    }
+                    vec![n]
+                }
+                Op::Add => {
+                    if at(0) != at(1) {
+                        return Err(err(format!("add shapes {:?} vs {:?}", at(0), at(1))));
+                    }
+                    at(0).clone()
+                }
+                Op::GlobalAvgPool => {
+                    let s = at(0);
+                    if s.len() != 3 {
+                        return Err(err(format!("gap input must be CHW, got {s:?}")));
+                    }
+                    vec![s[0]]
+                }
+            };
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Float reference evaluation of every node. Calibrated (`params:
+    /// None`) `Quantize` nodes are identity — the unquantized float golden;
+    /// explicit-param `Quantize` nodes emit their integer codes (as floats),
+    /// so unit-scale graphs like [`Graph::from_deployment`] evaluate the
+    /// quantized arithmetic exactly (matching `MlpDeployment::run_digital`).
+    /// This is the golden path the equivalence tests compare against, and
+    /// what calibration runs over.
+    pub fn eval_float(&self, x: &Tensor) -> Result<Vec<Tensor>, String> {
+        let mut vals: Vec<Tensor> = Vec::with_capacity(self.nodes.len());
+        for (id, node) in self.nodes.iter().enumerate() {
+            let at = |i: usize| -> &Tensor { &vals[node.inputs[i]] };
+            let err = |m: String| format!("node {id} `{}`: {m}", node.name);
+            let v = match &node.op {
+                Op::Input { shape } => {
+                    if x.shape != *shape {
+                        return Err(err(format!("input {:?} vs graph {shape:?}", x.shape)));
+                    }
+                    x.clone()
+                }
+                Op::Quantize { params } => match params {
+                    None => at(0).clone(),
+                    Some(p) => Tensor::from_vec(
+                        &at(0).shape,
+                        at(0).data.iter().map(|&v| p.quantize(v) as f32).collect(),
+                    ),
+                },
+                Op::Dequantize { scale, bias } => dequantize(at(0), *scale, bias),
+                Op::Conv2d { w, bias, stride, pad, .. } => {
+                    conv2d(at(0), w, Some(bias), *stride, *pad)
+                }
+                Op::Linear { w_cols, bias, .. } => {
+                    let t = at(0);
+                    let (k, n) = (w_cols.shape[0], w_cols.shape[1]);
+                    if t.data.len() != k {
+                        return Err(err(format!("linear input {} vs K {k}", t.data.len())));
+                    }
+                    let mut y = vec![0f32; n];
+                    for (nn, yv) in y.iter_mut().enumerate() {
+                        let mut acc = 0f32;
+                        for (kk, &xv) in t.data.iter().enumerate() {
+                            acc += xv * w_cols.at2(kk, nn);
+                        }
+                        *yv = acc + bias[nn];
+                    }
+                    Tensor::from_vec(&[n], y)
+                }
+                Op::Relu => at(0).clone().map(|v| v.max(0.0)),
+                Op::Add => {
+                    let (a, b) = (at(0), at(1));
+                    if a.shape != b.shape {
+                        return Err(err(format!("add {:?} vs {:?}", a.shape, b.shape)));
+                    }
+                    let mut out = a.clone();
+                    for (o, i) in out.data.iter_mut().zip(&b.data) {
+                        *o += i;
+                    }
+                    out
+                }
+                Op::GlobalAvgPool => {
+                    let c = at(0).shape[0];
+                    Tensor::from_vec(&[c], global_avg_pool(at(0)))
+                }
+            };
+            vals.push(v);
+        }
+        Ok(vals)
+    }
+
+    // ---- ingest builders ----
+
+    /// A float MLP as a calibrated graph: `Quantize → Linear (→ Relu)` per
+    /// layer, dequant+bias fused into each layer.
+    pub fn from_mlp(mlp: &Mlp) -> Self {
+        let mut g = Graph::new();
+        let d0 = mlp.layers[0].w.shape[1];
+        let mut cur = g.add("input", Op::Input { shape: vec![d0] }, &[]);
+        for (i, layer) in mlp.layers.iter().enumerate() {
+            let q = g.add(format!("fc{i}.q"), Op::Quantize { params: None }, &[cur]);
+            cur = g.add(
+                format!("fc{i}"),
+                Op::Linear {
+                    w_cols: transpose_rows_to_cols(&layer.w),
+                    bias: layer.b.clone(),
+                    w_params: None,
+                },
+                &[q],
+            );
+            if i + 1 < mlp.layers.len() {
+                cur = g.add(format!("fc{i}.relu"), Op::Relu, &[cur]);
+            }
+        }
+        g
+    }
+
+    /// ResNet-20 (CIFAR-shaped) as a calibrated graph — the paper's Fig. 1
+    /// mapping workload: stem + 3 stages × 3 residual blocks + GAP + FC.
+    pub fn from_resnet20(net: &ResNet20) -> Self {
+        let mut g = Graph::new();
+        let mut cur = g.add("input", Op::Input { shape: vec![3, 32, 32] }, &[]);
+        cur = add_conv(&mut g, "stem", &net.stem, cur);
+        cur = g.add("stem.relu", Op::Relu, &[cur]);
+        for (si, stage) in net.stages.iter().enumerate() {
+            for (bi, block) in stage.iter().enumerate() {
+                let p = format!("s{si}b{bi}");
+                let block_in = cur;
+                let h = add_conv(&mut g, format!("{p}.conv1"), &block.conv1, block_in);
+                let h = g.add(format!("{p}.conv1.relu"), Op::Relu, &[h]);
+                let h = add_conv(&mut g, format!("{p}.conv2"), &block.conv2, h);
+                let idn = match &block.proj {
+                    Some(proj) => add_conv(&mut g, format!("{p}.proj"), proj, block_in),
+                    None => block_in,
+                };
+                let sum = g.add(format!("{p}.add"), Op::Add, &[h, idn]);
+                cur = g.add(format!("{p}.relu"), Op::Relu, &[sum]);
+            }
+        }
+        let gap = g.add("gap", Op::GlobalAvgPool, &[cur]);
+        let q = g.add("fc.q", Op::Quantize { params: None }, &[gap]);
+        g.add(
+            "fc",
+            Op::Linear {
+                w_cols: transpose_rows_to_cols(&net.fc_w),
+                bias: net.fc_b.clone(),
+                w_params: None,
+            },
+            &[q],
+        );
+        g
+    }
+
+    /// A post-training-quantized [`MlpDeployment`] as a unit-scale graph:
+    /// layers carry the integer weight planes with unit quantization params
+    /// and explicit `Dequantize` nodes restore the deployment's scales —
+    /// arithmetic identical, expression for expression, to
+    /// [`MlpDeployment::run_native`], so the compiled plan is bit-identical
+    /// to it noise-free.
+    pub fn from_deployment(dep: &MlpDeployment) -> Self {
+        let unit_w = QuantParams { scale: 1.0, q_min: -7, q_max: 7 };
+        let a0 = QuantParams { scale: dep.a0_scale, q_min: 0, q_max: 15 };
+        let a1_scale = dep.a1_cal / 15.0;
+        let a1 = QuantParams { scale: a1_scale, q_min: 0, q_max: 15 };
+
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![dep.dims[0]] }, &[]);
+        let q0 = g.add("fc0.q", Op::Quantize { params: Some(a0) }, &[x]);
+        let l0 = g.add(
+            "fc0",
+            Op::Linear {
+                w_cols: dep.w1_q.clone(),
+                bias: vec![0.0; dep.dims[1]],
+                w_params: Some(unit_w),
+            },
+            &[q0],
+        );
+        let d0 = g.add(
+            "fc0.deq",
+            Op::Dequantize { scale: dep.a0_scale * dep.w1_scale, bias: dep.b1.clone() },
+            &[l0],
+        );
+        let r0 = g.add("fc0.relu", Op::Relu, &[d0]);
+        let q1 = g.add("fc1.q", Op::Quantize { params: Some(a1) }, &[r0]);
+        let l1 = g.add(
+            "fc1",
+            Op::Linear {
+                w_cols: dep.w2_q.clone(),
+                bias: vec![0.0; dep.dims[2]],
+                w_params: Some(unit_w),
+            },
+            &[q1],
+        );
+        g.add(
+            "fc1.deq",
+            Op::Dequantize { scale: a1_scale * dep.w2_scale, bias: dep.b2.clone() },
+            &[l1],
+        );
+        g
+    }
+}
+
+fn add_conv(g: &mut Graph, name: impl Into<String>, layer: &ConvLayer, input: NodeId) -> NodeId {
+    let name = name.into();
+    let q = g.add(format!("{name}.q"), Op::Quantize { params: None }, &[input]);
+    g.add(
+        name,
+        Op::Conv2d {
+            w: layer.w.clone(),
+            bias: layer.b.clone(),
+            stride: layer.stride,
+            pad: layer.pad,
+            w_params: None,
+        },
+        &[q],
+    )
+}
+
+/// The `Dequantize` affine `y = x·scale + bias` — the single definition
+/// shared by [`Graph::eval_float`] and the compiled-plan executor.
+pub(crate) fn dequantize(t: &Tensor, scale: f32, bias: &[f32]) -> Tensor {
+    if bias.is_empty() {
+        t.clone().map(|v| v * scale)
+    } else {
+        Tensor::from_vec(
+            &t.shape,
+            t.data.iter().zip(bias).map(|(&v, &b)| v * scale + b).collect(),
+        )
+    }
+}
+
+/// Transpose `[out][in]` weights to `[in][out]` (one column per engine) —
+/// the layout `CimLinear` consumes. Public so references built outside the
+/// compiler (examples, tests) share the exact lowering layout.
+pub fn transpose_rows_to_cols(w: &Tensor) -> Tensor {
+    assert_eq!(w.rank(), 2);
+    let (o, i) = (w.shape[0], w.shape[1]);
+    let mut t = Tensor::zeros(&[i, o]);
+    for oo in 0..o {
+        for ii in 0..i {
+            *t.at2_mut(ii, oo) = w.at2(oo, ii);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::dataset::random_image;
+
+    #[test]
+    fn mlp_graph_shapes_and_float_eval_match_mlp() {
+        let mlp = Mlp::new(&[12, 8, 4], 3);
+        let g = Graph::from_mlp(&mlp);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![4]);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.37).sin().abs()).collect();
+        let vals = g.eval_float(&Tensor::from_vec(&[12], x.clone())).unwrap();
+        let want = mlp.logits(&x);
+        let got = &vals[g.output()].data;
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn resnet_graph_matches_float_forward() {
+        let net = ResNet20::new(5);
+        let g = Graph::from_resnet20(&net);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![10]);
+        // Conv node count: 19 main + 2 projections.
+        let convs = g.nodes.iter().filter(|n| matches!(n.op, Op::Conv2d { .. })).count();
+        assert_eq!(convs, 21);
+        let x = random_image(&[3, 32, 32], 9);
+        let vals = g.eval_float(&x).unwrap();
+        let want = net.forward(&x);
+        let got = &vals[g.output()].data;
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_caught() {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![3, 8, 8] }, &[]);
+        let q = g.add("q", Op::Quantize { params: None }, &[x]);
+        // 4-input-channel conv on a 3-channel value.
+        g.add(
+            "bad",
+            Op::Conv2d {
+                w: Tensor::zeros(&[2, 4, 3, 3]),
+                bias: vec![0.0; 2],
+                stride: 1,
+                pad: 1,
+                w_params: None,
+            },
+            &[q],
+        );
+        assert!(g.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn deployment_graph_structure() {
+        let mlp = Mlp::new(&[6, 5, 3], 1);
+        let cal: Vec<Vec<f32>> = (0..4).map(|i| vec![0.1 * (i as f32 + 1.0); 6]).collect();
+        let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+        let g = Graph::from_deployment(&dep);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![3]);
+        assert!(matches!(g.nodes[g.output()].op, Op::Dequantize { .. }));
+        // Both linears carry explicit unit weight params.
+        for n in &g.nodes {
+            if let Op::Linear { w_params, .. } = &n.op {
+                assert_eq!(w_params.unwrap().scale, 1.0);
+            }
+        }
+        // The float golden of a unit-scale graph IS the quantized digital
+        // reference (explicit-param Quantize nodes emit integer codes).
+        let x: Vec<f32> = (0..6).map(|i| 0.15 * (i as f32 + 1.0)).collect();
+        let want = dep.run_digital(&[x.clone()]).remove(0);
+        let got = g.eval_float(&Tensor::from_vec(&[6], x)).unwrap();
+        for (a, b) in got[g.output()].data.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Lowering: graph IR → tiled macro layers.
+//!
+//! Each `Conv2d`/`Linear` node (with its mandatory `Quantize` input) lowers
+//! to a [`CimLinear`] — conv weights via the shared im2col lowering
+//! (`nn::im2col::weights_to_cols`), linear weights directly — with
+//! per-layer activation-range calibration: [`calibrate`] runs the float
+//! graph over a calibration set and records each quantize boundary's
+//! maximum activation, exactly the deployment recipe `CimConv::new` uses.
+
+use crate::compiler::ir::{Graph, NodeId, Op};
+use crate::config::Config;
+use crate::mapping::executor::CimLinear;
+use crate::nn::im2col::weights_to_cols;
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+
+/// Compilation failure.
+#[derive(Debug)]
+pub enum CompileError {
+    /// The graph violates a structural rule (missing quantize, bad shapes…).
+    Structure(String),
+    /// The pool rejected a placement or load.
+    Macro(crate::cim::MacroError),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::Structure(m) => write!(f, "compile error: {m}"),
+            CompileError::Macro(e) => write!(f, "compile error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<crate::cim::MacroError> for CompileError {
+    fn from(e: crate::cim::MacroError) -> Self {
+        CompileError::Macro(e)
+    }
+}
+
+/// Per-node activation calibration: the maximum value seen at each
+/// data-calibrated `Quantize` boundary over the calibration set.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    act_max: Vec<f32>,
+}
+
+impl Calibration {
+    /// The calibrated activation max of a quantize node (≥ a small floor so
+    /// scales never divide by zero).
+    pub fn act_max(&self, node: NodeId) -> f32 {
+        self.act_max[node].max(1e-6)
+    }
+}
+
+/// Run the float graph over `inputs` and record each `Quantize(None)`
+/// node's input maximum. Graphs whose quantize params are all explicit
+/// (e.g. [`Graph::from_deployment`]) calibrate fine on an empty set.
+pub fn calibrate(graph: &Graph, inputs: &[Tensor]) -> Result<Calibration, CompileError> {
+    let needs_data = graph
+        .nodes
+        .iter()
+        .any(|n| matches!(n.op, Op::Quantize { params: None }));
+    if needs_data && inputs.is_empty() {
+        return Err(CompileError::Structure(
+            "graph has data-calibrated Quantize nodes but no calibration inputs".into(),
+        ));
+    }
+    let mut act_max = vec![0f32; graph.nodes.len()];
+    for x in inputs {
+        let vals = graph.eval_float(x).map_err(CompileError::Structure)?;
+        for (id, node) in graph.nodes.iter().enumerate() {
+            if let Op::Quantize { params: None } = node.op {
+                let src = node.inputs[0];
+                for &v in &vals[src].data {
+                    if v > act_max[id] {
+                        act_max[id] = v;
+                    }
+                }
+            }
+        }
+    }
+    Ok(Calibration { act_max })
+}
+
+/// What a lowered cim layer computes around its matmul.
+#[derive(Clone, Copy, Debug)]
+pub enum LayerKind {
+    /// im2col convolution: per-position rows through the tiled linear, back
+    /// to CHW.
+    Conv { kh: usize, kw: usize, stride: usize, pad: usize, out_c: usize },
+    /// One activation vector per batch item.
+    Linear,
+}
+
+/// A `Conv2d`/`Linear` node lowered to a tiled macro layer, not yet placed.
+#[derive(Clone, Debug)]
+pub struct LoweredLayer {
+    /// The compute node this lowers.
+    pub node: NodeId,
+    /// The node whose value feeds the layer (the quantize node's input —
+    /// quantization happens inside the layer step).
+    pub src: NodeId,
+    pub name: String,
+    pub kind: LayerKind,
+    /// Activation quantization applied to the layer's input rows.
+    pub qparams: QuantParams,
+    /// The tiled integer layer (weights quantized, dequant policy per
+    /// `w_params`: fused when calibrated, unit when explicit).
+    pub lin: CimLinear,
+    /// Activation vectors one network input generates (conv: `oh·ow`).
+    pub vectors_per_input: usize,
+}
+
+/// Lower every compute node of the graph. `shapes` comes from
+/// [`Graph::infer_shapes`]; `cal` from [`calibrate`].
+pub fn lower(
+    graph: &Graph,
+    shapes: &[Vec<usize>],
+    cal: &Calibration,
+    cfg: &Config,
+) -> Result<Vec<LoweredLayer>, CompileError> {
+    let mut layers = Vec::new();
+    for (id, node) in graph.nodes.iter().enumerate() {
+        let (w_cols, bias, w_params, kind, vectors) = match &node.op {
+            Op::Conv2d { w, bias, stride, pad, w_params } => {
+                let out_shape = &shapes[id];
+                (
+                    weights_to_cols(w),
+                    bias.clone(),
+                    *w_params,
+                    LayerKind::Conv {
+                        kh: w.shape[2],
+                        kw: w.shape[3],
+                        stride: *stride,
+                        pad: *pad,
+                        out_c: w.shape[0],
+                    },
+                    out_shape[1] * out_shape[2],
+                )
+            }
+            Op::Linear { w_cols, bias, w_params } => {
+                (w_cols.clone(), bias.clone(), *w_params, LayerKind::Linear, 1)
+            }
+            _ => continue,
+        };
+
+        let q = node.inputs[0];
+        let qparams = match &graph.nodes[q].op {
+            Op::Quantize { params } => params.unwrap_or_else(|| {
+                QuantParams::unsigned(cal.act_max(q), cfg.mac.act_bits)
+            }),
+            other => {
+                return Err(CompileError::Structure(format!(
+                    "`{}` must consume a Quantize node, found {}",
+                    node.name,
+                    other.kind()
+                )));
+            }
+        };
+
+        // Calibrated weights fuse dequant+bias into the layer (its activation
+        // params are the quantize boundary's). Explicit weight params run the
+        // layer at unit scales — the plane is quantized with the caller's
+        // params first, then loaded with scale-1 params on both sides, so the
+        // layer emits raw integer sums and the graph's Dequantize applies ALL
+        // scaling exactly once — bit-identical to `MlpDeployment::run_native`.
+        let lin = match w_params {
+            None => {
+                let wp = QuantParams::signed(w_cols.max_abs(), cfg.mac.weight_bits);
+                CimLinear::with_params(&w_cols, bias, wp, qparams, cfg)
+            }
+            Some(wp) => {
+                let w_q = Tensor::from_vec(
+                    &w_cols.shape,
+                    w_cols.data.iter().map(|&v| wp.quantize(v) as f32).collect(),
+                );
+                let unit_w = QuantParams { scale: 1.0, q_min: wp.q_min, q_max: wp.q_max };
+                let unit_a =
+                    QuantParams { scale: 1.0, q_min: qparams.q_min, q_max: qparams.q_max };
+                CimLinear::with_params(&w_q, bias, unit_w, unit_a, cfg)
+            }
+        };
+
+        layers.push(LoweredLayer {
+            node: id,
+            src: graph.nodes[q].inputs[0],
+            name: node.name.clone(),
+            kind,
+            qparams,
+            lin,
+            vectors_per_input: vectors,
+        });
+    }
+    Ok(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::Mlp;
+    use crate::nn::resnet::ResNet20;
+
+    #[test]
+    fn mlp_lowers_to_one_layer_per_linear() {
+        let mlp = Mlp::new(&[20, 10, 4], 2);
+        let g = Graph::from_mlp(&mlp);
+        let shapes = g.infer_shapes().unwrap();
+        let cal_x: Vec<Tensor> =
+            (0..3).map(|i| Tensor::from_vec(&[20], vec![0.2 * (i + 1) as f32; 20])).collect();
+        let cal = calibrate(&g, &cal_x).unwrap();
+        let cfg = Config::default();
+        let layers = lower(&g, &shapes, &cal, &cfg).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].lin.k, 20);
+        assert_eq!(layers[0].lin.n, 10);
+        assert!(matches!(layers[0].kind, LayerKind::Linear));
+        // Hidden quantize calibrated from data: scale = max/15.
+        let hidden_max = cal.act_max(g.nodes[layers[1].node].inputs[0]);
+        assert!((layers[1].qparams.scale - hidden_max / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resnet_lowering_counts_tiles() {
+        let net = ResNet20::new(1);
+        let g = Graph::from_resnet20(&net);
+        let shapes = g.infer_shapes().unwrap();
+        let cal_x = vec![crate::nn::dataset::random_image(&[3, 32, 32], 4)];
+        let cal = calibrate(&g, &cal_x).unwrap();
+        let cfg = Config::default();
+        let layers = lower(&g, &shapes, &cal, &cfg).unwrap();
+        assert_eq!(layers.len(), 22); // 21 convs + fc
+        let tiles: usize =
+            layers.iter().map(|l| l.lin.n_row_tiles() * l.lin.n_col_tiles()).sum();
+        // Hand-counted for the default 64-row × 16-engine macro geometry.
+        assert_eq!(tiles, 282);
+        // Stem: K = 3·3·3 = 27, N = 16 → one tile; conv vectors = 32×32.
+        let stem = layers.iter().find(|l| l.name == "stem").unwrap();
+        assert_eq!(stem.lin.k, 27);
+        assert_eq!(stem.vectors_per_input, 1024);
+    }
+
+    #[test]
+    fn missing_quantize_is_a_structure_error() {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![8] }, &[]);
+        g.add(
+            "fc",
+            Op::Linear {
+                w_cols: Tensor::zeros(&[8, 4]),
+                bias: vec![0.0; 4],
+                w_params: None,
+            },
+            &[x],
+        );
+        let shapes = g.infer_shapes().unwrap();
+        let cal = Calibration { act_max: vec![0.0; g.nodes.len()] };
+        assert!(matches!(
+            lower(&g, &shapes, &cal, &Config::default()),
+            Err(CompileError::Structure(_))
+        ));
+    }
+
+    #[test]
+    fn calibration_requires_data_only_when_needed() {
+        let mlp = Mlp::new(&[6, 4, 2], 7);
+        let g = Graph::from_mlp(&mlp);
+        assert!(matches!(calibrate(&g, &[]), Err(CompileError::Structure(_))));
+        let cal: Vec<Vec<f32>> = (0..3).map(|_| vec![0.5; 6]).collect();
+        let dep = crate::coordinator::deployment::MlpDeployment::quantize(&mlp, &cal, 1.0);
+        let gd = Graph::from_deployment(&dep);
+        assert!(calibrate(&gd, &[]).is_ok());
+    }
+}

@@ -1,0 +1,425 @@
+//! Place & schedule: the cost-model-driven placer and the per-layer /
+//! whole-network cost report.
+//!
+//! Cost model:
+//! * **Cycles** — built on [`crate::cim::timing::op_cycles`]. The device's
+//!   MAC window is scheduled from the *programmed* (nominal) DTC widths, so
+//!   per-op cycles are an exact function of the quantized activation tile:
+//!   [`predicted_tile_cycles`] reproduces the observed `OpStats` cycle sum
+//!   exactly, noise on or off (asserted by `tests/compiler_equivalence.rs`).
+//!   The placement-time static estimate uses the worst-case activation
+//!   magnitude, an upper bound that is tight for dense workloads.
+//! * **Energy** — built on [`crate::energy::core_op_energy`] over an
+//!   estimated activity [`OpStats`]: exact terms where the model is exact
+//!   (SA comparisons, cycle-driven control energy) and an
+//!   [`ActivationProfile`]-driven estimate for the data-dependent charge
+//!   terms (DTC pulses, array discharge — using each tile's actual Σ|w|).
+//!
+//! The placer packs tiles one at a time onto the shard with the lowest
+//! accumulated estimated cycles that still has a free core, growing the
+//! pool a shard at a time when none has — so layers reuse partially-filled
+//! shards and a board of dies ends up load-balanced.
+
+use crate::cim::engine::OpStats;
+use crate::cim::timing::{self, op_cycles_for_acts};
+use crate::config::Config;
+use crate::energy::core_op_energy;
+use crate::mapping::executor::CimLinear;
+use crate::pipeline::pool::{MacroPool, PlacedLinear};
+use crate::util::table::Table;
+
+/// Assumed activation statistics for the data-dependent energy terms.
+#[derive(Clone, Copy, Debug)]
+pub struct ActivationProfile {
+    /// Fraction of rows with a non-zero activation.
+    pub density: f64,
+    /// Mean magnitude of the non-zero activations (pre-folding, in codes).
+    pub mean_mag: f64,
+}
+
+impl ActivationProfile {
+    /// Dense random 4-b inputs (the paper's dense measurement condition).
+    pub fn dense(cfg: &Config) -> Self {
+        Self { density: 1.0, mean_mag: cfg.mac.act_max() as f64 / 2.0 }
+    }
+
+    /// Post-ReLU-like inputs: half the rows zero, small magnitudes — the
+    /// Fig. 5 sparsity operating point and the default for NN layers.
+    pub fn relu_like(cfg: &Config) -> Self {
+        Self { density: 0.5, mean_mag: cfg.mac.act_max() as f64 / 4.0 }
+    }
+}
+
+/// Worst-case effective activation magnitude after folding — what the
+/// static cycle estimate schedules for.
+fn worst_eff_mag(cfg: &Config) -> i64 {
+    if cfg.enhance.fold {
+        cfg.enhance.fold_offset.max(cfg.mac.act_max() - cfg.enhance.fold_offset)
+    } else {
+        cfg.mac.act_max()
+    }
+}
+
+/// Worst-case nominal pulse width in τ0 (largest effective magnitude on the
+/// top weight-bit source line).
+fn worst_width_tau0(cfg: &Config) -> f64 {
+    let kbits = (cfg.mac.weight_bits as usize).saturating_sub(1);
+    if kbits == 0 {
+        return 0.0;
+    }
+    worst_eff_mag(cfg) as f64 * (1u64 << (kbits - 1)) as f64 * cfg.enhance.dtc_scale()
+}
+
+/// Static worst-case cycle count of one core op (upper bound; exact when
+/// every tile has at least one worst-case-magnitude activation).
+pub fn static_op_cycles(cfg: &Config) -> u64 {
+    timing::op_cycles(cfg, crate::cim::engine::mac_cycles(cfg, worst_width_tau0(cfg)))
+}
+
+/// Estimated activity counters of one core op on a tile whose weights sum
+/// to `sum_abs_w` (Σ|w| over the rows×engines block), under `profile`.
+pub fn estimated_op_stats(cfg: &Config, profile: &ActivationProfile, sum_abs_w: f64) -> OpStats {
+    let mac = &cfg.mac;
+    let kbits = (mac.weight_bits as usize).saturating_sub(1);
+    let s = cfg.enhance.dtc_scale();
+    // With folding every row pulses (a zero activation folds to −offset);
+    // `mag` is then the mean effective magnitude over all rows.
+    let (active_frac, mag) = if cfg.enhance.fold {
+        let off = cfg.enhance.fold_offset as f64;
+        (1.0, profile.density * (profile.mean_mag - off).abs() + (1.0 - profile.density) * off)
+    } else {
+        (profile.density, profile.mean_mag)
+    };
+    let active_rows = active_frac * mac.rows as f64;
+    let weight_levels = ((1u64 << kbits) - 1) as f64;
+
+    let mut st = OpStats {
+        dtc_pulses: (active_rows * kbits as f64).round() as usize,
+        dtc_tau_sum: active_rows * mag * weight_levels * s,
+        sl_toggles: 2 * (active_rows * kbits as f64).round() as usize,
+        // E[Σ_r mag_r·|w_re|] over engines ≈ mean-eff-mag · Σ|w| (headroom
+        // clamp ignored — an over-estimate for saturating workloads).
+        mac_discharge_u: active_frac * mag * s * sum_abs_w,
+        // Binary-search readout discharges ≈ half the differential full
+        // scale per engine (each step halves the remaining range).
+        adc_discharge_u: mac.engines as f64 * mac.adc_fullscale_units() / 2.0,
+        sa_compares: mac.engines * mac.adc_bits as usize,
+        max_width_tau0: worst_width_tau0(cfg),
+        ..OpStats::default()
+    };
+    st.mac_cycles = crate::cim::engine::mac_cycles(cfg, st.max_width_tau0);
+    st.total_cycles = timing::op_cycles(cfg, st.mac_cycles);
+    st
+}
+
+/// Exact cycle cost of running quantized activation vectors through a tiled
+/// layer: for every vector and row tile, the padded tile's op cycles times
+/// the column-tile count. This is the number the device will report.
+pub fn predicted_tile_cycles(cfg: &Config, lin: &CimLinear, acts_q: &[Vec<i64>]) -> u64 {
+    let rows = lin.rows_per_tile();
+    let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+    let mut tile = vec![0i64; rows];
+    let mut total = 0u64;
+    for acts in acts_q {
+        debug_assert_eq!(acts.len(), lin.k);
+        for rt in 0..n_rt {
+            let r0 = rt * rows;
+            let upper = (r0 + rows).min(lin.k);
+            tile.fill(0);
+            tile[..upper - r0].copy_from_slice(&acts[r0..upper]);
+            total += n_ct as u64 * op_cycles_for_acts(cfg, &tile);
+        }
+    }
+    total
+}
+
+/// Static per-layer cost estimate, produced at placement time.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    pub kind: &'static str,
+    pub k: usize,
+    pub n: usize,
+    pub n_rt: usize,
+    pub n_ct: usize,
+    /// Activation vectors one network input streams through the layer.
+    pub vectors_per_input: usize,
+    /// Worst-case device cycles per network input (serial-device total).
+    pub est_cycles_per_input: u64,
+    /// Profile-estimated energy per network input, fJ.
+    pub est_energy_fj_per_input: f64,
+    /// Distinct shards this layer's tiles landed on.
+    pub shards_used: usize,
+}
+
+impl LayerCost {
+    pub fn tiles(&self) -> usize {
+        self.n_rt * self.n_ct
+    }
+}
+
+/// Whole-network placement + cost summary.
+#[derive(Clone, Debug, Default)]
+pub struct CostReport {
+    pub layers: Vec<LayerCost>,
+    pub total_tiles: usize,
+    pub n_shards: usize,
+    /// Weight SRAM held resident, Kb.
+    pub weight_kb: f64,
+}
+
+impl CostReport {
+    pub fn total_est_cycles_per_input(&self) -> u64 {
+        self.layers.iter().map(|l| l.est_cycles_per_input).sum()
+    }
+
+    pub fn total_est_energy_fj_per_input(&self) -> f64 {
+        self.layers.iter().map(|l| l.est_energy_fj_per_input).sum()
+    }
+
+    /// Render the per-layer breakdown (+ totals row) as a table; device
+    /// time from the configured clock.
+    pub fn table(&self, cfg: &Config) -> Table {
+        let ms = |cycles: u64| cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
+        let mut t = Table::new(
+            &format!(
+                "compiled plan: {} layers, {} tiles on {} shards ({:.0} Kb resident)",
+                self.layers.len(),
+                self.total_tiles,
+                self.n_shards,
+                self.weight_kb
+            ),
+            &[
+                "layer", "kind", "KxN", "tiles", "shards", "vec/in", "est kcyc/in",
+                "est ms/in", "est uJ/in",
+            ],
+        );
+        for l in &self.layers {
+            t.row(&[
+                l.name.clone(),
+                l.kind.to_string(),
+                format!("{}x{}", l.k, l.n),
+                l.tiles().to_string(),
+                l.shards_used.to_string(),
+                l.vectors_per_input.to_string(),
+                format!("{:.1}", l.est_cycles_per_input as f64 / 1e3),
+                format!("{:.3}", ms(l.est_cycles_per_input)),
+                format!("{:.3}", l.est_energy_fj_per_input * 1e-9),
+            ]);
+        }
+        let total_cycles = self.total_est_cycles_per_input();
+        t.row(&[
+            "TOTAL".into(),
+            "-".into(),
+            "-".into(),
+            self.total_tiles.to_string(),
+            self.n_shards.to_string(),
+            "-".into(),
+            format!("{:.1}", total_cycles as f64 / 1e3),
+            format!("{:.3}", ms(total_cycles)),
+            format!("{:.3}", self.total_est_energy_fj_per_input() * 1e-9),
+        ]);
+        t
+    }
+}
+
+/// The cost-model-driven placer: packs each tile onto the least-loaded
+/// shard (by accumulated estimated cycles) with a free core, growing the
+/// pool when every resident shard is full. `compile` pre-sizes the pool to
+/// the network's exact shard count, so the least-loaded choice has every
+/// die as a candidate and heavy layers' tiles spread across shards instead
+/// of dense-filling one die at a time.
+pub struct Placer {
+    profile: ActivationProfile,
+    shard_load: Vec<f64>,
+}
+
+impl Placer {
+    pub fn new(profile: ActivationProfile) -> Self {
+        Self { profile, shard_load: Vec::new() }
+    }
+
+    /// Place one lowered layer's tiles and return the placed layer plus its
+    /// static cost estimate.
+    pub fn place_layer(
+        &mut self,
+        pool: &mut MacroPool,
+        lin: CimLinear,
+        name: &str,
+        kind: &'static str,
+        vectors_per_input: usize,
+    ) -> Result<(PlacedLinear, LayerCost), crate::cim::MacroError> {
+        let cfg = pool.cfg().clone();
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        let op_cycles = static_op_cycles(&cfg);
+        let tile_cost = (op_cycles * vectors_per_input as u64) as f64;
+
+        let mut slots = Vec::with_capacity(n_rt * n_ct);
+        let mut shards_used = std::collections::BTreeSet::new();
+        let mut est_energy_per_vector = 0f64;
+        for rt in 0..n_rt {
+            for ct in 0..n_ct {
+                let sum_abs_w: f64 = lin
+                    .tile_block(rt, ct)
+                    .iter()
+                    .flat_map(|row| row.iter())
+                    .map(|&w| w.unsigned_abs() as f64)
+                    .sum();
+                let st = estimated_op_stats(&cfg, &self.profile, sum_abs_w);
+                est_energy_per_vector += core_op_energy(&cfg, &st).total_fj();
+
+                self.shard_load.resize(pool.n_shards().max(self.shard_load.len()), 0.0);
+                let mut best: Option<usize> = None;
+                for s in 0..pool.n_shards() {
+                    if pool.free_cores_on(s) == 0 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => self.shard_load[s] < self.shard_load[b],
+                    };
+                    if better {
+                        best = Some(s);
+                    }
+                }
+                let shard = match best {
+                    Some(s) => s,
+                    None => {
+                        let s = pool.n_shards();
+                        pool.grow_to(s + 1);
+                        self.shard_load.resize(s + 1, 0.0);
+                        s
+                    }
+                };
+                let slot = pool
+                    .alloc_slot_on_shard(shard)
+                    .expect("placer picked a shard with a free core");
+                self.shard_load[shard] += tile_cost;
+                shards_used.insert(shard);
+                slots.push(slot);
+            }
+        }
+
+        let cost = LayerCost {
+            name: name.to_string(),
+            kind,
+            k: lin.k,
+            n: lin.n,
+            n_rt,
+            n_ct,
+            vectors_per_input,
+            est_cycles_per_input: vectors_per_input as u64 * n_rt as u64 * n_ct as u64 * op_cycles,
+            est_energy_fj_per_input: vectors_per_input as f64 * est_energy_per_vector,
+            shards_used: shards_used.len(),
+        };
+        let placed = PlacedLinear::place_with(lin, pool, slots)?;
+        Ok((placed, cost))
+    }
+
+    /// Accumulated estimated cycles per shard (the balance the placer keeps).
+    pub fn shard_load(&self) -> &[f64] {
+        &self.shard_load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn rand_lin(cfg: &Config, k: usize, n: usize, seed: u64) -> CimLinear {
+        let mut rng = Xoshiro256::seeded(seed);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        CimLinear::new(&w, vec![0.0; n], 1.0, cfg)
+    }
+
+    #[test]
+    fn static_estimate_is_paper_dense_cycle_count() {
+        let cfg = Config::default();
+        // Baseline dense worst case: act 15, top bit → 60 τ0 → 15 cycles.
+        assert_eq!(static_op_cycles(&cfg), 15);
+    }
+
+    #[test]
+    fn placer_balances_layers_across_shards() {
+        let cfg = Config::default(); // 4 cores per shard
+        let mut pool = MacroPool::new(cfg.clone());
+        let mut placer = Placer::new(ActivationProfile::relu_like(&cfg));
+        // Layer A: 6 tiles → grows to 2 shards (4 + 2).
+        let (a, ca) = placer
+            .place_layer(&mut pool, rand_lin(&cfg, 130, 20, 1), "a", "linear", 1)
+            .unwrap();
+        assert_eq!(a.n_tiles(), 6);
+        assert_eq!(ca.tiles(), 6);
+        assert_eq!(pool.n_shards(), 2);
+        // Layer B: 2 tiles → must land on shard 1 (2 free cores, least load),
+        // reusing the partially-filled shard instead of growing.
+        let (b, cb) = placer
+            .place_layer(&mut pool, rand_lin(&cfg, 64, 20, 2), "b", "linear", 1)
+            .unwrap();
+        assert_eq!(b.n_tiles(), 2);
+        assert_eq!(pool.n_shards(), 2);
+        assert_eq!(pool.slots_loaded(), 8);
+        assert_eq!(cb.shards_used, 1);
+        assert!(placer.shard_load()[1] > 0.0);
+    }
+
+    /// On a pre-grown pool (what `compile` provides) the least-loaded rule
+    /// genuinely spreads a layer's tiles across dies.
+    #[test]
+    fn pre_grown_pool_spreads_tiles_by_load() {
+        let cfg = Config::default();
+        let mut pool = MacroPool::new(cfg.clone());
+        pool.grow_to(2);
+        let mut placer = Placer::new(ActivationProfile::relu_like(&cfg));
+        let (placed, cost) = placer
+            .place_layer(&mut pool, rand_lin(&cfg, 130, 20, 1), "a", "linear", 1)
+            .unwrap();
+        assert_eq!(placed.n_tiles(), 6);
+        assert_eq!(cost.shards_used, 2);
+        // 6 equal-cost tiles over 2 dies alternate: 3 + 3, loads equal.
+        assert_eq!(pool.free_cores_on(0), 1);
+        assert_eq!(pool.free_cores_on(1), 1);
+        let loads = placer.shard_load();
+        assert!((loads[0] - loads[1]).abs() < 1e-9, "{loads:?}");
+    }
+
+    #[test]
+    fn estimated_energy_positive_and_profile_monotone() {
+        let cfg = Config::default();
+        let dense = estimated_op_stats(&cfg, &ActivationProfile::dense(&cfg), 3000.0);
+        let sparse = estimated_op_stats(&cfg, &ActivationProfile::relu_like(&cfg), 3000.0);
+        let ed = core_op_energy(&cfg, &dense).total_fj();
+        let es = core_op_energy(&cfg, &sparse).total_fj();
+        assert!(ed > 0.0 && es > 0.0);
+        assert!(es < ed, "sparser profile must cost less: {es} vs {ed}");
+        assert_eq!(dense.sa_compares, 16 * 9);
+    }
+
+    #[test]
+    fn report_table_renders_with_totals() {
+        let cfg = Config::default();
+        let report = CostReport {
+            layers: vec![LayerCost {
+                name: "fc0".into(),
+                kind: "linear",
+                k: 144,
+                n: 32,
+                n_rt: 3,
+                n_ct: 2,
+                vectors_per_input: 1,
+                est_cycles_per_input: 90,
+                est_energy_fj_per_input: 1.0e6,
+                shards_used: 2,
+            }],
+            total_tiles: 6,
+            n_shards: 2,
+            weight_kb: 24.0,
+        };
+        let md = report.table(&cfg).to_markdown();
+        assert!(md.contains("fc0"));
+        assert!(md.contains("TOTAL"));
+        assert_eq!(report.total_est_cycles_per_input(), 90);
+    }
+}

@@ -1,0 +1,578 @@
+//! The executable end of the compiler: [`CompiledPlan`] — a whole network
+//! resident on a [`MacroPool`], executed batched through [`BatchExecutor`].
+//!
+//! `compile` runs the four stages (ingest happened when the graph was
+//! built): shape inference + structure checks → calibration → lowering →
+//! cost-model-driven placement. The resulting plan owns the pool (weights
+//! loaded exactly once) and executes any batch of inputs with per-layer
+//! cycle/energy accounting: `observed` device counters from the executor,
+//! and the cost model's exact `predicted` cycles alongside (asserted equal
+//! in `tests/compiler_equivalence.rs`).
+//!
+//! Determinism contract: with noise disabled, a compiled plan's outputs are
+//! bit-identical to running each lowered layer sequentially through
+//! `CimLinear::run_batch` / `CimConv::run` on a single macro, because the
+//! per-layer arithmetic is expression-for-expression the same and the
+//! batched executor is bit-identical to the sequential tiler.
+
+use crate::compiler::ir::{dequantize, Graph, NodeId, Op};
+use crate::compiler::lower::{calibrate, lower, CompileError, LayerKind, LoweredLayer};
+use crate::compiler::place::{predicted_tile_cycles, ActivationProfile, CostReport, Placer};
+use crate::config::Config;
+use crate::mapping::executor::{patches_to_rows, rows_to_chw, CimLinear};
+use crate::mapping::{ExecStats, MapError};
+use crate::nn::im2col::{conv_out_dims, im2col};
+use crate::nn::ops::global_avg_pool;
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+use crate::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use crate::util::table::Table;
+
+/// Knobs for [`compile`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileOptions {
+    /// Batch-executor worker threads (0 = auto).
+    pub workers: usize,
+    /// RNG seed for the executor's noise substreams (`None` derives from
+    /// `cfg.sim.seed`).
+    pub seed: Option<u64>,
+    /// Activation profile for the placer's energy estimates (`None` =
+    /// post-ReLU-like).
+    pub profile: Option<ActivationProfile>,
+}
+
+/// One placed network layer with its cumulative run accounting.
+pub struct CompiledLayer {
+    pub name: String,
+    node: NodeId,
+    src: NodeId,
+    kind: LayerKind,
+    qparams: QuantParams,
+    placed: PlacedLinear,
+    observed: ExecStats,
+    predicted_cycles: u64,
+}
+
+impl CompiledLayer {
+    /// The graph node this layer lowers.
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
+
+    pub fn linear(&self) -> &CimLinear {
+        self.placed.linear()
+    }
+
+    pub fn qparams(&self) -> QuantParams {
+        self.qparams
+    }
+
+    pub fn kind(&self) -> LayerKind {
+        self.kind
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.placed.n_tiles()
+    }
+
+    /// Device counters accumulated over every batch this layer ran.
+    pub fn observed(&self) -> &ExecStats {
+        &self.observed
+    }
+
+    /// The cost model's cycle prediction for the same runs (exact: equals
+    /// `observed().total_cycles`).
+    pub fn predicted_cycles(&self) -> u64 {
+        self.predicted_cycles
+    }
+}
+
+/// A compiled network resident on a macro pool.
+///
+/// Memory note: a plan keeps the ingested graph (float weights — backs
+/// [`Graph::eval_float`] golden references) and each layer's tiled integer
+/// planes (backs [`CompiledLayer::linear`] sequential references) alongside
+/// the pool's loaded weights. For ResNet-20 that is a few MB total — a
+/// deliberate simulator tradeoff of memory for introspection; only the pool
+/// copy is touched on the execute hot path.
+pub struct CompiledPlan {
+    cfg: Config,
+    graph: Graph,
+    pool: MacroPool,
+    exec: BatchExecutor,
+    layers: Vec<CompiledLayer>,
+    /// node id → compiled layer index (for `Conv2d`/`Linear` nodes).
+    node_layer: Vec<Option<usize>>,
+    /// Per node: the nodes whose *values* it reads at runtime (quantize
+    /// boundaries resolved to their producers).
+    data_src: Vec<Vec<NodeId>>,
+    /// Last node id that reads each node's value (liveness for buffer reuse).
+    last_use: Vec<usize>,
+    output_node: NodeId,
+    report: CostReport,
+    stats: ExecStats,
+}
+
+/// Compile a graph onto a fresh [`MacroPool`]: calibrate on `cal_inputs`,
+/// lower every layer, place tiles with the cost-model-driven placer, load
+/// weights once.
+pub fn compile(
+    graph: Graph,
+    cal_inputs: &[Tensor],
+    cfg: &Config,
+    opts: &CompileOptions,
+) -> Result<CompiledPlan, CompileError> {
+    let shapes = graph.infer_shapes().map_err(CompileError::Structure)?;
+    check_quantize_structure(&graph)?;
+    let cal = calibrate(&graph, cal_inputs)?;
+    let lowered = lower(&graph, &shapes, &cal, cfg)?;
+
+    let mut pool = MacroPool::new(cfg.clone());
+    // Pre-size the pool to the exact shard count the lowered network needs,
+    // so the placer has every die as a candidate and genuinely balances
+    // estimated per-shard work (instead of dense-filling one die at a time).
+    let needed_tiles: usize = lowered
+        .iter()
+        .map(|l| l.lin.n_row_tiles() * l.lin.n_col_tiles())
+        .sum();
+    pool.grow_to(needed_tiles.div_ceil(cfg.mac.cores.max(1)));
+    let profile = opts.profile.unwrap_or_else(|| ActivationProfile::relu_like(cfg));
+    let mut placer = Placer::new(profile);
+    let mut layers = Vec::with_capacity(lowered.len());
+    let mut node_layer = vec![None; graph.nodes.len()];
+    let mut report_layers = Vec::with_capacity(lowered.len());
+    for LoweredLayer { node, src, name, kind, qparams, lin, vectors_per_input } in lowered {
+        let kind_label = match kind {
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::Linear => "linear",
+        };
+        let (placed, cost) =
+            placer.place_layer(&mut pool, lin, &name, kind_label, vectors_per_input)?;
+        node_layer[node] = Some(layers.len());
+        layers.push(CompiledLayer {
+            name,
+            node,
+            src,
+            kind,
+            qparams,
+            placed,
+            observed: ExecStats::default(),
+            predicted_cycles: 0,
+        });
+        report_layers.push(cost);
+    }
+
+    let total_tiles: usize = layers.iter().map(|l| l.placed.n_tiles()).sum();
+    let report = CostReport {
+        layers: report_layers,
+        total_tiles,
+        n_shards: pool.n_shards(),
+        weight_kb: total_tiles as f64 * cfg.mac.core_kb(),
+    };
+
+    let n = graph.nodes.len();
+    let mut data_src: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for (id, node) in graph.nodes.iter().enumerate() {
+        if let Some(li) = node_layer[id] {
+            data_src[id] = vec![layers[li].src];
+        } else if !matches!(node.op, Op::Quantize { .. }) {
+            data_src[id] = node.inputs.clone();
+        }
+    }
+    let output_node = graph.output();
+    let mut last_use = vec![0usize; n];
+    for (id, srcs) in data_src.iter().enumerate() {
+        for &s in srcs {
+            last_use[s] = last_use[s].max(id);
+        }
+    }
+    last_use[output_node] = usize::MAX;
+
+    let seed = opts.seed.unwrap_or(cfg.sim.seed ^ 0xC09B_11E5);
+    let stats = ExecStats { weight_loads: total_tiles as u64, ..ExecStats::default() };
+    Ok(CompiledPlan {
+        cfg: cfg.clone(),
+        graph,
+        pool,
+        exec: BatchExecutor::new(opts.workers, seed),
+        layers,
+        node_layer,
+        data_src,
+        last_use,
+        output_node,
+        report,
+        stats,
+    })
+}
+
+/// `Quantize` nodes may only feed `Conv2d`/`Linear` (they are fused into
+/// the placed layer), may not chain, and may not be the graph output.
+fn check_quantize_structure(graph: &Graph) -> Result<(), CompileError> {
+    for node in &graph.nodes {
+        let is_cim = matches!(node.op, Op::Conv2d { .. } | Op::Linear { .. });
+        for &i in &node.inputs {
+            if matches!(graph.nodes[i].op, Op::Quantize { .. }) && !is_cim {
+                return Err(CompileError::Structure(format!(
+                    "Quantize `{}` feeds non-layer `{}`",
+                    graph.nodes[i].name, node.name
+                )));
+            }
+        }
+    }
+    if matches!(graph.nodes[graph.output()].op, Op::Quantize { .. }) {
+        return Err(CompileError::Structure("graph output is a Quantize node".into()));
+    }
+    Ok(())
+}
+
+impl CompiledPlan {
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn pool(&self) -> &MacroPool {
+        &self.pool
+    }
+
+    pub fn workers(&self) -> usize {
+        self.exec.workers()
+    }
+
+    pub fn layers(&self) -> &[CompiledLayer] {
+        &self.layers
+    }
+
+    pub fn total_tiles(&self) -> usize {
+        self.report.total_tiles
+    }
+
+    /// The placement-time cost estimates.
+    pub fn cost_report(&self) -> &CostReport {
+        &self.report
+    }
+
+    /// Cumulative device counters over every batch served.
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = ExecStats::default();
+        for l in &mut self.layers {
+            l.observed = ExecStats::default();
+            l.predicted_cycles = 0;
+        }
+    }
+
+    /// The network's input shape.
+    pub fn input_shape(&self) -> Vec<usize> {
+        self.graph.input_shape().expect("compiled graph has an input").to_vec()
+    }
+
+    /// Run a batch of inputs through the resident network; returns the
+    /// output node's value per item, flattened.
+    pub fn run_batch(&mut self, xs: &[Tensor]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.run_batch_owned(xs.to_vec())
+    }
+
+    /// Owned-input form of [`CompiledPlan::run_batch`] — the serving hot
+    /// path: the batch is materialized exactly once.
+    pub fn run_batch_owned(&mut self, xs: Vec<Tensor>) -> Result<Vec<Vec<f32>>, MapError> {
+        let mut input = Some(xs);
+        let n_nodes = self.graph.nodes.len();
+        let mut values: Vec<Option<Vec<Tensor>>> = (0..n_nodes).map(|_| None).collect();
+        for id in 0..n_nodes {
+            if let Some(li) = self.node_layer[id] {
+                let src = self.layers[li].src;
+                let items = values[src]
+                    .as_ref()
+                    .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
+                let (out, stats) =
+                    run_layer(&self.cfg, &self.pool, &self.exec, &mut self.layers[li], items)?;
+                self.stats.merge(&stats);
+                values[id] = Some(out);
+            } else {
+                let node = &self.graph.nodes[id];
+                // Fetch an input value, moving it on its final read
+                // (liveness) instead of cloning; `allow_take: false` forces
+                // a clone when the same node feeds two inputs.
+                let arg = |values: &mut [Option<Vec<Tensor>>],
+                           i: usize,
+                           allow_take: bool|
+                 -> Result<Vec<Tensor>, MapError> {
+                    let src = node.inputs[i];
+                    let v = if allow_take && self.last_use[src] == id {
+                        values[src].take()
+                    } else {
+                        values[src].as_ref().cloned()
+                    };
+                    v.ok_or_else(|| MapError::Shape("value consumed too early".into()))
+                };
+                let out = match &node.op {
+                    Op::Input { shape } => {
+                        let batch = input.take().ok_or_else(|| {
+                            MapError::Shape("graph has more than one Input node".into())
+                        })?;
+                        for t in &batch {
+                            if t.shape != *shape {
+                                return Err(MapError::Shape(format!(
+                                    "input shape {:?} vs plan {:?}",
+                                    t.shape, shape
+                                )));
+                            }
+                        }
+                        Some(batch)
+                    }
+                    // Fused into the consuming layer; holds no value.
+                    Op::Quantize { .. } => None,
+                    Op::Dequantize { scale, bias } => Some(
+                        arg(&mut values, 0, true)?
+                            .iter()
+                            .map(|t| dequantize(t, *scale, bias))
+                            .collect(),
+                    ),
+                    Op::Relu => Some(
+                        arg(&mut values, 0, true)?
+                            .into_iter()
+                            .map(|t| t.map(|v| v.max(0.0)))
+                            .collect(),
+                    ),
+                    Op::Add => {
+                        let distinct = node.inputs[0] != node.inputs[1];
+                        let a = arg(&mut values, 0, distinct)?;
+                        let b = arg(&mut values, 1, true)?;
+                        let mut out = Vec::with_capacity(a.len());
+                        for (ta, tb) in a.into_iter().zip(&b) {
+                            if ta.shape != tb.shape {
+                                return Err(MapError::Shape(format!(
+                                    "add shapes {:?} vs {:?}",
+                                    ta.shape, tb.shape
+                                )));
+                            }
+                            let mut t = ta;
+                            for (o, i) in t.data.iter_mut().zip(&tb.data) {
+                                *o += i;
+                            }
+                            out.push(t);
+                        }
+                        Some(out)
+                    }
+                    Op::GlobalAvgPool => Some(
+                        arg(&mut values, 0, true)?
+                            .iter()
+                            .map(|t| {
+                                let c = t.shape[0];
+                                Tensor::from_vec(&[c], global_avg_pool(t))
+                            })
+                            .collect(),
+                    ),
+                    Op::Conv2d { .. } | Op::Linear { .. } => {
+                        unreachable!("layer nodes are handled by node_layer")
+                    }
+                };
+                values[id] = out;
+            }
+            for &src in &self.data_src[id] {
+                if self.last_use[src] == id {
+                    values[src] = None;
+                }
+            }
+        }
+        let out = values[self.output_node]
+            .take()
+            .ok_or_else(|| MapError::Shape("output value missing".into()))?;
+        Ok(out.into_iter().map(|t| t.data).collect())
+    }
+
+    /// Flat-vector convenience for serving: wraps each request into the
+    /// plan's input shape.
+    pub fn run_flat(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        let shape = self.input_shape();
+        let len: usize = shape.iter().product();
+        let tensors: Vec<Tensor> = xs
+            .iter()
+            .map(|x| {
+                if x.len() != len {
+                    return Err(MapError::Shape(format!(
+                        "request length {} vs plan input {len}",
+                        x.len()
+                    )));
+                }
+                Ok(Tensor::from_vec(&shape, x.clone()))
+            })
+            .collect::<Result<_, _>>()?;
+        self.run_batch_owned(tensors)
+    }
+
+    /// Per-layer observed vs predicted run accounting (after at least one
+    /// batch).
+    pub fn observed_table(&self) -> Table {
+        let mut t = Table::new(
+            "per-layer run accounting (cumulative)",
+            &["layer", "core ops", "cycles", "predicted", "uJ", "clipped"],
+        );
+        for l in &self.layers {
+            t.row(&[
+                l.name.clone(),
+                l.observed.core_ops.to_string(),
+                l.observed.total_cycles.to_string(),
+                l.predicted_cycles.to_string(),
+                format!("{:.3}", l.observed.energy_fj() * 1e-9),
+                l.observed.clipped.to_string(),
+            ]);
+        }
+        t.row(&[
+            "TOTAL".into(),
+            self.stats.core_ops.to_string(),
+            self.stats.total_cycles.to_string(),
+            self.layers.iter().map(|l| l.predicted_cycles).sum::<u64>().to_string(),
+            format!("{:.3}", self.stats.energy_fj() * 1e-9),
+            self.stats.clipped.to_string(),
+        ]);
+        t
+    }
+}
+
+/// One placed layer over a batch of input values: (im2col →) quantize →
+/// pooled tiled matmul (→ CHW). Updates the layer's observed counters and
+/// the cost model's exact cycle prediction.
+fn run_layer(
+    cfg: &Config,
+    pool: &MacroPool,
+    exec: &BatchExecutor,
+    layer: &mut CompiledLayer,
+    items: &[Tensor],
+) -> Result<(Vec<Tensor>, ExecStats), MapError> {
+    let mut q: Vec<Vec<i64>> = Vec::new();
+    let mut dims: Vec<(usize, usize)> = Vec::new();
+    match layer.kind {
+        LayerKind::Conv { kh, kw, stride, pad, .. } => {
+            for t in items {
+                if t.rank() != 3 {
+                    return Err(MapError::Shape(format!(
+                        "conv `{}` input must be CHW, got {:?}",
+                        layer.name, t.shape
+                    )));
+                }
+                let patches = im2col(t, kh, kw, stride, pad);
+                for row in patches_to_rows(&patches) {
+                    q.push(layer.qparams.quantize_vec(&row));
+                }
+                dims.push(conv_out_dims(t.shape[1], t.shape[2], kh, kw, stride, pad));
+            }
+        }
+        LayerKind::Linear => {
+            for t in items {
+                q.push(layer.qparams.quantize_vec(&t.data));
+            }
+        }
+    }
+    layer.predicted_cycles += predicted_tile_cycles(cfg, layer.placed.linear(), &q);
+    let (rows, stats) = exec.run_q(pool, &layer.placed, &q)?;
+    layer.observed.merge(&stats);
+    let out = match layer.kind {
+        LayerKind::Conv { out_c, .. } => {
+            let mut out = Vec::with_capacity(items.len());
+            let mut offset = 0usize;
+            for &(oh, ow) in &dims {
+                out.push(rows_to_chw(&rows[offset..offset + oh * ow], out_c, oh, ow));
+                offset += oh * ow;
+            }
+            out
+        }
+        LayerKind::Linear => rows
+            .into_iter()
+            .map(|r| {
+                let n = r.len();
+                Tensor::from_vec(&[n], r)
+            })
+            .collect(),
+    };
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+    use crate::mapping::NativeBackend;
+    use crate::nn::mlp::Mlp;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn cal_set(dim: usize, n: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Xoshiro256::seeded(seed);
+        (0..n)
+            .map(|_| Tensor::from_vec(&[dim], (0..dim).map(|_| rng.next_f32()).collect()))
+            .collect()
+    }
+
+    /// A compiled 2-layer MLP equals running its own lowered layers
+    /// sequentially on a single macro (noise-free, any worker count).
+    #[test]
+    fn compiled_mlp_equals_sequential_layers() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let mlp = Mlp::new(&[30, 14, 6], 9);
+        let g = Graph::from_mlp(&mlp);
+        let cal = cal_set(30, 8, 3);
+        let xs = cal_set(30, 5, 77);
+
+        let mut plan =
+            compile(g, &cal, &cfg, &CompileOptions { workers: 3, ..Default::default() }).unwrap();
+        let got = plan.run_batch(&xs).unwrap();
+
+        // Sequential reference: the SAME lowered layers, one macro, with the
+        // MLP's float ops between them.
+        let mut nat = NativeBackend::new(cfg.clone());
+        let lin0 = plan.layers()[0].linear().clone();
+        let lin1 = plan.layers()[1].linear().clone();
+        for (x, out) in xs.iter().zip(&got) {
+            let s0 = lin0.run_batch(&mut nat, &[x.data.clone()]).unwrap().remove(0);
+            let h: Vec<f32> = s0.iter().map(|&v| v.max(0.0)).collect();
+            let s1 = lin1.run_batch(&mut nat, &[h]).unwrap().remove(0);
+            assert_eq!(out, &s1);
+        }
+        assert_eq!(
+            plan.stats().core_ops as usize,
+            (plan.layers()[0].n_tiles() + plan.layers()[1].n_tiles()) * xs.len()
+        );
+        assert_eq!(plan.stats().weight_loads as usize, plan.total_tiles());
+    }
+
+    #[test]
+    fn bad_input_shapes_are_rejected() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let mlp = Mlp::new(&[8, 4, 2], 1);
+        let g = Graph::from_mlp(&mlp);
+        let mut plan =
+            compile(g, &cal_set(8, 2, 1), &cfg, &CompileOptions::default()).unwrap();
+        assert!(matches!(
+            plan.run_flat(&[vec![0.0; 7]]),
+            Err(MapError::Shape(_))
+        ));
+        assert!(matches!(
+            plan.run_batch(&[Tensor::zeros(&[9])]),
+            Err(MapError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn quantize_feeding_non_layer_is_rejected() {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![4] }, &[]);
+        let q = g.add("q", Op::Quantize { params: None }, &[x]);
+        g.add("relu", Op::Relu, &[q]);
+        let cfg = Config::default();
+        let cal = cal_set(4, 2, 5);
+        assert!(matches!(
+            compile(g, &cal, &cfg, &CompileOptions::default()),
+            Err(CompileError::Structure(_))
+        ));
+    }
+}

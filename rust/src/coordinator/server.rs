@@ -2,11 +2,13 @@
 //! dynamically (size- or timeout-triggered), runs the deployed quantized
 //! MLP on an [`InferenceEngine`], and streams logits back.
 //!
-//! Two engines ship: [`BackendEngine`] (the classic single-macro
-//! `CimBackend` path, via [`serve`]) and the pooled batched pipeline
-//! (`pipeline::PipelineDeployment`, via [`serve_pipeline`]), which coalesces
+//! Three engines ship: [`BackendEngine`] (the classic single-macro
+//! `CimBackend` path, via [`serve`]), the pooled batched pipeline
+//! (`pipeline::PipelineDeployment`, via [`serve_pipeline`]) which coalesces
 //! up to `ServeConfig::max_batch` queued jobs into ONE pipeline call that
-//! fans the batch across worker threads.
+//! fans the batch across worker threads, and — since the graph compiler —
+//! ANY compiled network ([`crate::compiler::CompiledPlan`], via
+//! [`serve_plan`] / `serve --plan`), not just the two-layer MLP deployment.
 //!
 //! Wire protocol (little-endian):
 //!   request  = u32 magic (0xC1A0_0001) | u32 n | n × f32
@@ -94,6 +96,26 @@ impl InferenceEngine for PipelineDeployment {
     }
 }
 
+/// Any compiled network is a serving engine: requests are flat feature
+/// vectors reshaped to the plan's input shape.
+impl InferenceEngine for crate::compiler::CompiledPlan {
+    fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.run_flat(xs)
+    }
+
+    fn core_ops(&self) -> u64 {
+        self.stats().core_ops
+    }
+
+    fn energy_fj(&self) -> f64 {
+        self.stats().energy_fj()
+    }
+
+    fn device_cycles(&self) -> u64 {
+        self.stats().total_cycles
+    }
+}
+
 struct Job {
     input: Vec<f32>,
     reply: Sender<Vec<f32>>,
@@ -137,6 +159,21 @@ pub fn serve_pipeline(
     let engine =
         PipelineDeployment::new(deployment, sim_cfg, cfg.workers).map_err(std::io::Error::other)?;
     serve_engine(Box::new(engine), cfg)
+}
+
+/// Serve any compiled network: the plan (weights already resident on its
+/// pool) becomes the batch-inference engine behind the dynamic batcher —
+/// the `serve --plan` path.
+///
+/// Note: a plan's worker-thread count is a compile-time property
+/// (`CompileOptions::workers`); `ServeConfig::workers` is ignored on this
+/// path (it only configures engines the server builds itself, as
+/// [`serve_pipeline`] does).
+pub fn serve_plan(
+    plan: crate::compiler::CompiledPlan,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    serve_engine(Box::new(plan), cfg)
 }
 
 /// Start serving on an ephemeral local port with any [`InferenceEngine`].
@@ -414,5 +451,46 @@ mod tests {
         assert_eq!(metrics.requests, 1);
         assert!(metrics.core_ops > 0);
         assert!(metrics.energy_fj > 0.0);
+    }
+
+    /// A graph-compiled MLP behind the wire protocol answers with the same
+    /// logits as a direct (noise-free) plan invocation.
+    #[test]
+    fn compiled_plan_serve_roundtrip() {
+        use crate::compiler::{compile, CompileOptions, Graph};
+        use crate::nn::tensor::Tensor;
+
+        let mut d = BlobDataset::new(12, 0.05, 13);
+        let data: Vec<(Vec<f32>, usize)> = d
+            .batch(120)
+            .into_iter()
+            .map(|s| (s.image.data, s.label))
+            .collect();
+        let mut mlp = Mlp::new(&[144, 16, 10], 6);
+        train(&mut mlp, &data, 3, 0.05, 7);
+        let cal: Vec<Tensor> = data
+            .iter()
+            .take(20)
+            .map(|(x, _)| Tensor::from_vec(&[144], x.clone()))
+            .collect();
+
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let graph = Graph::from_mlp(&mlp);
+        let opts = CompileOptions { workers: 2, ..Default::default() };
+        let expected = {
+            let mut plan = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+            plan.run_flat(&[data[0].0.clone()]).unwrap()
+        };
+
+        let plan = compile(graph, &cal, &cfg, &opts).unwrap();
+        let handle = serve_plan(plan, ServeConfig::default()).unwrap();
+        let mut client = Client::connect(handle.addr).unwrap();
+        let logits = client.infer(&data[0].0).unwrap();
+        assert_eq!(logits, expected[0]);
+        let metrics = handle.shutdown();
+        assert_eq!(metrics.requests, 1);
+        assert!(metrics.core_ops > 0);
     }
 }

@@ -36,10 +36,34 @@
 //! core, capped at 32). Throughput scales with workers until the batch is
 //! thinner than the worker count; `cargo bench --bench pipeline_throughput`
 //! prints the machine's actual curve and writes `BENCH_pipeline.json`.
+//!
+//! # Compiler layer
+//!
+//! The [`compiler`] module turns whole networks into pool-resident plans:
+//!
+//! ```text
+//!   IR  ──lower──►  tiles  ──place──►  slots  ──execute──►  logits
+//!  (Conv2d/Linear/  (im2col +          (cost-model-driven   (BatchExecutor,
+//!   Relu/Add/GAP/    per-layer act      placer balances      per-layer
+//!   Quant/Dequant)   calibration)       shards, auto-grows)  cycle/energy)
+//! ```
+//!
+//! `Graph::from_mlp` / `Graph::from_resnet20` / `Graph::from_deployment`
+//! ingest the stock workloads; [`compiler::compile`] calibrates, lowers,
+//! places and loads weights once; [`compiler::CompiledPlan`] executes
+//! batches bit-identically (noise-free) to the sequential per-layer macro
+//! path and serves through `serve --plan`. **Sizing example:** ResNet-20
+//! lowers to 282 weight-stationary tiles → 71 shards (4-core dies) and
+//! ~1.1 Mb of resident weight SRAM; a CIFAR image streams 9 409 activation
+//! vectors (47 361 core ops) through the pool — ~0.7 M estimated
+//! worst-case device cycles in baseline mode (15 per dense op).
+//! [`pipeline::PipelineDeployment`] is now one instance of a compiled plan
+//! (the deployment graph, unit scales + explicit dequantize nodes).
 
 pub mod analysis;
 pub mod bench;
 pub mod cim;
+pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

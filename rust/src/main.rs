@@ -53,6 +53,7 @@ fn spec() -> Cli {
                     OptSpec { name: "requests", value_name: Some("N"), default: Some("256"), help: "demo client requests" },
                     OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "max dynamic batch" },
                     OptSpec { name: "pipeline", value_name: None, default: None, help: "serve on the pooled batched pipeline" },
+                    OptSpec { name: "plan", value_name: None, default: None, help: "serve a graph-compiled plan (compiler path)" },
                     OptSpec { name: "workers", value_name: Some("N"), default: Some("0"), help: "pipeline worker threads (0 = auto)" },
                 ]),
                 positional: None,
@@ -175,15 +176,36 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let acc = train(&mut mlp, &data, 8, 0.05, c.sim.seed ^ 2);
             println!("float train accuracy: {:.1}%", acc * 100.0);
             let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
-            let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
             let max_batch = args.get_usize("batch")?;
-            let handle = if args.flag("pipeline") {
+            let handle = if args.flag("plan") {
+                // Compiler path: ingest the float MLP, calibrate on the
+                // training prefix, lower + place onto a pool, serve the plan.
+                use cimsim::compiler::{compile, CompileOptions, Graph};
+                use cimsim::nn::tensor::Tensor;
                 let workers = args.get_usize("workers")?;
+                let graph = Graph::from_mlp(&mlp);
+                let cal_t: Vec<Tensor> = cal
+                    .iter()
+                    .map(|x| Tensor::from_vec(&[x.len()], x.clone()))
+                    .collect();
+                let opts = CompileOptions { workers, ..Default::default() };
+                let plan = compile(graph, &cal_t, &c, &opts).map_err(std::io::Error::other)?;
+                println!("{}", plan.cost_report().table(&c).to_markdown());
+                let h = cimsim::coordinator::serve_plan(
+                    plan,
+                    ServeConfig { max_batch, workers, ..Default::default() },
+                )?;
+                println!("serving on {} (graph-compiled plan)", h.addr);
+                h
+            } else if args.flag("pipeline") {
+                let workers = args.get_usize("workers")?;
+                let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
                 let serve_cfg = ServeConfig { max_batch, workers, ..Default::default() };
                 let h = serve_pipeline(dep, c.clone(), serve_cfg)?;
                 println!("serving on {} (pooled pipeline)", h.addr);
                 h
             } else {
+                let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
                 let backend = Box::new(NativeBackend::new(c.clone()));
                 let h = serve(dep, backend, ServeConfig { max_batch, ..Default::default() })?;
                 println!("serving on {}", h.addr);

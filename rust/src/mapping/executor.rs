@@ -3,9 +3,34 @@
 //! row tiles — the deployment flow of the paper's edge-AI story.
 
 use crate::mapping::{CimBackend, MapError};
-use crate::nn::im2col::{im2col, weights_to_cols};
+use crate::nn::im2col::{conv_out_dims, im2col, weights_to_cols};
 use crate::nn::quant::QuantParams;
 use crate::nn::tensor::Tensor;
+
+/// Split an im2col patch matrix (`[positions][K]`) into per-position
+/// activation rows — the shape the batched executors consume. Shared by
+/// [`CimConv::run`] and the graph compiler's conv lowering so there is a
+/// single source of truth for the im2col→matmul tiling.
+pub fn patches_to_rows(patches: &Tensor) -> Vec<Vec<f32>> {
+    assert_eq!(patches.rank(), 2);
+    let (n_pos, k) = (patches.shape[0], patches.shape[1]);
+    (0..n_pos).map(|r| patches.data[r * k..(r + 1) * k].to_vec()).collect()
+}
+
+/// Reassemble executor output rows (`[positions][out_c]`, row-major over
+/// output positions) into a CHW tensor. Inverse of the im2col position
+/// ordering; shared by [`CimConv::run`] and the compiled-plan executor.
+pub fn rows_to_chw(rows: &[Vec<f32>], out_c: usize, oh: usize, ow: usize) -> Tensor {
+    assert_eq!(rows.len(), oh * ow, "position count vs output dims");
+    let mut out = Tensor::zeros(&[out_c, oh, ow]);
+    for (pos, row) in rows.iter().enumerate() {
+        let (oy, ox) = (pos / ow, pos % ow);
+        for (c, &v) in row.iter().enumerate() {
+            *out.at3_mut(c, oy, ox) = v;
+        }
+    }
+    out
+}
 
 /// A quantized K×N matrix product prepared for the macro: weights tiled into
 /// 64-row × 16-engine blocks.
@@ -193,25 +218,15 @@ impl CimConv {
         Self { linear, kh, kw, stride, pad, out_c: oc }
     }
 
-    /// Run the conv on a CHW input, returning the CHW output.
+    /// Run the conv on a CHW input, returning the CHW output. The lowering
+    /// (im2col → per-position rows → tiled linear → CHW) is the same path the
+    /// graph compiler's conv nodes execute.
     pub fn run(&self, backend: &mut dyn CimBackend, x: &Tensor) -> Result<Tensor, MapError> {
         let patches = im2col(x, self.kh, self.kw, self.stride, self.pad);
-        let n_pos = patches.shape[0];
-        let xs: Vec<Vec<f32>> = (0..n_pos)
-            .map(|r| patches.data[r * patches.shape[1]..(r + 1) * patches.shape[1]].to_vec())
-            .collect();
+        let xs = patches_to_rows(&patches);
         let y = self.linear.run_batch(backend, &xs)?;
-        let (h, w) = (x.shape[1], x.shape[2]);
-        let oh = (h + 2 * self.pad - self.kh) / self.stride + 1;
-        let ow = (w + 2 * self.pad - self.kw) / self.stride + 1;
-        let mut out = Tensor::zeros(&[self.out_c, oh, ow]);
-        for (pos, row) in y.iter().enumerate() {
-            let (oy, ox) = (pos / ow, pos % ow);
-            for (c, &v) in row.iter().enumerate() {
-                *out.at3_mut(c, oy, ox) = v;
-            }
-        }
-        Ok(out)
+        let (oh, ow) = conv_out_dims(x.shape[1], x.shape[2], self.kh, self.kw, self.stride, self.pad);
+        Ok(rows_to_chw(&y, self.out_c, oh, ow))
     }
 }
 

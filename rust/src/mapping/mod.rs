@@ -75,11 +75,27 @@ pub fn account_core_op(
     op_stats: &crate::cim::OpStats,
     stats: &mut ExecStats,
 ) {
+    let mut folded = Vec::new();
+    account_core_op_into(cfg, weights, acts, op_stats, stats, &mut folded);
+}
+
+/// Buffer-reusing form of [`account_core_op`]: the batched pipeline calls
+/// this with one per-worker scratch so its per-op hot path stays
+/// allocation-free even with the boosted-clipping scan enabled.
+pub fn account_core_op_into(
+    cfg: &Config,
+    weights: &crate::cim::CoreWeights,
+    acts: &[i64],
+    op_stats: &crate::cim::OpStats,
+    stats: &mut ExecStats,
+    folded_scratch: &mut Vec<i64>,
+) {
     stats.core_ops += 1;
     stats.total_cycles += op_stats.total_cycles;
     stats.energy.add(&core_op_energy(cfg, op_stats));
     if cfg.enhance.boost {
-        for &d in golden::mac_folded(cfg, weights, acts).iter() {
+        golden::mac_folded_into(cfg, weights, acts, folded_scratch);
+        for &d in folded_scratch.iter() {
             if golden::clips(cfg, d) {
                 stats.clipped += 1;
             }

@@ -6,12 +6,14 @@
 //! partial sums accumulate in the exact same (row-tile ascending) order as
 //! the sequential executor — which is what makes the noise-free output
 //! bit-identical to `CimLinear::run_batch_q` on a single macro. Each worker
-//! carries one RNG substream, one [`OpScratch`] and one reusable
-//! [`CoreOpResult`], so the per-op hot path performs zero allocations.
+//! carries one RNG substream, one [`OpScratch`], one reusable
+//! [`CoreOpResult`] and one folded-MAC scratch, so the per-op hot path
+//! performs zero allocations; with `enhance.boost` on it recomputes the
+//! golden folded MAC per op for the clipping counter, exactly like every
+//! other backend (`mapping::account_core_op_into`).
 
 use crate::cim::{CoreOpResult, OpScratch};
-use crate::energy::core_op_energy;
-use crate::mapping::{ExecStats, MapError};
+use crate::mapping::{account_core_op_into, ExecStats, MapError};
 use crate::pipeline::pool::{MacroPool, PlacedLinear};
 use crate::util::rng::Xoshiro256;
 use crate::util::threadpool::{default_workers, parallel_chunks};
@@ -65,6 +67,7 @@ impl BatchExecutor {
             let mut scratch = OpScratch::new(&pool.cfg().mac);
             let mut op = CoreOpResult::default();
             let mut tile_acts = vec![0i64; rows];
+            let mut folded = Vec::new();
             let mut stats = ExecStats::default();
             let mut out_rows: Vec<Vec<f32>> = Vec::with_capacity(end - start);
             for acts in &acts_q[start..end] {
@@ -81,13 +84,8 @@ impl BatchExecutor {
                     tile_acts.fill(0);
                     tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
                     for ct in 0..n_ct {
-                        pool.op_into(
-                            layer.slot(rt, ct),
-                            &tile_acts,
-                            &mut rng,
-                            &mut scratch,
-                            &mut op,
-                        )?;
+                        let slot = layer.slot(rt, ct);
+                        pool.op_into(slot, &tile_acts, &mut rng, &mut scratch, &mut op)?;
                         let c0 = ct * engines;
                         for (e, &v) in op.values.iter().enumerate() {
                             let col = c0 + e;
@@ -95,9 +93,19 @@ impl BatchExecutor {
                                 out[col] += v as f32 * deq;
                             }
                         }
-                        stats.core_ops += 1;
-                        stats.total_cycles += op.stats.total_cycles;
-                        stats.energy.add(&core_op_energy(pool.cfg(), &op.stats));
+                        // Shared per-op accounting (counters, energy, and the
+                        // boosted-clipping scan) — one source of truth with
+                        // every other backend, reusing the worker's buffer.
+                        let (sh, co) = pool.locate(slot);
+                        let w = pool.shard(sh).core_weights(co)?;
+                        account_core_op_into(
+                            pool.cfg(),
+                            w,
+                            &tile_acts,
+                            &op.stats,
+                            &mut stats,
+                            &mut folded,
+                        );
                     }
                 }
                 for (o, b) in out.iter_mut().zip(&lin.bias) {
@@ -173,6 +181,9 @@ mod tests {
             }
             assert_eq!(stats.core_ops as usize, placed.n_tiles() * xs.len());
             assert!(stats.energy_fj() > 0.0);
+            // Boosted-clipping accounting matches the sequential backend
+            // (same ops, same golden scan).
+            assert_eq!(stats.clipped, nat.stats().clipped, "workers = {workers}");
         }
     }
 

@@ -1,114 +1,86 @@
-//! The two-layer MLP deployment on a macro pool: both layers' tiles are
-//! placed once at construction, then [`PipelineDeployment::run_batch`]
-//! streams whole batches through the resident pool. This is the engine
-//! behind `coordinator::server::serve_pipeline`.
+//! The two-layer MLP deployment on a macro pool — since the graph compiler
+//! landed, this is simply one instance of a [`CompiledPlan`]: the
+//! deployment's unit-scale graph ([`crate::compiler::Graph::from_deployment`])
+//! compiled onto a fresh pool. The wrapper keeps the serving-oriented API
+//! (`run_batch` on flat vectors, cumulative stats) that
+//! `coordinator::server::serve_pipeline` drives.
 //!
-//! The quantized arithmetic mirrors
+//! The deployment graph's arithmetic mirrors
 //! [`MlpDeployment::run_native`] expression for expression, so with noise
-//! disabled the batched pipeline's logits are bit-identical to the
+//! disabled the compiled pipeline's logits are bit-identical to the
 //! sequential path (the concurrency test relies on this).
 
+use crate::compiler::{compile, CompileError, CompileOptions, CompiledPlan, Graph};
 use crate::config::Config;
 use crate::coordinator::deployment::MlpDeployment;
-use crate::mapping::executor::CimLinear;
 use crate::mapping::{ExecStats, MapError};
-use crate::nn::quant::QuantParams;
-use crate::pipeline::batch::BatchExecutor;
-use crate::pipeline::pool::{MacroPool, PlacedLinear};
+use crate::pipeline::pool::MacroPool;
 
 /// A quantized MLP resident on a [`MacroPool`], ready for batched serving.
 pub struct PipelineDeployment {
     dep: MlpDeployment,
-    pool: MacroPool,
-    lin1: PlacedLinear,
-    lin2: PlacedLinear,
-    exec: BatchExecutor,
-    stats: ExecStats,
+    plan: CompiledPlan,
 }
 
 impl PipelineDeployment {
-    /// Place both layers on a fresh pool. `workers == 0` selects the
-    /// thread-pool default. Weights load exactly once, here.
+    /// Compile the deployment graph onto a fresh pool. `workers == 0`
+    /// selects the thread-pool default. Weights load exactly once, here.
     pub fn new(dep: MlpDeployment, cfg: Config, workers: usize) -> Result<Self, MapError> {
-        let unit_a = QuantParams { scale: 1.0, q_min: 0, q_max: 15 };
-        let unit_w = QuantParams { scale: 1.0, q_min: -7, q_max: 7 };
-        let l1 = CimLinear::with_params(&dep.w1_q, vec![0.0; dep.dims[1]], unit_w, unit_a, &cfg);
-        let l2 = CimLinear::with_params(&dep.w2_q, vec![0.0; dep.dims[2]], unit_w, unit_a, &cfg);
-        let seed = cfg.sim.seed ^ 0x0051_A6ED;
-        let mut pool = MacroPool::new(cfg);
-        let lin1 = PlacedLinear::place(l1, &mut pool).map_err(MapError::Macro)?;
-        let lin2 = PlacedLinear::place(l2, &mut pool).map_err(MapError::Macro)?;
-        let stats = ExecStats {
-            weight_loads: (lin1.n_tiles() + lin2.n_tiles()) as u64,
-            ..ExecStats::default()
+        let graph = Graph::from_deployment(&dep);
+        let opts = CompileOptions {
+            workers,
+            seed: Some(cfg.sim.seed ^ 0x0051_A6ED),
+            ..CompileOptions::default()
         };
-        Ok(Self { dep, pool, lin1, lin2, exec: BatchExecutor::new(workers, seed), stats })
+        // The deployment graph carries explicit quantization params
+        // everywhere, so compilation needs no calibration inputs. Device
+        // faults keep their classification; structural faults are shapes.
+        let plan = compile(graph, &[], &cfg, &opts).map_err(|e| match e {
+            CompileError::Macro(m) => MapError::Macro(m),
+            other => MapError::Shape(format!("deployment compile: {other}")),
+        })?;
+        Ok(Self { dep, plan })
     }
 
     pub fn config(&self) -> &Config {
-        self.pool.cfg()
+        self.plan.config()
     }
 
     pub fn deployment(&self) -> &MlpDeployment {
         &self.dep
     }
 
+    /// The underlying compiled plan (placement report, per-layer counters).
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
+    }
+
     pub fn pool(&self) -> &MacroPool {
-        &self.pool
+        self.plan.pool()
     }
 
     pub fn workers(&self) -> usize {
-        self.exec.workers()
+        self.plan.workers()
     }
 
     /// Cumulative device counters over every batch served.
     pub fn stats(&self) -> &ExecStats {
-        &self.stats
+        self.plan.stats()
     }
 
     pub fn reset_stats(&mut self) {
-        self.stats = ExecStats::default();
+        self.plan.reset_stats();
+    }
+
+    /// Total tiles resident on the pool (both layers).
+    pub fn n_tiles(&self) -> usize {
+        self.plan.total_tiles()
     }
 
     /// Batched inference: input quantization → layer 1 on the pool → ReLU +
     /// hidden requantization → layer 2 on the pool → dequantized logits.
     pub fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
-        let x_q: Vec<Vec<i64>> = xs
-            .iter()
-            .map(|x| {
-                x.iter()
-                    .map(|&v| (v / self.dep.a0_scale).round().clamp(0.0, 15.0) as i64)
-                    .collect()
-            })
-            .collect();
-        let (s1, st1) = self.exec.run_q(&self.pool, &self.lin1, &x_q)?;
-        self.stats.merge(&st1);
-
-        let a1_scale = self.dep.a1_cal / 15.0;
-        let h_q: Vec<Vec<i64>> = s1
-            .iter()
-            .map(|row| {
-                row.iter()
-                    .zip(&self.dep.b1)
-                    .map(|(&s, &b)| {
-                        let y = s * (self.dep.a0_scale * self.dep.w1_scale) + b;
-                        (y.max(0.0) / a1_scale).round().clamp(0.0, 15.0) as i64
-                    })
-                    .collect()
-            })
-            .collect();
-        let (s2, st2) = self.exec.run_q(&self.pool, &self.lin2, &h_q)?;
-        self.stats.merge(&st2);
-
-        Ok(s2
-            .iter()
-            .map(|row| {
-                row.iter()
-                    .zip(&self.dep.b2)
-                    .map(|(&s, &b)| s * (a1_scale * self.dep.w2_scale) + b)
-                    .collect()
-            })
-            .collect())
+        self.plan.run_flat(xs)
     }
 }
 
@@ -132,7 +104,7 @@ mod tests {
         (dep, xs)
     }
 
-    /// Noise-free, the pooled pipeline's logits are bit-identical to the
+    /// Noise-free, the compiled pipeline's logits are bit-identical to the
     /// sequential `run_native` path, independent of worker count.
     #[test]
     fn pipeline_matches_run_native_noise_free() {
@@ -157,23 +129,32 @@ mod tests {
         let mut cfg = Config::default();
         cfg.enhance = EnhanceConfig::both();
         let mut pipe = PipelineDeployment::new(dep, cfg, 2).unwrap();
-        assert_eq!(
-            pipe.stats().weight_loads as usize,
-            pipe.lin1.n_tiles() + pipe.lin2.n_tiles()
-        );
+        let tiles = pipe.n_tiles();
+        // 144×32 → 3×2 = 6 tiles; 32×10 → 1×1 = 1 tile.
+        assert_eq!(tiles, 7);
+        assert_eq!(pipe.stats().weight_loads as usize, tiles);
         pipe.run_batch(&xs[..4]).unwrap();
         let ops1 = pipe.stats().core_ops;
-        assert_eq!(
-            ops1 as usize,
-            4 * (pipe.lin1.n_tiles() + pipe.lin2.n_tiles())
-        );
+        assert_eq!(ops1 as usize, 4 * tiles);
         pipe.run_batch(&xs[4..8]).unwrap();
         assert_eq!(pipe.stats().core_ops, 2 * ops1);
         assert!(pipe.stats().energy_fj() > 0.0);
         // Weights were never reloaded on the hot path.
-        assert_eq!(
-            pipe.stats().weight_loads as usize,
-            pipe.lin1.n_tiles() + pipe.lin2.n_tiles()
-        );
+        assert_eq!(pipe.stats().weight_loads as usize, tiles);
+    }
+
+    /// The deployment plan reports a placement: both layers' tiles resident,
+    /// the second layer reusing the first's partially-filled shard.
+    #[test]
+    fn deployment_is_a_compiled_plan() {
+        let (dep, _) = small_deployment(47);
+        let cfg = Config::default();
+        let pipe = PipelineDeployment::new(dep, cfg, 1).unwrap();
+        let report = pipe.plan().cost_report();
+        assert_eq!(report.layers.len(), 2);
+        assert_eq!(report.total_tiles, 7);
+        assert_eq!(report.n_shards, 2); // 7 tiles on 4-core shards
+        assert_eq!(pipe.pool().slots_loaded(), 7);
+        assert!(report.total_est_cycles_per_input() > 0);
     }
 }

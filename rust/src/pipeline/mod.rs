@@ -14,6 +14,8 @@
 //!   per-op hot path performs zero allocations.
 //! * [`PipelineDeployment`] — the two-layer MLP deployment on a pool: the
 //!   batched serve loop's engine (`coordinator::server::serve_pipeline`).
+//!   Since the graph compiler landed this is one instance of a
+//!   [`crate::compiler::CompiledPlan`] (the deployment's unit-scale graph).
 //! * [`PoolBackend`] — the pool exposed as one virtual macro with
 //!   `shards × cores` cores through the [`crate::mapping::CimBackend`]
 //!   trait, so every existing tiled executor runs on the pool unchanged.

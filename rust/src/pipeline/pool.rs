@@ -16,13 +16,15 @@ use crate::util::rng::Rng;
 pub struct MacroPool {
     cfg: Config,
     shards: Vec<MacroSim>,
-    next_slot: usize,
+    /// Per-slot claim flags (one per resident `shard × core`); the placer
+    /// claims slots shard-by-shard, `alloc_slot` takes the first free one.
+    claimed: Vec<bool>,
 }
 
 impl MacroPool {
     /// An empty pool; shards are added on demand by [`MacroPool::alloc_slot`].
     pub fn new(cfg: Config) -> Self {
-        Self { cfg, shards: Vec::new(), next_slot: 0 }
+        Self { cfg, shards: Vec::new(), claimed: Vec::new() }
     }
 
     /// A pool with `n_shards` pre-built shards.
@@ -49,6 +51,7 @@ impl MacroPool {
             let c = self.shard_cfg(self.shards.len());
             self.shards.push(MacroSim::new(c));
         }
+        self.claimed.resize(self.total_cores(), false);
     }
 
     pub fn cfg(&self) -> &Config {
@@ -70,7 +73,16 @@ impl MacroPool {
 
     /// Slots claimed so far.
     pub fn slots_loaded(&self) -> usize {
-        self.next_slot
+        self.claimed.iter().filter(|&&c| c).count()
+    }
+
+    /// Free (unclaimed) cores on a resident shard (0 for absent shards).
+    pub fn free_cores_on(&self, shard: usize) -> usize {
+        if shard >= self.shards.len() {
+            return 0;
+        }
+        let cores = self.cfg.mac.cores;
+        (0..cores).filter(|c| !self.claimed[shard * cores + c]).count()
     }
 
     /// Map a slot id to its `(shard, core)` pair.
@@ -82,16 +94,35 @@ impl MacroPool {
         &self.shards[index]
     }
 
-    /// Claim the next free slot, growing the pool by one shard when all
+    /// Claim the first free slot, growing the pool by one shard when all
     /// resident cores are taken.
     pub fn alloc_slot(&mut self) -> usize {
-        let slot = self.next_slot;
-        if slot >= self.total_cores() {
-            let n = self.shards.len() + 1;
-            self.grow_to(n);
+        if let Some(slot) = self.claimed.iter().position(|&c| !c) {
+            self.claimed[slot] = true;
+            return slot;
         }
-        self.next_slot += 1;
+        let slot = self.total_cores();
+        self.grow_to(self.shards.len() + 1);
+        self.claimed[slot] = true;
         slot
+    }
+
+    /// Claim the first free core on a specific resident shard (the
+    /// cost-model-driven placer balances estimated work across shards).
+    /// Returns `None` when the shard is absent or fully claimed.
+    pub fn alloc_slot_on_shard(&mut self, shard: usize) -> Option<usize> {
+        if shard >= self.shards.len() {
+            return None;
+        }
+        let cores = self.cfg.mac.cores;
+        for c in 0..cores {
+            let slot = shard * cores + c;
+            if !self.claimed[slot] {
+                self.claimed[slot] = true;
+                return Some(slot);
+            }
+        }
+        None
     }
 
     /// Load a rows×engines signed weight block into a slot (once, at
@@ -132,13 +163,24 @@ impl PlacedLinear {
     /// Place every tile of `lin` on its own slot (claimed in `(rt, ct)`
     /// order) and load the weights once.
     pub fn place(lin: CimLinear, pool: &mut MacroPool) -> Result<Self, MacroError> {
+        let n_tiles = lin.n_row_tiles() * lin.n_col_tiles();
+        let slots: Vec<usize> = (0..n_tiles).map(|_| pool.alloc_slot()).collect();
+        Self::place_with(lin, pool, slots)
+    }
+
+    /// Place with an explicit tile→slot assignment (in `(rt, ct)` order),
+    /// e.g. from the compiler's cost-model-driven placer. The slots must
+    /// already be claimed on the pool; the weights load here, once.
+    pub fn place_with(
+        lin: CimLinear,
+        pool: &mut MacroPool,
+        slots: Vec<usize>,
+    ) -> Result<Self, MacroError> {
         let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
-        let mut slots = Vec::with_capacity(n_rt * n_ct);
+        assert_eq!(slots.len(), n_rt * n_ct, "slot count vs tile count");
         for rt in 0..n_rt {
             for ct in 0..n_ct {
-                let slot = pool.alloc_slot();
-                pool.load_slot(slot, lin.tile_block(rt, ct))?;
-                slots.push(slot);
+                pool.load_slot(slots[rt * n_ct + ct], lin.tile_block(rt, ct))?;
             }
         }
         Ok(Self { lin, slots, n_ct })
@@ -204,6 +246,24 @@ mod tests {
             .collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_directed_allocation_and_free_counts() {
+        let cfg = Config::default(); // 4 cores per shard
+        let mut pool = MacroPool::with_shards(cfg.clone(), 2);
+        assert_eq!(pool.free_cores_on(0), 4);
+        assert_eq!(pool.alloc_slot_on_shard(1), Some(4));
+        assert_eq!(pool.alloc_slot_on_shard(1), Some(5));
+        assert_eq!(pool.free_cores_on(1), 2);
+        // Dense allocation skips nothing: first free is still shard 0.
+        assert_eq!(pool.alloc_slot(), 0);
+        // Fill shard 1 and confirm exhaustion semantics.
+        assert_eq!(pool.alloc_slot_on_shard(1), Some(6));
+        assert_eq!(pool.alloc_slot_on_shard(1), Some(7));
+        assert_eq!(pool.alloc_slot_on_shard(1), None);
+        assert_eq!(pool.alloc_slot_on_shard(9), None); // absent shard
+        assert_eq!(pool.slots_loaded(), 5);
     }
 
     #[test]

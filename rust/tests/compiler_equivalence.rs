@@ -1,0 +1,293 @@
+//! Compiler equivalence suite: the compiled-plan executor is bit-identical
+//! (noise-free) to the sequential per-layer macro path, tracks the float
+//! golden within quantization tolerance, and the placer's cost model
+//! predicts the observed device cycles exactly.
+
+use cimsim::compiler::{calibrate, compile, CompileOptions, Graph, Op};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimConv;
+use cimsim::mapping::NativeBackend;
+use cimsim::nn::mlp::Mlp;
+use cimsim::nn::ops::relu;
+use cimsim::nn::resnet::ResNet20;
+use cimsim::nn::tensor::Tensor;
+use cimsim::prop_assert;
+use cimsim::util::proptest::check;
+
+const MODES: [fn() -> EnhanceConfig; 4] = [
+    EnhanceConfig::default,
+    EnhanceConfig::fold_only,
+    EnhanceConfig::boost_only,
+    EnhanceConfig::both,
+];
+
+/// For random MLP shapes, enhancement modes, batch sizes and worker counts,
+/// a compiled plan equals running its own lowered layers sequentially on a
+/// single macro, bit for bit (noise-free).
+#[test]
+fn property_compiled_mlp_equals_sequential() {
+    check("compiled-mlp-vs-sequential", 12, |g| {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = g.pick(&MODES)();
+        let d0 = g.usize_in(4, 80);
+        let d1 = g.usize_in(2, 24);
+        let d2 = g.usize_in(2, 10);
+        let workers = *g.pick(&[1usize, 2, 5]);
+        let batch = g.usize_in(1, 5);
+
+        let mlp = Mlp::new(&[d0, d1, d2], g.case_seed ^ 0xA11);
+        let graph = Graph::from_mlp(&mlp);
+        let cal: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::from_vec(&[d0], g.vec_f32(d0, 0.0, 1.0)))
+            .collect();
+        let xs: Vec<Tensor> = (0..batch)
+            .map(|_| Tensor::from_vec(&[d0], g.vec_f32(d0, 0.0, 1.0)))
+            .collect();
+
+        let opts = CompileOptions { workers, ..Default::default() };
+        let mut plan =
+            compile(graph, &cal, &cfg, &opts).map_err(|e| format!("compile: {e}"))?;
+        let got = plan.run_batch(&xs).map_err(|e| format!("run: {e}"))?;
+
+        let lin0 = plan.layers()[0].linear().clone();
+        let lin1 = plan.layers()[1].linear().clone();
+        let mut nat = NativeBackend::new(cfg.clone());
+        for (x, row) in xs.iter().zip(&got) {
+            let s0 = lin0
+                .run_batch(&mut nat, &[x.data.clone()])
+                .map_err(|e| format!("seq l0: {e}"))?
+                .remove(0);
+            let h: Vec<f32> = s0.iter().map(|&v| v.max(0.0)).collect();
+            let s1 = lin1
+                .run_batch(&mut nat, &[h])
+                .map_err(|e| format!("seq l1: {e}"))?
+                .remove(0);
+            prop_assert!(
+                row == &s1,
+                "mode {} dims {d0}-{d1}-{d2} batch {batch} workers {workers}: diverged",
+                cfg.enhance.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+fn snr_db(reference: &[f32], got: &[f32]) -> f64 {
+    let mut sig = 0f64;
+    let mut err = 0f64;
+    for (r, g) in reference.iter().zip(got) {
+        sig += (*r as f64).powi(2);
+        err += (*r as f64 - *g as f64).powi(2);
+    }
+    10.0 * (sig / err.max(1e-30)).log10()
+}
+
+/// A compiled ResNet-20 residual block (conv1 → relu → conv2, projection
+/// skip, add, relu) is bit-identical to the direct `CimConv` execution with
+/// the same calibration, and tracks the float golden within quantization
+/// tolerance.
+#[test]
+fn compiled_resnet_block_matches_direct_and_float() {
+    let net = ResNet20::new(3);
+    let block = &net.stages[1][0]; // 16→32 stride-2 block with projection
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+
+    // Build the block's graph by hand (the manual IR construction path).
+    let mut g = Graph::new();
+    let x = g.add("input", Op::Input { shape: vec![16, 8, 8] }, &[]);
+    let q1 = g.add("conv1.q", Op::Quantize { params: None }, &[x]);
+    let c1 = g.add(
+        "conv1",
+        Op::Conv2d {
+            w: block.conv1.w.clone(),
+            bias: block.conv1.b.clone(),
+            stride: block.conv1.stride,
+            pad: block.conv1.pad,
+            w_params: None,
+        },
+        &[q1],
+    );
+    let r1 = g.add("conv1.relu", Op::Relu, &[c1]);
+    let q2 = g.add("conv2.q", Op::Quantize { params: None }, &[r1]);
+    let c2 = g.add(
+        "conv2",
+        Op::Conv2d {
+            w: block.conv2.w.clone(),
+            bias: block.conv2.b.clone(),
+            stride: block.conv2.stride,
+            pad: block.conv2.pad,
+            w_params: None,
+        },
+        &[q2],
+    );
+    let proj = block.proj.as_ref().expect("stage-transition block has a projection");
+    let qp = g.add("proj.q", Op::Quantize { params: None }, &[x]);
+    let cp = g.add(
+        "proj",
+        Op::Conv2d {
+            w: proj.w.clone(),
+            bias: proj.b.clone(),
+            stride: proj.stride,
+            pad: proj.pad,
+            w_params: None,
+        },
+        &[qp],
+    );
+    let add = g.add("add", Op::Add, &[c2, cp]);
+    g.add("out.relu", Op::Relu, &[add]);
+
+    let img = cimsim::nn::dataset::random_image(&[16, 8, 8], 11);
+    let cal_imgs = vec![img.clone(), cimsim::nn::dataset::random_image(&[16, 8, 8], 12)];
+
+    // Compiled execution on the pool.
+    let opts = CompileOptions { workers: 2, ..Default::default() };
+    let mut plan = compile(g.clone(), &cal_imgs, &cfg, &opts).unwrap();
+    let got = plan.run_batch(&[img.clone()]).unwrap().remove(0);
+
+    // Direct sequential path: CimConv with the identical calibration maxes.
+    let cal = calibrate(&g, &cal_imgs).unwrap();
+    let mk = |layer: &cimsim::nn::resnet::ConvLayer, q: usize| {
+        CimConv::new(&layer.w, layer.b.clone(), layer.stride, layer.pad, cal.act_max(q), &cfg)
+    };
+    let (k1, k2, kp) = (mk(&block.conv1, q1), mk(&block.conv2, q2), mk(proj, qp));
+    let mut nat = NativeBackend::new(cfg.clone());
+    let h = relu(k1.run(&mut nat, &img).unwrap());
+    let h2 = k2.run(&mut nat, &h).unwrap();
+    let idn = kp.run(&mut nat, &img).unwrap();
+    assert_eq!(h2.shape, idn.shape);
+    let mut direct = h2;
+    for (o, i) in direct.data.iter_mut().zip(&idn.data) {
+        *o += i;
+    }
+    let direct = relu(direct);
+    assert_eq!(got, direct.data, "compiled block must be bit-identical to CimConv path");
+
+    // Float golden within quantization tolerance (noise-free, 4-b formats).
+    let float = block.forward(&img);
+    assert_eq!(float.data.len(), got.len());
+    let snr = snr_db(&float.data, &got);
+    assert!(snr > 8.0, "quantized block drifted from float golden: SNR {snr:.1} dB");
+}
+
+/// Cost-model exactness: the placer's cycle predictor (driven by the actual
+/// quantized activations) equals the sum of `OpStats` cycles the device
+/// reports — per layer and in total, noise on or off (the MAC window is
+/// scheduled from nominal DTC widths).
+#[test]
+fn cost_model_predicted_cycles_equal_observed() {
+    for noise in [false, true] {
+        for mode in MODES {
+            let mut cfg = Config::default();
+            cfg.noise.enabled = noise;
+            cfg.enhance = mode();
+            let mlp = Mlp::new(&[40, 18, 6], 3);
+            let graph = Graph::from_mlp(&mlp);
+            let cal: Vec<Tensor> = (0..3)
+                .map(|i| {
+                    Tensor::from_vec(
+                        &[40],
+                        (0..40).map(|j| ((i * 13 + j * 7) % 10) as f32 / 10.0).collect(),
+                    )
+                })
+                .collect();
+            let xs: Vec<Tensor> = (0..6)
+                .map(|i| {
+                    Tensor::from_vec(
+                        &[40],
+                        (0..40).map(|j| ((i * 5 + j * 3) % 11) as f32 / 11.0).collect(),
+                    )
+                })
+                .collect();
+            let opts = CompileOptions { workers: 3, ..Default::default() };
+            let mut plan = compile(graph, &cal, &cfg, &opts).unwrap();
+            plan.run_batch(&xs).unwrap();
+            let mut predicted_total = 0u64;
+            for layer in plan.layers() {
+                assert_eq!(
+                    layer.predicted_cycles(),
+                    layer.observed().total_cycles,
+                    "layer {} noise={noise} mode={}",
+                    layer.name,
+                    cfg.enhance.label()
+                );
+                predicted_total += layer.predicted_cycles();
+            }
+            assert_eq!(predicted_total, plan.stats().total_cycles);
+            assert!(predicted_total > 0);
+        }
+    }
+}
+
+/// The placement-time static estimate is exact for a dense worst-case
+/// workload in baseline mode, and an upper bound under folding.
+#[test]
+fn static_estimate_exact_for_dense_worst_case() {
+    let build = |cfg: &Config| {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![64] }, &[]);
+        let q = g.add("fc.q", Op::Quantize { params: None }, &[x]);
+        let w = Tensor::from_vec(
+            &[64, 16],
+            (0..64 * 16).map(|i| ((i % 13) as f32 - 6.0) / 12.0).collect(),
+        );
+        g.add(
+            "fc",
+            Op::Linear { w_cols: w, bias: vec![0.0; 16], w_params: None },
+            &[q],
+        );
+        let cal = vec![Tensor::from_vec(&[64], vec![1.0; 64])];
+        let mut plan = compile(g, &cal, cfg, &CompileOptions::default()).unwrap();
+        // All-max input: every activation quantizes to act_max.
+        plan.run_batch(&[Tensor::from_vec(&[64], vec![1.0; 64])]).unwrap();
+        let est = plan.cost_report().layers[0].est_cycles_per_input;
+        let obs = plan.stats().total_cycles;
+        (est, obs)
+    };
+
+    let mut base = Config::default();
+    base.noise.enabled = false;
+    let (est, obs) = build(&base);
+    assert_eq!(est, obs, "dense worst case must match the static estimate exactly");
+    assert_eq!(obs, 15); // the paper's dense cycle count
+
+    let mut folded = Config::default();
+    folded.noise.enabled = false;
+    folded.enhance = EnhanceConfig::fold_only();
+    let (est_f, obs_f) = build(&folded);
+    assert!(
+        est_f >= obs_f,
+        "static estimate must upper-bound observed cycles: {est_f} < {obs_f}"
+    );
+}
+
+/// Whole-network smoke: quantized ResNet-20 end to end on the pool. The
+/// placement matches the hand-counted sizing, and the exact cycle predictor
+/// agrees with the device across all 22 layers.
+#[test]
+fn compiled_resnet20_runs_end_to_end() {
+    let net = ResNet20::new(5);
+    let graph = Graph::from_resnet20(&net);
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+    let cal = vec![cimsim::nn::dataset::random_image(&[3, 32, 32], 21)];
+    let opts = CompileOptions { workers: 0, ..Default::default() };
+    let mut plan = compile(graph, &cal, &cfg, &opts).unwrap();
+
+    let report = plan.cost_report();
+    assert_eq!(report.layers.len(), 22);
+    assert_eq!(report.total_tiles, 282);
+    assert_eq!(report.n_shards, 282usize.div_ceil(4));
+    assert_eq!(plan.pool().slots_loaded(), 282);
+
+    let img = cimsim::nn::dataset::random_image(&[3, 32, 32], 22);
+    let logits = plan.run_batch(&[img]).unwrap().remove(0);
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    let predicted: u64 = plan.layers().iter().map(|l| l.predicted_cycles()).sum();
+    assert_eq!(predicted, plan.stats().total_cycles);
+    assert_eq!(plan.stats().weight_loads, 282);
+}
