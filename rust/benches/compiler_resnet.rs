@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench compiler_resnet` (CIMSIM_BENCH_FAST=1 to trim).
 
-use cimsim::bench::{black_box, json_row, Bench, JsonField};
+use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::nn::dataset::random_image;
@@ -62,13 +62,14 @@ fn main() {
             "est_kcycles_per_img",
             report.total_est_cycles_per_input() as f64 / 1e3,
         ),
+        JsonField::Str("profile", build_profile()),
         JsonField::Str("source", "measured"),
     ]);
     println!("{row}");
 
-    let path = "BENCH_compiler.json";
-    match std::fs::write(path, format!("{row}\n")) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+    let path = bench_json_path("BENCH_compiler.json");
+    match std::fs::write(&path, format!("{row}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

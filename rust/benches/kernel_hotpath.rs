@@ -1,0 +1,174 @@
+//! Kernel hot-path benchmark: the legacy scalar MAC-phase kernel vs the
+//! bit-plane fast path (DESIGN.md §4), per op and batched, on the 144×32
+//! layer the pipeline bench uses (3 row × 2 col = 6 tiles per vector).
+//!
+//! Three layer-level passes over the same placed pool, noise off and on:
+//!
+//! * `scalar`   — the pre-fast-path per-op loop: scalar `mac_phase_into` +
+//!   readout per (item, tile), exactly the old `core_op` composition.
+//! * `bitplane` — per-op fast path (`MacroPool::op_into`): the kernel
+//!   prepares each tile's activations and walks the weight bit-planes.
+//! * `batch`    — the batched fast path (`BatchExecutor::run_q`): one
+//!   preparation per (item, row tile) shared by its column tiles, worker
+//!   parallelism disabled (1 worker) so the comparison isolates the kernel.
+//!
+//! Writes the headline rows to `BENCH_kernel.json` at the repo root.
+//! Run: `cargo bench --bench kernel_hotpath` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{
+    bench_json_path, black_box, build_profile, json_row, Bench, JsonField,
+};
+use cimsim::cim::adc::readout_into;
+use cimsim::cim::engine::{mac_phase_into, MacPhase};
+use cimsim::cim::timing::finalize_cycles;
+use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+/// The old per-op composition: scalar kernel + readout + reconstruction.
+/// Kept in sync by hand with `tests/kernel_equivalence.rs::legacy_core_op`
+/// and the inline copy in `tests/bench_smoke.rs` (deliberately unshared so
+/// the equivalence oracle stays independent of bench plumbing).
+#[allow(clippy::too_many_arguments)]
+fn scalar_core_op(
+    cfg: &Config,
+    pool: &MacroPool,
+    slot: usize,
+    acts: &[i64],
+    rng: &mut Xoshiro256,
+    draw: &mut NoiseDraw,
+    phase: &mut MacPhase,
+    out: &mut CoreOpResult,
+) {
+    let (sh, co) = pool.locate(slot);
+    let shard = pool.shard(sh);
+    let w = shard.core_weights(co).unwrap();
+    if cfg.noise.enabled {
+        draw.redraw(rng);
+    }
+    mac_phase_into(cfg, co, w, acts, &shard.fab, draw, phase);
+    let (adc, sa) = readout_into(cfg, co, phase, &shard.fab, draw, &mut out.codes);
+    out.stats = phase.stats.clone();
+    out.stats.adc_discharge_u = adc;
+    out.stats.sa_compares = sa;
+    finalize_cycles(cfg, &mut out.stats);
+    out.values.clear();
+    for (e, &c) in out.codes.iter().enumerate() {
+        out.values.push(golden::reconstruct(cfg, w, e, c));
+    }
+}
+
+fn main() {
+    let b = Bench::default();
+    let (k, n, batch) = (144usize, 32usize, 64usize);
+    let mut rows_out: Vec<String> = Vec::new();
+
+    for noise in [false, true] {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        cfg.noise.enabled = noise;
+
+        let mut rng = Xoshiro256::seeded(11);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+        let rows_per_tile = lin.rows_per_tile();
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        let acts_q: Vec<Vec<i64>> = (0..batch)
+            .map(|i| {
+                lin.quantize_acts(
+                    &(0..k).map(|j| ((i * 7 + j * 3) % 17) as f32 / 17.0).collect::<Vec<f32>>(),
+                )
+            })
+            .collect();
+
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+        let label = if noise { "noisy" } else { "noise-free" };
+
+        // --- scalar per-op reference ---
+        let mut op_rng = Xoshiro256::seeded(3);
+        let mut draw = NoiseDraw::zeros(&cfg.mac);
+        let mut phase = MacPhase::default();
+        let mut op = CoreOpResult::default();
+        let mut tile_acts = vec![0i64; rows_per_tile];
+        let scalar = b.run_slow(&format!("scalar   per-op 144x32 b{batch} {label}"), 10, || {
+            for acts in &acts_q {
+                for rt in 0..n_rt {
+                    let r0 = rt * rows_per_tile;
+                    let upper = (r0 + rows_per_tile).min(k);
+                    tile_acts.fill(0);
+                    tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+                    for ct in 0..n_ct {
+                        scalar_core_op(
+                            &cfg,
+                            &pool,
+                            placed.slot(rt, ct),
+                            &tile_acts,
+                            &mut op_rng,
+                            &mut draw,
+                            &mut phase,
+                            &mut op,
+                        );
+                        black_box(&op.values);
+                    }
+                }
+            }
+        });
+
+        // --- bit-plane per-op ---
+        let mut op_rng = Xoshiro256::seeded(3);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let bitplane = b.run_slow(&format!("bitplane per-op 144x32 b{batch} {label}"), 10, || {
+            for acts in &acts_q {
+                for rt in 0..n_rt {
+                    let r0 = rt * rows_per_tile;
+                    let upper = (r0 + rows_per_tile).min(k);
+                    tile_acts.fill(0);
+                    tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+                    for ct in 0..n_ct {
+                        pool.op_into(
+                            placed.slot(rt, ct),
+                            &tile_acts,
+                            &mut op_rng,
+                            &mut scratch,
+                            &mut op,
+                        )
+                        .unwrap();
+                        black_box(&op.values);
+                    }
+                }
+            }
+        });
+
+        // --- bit-plane batched (1 worker: isolate the kernel, not threading) ---
+        let exec = BatchExecutor::new(1, 3);
+        let batched = b.run_slow(&format!("bitplane batch  144x32 b{batch} {label}"), 10, || {
+            black_box(exec.run_q(&pool, &placed, &acts_q).unwrap());
+        });
+
+        let row = json_row(&[
+            JsonField::Str("bench", "kernel_hotpath"),
+            JsonField::Str("layer", "144x32"),
+            JsonField::Int("batch", batch as i64),
+            JsonField::Str("noise", if noise { "on" } else { "off" }),
+            JsonField::Num("scalar_per_op_ms", scalar.mean_s * 1e3),
+            JsonField::Num("bitplane_per_op_ms", bitplane.mean_s * 1e3),
+            JsonField::Num("bitplane_batch_ms", batched.mean_s * 1e3),
+            JsonField::Num("speedup_per_op", scalar.mean_s / bitplane.mean_s),
+            JsonField::Num("speedup_batch", scalar.mean_s / batched.mean_s),
+            JsonField::Str("profile", build_profile()),
+            JsonField::Str("source", "measured"),
+        ]);
+        println!("{row}");
+        rows_out.push(row);
+    }
+
+    let path = bench_json_path("BENCH_kernel.json");
+    match std::fs::write(&path, format!("{}\n", rows_out.join("\n"))) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

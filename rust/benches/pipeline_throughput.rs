@@ -9,7 +9,7 @@
 //! (largest batch) to `BENCH_pipeline.json` in the working directory.
 //! Run: `cargo bench --bench pipeline_throughput` (CIMSIM_BENCH_FAST=1 to trim).
 
-use cimsim::bench::{black_box, json_row, Bench, JsonField};
+use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::mapping::NativeBackend;
@@ -64,6 +64,7 @@ fn main() {
             JsonField::Num("pooled_ms", pooled.mean_s * 1e3),
             JsonField::Num("req_per_s_pooled", batch as f64 / pooled.mean_s),
             JsonField::Num("speedup", speedup),
+            JsonField::Str("profile", build_profile()),
             JsonField::Str("source", "measured"),
         ]);
         println!("{row}");
@@ -73,10 +74,10 @@ fn main() {
     }
 
     if let Some(row) = headline {
-        let path = "BENCH_pipeline.json";
-        match std::fs::write(path, format!("{row}\n")) {
-            Ok(()) => println!("wrote {path}"),
-            Err(e) => eprintln!("could not write {path}: {e}"),
+        let path = bench_json_path("BENCH_pipeline.json");
+        match std::fs::write(&path, format!("{row}\n")) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write {}: {e}", path.display()),
         }
     }
 }

@@ -184,6 +184,23 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Absolute path of a `BENCH_*.json` trajectory file at the repository root
+/// (one directory above this crate), so benches land their rows in the same
+/// place whether `cargo bench` runs from the workspace root or `rust/`.
+pub fn bench_json_path(file_name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name)
+}
+
+/// The build profile a measurement ran under — recorded in every JSON row so
+/// a debug-profile smoke number is never mistaken for a release bench.
+pub fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
 /// One field of a [`json_row`] (the environment vendors no `serde`).
 pub enum JsonField<'a> {
     Str(&'a str, &'a str),

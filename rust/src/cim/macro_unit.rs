@@ -2,7 +2,7 @@
 //! loading, and the full MAC + readout operation (native backend).
 
 use crate::cim::adc::readout_into;
-use crate::cim::engine::{mac_phase_into, MacPhase, OpStats};
+use crate::cim::engine::{mac_phase_prepared_into, ActRangeError, KernelScratch, MacPhase, OpStats};
 use crate::cim::golden;
 use crate::cim::noise::{Fabrication, NoiseDraw};
 use crate::cim::timing::finalize_cycles;
@@ -22,19 +22,38 @@ pub struct CoreOpResult {
 }
 
 /// Reusable per-worker buffers for the allocation-free op path
-/// ([`MacroSim::core_op_into`]): the dynamic noise draw plus the MAC-phase
-/// line-drop vectors. One `OpScratch` per thread; never shared across
-/// differently-shaped configurations.
+/// ([`MacroSim::core_op_into`]): the dynamic noise draw, the MAC-phase
+/// line-drop vectors, and the bit-plane kernel's prepared activation state.
+/// One `OpScratch` per thread; never shared across differently-shaped
+/// configurations.
 #[derive(Clone, Debug)]
 pub struct OpScratch {
     /// The per-op dynamic noise draw (redrawn in place when noise is on).
     pub draw: NoiseDraw,
     phase: MacPhase,
+    kernel: KernelScratch,
 }
 
 impl OpScratch {
     pub fn new(mac: &MacroConfig) -> Self {
-        Self { draw: NoiseDraw::zeros(mac), phase: MacPhase::default() }
+        Self {
+            draw: NoiseDraw::zeros(mac),
+            phase: MacPhase::default(),
+            kernel: KernelScratch::new(mac),
+        }
+    }
+
+    /// Load one activation tile into the kernel scratch (validation, folding,
+    /// row masks, nominal pulse widths — see [`KernelScratch::prepare`]).
+    /// One preparation serves any number of
+    /// [`MacroSim::core_op_prepared_into`] / [`crate::pipeline::MacroPool::op_prepared_into`]
+    /// calls on any shard of the same configuration — the batched executors
+    /// prepare once per `(batch item, row tile)` and stream every column
+    /// tile through it.
+    pub fn prepare(&mut self, cfg: &Config, acts: &[i64]) -> Result<(), MacroError> {
+        self.kernel
+            .prepare(cfg, acts)
+            .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })
     }
 }
 
@@ -112,30 +131,17 @@ impl MacroSim {
             .ok_or(MacroError::NoWeights(core))
     }
 
-    fn check_acts(&self, acts: &[i64]) -> Result<(), MacroError> {
-        let max = self.cfg.mac.act_max();
-        for (row, &a) in acts.iter().enumerate() {
-            if !(0..=max).contains(&a) {
-                return Err(MacroError::BadAct { row, value: a });
-            }
-        }
-        Ok(())
-    }
-
-    /// The single op implementation both public forms route through: MAC
-    /// phase into `phase`, readout into `out.codes`, stats + reconstruction
-    /// into `out`. No allocation when the buffers already have capacity.
-    fn core_op_draw_into(
+    /// Readout + reconstruction tail shared by every op form: readout into
+    /// `out.codes`, stats assembly, golden reconstruction into `out.values`.
+    /// No allocation when the buffers already have capacity.
+    fn finish_op(
         &self,
         core: usize,
-        acts: &[i64],
+        w: &CoreWeights,
+        phase: &MacPhase,
         draw: &NoiseDraw,
-        phase: &mut MacPhase,
         out: &mut CoreOpResult,
-    ) -> Result<(), MacroError> {
-        let w = self.core_weights(core)?;
-        self.check_acts(acts)?;
-        mac_phase_into(&self.cfg, core, w, acts, &self.fab, draw, phase);
+    ) {
         let (adc_discharge_u, sa_compares) =
             readout_into(&self.cfg, core, phase, &self.fab, draw, &mut out.codes);
         out.stats = phase.stats.clone();
@@ -146,7 +152,6 @@ impl MacroSim {
         for (e, &c) in out.codes.iter().enumerate() {
             out.values.push(golden::reconstruct(&self.cfg, w, e, c));
         }
-        Ok(())
     }
 
     /// One core operation with an explicit noise draw (the form shared with
@@ -157,16 +162,23 @@ impl MacroSim {
         acts: &[i64],
         draw: &NoiseDraw,
     ) -> Result<CoreOpResult, MacroError> {
+        let w = self.core_weights(core)?;
+        let mut kernel = KernelScratch::new(&self.cfg.mac);
+        kernel
+            .prepare(&self.cfg, acts)
+            .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })?;
         let mut phase = MacPhase::default();
         let mut out = CoreOpResult::default();
-        self.core_op_draw_into(core, acts, draw, &mut phase, &mut out)?;
+        mac_phase_prepared_into(&self.cfg, core, w, &self.fab, draw, &mut kernel, &mut phase);
+        self.finish_op(core, w, &phase, draw, &mut out);
         Ok(out)
     }
 
     /// Zero-allocation hot path for the batched pipeline: redraws the
-    /// scratch's noise in place (when noise is on), reuses its MAC-phase
-    /// buffers, and writes codes/values/stats into `out`. Identical results
-    /// to [`MacroSim::core_op`] given the same RNG state.
+    /// scratch's noise in place (when noise is on), prepares the bit-plane
+    /// kernel for this activation tile, and writes codes/values/stats into
+    /// `out`. Identical results to [`MacroSim::core_op`] given the same RNG
+    /// state.
     pub fn core_op_into<R: Rng>(
         &self,
         core: usize,
@@ -178,7 +190,84 @@ impl MacroSim {
         if self.cfg.noise.enabled {
             scratch.draw.redraw(rng);
         }
-        self.core_op_draw_into(core, acts, &scratch.draw, &mut scratch.phase, out)
+        let w = self.core_weights(core)?;
+        scratch.prepare(&self.cfg, acts)?;
+        mac_phase_prepared_into(
+            &self.cfg,
+            core,
+            w,
+            &self.fab,
+            &scratch.draw,
+            &mut scratch.kernel,
+            &mut scratch.phase,
+        );
+        self.finish_op(core, w, &scratch.phase, &scratch.draw, out);
+        Ok(())
+    }
+
+    /// One op against the scratch's previously [`OpScratch::prepare`]d
+    /// activation tile: the per-op cost is just the (optional) noise redraw
+    /// plus the engine-major kernel walk. The batched executors call this
+    /// once per column tile after a single preparation per row tile.
+    pub fn core_op_prepared_into<R: Rng>(
+        &self,
+        core: usize,
+        rng: &mut R,
+        scratch: &mut OpScratch,
+        out: &mut CoreOpResult,
+    ) -> Result<(), MacroError> {
+        if self.cfg.noise.enabled {
+            scratch.draw.redraw(rng);
+        }
+        let w = self.core_weights(core)?;
+        mac_phase_prepared_into(
+            &self.cfg,
+            core,
+            w,
+            &self.fab,
+            &scratch.draw,
+            &mut scratch.kernel,
+            &mut scratch.phase,
+        );
+        self.finish_op(core, w, &scratch.phase, &scratch.draw, out);
+        Ok(())
+    }
+
+    /// Batched form of [`MacroSim::core_op_into`]: streams a whole batch of
+    /// activation vectors through one resident core, reusing the scratch and
+    /// growing `outs` in place (`outs[i]` is the result of `batch[i]`).
+    /// Draw-for-draw identical to calling `core_op_into` in a loop with the
+    /// same RNG, so noisy results match the sequential path bit for bit.
+    pub fn core_op_batch_into<R: Rng>(
+        &self,
+        core: usize,
+        batch: &[Vec<i64>],
+        rng: &mut R,
+        scratch: &mut OpScratch,
+        outs: &mut Vec<CoreOpResult>,
+    ) -> Result<(), MacroError> {
+        outs.resize_with(batch.len(), CoreOpResult::default);
+        for (acts, out) in batch.iter().zip(outs.iter_mut()) {
+            if self.cfg.noise.enabled {
+                scratch.draw.redraw(rng);
+            }
+            // Weights are resolved per item (a cheap index) rather than
+            // hoisted, so even the error paths consume RNG draws exactly
+            // like a loop of `core_op_into` (redraw precedes the lookup).
+            let w = self.core_weights(core)?;
+            scratch.prepare(&self.cfg, acts)?;
+            mac_phase_prepared_into(
+                &self.cfg,
+                core,
+                w,
+                &self.fab,
+                &scratch.draw,
+                &mut scratch.kernel,
+                &mut scratch.phase,
+            );
+            self.finish_op(core, w, &scratch.phase, &scratch.draw, out);
+        }
+        Ok(())
     }
 
     /// One core operation, drawing fresh dynamic noise from `rng`.
@@ -323,6 +412,64 @@ mod tests {
             assert_eq!(r.codes, sim.ideal_codes(c, &acts[c]).unwrap());
             assert_eq!(r.stats.sa_compares, 16 * 9);
             assert!(r.stats.total_cycles >= 11);
+        }
+    }
+
+    /// The batched core-op path consumes the RNG draw-for-draw like the
+    /// sequential per-op path: same seed ⇒ bit-identical results.
+    #[test]
+    fn batched_core_ops_match_sequential_rng_stream() {
+        for noise in [false, true] {
+            let mut cfg = Config::default();
+            cfg.noise.enabled = noise;
+            cfg.enhance = EnhanceConfig::both();
+            let mut sim = MacroSim::new(cfg.clone());
+            sim.load_core(2, &random_weights(&cfg, 13)).unwrap();
+            let batch: Vec<Vec<i64>> = (0..6).map(|t| random_acts(&cfg, 50 + t)).collect();
+
+            let mut rng_a = Xoshiro256::seeded(99);
+            let mut scratch_a = OpScratch::new(&cfg.mac);
+            let mut seq = Vec::new();
+            for acts in &batch {
+                let mut out = CoreOpResult::default();
+                sim.core_op_into(2, acts, &mut rng_a, &mut scratch_a, &mut out).unwrap();
+                seq.push(out);
+            }
+
+            let mut rng_b = Xoshiro256::seeded(99);
+            let mut scratch_b = OpScratch::new(&cfg.mac);
+            let mut outs = Vec::new();
+            sim.core_op_batch_into(2, &batch, &mut rng_b, &mut scratch_b, &mut outs).unwrap();
+            assert_eq!(outs.len(), seq.len());
+            for (i, (a, b)) in seq.iter().zip(&outs).enumerate() {
+                assert_eq!(a.codes, b.codes, "noise={noise} item {i}");
+                assert_eq!(a.values, b.values, "noise={noise} item {i}");
+                assert_eq!(a.stats, b.stats, "noise={noise} item {i}");
+            }
+        }
+    }
+
+    /// `prepare` once + prepared ops across shards/cores equals the
+    /// self-preparing op form (the pipeline's per-row-tile amortization).
+    #[test]
+    fn prepared_op_reuse_across_cores() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::fold_only();
+        let mut sim = MacroSim::new(cfg.clone());
+        for c in 0..cfg.mac.cores {
+            sim.load_core(c, &random_weights(&cfg, 70 + c as u64)).unwrap();
+        }
+        let acts = random_acts(&cfg, 5);
+        let mut rng = Xoshiro256::seeded(4);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        scratch.prepare(&cfg, &acts).unwrap();
+        let mut out = CoreOpResult::default();
+        for c in 0..cfg.mac.cores {
+            sim.core_op_prepared_into(c, &mut rng, &mut scratch, &mut out).unwrap();
+            let want = sim.core_op(c, &acts, &mut rng).unwrap();
+            assert_eq!(out.codes, want.codes, "core {c}");
+            assert_eq!(out.values, want.values, "core {c}");
         }
     }
 

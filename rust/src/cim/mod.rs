@@ -2,7 +2,11 @@
 //! discharge MAC, memory cell-embedded binary-search ADC, MAC-folding and
 //! boosted-clipping signal-margin enhancements, plus the exact digital
 //! golden reference. See DESIGN.md §3 for the unit conventions and noise
-//! model.
+//! model, and DESIGN.md §4 for the two MAC-phase kernels: the reference
+//! scalar loop (`engine::mac_phase_into`) and the bit-plane fast path
+//! (`engine::mac_phase_prepared_into` over `weights::BitPlanes`), which are
+//! bit-identical by construction and property-tested against each other in
+//! `tests/kernel_equivalence.rs`.
 
 pub mod adc;
 pub mod engine;
@@ -12,10 +16,10 @@ pub mod noise;
 pub mod timing;
 pub mod weights;
 
-pub use engine::OpStats;
+pub use engine::{KernelScratch, OpStats};
 pub use macro_unit::{CoreOpResult, MacroError, MacroSim, OpScratch};
 pub use noise::{Fabrication, NoiseDraw};
-pub use weights::CoreWeights;
+pub use weights::{BitPlanes, CoreWeights};
 
 /// Signal-margin metrics (Fig. 2 right): SM = step − 2σ′ with the step in
 /// volts (u) and σ′ the measured MAC-result noise standard deviation in u.

@@ -47,6 +47,10 @@ pub struct Fabrication {
     /// `[core][engine][step 0..8]` (8 discharge steps follow the first 8 of
     /// 9 comparisons).
     step: Vec<f32>,
+    /// Whether every MAC-phase static error (cell-current and capacitor
+    /// mismatch) is exactly zero — precomputed once so the closed-form
+    /// noise-free kernel path can gate on it per op for free.
+    mac_ideal: bool,
 }
 
 impl Fabrication {
@@ -70,6 +74,7 @@ impl Fabrication {
             cap.iter_mut().for_each(|x| *x = 0.0);
             step.iter_mut().for_each(|x| *x = 0.0);
         }
+        let mac_ideal = cell.iter().all(|&x| x == 0.0) && cap.iter().all(|&x| x == 0.0);
         Self {
             cores: mac.cores,
             rows: mac.rows,
@@ -78,11 +83,21 @@ impl Fabrication {
             sa_off,
             cap,
             step,
+            mac_ideal,
         }
     }
 
     pub fn ideal(mac: &MacroConfig) -> Self {
         Self::draw(mac, &NoiseConfig::disabled())
+    }
+
+    /// True when every MAC-phase static mismatch entry (`cell`, `cap`) is
+    /// exactly zero, i.e. each discharge branch is nominal. The bit-plane
+    /// kernel's closed-form path requires this (every line-drop term is then
+    /// an exactly-representable dyadic and summation order is immaterial).
+    #[inline]
+    pub fn is_ideal(&self) -> bool {
+        self.mac_ideal
     }
 
     #[inline]
@@ -252,8 +267,17 @@ mod tests {
         let f = Fabrication::ideal(&cfg.mac);
         assert!(f.cell_flat().iter().all(|&x| x == 0.0));
         assert!(f.sa_off_flat().iter().all(|&x| x == 0.0));
+        assert!(f.is_ideal());
         let d = NoiseDraw::zeros(&cfg.mac);
         assert!(d.z_jit.iter().all(|&x| x == 0.0));
+        // A real draw with the default sigmas is not ideal.
+        assert!(!Fabrication::draw(&cfg.mac, &cfg.noise).is_ideal());
+        // Enabled noise with zero cell/cap sigma still counts as MAC-ideal
+        // (SA offsets do not enter the MAC phase).
+        let mut zero_mac = cfg.noise.clone();
+        zero_mac.sigma_cell = 0.0;
+        zero_mac.sigma_cap = 0.0;
+        assert!(Fabrication::draw(&cfg.mac, &zero_mac).is_ideal());
     }
 
     #[test]

@@ -2,8 +2,118 @@
 //! each of the `rows × engines` weights is stored sign-magnitude (W[3] sign
 //! bit in the sign-control column, W[2:0] magnitude in the three MAC-cell
 //! columns).
+//!
+//! Besides the dense row-major store, every loaded core carries a
+//! precomputed [`BitPlanes`] structure-of-arrays view (DESIGN.md §4): packed
+//! per-engine row bitmasks (one per weight bit, plus the union and the sign
+//! column) and an engine-major signed-value column. It is built once at load
+//! time and backs the bit-plane fast-path kernel
+//! (`engine::mac_phase_prepared_into`) — the columnwise evaluation order of
+//! the silicon, where each engine walks only its set rows.
 
 use crate::config::MacroConfig;
+
+/// Bit-plane SoA view of one core's weights, built once at load time.
+///
+/// For each engine the row dimension is packed into `u64` bitmask words:
+/// one mask per magnitude bit `k` (the "bit plane" — which rows' 9-T cells
+/// discharge when the bit-`k` SL pulses), their union (`any`), and the sign
+/// column (rows stored with W[3] = positive). The engine-major signed value
+/// column (`val`) feeds the closed-form noise-free integer path.
+///
+/// Layout invariant: masks are engine-major (`engine` outer, word inner) so
+/// one engine's walk touches contiguous memory; `plane` nests `k` between
+/// engine and word.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitPlanes {
+    rows: usize,
+    kbits: usize,
+    /// `u64` bitmask words per row dimension (`rows.div_ceil(64)`).
+    words: usize,
+    /// Per `(engine, k)`: rows whose magnitude bit `k` is set,
+    /// `[(engine·kbits + k)·words ..]`.
+    plane: Vec<u64>,
+    /// Per engine: union of all magnitude planes (rows with `|w| ≠ 0`).
+    any: Vec<u64>,
+    /// Per engine: rows whose stored sign is positive.
+    sign_pos: Vec<u64>,
+    /// Engine-major signed weight values, `[engine·rows + row]`.
+    val: Vec<i16>,
+}
+
+impl BitPlanes {
+    fn build(cfg: &MacroConfig, mag: &[u8], sign: &[i8]) -> Self {
+        let (rows, engines) = (cfg.rows, cfg.engines);
+        let kbits = cfg.weight_bits as usize - 1;
+        // The walk kernel caches one 64-row window of plane words on the
+        // stack ([u64; 8]); the config layer validates weight_bits ≤ 8.
+        assert!(kbits <= 8, "weight_bits {} beyond the kernel's plane cache", cfg.weight_bits);
+        let words = rows.div_ceil(64);
+        let mut planes = Self {
+            rows,
+            kbits,
+            words,
+            plane: vec![0; engines * kbits * words],
+            any: vec![0; engines * words],
+            sign_pos: vec![0; engines * words],
+            val: vec![0; engines * rows],
+        };
+        for r in 0..rows {
+            let (wi, bit) = (r / 64, (r % 64) as u32);
+            for e in 0..engines {
+                let m = mag[r * engines + e];
+                let s = sign[r * engines + e];
+                planes.val[e * rows + r] = if s < 0 { -(m as i16) } else { m as i16 };
+                if s > 0 {
+                    planes.sign_pos[e * words + wi] |= 1u64 << bit;
+                }
+                if m != 0 {
+                    planes.any[e * words + wi] |= 1u64 << bit;
+                }
+                for k in 0..kbits {
+                    if (m >> k) & 1 == 1 {
+                        planes.plane[(e * kbits + k) * words + wi] |= 1u64 << bit;
+                    }
+                }
+            }
+        }
+        planes
+    }
+
+    #[inline]
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    #[inline]
+    pub fn kbits(&self) -> usize {
+        self.kbits
+    }
+
+    /// One 64-row window of the union mask for `engine`.
+    #[inline]
+    pub fn any_word(&self, engine: usize, wi: usize) -> u64 {
+        self.any[engine * self.words + wi]
+    }
+
+    /// One 64-row window of the positive-sign mask for `engine`.
+    #[inline]
+    pub fn sign_word(&self, engine: usize, wi: usize) -> u64 {
+        self.sign_pos[engine * self.words + wi]
+    }
+
+    /// One 64-row window of the bit-`k` plane for `engine`.
+    #[inline]
+    pub fn plane_word(&self, engine: usize, k: usize, wi: usize) -> u64 {
+        self.plane[(engine * self.kbits + k) * self.words + wi]
+    }
+
+    /// The engine-major signed value column (length `rows`).
+    #[inline]
+    pub fn val_col(&self, engine: usize) -> &[i16] {
+        &self.val[engine * self.rows..(engine + 1) * self.rows]
+    }
+}
 
 /// Weights resident in one core's SRAM array.
 #[derive(Clone, Debug, PartialEq)]
@@ -17,6 +127,8 @@ pub struct CoreWeights {
     /// Column sums Σ_r w[r][e] — the digital fold-correction constant
     /// `fold_offset · col_sum` is computed from these at load time.
     col_sum: Vec<i64>,
+    /// Precomputed bit-plane SoA view for the fast-path kernel.
+    planes: BitPlanes,
 }
 
 #[derive(Debug)]
@@ -64,7 +176,8 @@ impl CoreWeights {
                 col_sum[e] += v;
             }
         }
-        Ok(Self { rows, engines, mag, sign, col_sum })
+        let planes = BitPlanes::build(cfg, &mag, &sign);
+        Ok(Self { rows, engines, mag, sign, col_sum, planes })
     }
 
     /// Flat constructor used by generators (values validated the same way).
@@ -100,6 +213,12 @@ impl CoreWeights {
     #[inline]
     pub fn col_sum(&self, engine: usize) -> i64 {
         self.col_sum[engine]
+    }
+
+    /// The precomputed bit-plane SoA view (built once at load time).
+    #[inline]
+    pub fn planes(&self) -> &BitPlanes {
+        &self.planes
     }
 
     /// Total set magnitude bits (storage activity metric).
@@ -183,6 +302,67 @@ mod tests {
             CoreWeights::from_signed(&c, &short),
             Err(WeightError::Shape { .. })
         ));
+    }
+
+    /// The SoA planes must agree bit-for-bit with the dense accessors for
+    /// every (row, engine, bit) — the fast-path kernel trusts this.
+    #[test]
+    fn bit_planes_match_dense_accessors() {
+        let c = cfg();
+        let w = ramp_weights(&c);
+        let cw = CoreWeights::from_signed(&c, &w).unwrap();
+        let p = cw.planes();
+        assert_eq!(p.words(), 1); // 64 rows
+        assert_eq!(p.kbits(), 3);
+        for e in 0..c.engines {
+            let col = p.val_col(e);
+            for r in 0..c.rows {
+                let (wi, bit) = (r / 64, r % 64);
+                assert_eq!(col[r] as i64, cw.value(r, e), "val ({r},{e})");
+                assert_eq!(
+                    (p.any_word(e, wi) >> bit) & 1 == 1,
+                    cw.mag(r, e) != 0,
+                    "any ({r},{e})"
+                );
+                assert_eq!(
+                    (p.sign_word(e, wi) >> bit) & 1 == 1,
+                    cw.sign(r, e) > 0,
+                    "sign ({r},{e})"
+                );
+                for k in 0..3 {
+                    assert_eq!(
+                        (p.plane_word(e, k, wi) >> bit) & 1 == 1,
+                        cw.mag_bit(r, e, k as u32),
+                        "plane ({r},{e},{k})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Non-multiple-of-64 row counts pack into the right number of words.
+    #[test]
+    fn bit_planes_handle_odd_row_counts() {
+        let mut c = cfg();
+        c.rows = 70;
+        let w: Vec<Vec<i64>> = (0..c.rows)
+            .map(|r| (0..c.engines).map(|e| ((r + e) % 15) as i64 - 7).collect())
+            .collect();
+        let cw = CoreWeights::from_signed(&c, &w).unwrap();
+        let p = cw.planes();
+        assert_eq!(p.words(), 2);
+        for e in 0..c.engines {
+            for r in 0..c.rows {
+                let (wi, bit) = (r / 64, r % 64);
+                assert_eq!((p.any_word(e, wi) >> bit) & 1 == 1, cw.mag(r, e) != 0);
+            }
+            // Rows past the configured count stay zero in every mask.
+            for ghost in c.rows..128 {
+                let (wi, bit) = (ghost / 64, ghost % 64);
+                assert_eq!((p.any_word(e, wi) >> bit) & 1, 0);
+                assert_eq!((p.sign_word(e, wi) >> bit) & 1, 0);
+            }
+        }
     }
 
     #[test]

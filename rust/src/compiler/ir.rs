@@ -273,6 +273,29 @@ impl Graph {
 
     /// A float MLP as a calibrated graph: `Quantize → Linear (→ Relu)` per
     /// layer, dequant+bias fused into each layer.
+    ///
+    /// The typical flow is ingest → [`crate::compiler::compile`] → run:
+    ///
+    /// ```
+    /// use cimsim::compiler::{compile, CompileOptions, Graph};
+    /// use cimsim::config::Config;
+    /// use cimsim::nn::mlp::Mlp;
+    /// use cimsim::nn::tensor::Tensor;
+    ///
+    /// let mut cfg = Config::default();
+    /// cfg.noise.enabled = false; // deterministic: quantization only
+    /// let mlp = Mlp::new(&[8, 6, 4], 1);
+    /// let graph = Graph::from_mlp(&mlp);
+    ///
+    /// // Calibrate activation ranges on a small set, lower + place + load.
+    /// let cal = vec![Tensor::from_vec(&[8], (0..8).map(|i| i as f32 / 8.0).collect())];
+    /// let mut plan = compile(graph, &cal, &cfg, &CompileOptions::default()).unwrap();
+    ///
+    /// let logits = plan
+    ///     .run_batch(&[Tensor::from_vec(&[8], vec![0.25; 8])])
+    ///     .unwrap();
+    /// assert_eq!(logits[0].len(), 4);
+    /// ```
     pub fn from_mlp(mlp: &Mlp) -> Self {
         let mut g = Graph::new();
         let d0 = mlp.layers[0].w.shape[1];

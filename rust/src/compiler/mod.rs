@@ -40,6 +40,13 @@
 //! cores/shard, ~1.1 Mb of weight SRAM held resident; one CIFAR image
 //! streams 9 409 activation vectors (im2col positions + the FC vector)
 //! through the pool.
+//!
+//! Execution rides the bit-plane fast-path kernel end to end (DESIGN.md
+//! §4): `CompiledPlan::run_batch` → `BatchExecutor` → one kernel
+//! preparation per (item, row tile), closed-form integer dot products
+//! noise-free. See [`Graph::from_mlp`] and [`CompiledPlan`] for runnable
+//! ingest-to-logits examples; `cargo bench --bench compiler_resnet`
+//! measures compile + forward throughput (`BENCH_compiler.json`).
 
 pub mod ir;
 pub mod lower;

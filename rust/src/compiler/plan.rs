@@ -89,6 +89,33 @@ impl CompiledLayer {
 
 /// A compiled network resident on a macro pool.
 ///
+/// A plan owns its pool (weights loaded exactly once at compile time) and
+/// serves any number of batches with per-layer cycle/energy accounting:
+///
+/// ```
+/// use cimsim::compiler::{compile, CompileOptions, Graph};
+/// use cimsim::config::Config;
+/// use cimsim::nn::mlp::Mlp;
+/// use cimsim::nn::tensor::Tensor;
+///
+/// let mut cfg = Config::default();
+/// cfg.noise.enabled = false;
+/// let graph = Graph::from_mlp(&Mlp::new(&[10, 5, 3], 2));
+/// let cal = vec![Tensor::from_vec(&[10], (0..10).map(|i| i as f32 / 10.0).collect())];
+/// let mut plan = compile(graph, &cal, &cfg, &CompileOptions::default()).unwrap();
+///
+/// // Flat-vector serving form; batches of any size.
+/// let out = plan.run_flat(&[vec![0.1; 10], vec![0.9; 10]]).unwrap();
+/// assert_eq!((out.len(), out[0].len()), (2, 3));
+///
+/// // Device counters accumulate per layer and in total; the cost model's
+/// // cycle prediction is exact (asserted in tests/compiler_equivalence.rs).
+/// assert_eq!(
+///     plan.stats().total_cycles,
+///     plan.layers().iter().map(|l| l.predicted_cycles()).sum::<u64>(),
+/// );
+/// ```
+///
 /// Memory note: a plan keeps the ingested graph (float weights — backs
 /// [`Graph::eval_float`] golden references) and each layer's tiled integer
 /// planes (backs [`CompiledLayer::linear`] sequential references) alongside

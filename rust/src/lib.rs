@@ -59,6 +59,24 @@
 //! worst-case device cycles in baseline mode (15 per dense op).
 //! [`pipeline::PipelineDeployment`] is now one instance of a compiled plan
 //! (the deployment graph, unit scales + explicit dequantize nodes).
+//!
+//! # Hot-path kernel
+//!
+//! Every MAC op — per-request, pooled, or compiled — runs on the bit-plane
+//! fast-path kernel (DESIGN.md §4): [`cim::BitPlanes`] packs per-engine row
+//! bitmasks + sign masks at weight-load time, [`cim::KernelScratch`] hoists
+//! the activation-side work (folding, masks, pulse widths, jitter σ) out of
+//! the per-op loop, and noise-free execution with the paper's dyadic DTC
+//! gains collapses to integer dot products. The legacy scalar kernel
+//! (`cim::engine::mac_phase_into`) remains as the bit-exact oracle;
+//! `tests/kernel_equivalence.rs` property-tests the two against each other
+//! across all enhancement modes, noise on and off. Measured numbers:
+//! `BENCH_kernel.json` (`cargo bench --bench kernel_hotpath`), README
+//! "Performance".
+//!
+//! Unit conventions, calibration assumptions and declared reproduction
+//! deviations live in the repo-root `DESIGN.md` (§1–§8), which the code
+//! cites by section; `tests/docs_refs.rs` keeps the citations resolving.
 
 pub mod analysis;
 pub mod bench;

@@ -131,7 +131,10 @@ impl CimLinear {
 
     /// Run a batch of quantized activation vectors, weight-stationary: every
     /// tile is loaded once and all vectors stream through it (the chip's
-    /// usage pattern). Cores are assigned round-robin per tile.
+    /// usage pattern). Cores are assigned round-robin per tile. The whole
+    /// per-tile batch goes through `CimBackend::core_op_batch`, which the
+    /// native backend serves with the bit-plane batch kernel
+    /// (`MacroSim::core_op_batch_into`) — bit-identical to per-op calls.
     pub fn run_batch_q(
         &self,
         backend: &mut dyn CimBackend,

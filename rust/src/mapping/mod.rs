@@ -128,6 +128,9 @@ pub struct NativeBackend {
     stats: ExecStats,
     scratch: crate::cim::OpScratch,
     op: crate::cim::CoreOpResult,
+    /// Reusable per-batch results + folded-MAC scratch for the batched path.
+    ops: Vec<crate::cim::CoreOpResult>,
+    folded: Vec<i64>,
 }
 
 impl NativeBackend {
@@ -140,6 +143,8 @@ impl NativeBackend {
             stats: ExecStats::default(),
             scratch,
             op: crate::cim::CoreOpResult::default(),
+            ops: Vec::new(),
+            folded: Vec::new(),
         }
     }
 }
@@ -161,6 +166,29 @@ impl CimBackend for NativeBackend {
         let w = self.sim.core_weights(core)?;
         account_core_op(&self.sim.cfg, w, acts, &self.op.stats, &mut self.stats);
         Ok(self.op.values.clone())
+    }
+
+    /// Batched override: stream the whole batch through the resident core
+    /// with [`MacroSim::core_op_batch_into`] (one kernel preparation per
+    /// vector, reused result buffers). Draw-for-draw identical to the
+    /// default per-op loop, so results match it bit for bit.
+    fn core_op_batch(&mut self, core: usize, acts: &[Vec<i64>]) -> Result<Vec<Vec<f64>>, MapError> {
+        self.sim
+            .core_op_batch_into(core, acts, &mut self.rng, &mut self.scratch, &mut self.ops)?;
+        let w = self.sim.core_weights(core)?;
+        let mut res = Vec::with_capacity(acts.len());
+        for (a, op) in acts.iter().zip(&self.ops) {
+            account_core_op_into(
+                &self.sim.cfg,
+                w,
+                a,
+                &op.stats,
+                &mut self.stats,
+                &mut self.folded,
+            );
+            res.push(op.values.clone());
+        }
+        Ok(res)
     }
 
     fn stats(&self) -> &ExecStats {

@@ -11,6 +11,14 @@
 //! performs zero allocations; with `enhance.boost` on it recomputes the
 //! golden folded MAC per op for the clipping counter, exactly like every
 //! other backend (`mapping::account_core_op_into`).
+//!
+//! The per-op kernel is the bit-plane fast path (DESIGN.md §4): each row
+//! tile's activations are [`OpScratch::prepare`]d once — validation,
+//! folding, row bitmasks, nominal pulse widths — and every column tile
+//! walks the preparation through its core's precomputed
+//! [`crate::cim::BitPlanes`], bit-identical to the scalar reference kernel
+//! (noise draws are consumed op for op in the same order, so noisy batches
+//! match the sequential path exactly too).
 
 use crate::cim::{CoreOpResult, OpScratch};
 use crate::mapping::{account_core_op_into, ExecStats, MapError};
@@ -83,9 +91,13 @@ impl BatchExecutor {
                     let upper = (r0 + rows).min(k);
                     tile_acts.fill(0);
                     tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+                    // Prepare the bit-plane kernel once per row tile:
+                    // validation, folding, row masks and pulse widths are
+                    // shared by every column tile (shard-independent).
+                    scratch.prepare(pool.cfg(), &tile_acts)?;
                     for ct in 0..n_ct {
                         let slot = layer.slot(rt, ct);
-                        pool.op_into(slot, &tile_acts, &mut rng, &mut scratch, &mut op)?;
+                        pool.op_prepared_into(slot, &mut rng, &mut scratch, &mut op)?;
                         let c0 = ct * engines;
                         for (e, &v) in op.values.iter().enumerate() {
                             let col = c0 + e;

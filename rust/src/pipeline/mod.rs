@@ -27,6 +27,16 @@
 //! call mixes a fresh epoch into each worker's RNG substream, so each op
 //! consumes one fresh decorrelated draw and repeated batches do not replay
 //! one frozen noise realization.
+//!
+//! Per-op work runs on the bit-plane fast-path kernel (DESIGN.md §4): each
+//! row tile's activations are prepared once ([`crate::cim::OpScratch`]) and
+//! every column tile walks its core's precomputed
+//! [`crate::cim::BitPlanes`] — bit-identical to the scalar reference kernel
+//! (`tests/kernel_equivalence.rs`), measured in `BENCH_kernel.json`.
+//!
+//! See [`MacroPool`] for a run-to-first-logits example; `cargo bench --bench
+//! pipeline_throughput` measures per-request vs pooled serving on your
+//! machine (README "Performance").
 
 pub mod backend;
 pub mod batch;

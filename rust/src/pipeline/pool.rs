@@ -13,6 +13,32 @@ use crate::mapping::executor::CimLinear;
 use crate::util::rng::Rng;
 
 /// A pool of weight-stationary macro shards.
+///
+/// Place a tiled layer once, then stream batches through the resident
+/// weights with [`crate::pipeline::BatchExecutor`]:
+///
+/// ```
+/// use cimsim::config::Config;
+/// use cimsim::mapping::executor::CimLinear;
+/// use cimsim::nn::tensor::Tensor;
+/// use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+///
+/// let mut cfg = Config::default();
+/// cfg.noise.enabled = false;
+/// // A 64×16 layer = exactly one tile on one (shard, core) slot.
+/// let w = Tensor::from_vec(&[64, 16], vec![0.01; 64 * 16]);
+/// let lin = CimLinear::new(&w, vec![0.0; 16], 1.0, &cfg);
+///
+/// let mut pool = MacroPool::new(cfg.clone());
+/// let placed = PlacedLinear::place(lin, &mut pool).unwrap(); // weights load once
+/// assert_eq!((pool.n_shards(), pool.slots_loaded()), (1, 1));
+///
+/// let exec = BatchExecutor::new(2, 7);
+/// let xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 / 4.0; 64]).collect();
+/// let (out, stats) = exec.run(&pool, &placed, &xs).unwrap();
+/// assert_eq!((out.len(), out[0].len()), (4, 16));
+/// assert_eq!(stats.core_ops, 4); // one op per request on the resident tile
+/// ```
 pub struct MacroPool {
     cfg: Config,
     shards: Vec<MacroSim>,
@@ -149,6 +175,25 @@ impl MacroPool {
         let (s, c) = self.locate(slot);
         let shard = self.shards.get(s).ok_or(MacroError::BadSlot(slot))?;
         shard.core_op_into(c, acts, rng, scratch, out)
+    }
+
+    /// One op on a slot against the scratch's already-
+    /// [`OpScratch::prepare`]d activation tile. The preparation is
+    /// shard-independent (it depends only on the pool configuration and the
+    /// activations — never on a die's fabrication draw), so the batch
+    /// executor prepares once per `(batch item, row tile)` and streams every
+    /// column tile of that row through the prepared scratch, whichever
+    /// shards they landed on.
+    pub fn op_prepared_into<R: Rng>(
+        &self,
+        slot: usize,
+        rng: &mut R,
+        scratch: &mut OpScratch,
+        out: &mut CoreOpResult,
+    ) -> Result<(), MacroError> {
+        let (s, c) = self.locate(slot);
+        let shard = self.shards.get(s).ok_or(MacroError::BadSlot(slot))?;
+        shard.core_op_prepared_into(c, rng, scratch, out)
     }
 }
 

@@ -1,0 +1,235 @@
+//! Kernel equivalence suite: the bit-plane fast-path kernel
+//! (`mac_phase_prepared_into` + `BitPlanes`, DESIGN.md §4) must match the
+//! legacy scalar kernel (`mac_phase_into`) BIT-EXACTLY — codes, reconstructed
+//! values and statistics — across all four enhancement modes, noise on and
+//! off, including degenerate inputs (all-zero activations, fold-offset rows,
+//! clipped lines, zero/saturated weight columns).
+//!
+//! The legacy composition below is the pre-fast-path `core_op` implementation
+//! kept alive expression for expression: scalar MAC phase → readout → stats →
+//! golden reconstruction.
+
+use cimsim::cim::adc::readout_into;
+use cimsim::cim::engine::{mac_phase_into, MacPhase};
+use cimsim::cim::timing::finalize_cycles;
+use cimsim::cim::{golden, CoreOpResult, CoreWeights, MacroSim, NoiseDraw, OpScratch};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::prop_assert;
+use cimsim::util::proptest::check;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+const MODES: [fn() -> EnhanceConfig; 4] = [
+    EnhanceConfig::default,
+    EnhanceConfig::fold_only,
+    EnhanceConfig::boost_only,
+    EnhanceConfig::both,
+];
+
+/// The full legacy op: scalar kernel + readout + reconstruction, exactly as
+/// `MacroSim::core_op` computed it before the bit-plane fast path landed.
+///
+/// Deliberately NOT shared with the similar compositions in
+/// `benches/kernel_hotpath.rs` / `tests/bench_smoke.rs`: the oracle must
+/// stay independent of library plumbing so a bug in a shared helper cannot
+/// hide in both the baseline and the test. If the op tail changes, update
+/// all three sites.
+fn legacy_core_op(
+    cfg: &Config,
+    sim: &MacroSim,
+    core: usize,
+    w: &CoreWeights,
+    acts: &[i64],
+    draw: &NoiseDraw,
+) -> CoreOpResult {
+    let mut phase = MacPhase::default();
+    mac_phase_into(cfg, core, w, acts, &sim.fab, draw, &mut phase);
+    let mut out = CoreOpResult::default();
+    let (adc_discharge_u, sa_compares) =
+        readout_into(cfg, core, &phase, &sim.fab, draw, &mut out.codes);
+    out.stats = phase.stats.clone();
+    out.stats.adc_discharge_u = adc_discharge_u;
+    out.stats.sa_compares = sa_compares;
+    finalize_cycles(cfg, &mut out.stats);
+    for (e, &c) in out.codes.iter().enumerate() {
+        out.values.push(golden::reconstruct(cfg, w, e, c));
+    }
+    out
+}
+
+/// Weight patterns that exercise the planes: dense random, zero columns,
+/// saturated ±7 columns (clipped lines under boost), sparse.
+fn gen_weights(cfg: &Config, rng: &mut Xoshiro256, pattern: usize) -> Vec<Vec<i64>> {
+    (0..cfg.mac.rows)
+        .map(|r| {
+            (0..cfg.mac.engines)
+                .map(|e| match pattern {
+                    0 => rng.next_range_i64(-7, 7),
+                    1 if e % 3 == 0 => 0,           // whole zero columns
+                    1 => rng.next_range_i64(-7, 7),
+                    2 => {
+                        if e % 2 == 0 {
+                            7
+                        } else {
+                            -7
+                        }
+                    } // saturated → vpp clamp / code clip
+                    _ => {
+                        if (r + e) % 4 == 0 {
+                            rng.next_range_i64(-7, 7)
+                        } else {
+                            0
+                        }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Activation patterns including every degenerate case the issue names.
+fn gen_acts(cfg: &Config, rng: &mut Xoshiro256, pattern: usize) -> Vec<i64> {
+    (0..cfg.mac.rows)
+        .map(|r| match pattern {
+            0 => rng.next_range_i64(0, 15),
+            1 => 0,                        // all-zero tile (padding)
+            2 => cfg.enhance.fold_offset,  // folds to exactly 0 when folding
+            3 => 15,                       // max magnitude → clipped lines
+            _ => {
+                if r % 5 == 0 {
+                    rng.next_range_i64(1, 15)
+                } else {
+                    0
+                }
+            }
+        })
+        .collect()
+}
+
+/// For every mode × noise × weight/activation pattern, the new op path
+/// (bit-plane kernel) equals the legacy scalar composition bit for bit.
+#[test]
+fn property_bitplane_kernel_matches_scalar_kernel() {
+    check("bitplane-vs-scalar", 80, |g| {
+        let mut cfg = Config::default();
+        cfg.enhance = g.pick(&MODES)();
+        let noise = g.bool();
+        cfg.noise.enabled = noise;
+        let core = g.usize_in(0, cfg.mac.cores - 1);
+        let wp = g.usize_in(0, 3);
+        let ap = g.usize_in(0, 4);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0xB17);
+        let w_rows = gen_weights(&cfg, &mut rng, wp);
+        let acts = gen_acts(&cfg, &mut rng, ap);
+
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
+        let w = CoreWeights::from_signed(&cfg.mac, &w_rows).unwrap();
+
+        let draw = if noise {
+            NoiseDraw::draw(&cfg.mac, &mut rng)
+        } else {
+            NoiseDraw::zeros(&cfg.mac)
+        };
+        let want = legacy_core_op(&cfg, &sim, core, &w, &acts, &draw);
+        let got = sim
+            .core_op_with_noise(core, &acts, &draw)
+            .map_err(|e| format!("op: {e}"))?;
+
+        let tag = format!(
+            "mode {} noise {noise} core {core} wp {wp} ap {ap}",
+            cfg.enhance.label()
+        );
+        prop_assert!(got.codes == want.codes, "codes differ ({tag})");
+        prop_assert!(got.values == want.values, "values differ ({tag})");
+        prop_assert!(got.stats == want.stats, "stats differ ({tag})");
+        Ok(())
+    });
+}
+
+/// The zero-allocation scratch path and the batched path consume the RNG
+/// draw-for-draw like repeated allocating ops: same seed ⇒ same results,
+/// noise on or off.
+#[test]
+fn property_scratch_and_batch_paths_match_allocating_path() {
+    check("scratch-batch-vs-allocating", 30, |g| {
+        let mut cfg = Config::default();
+        cfg.enhance = g.pick(&MODES)();
+        cfg.noise.enabled = g.bool();
+        let core = g.usize_in(0, cfg.mac.cores - 1);
+        let n_ops = g.usize_in(1, 5);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0x5CA7);
+        let w_rows = gen_weights(&cfg, &mut rng, g.usize_in(0, 3));
+        let batch: Vec<Vec<i64>> = (0..n_ops)
+            .map(|_| gen_acts(&cfg, &mut rng, g.usize_in(0, 4)))
+            .collect();
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
+
+        // Allocating reference ops.
+        let mut rng_a = Xoshiro256::seeded(g.case_seed ^ 0xF00D);
+        let mut want = Vec::new();
+        for acts in &batch {
+            want.push(sim.core_op(core, acts, &mut rng_a).map_err(|e| format!("{e}"))?);
+        }
+
+        // Scratch path.
+        let mut rng_b = Xoshiro256::seeded(g.case_seed ^ 0xF00D);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let mut out = CoreOpResult::default();
+        for (i, acts) in batch.iter().enumerate() {
+            sim.core_op_into(core, acts, &mut rng_b, &mut scratch, &mut out)
+                .map_err(|e| format!("{e}"))?;
+            prop_assert!(out.codes == want[i].codes, "scratch codes op {i}");
+            prop_assert!(out.values == want[i].values, "scratch values op {i}");
+            prop_assert!(out.stats == want[i].stats, "scratch stats op {i}");
+        }
+
+        // Batched path.
+        let mut rng_c = Xoshiro256::seeded(g.case_seed ^ 0xF00D);
+        let mut scratch_c = OpScratch::new(&cfg.mac);
+        let mut outs = Vec::new();
+        sim.core_op_batch_into(core, &batch, &mut rng_c, &mut scratch_c, &mut outs)
+            .map_err(|e| format!("{e}"))?;
+        for (i, got) in outs.iter().enumerate() {
+            prop_assert!(got.codes == want[i].codes, "batch codes op {i}");
+            prop_assert!(got.values == want[i].values, "batch values op {i}");
+            prop_assert!(got.stats == want[i].stats, "batch stats op {i}");
+        }
+        Ok(())
+    });
+}
+
+/// End to end through the pool: the batched executor (which now prepares the
+/// kernel once per row tile) stays bit-identical to the sequential
+/// single-macro executor, noise-free, with the legacy scalar kernel as the
+/// transitive anchor via `property_bitplane_kernel_matches_scalar_kernel`.
+#[test]
+fn pooled_layer_still_matches_sequential_after_fast_path() {
+    use cimsim::mapping::executor::CimLinear;
+    use cimsim::mapping::NativeBackend;
+    use cimsim::nn::tensor::Tensor;
+    use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+    let (k, n) = (144, 32);
+    let mut rng = Xoshiro256::seeded(23);
+    let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+    let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+    let xs: Vec<Vec<f32>> =
+        (0..16).map(|_| (0..k).map(|_| rng.next_f32()).collect()).collect();
+
+    let mut nat = NativeBackend::new(cfg.clone());
+    let want = lin.run_batch(&mut nat, &xs).unwrap();
+
+    let mut pool = MacroPool::new(cfg.clone());
+    let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+    for workers in [1usize, 3] {
+        let exec = BatchExecutor::new(workers, 77);
+        let (got, _) = exec.run(&pool, &placed, &xs).unwrap();
+        assert_eq!(got, want, "workers {workers}");
+    }
+}
