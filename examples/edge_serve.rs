@@ -33,7 +33,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         backend,
         ServeConfig {
             max_batch: 16,
-            batch_timeout: std::time::Duration::from_millis(1),
+            max_wait: std::time::Duration::from_millis(1),
             ..ServeConfig::default()
         },
     )?;

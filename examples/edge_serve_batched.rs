@@ -43,8 +43,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // (worker count is the plan's CompileOptions::workers — 0 = auto).
     let serve_cfg = ServeConfig {
         max_batch: 32,
-        batch_timeout: std::time::Duration::from_millis(1),
-        workers: 0,
+        max_wait: std::time::Duration::from_millis(1),
+        ..ServeConfig::default()
     };
     let handle = serve_plan(plan, serve_cfg)?;
     println!("serving on {} (compiled plan, max batch 32, 1 ms window)", handle.addr);

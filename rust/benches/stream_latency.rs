@@ -1,0 +1,121 @@
+//! Barrier vs streamed execution of the compiled ResNet-20 plan.
+//!
+//! The barrier path (`CompiledPlan::run_batch`) synchronizes after every
+//! layer: every item in the batch completes at the very end, so per-item
+//! latency ≈ total batch time. The streamed path
+//! (`CompiledPlan::run_streamed`, DESIGN.md §9) pipelines items through the
+//! per-layer stages: early items complete while later ones are still in
+//! flight, which is what a serving tail-latency profile actually sees.
+//!
+//! Emits one JSON row to `BENCH_stream.json` at the repo root with the
+//! barrier-vs-streamed p50/p99 item latency and throughput comparison.
+//! Run: `cargo bench --bench stream_latency` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{
+    bench_json_path, black_box, build_profile, fmt_duration, json_row, percentile, JsonField,
+};
+use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::nn::dataset::random_image;
+use cimsim::nn::resnet::ResNet20;
+use cimsim::nn::tensor::Tensor;
+use std::time::Instant;
+
+fn pct_ms(latencies: &mut Vec<f64>, q: f64) -> f64 {
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(latencies, q) * 1e3
+}
+
+fn main() {
+    let fast = std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1");
+    let (batch, runs) = if fast { (4usize, 2usize) } else { (16, 3) };
+    let queue_cap = 4usize;
+
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let net = ResNet20::new(3);
+    let graph = Graph::from_resnet20(&net);
+    let cal: Vec<Tensor> = vec![random_image(&[3, 32, 32], 100)];
+    let workers = cimsim::util::threadpool::default_workers();
+    let opts = CompileOptions { workers, ..Default::default() };
+    let mut plan = compile(graph, &cal, &cfg, &opts).expect("compile resnet20");
+    let n_stages = plan.layers().len();
+    let imgs: Vec<Tensor> = (0..batch).map(|i| random_image(&[3, 32, 32], 7 + i as u64)).collect();
+
+    // Barrier: every item completes when the batch returns.
+    let mut barrier_lat: Vec<f64> = Vec::with_capacity(batch * runs);
+    let mut barrier_wall = 0.0f64;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        black_box(plan.run_batch(&imgs).expect("barrier run"));
+        let d = t0.elapsed().as_secs_f64();
+        barrier_wall += d;
+        barrier_lat.extend(std::iter::repeat(d).take(batch));
+    }
+
+    // Streamed: per-item completion timestamps from the scheduler.
+    let mut stream_lat: Vec<f64> = Vec::with_capacity(batch * runs);
+    let mut stream_wall = 0.0f64;
+    let mut peak_busy = 0usize;
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        let outcome = plan
+            .run_streamed_with(&imgs, &StreamOptions { queue_cap })
+            .expect("streamed run");
+        stream_wall += t0.elapsed().as_secs_f64();
+        stream_lat.extend(outcome.item_latency.iter().map(|d| d.as_secs_f64()));
+        peak_busy = peak_busy.max(outcome.peak_busy);
+        black_box(outcome.outputs);
+    }
+
+    let barrier_p50 = pct_ms(&mut barrier_lat, 0.50);
+    let barrier_p99 = pct_ms(&mut barrier_lat, 0.99);
+    let stream_p50 = pct_ms(&mut stream_lat, 0.50);
+    let stream_p99 = pct_ms(&mut stream_lat, 0.99);
+    let barrier_rps = (batch * runs) as f64 / barrier_wall;
+    let stream_rps = (batch * runs) as f64 / stream_wall;
+
+    println!(
+        "resnet20 batch {batch} × {runs} runs, {workers} workers, {n_stages} stages, \
+         queue cap {queue_cap}, peak busy stages {peak_busy}"
+    );
+    println!(
+        "barrier   p50 {}  p99 {}  {:.2} img/s",
+        fmt_duration(barrier_p50 / 1e3),
+        fmt_duration(barrier_p99 / 1e3),
+        barrier_rps
+    );
+    println!(
+        "streamed  p50 {}  p99 {}  {:.2} img/s  (p50 speedup {:.2}×)",
+        fmt_duration(stream_p50 / 1e3),
+        fmt_duration(stream_p99 / 1e3),
+        stream_rps,
+        barrier_p50 / stream_p50
+    );
+
+    let row = json_row(&[
+        JsonField::Str("bench", "stream_latency"),
+        JsonField::Str("network", "resnet20"),
+        JsonField::Int("batch", batch as i64),
+        JsonField::Int("runs", runs as i64),
+        JsonField::Int("workers", workers as i64),
+        JsonField::Int("stages", n_stages as i64),
+        JsonField::Int("queue_cap", queue_cap as i64),
+        JsonField::Int("peak_busy_stages", peak_busy as i64),
+        JsonField::Num("barrier_p50_ms", barrier_p50),
+        JsonField::Num("barrier_p99_ms", barrier_p99),
+        JsonField::Num("stream_p50_ms", stream_p50),
+        JsonField::Num("stream_p99_ms", stream_p99),
+        JsonField::Num("barrier_img_per_s", barrier_rps),
+        JsonField::Num("stream_img_per_s", stream_rps),
+        JsonField::Num("speedup_p50", barrier_p50 / stream_p50),
+        JsonField::Num("speedup_p99", barrier_p99 / stream_p99),
+        JsonField::Str("profile", build_profile()),
+        JsonField::Str("source", "measured"),
+    ]);
+    let path = bench_json_path("BENCH_stream.json");
+    std::fs::write(&path, format!("{row}\n"))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

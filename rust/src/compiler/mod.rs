@@ -56,4 +56,6 @@ pub mod plan;
 pub use ir::{transpose_rows_to_cols, Graph, Node, NodeId, Op};
 pub use lower::{calibrate, lower, Calibration, CompileError, LayerKind, LoweredLayer};
 pub use place::{ActivationProfile, CostReport, LayerCost, Placer};
-pub use plan::{compile, CompileOptions, CompiledLayer, CompiledPlan};
+pub use plan::{
+    compile, CompileOptions, CompiledLayer, CompiledPlan, StreamOptions, StreamOutcome,
+};

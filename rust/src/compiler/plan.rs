@@ -14,6 +14,14 @@
 //! `CimLinear::run_batch` / `CimConv::run` on a single macro, because the
 //! per-layer arithmetic is expression-for-expression the same and the
 //! batched executor is bit-identical to the sequential tiler.
+//!
+//! Two execution modes share that contract (DESIGN.md §9):
+//! [`CompiledPlan::run_batch`] synchronizes at a barrier after every layer,
+//! while [`CompiledPlan::run_streamed`] turns the plan into a pipeline of
+//! per-layer stages over bounded queues ([`crate::sched`]) — each item
+//! flows through the layers independently, and the per-op noise substream
+//! key `(seed, epoch, item, tile)` makes the two modes bit-identical noise
+//! on or off, for any worker count and any queue capacity.
 
 use crate::compiler::ir::{dequantize, Graph, NodeId, Op};
 use crate::compiler::lower::{calibrate, lower, CompileError, LayerKind, LoweredLayer};
@@ -25,8 +33,12 @@ use crate::nn::im2col::{conv_out_dims, im2col};
 use crate::nn::ops::global_avg_pool;
 use crate::nn::quant::QuantParams;
 use crate::nn::tensor::Tensor;
+use crate::pipeline::batch::{run_vector, StreamCtx, StreamKey};
 use crate::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use crate::sched::{run_stages, StageGauge};
 use crate::util::table::Table;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Knobs for [`compile`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -49,6 +61,9 @@ pub struct CompiledLayer {
     kind: LayerKind,
     qparams: QuantParams,
     placed: PlacedLinear,
+    /// Activation vectors one network input generates through this layer
+    /// (conv: `oh·ow`, linear: 1) — the streamed row-index stride.
+    vectors_per_input: usize,
     observed: ExecStats,
     predicted_cycles: u64,
 }
@@ -73,6 +88,11 @@ impl CompiledLayer {
 
     pub fn n_tiles(&self) -> usize {
         self.placed.n_tiles()
+    }
+
+    /// Activation vectors one network input generates through this layer.
+    pub fn vectors_per_input(&self) -> usize {
+        self.vectors_per_input
     }
 
     /// Device counters accumulated over every batch this layer ran.
@@ -138,6 +158,10 @@ pub struct CompiledPlan {
     output_node: NodeId,
     report: CostReport,
     stats: ExecStats,
+    /// Cumulative per-stage gauges over every streamed run (DESIGN.md §9).
+    stream_gauges: Vec<StageGauge>,
+    /// Peak number of simultaneously busy stages over every streamed run.
+    stream_peak_busy: usize,
 }
 
 /// Compile a graph onto a fresh [`MacroPool`]: calibrate on `cal_inputs`,
@@ -183,6 +207,7 @@ pub fn compile(
             kind,
             qparams,
             placed,
+            vectors_per_input,
             observed: ExecStats::default(),
             predicted_cycles: 0,
         });
@@ -229,6 +254,8 @@ pub fn compile(
         output_node,
         report,
         stats,
+        stream_gauges: Vec::new(),
+        stream_peak_busy: 0,
     })
 }
 
@@ -250,6 +277,55 @@ fn check_quantize_structure(graph: &Graph) -> Result<(), CompileError> {
         return Err(CompileError::Structure("graph output is a Quantize node".into()));
     }
     Ok(())
+}
+
+/// Knobs for [`CompiledPlan::run_streamed_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    /// Capacity of each inter-stage queue (clamped to ≥ 1). Small values
+    /// bound in-flight memory and propagate backpressure sooner; a handful
+    /// of items per queue is enough to hide stage jitter — see DESIGN.md §9
+    /// for the sizing argument.
+    pub queue_cap: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self { queue_cap: 4 }
+    }
+}
+
+/// What one [`CompiledPlan::run_streamed_with`] call produced and observed.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// The output node's value per item — bit-identical to
+    /// [`CompiledPlan::run_batch`] on the same epochs.
+    pub outputs: Vec<Vec<f32>>,
+    /// Wall-clock from run start to each item's completion, in admission
+    /// order (the barrier path completes every item at the end; streaming
+    /// completes early items while later ones are still in flight).
+    pub item_latency: Vec<Duration>,
+    /// Per-stage items/queue-depth gauges for this run.
+    pub gauges: Vec<StageGauge>,
+    /// Peak number of simultaneously busy stages (`> 1` ⇒ pipelined).
+    pub peak_busy: usize,
+}
+
+/// One batch item in flight through the stage pipeline: its index, its
+/// not-yet-consumed input tensor, and the per-node values produced so far
+/// (liveness-pruned exactly like the barrier loop).
+struct Flight {
+    idx: usize,
+    input: Option<Tensor>,
+    values: Vec<Option<Tensor>>,
+}
+
+/// Per-stage run accounting, folded into the plan's cumulative counters
+/// after the run (a stage exclusively owns its layer while running).
+#[derive(Default)]
+struct StageAcc {
+    stats: ExecStats,
+    predicted: u64,
 }
 
 impl CompiledPlan {
@@ -293,6 +369,8 @@ impl CompiledPlan {
             l.observed = ExecStats::default();
             l.predicted_cycles = 0;
         }
+        self.stream_gauges.clear();
+        self.stream_peak_busy = 0;
     }
 
     /// The network's input shape.
@@ -308,120 +386,98 @@ impl CompiledPlan {
 
     /// Owned-input form of [`CompiledPlan::run_batch`] — the serving hot
     /// path: the batch is materialized exactly once.
+    ///
+    /// Non-layer ops evaluate per item through the SAME evaluator the
+    /// streaming scheduler uses ([`CompiledPlan::eval_simple_node_item`]) —
+    /// one source of truth for the barrier/streamed bit-identity contract —
+    /// while each layer node runs the whole batch's rows through ONE
+    /// `run_q` call (one epoch per layer invocation, DESIGN.md §9).
     pub fn run_batch_owned(&mut self, xs: Vec<Tensor>) -> Result<Vec<Vec<f32>>, MapError> {
-        let mut input = Some(xs);
         let n_nodes = self.graph.nodes.len();
-        let mut values: Vec<Option<Vec<Tensor>>> = (0..n_nodes).map(|_| None).collect();
+        let mut flights: Vec<Flight> = xs
+            .into_iter()
+            .enumerate()
+            .map(|(idx, t)| Flight {
+                idx,
+                input: Some(t),
+                values: (0..n_nodes).map(|_| None).collect(),
+            })
+            .collect();
         for id in 0..n_nodes {
             if let Some(li) = self.node_layer[id] {
-                let src = self.layers[li].src;
-                let items = values[src]
-                    .as_ref()
-                    .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
-                let (out, stats) =
-                    run_layer(&self.cfg, &self.pool, &self.exec, &mut self.layers[li], items)?;
-                self.stats.merge(&stats);
-                values[id] = Some(out);
+                self.run_layer_batch(li, &mut flights)?;
             } else {
-                let node = &self.graph.nodes[id];
-                // Fetch an input value, moving it on its final read
-                // (liveness) instead of cloning; `allow_take: false` forces
-                // a clone when the same node feeds two inputs.
-                let arg = |values: &mut [Option<Vec<Tensor>>],
-                           i: usize,
-                           allow_take: bool|
-                 -> Result<Vec<Tensor>, MapError> {
-                    let src = node.inputs[i];
-                    let v = if allow_take && self.last_use[src] == id {
-                        values[src].take()
-                    } else {
-                        values[src].as_ref().cloned()
-                    };
-                    v.ok_or_else(|| MapError::Shape("value consumed too early".into()))
-                };
-                let out = match &node.op {
-                    Op::Input { shape } => {
-                        let batch = input.take().ok_or_else(|| {
-                            MapError::Shape("graph has more than one Input node".into())
-                        })?;
-                        for t in &batch {
-                            if t.shape != *shape {
-                                return Err(MapError::Shape(format!(
-                                    "input shape {:?} vs plan {:?}",
-                                    t.shape, shape
-                                )));
-                            }
-                        }
-                        Some(batch)
-                    }
-                    // Fused into the consuming layer; holds no value.
-                    Op::Quantize { .. } => None,
-                    Op::Dequantize { scale, bias } => Some(
-                        arg(&mut values, 0, true)?
-                            .iter()
-                            .map(|t| dequantize(t, *scale, bias))
-                            .collect(),
-                    ),
-                    Op::Relu => Some(
-                        arg(&mut values, 0, true)?
-                            .into_iter()
-                            .map(|t| t.map(|v| v.max(0.0)))
-                            .collect(),
-                    ),
-                    Op::Add => {
-                        let distinct = node.inputs[0] != node.inputs[1];
-                        let a = arg(&mut values, 0, distinct)?;
-                        let b = arg(&mut values, 1, true)?;
-                        let mut out = Vec::with_capacity(a.len());
-                        for (ta, tb) in a.into_iter().zip(&b) {
-                            if ta.shape != tb.shape {
-                                return Err(MapError::Shape(format!(
-                                    "add shapes {:?} vs {:?}",
-                                    ta.shape, tb.shape
-                                )));
-                            }
-                            let mut t = ta;
-                            for (o, i) in t.data.iter_mut().zip(&tb.data) {
-                                *o += i;
-                            }
-                            out.push(t);
-                        }
-                        Some(out)
-                    }
-                    Op::GlobalAvgPool => Some(
-                        arg(&mut values, 0, true)?
-                            .iter()
-                            .map(|t| {
-                                let c = t.shape[0];
-                                Tensor::from_vec(&[c], global_avg_pool(t))
-                            })
-                            .collect(),
-                    ),
-                    Op::Conv2d { .. } | Op::Linear { .. } => {
-                        unreachable!("layer nodes are handled by node_layer")
-                    }
-                };
-                values[id] = out;
+                for fl in &mut flights {
+                    self.eval_simple_node_item(id, fl)?;
+                }
             }
-            for &src in &self.data_src[id] {
-                if self.last_use[src] == id {
-                    values[src] = None;
+            for fl in &mut flights {
+                for &src in &self.data_src[id] {
+                    if self.last_use[src] == id {
+                        fl.values[src] = None;
+                    }
                 }
             }
         }
-        let out = values[self.output_node]
-            .take()
-            .ok_or_else(|| MapError::Shape("output value missing".into()))?;
-        Ok(out.into_iter().map(|t| t.data).collect())
+        let output_node = self.output_node;
+        flights
+            .iter_mut()
+            .map(|fl| {
+                fl.values[output_node]
+                    .take()
+                    .map(|t| t.data)
+                    .ok_or_else(|| MapError::Shape("output value missing".into()))
+            })
+            .collect()
     }
 
-    /// Flat-vector convenience for serving: wraps each request into the
-    /// plan's input shape.
-    pub fn run_flat(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+    /// One placed layer over the whole batch — the barrier counterpart of
+    /// [`CompiledPlan::run_layer_item`]: every item's (im2col →) quantized
+    /// rows concatenate, in item order, into ONE `run_q` call, so row `r`
+    /// of item `i` gets substream item index `i × vectors_per_input + r` —
+    /// exactly the key the streamed path derives per item (DESIGN.md §9).
+    fn run_layer_batch(&mut self, li: usize, flights: &mut [Flight]) -> Result<(), MapError> {
+        let layer = &self.layers[li];
+        let (src, node, kind) = (layer.src, layer.node, layer.kind);
+        let mut q: Vec<Vec<i64>> = Vec::new();
+        let mut dims: Vec<(usize, usize)> = Vec::new();
+        for fl in flights.iter() {
+            let t = fl.values[src]
+                .as_ref()
+                .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
+            dims.push(quantize_layer_rows(layer, t, &mut q)?);
+        }
+        let predicted = predicted_tile_cycles(&self.cfg, layer.placed.linear(), &q);
+        let (rows, stats) = self.exec.run_q(&self.pool, &layer.placed, &q)?;
+        {
+            let layer = &mut self.layers[li];
+            layer.predicted_cycles += predicted;
+            layer.observed.merge(&stats);
+        }
+        self.stats.merge(&stats);
+        match kind {
+            LayerKind::Conv { out_c, .. } => {
+                let mut offset = 0usize;
+                for (fl, &(oh, ow)) in flights.iter_mut().zip(&dims) {
+                    fl.values[node] =
+                        Some(rows_to_chw(&rows[offset..offset + oh * ow], out_c, oh, ow));
+                    offset += oh * ow;
+                }
+            }
+            LayerKind::Linear => {
+                for (fl, r) in flights.iter_mut().zip(rows) {
+                    let n = r.len();
+                    fl.values[node] = Some(Tensor::from_vec(&[n], r));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn flat_to_tensors(&self, xs: &[Vec<f32>]) -> Result<Vec<Tensor>, MapError> {
         let shape = self.input_shape();
         let len: usize = shape.iter().product();
-        let tensors: Vec<Tensor> = xs
-            .iter()
+        xs.iter()
             .map(|x| {
                 if x.len() != len {
                     return Err(MapError::Shape(format!(
@@ -431,8 +487,305 @@ impl CompiledPlan {
                 }
                 Ok(Tensor::from_vec(&shape, x.clone()))
             })
-            .collect::<Result<_, _>>()?;
+            .collect()
+    }
+
+    /// Flat-vector convenience for serving: wraps each request into the
+    /// plan's input shape.
+    pub fn run_flat(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        let tensors = self.flat_to_tensors(xs)?;
         self.run_batch_owned(tensors)
+    }
+
+    /// Streamed (layer-pipelined) execution: same outputs as
+    /// [`CompiledPlan::run_batch`], **bit for bit, noise on or off** —
+    /// items flow through per-layer stages connected by bounded queues
+    /// instead of synchronizing at a barrier after every layer
+    /// (DESIGN.md §9; the identity is property-tested in
+    /// `tests/stream_equivalence.rs`).
+    pub fn run_streamed(&mut self, xs: &[Tensor]) -> Result<Vec<Vec<f32>>, MapError> {
+        Ok(self.run_streamed_with(xs, &StreamOptions::default())?.outputs)
+    }
+
+    /// Flat-vector serving form of [`CompiledPlan::run_streamed`].
+    pub fn run_streamed_flat(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        let tensors = self.flat_to_tensors(xs)?;
+        self.run_streamed(&tensors)
+    }
+
+    /// [`CompiledPlan::run_streamed`] with explicit options, returning the
+    /// per-item latencies and the pipeline gauges of the run.
+    pub fn run_streamed_with(
+        &mut self,
+        xs: &[Tensor],
+        opts: &StreamOptions,
+    ) -> Result<StreamOutcome, MapError> {
+        let n_layers = self.layers.len();
+        if n_layers == 0 {
+            // No compute stages: the barrier path IS the one-stage case.
+            let t0 = Instant::now();
+            let outputs = self.run_batch(xs)?;
+            let d = t0.elapsed();
+            return Ok(StreamOutcome {
+                outputs,
+                item_latency: vec![d; xs.len()],
+                gauges: Vec::new(),
+                peak_busy: usize::from(!xs.is_empty()),
+            });
+        }
+        // Reserve one epoch per layer invocation up front — the exact
+        // assignment the barrier path's per-layer `run_q` calls would have
+        // made in node order (DESIGN.md §9).
+        let epoch_base = self.exec.reserve_epochs(n_layers as u64);
+        let n_nodes = self.graph.nodes.len();
+        let defs = self.stage_defs();
+        let names: Vec<String> = defs
+            .iter()
+            .map(|&(_, _, li)| match li {
+                Some(i) => self.layers[i].name.clone(),
+                None => "tail".to_string(),
+            })
+            .collect();
+        let accs: Vec<Mutex<StageAcc>> =
+            defs.iter().map(|_| Mutex::new(StageAcc::default())).collect();
+        let out_slots: Vec<OnceLock<(Vec<f32>, Duration)>> =
+            xs.iter().map(|_| OnceLock::new()).collect();
+        let t0 = Instant::now();
+        let run = {
+            let this: &CompiledPlan = self;
+            let defs = &defs;
+            let accs = &accs;
+            let out_slots = &out_slots;
+            let output_node = this.output_node;
+            run_stages(
+                xs.iter().enumerate().map(|(idx, t)| Flight {
+                    idx,
+                    input: Some(t.clone()),
+                    values: (0..n_nodes).map(|_| None).collect(),
+                }),
+                names,
+                opts.queue_cap,
+                move |stage| {
+                    // Per-stage worker state: one kernel scratch, reused for
+                    // every (item, row-tile) work unit this stage pulls.
+                    let mut ctx = StreamCtx::new(&this.cfg);
+                    let def = defs[stage];
+                    move |fl: &mut Flight| {
+                        let mut acc = accs[stage].lock().expect("stage accumulator poisoned");
+                        this.eval_stage_item(def, epoch_base, fl, &mut ctx, &mut acc)
+                    }
+                },
+                move |mut fl: Flight| {
+                    if let Some(t) = fl.values[output_node].take() {
+                        let _ = out_slots[fl.idx].set((t.data, t0.elapsed()));
+                    }
+                },
+            )?
+        };
+        // Fold this run's per-stage accounting into the plan's cumulative
+        // counters (stage s exclusively owned layer s during the run).
+        for (def, acc) in defs.iter().zip(&accs) {
+            let acc = acc.lock().expect("stage accumulator poisoned");
+            if let Some(li) = def.2 {
+                self.layers[li].observed.merge(&acc.stats);
+                self.layers[li].predicted_cycles += acc.predicted;
+            }
+            self.stats.merge(&acc.stats);
+        }
+        if self.stream_gauges.len() == run.stages.len() {
+            for (c, r) in self.stream_gauges.iter_mut().zip(&run.stages) {
+                c.items += r.items;
+                c.peak_queue = c.peak_queue.max(r.peak_queue);
+            }
+        } else {
+            self.stream_gauges = run.stages.clone();
+        }
+        self.stream_peak_busy = self.stream_peak_busy.max(run.peak_busy);
+
+        let mut outputs = Vec::with_capacity(xs.len());
+        let mut item_latency = Vec::with_capacity(xs.len());
+        for slot in out_slots {
+            let (o, d) = slot
+                .into_inner()
+                .ok_or_else(|| MapError::Shape("streamed item produced no output".into()))?;
+            outputs.push(o);
+            item_latency.push(d);
+        }
+        Ok(StreamOutcome { outputs, item_latency, gauges: run.stages, peak_busy: run.peak_busy })
+    }
+
+    /// Rewind the executor's epoch counter so the next run replays the same
+    /// noise epochs (DESIGN.md §9) — how tests and benches compare barrier
+    /// and streamed execution draw for draw on one plan.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.exec.set_epoch(epoch);
+    }
+
+    /// Cumulative per-stage gauges over every streamed run (empty until the
+    /// first `run_streamed*` call).
+    pub fn stream_gauges(&self) -> &[StageGauge] {
+        &self.stream_gauges
+    }
+
+    /// Peak number of simultaneously busy stages over every streamed run —
+    /// `> 1` is the observable proof that execution pipelined.
+    pub fn stream_peak_busy(&self) -> usize {
+        self.stream_peak_busy
+    }
+
+    /// Stage partition of the node order: compute stage `s` evaluates the
+    /// nodes from just after the previous layer node through layer `s`'s
+    /// node; a final `tail` stage holds any float ops after the last layer.
+    fn stage_defs(&self) -> Vec<(usize, usize, Option<usize>)> {
+        let n_nodes = self.graph.nodes.len();
+        let mut defs = Vec::with_capacity(self.layers.len() + 1);
+        let mut start = 0usize;
+        for (li, l) in self.layers.iter().enumerate() {
+            defs.push((start, l.node + 1, Some(li)));
+            start = l.node + 1;
+        }
+        if start < n_nodes {
+            defs.push((start, n_nodes, None));
+        }
+        defs
+    }
+
+    /// Evaluate one stage's node range for one in-flight item, applying the
+    /// same per-node liveness sweep the barrier loop performs.
+    fn eval_stage_item(
+        &self,
+        (start, end, _li): (usize, usize, Option<usize>),
+        epoch_base: u64,
+        fl: &mut Flight,
+        ctx: &mut StreamCtx,
+        acc: &mut StageAcc,
+    ) -> Result<(), MapError> {
+        for id in start..end {
+            if let Some(li) = self.node_layer[id] {
+                self.run_layer_item(li, epoch_base + li as u64, fl, ctx, acc)?;
+            } else {
+                self.eval_simple_node_item(id, fl)?;
+            }
+            for &src in &self.data_src[id] {
+                if self.last_use[src] == id {
+                    fl.values[src] = None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-item evaluation of a non-layer node, with take-on-last-use
+    /// liveness (`allow_take: false` forces a clone when the same node
+    /// feeds both inputs). This is the ONE evaluator for float graph ops:
+    /// the barrier path ([`CompiledPlan::run_batch_owned`]) and the
+    /// streaming scheduler both call it per item, so the two execution
+    /// modes cannot drift.
+    fn eval_simple_node_item(&self, id: usize, fl: &mut Flight) -> Result<(), MapError> {
+        let node = &self.graph.nodes[id];
+        let last_use = &self.last_use;
+        let arg = |values: &mut [Option<Tensor>],
+                   i: usize,
+                   allow_take: bool|
+         -> Result<Tensor, MapError> {
+            let src = node.inputs[i];
+            let v = if allow_take && last_use[src] == id {
+                values[src].take()
+            } else {
+                values[src].clone()
+            };
+            v.ok_or_else(|| MapError::Shape("value consumed too early".into()))
+        };
+        let out = match &node.op {
+            Op::Input { shape } => {
+                let t = fl.input.take().ok_or_else(|| {
+                    MapError::Shape("graph has more than one Input node".into())
+                })?;
+                if t.shape != *shape {
+                    return Err(MapError::Shape(format!(
+                        "input shape {:?} vs plan {:?}",
+                        t.shape, shape
+                    )));
+                }
+                Some(t)
+            }
+            // Fused into the consuming layer; holds no value.
+            Op::Quantize { .. } => None,
+            Op::Dequantize { scale, bias } => {
+                Some(dequantize(&arg(&mut fl.values, 0, true)?, *scale, bias))
+            }
+            Op::Relu => Some(arg(&mut fl.values, 0, true)?.map(|v| v.max(0.0))),
+            Op::Add => {
+                let distinct = node.inputs[0] != node.inputs[1];
+                let a = arg(&mut fl.values, 0, distinct)?;
+                let b = arg(&mut fl.values, 1, true)?;
+                if a.shape != b.shape {
+                    return Err(MapError::Shape(format!(
+                        "add shapes {:?} vs {:?}",
+                        a.shape, b.shape
+                    )));
+                }
+                let mut t = a;
+                for (o, i) in t.data.iter_mut().zip(&b.data) {
+                    *o += i;
+                }
+                Some(t)
+            }
+            Op::GlobalAvgPool => {
+                let t = arg(&mut fl.values, 0, true)?;
+                let c = t.shape[0];
+                Some(Tensor::from_vec(&[c], global_avg_pool(&t)))
+            }
+            Op::Conv2d { .. } | Op::Linear { .. } => {
+                unreachable!("layer nodes are handled by node_layer")
+            }
+        };
+        fl.values[id] = out;
+        Ok(())
+    }
+
+    /// One placed layer over ONE in-flight item: (im2col →) quantize →
+    /// per-row [`run_vector`] (prepare-once per row tile) (→ CHW). The row
+    /// substream index is `item × vectors_per_input + row`, landing on the
+    /// exact keys the barrier path assigns across its concatenated batch —
+    /// which is what makes the two modes bit-identical with noise on
+    /// (DESIGN.md §9).
+    fn run_layer_item(
+        &self,
+        li: usize,
+        epoch: u64,
+        fl: &mut Flight,
+        ctx: &mut StreamCtx,
+        acc: &mut StageAcc,
+    ) -> Result<(), MapError> {
+        let layer = &self.layers[li];
+        let src = layer.src;
+        let t = fl.values[src]
+            .as_ref()
+            .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
+        let mut q: Vec<Vec<i64>> = Vec::new();
+        let out_dims = quantize_layer_rows(layer, t, &mut q)?;
+        acc.predicted += predicted_tile_cycles(&self.cfg, layer.placed.linear(), &q);
+        let item_base = fl.idx as u64 * layer.vectors_per_input as u64;
+        let seed = self.exec.seed();
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(q.len());
+        for (r, acts) in q.iter().enumerate() {
+            let key = StreamKey { seed, epoch, item: item_base + r as u64 };
+            rows.push(run_vector(&self.pool, &layer.placed, key, acts, ctx, &mut acc.stats)?);
+        }
+        let out = match layer.kind {
+            LayerKind::Conv { out_c, .. } => {
+                let (oh, ow) = out_dims;
+                rows_to_chw(&rows, out_c, oh, ow)
+            }
+            LayerKind::Linear => {
+                let row = rows.pop().expect("linear layer yields one row");
+                let n = row.len();
+                Tensor::from_vec(&[n], row)
+            }
+        };
+        fl.values[layer.node] = Some(out);
+        Ok(())
     }
 
     /// Per-layer observed vs predicted run accounting (after at least one
@@ -464,62 +817,46 @@ impl CompiledPlan {
     }
 }
 
-/// One placed layer over a batch of input values: (im2col →) quantize →
-/// pooled tiled matmul (→ CHW). Updates the layer's observed counters and
-/// the cost model's exact cycle prediction.
-fn run_layer(
-    cfg: &Config,
-    pool: &MacroPool,
-    exec: &BatchExecutor,
-    layer: &mut CompiledLayer,
-    items: &[Tensor],
-) -> Result<(Vec<Tensor>, ExecStats), MapError> {
-    let mut q: Vec<Vec<i64>> = Vec::new();
-    let mut dims: Vec<(usize, usize)> = Vec::new();
+/// (im2col →) quantize ONE item's input value into activation rows for
+/// `layer`, appending to `q`; returns the conv output dims (`(0, 0)` for
+/// linear). The single source of the per-item row recipe — the barrier
+/// path ([`CompiledPlan::run_batch_owned`]) and the streaming scheduler
+/// both call it, so their rows (and therefore their substream keys,
+/// DESIGN.md §9) cannot drift. Enforces the compile-time
+/// `vectors_per_input` stride the keys rely on.
+fn quantize_layer_rows(
+    layer: &CompiledLayer,
+    t: &Tensor,
+    q: &mut Vec<Vec<i64>>,
+) -> Result<(usize, usize), MapError> {
+    let before = q.len();
+    let mut dims = (0usize, 0usize);
     match layer.kind {
         LayerKind::Conv { kh, kw, stride, pad, .. } => {
-            for t in items {
-                if t.rank() != 3 {
-                    return Err(MapError::Shape(format!(
-                        "conv `{}` input must be CHW, got {:?}",
-                        layer.name, t.shape
-                    )));
-                }
-                let patches = im2col(t, kh, kw, stride, pad);
-                for row in patches_to_rows(&patches) {
-                    q.push(layer.qparams.quantize_vec(&row));
-                }
-                dims.push(conv_out_dims(t.shape[1], t.shape[2], kh, kw, stride, pad));
+            if t.rank() != 3 {
+                return Err(MapError::Shape(format!(
+                    "conv `{}` input must be CHW, got {:?}",
+                    layer.name, t.shape
+                )));
             }
-        }
-        LayerKind::Linear => {
-            for t in items {
-                q.push(layer.qparams.quantize_vec(&t.data));
+            let patches = im2col(t, kh, kw, stride, pad);
+            for row in patches_to_rows(&patches) {
+                q.push(layer.qparams.quantize_vec(&row));
             }
+            dims = conv_out_dims(t.shape[1], t.shape[2], kh, kw, stride, pad);
         }
+        LayerKind::Linear => q.push(layer.qparams.quantize_vec(&t.data)),
     }
-    layer.predicted_cycles += predicted_tile_cycles(cfg, layer.placed.linear(), &q);
-    let (rows, stats) = exec.run_q(pool, &layer.placed, &q)?;
-    layer.observed.merge(&stats);
-    let out = match layer.kind {
-        LayerKind::Conv { out_c, .. } => {
-            let mut out = Vec::with_capacity(items.len());
-            let mut offset = 0usize;
-            for &(oh, ow) in &dims {
-                out.push(rows_to_chw(&rows[offset..offset + oh * ow], out_c, oh, ow));
-                offset += oh * ow;
-            }
-            out
-        }
-        LayerKind::Linear => rows
-            .into_iter()
-            .map(|r| {
-                let n = r.len();
-                Tensor::from_vec(&[n], r)
-            })
-            .collect(),
-    };
-    Ok((out, stats))
+    if q.len() - before != layer.vectors_per_input {
+        return Err(MapError::Shape(format!(
+            "layer `{}`: {} activation vectors vs {} at compile time — \
+             row indexing requires the static input shape",
+            layer.name,
+            q.len() - before,
+            layer.vectors_per_input
+        )));
+    }
+    Ok(dims)
 }
 
 #[cfg(test)]
@@ -569,6 +906,64 @@ mod tests {
             (plan.layers()[0].n_tiles() + plan.layers()[1].n_tiles()) * xs.len()
         );
         assert_eq!(plan.stats().weight_loads as usize, plan.total_tiles());
+    }
+
+    /// Streamed execution is bit-identical to the barrier path on a fresh
+    /// plan with the same seed — noise on and off (the full property lives
+    /// in `tests/stream_equivalence.rs`).
+    #[test]
+    fn streamed_mlp_equals_barrier_bitwise() {
+        for noise in [false, true] {
+            let mut cfg = Config::default();
+            cfg.noise.enabled = noise;
+            cfg.enhance = EnhanceConfig::both();
+            let mlp = Mlp::new(&[30, 14, 6], 9);
+            let g = Graph::from_mlp(&mlp);
+            let cal = cal_set(30, 8, 3);
+            let xs = cal_set(30, 5, 77);
+            let opts = CompileOptions { workers: 3, ..Default::default() };
+
+            let mut barrier = compile(g.clone(), &cal, &cfg, &opts).unwrap();
+            let mut streamed = compile(g, &cal, &cfg, &opts).unwrap();
+            let want = barrier.run_batch(&xs).unwrap();
+            let outcome = streamed
+                .run_streamed_with(&xs, &StreamOptions { queue_cap: 2 })
+                .unwrap();
+            assert_eq!(outcome.outputs, want, "noise={noise}");
+            assert_eq!(outcome.item_latency.len(), xs.len());
+            assert!(outcome.gauges.len() >= streamed.layers().len());
+            assert!(outcome.gauges.iter().all(|g| g.items == xs.len() as u64));
+            // Integer device counters agree exactly; energy is the same sum
+            // in a different association order, so compare relatively.
+            assert_eq!(barrier.stats().core_ops, streamed.stats().core_ops);
+            assert_eq!(barrier.stats().total_cycles, streamed.stats().total_cycles);
+            assert_eq!(barrier.stats().clipped, streamed.stats().clipped);
+            let (ea, eb) = (barrier.stats().energy_fj(), streamed.stats().energy_fj());
+            assert!((ea - eb).abs() <= 1e-9 * ea.abs().max(1.0), "energy {ea} vs {eb}");
+            // The exact cycle predictor holds for streamed execution too.
+            let predicted: u64 =
+                streamed.layers().iter().map(|l| l.predicted_cycles()).sum();
+            assert_eq!(predicted, streamed.stats().total_cycles);
+        }
+    }
+
+    /// A second streamed run advances the epochs: noisy outputs decorrelate
+    /// instead of replaying one frozen draw, and the replayed epoch matches.
+    #[test]
+    fn streamed_epochs_advance_and_replay() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        let mlp = Mlp::new(&[20, 8, 4], 2);
+        let g = Graph::from_mlp(&mlp);
+        let cal = cal_set(20, 6, 4);
+        let xs = cal_set(20, 3, 5);
+        let mut plan = compile(g, &cal, &cfg, &CompileOptions::default()).unwrap();
+        let first = plan.run_streamed(&xs).unwrap();
+        let second = plan.run_streamed(&xs).unwrap();
+        assert_ne!(first, second, "successive streamed runs must decorrelate");
+        plan.set_epoch(0);
+        let replay = plan.run_streamed(&xs).unwrap();
+        assert_eq!(replay, first, "epoch rewind must replay the draws");
     }
 
     #[test]

@@ -1,20 +1,122 @@
-//! Serving metrics: latency percentiles, throughput, and per-request energy
-//! pulled from the backend's activity counters.
+//! Serving metrics: latency percentiles, queue-wait accounting, throughput,
+//! pipeline-stage gauges, and per-request energy pulled from the backend's
+//! activity counters.
+//!
+//! Latency samples go through a fixed-size **reservoir** (Vitter's
+//! algorithm R with a deterministic SplitMix64 stream), so a serve loop
+//! that runs for days holds a bounded, uniformly-sampled subset instead of
+//! one `f64` per request forever. Queue-wait time (admission → batch
+//! start) is recorded separately from execution time (batch start → batch
+//! done), because under backpressure the two diverge: a saturated server
+//! shows flat execution latency and growing queue wait.
 
+use crate::sched::StageGauge;
+use crate::util::rng::{Rng, SplitMix64};
 use std::time::Duration;
 
-#[derive(Clone, Debug, Default)]
+/// Samples the reservoir holds; large enough that p99 over it is stable,
+/// small enough that a long-running server's memory stays flat.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Fixed-size uniform sample of a stream (algorithm R). Deterministic: the
+/// replacement stream is seeded per reservoir, so identical request
+/// sequences report identical percentiles.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    sum: f64,
+    rng: SplitMix64,
+}
+
+impl Reservoir {
+    pub fn new(seed: u64) -> Self {
+        Self { samples: Vec::new(), seen: 0, sum: 0.0, rng: SplitMix64::new(seed) }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.seen += 1;
+        self.sum += v;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.next_below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Values ever recorded (not the held sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Samples currently held — bounded by the reservoir capacity.
+    pub fn held(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    /// Percentile over the held sample (0 when empty).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN latency"));
+        crate::bench::percentile(&sorted, q)
+    }
+}
+
+#[derive(Clone, Debug)]
 pub struct Metrics {
-    latencies_us: Vec<f64>,
+    /// Per-request execution latency (batch start → batch done), µs.
+    exec_us: Reservoir,
+    /// Per-request queue wait (admission → batch start), µs.
+    wait_us: Reservoir,
     pub requests: u64,
     pub batches: u64,
     /// Largest batch coalesced by the dynamic batcher — occupancy > 1 means
     /// the batched serve loop actually amortized work across requests.
     pub peak_batch: u64,
+    /// Deepest the admission queue ever got (backpressure pressure gauge).
+    pub peak_queue_depth: u64,
+    /// Peak number of simultaneously busy pipeline stages reported by the
+    /// engine (`> 1` ⇒ streamed execution actually pipelined).
+    pub peak_stages_busy: u64,
+    /// Per-stage items/queue gauges from the engine (streamed plans only).
+    pub stages: Vec<StageGauge>,
     pub core_ops: u64,
     pub energy_fj: f64,
     pub device_cycles: u64,
     pub wall: Duration,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            exec_us: Reservoir::new(0x5EED_EC0),
+            wait_us: Reservoir::new(0x5EED_3A17),
+            requests: 0,
+            batches: 0,
+            peak_batch: 0,
+            peak_queue_depth: 0,
+            peak_stages_busy: 0,
+            stages: Vec::new(),
+            core_ops: 0,
+            energy_fj: 0.0,
+            device_cycles: 0,
+            wall: Duration::default(),
+        }
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -24,42 +126,58 @@ pub struct MetricsReport {
     /// Mean batch occupancy (requests per coalesced batch).
     pub mean_batch: f64,
     pub peak_batch: u64,
+    pub peak_queue_depth: u64,
+    pub peak_stages_busy: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Queue-wait percentiles + mean, separate from execution latency.
+    pub wait_p50_ms: f64,
+    pub wait_p99_ms: f64,
+    pub mean_wait_ms: f64,
     pub throughput_rps: f64,
     pub energy_uj_per_req: f64,
     pub device_utilization: f64,
 }
 
 impl Metrics {
+    /// Record one coalesced batch's execution latency (charged to each of
+    /// its requests, like the wire round-trip the clients observed).
     pub fn record_batch(&mut self, batch_size: usize, latency: Duration) {
         self.batches += 1;
         self.requests += batch_size as u64;
         self.peak_batch = self.peak_batch.max(batch_size as u64);
         for _ in 0..batch_size {
-            self.latencies_us.push(latency.as_secs_f64() * 1e6);
+            self.exec_us.record(latency.as_secs_f64() * 1e6);
         }
     }
 
+    /// Record one request's queue wait (admission → batch start).
+    pub fn record_wait(&mut self, wait: Duration) {
+        self.wait_us.record(wait.as_secs_f64() * 1e6);
+    }
+
+    /// Latency samples currently held — bounded regardless of how long the
+    /// serve loop has been running.
+    pub fn samples_held(&self) -> (usize, usize) {
+        (self.exec_us.held(), self.wait_us.held())
+    }
+
     pub fn report(&self, clock_hz: f64) -> MetricsReport {
-        let mut lat = self.latencies_us.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |q: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
-            }
-            crate::bench::percentile(&lat, q) / 1e3
-        };
         let wall_s = self.wall.as_secs_f64().max(1e-12);
         MetricsReport {
             requests: self.requests,
             batches: self.batches,
             mean_batch: self.requests as f64 / self.batches.max(1) as f64,
             peak_batch: self.peak_batch,
-            p50_ms: pct(0.50),
-            p95_ms: pct(0.95),
-            p99_ms: pct(0.99),
+            peak_queue_depth: self.peak_queue_depth,
+            peak_stages_busy: self.peak_stages_busy,
+            p50_ms: self.exec_us.percentile(0.50) / 1e3,
+            p95_ms: self.exec_us.percentile(0.95) / 1e3,
+            p99_ms: self.exec_us.percentile(0.99) / 1e3,
+            wait_p50_ms: self.wait_us.percentile(0.50) / 1e3,
+            wait_p99_ms: self.wait_us.percentile(0.99) / 1e3,
+            mean_wait_ms: self.wait_us.mean() / 1e3,
             throughput_rps: self.requests as f64 / wall_s,
             energy_uj_per_req: self.energy_fj * 1e-9 / self.requests.max(1) as f64,
             device_utilization: (self.device_cycles as f64 / clock_hz) / wall_s,
@@ -71,7 +189,8 @@ impl MetricsReport {
     pub fn render(&self) -> String {
         format!(
             "requests {}  batches {} (mean {:.1}, peak {})  p50 {:.2} ms  p95 {:.2} ms  \
-             p99 {:.2} ms  throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
+             p99 {:.2} ms  wait p50 {:.2} / p99 {:.2} ms  queue peak {}  stages busy peak {}  \
+             throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
             self.requests,
             self.batches,
             self.mean_batch,
@@ -79,6 +198,10 @@ impl MetricsReport {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.wait_p50_ms,
+            self.wait_p99_ms,
+            self.peak_queue_depth,
+            self.peak_stages_busy,
             self.throughput_rps,
             self.energy_uj_per_req,
             100.0 * self.device_utilization
@@ -116,5 +239,49 @@ mod tests {
         assert_eq!(r.batches, 2);
         assert!((r.mean_batch - 12.0).abs() < 1e-12);
         assert_eq!(r.peak_batch, 16);
+    }
+
+    /// The regression the reservoir exists for: a long-running serve loop
+    /// must hold bounded latency state no matter how many requests passed.
+    #[test]
+    fn latency_memory_is_bounded() {
+        let mut m = Metrics::default();
+        for i in 0..200_000u64 {
+            m.record_batch(1, Duration::from_micros(100 + i % 97));
+            m.record_wait(Duration::from_micros(i % 31));
+        }
+        let (exec_held, wait_held) = m.samples_held();
+        assert!(exec_held <= RESERVOIR_CAP, "exec reservoir grew to {exec_held}");
+        assert!(wait_held <= RESERVOIR_CAP, "wait reservoir grew to {wait_held}");
+        assert_eq!(m.requests, 200_000);
+        let r = m.report(200e6);
+        // The uniform sample keeps the percentiles in the true range.
+        assert!(r.p50_ms >= 0.100 && r.p50_ms <= 0.197, "{}", r.p50_ms);
+        assert!(r.wait_p99_ms <= 0.031, "{}", r.wait_p99_ms);
+    }
+
+    #[test]
+    fn wait_is_reported_separately_from_execution() {
+        let mut m = Metrics::default();
+        m.record_batch(2, Duration::from_millis(4));
+        m.record_wait(Duration::from_millis(1));
+        m.record_wait(Duration::from_millis(3));
+        let r = m.report(200e6);
+        assert!((r.p50_ms - 4.0).abs() < 1e-9);
+        assert!((r.wait_p50_ms - 2.0).abs() < 1e-6, "{}", r.wait_p50_ms);
+        assert!((r.mean_wait_ms - 2.0).abs() < 1e-6);
+        assert!((r.wait_p99_ms - 2.96).abs() < 0.05, "{}", r.wait_p99_ms);
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let fill = |seed: u64| {
+            let mut r = Reservoir::new(seed);
+            for i in 0..10_000 {
+                r.record((i % 113) as f64);
+            }
+            r.percentile(0.5)
+        };
+        assert_eq!(fill(7), fill(7));
     }
 }

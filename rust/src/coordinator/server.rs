@@ -1,29 +1,42 @@
 //! Edge-inference TCP server: accepts float feature vectors, batches them
-//! dynamically (size- or timeout-triggered), runs the deployed quantized
-//! MLP on an [`InferenceEngine`], and streams logits back.
+//! dynamically (size- or timeout-triggered), runs the deployed network on
+//! an [`InferenceEngine`], and streams logits back.
 //!
-//! Three engines ship: [`BackendEngine`] (the classic single-macro
-//! `CimBackend` path, via [`serve`]), the pooled batched pipeline
-//! (`pipeline::PipelineDeployment`, via [`serve_pipeline`]) which coalesces
-//! up to `ServeConfig::max_batch` queued jobs into ONE pipeline call that
-//! fans the batch across worker threads, and — since the graph compiler —
-//! ANY compiled network ([`crate::compiler::CompiledPlan`], via
-//! [`serve_plan`] / `serve --plan`), not just the two-layer MLP deployment.
+//! All three front-ends ([`serve`], [`serve_pipeline`], [`serve_plan`])
+//! share ONE runtime (DESIGN.md §9): a **bounded admission queue**
+//! ([`crate::sched::BoundedQueue`]) that connection handlers push into —
+//! blocking when full, which is backpressure all the way to the TCP client
+//! — and a batcher thread that coalesces up to [`ServeConfig::max_batch`]
+//! admitted jobs per [`ServeConfig::max_wait`] window into one engine
+//! call. With [`ServeConfig::stream`] set, plan-backed engines execute
+//! each coalesced batch through the streaming scheduler
+//! ([`crate::compiler::CompiledPlan::run_streamed`]), so items pipeline
+//! across the network's layers; per-stage occupancy and queue gauges land
+//! in [`Metrics`].
+//!
+//! **Graceful drain.** [`ServerHandle::shutdown`] stops accepting new
+//! connections and closes the admission queue — which, by the queue's
+//! drain contract, refuses *new* requests (they get an empty-logits reply)
+//! but completes **everything already admitted** before the server returns
+//! its metrics. Queued-but-unserved work is never dropped.
 //!
 //! Wire protocol (little-endian):
 //!   request  = u32 magic (0xC1A0_0001) | u32 n | n × f32
 //!   response = u32 magic (0xC1A0_0002) | u32 n | n × f32
 //! One request per round-trip per connection; connections are persistent.
+//! An empty response (`n == 0`) means the request was refused (shutdown in
+//! progress) or failed individually.
 
 use crate::config::Config;
 use crate::coordinator::deployment::MlpDeployment;
 use crate::coordinator::metrics::Metrics;
 use crate::mapping::{CimBackend, MapError};
 use crate::pipeline::PipelineDeployment;
+use crate::sched::{BoundedQueue, StageGauge};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -32,16 +45,31 @@ pub const RESP_MAGIC: u32 = 0xC1A0_0002;
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// Most requests one coalesced batch may hold.
     pub max_batch: usize,
-    pub batch_timeout: Duration,
-    /// Worker threads for the batched pipeline engine (0 = auto). Ignored by
-    /// the single-backend engine.
+    /// Longest the batcher waits to fill a batch after its first job
+    /// (bounds added latency under light load).
+    pub max_wait: Duration,
+    /// Admission queue capacity: requests beyond it block their connection
+    /// handler (backpressure to the client) instead of growing memory.
+    pub max_queue: usize,
+    /// Worker threads for engines the server builds itself (0 = auto).
     pub workers: usize,
+    /// Execute coalesced batches through the streaming scheduler
+    /// (layer-pipelined; plan-backed engines only — the classic
+    /// single-backend engine falls back to the barrier path).
+    pub stream: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_batch: 16, batch_timeout: Duration::from_millis(2), workers: 0 }
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            max_queue: 256,
+            workers: 0,
+            stream: false,
+        }
     }
 }
 
@@ -49,9 +77,27 @@ impl Default for ServeConfig {
 /// batch, plus cumulative device counters the loop diffs for metrics.
 pub trait InferenceEngine: Send {
     fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError>;
+
+    /// Streamed (layer-pipelined) batch execution; engines without a
+    /// streaming path fall back to the barrier call.
+    fn infer_batch_streamed(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.infer_batch(xs)
+    }
+
     fn core_ops(&self) -> u64;
     fn energy_fj(&self) -> f64;
     fn device_cycles(&self) -> u64;
+
+    /// Cumulative per-stage gauges (streamed plans; empty otherwise).
+    fn stage_gauges(&self) -> Vec<StageGauge> {
+        Vec::new()
+    }
+
+    /// Peak number of simultaneously busy pipeline stages (0 when the
+    /// engine never streamed).
+    fn peak_stages_busy(&self) -> u64 {
+        0
+    }
 }
 
 /// The classic path: a quantized MLP on a single `CimBackend`.
@@ -83,6 +129,10 @@ impl InferenceEngine for PipelineDeployment {
         self.run_batch(xs)
     }
 
+    fn infer_batch_streamed(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.run_batch_streamed(xs)
+    }
+
     fn core_ops(&self) -> u64 {
         self.stats().core_ops
     }
@@ -93,6 +143,14 @@ impl InferenceEngine for PipelineDeployment {
 
     fn device_cycles(&self) -> u64 {
         self.stats().total_cycles
+    }
+
+    fn stage_gauges(&self) -> Vec<StageGauge> {
+        self.plan().stream_gauges().to_vec()
+    }
+
+    fn peak_stages_busy(&self) -> u64 {
+        self.plan().stream_peak_busy() as u64
     }
 }
 
@@ -103,6 +161,10 @@ impl InferenceEngine for crate::compiler::CompiledPlan {
         self.run_flat(xs)
     }
 
+    fn infer_batch_streamed(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.run_streamed_flat(xs)
+    }
+
     fn core_ops(&self) -> u64 {
         self.stats().core_ops
     }
@@ -114,27 +176,52 @@ impl InferenceEngine for crate::compiler::CompiledPlan {
     fn device_cycles(&self) -> u64 {
         self.stats().total_cycles
     }
+
+    fn stage_gauges(&self) -> Vec<StageGauge> {
+        self.stream_gauges().to_vec()
+    }
+
+    fn peak_stages_busy(&self) -> u64 {
+        self.stream_peak_busy() as u64
+    }
 }
 
 struct Job {
     input: Vec<f32>,
     reply: Sender<Vec<f32>>,
+    admitted: Instant,
 }
 
 /// Handle to a running server.
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    jobs: Arc<BoundedQueue<Job>>,
     join: Option<std::thread::JoinHandle<Metrics>>,
 }
 
 impl ServerHandle {
-    /// Stop the server and return its accumulated metrics.
+    /// Stop the server and return its accumulated metrics. New requests are
+    /// refused from here on; everything already admitted to the queue is
+    /// completed first (graceful drain — regression-tested in
+    /// `tests/stream_equivalence.rs`).
     pub fn shutdown(mut self) -> Metrics {
         self.stop.store(true, Ordering::SeqCst);
-        // Nudge the accept loop.
+        // Nudge the accept loop; it closes the admission queue once it
+        // stops, which drains the batcher.
         let _ = TcpStream::connect(self.addr);
         self.join.take().map(|j| j.join().expect("server thread")).unwrap_or_default()
+    }
+
+    /// Requests admitted to the queue so far (each is guaranteed an answer
+    /// even across shutdown).
+    pub fn admitted(&self) -> u64 {
+        self.jobs.pushed()
+    }
+
+    /// Requests currently waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.jobs.len()
     }
 }
 
@@ -150,7 +237,8 @@ pub fn serve(
 
 /// Batched pipeline serving: builds a `PipelineDeployment` (weights placed
 /// once on a macro pool) and coalesces queued jobs — up to
-/// `ServeConfig::max_batch` per window — into one pooled pipeline call.
+/// `ServeConfig::max_batch` per window — into one pooled pipeline call
+/// (streamed through the plan scheduler when `cfg.stream` is set).
 pub fn serve_pipeline(
     deployment: MlpDeployment,
     sim_cfg: Config,
@@ -163,7 +251,7 @@ pub fn serve_pipeline(
 
 /// Serve any compiled network: the plan (weights already resident on its
 /// pool) becomes the batch-inference engine behind the dynamic batcher —
-/// the `serve --plan` path.
+/// the `serve --plan` / `serve --stream` path.
 ///
 /// Note: a plan's worker-thread count is a compile-time property
 /// (`CompileOptions::workers`); `ServeConfig::workers` is ignored on this
@@ -184,27 +272,33 @@ pub fn serve_engine(
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let (job_tx, job_rx) = channel::<Job>();
+    let jobs: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(cfg.max_queue));
 
-    // Inference thread: dynamic batcher + device.
-    let stop_inf = stop.clone();
+    // Inference thread: dynamic batcher + device. Exits when the admission
+    // queue is closed AND drained — the graceful-drain contract.
+    let jobs_inf = jobs.clone();
     let inference = std::thread::spawn(move || {
         let mut metrics = Metrics::default();
         let t_start = Instant::now();
         loop {
-            let batch = collect_batch(&job_rx, &cfg, &stop_inf);
+            let batch = collect_batch(&jobs_inf, &cfg);
             if batch.is_empty() {
-                if stop_inf.load(Ordering::SeqCst) {
-                    break;
-                }
-                continue;
+                break; // closed and drained
             }
             let t0 = Instant::now();
+            for job in &batch {
+                metrics.record_wait(t0.duration_since(job.admitted));
+            }
             let inputs: Vec<Vec<f32>> = batch.iter().map(|j| j.input.clone()).collect();
             let ops_before = engine.core_ops();
             let energy_before = engine.energy_fj();
             let cycles_before = engine.device_cycles();
-            match engine.infer_batch(&inputs) {
+            let result = if cfg.stream {
+                engine.infer_batch_streamed(&inputs)
+            } else {
+                engine.infer_batch(&inputs)
+            };
+            match result {
                 Ok(logits) => {
                     for (job, row) in batch.iter().zip(logits) {
                         let _ = job.reply.send(row);
@@ -230,67 +324,63 @@ pub fn serve_engine(
             metrics.energy_fj += engine.energy_fj() - energy_before;
             metrics.device_cycles += engine.device_cycles() - cycles_before;
         }
+        metrics.peak_queue_depth = jobs_inf.peak_depth() as u64;
+        metrics.stages = engine.stage_gauges();
+        metrics.peak_stages_busy = engine.peak_stages_busy();
         metrics.wall = t_start.elapsed();
         metrics
     });
 
-    // Accept loop thread.
+    // Accept loop thread. On stop it closes the admission queue: new pushes
+    // are refused (empty reply), the batcher drains what was admitted. A
+    // connection that raced the shutdown nudge still gets a handler, so its
+    // requests take the refusal path instead of a silent TCP close (only
+    // connections never accepted — still in the OS backlog — are dropped).
     let stop_acc = stop.clone();
+    let jobs_acc = jobs.clone();
     let join = std::thread::spawn(move || {
         for stream in listener.incoming() {
-            if stop_acc.load(Ordering::SeqCst) {
-                break;
-            }
+            let stopping = stop_acc.load(Ordering::SeqCst);
             match stream {
                 Ok(s) => {
-                    let tx = job_tx.clone();
+                    let q = jobs_acc.clone();
                     std::thread::spawn(move || {
-                        let _ = handle_connection(s, tx);
+                        let _ = handle_connection(s, &q);
                     });
                 }
                 Err(e) => eprintln!("accept error: {e}"),
             }
+            if stopping {
+                break;
+            }
         }
-        drop(job_tx);
+        jobs_acc.close();
         inference.join().expect("inference thread")
     });
 
-    Ok(ServerHandle { addr, stop, join: Some(join) })
+    Ok(ServerHandle { addr, stop, jobs, join: Some(join) })
 }
 
-fn collect_batch(rx: &Receiver<Job>, cfg: &ServeConfig, stop: &AtomicBool) -> Vec<Job> {
+/// Pull one batch off the admission queue: block for the first job, then
+/// fill until `max_batch` or the `max_wait` window closes. Empty only when
+/// the queue is closed and fully drained.
+fn collect_batch(jobs: &BoundedQueue<Job>, cfg: &ServeConfig) -> Vec<Job> {
     let mut batch = Vec::new();
-    // Block for the first job (with a stop-poll heartbeat)...
-    loop {
-        match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(job) => {
-                batch.push(job);
-                break;
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::SeqCst) {
-                    return batch;
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => return batch,
-        }
+    match jobs.pop() {
+        Some(job) => batch.push(job),
+        None => return batch,
     }
-    // ... then fill until max_batch or the batching window closes.
-    let deadline = Instant::now() + cfg.batch_timeout;
+    let deadline = Instant::now() + cfg.max_wait;
     while batch.len() < cfg.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(job) => batch.push(job),
-            Err(_) => break,
+        match jobs.pop_deadline(deadline) {
+            Some(job) => batch.push(job),
+            None => break,
         }
     }
     batch
 }
 
-fn handle_connection(mut s: TcpStream, jobs: Sender<Job>) -> std::io::Result<()> {
+fn handle_connection(mut s: TcpStream, jobs: &BoundedQueue<Job>) -> std::io::Result<()> {
     s.set_nodelay(true)?;
     loop {
         let mut head = [0u8; 8];
@@ -309,10 +399,15 @@ fn handle_connection(mut s: TcpStream, jobs: Sender<Job>) -> std::io::Result<()>
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         let (reply_tx, reply_rx) = channel();
-        if jobs.send(Job { input, reply: reply_tx }).is_err() {
-            return Ok(()); // server stopping
-        }
-        let logits = reply_rx.recv().unwrap_or_default();
+        // Blocking push = backpressure: a full admission queue holds the
+        // connection (and thus the client) until a slot frees up. Refusal
+        // (queue closed at shutdown) is the push's Err — an individually
+        // failed request also gets an empty reply, but keeps its connection.
+        let (logits, refused) =
+            match jobs.push(Job { input, reply: reply_tx, admitted: Instant::now() }) {
+                Ok(()) => (reply_rx.recv().unwrap_or_default(), false),
+                Err(_job) => (Vec::new(), true),
+            };
         let mut out = Vec::with_capacity(8 + logits.len() * 4);
         out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
         out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
@@ -320,6 +415,9 @@ fn handle_connection(mut s: TcpStream, jobs: Sender<Job>) -> std::io::Result<()>
             out.extend_from_slice(&v.to_le_bytes());
         }
         s.write_all(&out)?;
+        if refused {
+            return Ok(()); // server is stopping; close the connection
+        }
     }
 }
 
@@ -414,7 +512,7 @@ mod tests {
     }
 
     /// The pooled pipeline front-end answers the wire protocol with the same
-    /// logits as a direct (noise-free) pipeline call.
+    /// logits as a direct (noise-free) pipeline call — barrier and streamed.
     #[test]
     fn pipeline_serve_roundtrip() {
         let mut d = BlobDataset::new(12, 0.05, 8);
@@ -437,20 +535,25 @@ mod tests {
             pipe.run_batch(&[data[0].0.clone()]).unwrap()
         };
 
-        let handle = serve_pipeline(
-            dep,
-            cfg,
-            ServeConfig { workers: 2, ..ServeConfig::default() },
-        )
-        .unwrap();
-        let mut client = Client::connect(handle.addr).unwrap();
-        let logits = client.infer(&data[0].0).unwrap();
-        assert_eq!(logits, expected[0]);
+        for stream in [false, true] {
+            let handle = serve_pipeline(
+                dep.clone(),
+                cfg.clone(),
+                ServeConfig { workers: 2, stream, ..ServeConfig::default() },
+            )
+            .unwrap();
+            let mut client = Client::connect(handle.addr).unwrap();
+            let logits = client.infer(&data[0].0).unwrap();
+            assert_eq!(logits, expected[0], "stream={stream}");
 
-        let metrics = handle.shutdown();
-        assert_eq!(metrics.requests, 1);
-        assert!(metrics.core_ops > 0);
-        assert!(metrics.energy_fj > 0.0);
+            let metrics = handle.shutdown();
+            assert_eq!(metrics.requests, 1);
+            assert!(metrics.core_ops > 0);
+            assert!(metrics.energy_fj > 0.0);
+            if stream {
+                assert!(!metrics.stages.is_empty(), "streamed serving must report stages");
+            }
+        }
     }
 
     /// A graph-compiled MLP behind the wire protocol answers with the same

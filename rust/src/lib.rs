@@ -25,17 +25,36 @@
 //!   ops are read-only on the shards, so any number of threads stream
 //!   activations concurrently.
 //! * **Batch** — [`pipeline::BatchExecutor`] fans a `[batch][features]`
-//!   matrix across worker threads (`util::threadpool`), one RNG substream +
-//!   one reusable [`cim::OpScratch`] per worker: zero per-op allocation.
+//!   matrix across worker threads (`util::threadpool`), one reusable
+//!   [`pipeline::StreamCtx`] per worker: zero per-op allocation. Noise
+//!   draws come from substreams keyed `(seed, epoch, item, tile)`
+//!   ([`pipeline::noise_stream`], DESIGN.md §9), so results are
+//!   independent of the worker count and of how a batch is split.
 //!
-//! `coordinator::server::serve_pipeline` puts a dynamic batcher in front:
-//! queued jobs coalesce (up to `ServeConfig::max_batch`) into one pooled
-//! pipeline call. **Sizing:** `max_batch` bounds tail latency — keep it at
-//! (requests/s × batch window) or a small multiple of the worker count;
-//! `ServeConfig::workers = 0` auto-sizes to the machine (one worker per
-//! core, capped at 32). Throughput scales with workers until the batch is
-//! thinner than the worker count; `cargo bench --bench pipeline_throughput`
-//! prints the machine's actual curve and writes `BENCH_pipeline.json`.
+//! # Serving runtime and streaming scheduler
+//!
+//! All serve front-ends (`serve`, `serve --pipeline`, `serve --plan`,
+//! `serve --stream`) share one runtime: a bounded admission queue
+//! ([`sched::BoundedQueue`], `ServeConfig::max_queue`) whose full state
+//! backpressures the TCP client instead of growing memory, a dynamic
+//! batcher (`max_batch` per `max_wait` window), and graceful drain —
+//! `ServerHandle::shutdown` completes everything already admitted before
+//! returning `Metrics` (execution latency and queue wait reported
+//! separately, from bounded reservoirs).
+//!
+//! With `ServeConfig::stream` (CLI `serve --stream --max-queue N`), a
+//! compiled plan executes through the **streaming scheduler** ([`sched`],
+//! DESIGN.md §9): per-layer stages over bounded queues, items pipelining
+//! through the network independently — bit-identical to the barrier
+//! `run_batch`, noise on or off, via [`compiler::CompiledPlan::run_streamed`].
+//! **Sizing:** `max_batch` bounds tail latency — keep it at (requests/s ×
+//! batch window) or a small multiple of the worker count; `max_queue` is
+//! the drop-free burst you want absorbed; `ServeConfig::workers = 0`
+//! auto-sizes to the machine (one worker per core, capped at 32).
+//! `cargo bench --bench pipeline_throughput` prints the machine's actual
+//! batching curve (`BENCH_pipeline.json`); `cargo bench --bench
+//! stream_latency` writes the barrier-vs-streamed p50/p99 comparison on
+//! ResNet-20 (`BENCH_stream.json`).
 //!
 //! # Compiler layer
 //!
@@ -75,7 +94,7 @@
 //! "Performance".
 //!
 //! Unit conventions, calibration assumptions and declared reproduction
-//! deviations live in the repo-root `DESIGN.md` (§1–§8), which the code
+//! deviations live in the repo-root `DESIGN.md` (§1–§9), which the code
 //! cites by section; `tests/docs_refs.rs` keeps the citations resolving.
 
 pub mod analysis;
@@ -90,6 +109,7 @@ pub mod mapping;
 pub mod nn;
 pub mod pipeline;
 pub mod runtime;
+pub mod sched;
 pub mod util;
 
 /// Crate version string reported by the CLI.

@@ -54,6 +54,8 @@ fn spec() -> Cli {
                     OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "max dynamic batch" },
                     OptSpec { name: "pipeline", value_name: None, default: None, help: "serve on the pooled batched pipeline" },
                     OptSpec { name: "plan", value_name: None, default: None, help: "serve a graph-compiled plan (compiler path)" },
+                    OptSpec { name: "stream", value_name: None, default: None, help: "layer-pipelined streamed execution (implies --plan)" },
+                    OptSpec { name: "max-queue", value_name: Some("N"), default: Some("256"), help: "admission queue bound (backpressure)" },
                     OptSpec { name: "workers", value_name: Some("N"), default: Some("0"), help: "pipeline worker threads (0 = auto)" },
                 ]),
                 positional: None,
@@ -177,7 +179,9 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             println!("float train accuracy: {:.1}%", acc * 100.0);
             let cal: Vec<Vec<f32>> = data.iter().take(50).map(|(x, _)| x.clone()).collect();
             let max_batch = args.get_usize("batch")?;
-            let handle = if args.flag("plan") {
+            let max_queue = args.get_usize("max-queue")?;
+            let stream = args.flag("stream");
+            let handle = if stream || args.flag("plan") {
                 // Compiler path: ingest the float MLP, calibrate on the
                 // training prefix, lower + place onto a pool, serve the plan.
                 use cimsim::compiler::{compile, CompileOptions, Graph};
@@ -193,21 +197,29 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 println!("{}", plan.cost_report().table(&c).to_markdown());
                 let h = cimsim::coordinator::serve_plan(
                     plan,
-                    ServeConfig { max_batch, workers, ..Default::default() },
+                    ServeConfig { max_batch, max_queue, workers, stream, ..Default::default() },
                 )?;
-                println!("serving on {} (graph-compiled plan)", h.addr);
+                println!(
+                    "serving on {} (graph-compiled plan{})",
+                    h.addr,
+                    if stream { ", streamed" } else { "" }
+                );
                 h
             } else if args.flag("pipeline") {
                 let workers = args.get_usize("workers")?;
                 let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
-                let serve_cfg = ServeConfig { max_batch, workers, ..Default::default() };
+                let serve_cfg = ServeConfig { max_batch, max_queue, workers, ..Default::default() };
                 let h = serve_pipeline(dep, c.clone(), serve_cfg)?;
                 println!("serving on {} (pooled pipeline)", h.addr);
                 h
             } else {
                 let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
                 let backend = Box::new(NativeBackend::new(c.clone()));
-                let h = serve(dep, backend, ServeConfig { max_batch, ..Default::default() })?;
+                let h = serve(
+                    dep,
+                    backend,
+                    ServeConfig { max_batch, max_queue, ..Default::default() },
+                )?;
                 println!("serving on {}", h.addr);
                 h
             };

@@ -2,35 +2,170 @@
 //! placed layer, batch-parallel across worker threads.
 //!
 //! Parallelism is over *batch items*, not tiles: every worker walks the full
-//! tile grid for its contiguous slice of the batch, so each output row's
-//! partial sums accumulate in the exact same (row-tile ascending) order as
-//! the sequential executor — which is what makes the noise-free output
-//! bit-identical to `CimLinear::run_batch_q` on a single macro. Each worker
-//! carries one RNG substream, one [`OpScratch`], one reusable
-//! [`CoreOpResult`] and one folded-MAC scratch, so the per-op hot path
-//! performs zero allocations; with `enhance.boost` on it recomputes the
-//! golden folded MAC per op for the clipping counter, exactly like every
-//! other backend (`mapping::account_core_op_into`).
+//! tile grid for its slice of the batch, so each output row's partial sums
+//! accumulate in the exact same (row-tile ascending) order as the sequential
+//! executor — which is what makes the noise-free output bit-identical to
+//! `CimLinear::run_batch_q` on a single macro. Each worker carries one
+//! [`StreamCtx`] (kernel scratch, reusable [`CoreOpResult`], folded-MAC
+//! buffer), so the per-op hot path performs zero allocations; with
+//! `enhance.boost` on it recomputes the golden folded MAC per op for the
+//! clipping counter, exactly like every other backend
+//! (`mapping::account_core_op_into`).
 //!
 //! The per-op kernel is the bit-plane fast path (DESIGN.md §4): each row
 //! tile's activations are [`OpScratch::prepare`]d once — validation,
 //! folding, row bitmasks, nominal pulse widths — and every column tile
 //! walks the preparation through its core's precomputed
-//! [`crate::cim::BitPlanes`], bit-identical to the scalar reference kernel
-//! (noise draws are consumed op for op in the same order, so noisy batches
-//! match the sequential path exactly too).
+//! [`crate::cim::BitPlanes`], bit-identical to the scalar reference kernel.
+//!
+//! **Noise-substream contract (DESIGN.md §9).** Every op's dynamic noise
+//! draw comes from [`noise_stream`]`(seed, epoch, item, tile)` — a pure
+//! function of the executor seed, the layer invocation's epoch, the item's
+//! global index within the batch, and the tile index. Draws therefore do
+//! not depend on the worker count, on how the batch was chunked across
+//! workers, or on whether the items ran together or one at a time — which
+//! is exactly what makes the streaming scheduler
+//! (`compiler::CompiledPlan::run_streamed`) bit-identical to this barrier
+//! path, noise on or off. Epochs advance once per `run_q` call (one layer
+//! invocation); a streamed run reserves one epoch per layer up front via
+//! [`BatchExecutor::reserve_epochs`] and replays the same assignment.
 
 use crate::cim::{CoreOpResult, OpScratch};
+use crate::config::Config;
 use crate::mapping::{account_core_op_into, ExecStats, MapError};
 use crate::pipeline::pool::{MacroPool, PlacedLinear};
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{SplitMix64, Xoshiro256};
 use crate::util::threadpool::{default_workers, parallel_chunks};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Batch-parallel runner over a [`MacroPool`]. Each `run_q` call advances an
-/// epoch that is mixed into every worker's RNG substream, so successive
-/// batches (and successive layers within one batch) draw fresh, decorrelated
-/// noise rather than replaying one frozen realization.
+/// Derive the dynamic-noise substream for one core op, keyed on
+/// `(seed, epoch, item, tile)` — the determinism contract of DESIGN.md §9.
+///
+/// The key components are absorbed through a SplitMix64 finalizer chain (a
+/// standard avalanche-per-word hash), then expanded into a full xoshiro
+/// state; with noise disabled the stream is never consumed, so noise-free
+/// outputs are independent of this function entirely.
+pub fn noise_stream(seed: u64, epoch: u64, item: u64, tile: u64) -> Xoshiro256 {
+    let mut k = seed;
+    for v in [epoch, item, tile] {
+        k = SplitMix64::new(k ^ v).next_u64();
+    }
+    Xoshiro256::seeded(k)
+}
+
+/// The noise-substream key of one activation vector (DESIGN.md §9): every
+/// op it runs draws from `noise_stream(seed, epoch, item, tile)`.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamKey {
+    /// The executor's substream seed.
+    pub seed: u64,
+    /// The layer invocation's epoch (one per `run_q` call / per streamed
+    /// stage, assigned in node order).
+    pub epoch: u64,
+    /// The vector's global index within the barrier batch
+    /// (`item × vectors_per_input + row` for streamed conv rows).
+    pub item: u64,
+}
+
+/// Reusable per-worker buffers for the vector hot path: one per thread
+/// (executor worker or scheduler stage), never shared across
+/// differently-shaped configurations.
+pub struct StreamCtx {
+    scratch: OpScratch,
+    op: CoreOpResult,
+    tile_acts: Vec<i64>,
+    folded: Vec<i64>,
+}
+
+impl StreamCtx {
+    pub fn new(cfg: &Config) -> Self {
+        Self {
+            scratch: OpScratch::new(&cfg.mac),
+            op: CoreOpResult::default(),
+            tile_acts: Vec::new(),
+            folded: Vec::new(),
+        }
+    }
+}
+
+/// Run ONE quantized activation vector through the placed tile grid with
+/// the prepare-once kernel path: the bit-plane kernel is
+/// [`OpScratch::prepare`]d once per row tile and every column tile of that
+/// row streams through the preparation (the scheduler's `(item, row-tile)`
+/// work unit). Returns the dequantized partial sums plus bias.
+///
+/// `key` names the noise substreams ([`noise_stream`]): the draws consumed
+/// here are a pure function of `(seed, epoch, item, tile)`, independent of
+/// worker assignment and batch composition — the barrier executor and the
+/// streaming scheduler call this same routine with the same keys and are
+/// therefore bit-identical (DESIGN.md §9).
+pub fn run_vector(
+    pool: &MacroPool,
+    layer: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    ctx: &mut StreamCtx,
+    stats: &mut ExecStats,
+) -> Result<Vec<f32>, MapError> {
+    let lin = layer.linear();
+    let (k, n) = (lin.k, lin.n);
+    if acts.len() != k {
+        return Err(MapError::Shape(format!("activation length {} vs layer K {k}", acts.len())));
+    }
+    let rows = lin.rows_per_tile();
+    let engines = lin.engines_per_tile();
+    let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+    let deq = lin.a_params.scale * lin.w_params.scale;
+
+    ctx.tile_acts.resize(rows, 0);
+    let mut out = vec![0f32; n];
+    for rt in 0..n_rt {
+        let r0 = rt * rows;
+        let upper = (r0 + rows).min(k);
+        ctx.tile_acts.fill(0);
+        ctx.tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+        // Prepare the bit-plane kernel once per row tile: validation,
+        // folding, row masks and pulse widths are shared by every column
+        // tile (shard-independent).
+        ctx.scratch.prepare(pool.cfg(), &ctx.tile_acts)?;
+        for ct in 0..n_ct {
+            let slot = layer.slot(rt, ct);
+            let mut rng = noise_stream(key.seed, key.epoch, key.item, (rt * n_ct + ct) as u64);
+            pool.op_prepared_into(slot, &mut rng, &mut ctx.scratch, &mut ctx.op)?;
+            let c0 = ct * engines;
+            for (e, &v) in ctx.op.values.iter().enumerate() {
+                let col = c0 + e;
+                if col < n {
+                    out[col] += v as f32 * deq;
+                }
+            }
+            // Shared per-op accounting (counters, energy, and the boosted-
+            // clipping scan) — one source of truth with every other
+            // backend, reusing the worker's buffer.
+            let (sh, co) = pool.locate(slot);
+            let w = pool.shard(sh).core_weights(co)?;
+            account_core_op_into(
+                pool.cfg(),
+                w,
+                &ctx.tile_acts,
+                &ctx.op.stats,
+                stats,
+                &mut ctx.folded,
+            );
+        }
+    }
+    for (o, b) in out.iter_mut().zip(&lin.bias) {
+        *o += b;
+    }
+    Ok(out)
+}
+
+/// Batch-parallel runner over a [`MacroPool`]. Each `run_q` call advances
+/// an epoch that keys every op's noise substream ([`noise_stream`]), so
+/// successive batches (and successive layers within one batch) draw fresh,
+/// decorrelated noise rather than replaying one frozen realization — while
+/// staying a pure function of `(seed, epoch, item, tile)`, independent of
+/// the worker count (DESIGN.md §9).
 #[derive(Debug)]
 pub struct BatchExecutor {
     workers: usize,
@@ -49,6 +184,26 @@ impl BatchExecutor {
         self.workers
     }
 
+    /// The substream seed every op key derives from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Reserve `n` consecutive epochs and return the first. A barrier
+    /// `run_q` reserves one per call; a streamed plan run reserves one per
+    /// layer up front so layer `l` uses `base + l` — the same assignment
+    /// the barrier path would have made (DESIGN.md §9).
+    pub fn reserve_epochs(&self, n: u64) -> u64 {
+        self.epoch.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// Rewind (or fast-forward) the epoch counter. Replaying an epoch
+    /// replays its exact noise draws — used by the determinism tests and
+    /// the bench to compare barrier and streamed execution draw for draw.
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
     /// Run quantized activation vectors (each of length `K`) through the
     /// placed layer. Returns the `[batch][N]` dequantized partial sums plus
     /// bias, and the merged device counters of every op.
@@ -58,72 +213,31 @@ impl BatchExecutor {
         layer: &PlacedLinear,
         acts_q: &[Vec<i64>],
     ) -> Result<(Vec<Vec<f32>>, ExecStats), MapError> {
-        let lin = layer.linear();
-        let (k, n) = (lin.k, lin.n);
-        let rows = lin.rows_per_tile();
-        let engines = lin.engines_per_tile();
-        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
-        let deq = lin.a_params.scale * lin.w_params.scale;
+        let epoch = self.reserve_epochs(1);
+        self.run_q_at(pool, layer, acts_q, epoch, 0)
+    }
 
-        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed);
-        let chunks = parallel_chunks(acts_q.len(), self.workers, |w, start, end| {
-            let mut rng = Xoshiro256::seeded(
-                self.seed
-                    ^ epoch.wrapping_add(1).wrapping_mul(0xA076_1D64_78BD_642F)
-                    ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(w as u64 + 1),
-            );
-            let mut scratch = OpScratch::new(&pool.cfg().mac);
-            let mut op = CoreOpResult::default();
-            let mut tile_acts = vec![0i64; rows];
-            let mut folded = Vec::new();
+    /// [`BatchExecutor::run_q`] with an explicit epoch and a base item
+    /// index: vector `i` of `acts_q` uses substream key
+    /// `(seed, epoch, item_base + i, tile)`. The streaming scheduler calls
+    /// this per item with `item_base = item × vectors_per_input` to land on
+    /// the exact keys the barrier path assigns across a whole batch.
+    pub fn run_q_at(
+        &self,
+        pool: &MacroPool,
+        layer: &PlacedLinear,
+        acts_q: &[Vec<i64>],
+        epoch: u64,
+        item_base: u64,
+    ) -> Result<(Vec<Vec<f32>>, ExecStats), MapError> {
+        let chunks = parallel_chunks(acts_q.len(), self.workers, |_w, start, end| {
+            let mut ctx = StreamCtx::new(pool.cfg());
             let mut stats = ExecStats::default();
             let mut out_rows: Vec<Vec<f32>> = Vec::with_capacity(end - start);
-            for acts in &acts_q[start..end] {
-                if acts.len() != k {
-                    return Err(MapError::Shape(format!(
-                        "activation length {} vs layer K {k}",
-                        acts.len()
-                    )));
-                }
-                let mut out = vec![0f32; n];
-                for rt in 0..n_rt {
-                    let r0 = rt * rows;
-                    let upper = (r0 + rows).min(k);
-                    tile_acts.fill(0);
-                    tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
-                    // Prepare the bit-plane kernel once per row tile:
-                    // validation, folding, row masks and pulse widths are
-                    // shared by every column tile (shard-independent).
-                    scratch.prepare(pool.cfg(), &tile_acts)?;
-                    for ct in 0..n_ct {
-                        let slot = layer.slot(rt, ct);
-                        pool.op_prepared_into(slot, &mut rng, &mut scratch, &mut op)?;
-                        let c0 = ct * engines;
-                        for (e, &v) in op.values.iter().enumerate() {
-                            let col = c0 + e;
-                            if col < n {
-                                out[col] += v as f32 * deq;
-                            }
-                        }
-                        // Shared per-op accounting (counters, energy, and the
-                        // boosted-clipping scan) — one source of truth with
-                        // every other backend, reusing the worker's buffer.
-                        let (sh, co) = pool.locate(slot);
-                        let w = pool.shard(sh).core_weights(co)?;
-                        account_core_op_into(
-                            pool.cfg(),
-                            w,
-                            &tile_acts,
-                            &op.stats,
-                            &mut stats,
-                            &mut folded,
-                        );
-                    }
-                }
-                for (o, b) in out.iter_mut().zip(&lin.bias) {
-                    *o += b;
-                }
-                out_rows.push(out);
+            for (i, acts) in acts_q[start..end].iter().enumerate() {
+                let key =
+                    StreamKey { seed: self.seed, epoch, item: item_base + (start + i) as u64 };
+                out_rows.push(run_vector(pool, layer, key, acts, &mut ctx, &mut stats)?);
             }
             Ok((out_rows, stats))
         });
@@ -199,6 +313,46 @@ mod tests {
         }
     }
 
+    /// With noise on, the batched output is a pure function of
+    /// `(seed, epoch, item, tile)`: independent of the worker count, and of
+    /// whether items run together or one at a time — the streaming
+    /// determinism contract at executor level.
+    #[test]
+    fn noisy_output_is_worker_and_split_invariant() {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        let (k, n) = (130, 20);
+        let lin = rand_layer(&cfg, k, n, 3);
+        let mut rng = Xoshiro256::seeded(5);
+        let xs: Vec<Vec<i64>> = (0..9)
+            .map(|_| (0..k).map(|_| rng.next_range_i64(0, 15)).collect())
+            .collect();
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+
+        let exec1 = BatchExecutor::new(1, 42);
+        let (want, stats) = exec1.run_q(&pool, &placed, &xs).unwrap();
+        assert_eq!(stats.core_ops as usize, placed.n_tiles() * xs.len());
+
+        // Same seed + epoch, different worker count: identical draws.
+        let exec4 = BatchExecutor::new(4, 42);
+        let (got, _) = exec4.run_q(&pool, &placed, &xs).unwrap();
+        assert_eq!(got, want, "worker count must not change noisy output");
+
+        // Same keys, items one at a time via run_q_at: identical draws.
+        let exec_solo = BatchExecutor::new(1, 42);
+        for (i, acts) in xs.iter().enumerate() {
+            let (row, _) = exec_solo
+                .run_q_at(&pool, &placed, std::slice::from_ref(acts), 0, i as u64)
+                .unwrap();
+            assert_eq!(row[0], want[i], "item {i} split off the batch must match");
+        }
+
+        // A later epoch draws different noise (no frozen realization).
+        let (other, _) = exec1.run_q(&pool, &placed, &xs).unwrap();
+        assert_ne!(other, want, "successive epochs must decorrelate");
+    }
+
     /// With noise on, the batched path still produces code-quantized results
     /// near the ideal, and counters add up.
     #[test]
@@ -232,5 +386,23 @@ mod tests {
             exec.run_q(&pool, &placed, &bad),
             Err(MapError::Shape(_))
         ));
+    }
+
+    #[test]
+    fn noise_streams_are_stable_and_distinct() {
+        let a: Vec<u64> = {
+            let mut r = noise_stream(1, 2, 3, 4);
+            (0..4).map(|_| crate::util::rng::Rng::next_u64(&mut r)).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = noise_stream(1, 2, 3, 4);
+            (0..4).map(|_| crate::util::rng::Rng::next_u64(&mut r)).collect()
+        };
+        assert_eq!(a, b, "keys are a pure function of their components");
+        for other in [(0, 2, 3, 4), (1, 3, 3, 4), (1, 2, 4, 4), (1, 2, 3, 5)] {
+            let mut r = noise_stream(other.0, other.1, other.2, other.3);
+            let c: Vec<u64> = (0..4).map(|_| crate::util::rng::Rng::next_u64(&mut r)).collect();
+            assert_ne!(a, c, "changing any key component must change the stream");
+        }
     }
 }

@@ -82,6 +82,13 @@ impl PipelineDeployment {
     pub fn run_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
         self.plan.run_flat(xs)
     }
+
+    /// Streamed (layer-pipelined) form of [`PipelineDeployment::run_batch`]:
+    /// bit-identical outputs, items flow through the two layers as a
+    /// pipeline instead of a barrier (DESIGN.md §9).
+    pub fn run_batch_streamed(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        self.plan.run_streamed_flat(xs)
+    }
 }
 
 #[cfg(test)]

@@ -9,9 +9,9 @@
 //! * [`PlacedLinear`] — a [`crate::mapping::executor::CimLinear`] whose
 //!   row/column tiles have been placed on pool slots.
 //! * [`BatchExecutor`] — runs a `[batch][features]` activation matrix across
-//!   the resident tiles with `util::threadpool::parallel_chunks`, one RNG
-//!   substream and one reusable [`crate::cim::OpScratch`] per worker, so the
-//!   per-op hot path performs zero allocations.
+//!   the resident tiles with `util::threadpool::parallel_chunks`, one
+//!   reusable [`batch::StreamCtx`] (kernel scratch + op buffers) per
+//!   worker, so the per-op hot path performs zero allocations.
 //! * [`PipelineDeployment`] — the two-layer MLP deployment on a pool: the
 //!   batched serve loop's engine (`coordinator::server::serve_pipeline`).
 //!   Since the graph compiler landed this is one instance of a
@@ -22,11 +22,13 @@
 //!
 //! Determinism contract: with noise disabled the batched pipeline is
 //! bit-identical to the sequential single-macro path (asserted by
-//! `tests/pipeline_equivalence.rs`). With noise enabled, results depend on
-//! the worker count and on the executor's per-call epoch: every `run_q`
-//! call mixes a fresh epoch into each worker's RNG substream, so each op
-//! consumes one fresh decorrelated draw and repeated batches do not replay
-//! one frozen noise realization.
+//! `tests/pipeline_equivalence.rs`). With noise enabled, every op draws
+//! from the substream keyed `(seed, epoch, item, tile)`
+//! ([`batch::noise_stream`], DESIGN.md §9): results are independent of the
+//! worker count and of how a batch is split or streamed — the property the
+//! streaming scheduler's bit-identity rests on — while each `run_q` call
+//! advances the epoch so repeated batches never replay one frozen noise
+//! realization.
 //!
 //! Per-op work runs on the bit-plane fast-path kernel (DESIGN.md §4): each
 //! row tile's activations are prepared once ([`crate::cim::OpScratch`]) and
@@ -44,6 +46,6 @@ pub mod deploy;
 pub mod pool;
 
 pub use backend::PoolBackend;
-pub use batch::BatchExecutor;
+pub use batch::{noise_stream, run_vector, BatchExecutor, StreamCtx, StreamKey};
 pub use deploy::PipelineDeployment;
 pub use pool::{MacroPool, PlacedLinear};

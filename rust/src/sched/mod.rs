@@ -1,0 +1,310 @@
+//! Streaming plan scheduler — layer-pipelined execution over bounded queues
+//! (DESIGN.md §9).
+//!
+//! The paper's macro keeps its analog array busy by sharing the discharge
+//! branches between MAC and readout: there is no idle ADC stage. The
+//! software analogue is this module: instead of a hard barrier after every
+//! network layer (all 71 shards of a ResNet-20 placement idling while the
+//! slowest tile of layer *k* finishes), a compiled plan becomes a pipeline
+//! of per-layer **stages** connected by [`BoundedQueue`]s, and each batch
+//! item flows through the stages independently — item A can be in layer 3
+//! while item B is still in layer 1.
+//!
+//! The module is deliberately generic: [`run_stages`] knows nothing about
+//! tensors or layers. It owns the runtime mechanics —
+//!
+//! * one worker thread per stage, pulling items from the stage's input
+//!   queue (work units inside a stage are `(item, row-tile)` preparations;
+//!   see `compiler::plan::run_streamed` and `pipeline::batch::run_vector`);
+//! * bounded inter-stage queues, so a slow stage backpressures its
+//!   upstream instead of buffering unboundedly;
+//! * occupancy accounting ([`Occupancy`], peak number of simultaneously
+//!   busy stages — the pipelining proof) and per-stage queue-depth gauges
+//!   ([`StageGauge`]);
+//! * abort-on-error with full drain: the first stage error wins, every
+//!   queue is drained (never deadlocked on a full queue), and the error is
+//!   returned to the caller;
+//! * panic hygiene: a panicking stage closes every queue on unwind so the
+//!   sibling stages and the feeder exit instead of blocking forever.
+//!
+//! `coordinator::server` reuses [`BoundedQueue`] as the serve admission
+//! queue: TCP connection handlers block on `push` when the queue is full
+//! (backpressure to the client) and `ServerHandle::shutdown` closes the
+//! queue, which by the drain contract completes everything already
+//! admitted before the server returns its metrics.
+
+pub mod queue;
+
+pub use queue::BoundedQueue;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Post-run accounting for one pipeline stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageGauge {
+    pub name: String,
+    /// Items this stage processed.
+    pub items: u64,
+    /// Deepest its input queue ever got.
+    pub peak_queue: usize,
+}
+
+/// Lock-free gauge of how many stages are busy right now, tracking the peak.
+/// Peak > 1 is the observable proof that execution actually pipelined.
+#[derive(Debug, Default)]
+pub struct Occupancy {
+    busy: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Occupancy {
+    pub fn enter(&self) {
+        let now = self.busy.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    pub fn exit(&self) {
+        self.busy.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn busy(&self) -> usize {
+        self.busy.load(Ordering::SeqCst)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// What a [`run_stages`] run observed.
+#[derive(Clone, Debug, Default)]
+pub struct RunGauges {
+    pub stages: Vec<StageGauge>,
+    /// Peak number of simultaneously busy stages.
+    pub peak_busy: usize,
+}
+
+/// On unwind (a panicking stage worker), close every queue so sibling
+/// stages and the feeder drain out instead of blocking forever; the panic
+/// then propagates normally through `std::thread::scope`.
+struct PanicDrain<'a, T> {
+    abort: &'a AtomicBool,
+    queues: &'a [BoundedQueue<T>],
+}
+
+impl<T> Drop for PanicDrain<'_, T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.abort.store(true, Ordering::SeqCst);
+            for q in self.queues {
+                q.close();
+            }
+        }
+    }
+}
+
+/// Drive `feed` through a pipeline of `names.len()` stages connected by
+/// bounded queues of capacity `queue_cap`.
+///
+/// `make_stage(s)` is called once *inside* stage `s`'s worker thread and
+/// returns that stage's (stateful) item processor — per-stage scratch
+/// buffers live there, reused across items with zero steady-state
+/// allocation. `finish` receives every item that completed the last stage,
+/// in completion order (FIFO: single-threaded stages over FIFO queues
+/// preserve admission order).
+///
+/// The first stage error aborts the run: remaining items are drained (not
+/// processed) and the error is returned. Items the feeder had not yet
+/// admitted are simply never fed.
+pub fn run_stages<I, E, F, W, D>(
+    feed: impl IntoIterator<Item = I>,
+    names: Vec<String>,
+    queue_cap: usize,
+    make_stage: F,
+    finish: D,
+) -> Result<RunGauges, E>
+where
+    I: Send,
+    E: Send,
+    F: Fn(usize) -> W + Sync,
+    W: FnMut(&mut I) -> Result<(), E>,
+    D: FnMut(I) + Send,
+{
+    let n = names.len();
+    assert!(n >= 1, "a pipeline needs at least one stage");
+    let queues: Vec<BoundedQueue<I>> = (0..n).map(|_| BoundedQueue::new(queue_cap)).collect();
+    let done: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let occ = Occupancy::default();
+    let abort = AtomicBool::new(false);
+    let err: Mutex<Option<E>> = Mutex::new(None);
+    let finish = Mutex::new(finish);
+
+    std::thread::scope(|s| {
+        let queues = &queues;
+        let done = &done;
+        let occ = &occ;
+        let abort = &abort;
+        let err = &err;
+        let finish = &finish;
+        let make_stage = &make_stage;
+        for stage in 0..n {
+            s.spawn(move || {
+                let _drain = PanicDrain { abort, queues };
+                let mut work = make_stage(stage);
+                let in_q = &queues[stage];
+                let out_q = queues.get(stage + 1);
+                while let Some(mut item) = in_q.pop() {
+                    if abort.load(Ordering::Relaxed) {
+                        continue; // drain mode: keep upstream pushes unblocked
+                    }
+                    occ.enter();
+                    let r = work(&mut item);
+                    occ.exit();
+                    match r {
+                        Ok(()) => {
+                            done[stage].fetch_add(1, Ordering::Relaxed);
+                            match out_q {
+                                // Err only while aborting — dropping is fine.
+                                Some(q) => drop(q.push(item)),
+                                None => {
+                                    let mut f = finish.lock().expect("finish poisoned");
+                                    (*f)(item);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let mut slot = err.lock().expect("error slot poisoned");
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                // Input exhausted: cascade the close downstream.
+                if let Some(q) = out_q {
+                    q.close();
+                }
+            });
+        }
+        // Feed on the calling thread; `push` blocking on a full first queue
+        // is the backpressure edge.
+        for item in feed {
+            if abort.load(Ordering::Relaxed) || queues[0].push(item).is_err() {
+                break;
+            }
+        }
+        queues[0].close();
+    });
+
+    if let Some(e) = err.into_inner().expect("error slot poisoned") {
+        return Err(e);
+    }
+    let stages = names
+        .into_iter()
+        .zip(queues.iter().zip(&done))
+        .map(|(name, (q, d))| StageGauge {
+            name,
+            items: d.load(Ordering::Relaxed),
+            peak_queue: q.peak_depth(),
+        })
+        .collect();
+    Ok(RunGauges { stages, peak_busy: occ.peak() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn items_traverse_all_stages_in_order() {
+        let finished = Mutex::new(Vec::new());
+        let gauges = run_stages(
+            (0..20).map(|i| (i, 0u32)),
+            vec!["a".into(), "b".into(), "c".into()],
+            2,
+            |_stage| {
+                |item: &mut (i32, u32)| {
+                    item.1 += 1;
+                    Ok::<(), String>(())
+                }
+            },
+            |item| finished.lock().unwrap().push(item),
+        )
+        .unwrap();
+        let got = finished.into_inner().unwrap();
+        // FIFO order preserved end to end; every item saw all three stages.
+        assert_eq!(got.iter().map(|&(i, _)| i).collect::<Vec<_>>(), (0..20).collect::<Vec<_>>());
+        assert!(got.iter().all(|&(_, hops)| hops == 3));
+        assert_eq!(gauges.stages.len(), 3);
+        assert!(gauges.stages.iter().all(|g| g.items == 20));
+        assert!(gauges.peak_busy >= 1);
+    }
+
+    #[test]
+    fn pipelining_overlaps_stages() {
+        // Two stages that each sleep: with more than a couple of items the
+        // occupancy gauge must observe both busy at once.
+        let gauges = run_stages(
+            0..8,
+            vec!["slow1".into(), "slow2".into()],
+            2,
+            |_stage| {
+                |_item: &mut i32| {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    Ok::<(), String>(())
+                }
+            },
+            |_item| {},
+        )
+        .unwrap();
+        assert!(
+            gauges.peak_busy > 1,
+            "two sleeping stages over 8 items must overlap (peak {})",
+            gauges.peak_busy
+        );
+    }
+
+    #[test]
+    fn first_error_aborts_without_deadlock() {
+        let finished = AtomicUsize::new(0);
+        let res = run_stages(
+            0..100,
+            vec!["s0".into(), "s1".into()],
+            1, // tight queues: the drain path is what prevents deadlock
+            |stage| {
+                move |item: &mut i32| {
+                    if stage == 1 && *item == 3 {
+                        Err(format!("boom at {item}"))
+                    } else {
+                        Ok(())
+                    }
+                }
+            },
+            |_item| {
+                finished.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(res.unwrap_err(), "boom at 3");
+        assert!(finished.load(Ordering::Relaxed) < 100, "run must not complete after abort");
+    }
+
+    #[test]
+    fn single_stage_degenerate_case_works() {
+        let sum = AtomicUsize::new(0);
+        let g = run_stages(
+            1..=10usize,
+            vec!["only".into()],
+            4,
+            |_| |_item: &mut usize| Ok::<(), ()>(()),
+            |item| {
+                sum.fetch_add(item, Ordering::Relaxed);
+            },
+        )
+        .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+        assert_eq!(g.stages[0].items, 10);
+    }
+}

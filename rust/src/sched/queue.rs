@@ -1,0 +1,247 @@
+//! A bounded MPMC queue with close semantics — the backpressure primitive of
+//! the streaming scheduler and the serve runtime (DESIGN.md §9).
+//!
+//! * [`BoundedQueue::push`] blocks while the queue is full, which is how
+//!   backpressure propagates: a slow stage fills its input queue, the
+//!   upstream stage blocks on `push`, and so on back to the admission edge
+//!   (a TCP connection handler, or the feeder of a streamed plan run).
+//! * [`BoundedQueue::close`] marks the end of the stream: pending and future
+//!   `push`es return the item to the caller, and `pop` drains what is
+//!   already queued before reporting exhaustion with `None`. This is the
+//!   graceful-drain contract — closing never discards admitted items.
+//! * Depth gauges (`peak_depth`, `pushed`) are recorded lock-free so the
+//!   serve loop can report realized queue pressure without touching the
+//!   mutex.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A blocking bounded queue. See the module docs for the push/close/drain
+/// contract.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+    peak: AtomicUsize,
+    pushed: AtomicU64,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+            peak: AtomicUsize::new(0),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deepest the queue has ever been.
+    pub fn peak_depth(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Items ever admitted (successful pushes).
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Blocking push: waits while the queue is full. Returns the item back
+    /// when the queue is closed (nothing is admitted past a close).
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if g.closed {
+                return Err(v);
+            }
+            if g.items.len() < self.cap {
+                break;
+            }
+            g = self.not_full.wait(g).expect("queue poisoned");
+        }
+        g.items.push_back(v);
+        let depth = g.items.len();
+        drop(g);
+        self.peak.fetch_max(depth, Ordering::Relaxed);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for an item; `None` only once the queue is closed
+    /// AND fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Pop with a deadline: `None` on timeout or on closed-and-drained —
+    /// either way the caller's batching window is over.
+    pub fn pop_deadline(&self, deadline: Instant) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned");
+            g = g2;
+            if res.timed_out() {
+                // One last drain check before giving up the window.
+                if let Some(v) = g.items.pop_front() {
+                    drop(g);
+                    self.not_full.notify_one();
+                    return Some(v);
+                }
+                return None;
+            }
+        }
+    }
+
+    /// Close the queue: wakes every blocked pusher (they get their item
+    /// back) and lets poppers drain the remainder.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.closed = true;
+        drop(g);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue poisoned").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_gauges() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.peak_depth(), 5);
+        assert_eq!(q.pushed(), 5);
+        let got: Vec<i32> = (0..5).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn push_blocks_until_pop_then_backpressure_releases() {
+        let q = Arc::new(BoundedQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(3).is_ok());
+        // Give the pusher time to block on the full queue.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "third push must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_admitted_and_refuses_new() {
+        let q = BoundedQueue::new(4);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert_eq!(q.push("c"), Err("c"), "post-close push must refuse");
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None, "closed and drained");
+    }
+
+    #[test]
+    fn close_wakes_blocked_pusher() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(7u32).unwrap();
+        let qa = q.clone();
+        // Either blocks on the full queue until close wakes it, or (if close
+        // lands first) is refused outright — refused both ways.
+        let pusher = std::thread::spawn(move || qa.push(8).is_err());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(pusher.join().unwrap(), "push across close must be refused");
+        // The admitted item still drains after close; then exhaustion.
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = Arc::new(BoundedQueue::<u8>::new(1));
+        let qa = q.clone();
+        // Either blocks on the empty queue until close wakes it, or observes
+        // the closed-and-drained state directly — `None` both ways.
+        let popper = std::thread::spawn(move || qa.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_and_still_drains() {
+        let q = BoundedQueue::new(2);
+        let t0 = Instant::now();
+        assert_eq!(
+            q.pop_deadline(Instant::now() + Duration::from_millis(15)),
+            Option::<u8>::None
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        q.push(9u8).unwrap();
+        assert_eq!(q.pop_deadline(Instant::now() + Duration::from_millis(15)), Some(9));
+    }
+}

@@ -16,7 +16,7 @@ use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
 use cimsim::cim::timing::finalize_cycles;
 use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
-use cimsim::compiler::{compile, CompileOptions, Graph};
+use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::mapping::NativeBackend;
@@ -249,7 +249,58 @@ fn refresh_compiler_row() {
     write_rows("BENCH_compiler.json", &[row]);
 }
 
-/// One test (not several) so the three refreshes never race on the files.
+fn refresh_stream_row() {
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let net = ResNet20::new(3);
+    let graph = Graph::from_resnet20(&net);
+    let cal: Vec<Tensor> = vec![random_image(&[3, 32, 32], 100)];
+    let workers = cimsim::util::threadpool::default_workers();
+    let opts = CompileOptions { workers, ..Default::default() };
+    let mut plan = compile(graph, &cal, &cfg, &opts).unwrap();
+    let batch = 2usize;
+    let imgs: Vec<Tensor> =
+        (0..batch).map(|i| random_image(&[3, 32, 32], 7 + i as u64)).collect();
+
+    // Barrier: every item completes when the batch returns.
+    let t0 = Instant::now();
+    black_box(plan.run_batch(&imgs).unwrap());
+    let barrier_s = t0.elapsed().as_secs_f64();
+
+    // Streamed: per-item completion timestamps from the scheduler.
+    let t0 = Instant::now();
+    let outcome = plan.run_streamed_with(&imgs, &StreamOptions { queue_cap: 2 }).unwrap();
+    let stream_s = t0.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = outcome.item_latency.iter().map(|d| d.as_secs_f64()).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = cimsim::bench::percentile(&lat, 0.50);
+    let p99 = cimsim::bench::percentile(&lat, 0.99);
+
+    let row = json_row(&[
+        JsonField::Str("bench", "stream_latency"),
+        JsonField::Str("network", "resnet20"),
+        JsonField::Int("batch", batch as i64),
+        JsonField::Int("runs", 1),
+        JsonField::Int("workers", workers as i64),
+        JsonField::Int("stages", plan.layers().len() as i64),
+        JsonField::Int("queue_cap", 2),
+        JsonField::Int("peak_busy_stages", outcome.peak_busy as i64),
+        JsonField::Num("barrier_p50_ms", barrier_s * 1e3),
+        JsonField::Num("barrier_p99_ms", barrier_s * 1e3),
+        JsonField::Num("stream_p50_ms", p50 * 1e3),
+        JsonField::Num("stream_p99_ms", p99 * 1e3),
+        JsonField::Num("barrier_img_per_s", batch as f64 / barrier_s),
+        JsonField::Num("stream_img_per_s", batch as f64 / stream_s),
+        JsonField::Num("speedup_p50", barrier_s / p50),
+        JsonField::Num("speedup_p99", barrier_s / p99),
+        JsonField::Str("profile", build_profile()),
+        JsonField::Str("source", "measured"),
+    ]);
+    write_rows("BENCH_stream.json", &[row]);
+}
+
+/// One test (not several) so the four refreshes never race on the files.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
     if needs_refresh("BENCH_kernel.json") {
@@ -261,7 +312,15 @@ fn bench_trajectory_has_no_placeholders() {
     if needs_refresh("BENCH_compiler.json") {
         refresh_compiler_row();
     }
-    for f in ["BENCH_kernel.json", "BENCH_pipeline.json", "BENCH_compiler.json"] {
+    if needs_refresh("BENCH_stream.json") {
+        refresh_stream_row();
+    }
+    for f in [
+        "BENCH_kernel.json",
+        "BENCH_pipeline.json",
+        "BENCH_compiler.json",
+        "BENCH_stream.json",
+    ] {
         let text = std::fs::read_to_string(bench_json_path(f)).unwrap();
         assert!(
             !text.contains("placeholder"),

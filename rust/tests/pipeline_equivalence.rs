@@ -158,8 +158,9 @@ fn concurrent_clients_get_single_client_results_and_batches_coalesce() {
     let rounds = 4usize;
     let serve_cfg = ServeConfig {
         max_batch: n_clients,
-        batch_timeout: std::time::Duration::from_millis(200),
+        max_wait: std::time::Duration::from_millis(200),
         workers: 2,
+        ..ServeConfig::default()
     };
     let handle = serve_pipeline(dep, cfg, serve_cfg).unwrap();
     let addr = handle.addr;

@@ -1,0 +1,315 @@
+//! Streaming determinism suite (DESIGN.md §9): the layer-pipelined
+//! scheduler (`CompiledPlan::run_streamed`) must be **bit-identical** to the
+//! barrier `run_batch` — all four enhancement modes, noise on and off, any
+//! worker count, any queue capacity, ragged batch sequences — plus the
+//! serve-runtime guarantees: a soak run through `serve --stream` with more
+//! requests than the admission queue holds drops nothing and demonstrably
+//! pipelines (peak stage occupancy > 1), and `ServerHandle::shutdown`
+//! completes everything already admitted before returning.
+
+use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::deployment::MlpDeployment;
+use cimsim::coordinator::{
+    serve_engine, serve_plan, BackendEngine, Client, InferenceEngine, ServeConfig,
+};
+use cimsim::mapping::{DigitalBackend, MapError};
+use cimsim::nn::dataset::{random_image, BlobDataset};
+use cimsim::nn::mlp::{train, Mlp};
+use cimsim::nn::resnet::ResNet20;
+use cimsim::nn::tensor::Tensor;
+use cimsim::prop_assert;
+use cimsim::util::proptest::check;
+use cimsim::util::rng::{Rng, Xoshiro256};
+use std::time::Duration;
+
+const MODES: [fn() -> EnhanceConfig; 4] = [
+    EnhanceConfig::default,
+    EnhanceConfig::fold_only,
+    EnhanceConfig::boost_only,
+    EnhanceConfig::both,
+];
+
+fn cal_set(dim: usize, n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| Tensor::from_vec(&[dim], (0..dim).map(|_| rng.next_f32()).collect()))
+        .collect()
+}
+
+/// The determinism contract: for random MLP shapes, enhancement modes,
+/// noise on/off, worker counts and ragged batch-size sequences, streamed
+/// execution equals the barrier path bit for bit, and the integer device
+/// counters agree exactly (energy is the same sum in a different
+/// association order, so it is compared relatively).
+#[test]
+fn property_streamed_equals_barrier() {
+    check("streamed-vs-barrier", 8, |g| {
+        let mut cfg = Config::default();
+        cfg.enhance = g.pick(&MODES)();
+        cfg.noise.enabled = g.bool();
+        let workers = *g.pick(&[1usize, 4]);
+        let queue_cap = *g.pick(&[1usize, 2, 4]);
+
+        let k = g.usize_in(6, 40);
+        let h = g.usize_in(3, 20);
+        let o = g.usize_in(2, 8);
+        let mlp = Mlp::new(&[k, h, o], g.case_seed ^ 0x11);
+        let graph = Graph::from_mlp(&mlp);
+        let cal = cal_set(k, 4, g.case_seed ^ 0x22);
+        let opts = CompileOptions { workers, ..Default::default() };
+
+        let mut barrier = compile(graph.clone(), &cal, &cfg, &opts)
+            .map_err(|e| format!("compile barrier: {e}"))?;
+        let mut streamed =
+            compile(graph, &cal, &cfg, &opts).map_err(|e| format!("compile streamed: {e}"))?;
+
+        // A ragged sequence of batches, run in lockstep on both plans so
+        // the epoch counters stay aligned.
+        let n_batches = g.usize_in(1, 3);
+        for b in 0..n_batches {
+            let batch = g.usize_in(1, 5);
+            let xs = cal_set(k, batch, g.case_seed ^ (0x33 + b as u64));
+            let want = barrier.run_batch(&xs).map_err(|e| format!("barrier: {e}"))?;
+            let outcome = streamed
+                .run_streamed_with(&xs, &StreamOptions { queue_cap })
+                .map_err(|e| format!("streamed: {e}"))?;
+            prop_assert!(
+                outcome.outputs == want,
+                "mode {} noise {} workers {workers} cap {queue_cap} batch {batch}: outputs differ",
+                cfg.enhance.label(),
+                cfg.noise.enabled
+            );
+            prop_assert!(
+                outcome.item_latency.len() == batch,
+                "latency per item missing: {} vs {batch}",
+                outcome.item_latency.len()
+            );
+        }
+        prop_assert!(
+            barrier.stats().core_ops == streamed.stats().core_ops,
+            "core op counts diverged"
+        );
+        prop_assert!(
+            barrier.stats().total_cycles == streamed.stats().total_cycles,
+            "cycle counts diverged"
+        );
+        prop_assert!(
+            barrier.stats().clipped == streamed.stats().clipped,
+            "clipping counters diverged"
+        );
+        let (ea, eb) = (barrier.stats().energy_fj(), streamed.stats().energy_fj());
+        prop_assert!(
+            (ea - eb).abs() <= 1e-9 * ea.abs().max(1.0),
+            "energy diverged beyond rounding: {ea} vs {eb}"
+        );
+        Ok(())
+    });
+}
+
+/// The acceptance criterion on the real workload: streamed execution of the
+/// compiled ResNet-20 plan is bit-identical to the barrier path, noise off
+/// AND on (epoch rewind replays the exact draws), and the per-layer cycle
+/// predictor stays exact across both modes.
+#[test]
+fn resnet20_streamed_matches_barrier() {
+    for (noise, batch) in [(false, 2usize), (true, 1usize)] {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        cfg.noise.enabled = noise;
+        let net = ResNet20::new(3);
+        let graph = Graph::from_resnet20(&net);
+        let cal: Vec<Tensor> = vec![random_image(&[3, 32, 32], 100)];
+        let opts = CompileOptions { workers: 2, ..Default::default() };
+        let mut plan = compile(graph, &cal, &cfg, &opts).unwrap();
+
+        let imgs: Vec<Tensor> =
+            (0..batch).map(|i| random_image(&[3, 32, 32], 7 + i as u64)).collect();
+        let want = plan.run_batch(&imgs).unwrap();
+        // Rewind the epochs so the streamed run replays the same draws.
+        plan.set_epoch(0);
+        let outcome = plan.run_streamed_with(&imgs, &StreamOptions { queue_cap: 2 }).unwrap();
+        assert_eq!(outcome.outputs, want, "noise={noise} batch={batch}");
+        // from_resnet20 ends at the fc layer node: one stage per layer.
+        assert_eq!(outcome.gauges.len(), plan.layers().len());
+        assert!(outcome.gauges.iter().all(|g| g.items == batch as u64));
+        if batch > 1 {
+            assert!(
+                outcome.peak_busy > 1,
+                "a multi-item ResNet-20 run must pipeline (peak busy {})",
+                outcome.peak_busy
+            );
+        }
+        // Both runs merged into the plan's counters; the predictor is exact
+        // for streamed execution too (noise-invariant MAC windows).
+        let predicted: u64 = plan.layers().iter().map(|l| l.predicted_cycles()).sum();
+        assert_eq!(predicted, plan.stats().total_cycles, "noise={noise}");
+    }
+}
+
+/// Soak `serve --stream`: push far more requests than the admission queue
+/// holds (backpressure, not drops), from more clients than `max_batch`.
+/// Every client gets the exact noise-free logits, nothing is dropped at
+/// shutdown, and the stage-occupancy gauge proves the plan pipelined.
+#[test]
+fn streamed_serve_soak_no_drops_and_pipelines() {
+    let mut d = BlobDataset::new(12, 0.05, 21);
+    let data: Vec<(Vec<f32>, usize)> =
+        d.batch(150).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let mut mlp = Mlp::new(&[144, 32, 10], 4);
+    train(&mut mlp, &data, 4, 0.05, 6);
+    let cal: Vec<Tensor> = data
+        .iter()
+        .take(24)
+        .map(|(x, _)| Tensor::from_vec(&[144], x.clone()))
+        .collect();
+
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+    let graph = Graph::from_mlp(&mlp);
+    let opts = CompileOptions { workers: 2, ..Default::default() };
+    let expected = {
+        let mut plan = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+        plan.run_flat(&[data[0].0.clone()]).unwrap().remove(0)
+    };
+
+    let plan = compile(graph, &cal, &cfg, &opts).unwrap();
+    let serve_cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        max_queue: 4, // far below the request count: backpressure territory
+        stream: true,
+        ..ServeConfig::default()
+    };
+    let handle = serve_plan(plan, serve_cfg).unwrap();
+    let addr = handle.addr;
+
+    let n_clients = 8usize;
+    let rounds = 4usize;
+    let x0 = data[0].0.clone();
+    let mut joins = Vec::new();
+    for _ in 0..n_clients {
+        let x = x0.clone();
+        joins.push(std::thread::spawn(move || -> Vec<Vec<f32>> {
+            let mut c = Client::connect(addr).unwrap();
+            (0..rounds).map(|_| c.infer(&x).unwrap()).collect()
+        }));
+    }
+    for j in joins {
+        for logits in j.join().unwrap() {
+            assert_eq!(logits, expected, "streamed serving changed an answer");
+        }
+    }
+
+    let metrics = handle.shutdown();
+    assert_eq!(
+        metrics.requests as usize,
+        n_clients * rounds,
+        "no admitted request may be dropped"
+    );
+    assert!(
+        metrics.peak_stages_busy > 1,
+        "streamed serving must pipeline stages (peak busy {})",
+        metrics.peak_stages_busy
+    );
+    assert!(!metrics.stages.is_empty(), "per-stage gauges must be reported");
+    // Every request passed every stage exactly once.
+    assert!(metrics.stages.iter().all(|s| s.items == metrics.requests));
+    let report = metrics.report(200e6);
+    assert!(report.mean_wait_ms >= 0.0);
+    assert!(report.peak_queue_depth > 0, "soak load must exercise the admission queue");
+}
+
+/// An engine that takes its time, so requests pile up in the admission
+/// queue — the graceful-drain regression needs work to still be queued at
+/// shutdown.
+struct SlowEngine {
+    inner: BackendEngine,
+    delay: Duration,
+}
+
+impl InferenceEngine for SlowEngine {
+    fn infer_batch(&mut self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, MapError> {
+        std::thread::sleep(self.delay);
+        self.inner.infer_batch(xs)
+    }
+
+    fn core_ops(&self) -> u64 {
+        self.inner.core_ops()
+    }
+
+    fn energy_fj(&self) -> f64 {
+        self.inner.energy_fj()
+    }
+
+    fn device_cycles(&self) -> u64 {
+        self.inner.device_cycles()
+    }
+}
+
+/// Graceful-drain regression: admit N requests, shut down immediately, and
+/// every one of the N clients still gets a real answer — queued-but-
+/// unserved work is completed, not dropped, at shutdown.
+#[test]
+fn shutdown_drains_admitted_requests() {
+    let mut d = BlobDataset::new(12, 0.05, 31);
+    let data: Vec<(Vec<f32>, usize)> =
+        d.batch(120).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let mut mlp = Mlp::new(&[144, 16, 10], 8);
+    train(&mut mlp, &data, 3, 0.05, 2);
+    let cal: Vec<Vec<f32>> = data.iter().take(20).map(|(x, _)| x.clone()).collect();
+    let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
+
+    let engine = SlowEngine {
+        inner: BackendEngine {
+            dep,
+            backend: Box::new(DigitalBackend::new(Config::default())),
+        },
+        delay: Duration::from_millis(40),
+    };
+    // max_batch 1 + a slow engine: most of the N requests are still in the
+    // admission queue when shutdown lands.
+    let serve_cfg = ServeConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        max_queue: 64,
+        ..ServeConfig::default()
+    };
+    let handle = serve_engine(Box::new(engine), serve_cfg).unwrap();
+    let addr = handle.addr;
+
+    let n = 6usize;
+    let mut joins = Vec::new();
+    for t in 0..n {
+        let x = data[t].0.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.infer(&x).unwrap()
+        }));
+    }
+    // Wait until all N are admitted (not necessarily served), then shut
+    // down immediately — the drain contract must answer them all.
+    let t0 = std::time::Instant::now();
+    while handle.admitted() < n as u64 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "requests never reached the admission queue (admitted {})",
+            handle.admitted()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let metrics = handle.shutdown();
+
+    for j in joins {
+        let logits = j.join().unwrap();
+        assert_eq!(
+            logits.len(),
+            10,
+            "an admitted request was dropped at shutdown (empty reply)"
+        );
+    }
+    assert_eq!(metrics.requests as usize, n, "all admitted requests must be served");
+    let report = metrics.report(200e6);
+    assert!(report.wait_p99_ms >= 0.0);
+}
