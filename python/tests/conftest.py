@@ -1,8 +1,21 @@
 """pytest bootstrap: make `compile` and `tests.helpers` importable when
-running from the python/ directory or the repo root."""
+running from the python/ directory or the repo root, and skip (rather than
+fail collection of) the dependency-heavy modules when the optional test
+deps are absent locally. CI installs `hypothesis` and `jax` and runs the
+full suite (.github/workflows/ci.yml, `python` job)."""
 
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.dirname(__file__))
+
+# The kernel/model tests import jax (+ pallas, interpret mode) and
+# hypothesis at module scope; without these installed, collection itself
+# would error. Skipping collection keeps a bare `pytest` green locally —
+# test_environment.py always collects, so pytest never exits with
+# "no tests ran".
+MISSING_DEPS = [m for m in ("hypothesis", "jax") if importlib.util.find_spec(m) is None]
+
+collect_ignore = ["test_kernel.py", "test_model.py"] if MISSING_DEPS else []

@@ -1,0 +1,28 @@
+"""Dependency-free canary: always collectable, so the suite reports a
+green (possibly partially-skipped) run instead of pytest's exit code 5
+("no tests ran") when the optional deps are missing locally."""
+
+from conftest import MISSING_DEPS
+
+
+def test_suite_visibility():
+    if MISSING_DEPS:
+        print(
+            "optional deps missing (%s): kernel/model tests skipped — "
+            "`pip install hypothesis jax` for the full suite"
+            % ", ".join(MISSING_DEPS)
+        )
+    # The repo layout the sys.path bootstrap promises.
+    import os
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    assert os.path.isdir(os.path.join(here, "..", "compile"))
+
+
+def test_full_suite_collected_when_deps_present():
+    import conftest
+
+    if not MISSING_DEPS:
+        assert conftest.collect_ignore == []
+    else:
+        assert set(conftest.collect_ignore) == {"test_kernel.py", "test_model.py"}

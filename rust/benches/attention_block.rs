@@ -1,0 +1,98 @@
+//! Transformer encoder block on the macro pool: reload-bound vs
+//! compute-bound dynamic-weight configurations (DESIGN.md §10).
+//!
+//! Two shapes of the same MHA+FFN block:
+//! * **reload-bound** — short sequence: each dynamic grid swap amortizes
+//!   over few streamed rows, so weight-reload cycles dominate the
+//!   dynamic layers' device time;
+//! * **compute-bound** — longer sequence: the same swap amortizes over
+//!   many rows and MAC/readout cycles dominate.
+//!
+//! Emits one JSON row per configuration to `BENCH_attention.json` at the
+//! repo root (tokens/s, per-item forward time, the cost model's reload
+//! cycle share, and the observed reload count).
+//! Run: `cargo bench --bench attention_block` (CIMSIM_BENCH_FAST=1 trims).
+
+use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
+use cimsim::compiler::{compile, CompileOptions, Graph};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::nn::tensor::Tensor;
+use cimsim::nn::transformer::TransformerBlock;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+fn main() {
+    // CIMSIM_BENCH_FAST trims the Bench warmup/measure windows only: the
+    // workloads themselves are identical in fast and full-depth runs, so a
+    // row always measures exactly the configuration its fields describe
+    // (the regression gate keys rows on those fields).
+    let bench = Bench::default();
+    let workers = cimsim::util::threadpool::default_workers();
+    let mut rows = Vec::new();
+
+    // (label, d_model, heads, d_ff, seq): seq is the amortization lever.
+    let configs: &[(&str, usize, usize, usize, usize)] = &[
+        ("reload_bound", 32, 4, 64, 2),
+        ("compute_bound", 32, 4, 64, 24),
+    ];
+    for &(label, d_model, heads, d_ff, seq) in configs {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        cfg.noise.enabled = false;
+        let block = TransformerBlock::new(d_model, heads, d_ff, 42);
+        let graph = Graph::from_transformer_block(&block, seq);
+        let mut rng = Xoshiro256::seeded(9);
+        let mut rand_x = || {
+            Tensor::from_vec(
+                &[seq, d_model],
+                (0..seq * d_model).map(|_| rng.next_f32() - 0.5).collect(),
+            )
+        };
+        let cal: Vec<Tensor> = (0..2).map(|_| rand_x()).collect();
+        let opts = CompileOptions { workers, ..Default::default() };
+        let mut plan = compile(graph, &cal, &cfg, &opts).expect("compile block");
+        let report = plan.cost_report().clone();
+        let x = rand_x();
+
+        let m = bench.run(&format!("attention {label} seq={seq}"), || {
+            black_box(plan.run_batch(std::slice::from_ref(&x)).expect("forward"));
+        });
+        plan.reset_stats();
+        plan.run_batch(std::slice::from_ref(&x)).expect("forward");
+        let reloads: u64 = plan
+            .layers()
+            .iter()
+            .filter(|l| l.is_dynamic())
+            .map(|l| l.observed().weight_loads)
+            .sum();
+        let device_ms =
+            plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
+
+        println!(
+            "  {label}: {:.0} tok/s, reload share {:.1} %, {reloads} tile swaps/item",
+            seq as f64 / m.mean_s,
+            report.reload_cycle_fraction() * 100.0
+        );
+        rows.push(json_row(&[
+            JsonField::Str("bench", "attention_block"),
+            JsonField::Str("config", label),
+            JsonField::Int("d_model", d_model as i64),
+            JsonField::Int("heads", heads as i64),
+            JsonField::Int("d_ff", d_ff as i64),
+            JsonField::Int("seq", seq as i64),
+            JsonField::Int("workers", workers as i64),
+            JsonField::Int("dynamic_shards", report.n_dynamic_shards as i64),
+            JsonField::Int("reloads_per_item", reloads as i64),
+            JsonField::Num("forward_ms_per_item", m.mean_s * 1e3),
+            JsonField::Num("tok_per_s", seq as f64 / m.mean_s),
+            JsonField::Num("reload_cycle_frac", report.reload_cycle_fraction()),
+            JsonField::Num("est_device_ms_per_item", device_ms),
+            JsonField::Str("profile", build_profile()),
+            JsonField::Str("source", "measured"),
+        ]));
+    }
+
+    let path = bench_json_path("BENCH_attention.json");
+    std::fs::write(&path, format!("{}\n", rows.join("\n")))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

@@ -42,6 +42,17 @@ pub fn op_cycles_for_acts(cfg: &Config, acts: &[i64]) -> u64 {
     op_cycles(cfg, crate::cim::engine::mac_cycles(cfg, wmax))
 }
 
+/// Cycles to (re)program one core's weight array: the SRAM writes one full
+/// word-line row (16 engines × 4-b sign-magnitude cells) per clock cycle,
+/// so a core reload costs `rows` cycles. This is the reload-cycle primitive
+/// of the dynamic-weight execution path (DESIGN.md §10): a weight swap on a
+/// placed tile charges `weight_load_cycles` to the device total, exactly
+/// like a MAC op charges [`op_cycles`].
+#[inline]
+pub fn weight_load_cycles(cfg: &Config) -> u64 {
+    cfg.mac.rows as u64
+}
+
 /// Seconds for `cycles` at the configured clock.
 #[inline]
 pub fn cycles_to_seconds(cfg: &Config, cycles: u64) -> f64 {

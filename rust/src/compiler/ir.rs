@@ -16,6 +16,7 @@ use crate::nn::ops::{conv2d, global_avg_pool};
 use crate::nn::quant::QuantParams;
 use crate::nn::resnet::{ConvLayer, ResNet20};
 use crate::nn::tensor::Tensor;
+use crate::nn::transformer::TransformerBlock;
 
 /// Index of a node in [`Graph::nodes`].
 pub type NodeId = usize;
@@ -46,8 +47,20 @@ pub enum Op {
         w_params: Option<QuantParams>,
     },
     /// Fully-connected layer; `w_cols` is `[K][N]` (column per output).
-    /// Same `w_params` convention as `Conv2d`.
+    /// Accepts a `[K]` vector or a `[S][K]` row matrix (applied row-wise —
+    /// the transformer token dimension). Same `w_params` convention as
+    /// `Conv2d`.
     Linear { w_cols: Tensor, bias: Vec<f32>, w_params: Option<QuantParams> },
+    /// Runtime×runtime matrix product (dynamic weights, DESIGN.md §10):
+    /// input 0 is the `Quantize`d streamed operand `[S][K]`, input 1 the
+    /// float operand that is re-quantized per call and written into the
+    /// placed tiles — `[N][K]` with `transpose_b` (Q·Kᵀ), `[K][N]` without
+    /// (attn·V). Output `[S][N]`.
+    MatMul { transpose_b: bool },
+    /// Softmax over the last dimension (row-wise on rank-2 values).
+    Softmax,
+    /// LayerNorm over the last dimension: `(x−μ)/√(σ²+eps)·γ + β`.
+    LayerNorm { gamma: Vec<f32>, beta: Vec<f32>, eps: f32 },
     /// Elementwise max(x, 0).
     Relu,
     /// Elementwise residual add of two equal-shaped values.
@@ -61,7 +74,7 @@ impl Op {
     pub fn arity(&self) -> usize {
         match self {
             Op::Input { .. } => 0,
-            Op::Add => 2,
+            Op::Add | Op::MatMul { .. } => 2,
             _ => 1,
         }
     }
@@ -74,6 +87,9 @@ impl Op {
             Op::Dequantize { .. } => "dequantize",
             Op::Conv2d { .. } => "conv",
             Op::Linear { .. } => "linear",
+            Op::MatMul { .. } => "matmul",
+            Op::Softmax => "softmax",
+            Op::LayerNorm { .. } => "layernorm",
             Op::Relu => "relu",
             Op::Add => "add",
             Op::GlobalAvgPool => "gap",
@@ -174,13 +190,56 @@ impl Graph {
                 Op::Linear { w_cols, bias, .. } => {
                     let s = at(0);
                     let (k, n) = (w_cols.shape[0], w_cols.shape[1]);
-                    if s.len() != 1 || s[0] != k {
-                        return Err(err(format!("linear expects [{k}], got {s:?}")));
-                    }
                     if bias.len() != n {
                         return Err(err(format!("linear bias {} vs N {n}", bias.len())));
                     }
-                    vec![n]
+                    match s.as_slice() {
+                        [kk] if *kk == k => vec![n],
+                        [rows, kk] if *kk == k => vec![*rows, n],
+                        _ => {
+                            return Err(err(format!(
+                                "linear expects [{k}] or [S, {k}], got {s:?}"
+                            )));
+                        }
+                    }
+                }
+                Op::MatMul { transpose_b } => {
+                    let (a, b) = (at(0), at(1));
+                    if a.len() != 2 || b.len() != 2 {
+                        return Err(err(format!("matmul expects rank-2, got {a:?} × {b:?}")));
+                    }
+                    let k = a[1];
+                    let n = if *transpose_b {
+                        if b[1] != k {
+                            return Err(err(format!("matmul inner dims {a:?} × {b:?}ᵀ")));
+                        }
+                        b[0]
+                    } else {
+                        if b[0] != k {
+                            return Err(err(format!("matmul inner dims {a:?} × {b:?}")));
+                        }
+                        b[1]
+                    };
+                    vec![a[0], n]
+                }
+                Op::Softmax => {
+                    let s = at(0);
+                    if s.is_empty() || s.len() > 2 {
+                        return Err(err(format!("softmax expects rank 1 or 2, got {s:?}")));
+                    }
+                    s.clone()
+                }
+                Op::LayerNorm { gamma, beta, .. } => {
+                    let s = at(0);
+                    let cols = *s.last().unwrap_or(&0);
+                    if s.is_empty() || s.len() > 2 || gamma.len() != cols || beta.len() != cols
+                    {
+                        return Err(err(format!(
+                            "layernorm γ/β length {} vs value shape {s:?}",
+                            gamma.len()
+                        )));
+                    }
+                    s.clone()
                 }
                 Op::Add => {
                     if at(0) != at(1) {
@@ -234,18 +293,61 @@ impl Graph {
                 Op::Linear { w_cols, bias, .. } => {
                     let t = at(0);
                     let (k, n) = (w_cols.shape[0], w_cols.shape[1]);
-                    if t.data.len() != k {
-                        return Err(err(format!("linear input {} vs K {k}", t.data.len())));
+                    if *t.shape.last().unwrap_or(&0) != k || t.rank() > 2 {
+                        return Err(err(format!("linear input {:?} vs K {k}", t.shape)));
                     }
-                    let mut y = vec![0f32; n];
-                    for (nn, yv) in y.iter_mut().enumerate() {
-                        let mut acc = 0f32;
-                        for (kk, &xv) in t.data.iter().enumerate() {
-                            acc += xv * w_cols.at2(kk, nn);
+                    let rows = t.data.len() / k;
+                    let mut y = Vec::with_capacity(rows * n);
+                    for row in t.data.chunks(k) {
+                        for nn in 0..n {
+                            let mut acc = 0f32;
+                            for (kk, &xv) in row.iter().enumerate() {
+                                acc += xv * w_cols.at2(kk, nn);
+                            }
+                            y.push(acc + bias[nn]);
                         }
-                        *yv = acc + bias[nn];
                     }
-                    Tensor::from_vec(&[n], y)
+                    if t.rank() == 1 {
+                        Tensor::from_vec(&[n], y)
+                    } else {
+                        Tensor::from_vec(&[rows, n], y)
+                    }
+                }
+                Op::MatMul { transpose_b } => {
+                    let (a, b) = (at(0), at(1));
+                    if a.rank() != 2 || b.rank() != 2 {
+                        return Err(err(format!(
+                            "matmul expects rank-2, got {:?} × {:?}",
+                            a.shape, b.shape
+                        )));
+                    }
+                    let (s, k) = (a.shape[0], a.shape[1]);
+                    let n = if *transpose_b { b.shape[0] } else { b.shape[1] };
+                    let inner_ok =
+                        if *transpose_b { b.shape[1] == k } else { b.shape[0] == k };
+                    if !inner_ok {
+                        return Err(err(format!(
+                            "matmul inner dims {:?} × {:?} (transpose_b={transpose_b})",
+                            a.shape, b.shape
+                        )));
+                    }
+                    let mut y = Vec::with_capacity(s * n);
+                    for i in 0..s {
+                        for j in 0..n {
+                            let mut acc = 0f32;
+                            for kk in 0..k {
+                                let bv =
+                                    if *transpose_b { b.at2(j, kk) } else { b.at2(kk, j) };
+                                acc += a.at2(i, kk) * bv;
+                            }
+                            y.push(acc);
+                        }
+                    }
+                    Tensor::from_vec(&[s, n], y)
+                }
+                Op::Softmax => crate::nn::ops::softmax_last_dim(at(0)),
+                Op::LayerNorm { gamma, beta, eps } => {
+                    crate::nn::ops::layer_norm(at(0), gamma, beta, *eps)
                 }
                 Op::Relu => at(0).clone().map(|v| v.max(0.0)),
                 Op::Add => {
@@ -350,6 +452,109 @@ impl Graph {
                 w_params: None,
             },
             &[q],
+        );
+        g
+    }
+
+    /// A transformer encoder block (H-head self-attention + FFN, post-norm)
+    /// as a calibrated graph over `[seq][d_model]` values — the
+    /// dynamic-weight workload (DESIGN.md §10).
+    ///
+    /// Every weight-stationary projection (`Wq/Wk/Wv`, per-head `Wo`, the
+    /// FFN) lowers to its own tile grid; the two act×act products per head
+    /// (`Q·Kᵀ` and `attn·V`) become [`Op::MatMul`] nodes whose right
+    /// operand is re-quantized and reloaded into dedicated tiles per call.
+    /// The concat-free output projection sums per-head `ctx_i · Wo_i`
+    /// (exactly `concat(ctx)·W_O`; see [`TransformerBlock`]). The `1/√d_h`
+    /// score scale rides on a bias-free [`Op::Dequantize`].
+    pub fn from_transformer_block(block: &TransformerBlock, seq: usize) -> Self {
+        use crate::nn::transformer::LN_EPS;
+        let (d, h, dh) = (block.d_model, block.heads, block.d_head());
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![seq, d] }, &[]);
+        let quant = |g: &mut Graph, name: String, src: NodeId| -> NodeId {
+            g.add(name, Op::Quantize { params: None }, &[src])
+        };
+        let mut attn = None;
+        for i in 0..h {
+            let p = format!("h{i}");
+            let linear = |w: &Tensor, b: &[f32]| Op::Linear {
+                w_cols: w.clone(),
+                bias: b.to_vec(),
+                w_params: None,
+            };
+            let qq = quant(&mut g, format!("{p}.q.quant"), x);
+            let qi = g.add(format!("{p}.q"), linear(&block.wq[i], &block.bq[i]), &[qq]);
+            let kq = quant(&mut g, format!("{p}.k.quant"), x);
+            let ki = g.add(format!("{p}.k"), linear(&block.wk[i], &block.bk[i]), &[kq]);
+            let vq = quant(&mut g, format!("{p}.v.quant"), x);
+            let vi = g.add(format!("{p}.v"), linear(&block.wv[i], &block.bv[i]), &[vq]);
+
+            let sq = quant(&mut g, format!("{p}.score.quant"), qi);
+            let scores =
+                g.add(format!("{p}.score"), Op::MatMul { transpose_b: true }, &[sq, ki]);
+            let scaled = g.add(
+                format!("{p}.scale"),
+                Op::Dequantize { scale: 1.0 / (dh as f32).sqrt(), bias: vec![] },
+                &[scores],
+            );
+            let probs = g.add(format!("{p}.softmax"), Op::Softmax, &[scaled]);
+            let pq = quant(&mut g, format!("{p}.ctx.quant"), probs);
+            let ctx = g.add(format!("{p}.ctx"), Op::MatMul { transpose_b: false }, &[pq, vi]);
+
+            let oq = quant(&mut g, format!("{p}.out.quant"), ctx);
+            // The shared output bias is applied once (on head 0's slice).
+            let ob = if i == 0 { block.b_o.clone() } else { vec![0.0; d] };
+            let oi = g.add(
+                format!("{p}.out"),
+                Op::Linear { w_cols: block.wo[i].clone(), bias: ob, w_params: None },
+                &[oq],
+            );
+            attn = Some(match attn {
+                None => oi,
+                Some(acc) => g.add(format!("attn.sum{i}"), Op::Add, &[acc, oi]),
+            });
+        }
+        let res1 = g.add("res1", Op::Add, &[x, attn.expect("at least one head")]);
+        let ln1 = g.add(
+            "ln1",
+            Op::LayerNorm {
+                gamma: block.ln1_gamma.clone(),
+                beta: block.ln1_beta.clone(),
+                eps: LN_EPS,
+            },
+            &[res1],
+        );
+        let fq = quant(&mut g, "ffn1.quant".into(), ln1);
+        let f1 = g.add(
+            "ffn1",
+            Op::Linear {
+                w_cols: block.w_ff1.clone(),
+                bias: block.b_ff1.clone(),
+                w_params: None,
+            },
+            &[fq],
+        );
+        let f1r = g.add("ffn1.relu", Op::Relu, &[f1]);
+        let f2q = quant(&mut g, "ffn2.quant".into(), f1r);
+        let f2 = g.add(
+            "ffn2",
+            Op::Linear {
+                w_cols: block.w_ff2.clone(),
+                bias: block.b_ff2.clone(),
+                w_params: None,
+            },
+            &[f2q],
+        );
+        let res2 = g.add("res2", Op::Add, &[ln1, f2]);
+        g.add(
+            "ln2",
+            Op::LayerNorm {
+                gamma: block.ln2_gamma.clone(),
+                beta: block.ln2_beta.clone(),
+                eps: LN_EPS,
+            },
+            &[res2],
         );
         g
     }
@@ -483,6 +688,72 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    /// The transformer graph's float eval equals the block's own float
+    /// forward (including the concat-free head sum), and the new ops infer
+    /// the right shapes.
+    #[test]
+    fn transformer_graph_matches_block_forward() {
+        let block = TransformerBlock::new(16, 2, 24, 5);
+        let seq = 4;
+        let g = Graph::from_transformer_block(&block, seq);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![seq, 16]);
+        // 2 MatMul nodes per head, one Softmax per head.
+        let mm = g.nodes.iter().filter(|n| matches!(n.op, Op::MatMul { .. })).count();
+        assert_eq!(mm, 4);
+        let sm = g.nodes.iter().filter(|n| matches!(n.op, Op::Softmax)).count();
+        assert_eq!(sm, 2);
+        let mut rng = crate::util::rng::Xoshiro256::seeded(9);
+        let x = Tensor::from_vec(
+            &[seq, 16],
+            (0..seq * 16).map(|_| crate::util::rng::Rng::next_f32(&mut rng) - 0.5).collect(),
+        );
+        let vals = g.eval_float(&x).unwrap();
+        let want = block.forward(&x);
+        for (a, b) in vals[g.output()].data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matmul_and_norm_shape_errors_are_caught() {
+        // Mismatched inner dims.
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![3, 4] }, &[]);
+        let q = g.add("q", Op::Quantize { params: None }, &[x]);
+        g.add("mm", Op::MatMul { transpose_b: false }, &[q, x]);
+        // [3][4] × [3][4] without transpose: inner 4 vs 3 mismatch.
+        assert!(g.infer_shapes().is_err());
+
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![3, 4] }, &[]);
+        g.add("ln", Op::LayerNorm { gamma: vec![1.0; 3], beta: vec![0.0; 3], eps: 1e-5 }, &[x]);
+        // γ/β sized for the wrong dimension.
+        assert!(g.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn rowwise_linear_infers_and_evaluates() {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![3, 4] }, &[]);
+        let q = g.add("q", Op::Quantize { params: None }, &[x]);
+        g.add(
+            "fc",
+            Op::Linear {
+                w_cols: Tensor::from_vec(&[4, 2], (0..8).map(|i| i as f32 * 0.1).collect()),
+                bias: vec![1.0, -1.0],
+                w_params: None,
+            },
+            &[q],
+        );
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![3, 2]);
+        let x = Tensor::from_vec(&[3, 4], (0..12).map(|i| i as f32).collect());
+        let vals = g.eval_float(&x).unwrap();
+        // Row 0 = [0,1,2,3]: col 0 = Σ i·w[i][0] = 0·0 + 1·.2 + 2·.4 + 3·.6 = 2.8.
+        assert!((vals[g.output()].at2(0, 0) - (2.8 + 1.0)).abs() < 1e-5);
     }
 
     #[test]

@@ -40,11 +40,16 @@ impl From<crate::cim::MacroError> for CompileError {
     }
 }
 
-/// Per-node activation calibration: the maximum value seen at each
-/// data-calibrated `Quantize` boundary over the calibration set.
+/// Per-node activation calibration: the value range seen at each
+/// data-calibrated `Quantize` boundary over the calibration set. Boundaries
+/// that ever go negative (transformer residual streams, Q/K projections)
+/// lower to the signed-activation format ([`QuantParams::signed_acts`],
+/// DESIGN.md §10); non-negative ones keep the paper's unsigned post-ReLU
+/// format.
 #[derive(Clone, Debug)]
 pub struct Calibration {
     act_max: Vec<f32>,
+    act_min: Vec<f32>,
 }
 
 impl Calibration {
@@ -53,10 +58,26 @@ impl Calibration {
     pub fn act_max(&self, node: NodeId) -> f32 {
         self.act_max[node].max(1e-6)
     }
+
+    /// The calibrated activation minimum (≤ 0; exactly 0 for post-ReLU
+    /// boundaries).
+    pub fn act_min(&self, node: NodeId) -> f32 {
+        self.act_min[node].min(0.0)
+    }
+
+    /// The quantization params this boundary calibrates to.
+    pub fn params(&self, node: NodeId, act_bits: u32) -> QuantParams {
+        if self.act_min(node) < 0.0 {
+            let max_abs = self.act_max(node).max(-self.act_min(node));
+            QuantParams::signed_acts(max_abs, act_bits)
+        } else {
+            QuantParams::unsigned(self.act_max(node), act_bits)
+        }
+    }
 }
 
 /// Run the float graph over `inputs` and record each `Quantize(None)`
-/// node's input maximum. Graphs whose quantize params are all explicit
+/// node's input range. Graphs whose quantize params are all explicit
 /// (e.g. [`Graph::from_deployment`]) calibrate fine on an empty set.
 pub fn calibrate(graph: &Graph, inputs: &[Tensor]) -> Result<Calibration, CompileError> {
     let needs_data = graph
@@ -69,6 +90,7 @@ pub fn calibrate(graph: &Graph, inputs: &[Tensor]) -> Result<Calibration, Compil
         ));
     }
     let mut act_max = vec![0f32; graph.nodes.len()];
+    let mut act_min = vec![0f32; graph.nodes.len()];
     for x in inputs {
         let vals = graph.eval_float(x).map_err(CompileError::Structure)?;
         for (id, node) in graph.nodes.iter().enumerate() {
@@ -78,11 +100,14 @@ pub fn calibrate(graph: &Graph, inputs: &[Tensor]) -> Result<Calibration, Compil
                     if v > act_max[id] {
                         act_max[id] = v;
                     }
+                    if v < act_min[id] {
+                        act_min[id] = v;
+                    }
                 }
             }
         }
     }
-    Ok(Calibration { act_max })
+    Ok(Calibration { act_max, act_min })
 }
 
 /// What a lowered cim layer computes around its matmul.
@@ -91,11 +116,26 @@ pub enum LayerKind {
     /// im2col convolution: per-position rows through the tiled linear, back
     /// to CHW.
     Conv { kh: usize, kw: usize, stride: usize, pad: usize, out_c: usize },
-    /// One activation vector per batch item.
+    /// One activation vector per batch item (`[K] → [N]`).
     Linear,
+    /// Row-wise linear over a `[S][K]` value → `[S][N]` (the transformer
+    /// token dimension; `seq` is static from shape inference).
+    Rowwise { seq: usize },
+    /// Dynamic-weight act×act product (DESIGN.md §10): the right operand is
+    /// re-quantized and reloaded into the placed tiles once per item before
+    /// that item's `seq` rows stream.
+    MatMul { seq: usize, transpose_b: bool },
 }
 
-/// A `Conv2d`/`Linear` node lowered to a tiled macro layer, not yet placed.
+impl LayerKind {
+    /// Whether the layer's weights are runtime tensors (reload per call).
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, LayerKind::MatMul { .. })
+    }
+}
+
+/// A `Conv2d`/`Linear`/`MatMul` node lowered to a tiled macro layer, not
+/// yet placed.
 #[derive(Clone, Debug)]
 pub struct LoweredLayer {
     /// The compute node this lowers.
@@ -103,14 +143,19 @@ pub struct LoweredLayer {
     /// The node whose value feeds the layer (the quantize node's input —
     /// quantization happens inside the layer step).
     pub src: NodeId,
+    /// The runtime-weight operand node (dynamic `MatMul` layers only).
+    pub b_src: Option<NodeId>,
     pub name: String,
     pub kind: LayerKind,
     /// Activation quantization applied to the layer's input rows.
     pub qparams: QuantParams,
     /// The tiled integer layer (weights quantized, dequant policy per
-    /// `w_params`: fused when calibrated, unit when explicit).
+    /// `w_params`: fused when calibrated, unit when explicit). For dynamic
+    /// layers this is the zero staging grid — shape only, values swapped
+    /// per call.
     pub lin: CimLinear,
-    /// Activation vectors one network input generates (conv: `oh·ow`).
+    /// Activation vectors one network input generates (conv: `oh·ow`;
+    /// row-wise linear and matmul: `seq`).
     pub vectors_per_input: usize,
 }
 
@@ -124,7 +169,7 @@ pub fn lower(
 ) -> Result<Vec<LoweredLayer>, CompileError> {
     let mut layers = Vec::new();
     for (id, node) in graph.nodes.iter().enumerate() {
-        let (w_cols, bias, w_params, kind, vectors) = match &node.op {
+        let (w_cols, bias, w_params, kind, vectors, b_src) = match &node.op {
             Op::Conv2d { w, bias, stride, pad, w_params } => {
                 let out_shape = &shapes[id];
                 (
@@ -139,19 +184,50 @@ pub fn lower(
                         out_c: w.shape[0],
                     },
                     out_shape[1] * out_shape[2],
+                    None,
                 )
             }
             Op::Linear { w_cols, bias, w_params } => {
-                (w_cols.clone(), bias.clone(), *w_params, LayerKind::Linear, 1)
+                // The quantize boundary's shape equals its input's.
+                let in_shape = &shapes[node.inputs[0]];
+                let (kind, vectors) = if in_shape.len() == 2 {
+                    (LayerKind::Rowwise { seq: in_shape[0] }, in_shape[0])
+                } else {
+                    (LayerKind::Linear, 1)
+                };
+                (w_cols.clone(), bias.clone(), *w_params, kind, vectors, None)
+            }
+            Op::MatMul { transpose_b } => {
+                let b = node.inputs[1];
+                if matches!(graph.nodes[b].op, Op::Quantize { .. }) {
+                    return Err(CompileError::Structure(format!(
+                        "`{}`: the matmul weight operand is re-quantized per call and \
+                         must not consume a Quantize node",
+                        node.name
+                    )));
+                }
+                let out_shape = &shapes[id];
+                let (seq, n) = (out_shape[0], out_shape[1]);
+                let k = shapes[b][if *transpose_b { 1 } else { 0 }];
+                // Zero staging grid: shape fixes the tile geometry; values
+                // (and the per-call weight scale) swap at run time.
+                (
+                    Tensor::zeros(&[k, n]),
+                    vec![0.0; n],
+                    None,
+                    LayerKind::MatMul { seq, transpose_b: *transpose_b },
+                    seq,
+                    Some(b),
+                )
             }
             _ => continue,
         };
 
         let q = node.inputs[0];
         let qparams = match &graph.nodes[q].op {
-            Op::Quantize { params } => params.unwrap_or_else(|| {
-                QuantParams::unsigned(cal.act_max(q), cfg.mac.act_bits)
-            }),
+            Op::Quantize { params } => {
+                params.unwrap_or_else(|| cal.params(q, cfg.mac.act_bits))
+            }
             other => {
                 return Err(CompileError::Structure(format!(
                     "`{}` must consume a Quantize node, found {}",
@@ -187,6 +263,7 @@ pub fn lower(
         layers.push(LoweredLayer {
             node: id,
             src: graph.nodes[q].inputs[0],
+            b_src,
             name: node.name.clone(),
             kind,
             qparams,
@@ -256,11 +333,75 @@ mod tests {
             &[x],
         );
         let shapes = g.infer_shapes().unwrap();
-        let cal = Calibration { act_max: vec![0.0; g.nodes.len()] };
+        let n = g.nodes.len();
+        let cal = Calibration { act_max: vec![0.0; n], act_min: vec![0.0; n] };
         assert!(matches!(
             lower(&g, &shapes, &cal, &Config::default()),
             Err(CompileError::Structure(_))
         ));
+    }
+
+    /// Transformer lowering: per-head weight-stationary projections plus
+    /// two dynamic `MatMul` layers per head; signed boundaries (the
+    /// residual stream, Q values) calibrate to the signed-acts format while
+    /// softmax probabilities stay unsigned.
+    #[test]
+    fn transformer_lowering_kinds_and_signed_boundaries() {
+        use crate::nn::transformer::TransformerBlock;
+        use crate::util::rng::{Rng, Xoshiro256};
+        let block = TransformerBlock::new(16, 2, 24, 3);
+        let seq = 4;
+        let g = Graph::from_transformer_block(&block, seq);
+        let shapes = g.infer_shapes().unwrap();
+        let mut rng = Xoshiro256::seeded(2);
+        let cal_x: Vec<Tensor> = (0..3)
+            .map(|_| {
+                Tensor::from_vec(
+                    &[seq, 16],
+                    (0..seq * 16).map(|_| rng.next_f32() - 0.5).collect(),
+                )
+            })
+            .collect();
+        let cal = calibrate(&g, &cal_x).unwrap();
+        let cfg = Config::default();
+        let layers = lower(&g, &shapes, &cal, &cfg).unwrap();
+        // Per head: q/k/v/out projections + 2 matmuls; plus ffn1/ffn2.
+        assert_eq!(layers.len(), 2 * 6 + 2);
+        let dynamic: Vec<_> = layers.iter().filter(|l| l.kind.is_dynamic()).collect();
+        assert_eq!(dynamic.len(), 4);
+        for l in &dynamic {
+            assert!(l.b_src.is_some());
+            assert_eq!(l.vectors_per_input, seq);
+        }
+        // Q·Kᵀ staging grid is [d_head][seq]; attn·V is [seq][d_head].
+        let score = layers.iter().find(|l| l.name == "h0.score").unwrap();
+        assert!(matches!(score.kind, LayerKind::MatMul { seq: 4, transpose_b: true }));
+        assert_eq!((score.lin.k, score.lin.n), (8, seq));
+        let ctx = layers.iter().find(|l| l.name == "h0.ctx").unwrap();
+        assert!(matches!(ctx.kind, LayerKind::MatMul { seq: 4, transpose_b: false }));
+        assert_eq!((ctx.lin.k, ctx.lin.n), (seq, 8));
+        // The residual-stream boundary sees negatives → signed acts
+        // (q_min = −8); softmax probabilities stay unsigned (q_min = 0).
+        let proj = layers.iter().find(|l| l.name == "h0.q").unwrap();
+        assert_eq!(proj.qparams.q_min, -8);
+        assert!(matches!(proj.kind, LayerKind::Rowwise { seq: 4 }));
+        assert_eq!(ctx.qparams.q_min, 0);
+        // Weight operand behind a Quantize is rejected.
+        let mut bad = Graph::new();
+        let x = bad.add("input", Op::Input { shape: vec![2, 4] }, &[]);
+        let qa = bad.add("qa", Op::Quantize { params: None }, &[x]);
+        let qb = bad.add("qb", Op::Quantize { params: None }, &[x]);
+        bad.add("mm", Op::MatMul { transpose_b: true }, &[qa, qb]);
+        let shapes = bad.infer_shapes().unwrap();
+        assert!(matches!(
+            lower(&bad, &shapes, &cal_tiny(&bad), &cfg),
+            Err(CompileError::Structure(_))
+        ));
+    }
+
+    fn cal_tiny(g: &Graph) -> Calibration {
+        let n = g.nodes.len();
+        Calibration { act_max: vec![1.0; n], act_min: vec![-1.0; n] }
     }
 
     #[test]

@@ -16,19 +16,25 @@
 //! ```
 //!
 //! * **Ingest** — [`Graph::from_mlp`], [`Graph::from_resnet20`] build
-//!   calibrated float graphs; [`Graph::from_deployment`] builds the
-//!   unit-scale graph of a post-training-quantized MLP bundle (the
-//!   arithmetic of `MlpDeployment::run_native`, expression for expression).
+//!   calibrated float graphs; [`Graph::from_transformer_block`] builds an
+//!   MHA+FFN encoder block (the dynamic-weight workload, DESIGN.md §10);
+//!   [`Graph::from_deployment`] builds the unit-scale graph of a
+//!   post-training-quantized MLP bundle (the arithmetic of
+//!   `MlpDeployment::run_native`, expression for expression).
 //! * **Lower** — every `Quantize → Conv2d/Linear` pair becomes a tiled
 //!   [`crate::mapping::executor::CimLinear`] (convs via the shared im2col
 //!   path), with activation ranges calibrated by running the float graph
-//!   over a calibration set.
+//!   over a calibration set; boundaries that go negative calibrate to the
+//!   signed-activation zero-point format. `Quantize → MatMul` pairs become
+//!   *dynamic-weight* tiles: the right operand is re-quantized per call
+//!   and reloaded into the placed grid (DESIGN.md §10).
 //! * **Place** — the pool is pre-sized to the network's exact shard count,
 //!   then [`place::Placer`] packs each tile onto the shard with the least
 //!   accumulated estimated cycles that still has a free core (growing only
 //!   as a fallback), using [`crate::cim::timing::op_cycles`] +
-//!   [`crate::energy::core_op_energy`] for the estimates; [`CostReport`]
-//!   is the per-layer breakdown.
+//!   [`crate::energy::core_op_energy`] for the estimates; dynamic layers
+//!   get dedicated shards ([`crate::pipeline::DynamicLinear`]) and their
+//!   reload cycles/energy are broken out in [`CostReport`].
 //! * **Execute** — [`CompiledPlan::run_batch`] streams batches through the
 //!   resident pool via [`crate::pipeline::BatchExecutor`]; noise-free the
 //!   result is bit-identical to the sequential per-layer macro path. The

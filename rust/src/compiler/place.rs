@@ -21,10 +21,11 @@
 //! shards and a board of dies ends up load-balanced.
 
 use crate::cim::engine::OpStats;
-use crate::cim::timing::{self, op_cycles_for_acts};
+use crate::cim::timing::{self, op_cycles_for_acts, weight_load_cycles};
 use crate::config::Config;
-use crate::energy::core_op_energy;
+use crate::energy::{core_op_energy, weight_load_energy};
 use crate::mapping::executor::CimLinear;
+use crate::pipeline::dynamic::DynamicLinear;
 use crate::pipeline::pool::{MacroPool, PlacedLinear};
 use crate::util::table::Table;
 
@@ -144,10 +145,19 @@ pub struct LayerCost {
     pub n_ct: usize,
     /// Activation vectors one network input streams through the layer.
     pub vectors_per_input: usize,
-    /// Worst-case device cycles per network input (serial-device total).
+    /// Worst-case *compute* device cycles per network input (serial-device
+    /// total, MAC + readout only).
     pub est_cycles_per_input: u64,
-    /// Profile-estimated energy per network input, fJ.
+    /// Profile-estimated compute energy per network input, fJ.
     pub est_energy_fj_per_input: f64,
+    /// Weight-reload cycles per network input (dynamic layers swap their
+    /// whole tile grid once per item; 0 for weight-stationary layers) —
+    /// the reload-vs-compute breakout of DESIGN.md §10.
+    pub est_reload_cycles_per_input: u64,
+    /// Weight-reload (SRAM write) energy per network input, fJ.
+    pub est_reload_energy_fj_per_input: f64,
+    /// Dynamic-weight layer (per-call reload on dedicated shards).
+    pub dynamic: bool,
     /// Distinct shards this layer's tiles landed on.
     pub shards_used: usize,
 }
@@ -163,35 +173,69 @@ impl LayerCost {
 pub struct CostReport {
     pub layers: Vec<LayerCost>,
     pub total_tiles: usize,
+    /// Shards of the shared weight-stationary pool.
     pub n_shards: usize,
+    /// Dedicated shards owned by dynamic-weight layers (DESIGN.md §10).
+    pub n_dynamic_shards: usize,
     /// Weight SRAM held resident, Kb.
     pub weight_kb: f64,
 }
 
 impl CostReport {
+    /// Compute (MAC + readout) cycles per input, reload excluded.
     pub fn total_est_cycles_per_input(&self) -> u64 {
         self.layers.iter().map(|l| l.est_cycles_per_input).sum()
     }
 
+    /// Weight-reload cycles per input — the dynamic-weight tax.
+    pub fn total_est_reload_cycles_per_input(&self) -> u64 {
+        self.layers.iter().map(|l| l.est_reload_cycles_per_input).sum()
+    }
+
+    /// Total estimated energy per input, **reload (SRAM write) energy
+    /// included** — unlike [`CostReport::total_est_cycles_per_input`],
+    /// which stays compute-only and pairs with
+    /// [`CostReport::total_est_reload_cycles_per_input`]. Energy has no
+    /// such split accessor because every consumer (tables, benches) wants
+    /// the all-in figure; derive time from compute + reload cycles when
+    /// forming efficiency ratios.
     pub fn total_est_energy_fj_per_input(&self) -> f64 {
-        self.layers.iter().map(|l| l.est_energy_fj_per_input).sum()
+        self.layers
+            .iter()
+            .map(|l| l.est_energy_fj_per_input + l.est_reload_energy_fj_per_input)
+            .sum()
+    }
+
+    /// Fraction of estimated device cycles spent reloading weights —
+    /// reload-bound vs compute-bound in one number.
+    pub fn reload_cycle_fraction(&self) -> f64 {
+        let reload = self.total_est_reload_cycles_per_input() as f64;
+        let total = reload + self.total_est_cycles_per_input() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            reload / total
+        }
     }
 
     /// Render the per-layer breakdown (+ totals row) as a table; device
-    /// time from the configured clock.
+    /// time from the configured clock. Reload cycles (dynamic-weight
+    /// layers) are broken out from compute cycles.
     pub fn table(&self, cfg: &Config) -> Table {
         let ms = |cycles: u64| cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
         let mut t = Table::new(
             &format!(
-                "compiled plan: {} layers, {} tiles on {} shards ({:.0} Kb resident)",
+                "compiled plan: {} layers, {} tiles on {} shards (+{} dedicated dynamic) \
+                 ({:.0} Kb resident)",
                 self.layers.len(),
                 self.total_tiles,
                 self.n_shards,
+                self.n_dynamic_shards,
                 self.weight_kb
             ),
             &[
                 "layer", "kind", "KxN", "tiles", "shards", "vec/in", "est kcyc/in",
-                "est ms/in", "est uJ/in",
+                "rld kcyc/in", "est ms/in", "est uJ/in",
             ],
         );
         for l in &self.layers {
@@ -203,11 +247,16 @@ impl CostReport {
                 l.shards_used.to_string(),
                 l.vectors_per_input.to_string(),
                 format!("{:.1}", l.est_cycles_per_input as f64 / 1e3),
-                format!("{:.3}", ms(l.est_cycles_per_input)),
-                format!("{:.3}", l.est_energy_fj_per_input * 1e-9),
+                format!("{:.1}", l.est_reload_cycles_per_input as f64 / 1e3),
+                format!("{:.3}", ms(l.est_cycles_per_input + l.est_reload_cycles_per_input)),
+                format!(
+                    "{:.3}",
+                    (l.est_energy_fj_per_input + l.est_reload_energy_fj_per_input) * 1e-9
+                ),
             ]);
         }
         let total_cycles = self.total_est_cycles_per_input();
+        let total_reload = self.total_est_reload_cycles_per_input();
         t.row(&[
             "TOTAL".into(),
             "-".into(),
@@ -216,7 +265,8 @@ impl CostReport {
             self.n_shards.to_string(),
             "-".into(),
             format!("{:.1}", total_cycles as f64 / 1e3),
-            format!("{:.3}", ms(total_cycles)),
+            format!("{:.1}", total_reload as f64 / 1e3),
+            format!("{:.3}", ms(total_cycles + total_reload)),
             format!("{:.3}", self.total_est_energy_fj_per_input() * 1e-9),
         ]);
         t
@@ -310,10 +360,58 @@ impl Placer {
             vectors_per_input,
             est_cycles_per_input: vectors_per_input as u64 * n_rt as u64 * n_ct as u64 * op_cycles,
             est_energy_fj_per_input: vectors_per_input as f64 * est_energy_per_vector,
+            est_reload_cycles_per_input: 0,
+            est_reload_energy_fj_per_input: 0.0,
+            dynamic: false,
             shards_used: shards_used.len(),
         };
         let placed = PlacedLinear::place_with(lin, pool, slots)?;
         Ok((placed, cost))
+    }
+
+    /// Place a dynamic-weight layer (DESIGN.md §10): its tile grid goes on
+    /// **dedicated shards** — a fresh [`DynamicLinear`] mini-pool whose
+    /// fabrication draws as dies `fab_base…` — because a per-call reload
+    /// must never invalidate a co-resident weight-stationary tile, and
+    /// reload-heavy tiles would otherwise distort the shared board's
+    /// estimated-cycle balance. Costs: the compute estimate assumes
+    /// half-scale weights (the operand is unknown until run time); the
+    /// reload estimate charges one full grid swap per input
+    /// (`tiles × weight_load_cycles` + the SRAM write energy).
+    pub fn place_dynamic_layer(
+        &mut self,
+        cfg: &Config,
+        lin: CimLinear,
+        name: &str,
+        vectors_per_input: usize,
+        fab_base: usize,
+    ) -> Result<(DynamicLinear, LayerCost), crate::cim::MacroError> {
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        let tiles = (n_rt * n_ct) as u64;
+        let op_cycles = static_op_cycles(cfg);
+        // Unknown runtime weights: assume mean |w| = w_mag_max/2 per cell.
+        let sum_abs_w =
+            cfg.mac.rows as f64 * cfg.mac.engines as f64 * cfg.mac.w_mag_max() as f64 / 2.0;
+        let st = estimated_op_stats(cfg, &self.profile, sum_abs_w);
+        let est_energy_per_vector = tiles as f64 * core_op_energy(cfg, &st).total_fj();
+        let (k, n) = (lin.k, lin.n);
+        let dyn_lin = DynamicLinear::place(lin, cfg, fab_base)?;
+        let cost = LayerCost {
+            name: name.to_string(),
+            kind: "matmul",
+            k,
+            n,
+            n_rt,
+            n_ct,
+            vectors_per_input,
+            est_cycles_per_input: vectors_per_input as u64 * tiles * op_cycles,
+            est_energy_fj_per_input: vectors_per_input as f64 * est_energy_per_vector,
+            est_reload_cycles_per_input: tiles * weight_load_cycles(cfg),
+            est_reload_energy_fj_per_input: weight_load_energy(cfg, tiles).total_fj(),
+            dynamic: true,
+            shards_used: dyn_lin.pool().n_shards(),
+        };
+        Ok((dyn_lin, cost))
     }
 
     /// Accumulated estimated cycles per shard (the balance the placer keeps).
@@ -401,25 +499,70 @@ mod tests {
     fn report_table_renders_with_totals() {
         let cfg = Config::default();
         let report = CostReport {
-            layers: vec![LayerCost {
-                name: "fc0".into(),
-                kind: "linear",
-                k: 144,
-                n: 32,
-                n_rt: 3,
-                n_ct: 2,
-                vectors_per_input: 1,
-                est_cycles_per_input: 90,
-                est_energy_fj_per_input: 1.0e6,
-                shards_used: 2,
-            }],
-            total_tiles: 6,
+            layers: vec![
+                LayerCost {
+                    name: "fc0".into(),
+                    kind: "linear",
+                    k: 144,
+                    n: 32,
+                    n_rt: 3,
+                    n_ct: 2,
+                    vectors_per_input: 1,
+                    est_cycles_per_input: 90,
+                    est_energy_fj_per_input: 1.0e6,
+                    est_reload_cycles_per_input: 0,
+                    est_reload_energy_fj_per_input: 0.0,
+                    dynamic: false,
+                    shards_used: 2,
+                },
+                LayerCost {
+                    name: "score".into(),
+                    kind: "matmul",
+                    k: 8,
+                    n: 4,
+                    n_rt: 1,
+                    n_ct: 1,
+                    vectors_per_input: 4,
+                    est_cycles_per_input: 60,
+                    est_energy_fj_per_input: 0.5e6,
+                    est_reload_cycles_per_input: 64,
+                    est_reload_energy_fj_per_input: 4915.2,
+                    dynamic: true,
+                    shards_used: 1,
+                },
+            ],
+            total_tiles: 7,
             n_shards: 2,
-            weight_kb: 24.0,
+            n_dynamic_shards: 1,
+            weight_kb: 28.0,
         };
         let md = report.table(&cfg).to_markdown();
         assert!(md.contains("fc0"));
         assert!(md.contains("TOTAL"));
-        assert_eq!(report.total_est_cycles_per_input(), 90);
+        assert!(md.contains("rld kcyc/in"));
+        assert_eq!(report.total_est_cycles_per_input(), 150);
+        assert_eq!(report.total_est_reload_cycles_per_input(), 64);
+        let frac = report.reload_cycle_fraction();
+        assert!((frac - 64.0 / 214.0).abs() < 1e-12, "{frac}");
+    }
+
+    /// Dynamic placement lands on a dedicated mini-pool and charges one
+    /// grid swap per input in the estimate.
+    #[test]
+    fn dynamic_placement_uses_dedicated_shards_and_reload_cost() {
+        let cfg = Config::default();
+        let mut placer = Placer::new(ActivationProfile::relu_like(&cfg));
+        // 100×20 → 2 row tiles × 2 col tiles = 4 tiles, 1 dedicated shard.
+        let lin = rand_lin(&cfg, 100, 20, 9);
+        let (dl, cost) = placer.place_dynamic_layer(&cfg, lin, "score", 3, 11).unwrap();
+        assert!(cost.dynamic);
+        assert_eq!(cost.tiles(), 4);
+        assert_eq!(dl.pool().n_shards(), 1);
+        assert_eq!(dl.pool().slots_loaded(), 4);
+        assert_eq!(cost.est_reload_cycles_per_input, 4 * weight_load_cycles(&cfg));
+        assert!(cost.est_reload_energy_fj_per_input > 0.0);
+        assert_eq!(cost.est_cycles_per_input, 3 * 4 * static_op_cycles(&cfg));
+        // The shared-board balance is untouched by dedicated placement.
+        assert!(placer.shard_load().iter().all(|&l| l == 0.0));
     }
 }

@@ -23,22 +23,27 @@
 //! key `(seed, epoch, item, tile)` makes the two modes bit-identical noise
 //! on or off, for any worker count and any queue capacity.
 
-use crate::compiler::ir::{dequantize, Graph, NodeId, Op};
+use crate::compiler::ir::{dequantize, transpose_rows_to_cols, Graph, NodeId, Op};
 use crate::compiler::lower::{calibrate, lower, CompileError, LayerKind, LoweredLayer};
 use crate::compiler::place::{predicted_tile_cycles, ActivationProfile, CostReport, Placer};
 use crate::config::Config;
 use crate::mapping::executor::{patches_to_rows, rows_to_chw, CimLinear};
 use crate::mapping::{ExecStats, MapError};
 use crate::nn::im2col::{conv_out_dims, im2col};
-use crate::nn::ops::global_avg_pool;
+use crate::nn::ops::{global_avg_pool, layer_norm, softmax_last_dim};
 use crate::nn::quant::QuantParams;
 use crate::nn::tensor::Tensor;
 use crate::pipeline::batch::{run_vector, StreamCtx, StreamKey};
-use crate::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use crate::pipeline::{BatchExecutor, DynamicLinear, MacroPool, PlacedLinear};
 use crate::sched::{run_stages, StageGauge};
 use crate::util::table::Table;
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Fabrication-seed base for the first dedicated dynamic-weight shard:
+/// far above any realistic shared-board size, so dedicated dies never
+/// collide with the main pool's draw sequence (DESIGN.md §10).
+const DYN_FAB_BASE: usize = 1 << 30;
 
 /// Knobs for [`compile`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -53,16 +58,34 @@ pub struct CompileOptions {
     pub profile: Option<ActivationProfile>,
 }
 
+/// Where a compiled layer's weights live (DESIGN.md §10).
+enum LayerBacking {
+    /// Weight-stationary tiles on the plan's shared pool (loaded once).
+    Static(PlacedLinear),
+    /// Dynamic-weight tiles on dedicated shards, swapped per call. The
+    /// mutex is the "stage barrier per (item, tile)": whoever runs an item
+    /// holds the layer — and therefore its whole tile grid — for the
+    /// item's reload + rows, so a swap can never interleave with another
+    /// item's ops. Contention is nil: the barrier path is single-threaded
+    /// through a layer and the streaming scheduler gives each layer its
+    /// own stage.
+    Dynamic(Mutex<DynamicLinear>),
+}
+
 /// One placed network layer with its cumulative run accounting.
 pub struct CompiledLayer {
     pub name: String,
     node: NodeId,
     src: NodeId,
+    /// The runtime-weight operand node (dynamic layers only).
+    b_src: Option<NodeId>,
     kind: LayerKind,
     qparams: QuantParams,
-    placed: PlacedLinear,
+    backing: LayerBacking,
+    n_tiles: usize,
     /// Activation vectors one network input generates through this layer
-    /// (conv: `oh·ow`, linear: 1) — the streamed row-index stride.
+    /// (conv: `oh·ow`, linear: 1, row-wise/matmul: `seq`) — the streamed
+    /// row-index stride.
     vectors_per_input: usize,
     observed: ExecStats,
     predicted_cycles: u64,
@@ -74,8 +97,25 @@ impl CompiledLayer {
         self.node
     }
 
+    /// The resident quantized layer of a weight-stationary layer, `None`
+    /// for dynamic-weight layers (whose `CimLinear` is a per-call staging
+    /// value) — the total accessor for generic plan introspection.
+    pub fn static_linear(&self) -> Option<&CimLinear> {
+        match &self.backing {
+            LayerBacking::Static(p) => Some(p.linear()),
+            LayerBacking::Dynamic(_) => None,
+        }
+    }
+
+    /// The resident quantized layer.
+    ///
+    /// # Panics
+    /// For dynamic-weight layers — use [`CompiledLayer::static_linear`]
+    /// (or check [`CompiledLayer::is_dynamic`]) when the plan may contain
+    /// `MatMul` layers.
     pub fn linear(&self) -> &CimLinear {
-        self.placed.linear()
+        self.static_linear()
+            .unwrap_or_else(|| panic!("layer `{}` has dynamic (per-call) weights", self.name))
     }
 
     pub fn qparams(&self) -> QuantParams {
@@ -86,8 +126,13 @@ impl CompiledLayer {
         self.kind
     }
 
+    /// Whether this layer reloads its weights per call (DESIGN.md §10).
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self.backing, LayerBacking::Dynamic(_))
+    }
+
     pub fn n_tiles(&self) -> usize {
-        self.placed.n_tiles()
+        self.n_tiles
     }
 
     /// Activation vectors one network input generates through this layer.
@@ -95,13 +140,15 @@ impl CompiledLayer {
         self.vectors_per_input
     }
 
-    /// Device counters accumulated over every batch this layer ran.
+    /// Device counters accumulated over every batch this layer ran. For
+    /// dynamic layers, `weight_loads` counts the per-item reloads and
+    /// `total_cycles` includes their reload cycles.
     pub fn observed(&self) -> &ExecStats {
         &self.observed
     }
 
     /// The cost model's cycle prediction for the same runs (exact: equals
-    /// `observed().total_cycles`).
+    /// `observed().total_cycles`, reload cycles included).
     pub fn predicted_cycles(&self) -> u64 {
         self.predicted_cycles
     }
@@ -179,11 +226,13 @@ pub fn compile(
     let lowered = lower(&graph, &shapes, &cal, cfg)?;
 
     let mut pool = MacroPool::new(cfg.clone());
-    // Pre-size the pool to the exact shard count the lowered network needs,
-    // so the placer has every die as a candidate and genuinely balances
-    // estimated per-shard work (instead of dense-filling one die at a time).
+    // Pre-size the pool to the exact shard count the weight-stationary
+    // layers need, so the placer has every die as a candidate and genuinely
+    // balances estimated per-shard work (instead of dense-filling one die
+    // at a time). Dynamic layers live on dedicated shards and don't count.
     let needed_tiles: usize = lowered
         .iter()
+        .filter(|l| !l.kind.is_dynamic())
         .map(|l| l.lin.n_row_tiles() * l.lin.n_col_tiles())
         .sum();
     pool.grow_to(needed_tiles.div_ceil(cfg.mac.cores.max(1)));
@@ -192,21 +241,42 @@ pub fn compile(
     let mut layers = Vec::with_capacity(lowered.len());
     let mut node_layer = vec![None; graph.nodes.len()];
     let mut report_layers = Vec::with_capacity(lowered.len());
-    for LoweredLayer { node, src, name, kind, qparams, lin, vectors_per_input } in lowered {
-        let kind_label = match kind {
-            LayerKind::Conv { .. } => "conv",
-            LayerKind::Linear => "linear",
+    let mut n_dynamic_shards = 0usize;
+    for LoweredLayer { node, src, b_src, name, kind, qparams, lin, vectors_per_input } in lowered
+    {
+        let n_tiles = lin.n_row_tiles() * lin.n_col_tiles();
+        let (backing, cost) = match kind {
+            LayerKind::MatMul { .. } => {
+                let (dyn_lin, cost) = placer.place_dynamic_layer(
+                    cfg,
+                    lin,
+                    &name,
+                    vectors_per_input,
+                    DYN_FAB_BASE + n_dynamic_shards,
+                )?;
+                n_dynamic_shards += dyn_lin.pool().n_shards();
+                (LayerBacking::Dynamic(Mutex::new(dyn_lin)), cost)
+            }
+            _ => {
+                let kind_label = match kind {
+                    LayerKind::Conv { .. } => "conv",
+                    _ => "linear",
+                };
+                let (placed, cost) =
+                    placer.place_layer(&mut pool, lin, &name, kind_label, vectors_per_input)?;
+                (LayerBacking::Static(placed), cost)
+            }
         };
-        let (placed, cost) =
-            placer.place_layer(&mut pool, lin, &name, kind_label, vectors_per_input)?;
         node_layer[node] = Some(layers.len());
         layers.push(CompiledLayer {
             name,
             node,
             src,
+            b_src,
             kind,
             qparams,
-            placed,
+            backing,
+            n_tiles,
             vectors_per_input,
             observed: ExecStats::default(),
             predicted_cycles: 0,
@@ -214,11 +284,12 @@ pub fn compile(
         report_layers.push(cost);
     }
 
-    let total_tiles: usize = layers.iter().map(|l| l.placed.n_tiles()).sum();
+    let total_tiles: usize = layers.iter().map(|l| l.n_tiles).sum();
     let report = CostReport {
         layers: report_layers,
         total_tiles,
         n_shards: pool.n_shards(),
+        n_dynamic_shards,
         weight_kb: total_tiles as f64 * cfg.mac.core_kb(),
     };
 
@@ -226,7 +297,12 @@ pub fn compile(
     let mut data_src: Vec<Vec<NodeId>> = vec![Vec::new(); n];
     for (id, node) in graph.nodes.iter().enumerate() {
         if let Some(li) = node_layer[id] {
-            data_src[id] = vec![layers[li].src];
+            data_src[id] = match layers[li].b_src {
+                // A dynamic layer reads its streamed operand AND its
+                // runtime-weight operand.
+                Some(b) => vec![layers[li].src, b],
+                None => vec![layers[li].src],
+            };
         } else if !matches!(node.op, Op::Quantize { .. }) {
             data_src[id] = node.inputs.clone();
         }
@@ -259,13 +335,19 @@ pub fn compile(
     })
 }
 
-/// `Quantize` nodes may only feed `Conv2d`/`Linear` (they are fused into
-/// the placed layer), may not chain, and may not be the graph output.
+/// `Quantize` nodes may only feed `Conv2d`/`Linear`/`MatMul` streamed
+/// operands (they are fused into the placed layer), may not chain, and may
+/// not be the graph output.
 fn check_quantize_structure(graph: &Graph) -> Result<(), CompileError> {
     for node in &graph.nodes {
-        let is_cim = matches!(node.op, Op::Conv2d { .. } | Op::Linear { .. });
-        for &i in &node.inputs {
-            if matches!(graph.nodes[i].op, Op::Quantize { .. }) && !is_cim {
+        let is_cim =
+            matches!(node.op, Op::Conv2d { .. } | Op::Linear { .. } | Op::MatMul { .. });
+        for (slot, &i) in node.inputs.iter().enumerate() {
+            // A matmul's weight operand (input 1) is float: the lowerer
+            // re-quantizes it per call, so a Quantize there is rejected
+            // (by `lower`); only the streamed operand may be quantized.
+            let is_boundary = is_cim && slot == 0;
+            if matches!(graph.nodes[i].op, Op::Quantize { .. }) && !is_boundary {
                 return Err(CompileError::Structure(format!(
                     "Quantize `{}` feeds non-layer `{}`",
                     graph.nodes[i].name, node.name
@@ -436,9 +518,33 @@ impl CompiledPlan {
     /// rows concatenate, in item order, into ONE `run_q` call, so row `r`
     /// of item `i` gets substream item index `i × vectors_per_input + r` —
     /// exactly the key the streamed path derives per item (DESIGN.md §9).
+    ///
+    /// Dynamic-weight layers instead reserve one epoch and run the items
+    /// sequentially through the SAME per-item routine the streaming
+    /// scheduler uses ([`CompiledPlan::run_dynamic_layer_item`]): each
+    /// item's reload must complete before its rows stream (the per-(item,
+    /// tile) barrier of DESIGN.md §10), so there is no cross-item
+    /// parallelism to exploit on one tile grid — and the two execution
+    /// modes share one code path, which is what keeps them bit-identical.
     fn run_layer_batch(&mut self, li: usize, flights: &mut [Flight]) -> Result<(), MapError> {
+        if self.layers[li].is_dynamic() {
+            let epoch = self.exec.reserve_epochs(1);
+            let mut ctx = StreamCtx::new(&self.cfg);
+            let mut acc = StageAcc::default();
+            for fl in flights.iter_mut() {
+                self.run_dynamic_layer_item(li, epoch, fl, &mut ctx, &mut acc)?;
+            }
+            let layer = &mut self.layers[li];
+            layer.predicted_cycles += acc.predicted;
+            layer.observed.merge(&acc.stats);
+            self.stats.merge(&acc.stats);
+            return Ok(());
+        }
         let layer = &self.layers[li];
-        let (src, node, kind) = (layer.src, layer.node, layer.kind);
+        let src = layer.src;
+        let LayerBacking::Static(placed) = &layer.backing else {
+            unreachable!("dynamic layers handled above")
+        };
         let mut q: Vec<Vec<i64>> = Vec::new();
         let mut dims: Vec<(usize, usize)> = Vec::new();
         for fl in flights.iter() {
@@ -447,30 +553,83 @@ impl CompiledPlan {
                 .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
             dims.push(quantize_layer_rows(layer, t, &mut q)?);
         }
-        let predicted = predicted_tile_cycles(&self.cfg, layer.placed.linear(), &q);
-        let (rows, stats) = self.exec.run_q(&self.pool, &layer.placed, &q)?;
+        let predicted = predicted_tile_cycles(&self.cfg, placed.linear(), &q);
+        let (rows, stats) = self.exec.run_q(&self.pool, placed, &q)?;
         {
             let layer = &mut self.layers[li];
             layer.predicted_cycles += predicted;
             layer.observed.merge(&stats);
         }
         self.stats.merge(&stats);
-        match kind {
-            LayerKind::Conv { out_c, .. } => {
-                let mut offset = 0usize;
-                for (fl, &(oh, ow)) in flights.iter_mut().zip(&dims) {
-                    fl.values[node] =
-                        Some(rows_to_chw(&rows[offset..offset + oh * ow], out_c, oh, ow));
-                    offset += oh * ow;
-                }
-            }
-            LayerKind::Linear => {
-                for (fl, r) in flights.iter_mut().zip(rows) {
-                    let n = r.len();
-                    fl.values[node] = Some(Tensor::from_vec(&[n], r));
-                }
-            }
+        assemble_layer_outputs(&self.layers[li], rows, &dims, flights);
+        Ok(())
+    }
+
+    /// One dynamic-weight layer over ONE in-flight item (DESIGN.md §10):
+    /// requantize the item's runtime weight operand, swap it into the
+    /// dedicated tile grid, then stream the item's quantized rows with the
+    /// standard `(seed, epoch, item × vectors_per_input + row, tile)`
+    /// substream keys. The layer mutex is held for the whole item — the
+    /// reload is a barrier per (item, tile) — and this ONE routine serves
+    /// both the barrier path and the streaming scheduler, so the two modes
+    /// cannot drift.
+    fn run_dynamic_layer_item(
+        &self,
+        li: usize,
+        epoch: u64,
+        fl: &mut Flight,
+        ctx: &mut StreamCtx,
+        acc: &mut StageAcc,
+    ) -> Result<(), MapError> {
+        let layer = &self.layers[li];
+        let LayerKind::MatMul { seq, transpose_b } = layer.kind else {
+            unreachable!("dynamic layers are matmul layers")
+        };
+        let LayerBacking::Dynamic(cell) = &layer.backing else {
+            unreachable!("dynamic layers carry a dynamic backing")
+        };
+        let b_src = layer.b_src.expect("dynamic layer has a weight operand");
+        let b = fl.values[b_src]
+            .as_ref()
+            .ok_or_else(|| MapError::Shape(format!("value of node {b_src} unavailable")))?;
+        let mut dl = cell.lock().expect("dynamic layer poisoned");
+        let (k, n) = (dl.linear().k, dl.linear().n);
+        let want_shape = if transpose_b { [n, k] } else { [k, n] };
+        if b.shape != want_shape {
+            return Err(MapError::Shape(format!(
+                "matmul `{}` weight operand {:?} vs placed {:?}",
+                layer.name, b.shape, want_shape
+            )));
         }
+        // Per-call requantization: max-abs signed at the macro's weight
+        // precision, staged as a fresh tile grid, swapped in place. Only
+        // the transposed form materializes a new tensor; attn·V passes the
+        // operand through by reference.
+        let transposed;
+        let w_cols: &Tensor = if transpose_b {
+            transposed = transpose_rows_to_cols(b);
+            &transposed
+        } else {
+            b
+        };
+        dl.reload(w_cols, layer.qparams, &mut acc.stats)?;
+        acc.predicted += dl.reload_cycles();
+
+        let src = layer.src;
+        let t = fl.values[src]
+            .as_ref()
+            .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
+        let mut q: Vec<Vec<i64>> = Vec::with_capacity(seq);
+        quantize_layer_rows(layer, t, &mut q)?;
+        acc.predicted += predicted_tile_cycles(&self.cfg, dl.linear(), &q);
+        let item_base = fl.idx as u64 * layer.vectors_per_input as u64;
+        let seed = self.exec.seed();
+        let mut data = Vec::with_capacity(seq * n);
+        for (r, acts) in q.iter().enumerate() {
+            let key = StreamKey { seed, epoch, item: item_base + r as u64 };
+            data.extend(run_vector(dl.pool(), dl.placed(), key, acts, ctx, &mut acc.stats)?);
+        }
+        fl.values[layer.node] = Some(Tensor::from_vec(&[seq, n], data));
         Ok(())
     }
 
@@ -736,7 +895,11 @@ impl CompiledPlan {
                 let c = t.shape[0];
                 Some(Tensor::from_vec(&[c], global_avg_pool(&t)))
             }
-            Op::Conv2d { .. } | Op::Linear { .. } => {
+            Op::Softmax => Some(softmax_last_dim(&arg(&mut fl.values, 0, true)?)),
+            Op::LayerNorm { gamma, beta, eps } => {
+                Some(layer_norm(&arg(&mut fl.values, 0, true)?, gamma, beta, *eps))
+            }
+            Op::Conv2d { .. } | Op::Linear { .. } | Op::MatMul { .. } => {
                 unreachable!("layer nodes are handled by node_layer")
             }
         };
@@ -749,7 +912,8 @@ impl CompiledPlan {
     /// substream index is `item × vectors_per_input + row`, landing on the
     /// exact keys the barrier path assigns across its concatenated batch —
     /// which is what makes the two modes bit-identical with noise on
-    /// (DESIGN.md §9).
+    /// (DESIGN.md §9). Dynamic-weight layers route through
+    /// [`CompiledPlan::run_dynamic_layer_item`].
     fn run_layer_item(
         &self,
         li: usize,
@@ -759,19 +923,25 @@ impl CompiledPlan {
         acc: &mut StageAcc,
     ) -> Result<(), MapError> {
         let layer = &self.layers[li];
+        if layer.is_dynamic() {
+            return self.run_dynamic_layer_item(li, epoch, fl, ctx, acc);
+        }
+        let LayerBacking::Static(placed) = &layer.backing else {
+            unreachable!("dynamic layers handled above")
+        };
         let src = layer.src;
         let t = fl.values[src]
             .as_ref()
             .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
         let mut q: Vec<Vec<i64>> = Vec::new();
         let out_dims = quantize_layer_rows(layer, t, &mut q)?;
-        acc.predicted += predicted_tile_cycles(&self.cfg, layer.placed.linear(), &q);
+        acc.predicted += predicted_tile_cycles(&self.cfg, placed.linear(), &q);
         let item_base = fl.idx as u64 * layer.vectors_per_input as u64;
         let seed = self.exec.seed();
         let mut rows: Vec<Vec<f32>> = Vec::with_capacity(q.len());
         for (r, acts) in q.iter().enumerate() {
             let key = StreamKey { seed, epoch, item: item_base + r as u64 };
-            rows.push(run_vector(&self.pool, &layer.placed, key, acts, ctx, &mut acc.stats)?);
+            rows.push(run_vector(&self.pool, placed, key, acts, ctx, &mut acc.stats)?);
         }
         let out = match layer.kind {
             LayerKind::Conv { out_c, .. } => {
@@ -783,6 +953,11 @@ impl CompiledPlan {
                 let n = row.len();
                 Tensor::from_vec(&[n], row)
             }
+            LayerKind::Rowwise { seq } => {
+                let n = rows.first().map(|r| r.len()).unwrap_or(0);
+                Tensor::from_vec(&[seq, n], rows.concat())
+            }
+            LayerKind::MatMul { .. } => unreachable!("dynamic layers handled above"),
         };
         fl.values[layer.node] = Some(out);
         Ok(())
@@ -793,12 +968,13 @@ impl CompiledPlan {
     pub fn observed_table(&self) -> Table {
         let mut t = Table::new(
             "per-layer run accounting (cumulative)",
-            &["layer", "core ops", "cycles", "predicted", "uJ", "clipped"],
+            &["layer", "core ops", "reloads", "cycles", "predicted", "uJ", "clipped"],
         );
         for l in &self.layers {
             t.row(&[
                 l.name.clone(),
                 l.observed.core_ops.to_string(),
+                if l.is_dynamic() { l.observed.weight_loads.to_string() } else { "-".into() },
                 l.observed.total_cycles.to_string(),
                 l.predicted_cycles.to_string(),
                 format!("{:.3}", l.observed.energy_fj() * 1e-9),
@@ -808,6 +984,12 @@ impl CompiledPlan {
         t.row(&[
             "TOTAL".into(),
             self.stats.core_ops.to_string(),
+            self.layers
+                .iter()
+                .filter(|l| l.is_dynamic())
+                .map(|l| l.observed.weight_loads)
+                .sum::<u64>()
+                .to_string(),
             self.stats.total_cycles.to_string(),
             self.layers.iter().map(|l| l.predicted_cycles).sum::<u64>().to_string(),
             format!("{:.3}", self.stats.energy_fj() * 1e-9),
@@ -819,17 +1001,23 @@ impl CompiledPlan {
 
 /// (im2col →) quantize ONE item's input value into activation rows for
 /// `layer`, appending to `q`; returns the conv output dims (`(0, 0)` for
-/// linear). The single source of the per-item row recipe — the barrier
-/// path ([`CompiledPlan::run_batch_owned`]) and the streaming scheduler
-/// both call it, so their rows (and therefore their substream keys,
-/// DESIGN.md §9) cannot drift. Enforces the compile-time
-/// `vectors_per_input` stride the keys rely on.
+/// the vector kinds). Signed-activation boundaries shift their codes by
+/// the zero point into the macro's unsigned window here — the executors
+/// restore `zp·Σw` digitally (DESIGN.md §10). The single source of the
+/// per-item row recipe — the barrier path
+/// ([`CompiledPlan::run_batch_owned`]) and the streaming scheduler both
+/// call it, so their rows (and therefore their substream keys, DESIGN.md
+/// §9) cannot drift. Enforces the compile-time `vectors_per_input` stride
+/// the keys rely on.
 fn quantize_layer_rows(
     layer: &CompiledLayer,
     t: &Tensor,
     q: &mut Vec<Vec<i64>>,
 ) -> Result<(usize, usize), MapError> {
     let before = q.len();
+    // One zero-point definition for codes and the digital restore alike
+    // (`QuantParams::zero_point`, DESIGN.md §10).
+    let codes = |xs: &[f32]| -> Vec<i64> { layer.qparams.quantize_codes(xs) };
     let mut dims = (0usize, 0usize);
     match layer.kind {
         LayerKind::Conv { kh, kw, stride, pad, .. } => {
@@ -841,11 +1029,23 @@ fn quantize_layer_rows(
             }
             let patches = im2col(t, kh, kw, stride, pad);
             for row in patches_to_rows(&patches) {
-                q.push(layer.qparams.quantize_vec(&row));
+                q.push(codes(&row));
             }
             dims = conv_out_dims(t.shape[1], t.shape[2], kh, kw, stride, pad);
         }
-        LayerKind::Linear => q.push(layer.qparams.quantize_vec(&t.data)),
+        LayerKind::Linear => q.push(codes(&t.data)),
+        LayerKind::Rowwise { .. } | LayerKind::MatMul { .. } => {
+            if t.rank() != 2 {
+                return Err(MapError::Shape(format!(
+                    "layer `{}` input must be [S][K], got {:?}",
+                    layer.name, t.shape
+                )));
+            }
+            let k = t.shape[1];
+            for row in t.data.chunks(k) {
+                q.push(codes(row));
+            }
+        }
     }
     if q.len() - before != layer.vectors_per_input {
         return Err(MapError::Shape(format!(
@@ -857,6 +1057,50 @@ fn quantize_layer_rows(
         )));
     }
     Ok(dims)
+}
+
+/// Scatter a barrier `run_q`'s output rows back onto their flights: conv
+/// rows reassemble to CHW per item, row-wise chunks of `seq` become
+/// `[seq][N]`, plain linear is one row per item.
+fn assemble_layer_outputs(
+    layer: &CompiledLayer,
+    rows: Vec<Vec<f32>>,
+    dims: &[(usize, usize)],
+    flights: &mut [Flight],
+) {
+    let node = layer.node;
+    match layer.kind {
+        LayerKind::Conv { out_c, .. } => {
+            let mut offset = 0usize;
+            for (fl, &(oh, ow)) in flights.iter_mut().zip(dims) {
+                fl.values[node] =
+                    Some(rows_to_chw(&rows[offset..offset + oh * ow], out_c, oh, ow));
+                offset += oh * ow;
+            }
+        }
+        LayerKind::Linear => {
+            for (fl, r) in flights.iter_mut().zip(rows) {
+                let n = r.len();
+                fl.values[node] = Some(Tensor::from_vec(&[n], r));
+            }
+        }
+        LayerKind::Rowwise { seq } => {
+            let mut iter = rows.into_iter();
+            for fl in flights.iter_mut() {
+                let mut data = Vec::new();
+                let mut n = 0usize;
+                for _ in 0..seq {
+                    let r = iter.next().expect("row count matches seq × batch");
+                    n = r.len();
+                    data.extend(r);
+                }
+                fl.values[node] = Some(Tensor::from_vec(&[seq, n], data));
+            }
+        }
+        LayerKind::MatMul { .. } => {
+            unreachable!("dynamic layers never take the batched run_q path")
+        }
+    }
 }
 
 #[cfg(test)]

@@ -260,6 +260,10 @@ pub struct EnergyConfig {
     pub e_array_unit: f64,
     /// Fixed per-op array overhead (ADC readout discharge + precharge), fJ.
     pub e_array_fixed: f64,
+    /// SRAM write energy per weight bit, fJ — the dynamic-weight reload
+    /// cost (DESIGN.md §10). Not calibrated against the paper (it reports
+    /// no write energy); a representative 28 nm SRAM write figure.
+    pub e_w_write: f64,
     /// Macro area in mm² (paper: consistent 0.121 from both ends of the
     /// 790–1136 TOPS/W/mm² range).
     pub area_mm2: f64,
@@ -276,6 +280,7 @@ impl Default for EnergyConfig {
             e_path_toggle: 10.00279,
             e_array_unit: 0.0116119,
             e_array_fixed: 12269.08,
+            e_w_write: 1.2,
             area_mm2: 0.121,
         }
     }
@@ -413,6 +418,7 @@ impl Config {
         ov!(self.energy.e_path_toggle, f64, "energy.e_path_toggle");
         ov!(self.energy.e_array_unit, f64, "energy.e_array_unit");
         ov!(self.energy.e_array_fixed, f64, "energy.e_array_fixed");
+        ov!(self.energy.e_w_write, f64, "energy.e_w_write");
         ov!(self.energy.area_mm2, f64, "energy.area_mm2");
         ov!(self.sim.seed, u64, "sim.seed");
         ov!(self.sim.workers, usize, "sim.workers");
@@ -498,6 +504,7 @@ const KNOWN_KEYS: &[&str] = &[
     "energy.e_path_toggle",
     "energy.e_array_unit",
     "energy.e_array_fixed",
+    "energy.e_w_write",
     "energy.area_mm2",
     "sim.seed",
     "sim.workers",

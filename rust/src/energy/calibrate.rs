@@ -155,6 +155,9 @@ pub fn solve(cfg: &Config) -> Result<EnergyConfig, CalibrationError> {
         e_path_toggle,
         e_array_unit,
         e_array_fixed,
+        // Not derivable from the paper's anchors (no write-energy figure):
+        // the SRAM write constant passes through unchanged.
+        e_w_write: cfg.energy.e_w_write,
         area_mm2: cfg.energy.area_mm2,
     })
 }

@@ -61,6 +61,18 @@ pub fn core_op_energy(cfg: &Config, s: &OpStats) -> EnergyBreakdown {
     }
 }
 
+/// Energy of writing `tiles` full core weight arrays — the dynamic-weight
+/// reload cost (DESIGN.md §10). Pure SRAM write activity, booked to the
+/// array group: `tiles · rows · engines · weight_bits · e_w_write`.
+pub fn weight_load_energy(cfg: &Config, tiles: u64) -> EnergyBreakdown {
+    let bits_per_core =
+        (cfg.mac.rows * cfg.mac.engines * cfg.mac.weight_bits as usize) as f64;
+    EnergyBreakdown {
+        array_fj: tiles as f64 * bits_per_core * cfg.energy.e_w_write,
+        ..EnergyBreakdown::default()
+    }
+}
+
 /// TOPS/W for `ops` operations consuming `energy_fj`.
 pub fn tops_per_watt(ops: f64, energy_fj: f64) -> f64 {
     // ops / (E[J]) = ops/s per W; /1e12 → TOPS/W. E[J] = fJ·1e−15.
@@ -130,5 +142,19 @@ mod tests {
         assert!(sparse.total_fj() < dense.total_fj());
         // Sparse still pays the fixed readout cost.
         assert!(sparse.array_fj > cfg.energy.e_array_fixed);
+    }
+
+    #[test]
+    fn weight_load_energy_scales_with_tiles() {
+        let cfg = Config::default();
+        let one = weight_load_energy(&cfg, 1);
+        // 64 rows × 16 engines × 4 b = 4096 bits per core.
+        assert!((one.array_fj - 4096.0 * cfg.energy.e_w_write).abs() < 1e-9);
+        assert_eq!(one.dtc_fj, 0.0);
+        let five = weight_load_energy(&cfg, 5);
+        assert!((five.total_fj() - 5.0 * one.total_fj()).abs() < 1e-9);
+        // A reload costs well under a dense core op (writes are cheap
+        // relative to the analog MAC + readout).
+        assert!(one.total_fj() < core_op_energy(&cfg, &stats_like_dense()).total_fj());
     }
 }

@@ -79,6 +79,22 @@
 //! [`pipeline::PipelineDeployment`] is now one instance of a compiled plan
 //! (the deployment graph, unit scales + explicit dequantize nodes).
 //!
+//! # Dynamic-weight workloads (transformers)
+//!
+//! Attention multiplies two runtime tensors, so one operand must be
+//! written into the array mid-inference (DESIGN.md §10):
+//! `Graph::from_transformer_block` ingests an MHA+FFN encoder block whose
+//! `Quantize → MatMul` pairs lower to [`pipeline::DynamicLinear`] grids on
+//! dedicated shards — per-call max-abs requantization, weight swap through
+//! [`pipeline::MacroPool::reload_slot`] (the `BitPlanes` view rebuilds, so
+//! the kernel is untouched), reload cycles/energy charged to the device
+//! counters and broken out in the cost report. Signed activation
+//! boundaries ride a zero-point shift with a digital `zp·Σw` restore.
+//! Streamed execution treats each item's reload as a stage barrier and
+//! stays bit-identical to the barrier path
+//! (`tests/dynamic_weights.rs`); `cargo bench --bench attention_block`
+//! writes the reload-bound vs compute-bound rows (`BENCH_attention.json`).
+//!
 //! # Hot-path kernel
 //!
 //! Every MAC op — per-request, pooled, or compiled — runs on the bit-plane
@@ -94,7 +110,7 @@
 //! "Performance".
 //!
 //! Unit conventions, calibration assumptions and declared reproduction
-//! deviations live in the repo-root `DESIGN.md` (§1–§9), which the code
+//! deviations live in the repo-root `DESIGN.md` (§1–§10), which the code
 //! cites by section; `tests/docs_refs.rs` keeps the citations resolving.
 
 pub mod analysis;

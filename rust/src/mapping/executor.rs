@@ -44,6 +44,9 @@ pub struct CimLinear {
     /// Tiles in (row_tile, col_tile) order: `tiles[rt][ct]` is a padded
     /// rows×engines signed weight block.
     tiles: Vec<Vec<Vec<Vec<i64>>>>,
+    /// Σ_k w_q[k][n] per output column — the digital constant behind the
+    /// signed-activation zero-point correction (DESIGN.md §10).
+    col_sums: Vec<i64>,
     rows_per_tile: usize,
     engines_per_tile: usize,
 }
@@ -78,10 +81,12 @@ impl CimLinear {
         let n_rt = k.div_ceil(rows);
         let n_ct = n.div_ceil(engines);
         let mut tiles = vec![vec![vec![vec![0i64; engines]; rows]; n_ct]; n_rt];
+        let mut col_sums = vec![0i64; n];
         for kk in 0..k {
             for nn in 0..n {
                 let q = w_params.quantize(w_cols.at2(kk, nn));
                 tiles[kk / rows][nn / engines][kk % rows][nn % engines] = q;
+                col_sums[nn] += q;
             }
         }
         Self {
@@ -91,6 +96,7 @@ impl CimLinear {
             a_params,
             bias,
             tiles,
+            col_sums,
             rows_per_tile: rows,
             engines_per_tile: engines,
         }
@@ -123,10 +129,26 @@ impl CimLinear {
         self.n_row_tiles() * self.n_col_tiles()
     }
 
-    /// Quantize a float activation vector (length K).
+    /// Σ_k w_q[k][col] of the quantized plane (zero-point correction term).
+    pub fn col_sum(&self, col: usize) -> i64 {
+        self.col_sums[col]
+    }
+
+    /// The activation zero point ([`QuantParams::zero_point`] of
+    /// `a_params`): 0 for unsigned (post-ReLU) params, 8 at 4-b for
+    /// [`QuantParams::signed_acts`]. Quantized codes are shifted by this
+    /// amount into the macro's unsigned window, and the executors restore
+    /// `zp·Σw` digitally (DESIGN.md §10).
+    pub fn act_zero(&self) -> i64 {
+        self.a_params.zero_point()
+    }
+
+    /// Quantize a float activation vector (length K) into macro codes
+    /// ([`QuantParams::quantize_codes`]: quantization plus the zero-point
+    /// shift).
     pub fn quantize_acts(&self, x: &[f32]) -> Vec<i64> {
         assert_eq!(x.len(), self.k);
-        self.a_params.quantize_vec(x)
+        self.a_params.quantize_codes(x)
     }
 
     /// Run a batch of quantized activation vectors, weight-stationary: every
@@ -174,7 +196,16 @@ impl CimLinear {
                 }
             }
         }
+        // Signed-activation zero-point restore (`zp·Σw` per column), then
+        // bias — the exact expression order `pipeline::batch::run_vector`
+        // uses, so the two executors stay bit-identical (DESIGN.md §10).
+        let zp = self.act_zero();
         for row in out.iter_mut() {
+            if zp != 0 {
+                for (o, &cs) in row.iter_mut().zip(&self.col_sums) {
+                    *o -= (zp * cs) as f32 * deq;
+                }
+            }
             for (o, b) in row.iter_mut().zip(&self.bias) {
                 *o += b;
             }
@@ -309,6 +340,43 @@ mod tests {
         for (ra, rb) in a.iter().zip(&b) {
             for (va, vb) in ra.iter().zip(rb) {
                 assert!((va - vb).abs() <= bound, "{va} vs {vb} (bound {bound})");
+            }
+        }
+    }
+
+    /// Signed activations through the zero-point shift + digital `zp·Σw`
+    /// restore equal the exact signed integer product on the digital
+    /// backend — the transformer path's activation format (DESIGN.md §10).
+    #[test]
+    fn signed_acts_zero_point_equals_exact_signed_product() {
+        use crate::nn::quant::QuantParams;
+        for (k, n) in [(64, 16), (100, 20), (37, 5)] {
+            let cfg = Config::default();
+            let w = rand_cols(k, n, 7 * k as u64 + n as u64);
+            let wp = QuantParams::signed(w.max_abs(), cfg.mac.weight_bits);
+            let ap = QuantParams::signed_acts(1.0, cfg.mac.act_bits);
+            let lin = CimLinear::with_params(&w, vec![0.0; n], wp, ap, &cfg);
+            assert_eq!(lin.act_zero(), 8);
+            let mut be = DigitalBackend::new(cfg.clone());
+            let mut rng = Xoshiro256::seeded(33);
+            // Signed inputs spanning the calibrated range.
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..k).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+                .collect();
+            let got = lin.run_batch(&mut be, &xs).unwrap();
+            for (b, x) in xs.iter().enumerate() {
+                for col in 0..n {
+                    let mut acc = 0i64;
+                    for kk in 0..k {
+                        acc += lin.a_params.quantize(x[kk]) * lin.w_params.quantize(w.at2(kk, col));
+                    }
+                    let want = acc as f32 * lin.a_params.scale * lin.w_params.scale;
+                    assert!(
+                        (got[b][col] - want).abs() < 1e-3,
+                        "k={k} n={n} b={b} col={col}: {} vs {want}",
+                        got[b][col]
+                    );
+                }
             }
         }
     }

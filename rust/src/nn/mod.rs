@@ -1,6 +1,7 @@
 //! Neural-network substrate: tensors, float reference ops, quantization to
-//! the macro's 4-b formats, the workloads (MLP + ResNet-20), a trainer, and
-//! synthetic datasets. The CIM mapping lives in `crate::mapping`.
+//! the macro's 4-b formats, the workloads (MLP, ResNet-20, a transformer
+//! encoder block), a trainer, and synthetic datasets. The CIM mapping lives
+//! in `crate::mapping`.
 
 pub mod dataset;
 pub mod im2col;
@@ -9,6 +10,7 @@ pub mod ops;
 pub mod quant;
 pub mod resnet;
 pub mod tensor;
+pub mod transformer;
 
 pub use quant::QuantParams;
 pub use tensor::Tensor;

@@ -17,6 +17,45 @@ pub fn softmax(xs: &[f32]) -> Vec<f32> {
     exps.iter().map(|&e| e / s).collect()
 }
 
+/// Softmax over the last dimension of a rank-1 or rank-2 tensor (row-wise
+/// for rank-2 — attention probabilities). The single definition behind the
+/// graph IR's `Softmax` node, shared by `Graph::eval_float` and the
+/// compiled-plan executor so the two cannot drift.
+pub fn softmax_last_dim(t: &Tensor) -> Tensor {
+    match t.rank() {
+        1 => Tensor::from_vec(&t.shape, softmax(&t.data)),
+        2 => {
+            let (rows, cols) = (t.shape[0], t.shape[1]);
+            let mut out = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                out.extend(softmax(&t.data[r * cols..(r + 1) * cols]));
+            }
+            Tensor::from_vec(&t.shape, out)
+        }
+        r => panic!("softmax expects rank 1 or 2, got rank {r}"),
+    }
+}
+
+/// Layer normalization over the last dimension of a rank-1 or rank-2
+/// tensor: `y = (x − μ)/√(σ² + eps)·γ + β` per row, population variance.
+/// The single definition behind the graph IR's `LayerNorm` node.
+pub fn layer_norm(t: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    let cols = *t.shape.last().expect("layer_norm on a non-empty shape");
+    assert!(t.rank() == 1 || t.rank() == 2, "layer_norm expects rank 1 or 2");
+    assert_eq!(gamma.len(), cols, "gamma length vs last dim");
+    assert_eq!(beta.len(), cols, "beta length vs last dim");
+    let mut out = Vec::with_capacity(t.data.len());
+    for row in t.data.chunks(cols) {
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, &x) in row.iter().enumerate() {
+            out.push((x - mean) * inv * gamma[i] + beta[i]);
+        }
+    }
+    Tensor::from_vec(&t.shape, out)
+}
+
 /// 2-D convolution, CHW layout, stride `s`, symmetric zero padding `p`.
 /// `w` is [out_c][in_c][kh][kw]; `x` is [in_c][h][w].
 pub fn conv2d(x: &Tensor, w: &Tensor, b: Option<&[f32]>, stride: usize, pad: usize) -> Tensor {
@@ -169,6 +208,35 @@ mod tests {
         }
         let p = softmax(&[1000.0, 0.0]); // stability
         assert!((p[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_last_dim_is_rowwise() {
+        let t = Tensor::from_vec(&[2, 2], vec![0.0, 0.0, 1000.0, 0.0]);
+        let p = softmax_last_dim(&t);
+        assert!((p.at2(0, 0) - 0.5).abs() < 1e-6);
+        assert!((p.at2(1, 0) - 1.0).abs() < 1e-6);
+        for r in 0..2 {
+            let s: f32 = (0..2).map(|c| p.at2(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layer_norm_normalizes_each_row() {
+        let t = Tensor::from_vec(&[2, 4], vec![1., 2., 3., 4., 10., 10., 10., 10.]);
+        let gamma = vec![1.0; 4];
+        let beta = vec![0.5; 4];
+        let y = layer_norm(&t, &gamma, &beta, 1e-5);
+        // Row 0: zero mean, unit variance before the affine.
+        let row0: Vec<f32> = (0..4).map(|c| y.at2(0, c) - 0.5).collect();
+        assert!(row0.iter().sum::<f32>().abs() < 1e-5);
+        let var: f32 = row0.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        // Constant row collapses to beta.
+        for c in 0..4 {
+            assert!((y.at2(1, c) - 0.5).abs() < 1e-3);
+        }
     }
 
     #[test]

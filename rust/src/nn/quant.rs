@@ -30,10 +30,46 @@ impl QuantParams {
         Self { scale, q_min: 0, q_max }
     }
 
+    /// Symmetric params for *signed* activations on the unsigned macro
+    /// interface: values in `±max_abs` quantize to `−2^(b−1) .. 2^(b−1)−1`
+    /// (−8..7 at 4-b). The layer executors shift these codes by the zero
+    /// point `zp = −q_min` into the macro's unsigned range and restore
+    /// `zp·Σw` digitally — the transformer path's activation format
+    /// (DESIGN.md §10).
+    pub fn signed_acts(max_abs: f32, bits: u32) -> Self {
+        let q_max = (1i64 << (bits - 1)) - 1;
+        let scale = if max_abs > 0.0 { max_abs / q_max as f32 } else { 1.0 };
+        Self { scale, q_min: -(q_max + 1), q_max }
+    }
+
     #[inline]
     pub fn quantize(&self, x: f32) -> i64 {
         let q = (x / self.scale).round() as i64;
         q.clamp(self.q_min, self.q_max)
+    }
+
+    /// The zero point that shifts these params' codes into the macro's
+    /// unsigned window: 0 for unsigned params, `−q_min` (8 at 4-b) for
+    /// [`QuantParams::signed_acts`]. THE single definition — the layer
+    /// executors (`CimLinear::quantize_acts`, the compiled plan's row
+    /// quantizer) and the `zp·Σw` digital restore all derive from here, so
+    /// the format cannot drift between them (DESIGN.md §10).
+    #[inline]
+    pub fn zero_point(&self) -> i64 {
+        (-self.q_min).max(0)
+    }
+
+    /// Quantize a vector into *macro codes*: [`QuantParams::quantize`] per
+    /// element plus the [`QuantParams::zero_point`] shift.
+    pub fn quantize_codes(&self, xs: &[f32]) -> Vec<i64> {
+        let zp = self.zero_point();
+        let mut q = self.quantize_vec(xs);
+        if zp != 0 {
+            for c in q.iter_mut() {
+                *c += zp;
+            }
+        }
+        q
     }
 
     #[inline]
@@ -113,6 +149,22 @@ mod tests {
         assert_eq!(q[1], -7); // the max-abs element pins the scale
         assert_eq!(q[2], (0.35 / p.scale).round() as i64);
         assert!(roundtrip_mse(&w.data, &p) < (p.scale as f64 / 2.0).powi(2));
+    }
+
+    #[test]
+    fn signed_acts_cover_negative_range() {
+        let p = QuantParams::signed_acts(1.4, 4);
+        assert_eq!((p.q_min, p.q_max), (-8, 7));
+        assert_eq!(p.quantize(1.4), 7);
+        assert_eq!(p.quantize(-1.4), -7);
+        assert_eq!(p.quantize(-9.0), -8); // clamped at the asymmetric edge
+        assert_eq!(p.quantize(0.0), 0);
+        // Shifted by the zero point 8, every code lands in the macro's
+        // unsigned 0..15 window.
+        for i in -30..=30 {
+            let q = p.quantize(i as f32 * 0.1) + 8;
+            assert!((0..=15).contains(&q), "code {q}");
+        }
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! A single transformer encoder block (pre-quantization float reference) —
+//! the dynamic-weight workload of DESIGN.md §10.
+//!
+//! Multi-head attention is stored **per head**: `wq/wk/wv[i]` are
+//! `[d_model][d_head]` column-major weight matrices (`w_cols` layout, one
+//! column per output) and `wo[i]` is `[d_head][d_model]`. The output
+//! projection of the concatenated heads is expressed as a sum instead of a
+//! concat — `concat(h_0…h_{H−1})·W_O = Σ_i h_i·W_O[i·d_head‥]` — because
+//! the graph IR has no concat node, and the sum form maps each head's
+//! output projection onto its own weight-stationary macro tile grid.
+//! [`TransformerBlock::forward`] is the float golden
+//! `Graph::from_transformer_block` is checked against.
+
+use crate::nn::ops::{layer_norm, softmax_last_dim};
+use crate::nn::tensor::Tensor;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// LayerNorm epsilon shared by the float reference and the graph builder.
+pub const LN_EPS: f32 = 1e-5;
+
+/// Weights of one encoder block: H-head self-attention + 2-layer FFN, each
+/// sublayer followed by a residual add and LayerNorm (post-norm).
+pub struct TransformerBlock {
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    /// Per-head projections, `w_cols` layout `[d_model][d_head]`.
+    pub wq: Vec<Tensor>,
+    pub wk: Vec<Tensor>,
+    pub wv: Vec<Tensor>,
+    /// Per-head output projection rows, `[d_head][d_model]`.
+    pub wo: Vec<Tensor>,
+    pub bq: Vec<Vec<f32>>,
+    pub bk: Vec<Vec<f32>>,
+    pub bv: Vec<Vec<f32>>,
+    /// Output-projection bias (applied once, not per head).
+    pub b_o: Vec<f32>,
+    pub ln1_gamma: Vec<f32>,
+    pub ln1_beta: Vec<f32>,
+    /// FFN expand, `[d_model][d_ff]`.
+    pub w_ff1: Tensor,
+    pub b_ff1: Vec<f32>,
+    /// FFN contract, `[d_ff][d_model]`.
+    pub w_ff2: Tensor,
+    pub b_ff2: Vec<f32>,
+    pub ln2_gamma: Vec<f32>,
+    pub ln2_beta: Vec<f32>,
+}
+
+fn rand_cols(rows: usize, cols: usize, scale: f32, rng: &mut Xoshiro256) -> Tensor {
+    Tensor::from_vec(
+        &[rows, cols],
+        (0..rows * cols).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect(),
+    )
+}
+
+fn rand_vec(n: usize, scale: f32, rng: &mut Xoshiro256) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// `[rows_a][inner] × [inner][cols_b] → [rows_a][cols_b]` float matmul.
+fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    assert_eq!(a.shape[1], b.shape[0], "matmul inner dims");
+    let (m, k, n) = (a.shape[0], a.shape[1], b.shape[1]);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.at2(i, kk);
+            for j in 0..n {
+                *out.at2_mut(i, j) += av * b.at2(kk, j);
+            }
+        }
+    }
+    out
+}
+
+/// `a · bᵀ` for row-major `a [m][k]`, `b [n][k]` → `[m][n]` (Q·Kᵀ).
+fn matmul_t(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape[1], b.shape[1], "matmul_t inner dims");
+    let (m, k, n) = (a.shape[0], a.shape[1], b.shape[0]);
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += a.at2(i, kk) * b.at2(j, kk);
+            }
+            *out.at2_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
+    let cols = t.shape[1];
+    for row in t.data.chunks_mut(cols) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+impl TransformerBlock {
+    /// Random small-scale init (weights ~ ±1/√fan_in, LN at γ=1, β=0 with a
+    /// small perturbation) — a synthetic but representative block.
+    pub fn new(d_model: usize, heads: usize, d_ff: usize, seed: u64) -> Self {
+        assert!(heads > 0 && d_model % heads == 0, "d_model must divide into heads");
+        let dh = d_model / heads;
+        let mut rng = Xoshiro256::seeded(seed ^ 0x7A11_5EED);
+        let sp = 1.0 / (d_model as f32).sqrt();
+        let so = 1.0 / (dh as f32).sqrt();
+        let per_head = |rows: usize, cols: usize, s: f32, rng: &mut Xoshiro256| -> Vec<Tensor> {
+            (0..heads).map(|_| rand_cols(rows, cols, s, rng)).collect()
+        };
+        Self {
+            d_model,
+            heads,
+            d_ff,
+            wq: per_head(d_model, dh, sp, &mut rng),
+            wk: per_head(d_model, dh, sp, &mut rng),
+            wv: per_head(d_model, dh, sp, &mut rng),
+            wo: per_head(dh, d_model, so, &mut rng),
+            bq: (0..heads).map(|_| rand_vec(dh, 0.05, &mut rng)).collect(),
+            bk: (0..heads).map(|_| rand_vec(dh, 0.05, &mut rng)).collect(),
+            bv: (0..heads).map(|_| rand_vec(dh, 0.05, &mut rng)).collect(),
+            b_o: rand_vec(d_model, 0.05, &mut rng),
+            ln1_gamma: (0..d_model).map(|_| 1.0 + (rng.next_f32() - 0.5) * 0.1).collect(),
+            ln1_beta: rand_vec(d_model, 0.05, &mut rng),
+            w_ff1: rand_cols(d_model, d_ff, sp, &mut rng),
+            b_ff1: rand_vec(d_ff, 0.05, &mut rng),
+            w_ff2: rand_cols(d_ff, d_model, 1.0 / (d_ff as f32).sqrt(), &mut rng),
+            b_ff2: rand_vec(d_model, 0.05, &mut rng),
+            ln2_gamma: (0..d_model).map(|_| 1.0 + (rng.next_f32() - 0.5) * 0.1).collect(),
+            ln2_beta: rand_vec(d_model, 0.05, &mut rng),
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Float reference forward: `x [seq][d_model] → [seq][d_model]`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        assert_eq!(x.rank(), 2);
+        assert_eq!(x.shape[1], self.d_model, "input width vs d_model");
+        let dh = self.d_head();
+        let mut attn = Tensor::zeros(&[x.shape[0], self.d_model]);
+        for i in 0..self.heads {
+            let mut q = matmul(x, &self.wq[i]);
+            add_bias_rows(&mut q, &self.bq[i]);
+            let mut k = matmul(x, &self.wk[i]);
+            add_bias_rows(&mut k, &self.bk[i]);
+            let mut v = matmul(x, &self.wv[i]);
+            add_bias_rows(&mut v, &self.bv[i]);
+            let scores = matmul_t(&q, &k).map(|s| s / (dh as f32).sqrt());
+            let probs = softmax_last_dim(&scores);
+            let ctx = matmul(&probs, &v);
+            let head_out = matmul(&ctx, &self.wo[i]);
+            for (a, h) in attn.data.iter_mut().zip(&head_out.data) {
+                *a += h;
+            }
+        }
+        add_bias_rows(&mut attn, &self.b_o);
+        for (a, xv) in attn.data.iter_mut().zip(&x.data) {
+            *a += xv;
+        }
+        let h1 = layer_norm(&attn, &self.ln1_gamma, &self.ln1_beta, LN_EPS);
+
+        let mut f = matmul(&h1, &self.w_ff1);
+        add_bias_rows(&mut f, &self.b_ff1);
+        let f = f.map(|v| v.max(0.0));
+        let mut f2 = matmul(&f, &self.w_ff2);
+        add_bias_rows(&mut f2, &self.b_ff2);
+        for (o, h) in f2.data.iter_mut().zip(&h1.data) {
+            *o += h;
+        }
+        layer_norm(&f2, &self.ln2_gamma, &self.ln2_beta, LN_EPS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let block = TransformerBlock::new(16, 4, 32, 7);
+        assert_eq!(block.d_head(), 4);
+        let mut rng = Xoshiro256::seeded(3);
+        let x = Tensor::from_vec(&[5, 16], (0..80).map(|_| rng.next_f32() - 0.5).collect());
+        let y = block.forward(&x);
+        assert_eq!(y.shape, vec![5, 16]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // Same weights, same input ⇒ same output (pure function).
+        assert_eq!(block.forward(&x).data, y.data);
+        // Post-norm output rows are normalized: mean ≈ β mean per row.
+        let row0: &[f32] = &y.data[0..16];
+        let mean = row0.iter().sum::<f32>() / 16.0;
+        assert!(mean.abs() < 1.0, "post-LN row mean {mean} implausible");
+    }
+
+    #[test]
+    #[should_panic]
+    fn heads_must_divide_d_model() {
+        let _ = TransformerBlock::new(10, 3, 8, 1);
+    }
+
+    /// The per-head output-projection *sum* equals the textbook
+    /// concat-then-project form.
+    #[test]
+    fn head_sum_equals_concat_projection() {
+        let block = TransformerBlock::new(8, 2, 8, 11);
+        let mut rng = Xoshiro256::seeded(5);
+        // Two per-head context matrices [3][4].
+        let c0 = rand_cols(3, 4, 1.0, &mut rng);
+        let c1 = rand_cols(3, 4, 1.0, &mut rng);
+        // Sum form.
+        let mut sum = matmul(&c0, &block.wo[0]);
+        let s1 = matmul(&c1, &block.wo[1]);
+        for (a, b) in sum.data.iter_mut().zip(&s1.data) {
+            *a += b;
+        }
+        // Concat form: [3][8] × [8][8] with W_O stacked row-wise.
+        let mut cat = Tensor::zeros(&[3, 8]);
+        let mut wo = Tensor::zeros(&[8, 8]);
+        for r in 0..3 {
+            for c in 0..4 {
+                *cat.at2_mut(r, c) = c0.at2(r, c);
+                *cat.at2_mut(r, c + 4) = c1.at2(r, c);
+            }
+        }
+        for r in 0..4 {
+            for c in 0..8 {
+                *wo.at2_mut(r, c) = block.wo[0].at2(r, c);
+                *wo.at2_mut(r + 4, c) = block.wo[1].at2(r, c);
+            }
+        }
+        let want = matmul(&cat, &wo);
+        for (a, b) in sum.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -154,6 +154,15 @@ pub fn run_vector(
             );
         }
     }
+    // Signed-activation zero-point restore (`zp·Σw` per column), then bias
+    // — the exact expression order `CimLinear::run_batch_q` uses, so the
+    // pooled and sequential executors stay bit-identical (DESIGN.md §10).
+    let zp = lin.act_zero();
+    if zp != 0 {
+        for (col, o) in out.iter_mut().enumerate() {
+            *o -= (zp * lin.col_sum(col)) as f32 * deq;
+        }
+    }
     for (o, b) in out.iter_mut().zip(&lin.bias) {
         *o += b;
     }

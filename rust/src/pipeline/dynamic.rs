@@ -1,0 +1,158 @@
+//! Dynamic-weight execution: a placed layer whose weights are runtime
+//! tensors, swapped between calls (DESIGN.md §10).
+//!
+//! The paper's deployment story is weight-stationary — weights load once,
+//! activations stream. Attention breaks that: Q·Kᵀ and attn·V multiply two
+//! runtime tensors, so one operand must be written into the array *during*
+//! inference. [`DynamicLinear`] packages that pattern: a same-shape tile
+//! grid placed once on **dedicated shards** (its own [`MacroPool`], so a
+//! swap never invalidates a co-resident weight-stationary tile and the
+//! shared board's placement balance is undisturbed), plus a
+//! [`DynamicLinear::reload`] path that re-quantizes the per-call operand
+//! (max-abs signed, the "per-call requantization step") and swaps every
+//! tile through [`crate::pipeline::PlacedLinear::reload`] →
+//! [`MacroPool::reload_slot`] — the existing load-time path, so the
+//! precomputed `BitPlanes` rebuild and the bit-plane kernel is untouched.
+//!
+//! Reloads are charged to the device counters like any other work:
+//! `tiles × `[`crate::cim::timing::weight_load_cycles`] cycles and
+//! `tiles × `[`crate::energy::weight_load_energy`] fJ per swap, which is
+//! what makes the compiler's reload-vs-compute cost split exact.
+
+use crate::cim::timing::weight_load_cycles;
+use crate::cim::MacroError;
+use crate::config::Config;
+use crate::energy::weight_load_energy;
+use crate::mapping::executor::CimLinear;
+use crate::mapping::ExecStats;
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+use crate::pipeline::pool::{MacroPool, PlacedLinear};
+
+/// A placed tile grid with swappable weights on its own dedicated shards.
+pub struct DynamicLinear {
+    pool: MacroPool,
+    placed: PlacedLinear,
+    reloads: u64,
+}
+
+impl DynamicLinear {
+    /// Place `lin`'s tile grid on a fresh dedicated pool (fabrication drawn
+    /// as dies `fab_base, fab_base+1, …` so dedicated boards decorrelate
+    /// from the shared one) and load the staging weights once.
+    pub fn place(lin: CimLinear, cfg: &Config, fab_base: usize) -> Result<Self, MacroError> {
+        let mut pool = MacroPool::with_fab_base(cfg.clone(), fab_base);
+        let placed = PlacedLinear::place(lin, &mut pool)?;
+        Ok(Self { pool, placed, reloads: 0 })
+    }
+
+    /// The dedicated pool the tiles live on.
+    pub fn pool(&self) -> &MacroPool {
+        &self.pool
+    }
+
+    /// The placed tile grid (the unit `pipeline::batch::run_vector` runs).
+    pub fn placed(&self) -> &PlacedLinear {
+        &self.placed
+    }
+
+    /// The currently resident quantized layer (last reload's staging).
+    pub fn linear(&self) -> &CimLinear {
+        self.placed.linear()
+    }
+
+    /// Weight swaps performed so far.
+    pub fn reloads(&self) -> u64 {
+        self.reloads
+    }
+
+    /// Reload cycles one swap of this grid costs.
+    pub fn reload_cycles(&self) -> u64 {
+        self.placed.n_tiles() as u64 * weight_load_cycles(self.pool.cfg())
+    }
+
+    /// Swap in a per-call operand: quantize `w_cols` (`[K][N]`, column per
+    /// output) max-abs signed at the macro's weight precision, stage it as
+    /// a fresh [`CimLinear`] under `a_params` (the layer's activation
+    /// boundary, so dequantization folds both scales), and reload every
+    /// tile in place. Charges the swap's cycles/energy/weight-load counters
+    /// to `stats` (DESIGN.md §10).
+    pub fn reload(
+        &mut self,
+        w_cols: &Tensor,
+        a_params: QuantParams,
+        stats: &mut ExecStats,
+    ) -> Result<(), MacroError> {
+        let n = self.placed.linear().n;
+        let w_params = QuantParams::signed(w_cols.max_abs(), self.pool.cfg().mac.weight_bits);
+        // The cfg borrow ends when staging returns, freeing `self.pool`
+        // for the mutable reload — no per-call Config clone on this path.
+        let lin =
+            CimLinear::with_params(w_cols, vec![0.0; n], w_params, a_params, self.pool.cfg());
+        self.placed.reload(&mut self.pool, lin)?;
+        self.reloads += 1;
+        let tiles = self.placed.n_tiles() as u64;
+        stats.weight_loads += tiles;
+        stats.total_cycles += tiles * weight_load_cycles(self.pool.cfg());
+        stats.energy.add(&weight_load_energy(self.pool.cfg(), tiles));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+    use crate::mapping::NativeBackend;
+    use crate::pipeline::batch::{run_vector, StreamCtx, StreamKey};
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn rand_cols(k: usize, n: usize, seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seeded(seed);
+        Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect())
+    }
+
+    /// A reloaded dynamic layer computes exactly what a fresh `CimLinear`
+    /// on a sequential macro computes (noise-free), and the swap is
+    /// charged: cycles, energy and weight loads all move.
+    #[test]
+    fn reload_matches_fresh_sequential_layer() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let (k, n) = (100, 20);
+        let a_params = QuantParams::signed_acts(1.0, cfg.mac.act_bits);
+        let stage = CimLinear::with_params(
+            &Tensor::zeros(&[k, n]),
+            vec![0.0; n],
+            QuantParams::signed(0.0, cfg.mac.weight_bits),
+            a_params,
+            &cfg,
+        );
+        let mut dl = DynamicLinear::place(stage, &cfg, 3).unwrap();
+        assert_eq!(dl.reloads(), 0);
+
+        let mut stats = ExecStats::default();
+        let mut ctx = StreamCtx::new(&cfg);
+        for call in 0..3u64 {
+            let w = rand_cols(k, n, 50 + call);
+            dl.reload(&w, a_params, &mut stats).unwrap();
+            let x: Vec<f32> = (0..k).map(|i| ((i as f32 * 0.13).sin())).collect();
+            let acts = dl.linear().quantize_acts(&x);
+            let key = StreamKey { seed: 9, epoch: call, item: 0 };
+            let got =
+                run_vector(dl.pool(), dl.placed(), key, &acts, &mut ctx, &mut stats).unwrap();
+
+            let wp = QuantParams::signed(w.max_abs(), cfg.mac.weight_bits);
+            let fresh = CimLinear::with_params(&w, vec![0.0; n], wp, a_params, &cfg);
+            let mut nat = NativeBackend::new(cfg.clone());
+            let want = fresh.run_batch(&mut nat, &[x]).unwrap().remove(0);
+            assert_eq!(got, want, "call {call}");
+        }
+        assert_eq!(dl.reloads(), 3);
+        let tiles = dl.placed().n_tiles() as u64;
+        assert_eq!(stats.weight_loads, 3 * tiles);
+        assert!(stats.total_cycles >= 3 * dl.reload_cycles());
+        assert!(stats.energy_fj() > 0.0);
+    }
+}

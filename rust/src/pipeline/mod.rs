@@ -19,6 +19,11 @@
 //! * [`PoolBackend`] — the pool exposed as one virtual macro with
 //!   `shards × cores` cores through the [`crate::mapping::CimBackend`]
 //!   trait, so every existing tiled executor runs on the pool unchanged.
+//! * [`DynamicLinear`] — the dynamic-weight escape hatch (DESIGN.md §10):
+//!   a placed tile grid on dedicated shards whose weights are runtime
+//!   tensors, re-quantized and swapped per call through
+//!   [`MacroPool::reload_slot`] — the substrate of the compiler's
+//!   attention/`MatMul` lowering.
 //!
 //! Determinism contract: with noise disabled the batched pipeline is
 //! bit-identical to the sequential single-macro path (asserted by
@@ -43,9 +48,11 @@
 pub mod backend;
 pub mod batch;
 pub mod deploy;
+pub mod dynamic;
 pub mod pool;
 
 pub use backend::PoolBackend;
 pub use batch::{noise_stream, run_vector, BatchExecutor, StreamCtx, StreamKey};
 pub use deploy::PipelineDeployment;
+pub use dynamic::DynamicLinear;
 pub use pool::{MacroPool, PlacedLinear};

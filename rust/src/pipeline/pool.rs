@@ -45,12 +45,23 @@ pub struct MacroPool {
     /// Per-slot claim flags (one per resident `shard × core`); the placer
     /// claims slots shard-by-shard, `alloc_slot` takes the first free one.
     claimed: Vec<bool>,
+    /// Fabrication-seed base: shard `i` draws as die `fab_base + i`, so
+    /// auxiliary pools (the dynamic-weight layers' dedicated dies,
+    /// DESIGN.md §10) decorrelate from the main board instead of cloning
+    /// its first shards' mismatch.
+    fab_base: usize,
 }
 
 impl MacroPool {
     /// An empty pool; shards are added on demand by [`MacroPool::alloc_slot`].
     pub fn new(cfg: Config) -> Self {
-        Self { cfg, shards: Vec::new(), claimed: Vec::new() }
+        Self::with_fab_base(cfg, 0)
+    }
+
+    /// An empty pool whose shards draw fabrication as dies
+    /// `fab_base, fab_base + 1, …` (auxiliary boards; see `fab_base`).
+    pub fn with_fab_base(cfg: Config, fab_base: usize) -> Self {
+        Self { cfg, shards: Vec::new(), claimed: Vec::new(), fab_base }
     }
 
     /// A pool with `n_shards` pre-built shards.
@@ -64,10 +75,9 @@ impl MacroPool {
         let mut c = self.cfg.clone();
         // Decorrelate the static mismatch of each die; with noise disabled
         // Fabrication zeroes itself, so shards stay bit-identical there.
-        c.noise.fab_seed = c
-            .noise
-            .fab_seed
-            .wrapping_add((index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        c.noise.fab_seed = c.noise.fab_seed.wrapping_add(
+            ((self.fab_base + index) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
         c
     }
 
@@ -152,13 +162,28 @@ impl MacroPool {
     }
 
     /// Load a rows×engines signed weight block into a slot (once, at
-    /// placement time — the hot path never reloads).
+    /// placement time — the weight-stationary hot path never reloads).
     pub fn load_slot(&mut self, slot: usize, w: &[Vec<i64>]) -> Result<(), MacroError> {
         let (s, c) = self.locate(slot);
         if s >= self.shards.len() {
             return Err(MacroError::BadSlot(slot));
         }
         self.shards[s].load_core(c, w)
+    }
+
+    /// Swap the weights of an already-claimed slot — the dynamic-weight
+    /// execution path (DESIGN.md §10). Goes through the exact load-time
+    /// path ([`MacroPool::load_slot`] → `CoreWeights::from_signed`), so the
+    /// precomputed `BitPlanes` view is rebuilt and the bit-plane kernel
+    /// needs no changes; after the swap, ops are bit-identical to a fresh
+    /// pool loaded with these weights (property-tested in
+    /// `tests/dynamic_weights.rs`). The caller accounts the reload cost
+    /// (`cim::timing::weight_load_cycles`, `energy::weight_load_energy`).
+    pub fn reload_slot(&mut self, slot: usize, w: &[Vec<i64>]) -> Result<(), MacroError> {
+        if !self.claimed.get(slot).copied().unwrap_or(false) {
+            return Err(MacroError::BadSlot(slot));
+        }
+        self.load_slot(slot, w)
     }
 
     /// One op on a slot. Takes `&self`: shards are read-only on the op path,
@@ -242,6 +267,29 @@ impl PlacedLinear {
     pub fn n_tiles(&self) -> usize {
         self.slots.len()
     }
+
+    /// Swap the resident weights for a same-geometry `lin` (the staged,
+    /// already-quantized replacement): every tile reloads into its existing
+    /// slot via [`MacroPool::reload_slot`] and `lin` becomes the layer's
+    /// tiler/dequant source. Geometry (K, N, tile grid) must match the
+    /// original placement — dynamic-weight layers fix their shape at
+    /// compile time and only the values change per call (DESIGN.md §10).
+    pub fn reload(&mut self, pool: &mut MacroPool, lin: CimLinear) -> Result<(), MacroError> {
+        assert_eq!(
+            (lin.k, lin.n),
+            (self.lin.k, self.lin.n),
+            "reload must preserve the placed layer's K×N shape"
+        );
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        assert_eq!(n_rt * n_ct, self.slots.len(), "reload must preserve the tile grid");
+        for rt in 0..n_rt {
+            for ct in 0..n_ct {
+                pool.reload_slot(self.slots[rt * n_ct + ct], lin.tile_block(rt, ct))?;
+            }
+        }
+        self.lin = lin;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +357,49 @@ mod tests {
         assert_eq!(pool.alloc_slot_on_shard(1), None);
         assert_eq!(pool.alloc_slot_on_shard(9), None); // absent shard
         assert_eq!(pool.slots_loaded(), 5);
+    }
+
+    #[test]
+    fn reload_slot_requires_a_claimed_slot_and_swaps_weights() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let w1 = vec![vec![1i64; cfg.mac.engines]; cfg.mac.rows];
+        let w2 = vec![vec![-2i64; cfg.mac.engines]; cfg.mac.rows];
+        let mut pool = MacroPool::new(cfg.clone());
+        // Unclaimed (and out-of-range) slots refuse the swap.
+        assert!(matches!(pool.reload_slot(0, &w1), Err(MacroError::BadSlot(0))));
+        let slot = pool.alloc_slot();
+        pool.load_slot(slot, &w1).unwrap();
+        pool.reload_slot(slot, &w2).unwrap();
+        let acts: Vec<i64> = vec![1; cfg.mac.rows];
+        let mut rng = Xoshiro256::seeded(1);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let mut out = CoreOpResult::default();
+        pool.op_into(slot, &acts, &mut rng, &mut scratch, &mut out).unwrap();
+        // The swapped weights answer: ideal codes of w2, not w1.
+        let want = pool.shard(0).ideal_codes(0, &acts).unwrap();
+        assert_eq!(out.codes, want);
+        assert_eq!(pool.shard(0).core_weights(0).unwrap().to_signed(), w2);
+    }
+
+    #[test]
+    fn fab_base_decorrelates_auxiliary_pools() {
+        let cfg = Config::default(); // noise on: fabrication draws differ
+        let a = MacroPool::with_shards(cfg.clone(), 1);
+        let mut b = MacroPool::with_fab_base(cfg.clone(), 7);
+        b.grow_to(1);
+        assert_ne!(
+            a.shard(0).fab.cell_flat(),
+            b.shard(0).fab.cell_flat(),
+            "offset bases must draw distinct dies"
+        );
+        let mut c = MacroPool::with_fab_base(cfg, 0);
+        c.grow_to(1);
+        assert_eq!(
+            a.shard(0).fab.cell_flat(),
+            c.shard(0).fab.cell_flat(),
+            "base 0 is the default board"
+        );
     }
 
     #[test]

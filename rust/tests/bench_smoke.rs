@@ -23,6 +23,7 @@ use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::random_image;
 use cimsim::nn::resnet::ResNet20;
 use cimsim::nn::tensor::Tensor;
+use cimsim::nn::transformer::TransformerBlock;
 use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
 use cimsim::util::rng::{Rng, Xoshiro256};
 use std::time::Instant;
@@ -300,7 +301,64 @@ fn refresh_stream_row() {
     write_rows("BENCH_stream.json", &[row]);
 }
 
-/// One test (not several) so the four refreshes never race on the files.
+fn refresh_attention_row() {
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let workers = cimsim::util::threadpool::default_workers();
+    let mut rows = Vec::new();
+    // Same shapes as benches/attention_block.rs, so a smoke row describes
+    // the exact workload the release bench (and the gate) uses.
+    for (label, seq) in [("reload_bound", 2usize), ("compute_bound", 24usize)] {
+        let (d_model, heads, d_ff) = (32usize, 4usize, 64usize);
+        let block = TransformerBlock::new(d_model, heads, d_ff, 42);
+        let graph = Graph::from_transformer_block(&block, seq);
+        let mut rng = Xoshiro256::seeded(9);
+        let mut rand_x = || {
+            Tensor::from_vec(
+                &[seq, d_model],
+                (0..seq * d_model).map(|_| rng.next_f32() - 0.5).collect(),
+            )
+        };
+        let cal: Vec<Tensor> = (0..2).map(|_| rand_x()).collect();
+        let opts = CompileOptions { workers, ..Default::default() };
+        let mut plan = compile(graph, &cal, &cfg, &opts).unwrap();
+        let report = plan.cost_report().clone();
+        let x = rand_x();
+        let fwd_s = time_mean(2, || {
+            black_box(plan.run_batch(std::slice::from_ref(&x)).unwrap());
+        });
+        plan.reset_stats();
+        plan.run_batch(std::slice::from_ref(&x)).unwrap();
+        let reloads: u64 = plan
+            .layers()
+            .iter()
+            .filter(|l| l.is_dynamic())
+            .map(|l| l.observed().weight_loads)
+            .sum();
+        let device_ms = plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
+        rows.push(json_row(&[
+            JsonField::Str("bench", "attention_block"),
+            JsonField::Str("config", label),
+            JsonField::Int("d_model", d_model as i64),
+            JsonField::Int("heads", heads as i64),
+            JsonField::Int("d_ff", d_ff as i64),
+            JsonField::Int("seq", seq as i64),
+            JsonField::Int("workers", workers as i64),
+            JsonField::Int("dynamic_shards", report.n_dynamic_shards as i64),
+            JsonField::Int("reloads_per_item", reloads as i64),
+            JsonField::Num("forward_ms_per_item", fwd_s * 1e3),
+            JsonField::Num("tok_per_s", seq as f64 / fwd_s),
+            JsonField::Num("reload_cycle_frac", report.reload_cycle_fraction()),
+            JsonField::Num("est_device_ms_per_item", device_ms),
+            JsonField::Str("profile", build_profile()),
+            JsonField::Str("source", "measured"),
+        ]));
+    }
+    write_rows("BENCH_attention.json", &rows);
+}
+
+/// One test (not several) so the five refreshes never race on the files.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
     if needs_refresh("BENCH_kernel.json") {
@@ -315,11 +373,15 @@ fn bench_trajectory_has_no_placeholders() {
     if needs_refresh("BENCH_stream.json") {
         refresh_stream_row();
     }
+    if needs_refresh("BENCH_attention.json") {
+        refresh_attention_row();
+    }
     for f in [
         "BENCH_kernel.json",
         "BENCH_pipeline.json",
         "BENCH_compiler.json",
         "BENCH_stream.json",
+        "BENCH_attention.json",
     ] {
         let text = std::fs::read_to_string(bench_json_path(f)).unwrap();
         assert!(

@@ -1,0 +1,258 @@
+//! Dynamic-weight execution suite (DESIGN.md §10): weight reloads are
+//! bit-transparent (a swapped pool equals a fresh pool), dynamic `MatMul`
+//! lowering is bit-exact against a sequential per-item reference, streamed
+//! execution stays bit-identical to the barrier path through reload stage
+//! barriers, and the reload-vs-compute cost model is exact.
+
+use cimsim::compiler::{compile, transpose_rows_to_cols, CompileOptions, Graph, Op, StreamOptions};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::{MapError, NativeBackend};
+use cimsim::nn::quant::QuantParams;
+use cimsim::nn::tensor::Tensor;
+use cimsim::nn::transformer::TransformerBlock;
+use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use cimsim::prop_assert;
+use cimsim::util::proptest::check;
+
+const MODES: [fn() -> EnhanceConfig; 4] = [
+    EnhanceConfig::default,
+    EnhanceConfig::fold_only,
+    EnhanceConfig::boost_only,
+    EnhanceConfig::both,
+];
+
+fn rand_cols(g: &mut cimsim::util::proptest::Gen, k: usize, n: usize) -> Tensor {
+    Tensor::from_vec(&[k, n], g.vec_f32(k * n, -0.5, 0.5))
+}
+
+/// `reload_slot` is bit-transparent: a pool whose slots were swapped to new
+/// weights answers every op exactly like a fresh pool loaded with those
+/// weights directly — noise on and off, all four enhancement modes (the
+/// `BitPlanes` rebuild goes through the one load-time path).
+#[test]
+fn property_reload_equals_fresh_pool() {
+    check("reload-vs-fresh-pool", 16, |g| {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = g.bool();
+        cfg.enhance = g.pick(&MODES)();
+        let k = g.usize_in(10, 150);
+        let n = g.usize_in(2, 40);
+        let batch = g.usize_in(1, 4);
+
+        let w1 = rand_cols(g, k, n);
+        let w2 = rand_cols(g, k, n);
+        let mk = |w: &Tensor, cfg: &Config| CimLinear::new(w, vec![0.0; n], 1.0, cfg);
+        let xs: Vec<Vec<f32>> = (0..batch).map(|_| g.vec_f32(k, 0.0, 1.0)).collect();
+
+        // Pool A: place w1, run once (irrelevant to later draws — keys are
+        // pure), then swap to w2.
+        let mut pool_a = MacroPool::new(cfg.clone());
+        let mut placed_a = PlacedLinear::place(mk(&w1, &cfg), &mut pool_a)
+            .map_err(|e| format!("place A: {e}"))?;
+        let exec = BatchExecutor::new(2, 77);
+        exec.run(&pool_a, &placed_a, &xs).map_err(|e| format!("warm run: {e}"))?;
+        placed_a
+            .reload(&mut pool_a, mk(&w2, &cfg))
+            .map_err(|e| format!("reload: {e}"))?;
+
+        // Pool B: fresh, w2 from the start (same cfg ⇒ same fabrication).
+        let mut pool_b = MacroPool::new(cfg.clone());
+        let placed_b = PlacedLinear::place(mk(&w2, &cfg), &mut pool_b)
+            .map_err(|e| format!("place B: {e}"))?;
+
+        let q: Vec<Vec<i64>> =
+            xs.iter().map(|x| placed_b.linear().quantize_acts(x)).collect();
+        let (got, sa) = exec
+            .run_q_at(&pool_a, &placed_a, &q, 5, 0)
+            .map_err(|e| format!("run A: {e}"))?;
+        let (want, sb) = exec
+            .run_q_at(&pool_b, &placed_b, &q, 5, 0)
+            .map_err(|e| format!("run B: {e}"))?;
+        prop_assert!(
+            got == want,
+            "mode {} noise {} k {k} n {n}: swapped pool diverged from fresh pool",
+            cfg.enhance.label(),
+            cfg.noise.enabled
+        );
+        prop_assert!(
+            sa.clipped == sb.clipped && sa.total_cycles == sb.total_cycles,
+            "device counters diverged after reload"
+        );
+        Ok(())
+    });
+}
+
+/// Dynamic `MatMul` lowering is bit-exact (noise-free) against a
+/// sequential reference that builds a fresh per-item `CimLinear` from the
+/// runtime operand and runs it on a single macro — all four modes, several
+/// worker counts, the x·xᵀ self-attention core.
+#[test]
+fn property_dynamic_matmul_matches_sequential() {
+    check("dynamic-matmul-vs-sequential", 12, |g| {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = g.pick(&MODES)();
+        let workers = *g.pick(&[1usize, 2, 4]);
+        let seq = g.usize_in(2, 6);
+        let d = g.usize_in(4, 40);
+        let batch = g.usize_in(1, 3);
+
+        // x [seq][d] → Quantize → MatMul(·, xᵀ) — the Q·Kᵀ shape with both
+        // operands runtime tensors.
+        let mut graph = Graph::new();
+        let x = graph.add("input", Op::Input { shape: vec![seq, d] }, &[]);
+        let q = graph.add("q", Op::Quantize { params: None }, &[x]);
+        graph.add("score", Op::MatMul { transpose_b: true }, &[q, x]);
+
+        let cal: Vec<Tensor> =
+            (0..3).map(|_| Tensor::from_vec(&[seq, d], g.vec_f32(seq * d, -1.0, 1.0))).collect();
+        let xs: Vec<Tensor> = (0..batch)
+            .map(|_| Tensor::from_vec(&[seq, d], g.vec_f32(seq * d, -1.0, 1.0)))
+            .collect();
+
+        let opts = CompileOptions { workers, ..Default::default() };
+        let mut plan =
+            compile(graph, &cal, &cfg, &opts).map_err(|e| format!("compile: {e}"))?;
+        prop_assert!(plan.layers().len() == 1 && plan.layers()[0].is_dynamic(), "lowering");
+        let ap = plan.layers()[0].qparams();
+        prop_assert!(ap.q_min < 0, "signed boundary expected for a ± input");
+        let got = plan.run_batch(&xs).map_err(|e| format!("run: {e}"))?;
+
+        // Sequential reference: per item, requantize xᵀ max-abs signed and
+        // run the item's rows through a fresh layer on a single macro.
+        let mut nat = NativeBackend::new(cfg.clone());
+        for (item, x) in xs.iter().enumerate() {
+            let w_cols = transpose_rows_to_cols(x); // [d][seq]
+            let wp = QuantParams::signed(w_cols.max_abs(), cfg.mac.weight_bits);
+            let lin = CimLinear::with_params(&w_cols, vec![0.0; seq], wp, ap, &cfg);
+            let rows: Vec<Vec<i64>> =
+                x.data.chunks(d).map(|r| lin.quantize_acts(r)).collect();
+            let want = lin
+                .run_batch_q(&mut nat, &rows)
+                .map_err(|e| format!("seq ref: {e}"))?;
+            let flat: Vec<f32> = want.into_iter().flatten().collect();
+            prop_assert!(
+                got[item] == flat,
+                "mode {} seq {seq} d {d} workers {workers} item {item}: diverged",
+                cfg.enhance.label()
+            );
+        }
+        // Reload accounting: one grid swap per item.
+        let layer = &plan.layers()[0];
+        prop_assert!(
+            layer.observed().weight_loads == (batch * layer.n_tiles()) as u64,
+            "reload count"
+        );
+        prop_assert!(
+            layer.predicted_cycles() == layer.observed().total_cycles,
+            "reload-aware cycle prediction must be exact"
+        );
+        Ok(())
+    });
+}
+
+/// A full MHA+FFN encoder block: streamed ≡ barrier bit-exact (noise on
+/// and off — the reload stage barrier preserves the §9 substream
+/// contract), counters exact, the reload-vs-compute cost model exact, and
+/// the noise-free output tracks the float-graph golden.
+#[test]
+fn transformer_block_streamed_equals_barrier_and_tracks_golden() {
+    for noise in [false, true] {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = noise;
+        cfg.enhance = EnhanceConfig::both();
+        let block = TransformerBlock::new(16, 2, 24, 21);
+        let seq = 4;
+        let graph = Graph::from_transformer_block(&block, seq);
+        let mut rng = cimsim::util::rng::Xoshiro256::seeded(8);
+        let mut rand_x = |scale: f32| {
+            Tensor::from_vec(
+                &[seq, 16],
+                (0..seq * 16)
+                    .map(|_| (cimsim::util::rng::Rng::next_f32(&mut rng) - 0.5) * scale)
+                    .collect(),
+            )
+        };
+        let cal: Vec<Tensor> = (0..4).map(|_| rand_x(1.0)).collect();
+        let xs: Vec<Tensor> = (0..3).map(|_| rand_x(1.0)).collect();
+        let opts = CompileOptions { workers: 2, ..Default::default() };
+
+        let mut barrier = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+        let mut streamed = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+        let want = barrier.run_batch(&xs).unwrap();
+        let outcome =
+            streamed.run_streamed_with(&xs, &StreamOptions { queue_cap: 2 }).unwrap();
+        assert_eq!(outcome.outputs, want, "noise={noise}: streamed vs barrier");
+        assert_eq!(barrier.stats().core_ops, streamed.stats().core_ops);
+        assert_eq!(barrier.stats().total_cycles, streamed.stats().total_cycles);
+        assert_eq!(barrier.stats().weight_loads, streamed.stats().weight_loads);
+        assert_eq!(barrier.stats().clipped, streamed.stats().clipped);
+
+        // Cost-model exactness with reloads folded in, per layer.
+        for l in streamed.layers() {
+            assert_eq!(
+                l.predicted_cycles(),
+                l.observed().total_cycles,
+                "noise={noise} layer {}",
+                l.name
+            );
+        }
+        // 4 dynamic layers (2 heads × Q·Kᵀ, attn·V), one grid swap per item.
+        let dynamic: Vec<_> = streamed.layers().iter().filter(|l| l.is_dynamic()).collect();
+        assert_eq!(dynamic.len(), 4);
+        for l in &dynamic {
+            assert_eq!(l.observed().weight_loads, (xs.len() * l.n_tiles()) as u64);
+        }
+        let report = streamed.cost_report();
+        assert_eq!(report.n_dynamic_shards, 4);
+        assert!(report.total_est_reload_cycles_per_input() > 0);
+        assert!(report.reload_cycle_fraction() > 0.0 && report.reload_cycle_fraction() < 1.0);
+
+        if !noise {
+            // Quantization-only: the plan tracks the float golden.
+            let golden = graph.eval_float(&xs[0]).unwrap();
+            let gref = &golden[graph.output()].data;
+            let got = &want[0];
+            let (mut sig, mut err) = (0f64, 0f64);
+            for (r, g) in gref.iter().zip(got) {
+                sig += (*r as f64).powi(2);
+                err += (*r as f64 - *g as f64).powi(2);
+            }
+            let snr = 10.0 * (sig / err.max(1e-30)).log10();
+            assert!(snr > 5.0, "noise-free SNR vs float golden too low: {snr:.1} dB");
+            assert!(got.iter().all(|v| v.is_finite()));
+        } else {
+            // Epoch rewind replays the noisy run draw for draw, reloads
+            // included.
+            streamed.set_epoch(0);
+            let replay = streamed.run_streamed(&xs).unwrap();
+            assert_eq!(replay, want, "epoch rewind must replay dynamic layers too");
+        }
+    }
+}
+
+/// Shape policing: a runtime weight operand whose shape disagrees with the
+/// placed grid, and an input whose seq disagrees with compile time, are
+/// both rejected (not silently mis-keyed).
+#[test]
+fn dynamic_shape_mismatches_are_rejected() {
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    // MatMul(q(a), b) where a and b are DIFFERENT nodes so their shapes
+    // can disagree at run time: b = relu(input2-like slice is impossible
+    // here, so reuse input with a second graph).
+    let mut graph = Graph::new();
+    let x = graph.add("input", Op::Input { shape: vec![3, 8] }, &[]);
+    let q = graph.add("q", Op::Quantize { params: None }, &[x]);
+    graph.add("score", Op::MatMul { transpose_b: true }, &[q, x]);
+    let cal = vec![Tensor::from_vec(&[3, 8], vec![0.1; 24])];
+    let mut plan = compile(graph, &cal, &cfg, &CompileOptions::default()).unwrap();
+    // Wrong input shape → shape error, not a bad substream assignment.
+    assert!(matches!(
+        plan.run_batch(&[Tensor::zeros(&[4, 8])]),
+        Err(MapError::Shape(_))
+    ));
+    // Correct shape runs.
+    assert!(plan.run_batch(&[Tensor::zeros(&[3, 8])]).is_ok());
+}

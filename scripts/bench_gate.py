@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare fresh BENCH_*.json rows against the
+checked-in BENCH_baseline.json and fail on significant regressions.
+
+Stdlib only (runs on a bare CI python3). The trajectory files are JSON
+Lines: one object per row, written by `cargo bench --bench <name>` (and
+refreshed by `cargo test` via tests/bench_smoke.rs, which records
+profile="debug" — such rows are ignored here so a debug smoke number can
+never gate a release bench).
+
+Row identity  : file + every string field except profile/source/note, plus
+                every integer field except run-to-run-unstable gauges and
+                machine-dependent values (workers) — integers describe the
+                workload shape (seq, batch), so a FAST-smoke row and a
+                nightly full-depth row with different shapes key separately
+                instead of colliding on one baseline entry.
+Gated metrics : any metric with a `_ms` name component (lower is better),
+                *_per_s and speedup* (higher is better) — always floats.
+                Other numeric fields are informational.
+Tolerance     : CIMSIM_BENCH_TOL (fractional, default 0.25 = 25%).
+Eligibility   : only rows with source=="measured" and profile=="release".
+
+Modes:
+  python3 scripts/bench_gate.py                  # gate (default)
+  python3 scripts/bench_gate.py --write-baseline # refresh BENCH_baseline.json
+  python3 scripts/bench_gate.py --self-test      # unit checks, no files
+
+Bootstrap: while BENCH_baseline.json carries {"meta": {"bootstrap": true}}
+the gate passes and writes BENCH_baseline.candidate.json from the fresh
+rows — run --write-baseline after the first green bench run and commit the
+result to arm the gate.
+"""
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = "BENCH_baseline.json"
+IDENTITY_EXCLUDE = {"profile", "source", "note"}
+# Integer fields that are not workload *shape*: run-to-run-unstable gauges
+# and machine-dependent values (workers = host core count — keying on it
+# would orphan the whole baseline whenever the CI runner hardware changes).
+IDENTITY_INT_EXCLUDE = {"peak_busy_stages", "workers"}
+REPRO = (
+    "CIMSIM_BENCH_FAST=1 cargo bench --bench {bench} "
+    "&& python3 scripts/bench_gate.py"
+)
+
+
+def metric_direction(name):
+    """'down' if lower is better, 'up' if higher is better, None if ungated."""
+    # Latency: a '_ms' component anywhere (barrier_p99_ms, forward_ms_per_item).
+    if name.endswith("_ms") or "_ms_" in name:
+        return "down"
+    if "_per_s" in name or name.startswith("speedup"):
+        return "up"
+    return None
+
+
+def row_key(fname, row):
+    parts = [fname]
+    for k in sorted(row):
+        v = row[k]
+        if isinstance(v, str) and k not in IDENTITY_EXCLUDE:
+            parts.append("%s=%s" % (k, v))
+        elif isinstance(v, int) and not isinstance(v, bool) and k not in IDENTITY_INT_EXCLUDE:
+            parts.append("%s=%d" % (k, v))
+    return " ".join(parts)
+
+
+def eligible(row):
+    return row.get("source") == "measured" and row.get("profile") == "release"
+
+
+def load_rows(root):
+    """{key: (bench_target, {metric: value})} from every BENCH_*.json."""
+    out = {}
+    for fname in sorted(os.listdir(root)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        if fname == BASELINE or fname.endswith(".candidate.json"):
+            continue
+        with open(os.path.join(root, fname)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except ValueError:
+                    print("WARN %s: unparseable row skipped: %r" % (fname, line[:80]))
+                    continue
+                if not eligible(row):
+                    continue
+                metrics = {
+                    k: v
+                    for k, v in row.items()
+                    if isinstance(v, (int, float)) and metric_direction(k)
+                }
+                if metrics:
+                    out[row_key(fname, row)] = (row.get("bench", "?"), metrics)
+    return out
+
+
+def compare(fresh, baseline_rows, tol):
+    """Return (failures, notices, matched): failure strings, notice strings,
+    and how many fresh rows actually had a baseline entry to compare."""
+    failures, notices = [], []
+    matched = 0
+    for key, (bench, metrics) in sorted(fresh.items()):
+        base = baseline_rows.get(key)
+        if base is None:
+            notices.append("NEW   %s (no baseline yet)" % key)
+            continue
+        matched += 1
+        for m, v in sorted(metrics.items()):
+            b = base.get(m)
+            if b is None or b <= 0:
+                continue
+            direction = metric_direction(m)
+            ratio = v / b
+            regressed = ratio > 1 + tol if direction == "down" else ratio < 1 - tol
+            if regressed:
+                failures.append(
+                    "FAIL  %s :: %s %.4g -> %.4g (%+.1f%%, tol %.0f%%)\n"
+                    "      repro: %s"
+                    % (key, m, b, v, (ratio - 1) * 100, tol * 100, REPRO.format(bench=bench))
+                )
+    for key in sorted(baseline_rows):
+        if key not in fresh:
+            notices.append("GONE  %s (in baseline, not in fresh rows)" % key)
+    return failures, notices, matched
+
+
+def write_baseline(root, fresh, path=None):
+    path = path or os.path.join(root, BASELINE)
+    doc = {
+        "meta": {
+            "tool": "scripts/bench_gate.py --write-baseline",
+            "note": "per-row gated metrics; refresh after intentional perf changes",
+        },
+        "rows": {k: metrics for k, (_b, metrics) in sorted(fresh.items())},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def self_test():
+    fresh = {
+        "BENCH_x.json bench=b": ("b", {"fwd_ms": 12.0, "tok_per_s": 80.0}),
+        "BENCH_x.json bench=new": ("new", {"fwd_ms": 1.0}),
+    }
+    base = {"BENCH_x.json bench=b": {"fwd_ms": 10.0, "tok_per_s": 100.0}}
+    fails, notes, matched = compare(fresh, base, tol=0.25)
+    assert not fails, "20%% slowdowns within 25%% tolerance must pass: %s" % fails
+    assert matched == 1
+    assert any(n.startswith("NEW") for n in notes)
+    fails, _, _ = compare(fresh, base, tol=0.10)
+    assert len(fails) == 2, "12.0ms vs 10.0ms and 80/s vs 100/s both exceed 10%%: %s" % fails
+    assert "repro" in fails[0]
+    # Direction sanity: improvements never fail.
+    better = {"BENCH_x.json bench=b": ("b", {"fwd_ms": 5.0, "tok_per_s": 500.0})}
+    fails, _, _ = compare(better, base, tol=0.01)
+    assert not fails, "improvements must pass: %s" % fails
+    # Wholesale key drift must be detectable (matched == 0, not a clean pass).
+    drifted = {"BENCH_x.json bench=b workers=8": ("b", {"fwd_ms": 10.0})}
+    fails, _, matched = compare(drifted, base, tol=0.25)
+    assert not fails and matched == 0
+    # Identity ignores profile/source/note but keeps config strings AND
+    # workload-shape integers (a FAST seq-12 row must never share a key
+    # with a full-depth seq-24 row); measured floats stay out of the key.
+    r1 = {"bench": "a", "config": "fast", "profile": "release", "source": "measured"}
+    r2 = {"bench": "a", "config": "slow", "profile": "release", "source": "measured"}
+    assert row_key("f", r1) != row_key("f", r2)
+    assert row_key("f", r1) == row_key("f", dict(r1, profile="debug"))
+    assert row_key("f", dict(r1, seq=12)) != row_key("f", dict(r1, seq=24))
+    assert row_key("f", dict(r1, seq=12, fwd_ms=1.5)) == row_key("f", dict(r1, seq=12, fwd_ms=9.5))
+    assert row_key("f", dict(r1, peak_busy_stages=3)) == row_key("f", dict(r1, peak_busy_stages=7))
+    assert row_key("f", dict(r1, workers=4)) == row_key("f", dict(r1, workers=8))
+    assert not eligible({"source": "placeholder", "profile": "unmeasured"})
+    assert metric_direction("barrier_p99_ms") == "down"
+    assert metric_direction("forward_ms_per_item") == "down"
+    assert metric_direction("est_device_ms_per_img") == "down"
+    assert metric_direction("img_per_s") == "up"
+    assert metric_direction("tiles") is None
+    print("bench_gate self-test OK")
+
+
+def main(argv):
+    if "--self-test" in argv:
+        self_test()
+        return 0
+    tol = float(os.environ.get("CIMSIM_BENCH_TOL", "0.25"))
+    fresh = load_rows(REPO_ROOT)
+    if "--write-baseline" in argv:
+        if not fresh:
+            print("no eligible (measured, release) rows to baseline — run the benches first")
+            return 1
+        path = write_baseline(REPO_ROOT, fresh)
+        print("wrote %s with %d rows" % (path, len(fresh)))
+        return 0
+
+    baseline_path = os.path.join(REPO_ROOT, BASELINE)
+    if not os.path.exists(baseline_path):
+        print("NOTICE: %s missing — bootstrap pass (run --write-baseline to arm)" % BASELINE)
+        return 0
+    with open(baseline_path) as f:
+        doc = json.load(f)
+    if doc.get("meta", {}).get("bootstrap"):
+        cand = write_baseline(REPO_ROOT, fresh, os.path.join(REPO_ROOT, "BENCH_baseline.candidate.json"))
+        print(
+            "NOTICE: baseline is a bootstrap stub — gate passes.\n"
+            "Candidate written to %s from %d fresh rows; commit it as %s\n"
+            "(or run: python3 scripts/bench_gate.py --write-baseline) to arm the gate."
+            % (cand, len(fresh), BASELINE)
+        )
+        return 0
+    failures, notices, matched = compare(fresh, doc.get("rows", {}), tol)
+    for n in notices:
+        print(n)
+    if failures:
+        print("\nbench-regression gate FAILED (tolerance %.0f%%, CIMSIM_BENCH_TOL to adjust):" % (tol * 100))
+        for f_ in failures:
+            print(f_)
+        return 1
+    if fresh and matched == 0:
+        # An armed baseline that matches nothing compared nothing: row keys
+        # drifted (machine change, renamed fields, reshaped workloads) and a
+        # green result here would be a silently disarmed gate.
+        print(
+            "\nbench-regression gate FAILED: baseline is armed but matched 0 of %d "
+            "fresh rows — row identities drifted; re-arm with "
+            "`python3 scripts/bench_gate.py --write-baseline` on the reference machine"
+            % len(fresh)
+        )
+        return 1
+    print(
+        "bench-regression gate OK: %d of %d rows compared, all within %.0f%% of baseline"
+        % (matched, len(fresh), tol * 100)
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
