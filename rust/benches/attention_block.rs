@@ -13,7 +13,7 @@
 //! cycle share, and the observed reload count).
 //! Run: `cargo bench --bench attention_block` (CIMSIM_BENCH_FAST=1 trims).
 
-use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
+use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField};
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::nn::tensor::Tensor;
@@ -72,7 +72,7 @@ fn main() {
             seq as f64 / m.mean_s,
             report.reload_cycle_fraction() * 100.0
         );
-        rows.push(json_row(&[
+        let mut fields = vec![
             JsonField::Str("bench", "attention_block"),
             JsonField::Str("config", label),
             JsonField::Int("d_model", d_model as i64),
@@ -86,9 +86,9 @@ fn main() {
             JsonField::Num("tok_per_s", seq as f64 / m.mean_s),
             JsonField::Num("reload_cycle_frac", report.reload_cycle_fraction()),
             JsonField::Num("est_device_ms_per_item", device_ms),
-            JsonField::Str("profile", build_profile()),
-            JsonField::Str("source", "measured"),
-        ]));
+        ];
+        fields.extend(provenance_fields());
+        rows.push(json_row(&fields));
     }
 
     let path = bench_json_path("BENCH_attention.json");

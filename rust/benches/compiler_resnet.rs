@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench compiler_resnet` (CIMSIM_BENCH_FAST=1 to trim).
 
-use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
+use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField};
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::nn::dataset::random_image;
@@ -48,7 +48,7 @@ fn main() {
     let device_ms = plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
     let report = plan.cost_report();
 
-    let row = json_row(&[
+    let mut fields = vec![
         JsonField::Str("bench", "compiler_resnet"),
         JsonField::Str("network", "resnet20"),
         JsonField::Int("tiles", report.total_tiles as i64),
@@ -62,9 +62,9 @@ fn main() {
             "est_kcycles_per_img",
             report.total_est_cycles_per_input() as f64 / 1e3,
         ),
-        JsonField::Str("profile", build_profile()),
-        JsonField::Str("source", "measured"),
-    ]);
+    ];
+    fields.extend(provenance_fields());
+    let row = json_row(&fields);
     println!("{row}");
 
     let path = bench_json_path("BENCH_compiler.json");

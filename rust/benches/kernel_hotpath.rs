@@ -1,22 +1,28 @@
-//! Kernel hot-path benchmark: the legacy scalar MAC-phase kernel vs the
-//! bit-plane fast path (DESIGN.md §4), per op and batched, on the 144×32
-//! layer the pipeline bench uses (3 row × 2 col = 6 tiles per vector).
+//! Kernel hot-path benchmark: the scalar→walk→popcount kernel trajectory
+//! (DESIGN.md §4, §11), per op and batched, on the 144×32 layer the
+//! pipeline bench uses (3 row × 2 col = 6 tiles per vector).
 //!
-//! Three layer-level passes over the same placed pool, noise off and on:
+//! Four layer-level passes over the same placed pool, noise off and on:
 //!
 //! * `scalar`   — the pre-fast-path per-op loop: scalar `mac_phase_into` +
 //!   readout per (item, tile), exactly the old `core_op` composition.
-//! * `bitplane` — per-op fast path (`MacroPool::op_into`): the kernel
-//!   prepares each tile's activations and walks the weight bit-planes.
-//! * `batch`    — the batched fast path (`BatchExecutor::run_q`): one
-//!   preparation per (item, row tile) shared by its column tiles, worker
-//!   parallelism disabled (1 worker) so the comparison isolates the kernel.
+//! * `walk`     — the PR-3 per-op fast path pinned to the order-preserving
+//!   row walk (`OpScratch::set_row_walk`): `trailing_zeros` over set rows.
+//! * `popcount` — the per-op bit-matrix kernel (DESIGN.md §11): popcount
+//!   over `act_plane[j] & weight_plane[k]` u64 words, the current default.
+//! * `batch`    — the batch-transposed popcount path (`BatchExecutor::run_q`
+//!   routing whole chunks through `prepare_batch`), 1 worker so the
+//!   comparison isolates the kernel, not threading.
+//!
+//! With noise on the closed-form envelope does not apply: walk and popcount
+//! collapse onto the same template kernel, and those rows mainly track the
+//! noisy per-op path over time.
 //!
 //! Writes the headline rows to `BENCH_kernel.json` at the repo root.
 //! Run: `cargo bench --bench kernel_hotpath` (CIMSIM_BENCH_FAST=1 to trim).
 
 use cimsim::bench::{
-    bench_json_path, black_box, build_profile, json_row, Bench, JsonField,
+    bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField,
 };
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
@@ -118,10 +124,11 @@ fn main() {
             }
         });
 
-        // --- bit-plane per-op ---
+        // --- per-op fast path, pinned to the PR-3 row walk ---
         let mut op_rng = Xoshiro256::seeded(3);
-        let mut scratch = OpScratch::new(&cfg.mac);
-        let bitplane = b.run_slow(&format!("bitplane per-op 144x32 b{batch} {label}"), 10, || {
+        let mut scratch_walk = OpScratch::new(&cfg.mac);
+        scratch_walk.set_row_walk(true);
+        let walk = b.run_slow(&format!("walk     per-op 144x32 b{batch} {label}"), 10, || {
             for acts in &acts_q {
                 for rt in 0..n_rt {
                     let r0 = rt * rows_per_tile;
@@ -133,7 +140,7 @@ fn main() {
                             placed.slot(rt, ct),
                             &tile_acts,
                             &mut op_rng,
-                            &mut scratch,
+                            &mut scratch_walk,
                             &mut op,
                         )
                         .unwrap();
@@ -143,25 +150,55 @@ fn main() {
             }
         });
 
-        // --- bit-plane batched (1 worker: isolate the kernel, not threading) ---
+        // --- per-op popcount kernel (the current default) ---
+        let mut op_rng = Xoshiro256::seeded(3);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let popcount =
+            b.run_slow(&format!("popcount per-op 144x32 b{batch} {label}"), 10, || {
+                for acts in &acts_q {
+                    for rt in 0..n_rt {
+                        let r0 = rt * rows_per_tile;
+                        let upper = (r0 + rows_per_tile).min(k);
+                        tile_acts.fill(0);
+                        tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+                        for ct in 0..n_ct {
+                            pool.op_into(
+                                placed.slot(rt, ct),
+                                &tile_acts,
+                                &mut op_rng,
+                                &mut scratch,
+                                &mut op,
+                            )
+                            .unwrap();
+                            black_box(&op.values);
+                        }
+                    }
+                }
+            });
+
+        // --- batch-transposed popcount (1 worker: isolate the kernel, not
+        //     threading; noise-free only — the noisy leg measures the
+        //     per-item fallback the executor actually takes) ---
         let exec = BatchExecutor::new(1, 3);
-        let batched = b.run_slow(&format!("bitplane batch  144x32 b{batch} {label}"), 10, || {
+        let batched = b.run_slow(&format!("popcount batch  144x32 b{batch} {label}"), 10, || {
             black_box(exec.run_q(&pool, &placed, &acts_q).unwrap());
         });
 
-        let row = json_row(&[
+        let mut fields = vec![
             JsonField::Str("bench", "kernel_hotpath"),
             JsonField::Str("layer", "144x32"),
             JsonField::Int("batch", batch as i64),
             JsonField::Str("noise", if noise { "on" } else { "off" }),
             JsonField::Num("scalar_per_op_ms", scalar.mean_s * 1e3),
-            JsonField::Num("bitplane_per_op_ms", bitplane.mean_s * 1e3),
-            JsonField::Num("bitplane_batch_ms", batched.mean_s * 1e3),
-            JsonField::Num("speedup_per_op", scalar.mean_s / bitplane.mean_s),
-            JsonField::Num("speedup_batch", scalar.mean_s / batched.mean_s),
-            JsonField::Str("profile", build_profile()),
-            JsonField::Str("source", "measured"),
-        ]);
+            JsonField::Num("walk_per_op_ms", walk.mean_s * 1e3),
+            JsonField::Num("popcount_per_op_ms", popcount.mean_s * 1e3),
+            JsonField::Num("popcount_batch_ms", batched.mean_s * 1e3),
+            JsonField::Num("speedup_per_op", scalar.mean_s / popcount.mean_s),
+            JsonField::Num("speedup_vs_walk", walk.mean_s / popcount.mean_s),
+            JsonField::Num("batch_vs_walk_speedup", walk.mean_s / batched.mean_s),
+        ];
+        fields.extend(provenance_fields());
+        let row = json_row(&fields);
         println!("{row}");
         rows_out.push(row);
     }

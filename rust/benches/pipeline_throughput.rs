@@ -9,7 +9,7 @@
 //! (largest batch) to `BENCH_pipeline.json` in the working directory.
 //! Run: `cargo bench --bench pipeline_throughput` (CIMSIM_BENCH_FAST=1 to trim).
 
-use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, Bench, JsonField};
+use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::mapping::NativeBackend;
@@ -55,7 +55,7 @@ fn main() {
         });
 
         let speedup = seq.mean_s / pooled.mean_s;
-        let row = json_row(&[
+        let mut fields = vec![
             JsonField::Str("bench", "pipeline_throughput"),
             JsonField::Str("layer", "144x32"),
             JsonField::Int("batch", batch as i64),
@@ -64,9 +64,9 @@ fn main() {
             JsonField::Num("pooled_ms", pooled.mean_s * 1e3),
             JsonField::Num("req_per_s_pooled", batch as f64 / pooled.mean_s),
             JsonField::Num("speedup", speedup),
-            JsonField::Str("profile", build_profile()),
-            JsonField::Str("source", "measured"),
-        ]);
+        ];
+        fields.extend(provenance_fields());
+        let row = json_row(&fields);
         println!("{row}");
         if batch >= 8 {
             headline = Some(row);

@@ -12,7 +12,7 @@
 //! Run: `cargo bench --bench stream_latency` (CIMSIM_BENCH_FAST=1 to trim).
 
 use cimsim::bench::{
-    bench_json_path, black_box, build_profile, fmt_duration, json_row, percentile, JsonField,
+    bench_json_path, black_box, fmt_duration, json_row, percentile, provenance_fields, JsonField,
 };
 use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
@@ -94,7 +94,7 @@ fn main() {
         barrier_p50 / stream_p50
     );
 
-    let row = json_row(&[
+    let mut fields = vec![
         JsonField::Str("bench", "stream_latency"),
         JsonField::Str("network", "resnet20"),
         JsonField::Int("batch", batch as i64),
@@ -111,9 +111,9 @@ fn main() {
         JsonField::Num("stream_img_per_s", stream_rps),
         JsonField::Num("speedup_p50", barrier_p50 / stream_p50),
         JsonField::Num("speedup_p99", barrier_p99 / stream_p99),
-        JsonField::Str("profile", build_profile()),
-        JsonField::Str("source", "measured"),
-    ]);
+    ];
+    fields.extend(provenance_fields());
+    let row = json_row(&fields);
     let path = bench_json_path("BENCH_stream.json");
     std::fs::write(&path, format!("{row}\n"))
         .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));

@@ -201,6 +201,31 @@ pub fn build_profile() -> &'static str {
     }
 }
 
+/// Whether `CIMSIM_BENCH_FAST=1` trimmed this run — the same switch
+/// [`Bench::default`] consults. Recorded in every JSON row's provenance
+/// (`"fast"`) so a smoke-depth number is never mistaken for a full bench.
+pub fn fast_mode() -> bool {
+    std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1")
+}
+
+/// The host's available hardware parallelism — recorded in every JSON row's
+/// provenance (`"threads"`) so numbers from differently-sized machines are
+/// never silently compared. Excluded from the bench gate's row identity.
+pub fn host_threads() -> i64 {
+    std::thread::available_parallelism().map(|n| n.get() as i64).unwrap_or(1)
+}
+
+/// The shared provenance tail every bench row ends with: build profile,
+/// measurement source, host thread count, and the fast-mode flag.
+pub fn provenance_fields() -> [JsonField<'static>; 4] {
+    [
+        JsonField::Str("profile", build_profile()),
+        JsonField::Str("source", "measured"),
+        JsonField::Int("threads", host_threads()),
+        JsonField::Str("fast", if fast_mode() { "1" } else { "0" }),
+    ]
+}
+
 /// One field of a [`json_row`] (the environment vendors no `serde`).
 pub enum JsonField<'a> {
     Str(&'a str, &'a str),

@@ -2,7 +2,10 @@
 //! loading, and the full MAC + readout operation (native backend).
 
 use crate::cim::adc::readout_into;
-use crate::cim::engine::{mac_phase_prepared_into, ActRangeError, KernelScratch, MacPhase, OpStats};
+use crate::cim::engine::{
+    mac_phase_batch_into, mac_phase_prepared_into, ActRangeError, BatchKernelScratch,
+    KernelScratch, MacPhase, OpStats,
+};
 use crate::cim::golden;
 use crate::cim::noise::{Fabrication, NoiseDraw};
 use crate::cim::timing::finalize_cycles;
@@ -32,6 +35,10 @@ pub struct OpScratch {
     pub draw: NoiseDraw,
     phase: MacPhase,
     kernel: KernelScratch,
+    /// Batch-transposed activation state (noise-free closed form only).
+    batch_kernel: BatchKernelScratch,
+    /// Per-item phases of the batched kernel.
+    batch_phase: Vec<MacPhase>,
 }
 
 impl OpScratch {
@@ -40,7 +47,23 @@ impl OpScratch {
             draw: NoiseDraw::zeros(mac),
             phase: MacPhase::default(),
             kernel: KernelScratch::new(mac),
+            batch_kernel: BatchKernelScratch::default(),
+            batch_phase: Vec::new(),
         }
+    }
+
+    /// Intra-op worker threads for the popcount kernels (single-tile and
+    /// batched) — see [`KernelScratch::set_workers`]. Bit-identical results
+    /// for every worker count; persists across prepares.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.kernel.set_workers(workers);
+        self.batch_kernel.set_workers(workers);
+    }
+
+    /// Force the closed form through the PR-3 per-row walk — see
+    /// [`KernelScratch::set_row_walk`]. Bench trajectory / test witness only.
+    pub fn set_row_walk(&mut self, on: bool) {
+        self.kernel.set_row_walk(on);
     }
 
     /// Load one activation tile into the kernel scratch (validation, folding,
@@ -53,6 +76,18 @@ impl OpScratch {
     pub fn prepare(&mut self, cfg: &Config, acts: &[i64]) -> Result<(), MacroError> {
         self.kernel
             .prepare(cfg, acts)
+            .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })
+    }
+
+    /// Load a whole batch of activation tiles into the batch-transposed
+    /// kernel scratch (DESIGN.md §11). One preparation serves any number of
+    /// [`MacroSim::core_op_batch_prepared_into`] /
+    /// [`crate::pipeline::MacroPool::op_batch_prepared_into`] calls on any
+    /// shard — the batched executors prepare once per row tile and stream
+    /// every (item, column tile) pair through it. Noise-free configs only.
+    pub fn prepare_batch(&mut self, cfg: &Config, batch: &[Vec<i64>]) -> Result<(), MacroError> {
+        self.batch_kernel
+            .prepare_batch(cfg, batch)
             .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })
     }
 }
@@ -238,6 +273,11 @@ impl MacroSim {
     /// growing `outs` in place (`outs[i]` is the result of `batch[i]`).
     /// Draw-for-draw identical to calling `core_op_into` in a loop with the
     /// same RNG, so noisy results match the sequential path bit for bit.
+    ///
+    /// Noise-free under the closed-form envelope with an ideal fabrication,
+    /// the whole batch runs through one transposed preparation and the
+    /// popcount batch kernel (DESIGN.md §11) — per-item results stay
+    /// bit-identical, and no RNG draws are consumed either way.
     pub fn core_op_batch_into<R: Rng>(
         &self,
         core: usize,
@@ -246,6 +286,9 @@ impl MacroSim {
         scratch: &mut OpScratch,
         outs: &mut Vec<CoreOpResult>,
     ) -> Result<(), MacroError> {
+        if KernelScratch::closed_form_capable(&self.cfg) && self.fab.is_ideal() {
+            return self.core_op_batch_closed_form(core, batch, scratch, outs);
+        }
         outs.resize_with(batch.len(), CoreOpResult::default);
         for (acts, out) in batch.iter().zip(outs.iter_mut()) {
             if self.cfg.noise.enabled {
@@ -266,6 +309,84 @@ impl MacroSim {
                 &mut scratch.phase,
             );
             self.finish_op(core, w, &scratch.phase, &scratch.draw, out);
+        }
+        Ok(())
+    }
+
+    /// Closed-form batch op: one transposed preparation + the popcount batch
+    /// kernel + the per-item op tail, in item order. Caller guarantees the
+    /// closed-form envelope and an ideal fabrication.
+    fn core_op_batch_closed_form(
+        &self,
+        core: usize,
+        batch: &[Vec<i64>],
+        scratch: &mut OpScratch,
+        outs: &mut Vec<CoreOpResult>,
+    ) -> Result<(), MacroError> {
+        outs.resize_with(batch.len(), CoreOpResult::default);
+        let w = self.core_weights(core)?;
+        scratch
+            .batch_kernel
+            .prepare_batch(&self.cfg, batch)
+            .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })?;
+        scratch.batch_phase.resize_with(batch.len(), MacPhase::default);
+        mac_phase_batch_into(&self.cfg, w, &self.fab, &scratch.batch_kernel, &mut scratch.batch_phase);
+        for (phase, out) in scratch.batch_phase.iter().zip(outs.iter_mut()) {
+            self.finish_op(core, w, phase, &scratch.draw, out);
+        }
+        Ok(())
+    }
+
+    /// Batched op against the scratch's previously
+    /// [`OpScratch::prepare_batch`]ed activation tiles: the closed-form
+    /// popcount batch kernel when the envelope holds and the fabrication is
+    /// ideal, else a per-item re-preparation through the general walk (the
+    /// stored tiles are replayed, so results still match the sequential
+    /// prepared path bit for bit). Noise-free configs only — noise draws are
+    /// keyed per (item, tile) by the executors and cannot be replayed from a
+    /// batched op.
+    pub fn core_op_batch_prepared_into(
+        &self,
+        core: usize,
+        scratch: &mut OpScratch,
+        outs: &mut Vec<CoreOpResult>,
+    ) -> Result<(), MacroError> {
+        assert!(
+            !self.cfg.noise.enabled,
+            "batched prepared ops are noise-free only (per-item noise streams)"
+        );
+        let w = self.core_weights(core)?;
+        let b = scratch.batch_kernel.batch();
+        outs.resize_with(b, CoreOpResult::default);
+        if scratch.batch_kernel.closed_form() && self.fab.is_ideal() {
+            scratch.batch_phase.resize_with(b, MacPhase::default);
+            mac_phase_batch_into(
+                &self.cfg,
+                w,
+                &self.fab,
+                &scratch.batch_kernel,
+                &mut scratch.batch_phase,
+            );
+            for (phase, out) in scratch.batch_phase.iter().zip(outs.iter_mut()) {
+                self.finish_op(core, w, phase, &scratch.draw, out);
+            }
+            return Ok(());
+        }
+        // Fallback (noise-free but non-ideal fab or non-dyadic gains):
+        // replay each stored tile through the single-tile prepared path.
+        for i in 0..b {
+            let acts: Vec<i64> = scratch.batch_kernel.item_acts(i).to_vec();
+            scratch.prepare(&self.cfg, &acts)?;
+            mac_phase_prepared_into(
+                &self.cfg,
+                core,
+                w,
+                &self.fab,
+                &scratch.draw,
+                &mut scratch.kernel,
+                &mut scratch.phase,
+            );
+            self.finish_op(core, w, &scratch.phase, &scratch.draw, &mut outs[i]);
         }
         Ok(())
     }

@@ -16,7 +16,7 @@ pub mod noise;
 pub mod timing;
 pub mod weights;
 
-pub use engine::{KernelScratch, OpStats};
+pub use engine::{BatchKernelScratch, KernelScratch, OpStats};
 pub use macro_unit::{CoreOpResult, MacroError, MacroSim, OpScratch};
 pub use noise::{Fabrication, NoiseDraw};
 pub use weights::{BitPlanes, CoreWeights};

@@ -42,12 +42,20 @@ pub struct BitPlanes {
 }
 
 impl BitPlanes {
-    fn build(cfg: &MacroConfig, mag: &[u8], sign: &[i8]) -> Self {
+    /// Bit-widths beyond `MAX_KBITS` magnitude bits (9-b sign-magnitude
+    /// weights) don't fit the kernels' stack plane cache (`[u64; 8]`).
+    pub const MAX_KBITS: usize = 8;
+
+    fn build(cfg: &MacroConfig, mag: &[u8], sign: &[i8]) -> Result<Self, WeightError> {
         let (rows, engines) = (cfg.rows, cfg.engines);
         let kbits = cfg.weight_bits as usize - 1;
-        // The walk kernel caches one 64-row window of plane words on the
-        // stack ([u64; 8]); the config layer validates weight_bits ≤ 8.
-        assert!(kbits <= 8, "weight_bits {} beyond the kernel's plane cache", cfg.weight_bits);
+        // The kernels cache one 64-row window of plane words on the stack
+        // ([u64; 8]). The config layer validates weight_bits ≤ 8, but a
+        // hand-built or future-loader config must surface an error here
+        // rather than abort a serving process.
+        if kbits > Self::MAX_KBITS {
+            return Err(WeightError::Precision { weight_bits: cfg.weight_bits });
+        }
         let words = rows.div_ceil(64);
         let mut planes = Self {
             rows,
@@ -77,7 +85,7 @@ impl BitPlanes {
                 }
             }
         }
-        planes
+        Ok(planes)
     }
 
     #[inline]
@@ -135,6 +143,8 @@ pub struct CoreWeights {
 pub enum WeightError {
     Shape { expected: (usize, usize), got: (usize, usize) },
     Range { row: usize, engine: usize, value: i64, max: i64 },
+    /// `weight_bits` exceeds the kernels' `[u64; 8]` plane cache.
+    Precision { weight_bits: u32 },
 }
 
 impl std::fmt::Display for WeightError {
@@ -146,6 +156,11 @@ impl std::fmt::Display for WeightError {
             WeightError::Range { row, engine, value, max } => write!(
                 f,
                 "weight {value} at (row {row}, engine {engine}) outside ±{max}"
+            ),
+            WeightError::Precision { weight_bits } => write!(
+                f,
+                "weight_bits {weight_bits} exceeds the kernel plane cache ({} magnitude bits)",
+                BitPlanes::MAX_KBITS
             ),
         }
     }
@@ -176,7 +191,7 @@ impl CoreWeights {
                 col_sum[e] += v;
             }
         }
-        let planes = BitPlanes::build(cfg, &mag, &sign);
+        let planes = BitPlanes::build(cfg, &mag, &sign)?;
         Ok(Self { rows, engines, mag, sign, col_sum, planes })
     }
 
@@ -363,6 +378,22 @@ mod tests {
                 assert_eq!((p.sign_word(e, wi) >> bit) & 1, 0);
             }
         }
+    }
+
+    /// A precision the plane cache can't hold must come back as a
+    /// `WeightError`, never a panic — a serving process loading a bad
+    /// config has to survive it (ISSUE 6 satellite).
+    #[test]
+    fn oversized_weight_bits_error_instead_of_panicking() {
+        let mut c = cfg();
+        c.weight_bits = 12; // kbits 11 > the [u64; 8] plane cache
+        let w = vec![vec![1i64; c.engines]; c.rows];
+        match CoreWeights::from_signed(&c, &w) {
+            Err(WeightError::Precision { weight_bits: 12 }) => {}
+            other => panic!("expected Precision error, got {other:?}"),
+        }
+        let msg = CoreWeights::from_signed(&c, &w).unwrap_err().to_string();
+        assert!(msg.contains("weight_bits 12"), "{msg}");
     }
 
     #[test]

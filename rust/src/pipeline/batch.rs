@@ -18,6 +18,16 @@
 //! walks the preparation through its core's precomputed
 //! [`crate::cim::BitPlanes`], bit-identical to the scalar reference kernel.
 //!
+//! When the layer is noise-free and inside the popcount exactness envelope
+//! ([`KernelScratch::closed_form_capable`], DESIGN.md §11), a worker's whole
+//! chunk additionally runs through the batch-transposed kernel: one
+//! [`OpScratch::prepare_batch`] per row tile serves every item in the chunk,
+//! and each column tile answers all items from a single cached weight-plane
+//! pass ([`MacroPool::op_batch_prepared_into`]). Per-item outputs accumulate
+//! in the same `(row-tile asc, col-tile asc, engine asc)` order as
+//! [`run_vector`], so the batched outputs stay bit-identical; only the f64
+//! energy tallies may reassociate (integer counters are order-free).
+//!
 //! **Noise-substream contract (DESIGN.md §9).** Every op's dynamic noise
 //! draw comes from [`noise_stream`]`(seed, epoch, item, tile)` — a pure
 //! function of the executor seed, the layer invocation's epoch, the item's
@@ -30,7 +40,7 @@
 //! invocation); a streamed run reserves one epoch per layer up front via
 //! [`BatchExecutor::reserve_epochs`] and replays the same assignment.
 
-use crate::cim::{CoreOpResult, OpScratch};
+use crate::cim::{CoreOpResult, KernelScratch, OpScratch};
 use crate::config::Config;
 use crate::mapping::{account_core_op_into, ExecStats, MapError};
 use crate::pipeline::pool::{MacroPool, PlacedLinear};
@@ -75,6 +85,11 @@ pub struct StreamCtx {
     op: CoreOpResult,
     tile_acts: Vec<i64>,
     folded: Vec<i64>,
+    /// Per-item padded row tiles for the batch-transposed kernel path
+    /// (`run_vectors_closed_form`): `[item][rows]`.
+    tile_acts_b: Vec<Vec<i64>>,
+    /// Per-item op results of one batched column-tile op.
+    ops: Vec<CoreOpResult>,
 }
 
 impl StreamCtx {
@@ -84,6 +99,8 @@ impl StreamCtx {
             op: CoreOpResult::default(),
             tile_acts: Vec::new(),
             folded: Vec::new(),
+            tile_acts_b: Vec::new(),
+            ops: Vec::new(),
         }
     }
 }
@@ -169,6 +186,95 @@ pub fn run_vector(
     Ok(out)
 }
 
+/// Run a worker's whole chunk of activation vectors through the
+/// batch-transposed popcount kernel (DESIGN.md §11): one
+/// [`OpScratch::prepare_batch`] per row tile serves every item, and each
+/// column tile streams its cached weight planes against all items in one
+/// pass ([`MacroPool::op_batch_prepared_into`]).
+///
+/// Noise-free only — batched ops cannot replay the per-`(item, tile)` noise
+/// substreams — and gated on the popcount exactness envelope by the caller.
+/// Per-item partial sums accumulate in the same `(rt, ct, engine)` order as
+/// [`run_vector`], so outputs are bit-identical to the per-item path; the
+/// f64 energy tallies in `stats` may reassociate across items (integer
+/// counters are order-independent sums either way).
+fn run_vectors_closed_form(
+    pool: &MacroPool,
+    layer: &PlacedLinear,
+    acts_chunk: &[Vec<i64>],
+    ctx: &mut StreamCtx,
+    stats: &mut ExecStats,
+) -> Result<Vec<Vec<f32>>, MapError> {
+    let lin = layer.linear();
+    let (k, n) = (lin.k, lin.n);
+    // Item-order shape validation, so the first bad vector reports exactly
+    // as it would from the per-item path.
+    for acts in acts_chunk {
+        if acts.len() != k {
+            return Err(MapError::Shape(format!(
+                "activation length {} vs layer K {k}",
+                acts.len()
+            )));
+        }
+    }
+    let rows = lin.rows_per_tile();
+    let engines = lin.engines_per_tile();
+    let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+    let deq = lin.a_params.scale * lin.w_params.scale;
+    let b = acts_chunk.len();
+
+    let mut out: Vec<Vec<f32>> = (0..b).map(|_| vec![0f32; n]).collect();
+    ctx.tile_acts_b.resize_with(b, Vec::new);
+    for rt in 0..n_rt {
+        let r0 = rt * rows;
+        let upper = (r0 + rows).min(k);
+        for (tile, acts) in ctx.tile_acts_b.iter_mut().zip(acts_chunk) {
+            tile.resize(rows, 0);
+            tile.fill(0);
+            tile[..upper - r0].copy_from_slice(&acts[r0..upper]);
+        }
+        // One batch-transposed prepare per row tile: validation, folding,
+        // act-bit planes and stats templates shared by every column tile.
+        ctx.scratch.prepare_batch(pool.cfg(), &ctx.tile_acts_b[..b])?;
+        for ct in 0..n_ct {
+            let slot = layer.slot(rt, ct);
+            pool.op_batch_prepared_into(slot, &mut ctx.scratch, &mut ctx.ops)?;
+            let c0 = ct * engines;
+            let (sh, co) = pool.locate(slot);
+            let w = pool.shard(sh).core_weights(co)?;
+            for (i, op) in ctx.ops.iter().enumerate() {
+                for (e, &v) in op.values.iter().enumerate() {
+                    let col = c0 + e;
+                    if col < n {
+                        out[i][col] += v as f32 * deq;
+                    }
+                }
+                account_core_op_into(
+                    pool.cfg(),
+                    w,
+                    &ctx.tile_acts_b[i],
+                    &op.stats,
+                    stats,
+                    &mut ctx.folded,
+                );
+            }
+        }
+    }
+    // Same zero-point + bias tail as `run_vector`, per item.
+    let zp = lin.act_zero();
+    for o_row in out.iter_mut() {
+        if zp != 0 {
+            for (col, o) in o_row.iter_mut().enumerate() {
+                *o -= (zp * lin.col_sum(col)) as f32 * deq;
+            }
+        }
+        for (o, bias) in o_row.iter_mut().zip(&lin.bias) {
+            *o += bias;
+        }
+    }
+    Ok(out)
+}
+
 /// Batch-parallel runner over a [`MacroPool`]. Each `run_q` call advances
 /// an epoch that keys every op's noise substream ([`noise_stream`]), so
 /// successive batches (and successive layers within one batch) draw fresh,
@@ -239,9 +345,20 @@ impl BatchExecutor {
         epoch: u64,
         item_base: u64,
     ) -> Result<(Vec<Vec<f32>>, ExecStats), MapError> {
+        // Noise-free layers inside the popcount exactness envelope route each
+        // worker's chunk through the batch-transposed kernel (DESIGN.md §11);
+        // noisy layers must replay per-(item, tile) substreams and stay on
+        // the per-item path.
+        let batch_ok =
+            !pool.cfg().noise.enabled && KernelScratch::closed_form_capable(pool.cfg());
         let chunks = parallel_chunks(acts_q.len(), self.workers, |_w, start, end| {
             let mut ctx = StreamCtx::new(pool.cfg());
             let mut stats = ExecStats::default();
+            if batch_ok && end - start > 1 {
+                let out_rows =
+                    run_vectors_closed_form(pool, layer, &acts_q[start..end], &mut ctx, &mut stats)?;
+                return Ok((out_rows, stats));
+            }
             let mut out_rows: Vec<Vec<f32>> = Vec::with_capacity(end - start);
             for (i, acts) in acts_q[start..end].iter().enumerate() {
                 let key =

@@ -220,6 +220,22 @@ impl MacroPool {
         let shard = self.shards.get(s).ok_or(MacroError::BadSlot(slot))?;
         shard.core_op_prepared_into(c, rng, scratch, out)
     }
+
+    /// Batched op on a slot against the scratch's already-
+    /// [`OpScratch::prepare_batch`]ed activation tiles (noise-free executors
+    /// only — see [`crate::cim::MacroSim::core_op_batch_prepared_into`]).
+    /// Like single preparations, a batch preparation is shard-independent:
+    /// prepare once per row tile, stream every (item, column tile) pair.
+    pub fn op_batch_prepared_into(
+        &self,
+        slot: usize,
+        scratch: &mut OpScratch,
+        outs: &mut Vec<CoreOpResult>,
+    ) -> Result<(), MacroError> {
+        let (s, c) = self.locate(slot);
+        let shard = self.shards.get(s).ok_or(MacroError::BadSlot(slot))?;
+        shard.core_op_batch_prepared_into(c, scratch, outs)
+    }
 }
 
 /// A tiled linear layer pinned to pool slots: `tile (rt, ct) → slot`.

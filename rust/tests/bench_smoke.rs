@@ -10,8 +10,13 @@
 //! Set `CIMSIM_BENCH_REFRESH=1` to force regeneration even over measured
 //! rows; the CI bench-smoke job instead runs the real benches and fails if
 //! any placeholder survives.
+//!
+//! After the refreshes, if `BENCH_baseline.json` is still the bootstrap
+//! stub, this test arms the bench-regression gate by invoking
+//! `scripts/bench_gate.py --write-baseline` (skipped quietly when no
+//! `python3` is on PATH).
 
-use cimsim::bench::{bench_json_path, black_box, build_profile, json_row, JsonField};
+use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, JsonField};
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
 use cimsim::cim::timing::finalize_cycles;
@@ -35,6 +40,16 @@ fn needs_refresh(file_name: &str) -> bool {
     match std::fs::read_to_string(bench_json_path(file_name)) {
         Ok(text) => text.contains("placeholder"),
         Err(_) => true, // missing file: create it
+    }
+}
+
+/// Schema drift also forces a refresh: a measured row written before
+/// `required_field` existed would otherwise survive and fail the
+/// trajectory assertions below.
+fn lacks_field(file_name: &str, required_field: &str) -> bool {
+    match std::fs::read_to_string(bench_json_path(file_name)) {
+        Ok(text) => !text.contains(required_field),
+        Err(_) => true,
     }
 }
 
@@ -121,10 +136,37 @@ fn refresh_kernel_row() {
             }
         });
 
-        // Bit-plane per-op path.
+        // PR-3 row-walk per-op path (the popcount kernel's predecessor,
+        // kept measurable via `OpScratch::set_row_walk`).
+        let mut op_rng = Xoshiro256::seeded(3);
+        let mut scratch_walk = OpScratch::new(&cfg.mac);
+        scratch_walk.set_row_walk(true);
+        let walk_s = time_mean(3, || {
+            for acts in &acts_q {
+                for rt in 0..n_rt {
+                    let r0 = rt * rows_per_tile;
+                    let upper = (r0 + rows_per_tile).min(k);
+                    tile_acts.fill(0);
+                    tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+                    for ct in 0..n_ct {
+                        pool.op_into(
+                            placed.slot(rt, ct),
+                            &tile_acts,
+                            &mut op_rng,
+                            &mut scratch_walk,
+                            &mut op,
+                        )
+                        .unwrap();
+                        black_box(&op.values);
+                    }
+                }
+            }
+        });
+
+        // Popcount per-op path (the current default kernel, DESIGN.md §11).
         let mut op_rng = Xoshiro256::seeded(3);
         let mut scratch = OpScratch::new(&cfg.mac);
-        let bitplane_s = time_mean(3, || {
+        let popcount_s = time_mean(3, || {
             for acts in &acts_q {
                 for rt in 0..n_rt {
                     let r0 = rt * rows_per_tile;
@@ -146,25 +188,27 @@ fn refresh_kernel_row() {
             }
         });
 
-        // Bit-plane batched path (1 worker isolates the kernel).
+        // Batch-transposed popcount path (1 worker isolates the kernel).
         let exec = BatchExecutor::new(1, 3);
         let batch_s = time_mean(3, || {
             black_box(exec.run_q(&pool, &placed, &acts_q).unwrap());
         });
 
-        rows.push(json_row(&[
+        let mut fields = vec![
             JsonField::Str("bench", "kernel_hotpath"),
             JsonField::Str("layer", "144x32"),
             JsonField::Int("batch", batch as i64),
             JsonField::Str("noise", if noise { "on" } else { "off" }),
             JsonField::Num("scalar_per_op_ms", scalar_s * 1e3),
-            JsonField::Num("bitplane_per_op_ms", bitplane_s * 1e3),
-            JsonField::Num("bitplane_batch_ms", batch_s * 1e3),
-            JsonField::Num("speedup_per_op", scalar_s / bitplane_s),
-            JsonField::Num("speedup_batch", scalar_s / batch_s),
-            JsonField::Str("profile", build_profile()),
-            JsonField::Str("source", "measured"),
-        ]));
+            JsonField::Num("walk_per_op_ms", walk_s * 1e3),
+            JsonField::Num("popcount_per_op_ms", popcount_s * 1e3),
+            JsonField::Num("popcount_batch_ms", batch_s * 1e3),
+            JsonField::Num("speedup_per_op", scalar_s / popcount_s),
+            JsonField::Num("speedup_vs_walk", walk_s / popcount_s),
+            JsonField::Num("batch_vs_walk_speedup", walk_s / batch_s),
+        ];
+        fields.extend(provenance_fields());
+        rows.push(json_row(&fields));
     }
     write_rows("BENCH_kernel.json", &rows);
 }
@@ -192,7 +236,7 @@ fn refresh_pipeline_row() {
         black_box(exec.run(&pool, &placed, &xs).unwrap());
     });
 
-    let row = json_row(&[
+    let mut fields = vec![
         JsonField::Str("bench", "pipeline_throughput"),
         JsonField::Str("layer", "144x32"),
         JsonField::Int("batch", batch as i64),
@@ -201,10 +245,9 @@ fn refresh_pipeline_row() {
         JsonField::Num("pooled_ms", pooled_s * 1e3),
         JsonField::Num("req_per_s_pooled", batch as f64 / pooled_s),
         JsonField::Num("speedup", per_request_s / pooled_s),
-        JsonField::Str("profile", build_profile()),
-        JsonField::Str("source", "measured"),
-    ]);
-    write_rows("BENCH_pipeline.json", &[row]);
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_pipeline.json", &[json_row(&fields)]);
 }
 
 fn refresh_compiler_row() {
@@ -230,7 +273,7 @@ fn refresh_compiler_row() {
     let device_ms = plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
     let report = plan.cost_report();
 
-    let row = json_row(&[
+    let mut fields = vec![
         JsonField::Str("bench", "compiler_resnet"),
         JsonField::Str("network", "resnet20"),
         JsonField::Int("tiles", report.total_tiles as i64),
@@ -244,10 +287,9 @@ fn refresh_compiler_row() {
             "est_kcycles_per_img",
             report.total_est_cycles_per_input() as f64 / 1e3,
         ),
-        JsonField::Str("profile", build_profile()),
-        JsonField::Str("source", "measured"),
-    ]);
-    write_rows("BENCH_compiler.json", &[row]);
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_compiler.json", &[json_row(&fields)]);
 }
 
 fn refresh_stream_row() {
@@ -278,7 +320,7 @@ fn refresh_stream_row() {
     let p50 = cimsim::bench::percentile(&lat, 0.50);
     let p99 = cimsim::bench::percentile(&lat, 0.99);
 
-    let row = json_row(&[
+    let mut fields = vec![
         JsonField::Str("bench", "stream_latency"),
         JsonField::Str("network", "resnet20"),
         JsonField::Int("batch", batch as i64),
@@ -295,10 +337,9 @@ fn refresh_stream_row() {
         JsonField::Num("stream_img_per_s", batch as f64 / stream_s),
         JsonField::Num("speedup_p50", barrier_s / p50),
         JsonField::Num("speedup_p99", barrier_s / p99),
-        JsonField::Str("profile", build_profile()),
-        JsonField::Str("source", "measured"),
-    ]);
-    write_rows("BENCH_stream.json", &[row]);
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_stream.json", &[json_row(&fields)]);
 }
 
 fn refresh_attention_row() {
@@ -337,7 +378,7 @@ fn refresh_attention_row() {
             .map(|l| l.observed().weight_loads)
             .sum();
         let device_ms = plan.stats().total_cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
-        rows.push(json_row(&[
+        let mut fields = vec![
             JsonField::Str("bench", "attention_block"),
             JsonField::Str("config", label),
             JsonField::Int("d_model", d_model as i64),
@@ -351,29 +392,65 @@ fn refresh_attention_row() {
             JsonField::Num("tok_per_s", seq as f64 / fwd_s),
             JsonField::Num("reload_cycle_frac", report.reload_cycle_fraction()),
             JsonField::Num("est_device_ms_per_item", device_ms),
-            JsonField::Str("profile", build_profile()),
-            JsonField::Str("source", "measured"),
-        ]));
+        ];
+        fields.extend(provenance_fields());
+        rows.push(json_row(&fields));
     }
     write_rows("BENCH_attention.json", &rows);
+}
+
+/// If `BENCH_baseline.json` is still the bootstrap stub, arm the
+/// bench-regression gate from the freshly-measured rows. Quietly a no-op
+/// when `python3` is unavailable (the CI python job arms it instead).
+fn arm_baseline_if_bootstrap() {
+    let baseline = bench_json_path("BENCH_baseline.json");
+    let is_stub = match std::fs::read_to_string(&baseline) {
+        Ok(text) => text.contains("\"bootstrap\""),
+        Err(_) => true,
+    };
+    if !is_stub {
+        return;
+    }
+    let script = bench_json_path("scripts/bench_gate.py");
+    match std::process::Command::new("python3")
+        .arg(&script)
+        .arg("--write-baseline")
+        .output()
+    {
+        Ok(out) if out.status.success() => {
+            println!("bench_smoke: armed {}", baseline.display());
+        }
+        Ok(out) => {
+            println!(
+                "bench_smoke: bench_gate.py --write-baseline failed (gate stays bootstrap):\n{}{}",
+                String::from_utf8_lossy(&out.stdout),
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        Err(e) => println!("bench_smoke: python3 unavailable, gate stays bootstrap: {e}"),
+    }
 }
 
 /// One test (not several) so the five refreshes never race on the files.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
-    if needs_refresh("BENCH_kernel.json") {
+    // The kernel file also refreshes on schema drift: a measured pre-§11
+    // row has no popcount column and would fail the trajectory assertion.
+    if needs_refresh("BENCH_kernel.json") || lacks_field("BENCH_kernel.json", "popcount_batch_ms")
+    {
         refresh_kernel_row();
     }
-    if needs_refresh("BENCH_pipeline.json") {
+    if needs_refresh("BENCH_pipeline.json") || lacks_field("BENCH_pipeline.json", "\"threads\"") {
         refresh_pipeline_row();
     }
-    if needs_refresh("BENCH_compiler.json") {
+    if needs_refresh("BENCH_compiler.json") || lacks_field("BENCH_compiler.json", "\"threads\"") {
         refresh_compiler_row();
     }
-    if needs_refresh("BENCH_stream.json") {
+    if needs_refresh("BENCH_stream.json") || lacks_field("BENCH_stream.json", "\"threads\"") {
         refresh_stream_row();
     }
-    if needs_refresh("BENCH_attention.json") {
+    if needs_refresh("BENCH_attention.json") || lacks_field("BENCH_attention.json", "\"threads\"")
+    {
         refresh_attention_row();
     }
     for f in [
@@ -389,5 +466,15 @@ fn bench_trajectory_has_no_placeholders() {
             "{f} still carries a placeholder row after the smoke refresh"
         );
         assert!(text.contains("\"source\": \"measured\""), "{f} lacks a measured row");
+        assert!(
+            text.contains("\"threads\"") && text.contains("\"fast\""),
+            "{f} rows lack thread-count / fast-mode provenance"
+        );
     }
+    let kernel = std::fs::read_to_string(bench_json_path("BENCH_kernel.json")).unwrap();
+    assert!(
+        kernel.contains("popcount_batch_ms") && kernel.contains("batch_vs_walk_speedup"),
+        "BENCH_kernel.json lacks the popcount-kernel trajectory row"
+    );
+    arm_baseline_if_bootstrap();
 }

@@ -94,6 +94,15 @@ fn gen_acts(cfg: &Config, rng: &mut Xoshiro256, pattern: usize) -> Vec<i64> {
             1 => 0,                        // all-zero tile (padding)
             2 => cfg.enhance.fold_offset,  // folds to exactly 0 when folding
             3 => 15,                       // max magnitude → clipped lines
+            4 => {
+                // single set bit in the top (possibly partial) u64 word —
+                // exercises the popcount kernel's last-word masking
+                if r == cfg.mac.rows - 1 {
+                    9
+                } else {
+                    0
+                }
+            }
             _ => {
                 if r % 5 == 0 {
                     rng.next_range_i64(1, 15)
@@ -116,7 +125,7 @@ fn property_bitplane_kernel_matches_scalar_kernel() {
         cfg.noise.enabled = noise;
         let core = g.usize_in(0, cfg.mac.cores - 1);
         let wp = g.usize_in(0, 3);
-        let ap = g.usize_in(0, 4);
+        let ap = g.usize_in(0, 5);
 
         let mut rng = Xoshiro256::seeded(g.case_seed ^ 0xB17);
         let w_rows = gen_weights(&cfg, &mut rng, wp);
@@ -162,7 +171,7 @@ fn property_scratch_and_batch_paths_match_allocating_path() {
         let mut rng = Xoshiro256::seeded(g.case_seed ^ 0x5CA7);
         let w_rows = gen_weights(&cfg, &mut rng, g.usize_in(0, 3));
         let batch: Vec<Vec<i64>> = (0..n_ops)
-            .map(|_| gen_acts(&cfg, &mut rng, g.usize_in(0, 4)))
+            .map(|_| gen_acts(&cfg, &mut rng, g.usize_in(0, 5)))
             .collect();
         let mut sim = MacroSim::new(cfg.clone());
         sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
@@ -199,6 +208,121 @@ fn property_scratch_and_batch_paths_match_allocating_path() {
         }
         Ok(())
     });
+}
+
+/// The popcount kernel (DESIGN.md §11) on odd geometries: 70 rows forces a
+/// partial last u64 word, and every degenerate tile the issue names —
+/// all-zero activations, a single set bit in the top word, saturated
+/// weights — must match the scalar oracle bit for bit, across all four
+/// enhancement modes, on both the single-op and the batch-transposed path.
+#[test]
+fn property_popcount_matches_scalar_on_odd_rows() {
+    check("popcount-odd-rows", 60, |g| {
+        let mut cfg = Config::default();
+        cfg.mac.rows = 70; // partial last word: 70 = 64 + 6
+        cfg.enhance = g.pick(&MODES)();
+        cfg.noise.enabled = false; // the popcount envelope is noise-free
+        let core = g.usize_in(0, cfg.mac.cores - 1);
+        let wp = g.usize_in(0, 3);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0x0DD);
+        let w_rows = gen_weights(&cfg, &mut rng, wp);
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
+        let w = CoreWeights::from_signed(&cfg.mac, &w_rows).unwrap();
+        let draw = NoiseDraw::zeros(&cfg.mac);
+
+        // One tile per activation pattern, including every degenerate case.
+        let batch: Vec<Vec<i64>> =
+            (0..=5).map(|ap| gen_acts(&cfg, &mut rng, ap)).collect();
+        let mut want = Vec::new();
+        for acts in &batch {
+            want.push(legacy_core_op(&cfg, &sim, core, &w, acts, &draw));
+        }
+
+        // Single-op popcount path.
+        for (ap, acts) in batch.iter().enumerate() {
+            let got = sim
+                .core_op_with_noise(core, acts, &draw)
+                .map_err(|e| format!("op: {e}"))?;
+            let tag = format!("mode {} wp {wp} ap {ap}", cfg.enhance.label());
+            prop_assert!(got.codes == want[ap].codes, "codes differ ({tag})");
+            prop_assert!(got.values == want[ap].values, "values differ ({tag})");
+            prop_assert!(got.stats == want[ap].stats, "stats differ ({tag})");
+        }
+
+        // Batch-transposed popcount path over the same tiles.
+        let mut rng_b = Xoshiro256::seeded(1);
+        let mut scratch = OpScratch::new(&cfg.mac);
+        let mut outs = Vec::new();
+        sim.core_op_batch_into(core, &batch, &mut rng_b, &mut scratch, &mut outs)
+            .map_err(|e| format!("{e}"))?;
+        for (ap, got) in outs.iter().enumerate() {
+            let tag = format!("batch mode {} wp {wp} ap {ap}", cfg.enhance.label());
+            prop_assert!(got.codes == want[ap].codes, "codes differ ({tag})");
+            prop_assert!(got.values == want[ap].values, "values differ ({tag})");
+            prop_assert!(got.stats == want[ap].stats, "stats differ ({tag})");
+        }
+        Ok(())
+    });
+}
+
+/// Worker-count invariance: on a tile large enough to cross the intra-op
+/// threading threshold (250 rows × 64 engines), the popcount kernel with 1,
+/// 2 and 5 workers — and the order-preserving row walk — all produce
+/// bit-identical results, single-op and batched.
+#[test]
+fn popcount_multithreaded_bit_identity() {
+    let mut cfg = Config::default();
+    cfg.mac.rows = 250; // odd top word again (250 = 3×64 + 58)
+    cfg.mac.engines = 64; // engines·words·abits·kbits ≥ the threading floor
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let core = 0;
+
+    let mut rng = Xoshiro256::seeded(0xBEEF);
+    let w_rows = gen_weights(&cfg, &mut rng, 0);
+    let batch: Vec<Vec<i64>> = (0..=5).map(|ap| gen_acts(&cfg, &mut rng, ap)).collect();
+    let mut sim = MacroSim::new(cfg.clone());
+    sim.load_core(core, &w_rows).unwrap();
+
+    // Reference: the order-preserving row walk (the PR-3 kernel).
+    let mut walk = OpScratch::new(&cfg.mac);
+    walk.set_row_walk(true);
+    let mut want = Vec::new();
+    for acts in &batch {
+        let mut rng_w = Xoshiro256::seeded(2);
+        let mut out = CoreOpResult::default();
+        sim.core_op_into(core, acts, &mut rng_w, &mut walk, &mut out).unwrap();
+        want.push(out.clone());
+    }
+
+    for workers in [1usize, 2, 5] {
+        // Single-op popcount path at this worker count.
+        let mut scratch = OpScratch::new(&cfg.mac);
+        scratch.set_workers(workers);
+        let mut out = CoreOpResult::default();
+        for (i, acts) in batch.iter().enumerate() {
+            let mut rng_o = Xoshiro256::seeded(2);
+            sim.core_op_into(core, acts, &mut rng_o, &mut scratch, &mut out).unwrap();
+            assert_eq!(out.codes, want[i].codes, "workers {workers} op {i}");
+            assert_eq!(out.values, want[i].values, "workers {workers} op {i}");
+            assert_eq!(out.stats, want[i].stats, "workers {workers} op {i}");
+        }
+
+        // Batch-transposed path at this worker count.
+        let mut scratch_b = OpScratch::new(&cfg.mac);
+        scratch_b.set_workers(workers);
+        let mut rng_b = Xoshiro256::seeded(2);
+        let mut outs = Vec::new();
+        sim.core_op_batch_into(core, &batch, &mut rng_b, &mut scratch_b, &mut outs)
+            .unwrap();
+        for (i, got) in outs.iter().enumerate() {
+            assert_eq!(got.codes, want[i].codes, "batch workers {workers} op {i}");
+            assert_eq!(got.values, want[i].values, "batch workers {workers} op {i}");
+            assert_eq!(got.stats, want[i].stats, "batch workers {workers} op {i}");
+        }
+    }
 }
 
 /// End to end through the pool: the batched executor (which now prepares the

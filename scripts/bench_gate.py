@@ -5,20 +5,22 @@ checked-in BENCH_baseline.json and fail on significant regressions.
 Stdlib only (runs on a bare CI python3). The trajectory files are JSON
 Lines: one object per row, written by `cargo bench --bench <name>` (and
 refreshed by `cargo test` via tests/bench_smoke.rs, which records
-profile="debug" — such rows are ignored here so a debug smoke number can
-never gate a release bench).
+profile="debug" — the profile joins each row's identity, so a debug smoke
+number baselines separately and can never gate a release bench).
 
-Row identity  : file + every string field except profile/source/note, plus
-                every integer field except run-to-run-unstable gauges and
-                machine-dependent values (workers) — integers describe the
-                workload shape (seq, batch), so a FAST-smoke row and a
-                nightly full-depth row with different shapes key separately
-                instead of colliding on one baseline entry.
+Row identity  : file + every string field except source/note/fast (the
+                build profile IS part of the identity), plus every integer
+                field except run-to-run-unstable gauges and
+                machine-dependent values (workers, threads) — integers
+                describe the workload shape (seq, batch), so a FAST-smoke
+                row and a nightly full-depth row with different shapes key
+                separately instead of colliding on one baseline entry.
 Gated metrics : any metric with a `_ms` name component (lower is better),
                 *_per_s and speedup* (higher is better) — always floats.
                 Other numeric fields are informational.
 Tolerance     : CIMSIM_BENCH_TOL (fractional, default 0.25 = 25%).
-Eligibility   : only rows with source=="measured" and profile=="release".
+Eligibility   : any row with source=="measured" (debug and release rows
+                both arm the gate, under separate per-profile keys).
 
 Modes:
   python3 scripts/bench_gate.py                  # gate (default)
@@ -37,11 +39,16 @@ import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE = "BENCH_baseline.json"
-IDENTITY_EXCLUDE = {"profile", "source", "note"}
+# Provenance strings, not workload identity: "fast" records measurement
+# depth (CIMSIM_BENCH_FAST), which the tolerance absorbs; "profile" is NOT
+# here — a debug smoke row must never share a baseline entry with a release
+# row.
+IDENTITY_EXCLUDE = {"source", "note", "fast"}
 # Integer fields that are not workload *shape*: run-to-run-unstable gauges
-# and machine-dependent values (workers = host core count — keying on it
-# would orphan the whole baseline whenever the CI runner hardware changes).
-IDENTITY_INT_EXCLUDE = {"peak_busy_stages", "workers"}
+# and machine-dependent values (workers / threads = host core count —
+# keying on them would orphan the whole baseline whenever the CI runner
+# hardware changes).
+IDENTITY_INT_EXCLUDE = {"peak_busy_stages", "workers", "threads"}
 REPRO = (
     "CIMSIM_BENCH_FAST=1 cargo bench --bench {bench} "
     "&& python3 scripts/bench_gate.py"
@@ -70,7 +77,16 @@ def row_key(fname, row):
 
 
 def eligible(row):
-    return row.get("source") == "measured" and row.get("profile") == "release"
+    return row.get("source") == "measured"
+
+
+def key_profile(key):
+    """The build profile encoded in a row key (or None). Row-key parts are
+    space-joined "k=v" tokens; our profile values never contain spaces."""
+    for part in key.split():
+        if part.startswith("profile="):
+            return part[len("profile="):]
+    return None
 
 
 def load_rows(root):
@@ -169,17 +185,25 @@ def self_test():
     drifted = {"BENCH_x.json bench=b workers=8": ("b", {"fwd_ms": 10.0})}
     fails, _, matched = compare(drifted, base, tol=0.25)
     assert not fails and matched == 0
-    # Identity ignores profile/source/note but keeps config strings AND
-    # workload-shape integers (a FAST seq-12 row must never share a key
-    # with a full-depth seq-24 row); measured floats stay out of the key.
+    # Identity ignores source/note/fast but keeps the build profile, config
+    # strings AND workload-shape integers (a FAST seq-12 row must never
+    # share a key with a full-depth seq-24 row); measured floats and
+    # machine-dependent thread counts stay out of the key.
     r1 = {"bench": "a", "config": "fast", "profile": "release", "source": "measured"}
     r2 = {"bench": "a", "config": "slow", "profile": "release", "source": "measured"}
     assert row_key("f", r1) != row_key("f", r2)
-    assert row_key("f", r1) == row_key("f", dict(r1, profile="debug"))
+    assert row_key("f", r1) != row_key("f", dict(r1, profile="debug")), \
+        "profiles must baseline separately"
+    assert row_key("f", r1) == row_key("f", dict(r1, fast="1"))
     assert row_key("f", dict(r1, seq=12)) != row_key("f", dict(r1, seq=24))
     assert row_key("f", dict(r1, seq=12, fwd_ms=1.5)) == row_key("f", dict(r1, seq=12, fwd_ms=9.5))
     assert row_key("f", dict(r1, peak_busy_stages=3)) == row_key("f", dict(r1, peak_busy_stages=7))
     assert row_key("f", dict(r1, workers=4)) == row_key("f", dict(r1, workers=8))
+    assert row_key("f", dict(r1, threads=4)) == row_key("f", dict(r1, threads=16))
+    assert key_profile(row_key("f", r1)) == "release"
+    assert key_profile("BENCH_x.json bench=b") is None
+    assert eligible({"source": "measured", "profile": "debug"}), \
+        "debug smoke rows arm the gate under their own profile key"
     assert not eligible({"source": "placeholder", "profile": "unmeasured"})
     assert metric_direction("barrier_p99_ms") == "down"
     assert metric_direction("forward_ms_per_item") == "down"
@@ -227,16 +251,28 @@ def main(argv):
             print(f_)
         return 1
     if fresh and matched == 0:
-        # An armed baseline that matches nothing compared nothing: row keys
-        # drifted (machine change, renamed fields, reshaped workloads) and a
-        # green result here would be a silently disarmed gate.
+        # An armed baseline that matches nothing compared nothing. If the
+        # baseline and the fresh rows share a build profile, row keys
+        # drifted (machine change, renamed fields, reshaped workloads) and
+        # a green result here would be a silently disarmed gate. If they
+        # don't overlap at all (say, a debug-armed baseline vs a release CI
+        # run), there was legitimately nothing to compare.
+        fresh_profiles = {key_profile(k) for k in fresh}
+        base_profiles = {key_profile(k) for k in doc.get("rows", {})}
+        if fresh_profiles & base_profiles:
+            print(
+                "\nbench-regression gate FAILED: baseline is armed but matched 0 of %d "
+                "fresh rows — row identities drifted; re-arm with "
+                "`python3 scripts/bench_gate.py --write-baseline` on the reference machine"
+                % len(fresh)
+            )
+            return 1
         print(
-            "\nbench-regression gate FAILED: baseline is armed but matched 0 of %d "
-            "fresh rows — row identities drifted; re-arm with "
-            "`python3 scripts/bench_gate.py --write-baseline` on the reference machine"
-            % len(fresh)
+            "NOTICE: baseline profiles %s have no overlap with fresh profiles %s — "
+            "nothing comparable; run the matching-profile benches to gate"
+            % (sorted(p or "?" for p in base_profiles), sorted(p or "?" for p in fresh_profiles))
         )
-        return 1
+        return 0
     print(
         "bench-regression gate OK: %d of %d rows compared, all within %.0f%% of baseline"
         % (matched, len(fresh), tol * 100)
