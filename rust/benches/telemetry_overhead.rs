@@ -1,0 +1,223 @@
+//! Telemetry-overhead benchmark (DESIGN.md §12): what does instrumentation
+//! cost on the kernel hot path?
+//!
+//! Three sweeps over the same placed 144×32 layer (64 quantized vectors,
+//! noise off — the popcount exactness envelope the serve path actually
+//! runs):
+//!
+//! * `raw`      — a hand-inlined replica of [`run_vector`]'s loop with NO
+//!   telemetry: prepare-once per row tile, `op_prepared_into` per column
+//!   tile, the same dequant/zero-point/bias tail and op accounting. The
+//!   uninstrumented floor.
+//! * `disabled` — the real [`run_vector`] with tracing OFF: per row tile
+//!   the span guard costs one relaxed atomic load. This is the production
+//!   configuration; the acceptance bar is **< 2% over `raw`**.
+//! * `enabled`  — the real [`run_vector`] with tracing ON: every row tile
+//!   records a span into the bounded ring (timestamp + push under a lock).
+//!
+//! Overhead is computed on min-of-samples (jitter-robust); a sweep that
+//! still shows ≥ 1% disabled overhead re-measures up to three attempts and
+//! keeps the best, so a scheduler hiccup cannot masquerade as a telemetry
+//! regression. Writes `BENCH_telemetry.json` at the repo root.
+//! Run: `cargo bench --bench telemetry_overhead` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{
+    bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField,
+};
+use cimsim::cim::{CoreOpResult, OpScratch};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::{account_core_op_into, ExecStats};
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{run_vector, MacroPool, PlacedLinear, StreamCtx, StreamKey};
+use cimsim::telemetry::trace;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+/// `run_vector` minus telemetry: same prepare-once kernel walk, same
+/// accounting, no span guard. Kept in sync by hand — if `run_vector` gains
+/// work, this floor must gain it too or the overhead numbers go stale.
+#[allow(clippy::too_many_arguments)]
+fn raw_vector(
+    pool: &MacroPool,
+    placed: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    scratch: &mut OpScratch,
+    op: &mut CoreOpResult,
+    tile_acts: &mut Vec<i64>,
+    folded: &mut Vec<i64>,
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let lin = placed.linear();
+    let (k, n) = (lin.k, lin.n);
+    let rows = lin.rows_per_tile();
+    let engines = lin.engines_per_tile();
+    let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+    let deq = lin.a_params.scale * lin.w_params.scale;
+    tile_acts.resize(rows, 0);
+    let mut out = vec![0f32; n];
+    for rt in 0..n_rt {
+        let r0 = rt * rows;
+        let upper = (r0 + rows).min(k);
+        tile_acts.fill(0);
+        tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+        scratch.prepare(pool.cfg(), tile_acts).unwrap();
+        for ct in 0..n_ct {
+            let slot = placed.slot(rt, ct);
+            let mut rng = cimsim::pipeline::noise_stream(
+                key.seed,
+                key.epoch,
+                key.item,
+                (rt * n_ct + ct) as u64,
+            );
+            pool.op_prepared_into(slot, &mut rng, scratch, op).unwrap();
+            let c0 = ct * engines;
+            for (e, &v) in op.values.iter().enumerate() {
+                let col = c0 + e;
+                if col < n {
+                    out[col] += v as f32 * deq;
+                }
+            }
+            let (sh, co) = pool.locate(slot);
+            let w = pool.shard(sh).core_weights(co).unwrap();
+            account_core_op_into(pool.cfg(), w, tile_acts, &op.stats, stats, folded);
+        }
+    }
+    let zp = lin.act_zero();
+    if zp != 0 {
+        for (col, o) in out.iter_mut().enumerate() {
+            *o -= (zp * lin.col_sum(col)) as f32 * deq;
+        }
+    }
+    for (o, b) in out.iter_mut().zip(&lin.bias) {
+        *o += b;
+    }
+    out
+}
+
+fn main() {
+    let b = Bench::default();
+    let (k, n, batch) = (144usize, 32usize, 64usize);
+
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+
+    let mut rng = Xoshiro256::seeded(11);
+    let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+    let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+    let acts_q: Vec<Vec<i64>> = (0..batch)
+        .map(|i| {
+            lin.quantize_acts(
+                &(0..k).map(|j| ((i * 5 + j * 3) % 17) as f32 / 17.0).collect::<Vec<f32>>(),
+            )
+        })
+        .collect();
+    let n_rt = lin.n_row_tiles();
+
+    let mut pool = MacroPool::new(cfg.clone());
+    let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+    let key_of = |i: usize| StreamKey { seed: 3, epoch: 0, item: i as u64 };
+
+    // Sanity: the raw floor computes the same outputs as the real path
+    // (otherwise the overhead comparison is between different work).
+    {
+        let mut ctx = StreamCtx::new(&cfg);
+        let (mut sc, mut op) = (OpScratch::new(&cfg.mac), CoreOpResult::default());
+        let (mut ta, mut fo) = (Vec::new(), Vec::new());
+        let (mut s1, mut s2) = (ExecStats::default(), ExecStats::default());
+        for (i, acts) in acts_q.iter().enumerate() {
+            let a = run_vector(&pool, &placed, key_of(i), acts, &mut ctx, &mut s1).unwrap();
+            let b = raw_vector(
+                &pool, &placed, key_of(i), acts, &mut sc, &mut op, &mut ta, &mut fo, &mut s2,
+            );
+            assert_eq!(a, b, "raw replica diverged from run_vector at item {i}");
+        }
+        assert_eq!(s1.core_ops, s2.core_ops);
+        assert_eq!(s1.energy_fj().to_bits(), s2.energy_fj().to_bits());
+    }
+
+    // Best-of-attempts on min-of-samples: a CI scheduler hiccup must not
+    // read as telemetry overhead.
+    let mut raw_min = f64::INFINITY;
+    let mut disabled_min = f64::INFINITY;
+    for attempt in 0..3 {
+        let mut sc = OpScratch::new(&cfg.mac);
+        let mut op = CoreOpResult::default();
+        let (mut ta, mut fo) = (Vec::new(), Vec::new());
+        let raw = b.run_slow(&format!("raw      sweep 144x32 b{batch} #{attempt}"), 10, || {
+            let mut stats = ExecStats::default();
+            for (i, acts) in acts_q.iter().enumerate() {
+                black_box(raw_vector(
+                    &pool, &placed, key_of(i), acts, &mut sc, &mut op, &mut ta, &mut fo,
+                    &mut stats,
+                ));
+            }
+        });
+
+        assert!(!trace::enabled(), "tracing must be off for the disabled leg");
+        let mut ctx = StreamCtx::new(&cfg);
+        let disabled =
+            b.run_slow(&format!("disabled sweep 144x32 b{batch} #{attempt}"), 10, || {
+                let mut stats = ExecStats::default();
+                for (i, acts) in acts_q.iter().enumerate() {
+                    black_box(
+                        run_vector(&pool, &placed, key_of(i), acts, &mut ctx, &mut stats)
+                            .unwrap(),
+                    );
+                }
+            });
+
+        raw_min = raw_min.min(raw.min_s);
+        disabled_min = disabled_min.min(disabled.min_s);
+        if disabled_min / raw_min - 1.0 < 0.01 {
+            break;
+        }
+    }
+
+    // Enabled leg: spans actually record (ring cleared first; a sweep emits
+    // n_rt spans per item, far under the ring cap even across samples).
+    trace::clear();
+    trace::set_enabled(true);
+    let mut ctx = StreamCtx::new(&cfg);
+    let enabled = b.run_slow(&format!("enabled  sweep 144x32 b{batch}"), 10, || {
+        let mut stats = ExecStats::default();
+        for (i, acts) in acts_q.iter().enumerate() {
+            black_box(run_vector(&pool, &placed, key_of(i), acts, &mut ctx, &mut stats).unwrap());
+        }
+    });
+    trace::set_enabled(false);
+    assert!(trace::len() > 0, "enabled leg recorded no spans");
+    trace::clear();
+
+    let overhead_disabled_pct = (disabled_min / raw_min - 1.0) * 100.0;
+    let overhead_enabled_pct = (enabled.min_s / raw_min - 1.0) * 100.0;
+    println!(
+        "overhead vs raw floor: disabled {overhead_disabled_pct:+.3}% enabled {overhead_enabled_pct:+.3}%"
+    );
+    assert!(
+        overhead_disabled_pct < 2.0,
+        "disabled-tracing hot path must stay within the 2% budget, measured {overhead_disabled_pct:.3}%"
+    );
+
+    let mut fields = vec![
+        JsonField::Str("bench", "telemetry_overhead"),
+        JsonField::Str("layer", "144x32"),
+        JsonField::Int("batch", batch as i64),
+        JsonField::Int("spans_per_sweep", (batch * n_rt) as i64),
+        JsonField::Num("raw_sweep_ms", raw_min * 1e3),
+        JsonField::Num("disabled_sweep_ms", disabled_min * 1e3),
+        JsonField::Num("enabled_sweep_ms", enabled.min_s * 1e3),
+        JsonField::Num("overhead_disabled_pct", overhead_disabled_pct),
+        JsonField::Num("overhead_enabled_pct", overhead_enabled_pct),
+    ];
+    fields.extend(provenance_fields());
+    let row = json_row(&fields);
+    println!("{row}");
+
+    let path = bench_json_path("BENCH_telemetry.json");
+    match std::fs::write(&path, format!("{row}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -132,6 +132,17 @@ impl LayerKind {
     pub fn is_dynamic(&self) -> bool {
         matches!(self, LayerKind::MatMul { .. })
     }
+
+    /// Short shape label for telemetry series (`kind` label, DESIGN.md
+    /// §12).
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::Linear => "linear",
+            LayerKind::Rowwise { .. } => "rowwise",
+            LayerKind::MatMul { .. } => "matmul",
+        }
+    }
 }
 
 /// A `Conv2d`/`Linear`/`MatMul` node lowered to a tiled macro layer, not

@@ -89,6 +89,10 @@ pub struct CompiledLayer {
     vectors_per_input: usize,
     observed: ExecStats,
     predicted_cycles: u64,
+    /// Cached per-layer registry handles (`layer`/`kind` labels, DESIGN.md
+    /// §12), fed at the same merge points as `observed` so the exported
+    /// series equal it exactly.
+    tele: crate::telemetry::LayerCounters,
 }
 
 impl CompiledLayer {
@@ -268,6 +272,7 @@ pub fn compile(
             }
         };
         node_layer[node] = Some(layers.len());
+        let tele = crate::telemetry::LayerCounters::for_layer(&name, kind.label());
         layers.push(CompiledLayer {
             name,
             node,
@@ -280,6 +285,7 @@ pub fn compile(
             vectors_per_input,
             observed: ExecStats::default(),
             predicted_cycles: 0,
+            tele,
         });
         report_layers.push(cost);
     }
@@ -318,6 +324,9 @@ pub fn compile(
 
     let seed = opts.seed.unwrap_or(cfg.sim.seed ^ 0xC09B_11E5);
     let stats = ExecStats { weight_loads: total_tiles as u64, ..ExecStats::default() };
+    // Placement loads count toward the device-wide series too, so the
+    // exported totals equal `CompiledPlan::stats` from birth.
+    crate::telemetry::device().record_stats(&stats);
     Ok(CompiledPlan {
         cfg: cfg.clone(),
         graph,
@@ -527,6 +536,11 @@ impl CompiledPlan {
     /// parallelism to exploit on one tile grid — and the two execution
     /// modes share one code path, which is what keeps them bit-identical.
     fn run_layer_batch(&mut self, li: usize, flights: &mut [Flight]) -> Result<(), MapError> {
+        let _span = crate::span!(
+            "layer_batch",
+            "layer" => &self.layers[li].name,
+            "items" => flights.len(),
+        );
         if self.layers[li].is_dynamic() {
             let epoch = self.exec.reserve_epochs(1);
             let mut ctx = StreamCtx::new(&self.cfg);
@@ -537,7 +551,9 @@ impl CompiledPlan {
             let layer = &mut self.layers[li];
             layer.predicted_cycles += acc.predicted;
             layer.observed.merge(&acc.stats);
+            layer.tele.record_stats(&acc.stats);
             self.stats.merge(&acc.stats);
+            crate::telemetry::device().record_stats(&acc.stats);
             return Ok(());
         }
         let layer = &self.layers[li];
@@ -559,8 +575,10 @@ impl CompiledPlan {
             let layer = &mut self.layers[li];
             layer.predicted_cycles += predicted;
             layer.observed.merge(&stats);
+            layer.tele.record_stats(&stats);
         }
         self.stats.merge(&stats);
+        crate::telemetry::device().record_stats(&stats);
         assemble_layer_outputs(&self.layers[li], rows, &dims, flights);
         Ok(())
     }
@@ -582,6 +600,11 @@ impl CompiledPlan {
         acc: &mut StageAcc,
     ) -> Result<(), MapError> {
         let layer = &self.layers[li];
+        let _span = crate::span!(
+            "dynamic_item",
+            "layer" => &layer.name,
+            "item" => fl.idx,
+        );
         let LayerKind::MatMul { seq, transpose_b } = layer.kind else {
             unreachable!("dynamic layers are matmul layers")
         };
@@ -730,6 +753,11 @@ impl CompiledPlan {
                     let mut ctx = StreamCtx::new(&this.cfg);
                     let def = defs[stage];
                     move |fl: &mut Flight| {
+                        let _span = crate::span!(
+                            "stage_item",
+                            "stage" => stage,
+                            "item" => fl.idx,
+                        );
                         let mut acc = accs[stage].lock().expect("stage accumulator poisoned");
                         this.eval_stage_item(def, epoch_base, fl, &mut ctx, &mut acc)
                     }
@@ -748,8 +776,10 @@ impl CompiledPlan {
             if let Some(li) = def.2 {
                 self.layers[li].observed.merge(&acc.stats);
                 self.layers[li].predicted_cycles += acc.predicted;
+                self.layers[li].tele.record_stats(&acc.stats);
             }
             self.stats.merge(&acc.stats);
+            crate::telemetry::device().record_stats(&acc.stats);
         }
         if self.stream_gauges.len() == run.stages.len() {
             for (c, r) in self.stream_gauges.iter_mut().zip(&run.stages) {

@@ -65,14 +65,22 @@ impl Reservoir {
         }
     }
 
-    /// Percentile over the held sample (0 when empty).
+    /// Percentile over the held sample (0 when empty). For several
+    /// quantiles at once use [`Reservoir::percentiles`], which sorts once.
     pub fn percentile(&self, q: f64) -> f64 {
+        self.percentiles(&[q])[0]
+    }
+
+    /// Several percentiles from ONE clone-and-sort of the held sample —
+    /// `report()` asks for five quantiles per reservoir, and sorting per
+    /// quantile was the dominant cost of building a report.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
         if self.samples.is_empty() {
-            return 0.0;
+            return vec![0.0; qs.len()];
         }
         let mut sorted = self.samples.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN latency"));
-        crate::bench::percentile(&sorted, q)
+        qs.iter().map(|&q| crate::bench::percentile(&sorted, q)).collect()
     }
 }
 
@@ -97,6 +105,8 @@ pub struct Metrics {
     pub core_ops: u64,
     pub energy_fj: f64,
     pub device_cycles: u64,
+    /// Weight tile loads + dynamic reloads attributed to served batches.
+    pub weight_loads: u64,
     pub wall: Duration,
 }
 
@@ -114,6 +124,7 @@ impl Default for Metrics {
             core_ops: 0,
             energy_fj: 0.0,
             device_cycles: 0,
+            weight_loads: 0,
             wall: Duration::default(),
         }
     }
@@ -135,9 +146,19 @@ pub struct MetricsReport {
     pub wait_p50_ms: f64,
     pub wait_p99_ms: f64,
     pub mean_wait_ms: f64,
+    /// Latency samples the bounded reservoirs currently hold
+    /// (execution, wait) — how much data backs the percentiles above.
+    pub samples_held_exec: usize,
+    pub samples_held_wait: usize,
     pub throughput_rps: f64,
     pub energy_uj_per_req: f64,
-    pub device_utilization: f64,
+    pub device_cycles: u64,
+    pub weight_loads: u64,
+    /// Busy device-equivalents: device cycles consumed per wall-clock
+    /// cycle. With N shards executing in parallel this legitimately
+    /// exceeds 1.0 (N devices' worth of work per second) — it is NOT a
+    /// 0..=1 utilization; see [`MetricsReport::device_utilization`].
+    pub device_equivalents: f64,
 }
 
 impl Metrics {
@@ -165,6 +186,9 @@ impl Metrics {
 
     pub fn report(&self, clock_hz: f64) -> MetricsReport {
         let wall_s = self.wall.as_secs_f64().max(1e-12);
+        // One sort per reservoir, not one per quantile.
+        let exec = self.exec_us.percentiles(&[0.50, 0.95, 0.99]);
+        let wait = self.wait_us.percentiles(&[0.50, 0.99]);
         MetricsReport {
             requests: self.requests,
             batches: self.batches,
@@ -172,25 +196,37 @@ impl Metrics {
             peak_batch: self.peak_batch,
             peak_queue_depth: self.peak_queue_depth,
             peak_stages_busy: self.peak_stages_busy,
-            p50_ms: self.exec_us.percentile(0.50) / 1e3,
-            p95_ms: self.exec_us.percentile(0.95) / 1e3,
-            p99_ms: self.exec_us.percentile(0.99) / 1e3,
-            wait_p50_ms: self.wait_us.percentile(0.50) / 1e3,
-            wait_p99_ms: self.wait_us.percentile(0.99) / 1e3,
+            p50_ms: exec[0] / 1e3,
+            p95_ms: exec[1] / 1e3,
+            p99_ms: exec[2] / 1e3,
+            wait_p50_ms: wait[0] / 1e3,
+            wait_p99_ms: wait[1] / 1e3,
             mean_wait_ms: self.wait_us.mean() / 1e3,
+            samples_held_exec: self.exec_us.held(),
+            samples_held_wait: self.wait_us.held(),
             throughput_rps: self.requests as f64 / wall_s,
             energy_uj_per_req: self.energy_fj * 1e-9 / self.requests.max(1) as f64,
-            device_utilization: (self.device_cycles as f64 / clock_hz) / wall_s,
+            device_cycles: self.device_cycles,
+            weight_loads: self.weight_loads,
+            device_equivalents: (self.device_cycles as f64 / clock_hz) / wall_s,
         }
     }
 }
 
 impl MetricsReport {
+    /// Single-device-equivalent utilization, clamped to 0..=1. The raw
+    /// (unclamped) parallel figure is [`MetricsReport::device_equivalents`].
+    pub fn device_utilization(&self) -> f64 {
+        self.device_equivalents.min(1.0)
+    }
+
     pub fn render(&self) -> String {
         format!(
             "requests {}  batches {} (mean {:.1}, peak {})  p50 {:.2} ms  p95 {:.2} ms  \
-             p99 {:.2} ms  wait p50 {:.2} / p99 {:.2} ms  queue peak {}  stages busy peak {}  \
-             throughput {:.1} req/s  energy {:.4} µJ/req  device-util {:.1}%",
+             p99 {:.2} ms  wait p50 {:.2} / p99 {:.2} ms (mean {:.2} ms)  \
+             samples held {}/{}  queue peak {}  stages busy peak {}  \
+             throughput {:.1} req/s  energy {:.4} µJ/req  device cycles {}  \
+             weight loads {}  device-equivalents {:.2}",
             self.requests,
             self.batches,
             self.mean_batch,
@@ -200,11 +236,16 @@ impl MetricsReport {
             self.p99_ms,
             self.wait_p50_ms,
             self.wait_p99_ms,
+            self.mean_wait_ms,
+            self.samples_held_exec,
+            self.samples_held_wait,
             self.peak_queue_depth,
             self.peak_stages_busy,
             self.throughput_rps,
             self.energy_uj_per_req,
-            100.0 * self.device_utilization
+            self.device_cycles,
+            self.weight_loads,
+            self.device_equivalents
         )
     }
 }
@@ -271,6 +312,63 @@ mod tests {
         assert!((r.wait_p50_ms - 2.0).abs() < 1e-6, "{}", r.wait_p50_ms);
         assert!((r.mean_wait_ms - 2.0).abs() < 1e-6);
         assert!((r.wait_p99_ms - 2.96).abs() < 0.05, "{}", r.wait_p99_ms);
+    }
+
+    /// With N shards burning cycles in parallel, cycles-per-wall-second can
+    /// exceed the clock: `device_equivalents` reports that raw figure
+    /// (> 1.0), while `device_utilization()` clamps to a 0..=1 fraction.
+    #[test]
+    fn parallel_shards_exceed_one_device_equivalent() {
+        let mut m = Metrics::default();
+        m.record_batch(4, Duration::from_millis(1));
+        m.wall = Duration::from_secs(1);
+        // 4 shards × 200 MHz for the full second = 8e8 cycles.
+        m.device_cycles = 800_000_000;
+        let r = m.report(200e6);
+        assert!((r.device_equivalents - 4.0).abs() < 1e-9, "{}", r.device_equivalents);
+        assert_eq!(r.device_utilization(), 1.0, "clamped single-device view");
+
+        let mut idle = Metrics::default();
+        idle.record_batch(1, Duration::from_millis(1));
+        idle.wall = Duration::from_secs(1);
+        idle.device_cycles = 100_000_000; // half the 200 MHz clock
+        let r = idle.report(200e6);
+        assert!((r.device_equivalents - 0.5).abs() < 1e-9);
+        assert!((r.device_utilization() - 0.5).abs() < 1e-9, "below 1.0 passes through");
+    }
+
+    /// `render()` must surface the fields the report computes: mean wait,
+    /// reservoir occupancy, device cycles, and weight loads.
+    #[test]
+    fn render_includes_wait_samples_and_device_counters() {
+        let mut m = Metrics::default();
+        m.record_batch(2, Duration::from_millis(4));
+        m.record_wait(Duration::from_millis(1));
+        m.record_wait(Duration::from_millis(3));
+        m.wall = Duration::from_secs(1);
+        m.device_cycles = 12_345;
+        m.weight_loads = 67;
+        let s = m.report(200e6).render();
+        assert!(s.contains("mean 2.00 ms"), "{s}");
+        assert!(s.contains("samples held 2/2"), "{s}");
+        assert!(s.contains("device cycles 12345"), "{s}");
+        assert!(s.contains("weight loads 67"), "{s}");
+        assert!(s.contains("device-equivalents"), "{s}");
+    }
+
+    /// `percentiles` (one sort) must agree with repeated `percentile` calls.
+    #[test]
+    fn batched_percentiles_match_single_calls() {
+        let mut r = Reservoir::new(11);
+        for i in 0..5_000 {
+            r.record(((i * 37) % 1009) as f64);
+        }
+        let qs = [0.5, 0.95, 0.99];
+        let batch = r.percentiles(&qs);
+        for (q, b) in qs.iter().zip(&batch) {
+            assert_eq!(r.percentile(*q), *b);
+        }
+        assert_eq!(Reservoir::new(3).percentiles(&qs), vec![0.0; 3]);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub const REQ_MAGIC: u32 = 0xC1A0_0001;
@@ -59,6 +59,11 @@ pub struct ServeConfig {
     /// (layer-pipelined; plan-backed engines only — the classic
     /// single-backend engine falls back to the barrier path).
     pub stream: bool,
+    /// Bind a metrics HTTP side listener here (e.g. `"127.0.0.1:9184"`,
+    /// port 0 for ephemeral — resolve with `ServerHandle::metrics_addr`):
+    /// `GET /metrics` (Prometheus text) and `GET /metrics.json` serve the
+    /// global telemetry registry while the server is live (DESIGN.md §12).
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +74,7 @@ impl Default for ServeConfig {
             max_queue: 256,
             workers: 0,
             stream: false,
+            metrics_addr: None,
         }
     }
 }
@@ -87,6 +93,12 @@ pub trait InferenceEngine: Send {
     fn core_ops(&self) -> u64;
     fn energy_fj(&self) -> f64;
     fn device_cycles(&self) -> u64;
+
+    /// Cumulative weight tile loads + dynamic reloads (0 for engines that
+    /// don't track them).
+    fn weight_loads(&self) -> u64 {
+        0
+    }
 
     /// Cumulative per-stage gauges (streamed plans; empty otherwise).
     fn stage_gauges(&self) -> Vec<StageGauge> {
@@ -122,6 +134,10 @@ impl InferenceEngine for BackendEngine {
     fn device_cycles(&self) -> u64 {
         self.backend.stats().total_cycles
     }
+
+    fn weight_loads(&self) -> u64 {
+        self.backend.stats().weight_loads
+    }
 }
 
 impl InferenceEngine for PipelineDeployment {
@@ -143,6 +159,10 @@ impl InferenceEngine for PipelineDeployment {
 
     fn device_cycles(&self) -> u64 {
         self.stats().total_cycles
+    }
+
+    fn weight_loads(&self) -> u64 {
+        self.stats().weight_loads
     }
 
     fn stage_gauges(&self) -> Vec<StageGauge> {
@@ -177,6 +197,10 @@ impl InferenceEngine for crate::compiler::CompiledPlan {
         self.stats().total_cycles
     }
 
+    fn weight_loads(&self) -> u64 {
+        self.stats().weight_loads
+    }
+
     fn stage_gauges(&self) -> Vec<StageGauge> {
         self.stream_gauges().to_vec()
     }
@@ -197,7 +221,12 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     jobs: Arc<BoundedQueue<Job>>,
-    join: Option<std::thread::JoinHandle<Metrics>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Serve-loop metrics, shared with the inference thread so they are
+    /// pollable live ([`ServerHandle::metrics_snapshot`]).
+    metrics: Arc<Mutex<Metrics>>,
+    started: Instant,
+    exporter: Option<crate::telemetry::export::ExporterHandle>,
 }
 
 impl ServerHandle {
@@ -210,7 +239,29 @@ impl ServerHandle {
         // Nudge the accept loop; it closes the admission queue once it
         // stops, which drains the batcher.
         let _ = TcpStream::connect(self.addr);
-        self.join.take().map(|j| j.join().expect("server thread")).unwrap_or_default()
+        if let Some(j) = self.join.take() {
+            j.join().expect("server thread");
+        }
+        if let Some(e) = self.exporter.take() {
+            e.shutdown();
+        }
+        self.metrics.lock().expect("metrics poisoned").clone()
+    }
+
+    /// Live metrics without stopping the server: a clone of the serve-loop
+    /// counters so far, with `wall` set to the current uptime. Drain-time
+    /// fields (stage gauges, peak queue depth, peak busy stages) are
+    /// finalized by [`ServerHandle::shutdown`] and read 0/empty here.
+    pub fn metrics_snapshot(&self) -> Metrics {
+        let mut m = self.metrics.lock().expect("metrics poisoned").clone();
+        m.wall = self.started.elapsed();
+        m
+    }
+
+    /// Address of the metrics HTTP listener, when `metrics_addr` was
+    /// configured (resolves port 0 to the actual bound port).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.exporter.as_ref().map(|e| e.addr)
     }
 
     /// Requests admitted to the queue so far (each is guaranteed an answer
@@ -273,62 +324,112 @@ pub fn serve_engine(
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let jobs: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(cfg.max_queue));
+    let metrics = Arc::new(Mutex::new(Metrics::default()));
+    let started = Instant::now();
+
+    // Metrics HTTP side listener (scrapes the global telemetry registry);
+    // a bad bind address fails server startup, not silently.
+    let exporter = match cfg.metrics_addr.as_deref() {
+        Some(bind) => Some(crate::telemetry::export::spawn_exporter(bind)?),
+        None => None,
+    };
+
+    // Serve-loop series on the global registry (DESIGN.md §12). Handles
+    // are resolved once here and moved into the inference thread.
+    let reg = crate::telemetry::global();
+    let tele_requests =
+        reg.counter("cim_serve_requests_total", "Requests answered by the serve loop");
+    let tele_batches = reg.counter("cim_serve_batches_total", "Coalesced batches executed");
+    let tele_queue =
+        reg.gauge("cim_serve_queue_depth", "Admission-queue depth at last batch pull");
+    let tele_exec_us = reg.histogram(
+        "cim_exec_latency_us",
+        "Per-batch execution latency (batch start to done), microseconds",
+    );
+    let tele_wait_us = reg.histogram(
+        "cim_wait_latency_us",
+        "Per-request queue wait (admission to batch start), microseconds",
+    );
 
     // Inference thread: dynamic batcher + device. Exits when the admission
     // queue is closed AND drained — the graceful-drain contract.
     let jobs_inf = jobs.clone();
+    let metrics_inf = metrics.clone();
     let inference = std::thread::spawn(move || {
-        let mut metrics = Metrics::default();
         let t_start = Instant::now();
         loop {
             let batch = collect_batch(&jobs_inf, &cfg);
             if batch.is_empty() {
                 break; // closed and drained
             }
+            tele_queue.set(jobs_inf.len() as i64);
+            let _span = crate::span!("serve_batch", "items" => batch.len());
             let t0 = Instant::now();
             for job in &batch {
-                metrics.record_wait(t0.duration_since(job.admitted));
+                let wait = t0.duration_since(job.admitted);
+                tele_wait_us.observe(wait.as_micros() as u64);
+                crate::telemetry::trace::record_complete(
+                    "queue_wait",
+                    job.admitted,
+                    wait.as_micros() as u64,
+                );
             }
             let inputs: Vec<Vec<f32>> = batch.iter().map(|j| j.input.clone()).collect();
             let ops_before = engine.core_ops();
             let energy_before = engine.energy_fj();
             let cycles_before = engine.device_cycles();
+            let loads_before = engine.weight_loads();
             let result = if cfg.stream {
                 engine.infer_batch_streamed(&inputs)
             } else {
                 engine.infer_batch(&inputs)
             };
-            match result {
-                Ok(logits) => {
-                    for (job, row) in batch.iter().zip(logits) {
-                        let _ = job.reply.send(row);
-                    }
-                }
+            let rows = match result {
+                Ok(logits) => logits,
                 Err(e) => {
                     // A single malformed input must not poison the whole
                     // coalesced batch: retry each job alone so only the
                     // offending request gets an empty reply.
                     eprintln!("batch inference error: {e}; retrying jobs individually");
-                    for job in &batch {
-                        let row = engine
-                            .infer_batch(std::slice::from_ref(&job.input))
-                            .ok()
-                            .and_then(|mut rows| rows.pop())
-                            .unwrap_or_default();
-                        let _ = job.reply.send(row);
-                    }
+                    batch
+                        .iter()
+                        .map(|job| {
+                            engine
+                                .infer_batch(std::slice::from_ref(&job.input))
+                                .ok()
+                                .and_then(|mut rows| rows.pop())
+                                .unwrap_or_default()
+                        })
+                        .collect()
                 }
+            };
+            let latency = t0.elapsed();
+            // Account BEFORE sending replies: a client that scrapes
+            // `/metrics` right after its reply must already see its batch
+            // in every counter (the e2e exactness test depends on this).
+            {
+                let mut m = metrics_inf.lock().expect("metrics poisoned");
+                m.record_batch(batch.len(), latency);
+                for job in &batch {
+                    m.record_wait(t0.duration_since(job.admitted));
+                }
+                m.core_ops += engine.core_ops() - ops_before;
+                m.energy_fj += engine.energy_fj() - energy_before;
+                m.device_cycles += engine.device_cycles() - cycles_before;
+                m.weight_loads += engine.weight_loads() - loads_before;
             }
-            metrics.record_batch(batch.len(), t0.elapsed());
-            metrics.core_ops += engine.core_ops() - ops_before;
-            metrics.energy_fj += engine.energy_fj() - energy_before;
-            metrics.device_cycles += engine.device_cycles() - cycles_before;
+            tele_requests.add(batch.len() as u64);
+            tele_batches.inc();
+            tele_exec_us.observe(latency.as_micros() as u64);
+            for (job, row) in batch.iter().zip(rows) {
+                let _ = job.reply.send(row);
+            }
         }
-        metrics.peak_queue_depth = jobs_inf.peak_depth() as u64;
-        metrics.stages = engine.stage_gauges();
-        metrics.peak_stages_busy = engine.peak_stages_busy();
-        metrics.wall = t_start.elapsed();
-        metrics
+        let mut m = metrics_inf.lock().expect("metrics poisoned");
+        m.peak_queue_depth = jobs_inf.peak_depth() as u64;
+        m.stages = engine.stage_gauges();
+        m.peak_stages_busy = engine.peak_stages_busy();
+        m.wall = t_start.elapsed();
     });
 
     // Accept loop thread. On stop it closes the admission queue: new pushes
@@ -355,10 +456,10 @@ pub fn serve_engine(
             }
         }
         jobs_acc.close();
-        inference.join().expect("inference thread")
+        inference.join().expect("inference thread");
     });
 
-    Ok(ServerHandle { addr, stop, jobs, join: Some(join) })
+    Ok(ServerHandle { addr, stop, jobs, join: Some(join), metrics, started, exporter })
 }
 
 /// Pull one batch off the admission queue: block for the first job, then
@@ -487,6 +588,14 @@ mod tests {
         let logits = client.infer(&data[0].0).unwrap();
         assert_eq!(logits.len(), 10);
         assert_eq!(argmax(&logits), argmax(&expected[0]));
+
+        // Live snapshot without shutdown: batches are accounted before
+        // their replies go out, so the answered request is already visible.
+        let live = handle.metrics_snapshot();
+        assert!(live.requests >= 1, "live requests {}", live.requests);
+        assert!(live.core_ops > 0);
+        assert!(live.wall > Duration::default());
+        assert!(handle.metrics_addr().is_none(), "no metrics listener configured");
 
         // Concurrent clients exercise the batcher.
         let addr = handle.addr;

@@ -109,8 +109,22 @@
 //! `BENCH_kernel.json` (`cargo bench --bench kernel_hotpath`), README
 //! "Performance".
 //!
+//! # Observability
+//!
+//! The [`telemetry`] module (DESIGN.md §12) is a zero-dependency
+//! observability layer: a process-global metric [`telemetry::Registry`]
+//! (counters / gauges / log2-bucket histograms, labeled per-layer,
+//! per-stage, and pool series fed at the engine's own `ExecStats` merge
+//! points), a Prometheus text + JSON HTTP exporter behind
+//! `serve --metrics-addr` (`GET /metrics`, `GET /metrics.json`), and
+//! [`crate::span!`] tracing spans exported as Chrome `trace_event` JSON
+//! (`cimsim trace`, loadable in Perfetto). Tracing is off by default and
+//! its disabled path is a single relaxed atomic load, so kernel hot-path
+//! numbers are untouched (`BENCH_telemetry.json`,
+//! `cargo bench --bench telemetry_overhead`).
+//!
 //! Unit conventions, calibration assumptions and declared reproduction
-//! deviations live in the repo-root `DESIGN.md` (§1–§10), which the code
+//! deviations live in the repo-root `DESIGN.md` (§1–§12), which the code
 //! cites by section; `tests/docs_refs.rs` keeps the citations resolving.
 
 pub mod analysis;
@@ -126,6 +140,7 @@ pub mod nn;
 pub mod pipeline;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod util;
 
 /// Crate version string reported by the CLI.

@@ -57,6 +57,17 @@ fn spec() -> Cli {
                     OptSpec { name: "stream", value_name: None, default: None, help: "layer-pipelined streamed execution (implies --plan)" },
                     OptSpec { name: "max-queue", value_name: Some("N"), default: Some("256"), help: "admission queue bound (backpressure)" },
                     OptSpec { name: "workers", value_name: Some("N"), default: Some("0"), help: "pipeline worker threads (0 = auto)" },
+                    OptSpec { name: "metrics-addr", value_name: Some("ADDR"), default: None, help: "bind a Prometheus /metrics listener (e.g. 127.0.0.1:9184, port 0 = ephemeral)" },
+                ]),
+                positional: None,
+            },
+            CmdSpec {
+                name: "trace",
+                about: "record a span trace of a streamed plan run (Chrome trace_event JSON)",
+                opts: common(vec![
+                    OptSpec { name: "trace-out", value_name: Some("FILE"), default: Some("trace.json"), help: "trace output file (open in Perfetto / chrome://tracing)" },
+                    OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "items per traced batch" },
+                    OptSpec { name: "workers", value_name: Some("N"), default: Some("2"), help: "plan worker threads" },
                 ]),
                 positional: None,
             },
@@ -181,6 +192,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let max_batch = args.get_usize("batch")?;
             let max_queue = args.get_usize("max-queue")?;
             let stream = args.flag("stream");
+            let metrics_addr = args.get("metrics-addr").map(|s| s.to_string());
             let handle = if stream || args.flag("plan") {
                 // Compiler path: ingest the float MLP, calibrate on the
                 // training prefix, lower + place onto a pool, serve the plan.
@@ -197,7 +209,14 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 println!("{}", plan.cost_report().table(&c).to_markdown());
                 let h = cimsim::coordinator::serve_plan(
                     plan,
-                    ServeConfig { max_batch, max_queue, workers, stream, ..Default::default() },
+                    ServeConfig {
+                        max_batch,
+                        max_queue,
+                        workers,
+                        stream,
+                        metrics_addr: metrics_addr.clone(),
+                        ..Default::default()
+                    },
                 )?;
                 println!(
                     "serving on {} (graph-compiled plan{})",
@@ -208,7 +227,13 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             } else if args.flag("pipeline") {
                 let workers = args.get_usize("workers")?;
                 let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
-                let serve_cfg = ServeConfig { max_batch, max_queue, workers, ..Default::default() };
+                let serve_cfg = ServeConfig {
+                    max_batch,
+                    max_queue,
+                    workers,
+                    metrics_addr: metrics_addr.clone(),
+                    ..Default::default()
+                };
                 let h = serve_pipeline(dep, c.clone(), serve_cfg)?;
                 println!("serving on {} (pooled pipeline)", h.addr);
                 h
@@ -218,11 +243,19 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 let h = serve(
                     dep,
                     backend,
-                    ServeConfig { max_batch, max_queue, ..Default::default() },
+                    ServeConfig {
+                        max_batch,
+                        max_queue,
+                        metrics_addr: metrics_addr.clone(),
+                        ..Default::default()
+                    },
                 )?;
                 println!("serving on {}", h.addr);
                 h
             };
+            if let Some(m) = handle.metrics_addr() {
+                println!("metrics on http://{m}/metrics (JSON at /metrics.json)");
+            }
             let n_req = args.get_usize("requests")?;
             let addr = handle.addr;
             let mut clients: Vec<std::thread::JoinHandle<usize>> = Vec::new();
@@ -252,6 +285,42 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 n_req
             );
             println!("{}", m.report(c.mac.clock_mhz * 1e6).render());
+        }
+        "trace" => {
+            use cimsim::compiler::{compile, CompileOptions, Graph};
+            use cimsim::nn::tensor::Tensor;
+            let mut c = cfg.clone();
+            c.enhance = EnhanceConfig::both();
+            let batch = args.get_usize("batch")?;
+            let workers = args.get_usize("workers")?;
+            let out_path = args.get_string("trace-out");
+            println!("training a small MLP (144-32-10) to trace...");
+            let mut d = BlobDataset::new(12, 0.05, c.sim.seed);
+            let data: Vec<(Vec<f32>, usize)> =
+                d.batch(200).into_iter().map(|s| (s.image.data, s.label)).collect();
+            let mut mlp = Mlp::new(&[144, 32, 10], c.sim.seed ^ 1);
+            train(&mut mlp, &data, 4, 0.05, c.sim.seed ^ 2);
+            let cal_t: Vec<Tensor> = data
+                .iter()
+                .take(40)
+                .map(|(x, _)| Tensor::from_vec(&[x.len()], x.clone()))
+                .collect();
+            let graph = Graph::from_mlp(&mlp);
+            let opts = CompileOptions { workers, ..Default::default() };
+            let mut plan = compile(graph, &cal_t, &c, &opts).map_err(std::io::Error::other)?;
+            let inputs: Vec<Vec<f32>> =
+                data.iter().take(batch).map(|(x, _)| x.clone()).collect();
+            // Spans record only between enable/disable; the run itself is
+            // the ordinary streamed plan path.
+            cimsim::telemetry::trace::clear();
+            cimsim::telemetry::trace::set_enabled(true);
+            plan.run_streamed_flat(&inputs).map_err(std::io::Error::other)?;
+            cimsim::telemetry::trace::set_enabled(false);
+            let spans = cimsim::telemetry::trace::len();
+            std::fs::write(&out_path, cimsim::telemetry::trace::export_chrome_json())?;
+            println!(
+                "wrote {spans} spans to {out_path} — load it at ui.perfetto.dev or chrome://tracing"
+            );
         }
         "selftest" => {
             let mut c = cfg.clone();

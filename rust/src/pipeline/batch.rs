@@ -137,6 +137,10 @@ pub fn run_vector(
     ctx.tile_acts.resize(rows, 0);
     let mut out = vec![0f32; n];
     for rt in 0..n_rt {
+        // Tile-granularity span. Disabled cost is one relaxed load per row
+        // tile; the guard never touches `rng`, so noisy outputs stay
+        // bit-identical either way (tests/telemetry_hotpath.rs).
+        let _span = crate::span!("row_tile", "rt" => rt, "item" => key.item);
         let r0 = rt * rows;
         let upper = (r0 + rows).min(k);
         ctx.tile_acts.fill(0);
@@ -345,6 +349,14 @@ impl BatchExecutor {
         epoch: u64,
         item_base: u64,
     ) -> Result<(Vec<Vec<f32>>, ExecStats), MapError> {
+        // Off the per-op path: one counter add + one span guard per run_q
+        // call (a whole batch chunk), nothing per item or per tile.
+        crate::telemetry::device().exec_items.add(acts_q.len() as u64);
+        let _span = crate::span!(
+            "exec_run_q",
+            "items" => acts_q.len(),
+            "epoch" => epoch,
+        );
         // Noise-free layers inside the popcount exactness envelope route each
         // worker's chunk through the batch-transposed kernel (DESIGN.md §11);
         // noisy layers must replay per-(item, tile) substreams and stay on

@@ -133,6 +133,7 @@ impl MacroPool {
     /// Claim the first free slot, growing the pool by one shard when all
     /// resident cores are taken.
     pub fn alloc_slot(&mut self) -> usize {
+        crate::telemetry::device().slots_claimed.add(1);
         if let Some(slot) = self.claimed.iter().position(|&c| !c) {
             self.claimed[slot] = true;
             return slot;
@@ -155,6 +156,7 @@ impl MacroPool {
             let slot = shard * cores + c;
             if !self.claimed[slot] {
                 self.claimed[slot] = true;
+                crate::telemetry::device().slots_claimed.add(1);
                 return Some(slot);
             }
         }
@@ -168,7 +170,11 @@ impl MacroPool {
         if s >= self.shards.len() {
             return Err(MacroError::BadSlot(slot));
         }
-        self.shards[s].load_core(c, w)
+        self.shards[s].load_core(c, w)?;
+        // Every successful weight write counts here; in-place swaps count
+        // again under `cim_pool_slot_reloads_total` (DESIGN.md §12).
+        crate::telemetry::device().slot_loads.inc();
+        Ok(())
     }
 
     /// Swap the weights of an already-claimed slot — the dynamic-weight
@@ -183,7 +189,9 @@ impl MacroPool {
         if !self.claimed.get(slot).copied().unwrap_or(false) {
             return Err(MacroError::BadSlot(slot));
         }
-        self.load_slot(slot, w)
+        self.load_slot(slot, w)?;
+        crate::telemetry::device().slot_reloads.inc();
+        Ok(())
     }
 
     /// One op on a slot. Takes `&self`: shards are read-only on the op path,

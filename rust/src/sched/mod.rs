@@ -201,7 +201,7 @@ where
     if let Some(e) = err.into_inner().expect("error slot poisoned") {
         return Err(e);
     }
-    let stages = names
+    let stages: Vec<StageGauge> = names
         .into_iter()
         .zip(queues.iter().zip(&done))
         .map(|(name, (q, d))| StageGauge {
@@ -210,7 +210,12 @@ where
             peak_queue: q.peak_depth(),
         })
         .collect();
-    Ok(RunGauges { stages, peak_busy: occ.peak() })
+    let peak_busy = occ.peak();
+    // Post-run (off the per-item path): fold this run's per-stage items,
+    // queue peaks, and occupancy into the global telemetry families
+    // (DESIGN.md §12).
+    crate::telemetry::record_stage_run(&stages, peak_busy);
+    Ok(RunGauges { stages, peak_busy })
 }
 
 #[cfg(test)]

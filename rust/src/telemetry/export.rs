@@ -1,0 +1,451 @@
+//! Registry exporters: Prometheus text exposition, a JSON snapshot, and a
+//! hand-rolled HTTP listener serving both (DESIGN.md §12).
+//!
+//! The HTTP side is deliberately minimal — same zero-dependency TCP stack
+//! as `coordinator::server`, answering `GET /metrics` (text format 0.0.4)
+//! and `GET /metrics.json`, one short-lived connection per scrape. The
+//! listener runs on its own thread next to the serve loop
+//! (`serve --metrics-addr`), so metrics are pollable while the server is
+//! live, without `shutdown()`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{bucket_upper, Entry, Family, Histogram, Metric, Registry};
+
+/// Finite f64 in Rust's shortest-roundtrip decimal form (parses back to
+/// the identical bits — the e2e exactness test relies on this); non-finite
+/// renders as its Prometheus spelling.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "NaN".into()
+    } else if v > 0.0 {
+        "+Inf".into()
+    } else {
+        "-Inf".into()
+    }
+}
+
+fn prom_escape_label(v: &str, out: &mut String) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn prom_labels(names: &[&str], values: &[String]) -> String {
+    let mut out = String::from("{");
+    for (i, (n, v)) in names.iter().zip(values).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(n);
+        out.push_str("=\"");
+        prom_escape_label(v, &mut out);
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+fn prom_histogram(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    // Cumulative buckets with inclusive `le` bounds; the label block (if
+    // any) keeps its braces, so `le` is spliced into them.
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if *c == 0 && bucket_upper(i).is_some() {
+            continue; // sparse: only materialized + the mandatory +Inf
+        }
+        let le = match bucket_upper(i) {
+            Some(u) => u.to_string(),
+            None => "+Inf".into(),
+        };
+        let lbl = if labels.is_empty() {
+            format!("{{le=\"{le}\"}}")
+        } else {
+            format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+        };
+        out.push_str(&format!("{name}_bucket{lbl} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_sum{labels} {}\n", fmt_f64(h.sum())));
+    out.push_str(&format!("{name}_count{labels} {}\n", h.count()));
+}
+
+fn family_block<T: Metric>(
+    out: &mut String,
+    name: &str,
+    fam: &Family<T>,
+    mut one: impl FnMut(&mut String, &str, &str, &T),
+) {
+    for (values, m) in fam.series() {
+        let labels = prom_labels(fam.label_names(), &values);
+        one(out, name, &labels, &m);
+    }
+}
+
+/// The registry in Prometheus text exposition format 0.0.4.
+pub fn render_prometheus(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, slot) in reg.snapshot() {
+        let kind = match &slot.entry {
+            Entry::Counter(_) | Entry::FloatCounter(_) => "counter",
+            Entry::CounterFamily(_) | Entry::FloatCounterFamily(_) => "counter",
+            Entry::Gauge(_) | Entry::GaugeFamily(_) => "gauge",
+            Entry::Histogram(_) | Entry::HistogramFamily(_) => "histogram",
+        };
+        out.push_str(&format!("# HELP {name} {}\n# TYPE {name} {kind}\n", slot.help));
+        match &slot.entry {
+            Entry::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+            Entry::FloatCounter(c) => out.push_str(&format!("{name} {}\n", fmt_f64(c.get()))),
+            Entry::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+            Entry::Histogram(h) => prom_histogram(&mut out, name, "", h),
+            Entry::CounterFamily(f) => family_block(&mut out, name, f, |o, n, l, m| {
+                o.push_str(&format!("{n}{l} {}\n", m.get()))
+            }),
+            Entry::FloatCounterFamily(f) => family_block(&mut out, name, f, |o, n, l, m| {
+                o.push_str(&format!("{n}{l} {}\n", fmt_f64(m.get())))
+            }),
+            Entry::GaugeFamily(f) => family_block(&mut out, name, f, |o, n, l, m| {
+                o.push_str(&format!("{n}{l} {}\n", m.get()))
+            }),
+            Entry::HistogramFamily(f) => {
+                family_block(&mut out, name, f, |o, n, l, m| prom_histogram(o, n, l, m))
+            }
+        }
+    }
+    out
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_series(
+    out: &mut Vec<String>,
+    name: &str,
+    kind: &str,
+    labels: Option<(&[&str], &[String])>,
+    value: String,
+) {
+    let mut obj = format!("{{\"name\":{},\"type\":{}", json_str(name), json_str(kind));
+    if let Some((names, values)) = labels {
+        obj.push_str(",\"labels\":{");
+        for (i, (n, v)) in names.iter().zip(values).enumerate() {
+            if i > 0 {
+                obj.push(',');
+            }
+            obj.push_str(&format!("{}:{}", json_str(n), json_str(v)));
+        }
+        obj.push('}');
+    }
+    obj.push_str(&format!(",\"value\":{value}}}"));
+    out.push(obj);
+}
+
+fn json_hist_value(h: &Histogram) -> String {
+    let counts = h.bucket_counts();
+    let mut buckets = Vec::new();
+    for (i, c) in counts.iter().enumerate() {
+        if *c == 0 {
+            continue;
+        }
+        let le = match bucket_upper(i) {
+            Some(u) => u.to_string(),
+            None => "\"+Inf\"".into(),
+        };
+        buckets.push(format!("[{le},{c}]"));
+    }
+    format!(
+        "{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+        h.count(),
+        json_f64(h.sum()),
+        buckets.join(",")
+    )
+}
+
+/// The registry as a JSON snapshot: `{"metrics":[{name,type,labels?,value}…]}`.
+pub fn render_json(reg: &Registry) -> String {
+    let mut series: Vec<String> = Vec::new();
+    for (name, slot) in reg.snapshot() {
+        match &slot.entry {
+            Entry::Counter(c) => {
+                json_series(&mut series, name, "counter", None, c.get().to_string())
+            }
+            Entry::FloatCounter(c) => {
+                json_series(&mut series, name, "counter", None, json_f64(c.get()))
+            }
+            Entry::Gauge(g) => json_series(&mut series, name, "gauge", None, g.get().to_string()),
+            Entry::Histogram(h) => {
+                json_series(&mut series, name, "histogram", None, json_hist_value(h))
+            }
+            Entry::CounterFamily(f) => {
+                for (values, m) in f.series() {
+                    json_series(
+                        &mut series,
+                        name,
+                        "counter",
+                        Some((f.label_names(), &values)),
+                        m.get().to_string(),
+                    );
+                }
+            }
+            Entry::FloatCounterFamily(f) => {
+                for (values, m) in f.series() {
+                    json_series(
+                        &mut series,
+                        name,
+                        "counter",
+                        Some((f.label_names(), &values)),
+                        json_f64(m.get()),
+                    );
+                }
+            }
+            Entry::GaugeFamily(f) => {
+                for (values, m) in f.series() {
+                    json_series(
+                        &mut series,
+                        name,
+                        "gauge",
+                        Some((f.label_names(), &values)),
+                        m.get().to_string(),
+                    );
+                }
+            }
+            Entry::HistogramFamily(f) => {
+                for (values, m) in f.series() {
+                    json_series(
+                        &mut series,
+                        name,
+                        "histogram",
+                        Some((f.label_names(), &values)),
+                        json_hist_value(&m),
+                    );
+                }
+            }
+        }
+    }
+    format!("{{\"metrics\":[{}]}}", series.join(","))
+}
+
+/// Running metrics HTTP listener (see [`spawn_exporter`]).
+#[derive(Debug)]
+pub struct ExporterHandle {
+    /// Actual bound address (port 0 resolves here).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExporterHandle {
+    /// Stop the listener and join its thread.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept() so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ExporterHandle {
+    fn drop(&mut self) {
+        if self.join.is_some() {
+            self.stop_inner();
+        }
+    }
+}
+
+fn http_response(status: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn handle_scrape(mut stream: TcpStream, reg: &Registry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    // Read until the end of the request head (or cap / timeout); only the
+    // request line matters.
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let path = head.lines().next().and_then(|l| l.split_whitespace().nth(1)).unwrap_or("");
+    let reply = match path {
+        "/metrics" => http_response(
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            &render_prometheus(reg),
+        ),
+        "/metrics.json" => http_response("200 OK", "application/json", &render_json(reg)),
+        _ => http_response("404 Not Found", "text/plain; charset=utf-8", "see /metrics or /metrics.json\n"),
+    };
+    let _ = stream.write_all(&reply);
+    let _ = stream.flush();
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9184`, port 0 for ephemeral) and serve
+/// the **global** registry over HTTP until the handle shuts down.
+pub fn spawn_exporter(addr: &str) -> std::io::Result<ExporterHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let join = std::thread::Builder::new()
+        .name("cimsim-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    handle_scrape(stream, super::global());
+                }
+            }
+        })
+        .expect("spawn metrics exporter thread");
+    Ok(ExporterHandle { addr, stop, join: Some(join) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_text_rendering() {
+        let r = Registry::new();
+        r.counter("t_ops_total", "total ops").add(42);
+        r.float_counter("t_energy_fj_total", "energy").add(1.5);
+        r.gauge("t_depth", "queue depth").set(-3);
+        let h = r.histogram("t_lat_us", "latency");
+        h.observe(0);
+        h.observe(3);
+        h.observe(900);
+        let fam = r.counter_family("t_layer_total", "per layer", &["layer", "kind"]);
+        fam.with(&["fc1", "linear"]).add(7);
+        fam.with(&["we\"ird\\l\nabel", "conv"]).inc();
+
+        let text = render_prometheus(&r);
+        assert!(text.contains("# HELP t_ops_total total ops\n# TYPE t_ops_total counter\nt_ops_total 42\n"));
+        assert!(text.contains("t_energy_fj_total 1.5\n"));
+        assert!(text.contains("# TYPE t_depth gauge\nt_depth -3\n"));
+        // Histogram: cumulative buckets, inclusive le, mandatory +Inf.
+        assert!(text.contains("t_lat_us_bucket{le=\"0\"} 1\n"));
+        assert!(text.contains("t_lat_us_bucket{le=\"3\"} 2\n"));
+        assert!(text.contains("t_lat_us_bucket{le=\"1023\"} 3\n"));
+        assert!(text.contains("t_lat_us_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("t_lat_us_sum 903\n"));
+        assert!(text.contains("t_lat_us_count 3\n"));
+        assert!(text.contains("t_layer_total{layer=\"fc1\",kind=\"linear\"} 7\n"));
+        // Label values escape backslash, quote, and newline.
+        assert!(text.contains("t_layer_total{layer=\"we\\\"ird\\\\l\\nabel\",kind=\"conv\"} 1\n"));
+        // Deterministic: names render in sorted order.
+        let pos = |needle: &str| text.find(needle).unwrap();
+        assert!(pos("t_depth") < pos("t_energy_fj_total"));
+        assert!(pos("t_energy_fj_total") < pos("t_lat_us"));
+    }
+
+    #[test]
+    fn float_rendering_roundtrips_exactly() {
+        for v in [0.0f64, 1.5, 1.0 / 3.0, 1234567.89012345, 4.0e9 + 0.125] {
+            let s = fmt_f64(v);
+            assert_eq!(s.parse::<f64>().unwrap().to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(fmt_f64(f64::NAN), "NaN");
+        assert_eq!(fmt_f64(f64::INFINITY), "+Inf");
+    }
+
+    #[test]
+    fn json_rendering_is_parseable_shape() {
+        let r = Registry::new();
+        r.counter("t_a_total", "a").add(5);
+        let h = r.histogram("t_h_us", "h");
+        h.observe(7);
+        let fam = r.gauge_family("t_g", "g", &["stage"]);
+        fam.with(&["fc1"]).set(2);
+        let json = render_json(&r);
+        assert!(json.starts_with("{\"metrics\":["));
+        assert!(json.contains("{\"name\":\"t_a_total\",\"type\":\"counter\",\"value\":5}"));
+        assert!(json.contains("\"labels\":{\"stage\":\"fc1\"}"));
+        assert!(json.contains("\"buckets\":[[7,1]]"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        let opens = json.matches('{').count() + json.matches('[').count();
+        let closes = json.matches('}').count() + json.matches(']').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn exporter_serves_scrapes_over_tcp() {
+        // Global registry: use names unique to this test.
+        super::super::global().counter("t_export_probe_total", "probe").add(11);
+        let handle = spawn_exporter("127.0.0.1:0").unwrap();
+        let get = |path: &str| {
+            let mut s = TcpStream::connect(handle.addr).unwrap();
+            s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let text = get("/metrics");
+        assert!(text.starts_with("HTTP/1.1 200 OK"));
+        assert!(text.contains("text/plain; version=0.0.4"));
+        assert!(text.contains("t_export_probe_total 11"));
+        let json = get("/metrics.json");
+        assert!(json.starts_with("HTTP/1.1 200 OK"));
+        assert!(json.contains("\"t_export_probe_total\""));
+        let missing = get("/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"));
+        handle.shutdown();
+    }
+}

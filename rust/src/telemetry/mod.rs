@@ -1,0 +1,247 @@
+//! Zero-dependency observability: metric registry, Prometheus/JSON
+//! export, and tracing spans (DESIGN.md §12).
+//!
+//! Three pieces:
+//!
+//! * [`registry`] — process-global [`Registry`] of counters / gauges /
+//!   log2-bucket histograms with labeled families; lock-free atomics on
+//!   the record path.
+//! * [`export`] — Prometheus text exposition (`GET /metrics`), a JSON
+//!   snapshot (`GET /metrics.json`), and the hand-rolled HTTP listener
+//!   behind `serve --metrics-addr`.
+//! * [`trace`] — the [`crate::span!`] RAII span macro, a bounded span
+//!   ring buffer, and a Chrome `trace_event` exporter (`cimsim trace`).
+//!
+//! The device-facing series are fed at the same points the engine merges
+//! its [`ExecStats`] (compiler plan merge sites, `MacroPool` slot
+//! loads, the `sched` stage runtime), so `/metrics` and the engine's own
+//! accounting agree exactly — one source of truth, two read paths.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Family, FloatCounter, Gauge, Histogram, Registry};
+
+use std::sync::{Arc, OnceLock};
+
+use crate::mapping::ExecStats;
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry every instrumentation site records into
+/// and the exporters render from.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Cached handles for the process-wide device counters, fed wherever the
+/// engine merges an [`ExecStats`] chunk into its own totals.
+///
+/// Energy is tracked as the four [`crate::energy::EnergyBreakdown`]
+/// components (one [`FloatCounter`] each): per-component running sums
+/// reproduce `EnergyBreakdown::add` bit-exactly, and [`Self::energy_fj`]
+/// re-sums them in `total_fj()` order, so the exported
+/// `cim_energy_fj_total` equals `ExecStats::energy_fj()` exactly for a
+/// single-plan process (the e2e test asserts this).
+#[derive(Debug)]
+pub struct DeviceCounters {
+    pub core_ops: Arc<Counter>,
+    pub device_cycles: Arc<Counter>,
+    pub weight_loads: Arc<Counter>,
+    pub clipped: Arc<Counter>,
+    energy_array_fj: Arc<FloatCounter>,
+    energy_dtc_fj: Arc<FloatCounter>,
+    energy_path_fj: Arc<FloatCounter>,
+    energy_sa_ctrl_fj: Arc<FloatCounter>,
+    /// Derived series: refreshed to the exact component re-sum on every
+    /// `record_stats` (a chunk-total running sum would round differently
+    /// than `EnergyBreakdown::add` and drift off `ExecStats::energy_fj`).
+    energy_fj_total: Arc<FloatCounter>,
+    pub slot_loads: Arc<Counter>,
+    pub slot_reloads: Arc<Counter>,
+    pub slots_claimed: Arc<Gauge>,
+    pub exec_items: Arc<Counter>,
+}
+
+impl DeviceCounters {
+    fn new(reg: &Registry) -> Self {
+        DeviceCounters {
+            core_ops: reg.counter("cim_core_ops_total", "Macro core operations executed"),
+            device_cycles: reg
+                .counter("cim_device_cycles_total", "Serial device cycles (per-op sum)"),
+            weight_loads: reg
+                .counter("cim_weight_loads_total", "Weight tile loads + dynamic reloads"),
+            clipped: reg.counter("cim_clipped_total", "Boosted-readout clipping events"),
+            energy_array_fj: reg
+                .float_counter("cim_energy_array_fj_total", "Array discharge energy (fJ)"),
+            energy_dtc_fj: reg.float_counter("cim_energy_dtc_fj_total", "DTC + SL driver energy (fJ)"),
+            energy_path_fj: reg
+                .float_counter("cim_energy_path_fj_total", "Pulse-path config energy (fJ)"),
+            energy_sa_ctrl_fj: reg
+                .float_counter("cim_energy_sa_ctrl_fj_total", "Sense-amp + control energy (fJ)"),
+            energy_fj_total: reg.float_counter(
+                "cim_energy_fj_total",
+                "Total device energy (fJ), exact component re-sum",
+            ),
+            slot_loads: reg.counter("cim_pool_slot_loads_total", "MacroPool slot weight loads"),
+            slot_reloads: reg
+                .counter("cim_pool_slot_reloads_total", "MacroPool in-place slot reloads"),
+            slots_claimed: reg.gauge("cim_pool_slots_claimed", "MacroPool slots currently claimed"),
+            exec_items: reg
+                .counter("cim_exec_items_total", "Batch items dispatched by BatchExecutor"),
+        }
+    }
+
+    /// Fold one merged [`ExecStats`] chunk in — call exactly where the
+    /// chunk merges into engine totals, so both stay equal.
+    pub fn record_stats(&self, s: &ExecStats) {
+        self.core_ops.add(s.core_ops);
+        self.device_cycles.add(s.total_cycles);
+        self.weight_loads.add(s.weight_loads);
+        self.clipped.add(s.clipped);
+        self.energy_array_fj.add(s.energy.array_fj);
+        self.energy_dtc_fj.add(s.energy.dtc_fj);
+        self.energy_path_fj.add(s.energy.path_fj);
+        self.energy_sa_ctrl_fj.add(s.energy.sa_ctrl_fj);
+        self.refresh_energy_total();
+    }
+
+    /// Exact total-energy re-sum in `EnergyBreakdown::total_fj` order.
+    pub fn energy_fj(&self) -> f64 {
+        self.energy_array_fj.get()
+            + self.energy_dtc_fj.get()
+            + self.energy_path_fj.get()
+            + self.energy_sa_ctrl_fj.get()
+    }
+
+    fn refresh_energy_total(&self) {
+        // Store (not add): the series mirrors the component re-sum.
+        self.energy_fj_total.set(self.energy_fj());
+    }
+}
+
+static DEVICE: OnceLock<DeviceCounters> = OnceLock::new();
+
+/// Cached process-wide device counter handles (global registry).
+pub fn device() -> &'static DeviceCounters {
+    DEVICE.get_or_init(|| DeviceCounters::new(global()))
+}
+
+/// Cached per-layer counter handles (`layer`, `kind` labels), created
+/// once at plan-compile time and recorded at the plan's per-layer
+/// `ExecStats` merge points — per-layer cycle/op series therefore equal
+/// `CompiledLayer::observed()` exactly.
+#[derive(Debug, Clone)]
+pub struct LayerCounters {
+    pub core_ops: Arc<Counter>,
+    pub device_cycles: Arc<Counter>,
+    pub weight_loads: Arc<Counter>,
+    pub energy_fj: Arc<FloatCounter>,
+}
+
+impl LayerCounters {
+    /// Handles for one `(layer, kind)` label pair on the global registry.
+    pub fn for_layer(layer: &str, kind: &str) -> Self {
+        let reg = global();
+        let labels: &[&str] = &["layer", "kind"];
+        let values = &[layer, kind];
+        LayerCounters {
+            core_ops: reg
+                .counter_family("cim_layer_core_ops_total", "Core ops per layer", labels)
+                .with(values),
+            device_cycles: reg
+                .counter_family("cim_layer_device_cycles_total", "Device cycles per layer", labels)
+                .with(values),
+            weight_loads: reg
+                .counter_family("cim_layer_weight_loads_total", "Weight reloads per layer", labels)
+                .with(values),
+            energy_fj: reg
+                .float_counter_family("cim_layer_energy_fj_total", "Energy per layer (fJ)", labels)
+                .with(values),
+        }
+    }
+
+    /// Fold one per-layer [`ExecStats`] chunk in (same call sites as
+    /// `CompiledLayer::observed.merge`).
+    pub fn record_stats(&self, s: &ExecStats) {
+        self.core_ops.add(s.core_ops);
+        self.device_cycles.add(s.total_cycles);
+        self.weight_loads.add(s.weight_loads);
+        self.energy_fj.add(s.energy.total_fj());
+    }
+}
+
+/// Record one finished `sched::run_stages` run into the per-stage
+/// families: items per stage, peak bounded-queue depth per stage, and the
+/// run's peak concurrently-busy stage count.
+pub fn record_stage_run(gauges: &[crate::sched::StageGauge], peak_busy: usize) {
+    let reg = global();
+    let items = reg.counter_family("cim_stage_items_total", "Items completed per stage", &["stage"]);
+    let peak_q =
+        reg.gauge_family("cim_stage_peak_queue", "Peak bounded-queue depth per stage", &["stage"]);
+    for g in gauges {
+        items.with(&[&g.name]).add(g.items);
+        peak_q.with(&[&g.name]).set_max(g.peak_queue as i64);
+    }
+    reg.gauge("cim_stages_busy_peak", "Peak concurrently busy stages")
+        .set_max(peak_busy as i64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyBreakdown;
+
+    #[test]
+    fn device_counters_track_exec_stats_exactly() {
+        // Private registry: same code path as the global one without
+        // cross-test interference.
+        let reg = Registry::new();
+        let dev = DeviceCounters::new(&reg);
+        let mut total = ExecStats::default();
+        for i in 0..50u64 {
+            let chunk = ExecStats {
+                core_ops: i,
+                weight_loads: i % 3,
+                total_cycles: 10 * i + 7,
+                energy: EnergyBreakdown {
+                    array_fj: 0.3 * i as f64 + 0.1,
+                    dtc_fj: 0.07 * i as f64,
+                    path_fj: 1.0 / (i as f64 + 3.0),
+                    sa_ctrl_fj: 2.5,
+                },
+                clipped: i % 2,
+            };
+            total.merge(&chunk);
+            dev.record_stats(&chunk);
+        }
+        assert_eq!(dev.core_ops.get(), total.core_ops);
+        assert_eq!(dev.device_cycles.get(), total.total_cycles);
+        assert_eq!(dev.weight_loads.get(), total.weight_loads);
+        assert_eq!(dev.clipped.get(), total.clipped);
+        // Bit-exact energy: component-wise accumulation + total_fj-order
+        // re-sum reproduces ExecStats::energy_fj exactly.
+        assert_eq!(dev.energy_fj().to_bits(), total.energy_fj().to_bits());
+        assert_eq!(dev.energy_fj_total.get().to_bits(), total.energy_fj().to_bits());
+    }
+
+    #[test]
+    fn layer_counters_register_on_global() {
+        let lc = LayerCounters::for_layer("t_mod_fc", "linear");
+        let chunk = ExecStats {
+            core_ops: 4,
+            total_cycles: 99,
+            energy: EnergyBreakdown { array_fj: 1.0, ..Default::default() },
+            ..Default::default()
+        };
+        lc.record_stats(&chunk);
+        assert_eq!(lc.core_ops.get() % 4, 0);
+        assert!(lc.device_cycles.get() >= 99);
+        // Same labels → same series.
+        let again = LayerCounters::for_layer("t_mod_fc", "linear");
+        let before = again.core_ops.get();
+        lc.core_ops.add(4);
+        assert_eq!(again.core_ops.get(), before + 4);
+    }
+}

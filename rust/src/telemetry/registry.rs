@@ -1,0 +1,555 @@
+//! Metric registry: named counters, gauges, and log2-bucket histograms
+//! with labeled families (DESIGN.md §12).
+//!
+//! Everything here is zero-dependency and lock-free on the *record* path:
+//! a metric handle is an `Arc` around one or more atomics, so `inc`/`add`/
+//! `observe` are single `Relaxed` RMW operations. Locks exist only on the
+//! *registration* path (get-or-register a name, materialize a label set),
+//! which callers hit once and cache — the compiler caches per-layer
+//! handles at `compile()` time, the serve loop caches its handles at
+//! startup.
+//!
+//! Counters for device work (`core_ops`, `device_cycles`) are plain `u64`
+//! adds, so a registry series fed at the same merge points as an
+//! [`crate::mapping::ExecStats`] equals it exactly. Energy is f64; to keep
+//! the exported `cim_energy_fj_total` bit-identical to
+//! `ExecStats::energy_fj()`, the device series tracks the four
+//! [`crate::energy::EnergyBreakdown`] components separately (see
+//! [`super::DeviceCounters`]) — per-component running sums reproduce the
+//! component-wise `EnergyBreakdown::add` merges, and the exporter re-sums
+//! components in `total_fj()` order.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic `u64` counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotonic `f64` counter (bits in an `AtomicU64`, CAS-loop add).
+///
+/// When fed from a single thread (all current call sites: the plan merge
+/// points and the serve loop run their accounting single-threaded), the
+/// accumulation order — and therefore the exact f64 value — matches a
+/// plain `f64 +=` running sum.
+#[derive(Debug)]
+pub struct FloatCounter {
+    bits: AtomicU64,
+}
+
+impl Default for FloatCounter {
+    fn default() -> Self {
+        FloatCounter { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+}
+
+impl FloatCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, d: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Overwrite the value. Not for general use — exists so derived
+    /// series (e.g. the exact component re-sum behind
+    /// `cim_energy_fj_total`) can be refreshed to a computed value.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous `i64` gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Ratchet: keep the maximum ever set (peak gauges).
+    #[inline]
+    pub fn set_max(&self, v: i64) {
+        self.v.fetch_max(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count of a [`Histogram`]: one underflow/zero bucket plus one
+/// bucket per `u64` bit length.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// Log2-bucket histogram over `u64` observations (e.g. microseconds).
+///
+/// Bucket 0 holds exact zeros; bucket `i` (1 ≤ i ≤ 64) holds values with
+/// bit length `i`, i.e. `2^(i-1) ≤ v < 2^i` — upper bound `2^i - 1`
+/// inclusive, matching the Prometheus `le` convention. Buckets are plain
+/// atomic counts, so histograms merge by addition and aggregate across
+/// shards/processes without resampling — unlike the reservoir percentiles
+/// in `coordinator::metrics`, which must be computed where the samples
+/// live.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    count: AtomicU64,
+    sum: FloatCounter,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: FloatCounter::new(),
+        }
+    }
+}
+
+/// Bucket index of one observation: 0 for 0, else the bit length of `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i`, or `None` for the +Inf bucket.
+pub fn bucket_upper(i: usize) -> Option<u64> {
+    match i {
+        0 => Some(0),
+        _ if i < HISTOGRAM_BUCKETS - 1 => Some((1u64 << i) - 1),
+        _ => None,
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+
+    /// Per-bucket counts (non-cumulative), index = [`bucket_index`].
+    pub fn bucket_counts(&self) -> [u64; HISTOGRAM_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Fold another histogram in (buckets, count, and sum all add).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (i, b) in other.bucket_counts().iter().enumerate() {
+            if *b > 0 {
+                self.buckets[i].fetch_add(*b, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.add(other.sum());
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile (0 ≤ q ≤ 1) —
+    /// a ≤2× overestimate by construction of the log2 buckets. Returns 0
+    /// for an empty histogram; the top bucket reports `u64::MAX`.
+    pub fn quantile_upper(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.bucket_counts().iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return bucket_upper(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A metric type a [`Family`] can materialize per label set.
+pub trait Metric: Send + Sync + std::fmt::Debug + 'static {
+    fn new_metric() -> Self;
+}
+
+impl Metric for Counter {
+    fn new_metric() -> Self {
+        Counter::new()
+    }
+}
+
+impl Metric for FloatCounter {
+    fn new_metric() -> Self {
+        FloatCounter::new()
+    }
+}
+
+impl Metric for Gauge {
+    fn new_metric() -> Self {
+        Gauge::new()
+    }
+}
+
+impl Metric for Histogram {
+    fn new_metric() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Labeled family of one metric type: `name{l1="…", l2="…"}` series.
+///
+/// `with(values)` get-or-creates the series for one label-value tuple and
+/// returns its `Arc` handle; callers cache the handle so the record path
+/// never touches the family lock.
+#[derive(Debug)]
+pub struct Family<T: Metric> {
+    label_names: &'static [&'static str],
+    series: Mutex<BTreeMap<Vec<String>, Arc<T>>>,
+}
+
+impl<T: Metric> Family<T> {
+    fn new(label_names: &'static [&'static str]) -> Self {
+        Family { label_names, series: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn label_names(&self) -> &'static [&'static str] {
+        self.label_names
+    }
+
+    /// Get-or-create the series with these label values (positional, one
+    /// per label name).
+    pub fn with(&self, values: &[&str]) -> Arc<T> {
+        assert_eq!(
+            values.len(),
+            self.label_names.len(),
+            "label value count mismatch: family has labels {:?}, got {values:?}",
+            self.label_names
+        );
+        let key: Vec<String> = values.iter().map(|s| s.to_string()).collect();
+        let mut map = self.series.lock().unwrap();
+        map.entry(key).or_insert_with(|| Arc::new(T::new_metric())).clone()
+    }
+
+    /// Snapshot of every materialized series, label-sorted.
+    pub fn series(&self) -> Vec<(Vec<String>, Arc<T>)> {
+        self.series.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+}
+
+/// One registered entry (single metric or labeled family).
+#[derive(Debug, Clone)]
+pub(crate) enum Entry {
+    Counter(Arc<Counter>),
+    FloatCounter(Arc<FloatCounter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    CounterFamily(Arc<Family<Counter>>),
+    FloatCounterFamily(Arc<Family<FloatCounter>>),
+    GaugeFamily(Arc<Family<Gauge>>),
+    HistogramFamily(Arc<Family<Histogram>>),
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct Slot {
+    pub(crate) help: &'static str,
+    pub(crate) entry: Entry,
+}
+
+/// Named collection of metrics. One process-global instance lives behind
+/// [`super::global`]; tests construct private registries with
+/// [`Registry::new`].
+///
+/// Registration is idempotent get-or-register keyed on the metric name;
+/// re-registering a name as a *different* type is a programming error and
+/// panics. Names are `BTreeMap`-ordered so the exported text is
+/// deterministic.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub(crate) slots: Mutex<BTreeMap<&'static str, Slot>>,
+}
+
+macro_rules! register_single {
+    ($fn_name:ident, $ty:ty, $variant:ident) => {
+        pub fn $fn_name(&self, name: &'static str, help: &'static str) -> Arc<$ty> {
+            let mut slots = self.slots.lock().unwrap();
+            let slot = slots.entry(name).or_insert_with(|| Slot {
+                help,
+                entry: Entry::$variant(Arc::new(<$ty>::new_metric())),
+            });
+            match &slot.entry {
+                Entry::$variant(m) => m.clone(),
+                other => panic!(
+                    "metric {name:?} already registered with a different type ({other:?})"
+                ),
+            }
+        }
+    };
+}
+
+macro_rules! register_family {
+    ($fn_name:ident, $ty:ty, $variant:ident) => {
+        pub fn $fn_name(
+            &self,
+            name: &'static str,
+            help: &'static str,
+            labels: &'static [&'static str],
+        ) -> Arc<Family<$ty>> {
+            let mut slots = self.slots.lock().unwrap();
+            let slot = slots.entry(name).or_insert_with(|| Slot {
+                help,
+                entry: Entry::$variant(Arc::new(Family::new(labels))),
+            });
+            match &slot.entry {
+                Entry::$variant(f) => {
+                    assert_eq!(
+                        f.label_names(),
+                        labels,
+                        "metric {name:?} re-registered with different labels"
+                    );
+                    f.clone()
+                }
+                other => panic!(
+                    "metric {name:?} already registered with a different type ({other:?})"
+                ),
+            }
+        }
+    };
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    register_single!(counter, Counter, Counter);
+    register_single!(float_counter, FloatCounter, FloatCounter);
+    register_single!(gauge, Gauge, Gauge);
+    register_single!(histogram, Histogram, Histogram);
+
+    register_family!(counter_family, Counter, CounterFamily);
+    register_family!(float_counter_family, FloatCounter, FloatCounterFamily);
+    register_family!(gauge_family, Gauge, GaugeFamily);
+    register_family!(histogram_family, Histogram, HistogramFamily);
+
+    /// Name-sorted snapshot of every registered slot (for the exporters).
+    pub(crate) fn snapshot(&self) -> Vec<(&'static str, Slot)> {
+        self.slots.lock().unwrap().iter().map(|(n, s)| (*n, s.clone())).collect()
+    }
+
+    /// Number of registered names (families count once).
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("t_ops_total", "ops");
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        // Idempotent get-or-register returns the same underlying series.
+        let c2 = r.counter("t_ops_total", "ops");
+        c2.inc();
+        assert_eq!(c.get(), 43);
+
+        let g = r.gauge("t_depth", "queue depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+        g.set_max(3);
+        assert_eq!(g.get(), 5, "set_max never lowers");
+        g.set_max(9);
+        assert_eq!(g.get(), 9);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn float_counter_matches_sequential_sum() {
+        let f = FloatCounter::new();
+        let mut reference = 0f64;
+        for i in 0..100 {
+            let d = 0.1 * (i as f64) + 0.7;
+            f.add(d);
+            reference += d;
+        }
+        // Single-threaded adds reproduce a running `+=` bit-exactly.
+        assert_eq!(f.get().to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // Zero goes to the dedicated zero bucket.
+        assert_eq!(bucket_index(0), 0);
+        // Powers of two open a new bucket; `2^i - 1` closes bucket i.
+        for i in 1..=63usize {
+            let lo = 1u64 << (i - 1);
+            assert_eq!(bucket_index(lo), i, "2^{} opens bucket {i}", i - 1);
+            assert_eq!(bucket_index((1u64 << i) - 1), i, "2^{i}-1 closes bucket {i}");
+        }
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // `bucket_upper` is the inclusive `le` bound; top bucket is +Inf.
+        assert_eq!(bucket_upper(0), Some(0));
+        assert_eq!(bucket_upper(1), Some(1));
+        assert_eq!(bucket_upper(4), Some(15));
+        assert_eq!(bucket_upper(64), None);
+        // Every representable value lands in the bucket its bound names.
+        for v in [0u64, 1, 2, 3, 4, 1023, 1024, 1025, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            if let Some(upper) = bucket_upper(i) {
+                assert!(v <= upper);
+            }
+            if i > 0 {
+                assert!(v > bucket_upper(i - 1).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_observe_merge_and_quantile() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [0u64, 1, 2, 3, 900, 1000] {
+            a.observe(v);
+        }
+        for v in [4u64, 1_000_000] {
+            b.observe(v);
+        }
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.sum(), 1906.0);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 8);
+        assert_eq!(a.sum(), 1906.0 + 1_000_004.0);
+        let counts = a.bucket_counts();
+        assert_eq!(counts[0], 1, "one zero");
+        assert_eq!(counts[1], 1, "v=1");
+        assert_eq!(counts[2], 2, "v=2,3");
+        assert_eq!(counts[3], 1, "v=4");
+        assert_eq!(counts[10], 2, "v=900,1000 in [512,1023]");
+        assert_eq!(counts[20], 1, "v=1e6 in [2^19,2^20-1]");
+        // Quantile upper bounds are bucket bounds: the median of the 8
+        // observations sits in bucket 2 (le=3), the max in bucket 20.
+        assert_eq!(a.quantile_upper(0.5), 3);
+        assert_eq!(a.quantile_upper(1.0), (1 << 20) - 1);
+        assert_eq!(Histogram::new().quantile_upper(0.5), 0);
+    }
+
+    #[test]
+    fn family_label_handling() {
+        let r = Registry::new();
+        let fam = r.counter_family("t_layer_ops_total", "per-layer ops", &["layer", "kind"]);
+        let fc1 = fam.with(&["fc1", "linear"]);
+        let conv = fam.with(&["conv0", "conv"]);
+        fc1.add(5);
+        conv.add(2);
+        // Same label values → same series.
+        fam.with(&["fc1", "linear"]).inc();
+        assert_eq!(fc1.get(), 6);
+        assert_eq!(conv.get(), 2);
+        let series = fam.series();
+        assert_eq!(series.len(), 2);
+        // BTreeMap order: label-value tuples sort lexicographically.
+        assert_eq!(series[0].0, vec!["conv0".to_string(), "conv".to_string()]);
+        assert_eq!(series[1].0, vec!["fc1".to_string(), "linear".to_string()]);
+        // Re-registering the family is idempotent and shares state.
+        let fam2 = r.counter_family("t_layer_ops_total", "per-layer ops", &["layer", "kind"]);
+        fam2.with(&["fc1", "linear"]).inc();
+        assert_eq!(fc1.get(), 7);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "label value count mismatch")]
+    fn family_rejects_wrong_label_count() {
+        let r = Registry::new();
+        let fam = r.counter_family("t_bad_total", "x", &["layer", "kind"]);
+        fam.with(&["only-one"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("t_same_name", "as counter");
+        r.gauge("t_same_name", "as gauge");
+    }
+}

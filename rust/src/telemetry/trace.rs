@@ -1,0 +1,286 @@
+//! Lightweight tracing spans with a Chrome `trace_event` exporter
+//! (DESIGN.md §12).
+//!
+//! A span is `(name, start, duration, labels)` captured by an RAII guard
+//! created through the [`crate::span!`] macro. Spans land in one global
+//! bounded ring buffer (oldest dropped first) and export as Chrome
+//! `trace_event` JSON — loadable in Perfetto / `chrome://tracing` — via
+//! [`export_chrome_json`].
+//!
+//! **Disabled-path cost.** Tracing is off by default. The macro's first
+//! action is [`enabled`] — one `Relaxed` atomic load — and when it returns
+//! false *nothing else happens*: no `Instant::now()`, no label
+//! stringification (label expressions sit inside the enabled branch), no
+//! allocation, and crucially no RNG interaction, so noisy-mode outputs
+//! are bit-identical with the instrumentation compiled in (asserted by
+//! `tests/telemetry_hotpath.rs`, measured by `benches/telemetry_overhead`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring-buffer capacity: spans beyond this evict the oldest.
+pub const TRACE_RING_CAP: usize = 65_536;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING: Mutex<VecDeque<SpanEvent>> = Mutex::new(VecDeque::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Small dense per-thread id for the trace `tid` field (ThreadId has
+    /// no stable numeric accessor on MSRV).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Process-relative time origin; first use pins it.
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Is span recording on? One `Relaxed` load — this is the *entire*
+/// disabled-path cost of an instrumentation site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on/off. Enabling pins the time origin so the first
+/// span does not pay for it.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub labels: Vec<(&'static str, String)>,
+}
+
+/// RAII span: records on drop (if it was started). Bind it —
+/// `let _span = telemetry::span!("name");` — or it ends immediately.
+#[derive(Debug)]
+pub struct SpanGuard(Option<ActiveSpan>);
+
+#[derive(Debug)]
+struct ActiveSpan {
+    name: &'static str,
+    start: Instant,
+    labels: Vec<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    /// The disabled no-op guard: nothing recorded on drop.
+    #[inline(always)]
+    pub fn noop() -> Self {
+        SpanGuard(None)
+    }
+
+    /// A live span starting now. Callers go through [`crate::span!`],
+    /// which checks [`enabled`] first so labels are never even built on
+    /// the disabled path.
+    pub fn started(name: &'static str, labels: Vec<(&'static str, String)>) -> Self {
+        SpanGuard(Some(ActiveSpan { name, start: Instant::now(), labels }))
+    }
+
+    /// Label-free convenience used by the macro's no-label arm.
+    #[inline(always)]
+    pub fn new_if_enabled(name: &'static str) -> Self {
+        if enabled() {
+            Self::started(name, Vec::new())
+        } else {
+            Self::noop()
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(span) = self.0.take() {
+            let dur_us = span.start.elapsed().as_micros() as u64;
+            let ts_us = span.start.duration_since(epoch()).as_micros() as u64;
+            let ev = SpanEvent {
+                name: span.name,
+                ts_us,
+                dur_us,
+                tid: TID.with(|t| *t),
+                labels: span.labels,
+            };
+            let mut ring = RING.lock().unwrap();
+            if ring.len() >= TRACE_RING_CAP {
+                ring.pop_front();
+            }
+            ring.push_back(ev);
+        }
+    }
+}
+
+/// Record a span with (name, labels) at the `ts..ts+dur` window measured
+/// by the caller — for spans whose start predates the guard (queue waits).
+pub fn record_complete(name: &'static str, start: Instant, dur_us: u64) {
+    if !enabled() {
+        return;
+    }
+    let ts_us = start.duration_since(epoch()).as_micros() as u64;
+    let ev = SpanEvent { name, ts_us, dur_us, tid: TID.with(|t| *t), labels: Vec::new() };
+    let mut ring = RING.lock().unwrap();
+    if ring.len() >= TRACE_RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(ev);
+}
+
+/// Number of spans currently buffered.
+pub fn len() -> usize {
+    RING.lock().unwrap().len()
+}
+
+/// Drop all buffered spans.
+pub fn clear() {
+    RING.lock().unwrap().clear();
+}
+
+/// Copy of the buffered spans, oldest first.
+pub fn snapshot() -> Vec<SpanEvent> {
+    RING.lock().unwrap().iter().cloned().collect()
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Buffered spans as Chrome `trace_event` JSON (the `{"traceEvents":[…]}`
+/// object form): complete (`"ph":"X"`) events with µs timestamps, one
+/// `tid` per OS thread. Load in Perfetto (ui.perfetto.dev) or
+/// `chrome://tracing`.
+pub fn export_chrome_json() -> String {
+    let spans = snapshot();
+    let mut out = String::with_capacity(64 + spans.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":\"");
+        json_escape(s.name, &mut out);
+        out.push_str(&format!(
+            "\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{}",
+            s.tid, s.ts_us, s.dur_us
+        ));
+        if !s.labels.is_empty() {
+            out.push_str(",\"args\":{");
+            for (j, (k, v)) in s.labels.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push('"');
+                json_escape(k, &mut out);
+                out.push_str("\":\"");
+                json_escape(v, &mut out);
+                out.push('"');
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Record a span over the enclosed scope. First arm: name only. Second
+/// arm: `span!("name", "key" => value, …)` — label expressions are
+/// evaluated (and allocated) **only when tracing is enabled**; the
+/// disabled path is a single relaxed atomic load either way.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::telemetry::trace::SpanGuard::new_if_enabled($name)
+    };
+    ($name:expr, $($k:literal => $v:expr),+ $(,)?) => {
+        if $crate::telemetry::trace::enabled() {
+            $crate::telemetry::trace::SpanGuard::started(
+                $name,
+                vec![$(($k, $v.to_string())),+],
+            )
+        } else {
+            $crate::telemetry::trace::SpanGuard::noop()
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test fn: the ring and enabled flag are process-global and the
+    // harness runs #[test]s in parallel threads.
+    #[test]
+    fn span_lifecycle_ring_and_export() {
+        assert!(!enabled(), "tracing must default to off");
+        {
+            let _g = crate::span!("t_disabled");
+        }
+        assert_eq!(len(), 0, "disabled spans record nothing");
+
+        set_enabled(true);
+        {
+            let _g = crate::span!("t_outer", "layer" => "fc1", "items" => 3);
+            let _inner = crate::span!("t_inner");
+        }
+        record_complete("t_wait", Instant::now(), 17);
+        set_enabled(false);
+        let spans = snapshot();
+        assert_eq!(spans.len(), 3);
+        // Guards record on drop: inner closes before outer.
+        assert_eq!(spans[0].name, "t_inner");
+        assert_eq!(spans[1].name, "t_outer");
+        assert_eq!(spans[1].labels[0], ("layer", "fc1".to_string()));
+        assert_eq!(spans[1].labels[1], ("items", "3".to_string()));
+        assert_eq!(spans[2].dur_us, 17);
+        assert!(spans[1].ts_us <= spans[0].ts_us, "outer starts before inner");
+
+        let json = export_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"t_outer\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"args\":{\"layer\":\"fc1\",\"items\":\"3\"}"));
+
+        clear();
+        assert_eq!(len(), 0);
+
+        // Ring stays bounded under overflow.
+        set_enabled(true);
+        for _ in 0..(TRACE_RING_CAP + 10) {
+            record_complete("t_flood", Instant::now(), 1);
+        }
+        set_enabled(false);
+        assert_eq!(len(), TRACE_RING_CAP);
+        clear();
+    }
+
+    #[test]
+    fn json_escaping_is_safe() {
+        let mut out = String::new();
+        json_escape("a\"b\\c\nd\u{1}", &mut out);
+        assert_eq!(out, "a\\\"b\\\\c\\nd\\u0001");
+    }
+}

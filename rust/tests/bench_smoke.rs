@@ -24,12 +24,15 @@ use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
 use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
-use cimsim::mapping::NativeBackend;
+use cimsim::mapping::{account_core_op_into, ExecStats, NativeBackend};
 use cimsim::nn::dataset::random_image;
 use cimsim::nn::resnet::ResNet20;
 use cimsim::nn::tensor::Tensor;
 use cimsim::nn::transformer::TransformerBlock;
-use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use cimsim::pipeline::{
+    noise_stream, run_vector, BatchExecutor, MacroPool, PlacedLinear, StreamCtx, StreamKey,
+};
+use cimsim::telemetry::trace;
 use cimsim::util::rng::{Rng, Xoshiro256};
 use std::time::Instant;
 
@@ -61,6 +64,20 @@ fn time_mean<F: FnMut()>(n: usize, mut f: F) -> f64 {
         f();
     }
     t0.elapsed().as_secs_f64() / n as f64
+}
+
+/// Min seconds across `n` timed runs (one untimed warmup) — the right
+/// statistic when comparing two near-identical loops for a small relative
+/// overhead: scheduler noise only ever inflates a sample.
+fn time_min<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
 }
 
 fn test_layer(cfg: &Config, k: usize, n: usize) -> CimLinear {
@@ -399,6 +416,143 @@ fn refresh_attention_row() {
     write_rows("BENCH_attention.json", &rows);
 }
 
+/// `run_vector` minus telemetry: the uninstrumented floor for the overhead
+/// row (hand-synced with benches/telemetry_overhead.rs::raw_vector —
+/// deliberately unshared, same as the scalar_core_op copies above).
+#[allow(clippy::too_many_arguments)]
+fn raw_vector(
+    pool: &MacroPool,
+    placed: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    scratch: &mut OpScratch,
+    op: &mut CoreOpResult,
+    tile_acts: &mut Vec<i64>,
+    folded: &mut Vec<i64>,
+    stats: &mut ExecStats,
+) -> Vec<f32> {
+    let lin = placed.linear();
+    let (k, n) = (lin.k, lin.n);
+    let rows = lin.rows_per_tile();
+    let engines = lin.engines_per_tile();
+    let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+    let deq = lin.a_params.scale * lin.w_params.scale;
+    tile_acts.resize(rows, 0);
+    let mut out = vec![0f32; n];
+    for rt in 0..n_rt {
+        let r0 = rt * rows;
+        let upper = (r0 + rows).min(k);
+        tile_acts.fill(0);
+        tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+        scratch.prepare(pool.cfg(), tile_acts).unwrap();
+        for ct in 0..n_ct {
+            let slot = placed.slot(rt, ct);
+            let mut rng = noise_stream(key.seed, key.epoch, key.item, (rt * n_ct + ct) as u64);
+            pool.op_prepared_into(slot, &mut rng, scratch, op).unwrap();
+            let c0 = ct * engines;
+            for (e, &v) in op.values.iter().enumerate() {
+                let col = c0 + e;
+                if col < n {
+                    out[col] += v as f32 * deq;
+                }
+            }
+            let (sh, co) = pool.locate(slot);
+            let w = pool.shard(sh).core_weights(co).unwrap();
+            account_core_op_into(pool.cfg(), w, tile_acts, &op.stats, stats, folded);
+        }
+    }
+    let zp = lin.act_zero();
+    if zp != 0 {
+        for (col, o) in out.iter_mut().enumerate() {
+            *o -= (zp * lin.col_sum(col)) as f32 * deq;
+        }
+    }
+    for (o, b) in out.iter_mut().zip(&lin.bias) {
+        *o += b;
+    }
+    out
+}
+
+fn refresh_telemetry_row() {
+    let (k, n, batch) = (144usize, 32usize, 64usize);
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let lin = test_layer(&cfg, k, n);
+    let n_rt = lin.n_row_tiles();
+    let acts_q: Vec<Vec<i64>> =
+        batch_inputs(k, batch).iter().map(|x| lin.quantize_acts(x)).collect();
+    let mut pool = MacroPool::new(cfg.clone());
+    let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+    let key_of = |i: usize| StreamKey { seed: 3, epoch: 0, item: i as u64 };
+
+    // Best-of-attempts on min-of-samples: scheduler noise must not read as
+    // telemetry overhead (the disabled span guard is one relaxed load per
+    // row tile — real overhead is far below the 2% budget).
+    let mut raw_min = f64::INFINITY;
+    let mut disabled_min = f64::INFINITY;
+    for _ in 0..3 {
+        let mut sc = OpScratch::new(&cfg.mac);
+        let mut op = CoreOpResult::default();
+        let (mut ta, mut fo) = (Vec::new(), Vec::new());
+        raw_min = raw_min.min(time_min(4, || {
+            let mut stats = ExecStats::default();
+            for (i, acts) in acts_q.iter().enumerate() {
+                black_box(raw_vector(
+                    &pool, &placed, key_of(i), acts, &mut sc, &mut op, &mut ta, &mut fo,
+                    &mut stats,
+                ));
+            }
+        }));
+        let mut ctx = StreamCtx::new(&cfg);
+        disabled_min = disabled_min.min(time_min(4, || {
+            let mut stats = ExecStats::default();
+            for (i, acts) in acts_q.iter().enumerate() {
+                black_box(
+                    run_vector(&pool, &placed, key_of(i), acts, &mut ctx, &mut stats).unwrap(),
+                );
+            }
+        }));
+        if disabled_min / raw_min - 1.0 < 0.01 {
+            break;
+        }
+    }
+
+    trace::clear();
+    trace::set_enabled(true);
+    let mut ctx = StreamCtx::new(&cfg);
+    let enabled_min = time_min(4, || {
+        let mut stats = ExecStats::default();
+        for (i, acts) in acts_q.iter().enumerate() {
+            black_box(run_vector(&pool, &placed, key_of(i), acts, &mut ctx, &mut stats).unwrap());
+        }
+    });
+    trace::set_enabled(false);
+    assert!(trace::len() > 0, "enabled tracing leg recorded no spans");
+    trace::clear();
+
+    let overhead_disabled_pct = (disabled_min / raw_min - 1.0) * 100.0;
+    let overhead_enabled_pct = (enabled_min / raw_min - 1.0) * 100.0;
+    assert!(
+        overhead_disabled_pct < 2.0,
+        "disabled-tracing hot path must stay within the 2% budget, measured {overhead_disabled_pct:.3}%"
+    );
+
+    let mut fields = vec![
+        JsonField::Str("bench", "telemetry_overhead"),
+        JsonField::Str("layer", "144x32"),
+        JsonField::Int("batch", batch as i64),
+        JsonField::Int("spans_per_sweep", (batch * n_rt) as i64),
+        JsonField::Num("raw_sweep_ms", raw_min * 1e3),
+        JsonField::Num("disabled_sweep_ms", disabled_min * 1e3),
+        JsonField::Num("enabled_sweep_ms", enabled_min * 1e3),
+        JsonField::Num("overhead_disabled_pct", overhead_disabled_pct),
+        JsonField::Num("overhead_enabled_pct", overhead_enabled_pct),
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_telemetry.json", &[json_row(&fields)]);
+}
+
 /// If `BENCH_baseline.json` is still the bootstrap stub, arm the
 /// bench-regression gate from the freshly-measured rows. Quietly a no-op
 /// when `python3` is unavailable (the CI python job arms it instead).
@@ -431,7 +585,7 @@ fn arm_baseline_if_bootstrap() {
     }
 }
 
-/// One test (not several) so the five refreshes never race on the files.
+/// One test (not several) so the six refreshes never race on the files.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
     // The kernel file also refreshes on schema drift: a measured pre-§11
@@ -453,12 +607,18 @@ fn bench_trajectory_has_no_placeholders() {
     {
         refresh_attention_row();
     }
+    if needs_refresh("BENCH_telemetry.json")
+        || lacks_field("BENCH_telemetry.json", "overhead_disabled_pct")
+    {
+        refresh_telemetry_row();
+    }
     for f in [
         "BENCH_kernel.json",
         "BENCH_pipeline.json",
         "BENCH_compiler.json",
         "BENCH_stream.json",
         "BENCH_attention.json",
+        "BENCH_telemetry.json",
     ] {
         let text = std::fs::read_to_string(bench_json_path(f)).unwrap();
         assert!(
@@ -476,5 +636,15 @@ fn bench_trajectory_has_no_placeholders() {
         kernel.contains("popcount_batch_ms") && kernel.contains("batch_vs_walk_speedup"),
         "BENCH_kernel.json lacks the popcount-kernel trajectory row"
     );
+    // The measured telemetry row (from whichever profile wrote it last)
+    // must honor the DESIGN.md §12 overhead budget.
+    let telem = std::fs::read_to_string(bench_json_path("BENCH_telemetry.json")).unwrap();
+    let pct: f64 = telem
+        .split("\"overhead_disabled_pct\": ")
+        .nth(1)
+        .and_then(|s| s.split([',', '}']).next())
+        .and_then(|s| s.trim().parse().ok())
+        .expect("BENCH_telemetry.json lacks a numeric overhead_disabled_pct");
+    assert!(pct < 2.0, "recorded disabled-tracing overhead {pct}% breaks the 2% budget");
     arm_baseline_if_bootstrap();
 }

@@ -1,0 +1,197 @@
+//! End-to-end telemetry exactness (DESIGN.md §12): start `serve --stream`
+//! with a metrics side listener, drive real inference requests over TCP,
+//! scrape `GET /metrics` + `GET /metrics.json` over a raw socket, and
+//! assert the exported device counters equal a reference plan's own
+//! `ExecStats` **exactly** — integer counters by value, total energy by
+//! f64 bit pattern (the text exposition prints shortest-roundtrip floats,
+//! so parse-back is lossless).
+//!
+//! The whole flow lives in ONE #[test]: the registry and the device
+//! counter handles are process-global, and `cargo test` runs the `#[test]`
+//! fns of one integration binary as parallel threads — a second test in
+//! this file would race the scrape. (Other test files are separate
+//! processes and cannot interfere.)
+//!
+//! Ordering inside the test matters twice:
+//!  * the scrape happens BEFORE the reference plan is compiled, because
+//!    `compile()` itself records placement weight-loads into the global
+//!    registry and would pollute the scraped totals;
+//!  * requests go through ONE blocking client sequentially, so every
+//!    coalesced batch holds exactly one item and the served execution is
+//!    chunk-for-chunk identical to the reference `run_streamed_flat`
+//!    calls (same merge order ⇒ same f64 accumulation).
+
+use cimsim::compiler::{compile, CompileOptions, Graph};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::coordinator::{serve_plan, Client, ServeConfig};
+use cimsim::nn::dataset::BlobDataset;
+use cimsim::nn::mlp::{train, Mlp};
+use cimsim::nn::tensor::Tensor;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Raw HTTP/1.1 GET against the metrics listener; returns (status line,
+/// body). Connection: close semantics — the exporter writes one response
+/// and shuts the socket, so read_to_string terminates.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect metrics listener");
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read scrape response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("HTTP header/body split");
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, body.to_string())
+}
+
+/// The value of one exposition line, e.g. `series("... 42\n", "cim_x_total")`.
+/// Matches the exact series name (with labels when given), not a prefix —
+/// `cim_exec_latency_us` must not match `cim_exec_latency_us_count`.
+fn series(body: &str, name: &str) -> f64 {
+    let prefix = format!("{name} ");
+    let line = body
+        .lines()
+        .find(|l| l.starts_with(&prefix))
+        .unwrap_or_else(|| panic!("series `{name}` missing from scrape:\n{body}"));
+    line[prefix.len()..].trim().parse().unwrap_or_else(|e| panic!("parse `{line}`: {e}"))
+}
+
+fn series_u64(body: &str, name: &str) -> u64 {
+    let v = series(body, name);
+    assert!(v.fract() == 0.0 && v >= 0.0, "{name} not an integer counter: {v}");
+    v as u64
+}
+
+#[test]
+fn scraped_metrics_equal_reference_exec_stats_exactly() {
+    // -- model + plan identical to the reference built later ------------
+    let mut d = BlobDataset::new(12, 0.05, 21);
+    let data: Vec<(Vec<f32>, usize)> =
+        d.batch(120).into_iter().map(|s| (s.image.data, s.label)).collect();
+    let mut mlp = Mlp::new(&[144, 32, 10], 4);
+    train(&mut mlp, &data, 3, 0.05, 6);
+    let cal: Vec<Tensor> = data
+        .iter()
+        .take(16)
+        .map(|(x, _)| Tensor::from_vec(&[144], x.clone()))
+        .collect();
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false; // determinism: served run == reference run
+    cfg.enhance = EnhanceConfig::both();
+    let opts = CompileOptions { workers: 2, seed: Some(0xE2E), ..Default::default() };
+    let inputs: Vec<Vec<f32>> = data.iter().take(5).map(|(x, _)| x.clone()).collect();
+
+    let plan = compile(Graph::from_mlp(&mlp), &cal, &cfg, &opts).unwrap();
+    let handle = serve_plan(
+        plan,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            stream: true,
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let metrics_addr = handle.metrics_addr().expect("metrics listener requested");
+
+    // -- drive: one blocking client, strictly sequential -----------------
+    let mut client = Client::connect(handle.addr).unwrap();
+    let mut served: Vec<Vec<f32>> = Vec::new();
+    for x in &inputs {
+        served.push(client.infer(x).unwrap());
+    }
+
+    // The snapshot is pollable mid-flight, without shutting the server
+    // down — and the serve loop accounts each batch BEFORE replying, so
+    // everything we got answers for is already visible here.
+    let live = handle.metrics_snapshot();
+    assert_eq!(live.requests, inputs.len() as u64);
+    assert_eq!(live.batches, inputs.len() as u64, "sequential client ⇒ one-item batches");
+    assert!(live.core_ops > 0 && live.device_cycles > 0);
+
+    // -- scrape (before the reference plan pollutes the registry) --------
+    let (status, text) = http_get(metrics_addr, "/metrics");
+    assert!(status.contains("200"), "scrape failed: {status}");
+    let (jstatus, json) = http_get(metrics_addr, "/metrics.json");
+    assert!(jstatus.contains("200"), "json scrape failed: {jstatus}");
+    assert!(json.contains("\"cim_core_ops_total\""));
+    assert!(json.contains("\"cim_layer_device_cycles_total\""));
+
+    let got_core_ops = series_u64(&text, "cim_core_ops_total");
+    let got_cycles = series_u64(&text, "cim_device_cycles_total");
+    let got_loads = series_u64(&text, "cim_weight_loads_total");
+    let got_clipped = series_u64(&text, "cim_clipped_total");
+    let got_energy: f64 = series(&text, "cim_energy_fj_total");
+    let got_layer_cycles: Vec<(String, u64)> = text
+        .lines()
+        .filter(|l| l.starts_with("cim_layer_device_cycles_total{"))
+        .map(|l| {
+            let (series, v) = l.rsplit_once(' ').unwrap();
+            (series.to_string(), v.parse().unwrap())
+        })
+        .collect();
+
+    // Serve-loop series: everything replied to is already accounted.
+    assert_eq!(series_u64(&text, "cim_serve_requests_total"), inputs.len() as u64);
+    assert_eq!(series_u64(&text, "cim_serve_batches_total"), inputs.len() as u64);
+    assert_eq!(series_u64(&text, "cim_exec_latency_us_count"), inputs.len() as u64);
+    assert_eq!(series_u64(&text, "cim_wait_latency_us_count"), inputs.len() as u64);
+    assert!(series_u64(&text, "cim_pool_slot_loads_total") > 0);
+    // Streamed serving routes items through the per-stage `run_vector`
+    // path, not the barrier `run_q` — the executor-items series exists
+    // (registered at compile) but stays zero here.
+    assert_eq!(series_u64(&text, "cim_exec_items_total"), 0);
+
+    // Snapshot and scrape read the same execution through two paths; the
+    // compile-time chunk carries only weight_loads, so the run-only serve
+    // counters must match the device series on ops/cycles exactly.
+    assert_eq!(got_core_ops, live.core_ops);
+    assert_eq!(got_cycles, live.device_cycles);
+
+    let final_metrics = handle.shutdown();
+    assert_eq!(final_metrics.requests, inputs.len() as u64);
+    // The exporter died with the server: a fresh scrape cannot succeed.
+    // (A connect may still sneak into the OS backlog; a read must not.)
+    if let Ok(mut s) = TcpStream::connect(metrics_addr) {
+        let _ = s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        let mut buf = String::new();
+        let n = s.read_to_string(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "exporter still serving after shutdown: {buf}");
+    }
+
+    // -- reference: same graph/cal/cfg/opts, same per-item order ---------
+    let mut reference = compile(Graph::from_mlp(&mlp), &cal, &cfg, &opts).unwrap();
+    let mut want: Vec<Vec<f32>> = Vec::new();
+    for x in &inputs {
+        want.extend(reference.run_streamed_flat(std::slice::from_ref(x)).unwrap());
+    }
+    assert_eq!(served, want, "served replies must equal the reference outputs");
+
+    let ref_stats = reference.stats();
+    assert_eq!(got_core_ops, ref_stats.core_ops, "core ops");
+    assert_eq!(got_cycles, ref_stats.total_cycles, "device cycles");
+    assert_eq!(got_loads, ref_stats.weight_loads, "weight loads (incl. placement)");
+    assert_eq!(got_clipped, ref_stats.clipped, "clip events");
+    assert_eq!(
+        got_energy.to_bits(),
+        ref_stats.energy_fj().to_bits(),
+        "energy must round-trip bit-exactly: scraped {got_energy} vs {}",
+        ref_stats.energy_fj()
+    );
+
+    // Per-layer series equal each CompiledLayer's own observed stats.
+    assert!(!got_layer_cycles.is_empty(), "per-layer series missing");
+    for layer in reference.layers() {
+        let name = format!(
+            "cim_layer_device_cycles_total{{layer=\"{}\",kind=\"{}\"}}",
+            layer.name,
+            layer.kind().label()
+        );
+        let got = got_layer_cycles
+            .iter()
+            .find(|(s, _)| *s == name)
+            .unwrap_or_else(|| panic!("no scraped series {name}"));
+        assert_eq!(got.1, layer.observed().total_cycles, "{name}");
+    }
+}

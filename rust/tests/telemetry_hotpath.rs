@@ -1,0 +1,82 @@
+//! Tracing must be free when disabled and inert when enabled (DESIGN.md
+//! §12): the span ring never touches the simulator's RNG streams or its
+//! accumulation order, so a traced run is **bit-identical** to an
+//! untraced one — asserted here with noise ENABLED (the adversarial case:
+//! any stray RNG draw or reordering would flip output bits).
+//!
+//! One #[test] only: `trace::set_enabled` and the span ring are
+//! process-global, and `#[test]` fns in one integration binary run as
+//! parallel threads.
+
+use cimsim::compiler::{compile, CompileOptions, Graph};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::nn::mlp::Mlp;
+use cimsim::nn::tensor::Tensor;
+use cimsim::telemetry::trace;
+use cimsim::util::rng::{Rng, Xoshiro256};
+
+fn cal_set(dim: usize, n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Xoshiro256::seeded(seed);
+    (0..n)
+        .map(|_| Tensor::from_vec(&[dim], (0..dim).map(|_| rng.next_f32()).collect()))
+        .collect()
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    let mut cfg = Config::default();
+    cfg.noise.enabled = true; // the hard case: spans must not perturb RNG
+    cfg.enhance = EnhanceConfig::both();
+    let mlp = Mlp::new(&[48, 24, 10], 7);
+    let graph = Graph::from_mlp(&mlp);
+    let cal = cal_set(48, 10, 3);
+    let inputs: Vec<Vec<f32>> = cal_set(48, 6, 91).into_iter().map(|t| t.data).collect();
+    // Pin the noise seed so both plans replay the same substreams: the
+    // noise model keys on (seed, epoch, item, tile) and each plan's epoch
+    // counter starts at zero.
+    let opts = CompileOptions { workers: 2, seed: Some(0x7A11), ..Default::default() };
+
+    let mut plan_off = compile(graph.clone(), &cal, &cfg, &opts).unwrap();
+    let mut plan_on = compile(graph, &cal, &cfg, &opts).unwrap();
+
+    assert!(!trace::enabled(), "tracing must default to off");
+    let out_off = plan_off.run_streamed_flat(&inputs).unwrap();
+    let spans_before = trace::len();
+
+    trace::clear();
+    trace::set_enabled(true);
+    let out_on = plan_on.run_streamed_flat(&inputs).unwrap();
+    trace::set_enabled(false);
+
+    // Bit-identical outputs: f32 == on finite values compares bit patterns
+    // here (the pipeline never emits NaN for these inputs).
+    assert_eq!(out_off, out_on, "tracing changed the computation");
+    // Engine accounting is identical too, including energy bits.
+    assert_eq!(plan_off.stats().core_ops, plan_on.stats().core_ops);
+    assert_eq!(plan_off.stats().total_cycles, plan_on.stats().total_cycles);
+    assert_eq!(
+        plan_off.stats().energy_fj().to_bits(),
+        plan_on.stats().energy_fj().to_bits()
+    );
+
+    // The disabled run recorded nothing; the enabled run recorded the
+    // streamed-execution span tree.
+    assert_eq!(spans_before, 0, "spans recorded while tracing was off");
+    let events = trace::snapshot();
+    assert!(!events.is_empty(), "no spans recorded while tracing was on");
+    let names: std::collections::BTreeSet<&str> =
+        events.iter().map(|e| e.name).collect();
+    assert!(names.contains("stage_item"), "streamed path must emit stage_item: {names:?}");
+    assert!(names.contains("row_tile"), "per-tile span missing: {names:?}");
+
+    // Chrome trace_event export is well-formed and carries the spans.
+    let json = trace::export_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.contains("\"name\":\"stage_item\""));
+    assert!(json.contains("\"ph\":\"X\""));
+    let opens = json.matches('{').count() + json.matches('[').count();
+    let closes = json.matches('}').count() + json.matches(']').count();
+    assert_eq!(opens, closes);
+
+    trace::clear();
+}

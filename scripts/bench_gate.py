@@ -210,6 +210,11 @@ def self_test():
     assert metric_direction("est_device_ms_per_img") == "down"
     assert metric_direction("img_per_s") == "up"
     assert metric_direction("tiles") is None
+    # Telemetry-overhead rows: sweep times gate, the derived percentages
+    # are informational (a ratio of two gated numbers would double-count).
+    assert metric_direction("raw_sweep_ms") == "down"
+    assert metric_direction("disabled_sweep_ms") == "down"
+    assert metric_direction("overhead_disabled_pct") is None
     print("bench_gate self-test OK")
 
 
