@@ -1,0 +1,130 @@
+//! Autoregressive decode throughput on the KV-cache engine
+//! (DESIGN.md §13): prefill 16 prompt tokens, then greedy-decode 48,
+//! timing every decode step individually.
+//!
+//! Emits one JSON row to `BENCH_decode.json` at the repo root:
+//! * `tok_per_s` — decode-phase tokens per wall second;
+//! * `token_p50_ms` / `token_p99_ms` — per-token step latency across all
+//!   runs (the p99 captures the periodic KV-strip reload + rescale cost);
+//! * `reload_cycle_frac` — the share of the session's modeled device
+//!   cycles spent reloading dynamic weight tiles (KV strips + per-step
+//!   rescale rewrites), from the same `weight_load_cycles` cost the
+//!   dynamic substrate charges;
+//! * provenance (profile / threads / fast-mode).
+//!
+//! Run: `cargo bench --bench decode_throughput` (CIMSIM_BENCH_FAST=1
+//! trims the run count only — the workload per run is identical).
+
+use cimsim::bench::{
+    bench_json_path, black_box, fast_mode, json_row, percentile, provenance_fields, JsonField,
+};
+use cimsim::cim::timing::weight_load_cycles;
+use cimsim::compiler::{argmax, DecodePlan};
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::nn::transformer::DecoderModel;
+use std::time::Instant;
+
+const PREFILL: usize = 16;
+const DECODE: usize = 48;
+const D_MODEL: usize = 16;
+const HEADS: usize = 2;
+const D_FF: usize = 32;
+const LAYERS: usize = 2;
+const VOCAB: usize = 32;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let max_seq = PREFILL + DECODE;
+    let model = DecoderModel::new(D_MODEL, HEADS, D_FF, VOCAB, LAYERS, max_seq, 42);
+    let cal: Vec<Vec<usize>> = vec![
+        (0..8).map(|i| (i * 5 + 3) % VOCAB).collect(),
+        (0..6).map(|i| (i * 7 + 1) % VOCAB).collect(),
+    ];
+    let plan = DecodePlan::new(model, &cal, &cfg, None).expect("decode plan");
+    let prompt: Vec<usize> = (0..PREFILL).map(|i| (i * 11 + 2) % VOCAB).collect();
+
+    let runs = if fast_mode() { 2usize } else { 5 };
+    let mut token_lat: Vec<f64> = Vec::with_capacity(runs * DECODE);
+    let mut prefill_total = 0.0f64;
+    let mut decode_total = 0.0f64;
+    let mut reload_frac = 0.0f64;
+    let mut reloads_per_token = 0.0f64;
+    let mut first_tokens: Option<Vec<usize>> = None;
+
+    for run in 0..runs {
+        let mut s = plan.session(run as u64).expect("session");
+        // Prefill: feed all but the last prompt token; the step that feeds
+        // prompt[PREFILL-1] already belongs to the decode phase (it emits
+        // the first generated token), matching `DecodePlan::generate`.
+        let t0 = Instant::now();
+        for &t in &prompt[..PREFILL - 1] {
+            black_box(plan.step(&mut s, t).expect("prefill step"));
+        }
+        prefill_total += t0.elapsed().as_secs_f64();
+
+        let mut next = prompt[PREFILL - 1];
+        let mut generated = Vec::with_capacity(DECODE);
+        for _ in 0..DECODE {
+            let t0 = Instant::now();
+            let logits = plan.step(&mut s, next).expect("decode step");
+            token_lat.push(t0.elapsed().as_secs_f64());
+            next = argmax(&logits);
+            generated.push(next);
+        }
+        decode_total += token_lat[token_lat.len() - DECODE..].iter().sum::<f64>();
+
+        // Cost-model accounting from the session's own stats: every dynamic
+        // tile write was charged `weight_load_cycles` into total_cycles.
+        let st = s.stats();
+        reload_frac =
+            (st.weight_loads * weight_load_cycles(&cfg)) as f64 / st.total_cycles.max(1) as f64;
+        reloads_per_token = st.weight_loads as f64 / (PREFILL + DECODE - 1) as f64;
+        match &first_tokens {
+            None => first_tokens = Some(generated),
+            // Noise-free decode is deterministic across sessions; a diverging
+            // run means the bench measured two different workloads.
+            Some(want) => assert_eq!(&generated, want, "decode diverged across runs"),
+        }
+    }
+
+    token_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile(&token_lat, 0.50);
+    let p99 = percentile(&token_lat, 0.99);
+    let tok_per_s = (runs * DECODE) as f64 / decode_total;
+
+    println!(
+        "decode prefill={PREFILL} gen={DECODE}: {tok_per_s:.1} tok/s, \
+         p50 {:.3} ms, p99 {:.3} ms, reload cycle share {:.1} %",
+        p50 * 1e3,
+        p99 * 1e3,
+        reload_frac * 100.0
+    );
+
+    let mut fields = vec![
+        JsonField::Str("bench", "decode_throughput"),
+        JsonField::Str("config", "prefill16_decode48"),
+        JsonField::Int("d_model", D_MODEL as i64),
+        JsonField::Int("heads", HEADS as i64),
+        JsonField::Int("d_ff", D_FF as i64),
+        JsonField::Int("layers", LAYERS as i64),
+        JsonField::Int("vocab", VOCAB as i64),
+        JsonField::Int("prefill", PREFILL as i64),
+        JsonField::Int("decode", DECODE as i64),
+        JsonField::Int("runs", runs as i64),
+        JsonField::Int("static_tiles", plan.static_tiles() as i64),
+        JsonField::Num("tok_per_s", tok_per_s),
+        JsonField::Num("prefill_ms", prefill_total / runs as f64 * 1e3),
+        JsonField::Num("token_p50_ms", p50 * 1e3),
+        JsonField::Num("token_p99_ms", p99 * 1e3),
+        JsonField::Num("reload_cycle_frac", reload_frac),
+        JsonField::Num("reloads_per_token", reloads_per_token),
+    ];
+    fields.extend(provenance_fields());
+
+    let path = bench_json_path("BENCH_decode.json");
+    std::fs::write(&path, format!("{}\n", json_row(&fields)))
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

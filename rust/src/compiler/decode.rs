@@ -1,0 +1,824 @@
+//! Autoregressive KV-cache decoding on the macro pool (DESIGN.md §13).
+//!
+//! [`DecodePlan`] compiles a [`DecoderModel`] for token-at-a-time
+//! execution: every *static* weight (per-head Wq/Wk/Wv/Wo, the FFN pair,
+//! the LM head) is placed **once** on one shared [`MacroPool`] and never
+//! reloads — reload-amortization falls out of the execution order, which
+//! runs every head of a layer against its resident grids before moving to
+//! the next layer. The *runtime* tensors of attention (the growing K/V
+//! slabs) live per session on dedicated [`KvCache`] grids with incremental
+//! running-max requantization and strip reloads.
+//!
+//! **Determinism (DESIGN.md §9/§13).** Every core op's noise key is
+//! `(session_seed, step · SITES + site, 0, tile)`: the per-step epoch
+//! stride `SITES` counts the fixed op sites of one token step (per block:
+//! 6 per head — q, k, v, scores, context, out — plus ffn1/ffn2; plus the
+//! LM head), and `session_seed` is derived from the plan seed and the
+//! session id. A session's outputs are therefore a pure function of
+//! `(plan, session id, token sequence)` — independent of co-resident
+//! sessions, of barrier vs streamed scheduling, and replayable from
+//! position zero (the stateless oracle of `tests/decode_equivalence.rs`).
+//!
+//! [`ContinuousBatcher`] adds token-level continuous batching: sessions
+//! occupy slots, every [`ContinuousBatcher::step_all`] round advances each
+//! active session by one token (prefill feeds prompt tokens through the
+//! same step machinery), new requests join between rounds, and finished
+//! sequences free their slot (dropping their KV grids). Streamed mode
+//! pipelines the round through `sched::run_stages` with one stage per
+//! block plus the head, names keyed by the generation step.
+
+use crate::cim::MacroError;
+use crate::config::Config;
+use crate::mapping::executor::CimLinear;
+use crate::mapping::{ExecStats, MapError};
+use crate::nn::ops::{layer_norm, softmax};
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+use crate::nn::transformer::{DecoderModel, LN_EPS};
+use crate::pipeline::batch::{run_vector, StreamCtx, StreamKey};
+use crate::pipeline::kv_cache::KvCache;
+use crate::pipeline::pool::{MacroPool, PlacedLinear};
+use crate::sched::run_stages;
+use crate::util::rng::SplitMix64;
+
+/// Greedy decoding: index of the largest logit (first wins ties — strict
+/// `>` keeps the choice bit-deterministic across execution modes).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Running min/max over calibration activations (the float traces).
+#[derive(Clone, Copy)]
+struct Range {
+    lo: f32,
+    hi: f32,
+}
+
+impl Range {
+    fn new() -> Self {
+        Self { lo: f32::INFINITY, hi: f32::NEG_INFINITY }
+    }
+
+    fn absorb(&mut self, xs: &[f32]) {
+        for &v in xs {
+            self.lo = self.lo.min(v);
+            self.hi = self.hi.max(v);
+        }
+    }
+
+    /// Mirror of `lower::Calibration::params`: signed zero-point format
+    /// when the boundary goes negative, unsigned otherwise, 1e-6 floor.
+    fn params(&self, bits: u32) -> QuantParams {
+        let (lo, hi) = if self.lo.is_finite() { (self.lo, self.hi) } else { (0.0, 1.0) };
+        if lo < 0.0 {
+            QuantParams::signed_acts((-lo).max(hi).max(1e-6), bits)
+        } else {
+            QuantParams::unsigned(hi.max(1e-6), bits)
+        }
+    }
+}
+
+/// One head's static projection grids, resident on the shared pool.
+struct HeadPlan {
+    wq: PlacedLinear,
+    wk: PlacedLinear,
+    wv: PlacedLinear,
+    wo: PlacedLinear,
+}
+
+/// One block's static grids plus the KV-cache activation boundaries.
+struct BlockPlan {
+    heads: Vec<HeadPlan>,
+    ffn1: PlacedLinear,
+    ffn2: PlacedLinear,
+    /// Query boundary of the score grids (keys caches' act params).
+    q_params: QuantParams,
+}
+
+/// A decoder compiled for autoregressive execution on the pool.
+pub struct DecodePlan {
+    model: DecoderModel,
+    cfg: Config,
+    seed: u64,
+    pool: MacroPool,
+    blocks: Vec<BlockPlan>,
+    head: PlacedLinear,
+    /// First noise site of each block within a step.
+    site_base: Vec<u64>,
+    /// Noise sites per token step (the per-step epoch stride).
+    sites: u64,
+    /// Softmax-probability boundary of every values cache (zp = 0).
+    probs_params: QuantParams,
+}
+
+impl DecodePlan {
+    /// Compile `model` for decoding: calibrate every activation boundary
+    /// by running the **causal** float traces over `cal` (token
+    /// sequences), then place all static grids on one shared pool. All
+    /// boundary params are fixed here — only the KV caches' weight scales
+    /// are running quantities at decode time (DESIGN.md §13).
+    pub fn new(
+        model: DecoderModel,
+        cal: &[Vec<usize>],
+        cfg: &Config,
+        seed: Option<u64>,
+    ) -> Result<Self, MacroError> {
+        assert!(
+            !cal.is_empty() && cal.iter().all(|s| !s.is_empty()),
+            "decode calibration needs at least one non-empty token sequence"
+        );
+        let seed = seed.unwrap_or(cfg.sim.seed ^ 0xDEC0_DE5E);
+        let l = model.blocks.len();
+        assert!(l > 0, "decoder has no blocks");
+
+        let mut x_r = vec![Range::new(); l];
+        let mut q_r = vec![Range::new(); l];
+        let mut ctx_r = vec![Range::new(); l];
+        let mut h1_r = vec![Range::new(); l];
+        let mut f_r = vec![Range::new(); l];
+        let mut head_r = Range::new();
+        for toks in cal {
+            assert!(toks.len() <= model.max_seq, "calibration sequence longer than max_seq");
+            let mut x = model.embed_seq(toks);
+            for (b, blk) in model.blocks.iter().enumerate() {
+                x_r[b].absorb(&x.data);
+                let tr = blk.forward_causal_traced(&x);
+                for t in &tr.q {
+                    q_r[b].absorb(&t.data);
+                }
+                for t in &tr.ctx {
+                    ctx_r[b].absorb(&t.data);
+                }
+                h1_r[b].absorb(&tr.h1.data);
+                f_r[b].absorb(&tr.f_relu.data);
+                x = tr.out;
+            }
+            head_r.absorb(&x.data);
+        }
+
+        let (wb, ab) = (cfg.mac.weight_bits, cfg.mac.act_bits);
+        let mut pool = MacroPool::new(cfg.clone());
+        let mut place = |pool: &mut MacroPool,
+                         w: &Tensor,
+                         bias: Vec<f32>,
+                         ap: QuantParams|
+         -> Result<PlacedLinear, MacroError> {
+            let wp = QuantParams::signed(w.max_abs(), wb);
+            PlacedLinear::place(CimLinear::with_params(w, bias, wp, ap, cfg), pool)
+        };
+
+        let mut blocks = Vec::with_capacity(l);
+        let mut site_base = Vec::with_capacity(l);
+        let mut site = 0u64;
+        for (b, blk) in model.blocks.iter().enumerate() {
+            let xp = x_r[b].params(ab);
+            let cp = ctx_r[b].params(ab);
+            let mut heads = Vec::with_capacity(blk.heads);
+            for i in 0..blk.heads {
+                heads.push(HeadPlan {
+                    wq: place(&mut pool, &blk.wq[i], blk.bq[i].clone(), xp)?,
+                    wk: place(&mut pool, &blk.wk[i], blk.bk[i].clone(), xp)?,
+                    wv: place(&mut pool, &blk.wv[i], blk.bv[i].clone(), xp)?,
+                    // b_o applies once after the head sum (digitally).
+                    wo: place(&mut pool, &blk.wo[i], vec![0.0; blk.d_model], cp)?,
+                });
+            }
+            let ffn1 = place(&mut pool, &blk.w_ff1, blk.b_ff1.clone(), h1_r[b].params(ab))?;
+            let ffn2 = place(&mut pool, &blk.w_ff2, blk.b_ff2.clone(), f_r[b].params(ab))?;
+            blocks.push(BlockPlan { heads, ffn1, ffn2, q_params: q_r[b].params(ab) });
+            site_base.push(site);
+            site += 6 * blk.heads as u64 + 2;
+        }
+        let head = place(&mut pool, &model.w_head, model.b_head.clone(), head_r.params(ab))?;
+        let sites = site + 1; // the LM-head site closes each step
+
+        Ok(Self {
+            model,
+            cfg: cfg.clone(),
+            seed,
+            pool,
+            blocks,
+            head,
+            site_base,
+            sites,
+            probs_params: QuantParams::unsigned(1.0, ab),
+        })
+    }
+
+    pub fn model(&self) -> &DecoderModel {
+        &self.model
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.model.max_seq
+    }
+
+    /// Noise sites per token step (the per-step epoch stride).
+    pub fn sites(&self) -> u64 {
+        self.sites
+    }
+
+    /// Static tiles resident on the shared pool.
+    pub fn static_tiles(&self) -> usize {
+        let mut n = self.head.n_tiles();
+        for bp in &self.blocks {
+            n += bp.ffn1.n_tiles() + bp.ffn2.n_tiles();
+            for hp in &bp.heads {
+                n += hp.wq.n_tiles() + hp.wk.n_tiles() + hp.wv.n_tiles() + hp.wo.n_tiles();
+            }
+        }
+        n
+    }
+
+    /// Open a fresh session. Outputs are a pure function of
+    /// `(plan, id, token sequence)`: the session seed derives from the
+    /// plan seed and `id`, so re-opening the same id replays the exact
+    /// noise draws — and distinct ids decorrelate, which is what makes
+    /// co-batched sessions bit-equal to solo runs (DESIGN.md §13).
+    pub fn session(&self, id: u64) -> Result<DecodeSession, MacroError> {
+        let seed = SplitMix64::new(self.seed ^ id).next_u64();
+        // Dedicated fab draws per session grid, far above the compiler's
+        // dynamic-layer block (`plan::DYN_FAB_BASE` = 1<<30) and bounded
+        // so the shard-index add can't overflow.
+        let fab0 = (1usize << 31) + (((id as usize) & 0xF_FFFF) << 12);
+        let mut gi = 0usize;
+        let mut kv = Vec::with_capacity(self.blocks.len());
+        for (b, bp) in self.blocks.iter().enumerate() {
+            let dh = self.model.blocks[b].d_head();
+            let mut k = Vec::with_capacity(bp.heads.len());
+            let mut v = Vec::with_capacity(bp.heads.len());
+            for _ in 0..bp.heads.len() {
+                k.push(KvCache::keys(&self.cfg, dh, self.model.max_seq, fab0 + gi, bp.q_params)?);
+                gi += 1;
+                v.push(KvCache::values(
+                    &self.cfg,
+                    dh,
+                    self.model.max_seq,
+                    fab0 + gi,
+                    self.probs_params,
+                )?);
+                gi += 1;
+            }
+            kv.push(BlockKv { k, v });
+        }
+        crate::telemetry::decode().sessions.inc();
+        Ok(DecodeSession {
+            id,
+            seed,
+            pos: 0,
+            tokens: Vec::new(),
+            kv,
+            stats: ExecStats::default(),
+            step_stats: ExecStats::default(),
+            last_step: ExecStats::default(),
+            ctx: StreamCtx::new(&self.cfg),
+            last_logits: Vec::new(),
+        })
+    }
+
+    fn run_static(
+        &self,
+        placed: &PlacedLinear,
+        key: StreamKey,
+        x: &[f32],
+        ctx: &mut StreamCtx,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<f32>, MapError> {
+        let acts = placed.linear().quantize_acts(x);
+        run_vector(&self.pool, placed, key, &acts, ctx, stats)
+    }
+
+    /// Start a token step: validate, reset the step's stats chunk, and
+    /// embed `token` at the session's current position.
+    pub fn begin_step(&self, s: &mut DecodeSession, token: usize) -> Result<Vec<f32>, MapError> {
+        if s.pos >= self.model.max_seq {
+            return Err(MapError::Shape(format!(
+                "decode position {} at max_seq {}",
+                s.pos, self.model.max_seq
+            )));
+        }
+        if token >= self.model.vocab {
+            return Err(MapError::Shape(format!(
+                "token {token} outside vocab {}",
+                self.model.vocab
+            )));
+        }
+        s.step_stats = ExecStats::default();
+        Ok(self.model.embed_token(token, s.pos))
+    }
+
+    /// Run block `b` of the current token step: all heads against the
+    /// block's resident grids (q/k/v projections, KV append, ragged
+    /// scores and context, output projection), then the FFN pair —
+    /// digital softmax/LayerNorm/residuals exactly as the float model.
+    pub fn step_block(
+        &self,
+        s: &mut DecodeSession,
+        b: usize,
+        x: Vec<f32>,
+    ) -> Result<Vec<f32>, MapError> {
+        let blk = &self.model.blocks[b];
+        let bp = &self.blocks[b];
+        let d = blk.d_model;
+        let inv = 1.0 / (blk.d_head() as f32).sqrt();
+        let seed = s.seed;
+        let epoch0 = s.pos as u64 * self.sites + self.site_base[b];
+        let _span = crate::span!("decode_block", "block" => b, "pos" => s.pos);
+
+        let mut attn = vec![0f32; d];
+        for (h, hp) in bp.heads.iter().enumerate() {
+            let site = epoch0 + 6 * h as u64;
+            let key = |o: u64| StreamKey { seed, epoch: site + o, item: 0 };
+            let q = self.run_static(&hp.wq, key(0), &x, &mut s.ctx, &mut s.step_stats)?;
+            let k = self.run_static(&hp.wk, key(1), &x, &mut s.ctx, &mut s.step_stats)?;
+            let v = self.run_static(&hp.wv, key(2), &x, &mut s.ctx, &mut s.step_stats)?;
+            // Appends reload weight strips: cycles/energy, no noise draws.
+            s.kv[b].k[h].append(&k, &mut s.step_stats)?;
+            s.kv[b].v[h].append(&v, &mut s.step_stats)?;
+            let q_acts = s.kv[b].k[h].quantize_acts(&q);
+            let scores = s.kv[b].k[h].run(key(3), &q_acts, &mut s.ctx, &mut s.step_stats)?;
+            let scaled: Vec<f32> = scores.iter().map(|v| v * inv).collect();
+            let probs = softmax(&scaled);
+            let p_acts = s.kv[b].v[h].quantize_acts(&probs);
+            let ctxv = s.kv[b].v[h].run(key(4), &p_acts, &mut s.ctx, &mut s.step_stats)?;
+            let ho = self.run_static(&hp.wo, key(5), &ctxv, &mut s.ctx, &mut s.step_stats)?;
+            for (a, o) in attn.iter_mut().zip(&ho) {
+                *a += o;
+            }
+        }
+        for (a, bo) in attn.iter_mut().zip(&blk.b_o) {
+            *a += bo;
+        }
+        for (a, xv) in attn.iter_mut().zip(&x) {
+            *a += xv;
+        }
+        let h1 = layer_norm(&Tensor::from_vec(&[d], attn), &blk.ln1_gamma, &blk.ln1_beta, LN_EPS);
+
+        let site_f = epoch0 + 6 * bp.heads.len() as u64;
+        let kf = |o: u64| StreamKey { seed, epoch: site_f + o, item: 0 };
+        let f = self.run_static(&bp.ffn1, kf(0), &h1.data, &mut s.ctx, &mut s.step_stats)?;
+        let f: Vec<f32> = f.iter().map(|v| v.max(0.0)).collect();
+        let f2 = self.run_static(&bp.ffn2, kf(1), &f, &mut s.ctx, &mut s.step_stats)?;
+        let res: Vec<f32> = f2.iter().zip(&h1.data).map(|(a, b)| a + b).collect();
+        let out = layer_norm(&Tensor::from_vec(&[d], res), &blk.ln2_gamma, &blk.ln2_beta, LN_EPS);
+        Ok(out.data)
+    }
+
+    /// Close a token step: LM head, session bookkeeping, and the per-step
+    /// telemetry record (the decode series' single feed point).
+    pub fn finish_step(
+        &self,
+        s: &mut DecodeSession,
+        x: Vec<f32>,
+        token: usize,
+    ) -> Result<Vec<f32>, MapError> {
+        let epoch = s.pos as u64 * self.sites + (self.sites - 1);
+        let key = StreamKey { seed: s.seed, epoch, item: 0 };
+        let logits = self.run_static(&self.head, key, &x, &mut s.ctx, &mut s.step_stats)?;
+        s.tokens.push(token);
+        s.pos += 1;
+        s.last_logits.clone_from(&logits);
+        crate::telemetry::decode().record_step(&s.step_stats);
+        let chunk = std::mem::take(&mut s.step_stats);
+        s.stats.merge(&chunk);
+        s.last_step = chunk;
+        Ok(logits)
+    }
+
+    /// One full token step: embed, every block, LM head. Returns the
+    /// logits over the vocabulary.
+    pub fn step(&self, s: &mut DecodeSession, token: usize) -> Result<Vec<f32>, MapError> {
+        let mut x = self.begin_step(s, token)?;
+        for b in 0..self.blocks.len() {
+            x = self.step_block(s, b, x)?;
+        }
+        self.finish_step(s, x, token)
+    }
+
+    /// Barrier-mode convenience: feed the prompt token by token, then
+    /// greedy-decode `n_gen` tokens. Step-for-step identical to what a
+    /// [`ContinuousBatcher`] slot does for the same session (the last
+    /// generated token is emitted without being fed back).
+    pub fn generate(
+        &self,
+        s: &mut DecodeSession,
+        prompt: &[usize],
+        n_gen: usize,
+    ) -> Result<Vec<usize>, MapError> {
+        assert!(!prompt.is_empty(), "generate needs at least one prompt token");
+        let mut generated = Vec::with_capacity(n_gen);
+        let mut fed = 0usize;
+        while fed < prompt.len() || generated.len() < n_gen {
+            let tok = if fed < prompt.len() {
+                prompt[fed]
+            } else {
+                *generated.last().expect("generation phase implies a generated token")
+            };
+            self.step(s, tok)?;
+            if fed < prompt.len() {
+                fed += 1;
+            }
+            if fed == prompt.len() && generated.len() < n_gen {
+                generated.push(argmax(&s.last_logits));
+            }
+        }
+        Ok(generated)
+    }
+}
+
+/// One block's per-head KV caches.
+struct BlockKv {
+    k: Vec<KvCache>,
+    v: Vec<KvCache>,
+}
+
+/// One sequence's decode state: KV grids, position, per-session RNG seed,
+/// accumulated stats. Sessions are fully independent — they share only
+/// the plan's read-only static pool.
+pub struct DecodeSession {
+    id: u64,
+    seed: u64,
+    pos: usize,
+    tokens: Vec<usize>,
+    kv: Vec<BlockKv>,
+    /// Session totals (per-step chunks merged in step order).
+    stats: ExecStats,
+    /// The current step's chunk (reset by `begin_step`, folded and
+    /// telemetry-recorded by `finish_step`).
+    step_stats: ExecStats,
+    /// The last completed step's chunk — the exact `ExecStats` that
+    /// `finish_step` handed to the telemetry decode series, so replays
+    /// can mirror the global counters' per-step accumulation order
+    /// bit for bit (`tests/telemetry_e2e.rs`).
+    last_step: ExecStats,
+    ctx: StreamCtx,
+    last_logits: Vec<f32>,
+}
+
+impl DecodeSession {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Tokens consumed so far (= the next step index).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn tokens(&self) -> &[usize] {
+        &self.tokens
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    /// The last completed token step's stats chunk (what the telemetry
+    /// decode series recorded for it).
+    pub fn last_step_stats(&self) -> &ExecStats {
+        &self.last_step
+    }
+
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    /// KV-cache reloads across every grid (strip appends + rescales).
+    pub fn kv_reloads(&self) -> u64 {
+        self.kv
+            .iter()
+            .flat_map(|b| b.k.iter().chain(b.v.iter()))
+            .map(|c| c.grid().reloads())
+            .sum()
+    }
+}
+
+/// A decode request: prompt tokens plus how many tokens to generate.
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub prompt: Vec<usize>,
+    pub n_gen: usize,
+}
+
+/// A completed sequence leaving the batcher.
+pub struct Finished {
+    pub slot: usize,
+    pub session_id: u64,
+    pub prompt: Vec<usize>,
+    pub generated: Vec<usize>,
+    /// Token steps the session executed (prefill + decode).
+    pub steps: u64,
+    pub stats: ExecStats,
+}
+
+struct ActiveSeq {
+    session: DecodeSession,
+    prompt: Vec<usize>,
+    fed: usize,
+    n_gen: usize,
+    generated: Vec<usize>,
+}
+
+/// A step item moving through the streamed round's stage pipeline — it
+/// owns its sequence, so stages need no locking.
+struct StepItem {
+    slot: usize,
+    seq: ActiveSeq,
+    token: usize,
+    x: Vec<f32>,
+}
+
+/// Token-level continuous batching over a [`DecodePlan`] (DESIGN.md §13).
+///
+/// Admission rules: a request takes the lowest free slot and keeps it for
+/// its whole lifetime; `step_all` advances every occupied slot by exactly
+/// one token step, in slot order; a sequence finishes the round its
+/// generation budget fills, immediately freeing the slot (its KV grids
+/// drop with it) for the next admission. Because sessions are independent
+/// (own seed, own KV grids, `item = 0` keys), a sequence's logits are
+/// bit-identical whether it ran solo or co-batched, in barrier or
+/// streamed mode.
+pub struct ContinuousBatcher<'a> {
+    plan: &'a DecodePlan,
+    slots: Vec<Option<ActiveSeq>>,
+    streamed: bool,
+    queue_cap: usize,
+    next_id: u64,
+    step: u64,
+}
+
+impl<'a> ContinuousBatcher<'a> {
+    /// `streamed` selects `sched::run_stages` pipelining (one stage per
+    /// block + the LM head, stage names keyed by generation step) over
+    /// the sequential barrier loop; both are bit-identical.
+    pub fn new(plan: &'a DecodePlan, max_slots: usize, streamed: bool, queue_cap: usize) -> Self {
+        assert!(max_slots >= 1, "batcher needs at least one slot");
+        Self {
+            plan,
+            slots: (0..max_slots).map(|_| None).collect(),
+            streamed,
+            queue_cap: queue_cap.max(1),
+            next_id: 0,
+            step: 0,
+        }
+    }
+
+    /// Occupied slots.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Generation rounds run so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// The session id the next admission will receive (ids are assigned
+    /// in admission order — the replay handle for solo comparisons).
+    pub fn next_session_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Admit a request into the lowest free slot; `None` when full (the
+    /// caller re-offers after a round frees slots).
+    pub fn admit(&mut self, req: DecodeRequest) -> Result<Option<usize>, MacroError> {
+        assert!(!req.prompt.is_empty(), "decode request needs at least one prompt token");
+        let Some(slot) = self.slots.iter().position(|s| s.is_none()) else {
+            return Ok(None);
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let session = self.plan.session(id)?;
+        self.slots[slot] = Some(ActiveSeq {
+            session,
+            prompt: req.prompt,
+            fed: 0,
+            n_gen: req.n_gen,
+            generated: Vec::new(),
+        });
+        crate::telemetry::decode().active.set(self.active() as i64);
+        Ok(Some(slot))
+    }
+
+    /// Advance every active sequence by one token step and return the
+    /// sequences that finished this round.
+    pub fn step_all(&mut self) -> Result<Vec<Finished>, MapError> {
+        let mut items: Vec<StepItem> = Vec::new();
+        for slot in 0..self.slots.len() {
+            if let Some(mut seq) = self.slots[slot].take() {
+                let token = if seq.fed < seq.prompt.len() {
+                    seq.prompt[seq.fed]
+                } else {
+                    *seq.generated.last().expect("generating sequence has a last token")
+                };
+                let x = if self.streamed {
+                    self.plan.begin_step(&mut seq.session, token)?
+                } else {
+                    Vec::new()
+                };
+                items.push(StepItem { slot, seq, token, x });
+            }
+        }
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let step = self.step;
+        self.step += 1;
+        crate::telemetry::decode().steps.inc();
+
+        if self.streamed {
+            let plan = self.plan;
+            let n_blocks = plan.n_blocks();
+            let mut names: Vec<String> =
+                (0..n_blocks).map(|b| format!("decode.l{b}.s{step}")).collect();
+            names.push(format!("decode.head.s{step}"));
+            let mut done: Vec<StepItem> = Vec::with_capacity(items.len());
+            run_stages(
+                items,
+                names,
+                self.queue_cap,
+                |stage| {
+                    move |it: &mut StepItem| -> Result<(), MapError> {
+                        let x = std::mem::take(&mut it.x);
+                        if stage < n_blocks {
+                            it.x = plan.step_block(&mut it.seq.session, stage, x)?;
+                        } else {
+                            plan.finish_step(&mut it.seq.session, x, it.token)?;
+                        }
+                        Ok(())
+                    }
+                },
+                |it| done.push(it),
+            )?;
+            // Settle in slot order — the exact order the barrier mode
+            // settles in, so batcher-level bookkeeping cannot drift.
+            done.sort_by_key(|it| it.slot);
+            items = done;
+        } else {
+            for it in items.iter_mut() {
+                self.plan.step(&mut it.seq.session, it.token)?;
+            }
+        }
+
+        let mut finished = Vec::new();
+        for it in items {
+            self.settle(it, &mut finished);
+        }
+        crate::telemetry::decode().active.set(self.active() as i64);
+        Ok(finished)
+    }
+
+    /// Drive rounds until every active sequence completes (graceful
+    /// drain), collecting the finishers.
+    pub fn drain(&mut self) -> Result<Vec<Finished>, MapError> {
+        let mut all = Vec::new();
+        while self.active() > 0 {
+            all.extend(self.step_all()?);
+        }
+        Ok(all)
+    }
+
+    fn settle(&mut self, it: StepItem, finished: &mut Vec<Finished>) {
+        let StepItem { slot, mut seq, .. } = it;
+        if seq.fed < seq.prompt.len() {
+            seq.fed += 1;
+        }
+        if seq.fed == seq.prompt.len() {
+            if seq.generated.len() < seq.n_gen {
+                seq.generated.push(argmax(seq.session.last_logits()));
+            }
+            if seq.generated.len() >= seq.n_gen {
+                finished.push(Finished {
+                    slot,
+                    session_id: seq.session.id(),
+                    prompt: seq.prompt,
+                    generated: seq.generated,
+                    steps: seq.session.pos() as u64,
+                    stats: seq.session.stats().clone(),
+                });
+                return;
+            }
+        }
+        self.slots[slot] = Some(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+
+    fn tiny_plan(noise: bool) -> DecodePlan {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = noise;
+        cfg.enhance = EnhanceConfig::both();
+        let model = DecoderModel::new(16, 2, 24, 11, 2, 12, 42);
+        let cal = vec![vec![1, 2, 3, 4, 5], vec![6, 7, 8]];
+        DecodePlan::new(model, &cal, &cfg, Some(77)).unwrap()
+    }
+
+    /// A session's whole trajectory is a pure function of (plan, id,
+    /// tokens): re-opening the same id replays logits AND stats bit for
+    /// bit, noise on; a different id decorrelates the noise.
+    #[test]
+    fn session_replay_is_bit_exact_and_ids_decorrelate() {
+        let plan = tiny_plan(true);
+        let toks = [3usize, 1, 4, 1, 5];
+        let mut a = plan.session(9).unwrap();
+        let la: Vec<Vec<f32>> = toks.iter().map(|&t| plan.step(&mut a, t).unwrap()).collect();
+        let mut b = plan.session(9).unwrap();
+        let lb: Vec<Vec<f32>> = toks.iter().map(|&t| plan.step(&mut b, t).unwrap()).collect();
+        assert_eq!(la, lb, "same id must replay exactly");
+        assert_eq!(
+            a.stats().energy_fj().to_bits(),
+            b.stats().energy_fj().to_bits(),
+            "replayed stats are bit-identical"
+        );
+        let mut c = plan.session(10).unwrap();
+        let lc: Vec<Vec<f32>> = toks.iter().map(|&t| plan.step(&mut c, t).unwrap()).collect();
+        assert_ne!(la, lc, "distinct ids must draw distinct noise");
+    }
+
+    /// Noise-free, the engine's logits stay close to the float decoder:
+    /// the 4-b quantized pipeline tracks the reference direction.
+    #[test]
+    fn decode_tracks_float_model() {
+        let plan = tiny_plan(false);
+        let toks = [2usize, 9, 4, 7];
+        let mut s = plan.session(0).unwrap();
+        let mut got = Vec::new();
+        for &t in &toks {
+            got = plan.step(&mut s, t).unwrap();
+        }
+        let want = plan.model().forward_causal(&toks);
+        let last = &want.data[(toks.len() - 1) * plan.model().vocab..];
+        let (mut dot, mut ng, mut nw) = (0f64, 0f64, 0f64);
+        for (g, w) in got.iter().zip(last) {
+            dot += *g as f64 * *w as f64;
+            ng += (*g as f64).powi(2);
+            nw += (*w as f64).powi(2);
+        }
+        let cos = dot / (ng.sqrt() * nw.sqrt());
+        assert!(cos > 0.5, "engine logits diverged from float reference: cos = {cos}");
+        assert_eq!(got.len(), plan.model().vocab);
+        assert_eq!(s.pos(), toks.len());
+        assert!(s.kv_reloads() > 0, "appends must reload KV strips");
+    }
+
+    /// Continuous batching: a sequence's generated tokens are identical
+    /// whether it runs solo (generate) or co-batched, barrier or
+    /// streamed — and slots free for late joiners.
+    #[test]
+    fn batched_generation_equals_solo() {
+        let plan = tiny_plan(true);
+        let reqs = [
+            DecodeRequest { prompt: vec![1, 2, 3], n_gen: 4 },
+            DecodeRequest { prompt: vec![9, 8], n_gen: 6 },
+        ];
+        for streamed in [false, true] {
+            let mut batcher = ContinuousBatcher::new(&plan, 2, streamed, 2);
+            assert_eq!(batcher.next_session_id(), 0);
+            for r in &reqs {
+                batcher.admit(r.clone()).unwrap().expect("slot free");
+            }
+            // next_id continues 0,1,... per batcher; solo replay below uses
+            // the same ids, so the noise draws match.
+            let mut fins = batcher.drain().unwrap();
+            fins.sort_by_key(|f| f.session_id);
+            assert_eq!(fins.len(), 2);
+            for (id, (f, r)) in fins.iter().zip(&reqs).enumerate() {
+                let mut solo = plan.session(id as u64).unwrap();
+                let want = plan.generate(&mut solo, &r.prompt, r.n_gen).unwrap();
+                assert_eq!(f.generated, want, "streamed={streamed} id={id}");
+                assert_eq!(
+                    f.stats.energy_fj().to_bits(),
+                    solo.stats().energy_fj().to_bits(),
+                    "per-session stats are mode-invariant (streamed={streamed})"
+                );
+            }
+            assert_eq!(batcher.active(), 0, "drain must free every slot");
+        }
+    }
+}

@@ -59,6 +59,10 @@ pub enum Op {
     MatMul { transpose_b: bool },
     /// Softmax over the last dimension (row-wise on rank-2 values).
     Softmax,
+    /// Causal (lower-triangular) softmax over a square `[s][s]` score
+    /// matrix: row `i` softmaxes columns `0..=i`, zeros the rest — the
+    /// autoregressive attention mask (DESIGN.md §13).
+    CausalSoftmax,
     /// LayerNorm over the last dimension: `(x−μ)/√(σ²+eps)·γ + β`.
     LayerNorm { gamma: Vec<f32>, beta: Vec<f32>, eps: f32 },
     /// Elementwise max(x, 0).
@@ -89,6 +93,7 @@ impl Op {
             Op::Linear { .. } => "linear",
             Op::MatMul { .. } => "matmul",
             Op::Softmax => "softmax",
+            Op::CausalSoftmax => "causal_softmax",
             Op::LayerNorm { .. } => "layernorm",
             Op::Relu => "relu",
             Op::Add => "add",
@@ -229,6 +234,15 @@ impl Graph {
                     }
                     s.clone()
                 }
+                Op::CausalSoftmax => {
+                    let s = at(0);
+                    if s.len() != 2 || s[0] != s[1] {
+                        return Err(err(format!(
+                            "causal_softmax expects square [s][s] scores, got {s:?}"
+                        )));
+                    }
+                    s.clone()
+                }
                 Op::LayerNorm { gamma, beta, .. } => {
                     let s = at(0);
                     let cols = *s.last().unwrap_or(&0);
@@ -346,6 +360,7 @@ impl Graph {
                     Tensor::from_vec(&[s, n], y)
                 }
                 Op::Softmax => crate::nn::ops::softmax_last_dim(at(0)),
+                Op::CausalSoftmax => crate::nn::ops::causal_softmax(at(0)),
                 Op::LayerNorm { gamma, beta, eps } => {
                     crate::nn::ops::layer_norm(at(0), gamma, beta, *eps)
                 }
@@ -468,93 +483,40 @@ impl Graph {
     /// (exactly `concat(ctx)·W_O`; see [`TransformerBlock`]). The `1/√d_h`
     /// score scale rides on a bias-free [`Op::Dequantize`].
     pub fn from_transformer_block(block: &TransformerBlock, seq: usize) -> Self {
-        use crate::nn::transformer::LN_EPS;
-        let (d, h, dh) = (block.d_model, block.heads, block.d_head());
         let mut g = Graph::new();
-        let x = g.add("input", Op::Input { shape: vec![seq, d] }, &[]);
-        let quant = |g: &mut Graph, name: String, src: NodeId| -> NodeId {
-            g.add(name, Op::Quantize { params: None }, &[src])
-        };
-        let mut attn = None;
-        for i in 0..h {
-            let p = format!("h{i}");
-            let linear = |w: &Tensor, b: &[f32]| Op::Linear {
-                w_cols: w.clone(),
-                bias: b.to_vec(),
-                w_params: None,
-            };
-            let qq = quant(&mut g, format!("{p}.q.quant"), x);
-            let qi = g.add(format!("{p}.q"), linear(&block.wq[i], &block.bq[i]), &[qq]);
-            let kq = quant(&mut g, format!("{p}.k.quant"), x);
-            let ki = g.add(format!("{p}.k"), linear(&block.wk[i], &block.bk[i]), &[kq]);
-            let vq = quant(&mut g, format!("{p}.v.quant"), x);
-            let vi = g.add(format!("{p}.v"), linear(&block.wv[i], &block.bv[i]), &[vq]);
+        let x = g.add("input", Op::Input { shape: vec![seq, block.d_model] }, &[]);
+        add_attention_block(&mut g, block, x, "", false);
+        g
+    }
 
-            let sq = quant(&mut g, format!("{p}.score.quant"), qi);
-            let scores =
-                g.add(format!("{p}.score"), Op::MatMul { transpose_b: true }, &[sq, ki]);
-            let scaled = g.add(
-                format!("{p}.scale"),
-                Op::Dequantize { scale: 1.0 / (dh as f32).sqrt(), bias: vec![] },
-                &[scores],
-            );
-            let probs = g.add(format!("{p}.softmax"), Op::Softmax, &[scaled]);
-            let pq = quant(&mut g, format!("{p}.ctx.quant"), probs);
-            let ctx = g.add(format!("{p}.ctx"), Op::MatMul { transpose_b: false }, &[pq, vi]);
-
-            let oq = quant(&mut g, format!("{p}.out.quant"), ctx);
-            // The shared output bias is applied once (on head 0's slice).
-            let ob = if i == 0 { block.b_o.clone() } else { vec![0.0; d] };
-            let oi = g.add(
-                format!("{p}.out"),
-                Op::Linear { w_cols: block.wo[i].clone(), bias: ob, w_params: None },
-                &[oq],
-            );
-            attn = Some(match attn {
-                None => oi,
-                Some(acc) => g.add(format!("attn.sum{i}"), Op::Add, &[acc, oi]),
-            });
+    /// A multi-layer GPT-style causal decoder as a calibrated graph over a
+    /// fixed-length `[seq][d_model]` embedded prefix: N attention blocks
+    /// with [`Op::CausalSoftmax`] masks, then the LM head (DESIGN.md §13).
+    ///
+    /// Output is `[seq][vocab]` — row `i` the next-token logits after
+    /// position `i`, matching [`DecoderModel::forward_causal`] on embedded
+    /// inputs. This fixed-shape graph is the compile-path complement of the
+    /// incremental KV-cache engine (`compiler::decode`): the engine owns
+    /// ragged growth and running requantization; the graph gives the float
+    /// golden and the barrier/streamed plan coverage for causal attention.
+    ///
+    /// [`DecoderModel::forward_causal`]: crate::nn::transformer::DecoderModel::forward_causal
+    pub fn from_decoder(model: &crate::nn::transformer::DecoderModel, seq: usize) -> Self {
+        assert!(seq >= 1 && seq <= model.max_seq, "seq {seq} vs max_seq {}", model.max_seq);
+        let mut g = Graph::new();
+        let mut cur = g.add("input", Op::Input { shape: vec![seq, model.d_model] }, &[]);
+        for (l, block) in model.blocks.iter().enumerate() {
+            cur = add_attention_block(&mut g, block, cur, &format!("l{l}."), true);
         }
-        let res1 = g.add("res1", Op::Add, &[x, attn.expect("at least one head")]);
-        let ln1 = g.add(
-            "ln1",
-            Op::LayerNorm {
-                gamma: block.ln1_gamma.clone(),
-                beta: block.ln1_beta.clone(),
-                eps: LN_EPS,
-            },
-            &[res1],
-        );
-        let fq = quant(&mut g, "ffn1.quant".into(), ln1);
-        let f1 = g.add(
-            "ffn1",
-            Op::Linear {
-                w_cols: block.w_ff1.clone(),
-                bias: block.b_ff1.clone(),
-                w_params: None,
-            },
-            &[fq],
-        );
-        let f1r = g.add("ffn1.relu", Op::Relu, &[f1]);
-        let f2q = quant(&mut g, "ffn2.quant".into(), f1r);
-        let f2 = g.add(
-            "ffn2",
-            Op::Linear {
-                w_cols: block.w_ff2.clone(),
-                bias: block.b_ff2.clone(),
-                w_params: None,
-            },
-            &[f2q],
-        );
-        let res2 = g.add("res2", Op::Add, &[ln1, f2]);
+        let hq = g.add("head.quant", Op::Quantize { params: None }, &[cur]);
         g.add(
-            "ln2",
-            Op::LayerNorm {
-                gamma: block.ln2_gamma.clone(),
-                beta: block.ln2_beta.clone(),
-                eps: LN_EPS,
+            "head",
+            Op::Linear {
+                w_cols: model.w_head.clone(),
+                bias: model.b_head.clone(),
+                w_params: None,
             },
-            &[res2],
+            &[hq],
         );
         g
     }
@@ -606,6 +568,102 @@ impl Graph {
         );
         g
     }
+}
+
+/// Append one H-head attention + FFN block (post-norm) rooted at `x`,
+/// returning the block-output node. `prefix` namespaces the node names
+/// (empty for the single-block encoder graph, `"l{N}."` per decoder
+/// layer); `causal` selects [`Op::CausalSoftmax`] over [`Op::Softmax`].
+/// Shared by [`Graph::from_transformer_block`] and [`Graph::from_decoder`]
+/// so the two builders cannot drift structurally.
+fn add_attention_block(
+    g: &mut Graph,
+    block: &TransformerBlock,
+    x: NodeId,
+    prefix: &str,
+    causal: bool,
+) -> NodeId {
+    use crate::nn::transformer::LN_EPS;
+    let (d, h, dh) = (block.d_model, block.heads, block.d_head());
+    let quant = |g: &mut Graph, name: String, src: NodeId| -> NodeId {
+        g.add(name, Op::Quantize { params: None }, &[src])
+    };
+    let mut attn = None;
+    for i in 0..h {
+        let p = format!("{prefix}h{i}");
+        let linear = |w: &Tensor, b: &[f32]| Op::Linear {
+            w_cols: w.clone(),
+            bias: b.to_vec(),
+            w_params: None,
+        };
+        let qq = quant(g, format!("{p}.q.quant"), x);
+        let qi = g.add(format!("{p}.q"), linear(&block.wq[i], &block.bq[i]), &[qq]);
+        let kq = quant(g, format!("{p}.k.quant"), x);
+        let ki = g.add(format!("{p}.k"), linear(&block.wk[i], &block.bk[i]), &[kq]);
+        let vq = quant(g, format!("{p}.v.quant"), x);
+        let vi = g.add(format!("{p}.v"), linear(&block.wv[i], &block.bv[i]), &[vq]);
+
+        let sq = quant(g, format!("{p}.score.quant"), qi);
+        let scores = g.add(format!("{p}.score"), Op::MatMul { transpose_b: true }, &[sq, ki]);
+        let scaled = g.add(
+            format!("{p}.scale"),
+            Op::Dequantize { scale: 1.0 / (dh as f32).sqrt(), bias: vec![] },
+            &[scores],
+        );
+        let probs = if causal {
+            g.add(format!("{p}.softmax"), Op::CausalSoftmax, &[scaled])
+        } else {
+            g.add(format!("{p}.softmax"), Op::Softmax, &[scaled])
+        };
+        let pq = quant(g, format!("{p}.ctx.quant"), probs);
+        let ctx = g.add(format!("{p}.ctx"), Op::MatMul { transpose_b: false }, &[pq, vi]);
+
+        let oq = quant(g, format!("{p}.out.quant"), ctx);
+        // The shared output bias is applied once (on head 0's slice).
+        let ob = if i == 0 { block.b_o.clone() } else { vec![0.0; d] };
+        let oi = g.add(
+            format!("{p}.out"),
+            Op::Linear { w_cols: block.wo[i].clone(), bias: ob, w_params: None },
+            &[oq],
+        );
+        attn = Some(match attn {
+            None => oi,
+            Some(acc) => g.add(format!("{prefix}attn.sum{i}"), Op::Add, &[acc, oi]),
+        });
+    }
+    let res1 = g.add(format!("{prefix}res1"), Op::Add, &[x, attn.expect("at least one head")]);
+    let ln1 = g.add(
+        format!("{prefix}ln1"),
+        Op::LayerNorm {
+            gamma: block.ln1_gamma.clone(),
+            beta: block.ln1_beta.clone(),
+            eps: LN_EPS,
+        },
+        &[res1],
+    );
+    let fq = quant(g, format!("{prefix}ffn1.quant"), ln1);
+    let f1 = g.add(
+        format!("{prefix}ffn1"),
+        Op::Linear { w_cols: block.w_ff1.clone(), bias: block.b_ff1.clone(), w_params: None },
+        &[fq],
+    );
+    let f1r = g.add(format!("{prefix}ffn1.relu"), Op::Relu, &[f1]);
+    let f2q = quant(g, format!("{prefix}ffn2.quant"), f1r);
+    let f2 = g.add(
+        format!("{prefix}ffn2"),
+        Op::Linear { w_cols: block.w_ff2.clone(), bias: block.b_ff2.clone(), w_params: None },
+        &[f2q],
+    );
+    let res2 = g.add(format!("{prefix}res2"), Op::Add, &[ln1, f2]);
+    g.add(
+        format!("{prefix}ln2"),
+        Op::LayerNorm {
+            gamma: block.ln2_gamma.clone(),
+            beta: block.ln2_beta.clone(),
+            eps: LN_EPS,
+        },
+        &[res2],
+    )
 }
 
 fn add_conv(g: &mut Graph, name: impl Into<String>, layer: &ConvLayer, input: NodeId) -> NodeId {
@@ -715,6 +773,36 @@ mod tests {
         for (a, b) in vals[g.output()].data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    /// The decoder graph's float eval equals the model's own causal
+    /// forward — the CausalSoftmax node and the stacked-block builder
+    /// reproduce the float golden exactly.
+    #[test]
+    fn decoder_graph_matches_causal_forward() {
+        use crate::nn::transformer::DecoderModel;
+        let model = DecoderModel::new(12, 2, 20, 9, 2, 8, 33);
+        let seq = 5;
+        let g = Graph::from_decoder(&model, seq);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[g.output()], vec![seq, 9]);
+        let cs = g.nodes.iter().filter(|n| matches!(n.op, Op::CausalSoftmax)).count();
+        assert_eq!(cs, 2 * 2, "one causal softmax per head per layer");
+        let toks = [1usize, 4, 0, 7, 2];
+        let x = model.embed_seq(&toks);
+        let vals = g.eval_float(&x).unwrap();
+        let want = model.forward_causal(&toks);
+        for (a, b) in vals[g.output()].data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_softmax_shape_rule_requires_square() {
+        let mut g = Graph::new();
+        let x = g.add("input", Op::Input { shape: vec![3, 4] }, &[]);
+        g.add("cs", Op::CausalSoftmax, &[x]);
+        assert!(g.infer_shapes().is_err(), "non-square scores must be rejected");
     }
 
     #[test]

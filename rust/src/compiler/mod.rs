@@ -40,6 +40,12 @@
 //!   result is bit-identical to the sequential per-layer macro path. The
 //!   plan implements `coordinator::server::InferenceEngine`, so
 //!   `serve --plan` serves any compiled network.
+//! * **Decode** — [`DecodePlan`] compiles a GPT-style
+//!   [`crate::nn::transformer::DecoderModel`] for autoregressive KV-cache
+//!   execution (DESIGN.md §13): static weights resident once, per-session
+//!   [`crate::pipeline::KvCache`] grids for the growing K/V slabs, and
+//!   [`ContinuousBatcher`] for token-level continuous batching
+//!   (`serve --decode`).
 //!
 //! **Sizing (ResNet-20, default 16 Kb macro geometry):** 22 layers lower to
 //! 282 tiles (64 rows × 16 engines each) ⇒ 282 slots = 71 shards at 4
@@ -54,11 +60,15 @@
 //! ingest-to-logits examples; `cargo bench --bench compiler_resnet`
 //! measures compile + forward throughput (`BENCH_compiler.json`).
 
+pub mod decode;
 pub mod ir;
 pub mod lower;
 pub mod place;
 pub mod plan;
 
+pub use decode::{
+    argmax, ContinuousBatcher, DecodePlan, DecodeRequest, DecodeSession, Finished,
+};
 pub use ir::{transpose_rows_to_cols, Graph, Node, NodeId, Op};
 pub use lower::{calibrate, lower, Calibration, CompileError, LayerKind, LoweredLayer};
 pub use place::{ActivationProfile, CostReport, LayerCost, Placer};

@@ -30,7 +30,7 @@ use crate::config::Config;
 use crate::mapping::executor::{patches_to_rows, rows_to_chw, CimLinear};
 use crate::mapping::{ExecStats, MapError};
 use crate::nn::im2col::{conv_out_dims, im2col};
-use crate::nn::ops::{global_avg_pool, layer_norm, softmax_last_dim};
+use crate::nn::ops::{causal_softmax, global_avg_pool, layer_norm, softmax_last_dim};
 use crate::nn::quant::QuantParams;
 use crate::nn::tensor::Tensor;
 use crate::pipeline::batch::{run_vector, StreamCtx, StreamKey};
@@ -635,22 +635,26 @@ impl CompiledPlan {
         } else {
             b
         };
-        dl.reload(w_cols, layer.qparams, &mut acc.stats)?;
-        acc.predicted += dl.reload_cycles();
-
         let src = layer.src;
         let t = fl.values[src]
             .as_ref()
             .ok_or_else(|| MapError::Shape(format!("value of node {src} unavailable")))?;
         let mut q: Vec<Vec<i64>> = Vec::with_capacity(seq);
         quantize_layer_rows(layer, t, &mut q)?;
-        acc.predicted += predicted_tile_cycles(&self.cfg, dl.linear(), &q);
         let item_base = fl.idx as u64 * layer.vectors_per_input as u64;
         let seed = self.exec.seed();
+        // Reload-to-results under ONE exclusive borrow of the grid
+        // (`DynamicLinear::run_item`): the borrow checker itself enforces
+        // the per-(item, tile) barrier — a concurrent stream behind the
+        // layer mutex cannot interleave its reload between this item's swap
+        // and its row ops (DESIGN.md §10; `tests/dynamic_contention.rs`).
+        let rows =
+            dl.run_item(w_cols, layer.qparams, &q, seed, epoch, item_base, ctx, &mut acc.stats)?;
+        acc.predicted += dl.reload_cycles();
+        acc.predicted += predicted_tile_cycles(&self.cfg, dl.linear(), &q);
         let mut data = Vec::with_capacity(seq * n);
-        for (r, acts) in q.iter().enumerate() {
-            let key = StreamKey { seed, epoch, item: item_base + r as u64 };
-            data.extend(run_vector(dl.pool(), dl.placed(), key, acts, ctx, &mut acc.stats)?);
+        for row in rows {
+            data.extend(row);
         }
         fl.values[layer.node] = Some(Tensor::from_vec(&[seq, n], data));
         Ok(())
@@ -926,6 +930,7 @@ impl CompiledPlan {
                 Some(Tensor::from_vec(&[c], global_avg_pool(&t)))
             }
             Op::Softmax => Some(softmax_last_dim(&arg(&mut fl.values, 0, true)?)),
+            Op::CausalSoftmax => Some(causal_softmax(&arg(&mut fl.values, 0, true)?)),
             Op::LayerNorm { gamma, beta, eps } => {
                 Some(layer_norm(&arg(&mut fl.values, 0, true)?, gamma, beta, *eps))
             }

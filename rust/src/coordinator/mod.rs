@@ -8,6 +8,6 @@ pub mod server;
 pub use deployment::MlpDeployment;
 pub use metrics::{Metrics, MetricsReport};
 pub use server::{
-    serve, serve_engine, serve_pipeline, serve_plan, BackendEngine, Client, InferenceEngine,
-    ServeConfig, ServerHandle,
+    serve, serve_decode, serve_engine, serve_pipeline, serve_plan, BackendEngine, Client,
+    InferenceEngine, ServeConfig, ServerHandle,
 };

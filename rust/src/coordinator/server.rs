@@ -2,7 +2,7 @@
 //! dynamically (size- or timeout-triggered), runs the deployed network on
 //! an [`InferenceEngine`], and streams logits back.
 //!
-//! All three front-ends ([`serve`], [`serve_pipeline`], [`serve_plan`])
+//! The batch front-ends ([`serve`], [`serve_pipeline`], [`serve_plan`])
 //! share ONE runtime (DESIGN.md §9): a **bounded admission queue**
 //! ([`crate::sched::BoundedQueue`]) that connection handlers push into —
 //! blocking when full, which is backpressure all the way to the TCP client
@@ -19,6 +19,10 @@
 //! drain contract, refuses *new* requests (they get an empty-logits reply)
 //! but completes **everything already admitted** before the server returns
 //! its metrics. Queued-but-unserved work is never dropped.
+//!
+//! [`serve_decode`] reuses the same queue, wire protocol, and drain
+//! contract for autoregressive generation, but replaces the coalescing
+//! batcher with token-level continuous batching (DESIGN.md §13).
 //!
 //! Wire protocol (little-endian):
 //!   request  = u32 magic (0xC1A0_0001) | u32 n | n × f32
@@ -313,6 +317,206 @@ pub fn serve_plan(
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
     serve_engine(Box::new(plan), cfg)
+}
+
+/// Autoregressive decode serving (DESIGN.md §13): the inference thread
+/// runs token-level **continuous batching** over a
+/// [`crate::compiler::DecodePlan`] — every round advances each active
+/// sequence by one token, new requests join between rounds whenever a
+/// slot is free (admission never stalls generation: the queue is polled,
+/// not awaited, while sequences are active), and finished sequences free
+/// their slot immediately. `ServeConfig::max_batch` is the slot count;
+/// `ServeConfig::stream` pipelines each round across the decoder's layers
+/// via the staged scheduler. Graceful drain: shutdown stops admissions
+/// but every admitted sequence decodes to completion.
+///
+/// Wire payload over the shared protocol: request = `[n_gen, prompt
+/// token ids...]` as f32; reply = the generated token ids as f32 (empty
+/// = refused or malformed). Sequences are deterministic per admission
+/// index (DESIGN.md §9/§13), so sequential requests replay bit-exactly.
+pub fn serve_decode(
+    plan: crate::compiler::DecodePlan,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    use crate::compiler::ContinuousBatcher;
+    use std::collections::HashMap;
+
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let jobs: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(cfg.max_queue));
+    let metrics = Arc::new(Mutex::new(Metrics::default()));
+    let started = Instant::now();
+    let exporter = match cfg.metrics_addr.as_deref() {
+        Some(bind) => Some(crate::telemetry::export::spawn_exporter(bind)?),
+        None => None,
+    };
+
+    let reg = crate::telemetry::global();
+    let tele_requests =
+        reg.counter("cim_serve_requests_total", "Requests answered by the serve loop");
+    let tele_queue =
+        reg.gauge("cim_serve_queue_depth", "Admission-queue depth at last batch pull");
+    let tele_wait_us = reg.histogram(
+        "cim_wait_latency_us",
+        "Per-request queue wait (admission to batch start), microseconds",
+    );
+
+    struct Pending {
+        reply: Sender<Vec<f32>>,
+        admitted: Instant,
+    }
+
+    let jobs_inf = jobs.clone();
+    let metrics_inf = metrics.clone();
+    let serve_cfg = cfg;
+    let inference = std::thread::spawn(move || {
+        let t_start = Instant::now();
+        let slots = serve_cfg.max_batch.max(1);
+        let mut batcher = ContinuousBatcher::new(&plan, slots, serve_cfg.stream, slots);
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let mut closed = false;
+        loop {
+            // Admission window between token rounds: block when idle, poll
+            // when generating — requests join mid-generation without ever
+            // stalling the active sequences' token cadence.
+            while !closed && batcher.has_free_slot() {
+                let job = if batcher.active() == 0 {
+                    match jobs_inf.pop() {
+                        Some(j) => Some(j),
+                        None => {
+                            closed = true; // queue closed and drained
+                            None
+                        }
+                    }
+                } else {
+                    jobs_inf.pop_deadline(Instant::now())
+                };
+                let Some(job) = job else { break };
+                tele_queue.set(jobs_inf.len() as i64);
+                match parse_decode_request(&job.input, &plan) {
+                    Some(req) => {
+                        let id = batcher.next_session_id();
+                        match batcher.admit(req) {
+                            Ok(Some(_slot)) => {
+                                let wait = job.admitted.elapsed();
+                                tele_wait_us.observe(wait.as_micros() as u64);
+                                metrics_inf.lock().expect("metrics poisoned").record_wait(wait);
+                                pending.insert(
+                                    id,
+                                    Pending { reply: job.reply, admitted: job.admitted },
+                                );
+                            }
+                            // has_free_slot() held, so a full batcher is
+                            // unreachable; refuse defensively either way.
+                            Ok(None) => {
+                                let _ = job.reply.send(Vec::new());
+                            }
+                            Err(e) => {
+                                eprintln!("decode admission error: {e}");
+                                let _ = job.reply.send(Vec::new());
+                            }
+                        }
+                    }
+                    None => {
+                        // Malformed request: empty reply, connection lives.
+                        let _ = job.reply.send(Vec::new());
+                    }
+                }
+            }
+            if batcher.active() == 0 {
+                if closed {
+                    break;
+                }
+                continue;
+            }
+            let _span = crate::span!("decode_round", "active" => batcher.active());
+            match batcher.step_all() {
+                Ok(finished) => {
+                    for f in finished {
+                        let Some(p) = pending.remove(&f.session_id) else { continue };
+                        // Account BEFORE the reply goes out: a client that
+                        // scrapes /metrics right after its reply must
+                        // already see its sequence in every counter.
+                        {
+                            let mut m = metrics_inf.lock().expect("metrics poisoned");
+                            m.record_batch(1, p.admitted.elapsed());
+                            m.core_ops += f.stats.core_ops;
+                            m.energy_fj += f.stats.energy_fj();
+                            m.device_cycles += f.stats.total_cycles;
+                            m.weight_loads += f.stats.weight_loads;
+                        }
+                        tele_requests.inc();
+                        let out: Vec<f32> = f.generated.iter().map(|&t| t as f32).collect();
+                        let _ = p.reply.send(out);
+                    }
+                }
+                Err(e) => {
+                    // A failed round poisons every in-flight sequence:
+                    // refuse them all and start a fresh batcher.
+                    eprintln!("decode round error: {e}; dropping active sequences");
+                    for (_, p) in pending.drain() {
+                        let _ = p.reply.send(Vec::new());
+                    }
+                    batcher = ContinuousBatcher::new(&plan, slots, serve_cfg.stream, slots);
+                }
+            }
+        }
+        let mut m = metrics_inf.lock().expect("metrics poisoned");
+        m.peak_queue_depth = jobs_inf.peak_depth() as u64;
+        m.wall = t_start.elapsed();
+    });
+
+    let stop_acc = stop.clone();
+    let jobs_acc = jobs.clone();
+    let join = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let stopping = stop_acc.load(Ordering::SeqCst);
+            match stream {
+                Ok(s) => {
+                    let q = jobs_acc.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(s, &q);
+                    });
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+            if stopping {
+                break;
+            }
+        }
+        jobs_acc.close();
+        inference.join().expect("inference thread");
+    });
+
+    Ok(ServerHandle { addr, stop, jobs, join: Some(join), metrics, started, exporter })
+}
+
+/// Decode-request payload: `[n_gen, prompt tokens...]`, every value a
+/// non-negative integer-valued f32, tokens inside the vocabulary, and the
+/// sequence's total step count within the model's context window.
+fn parse_decode_request(
+    input: &[f32],
+    plan: &crate::compiler::DecodePlan,
+) -> Option<crate::compiler::DecodeRequest> {
+    let int_ok = |v: f32| v.is_finite() && v >= 0.0 && v.fract() == 0.0 && v < (1u32 << 24) as f32;
+    if input.len() < 2 || !int_ok(input[0]) {
+        return None;
+    }
+    let n_gen = input[0] as usize;
+    let vocab = plan.model().vocab;
+    let mut prompt = Vec::with_capacity(input.len() - 1);
+    for &v in &input[1..] {
+        if !int_ok(v) || (v as usize) >= vocab {
+            return None;
+        }
+        prompt.push(v as usize);
+    }
+    // Steps consumed = prompt + generated-and-fed-back tokens.
+    if prompt.len() + n_gen.saturating_sub(1) > plan.max_seq() {
+        return None;
+    }
+    Some(crate::compiler::DecodeRequest { prompt, n_gen })
 }
 
 /// Start serving on an ephemeral local port with any [`InferenceEngine`].

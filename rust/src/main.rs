@@ -55,6 +55,10 @@ fn spec() -> Cli {
                     OptSpec { name: "pipeline", value_name: None, default: None, help: "serve on the pooled batched pipeline" },
                     OptSpec { name: "plan", value_name: None, default: None, help: "serve a graph-compiled plan (compiler path)" },
                     OptSpec { name: "stream", value_name: None, default: None, help: "layer-pipelined streamed execution (implies --plan)" },
+                    OptSpec { name: "decode", value_name: None, default: None, help: "serve autoregressive LLM decoding (KV-cache continuous batching)" },
+                    OptSpec { name: "gen", value_name: Some("N"), default: Some("8"), help: "tokens to generate per decode request" },
+                    OptSpec { name: "layers", value_name: Some("N"), default: Some("2"), help: "decoder layers (--decode)" },
+                    OptSpec { name: "prompt-len", value_name: Some("N"), default: Some("4"), help: "prompt tokens per decode request" },
                     OptSpec { name: "max-queue", value_name: Some("N"), default: Some("256"), help: "admission queue bound (backpressure)" },
                     OptSpec { name: "workers", value_name: Some("N"), default: Some("0"), help: "pipeline worker threads (0 = auto)" },
                     OptSpec { name: "metrics-addr", value_name: Some("ADDR"), default: None, help: "bind a Prometheus /metrics listener (e.g. 127.0.0.1:9184, port 0 = ephemeral)" },
@@ -181,6 +185,9 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         "serve" => {
             let mut c = cfg.clone();
             c.enhance = EnhanceConfig::both();
+            if args.flag("decode") {
+                return serve_decode_demo(args, &c);
+            }
             println!("training the edge MLP (144-32-10) on the blob dataset...");
             let mut d = BlobDataset::new(12, 0.05, c.sim.seed);
             let data: Vec<(Vec<f32>, usize)> =
@@ -339,5 +346,81 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
         other => unreachable!("unknown command {other}"),
     }
+    Ok(())
+}
+
+/// `serve --decode`: autoregressive generation over the wire. Builds a
+/// small randomly-initialized GPT-style decoder, compiles it into a
+/// `DecodePlan` (static weights resident, per-session KV caches), serves
+/// it with token-level continuous batching, and drives demo clients whose
+/// requests join and leave mid-generation.
+fn serve_decode_demo(args: &Args, c: &Config) -> Result<(), Box<dyn std::error::Error>> {
+    use cimsim::compiler::DecodePlan;
+    use cimsim::nn::transformer::DecoderModel;
+    use cimsim::util::rng::{Rng, Xoshiro256};
+
+    let n_gen = args.get_usize("gen")?.max(1);
+    let layers = args.get_usize("layers")?.max(1);
+    let p_len = args.get_usize("prompt-len")?.max(1);
+    let n_req = args.get_usize("requests")?.max(1);
+    let max_batch = args.get_usize("batch")?;
+    let max_queue = args.get_usize("max-queue")?;
+    let stream = args.flag("stream");
+    let metrics_addr = args.get("metrics-addr").map(|s| s.to_string());
+
+    let vocab = 32usize;
+    let max_seq = p_len + n_gen; // steps per request = p_len + n_gen - 1
+    println!("building a {layers}-layer decoder (d_model 16, vocab {vocab}, max_seq {max_seq})...");
+    let model = DecoderModel::new(16, 2, 32, vocab, layers, max_seq, c.sim.seed);
+    let mut rng = Xoshiro256::seeded(c.sim.seed ^ 5);
+    let cal: Vec<Vec<usize>> = (0..4)
+        .map(|_| (0..max_seq.min(8)).map(|_| rng.next_below(vocab as u64) as usize).collect())
+        .collect();
+    let plan = DecodePlan::new(model, &cal, c, None).map_err(std::io::Error::other)?;
+    println!(
+        "placed {} static weight tiles; {} noise sites per token step",
+        plan.static_tiles(),
+        plan.sites()
+    );
+
+    let handle = cimsim::coordinator::serve_decode(
+        plan,
+        ServeConfig { max_batch, max_queue, stream, metrics_addr, ..Default::default() },
+    )?;
+    println!(
+        "serving decode on {} ({} slots{})",
+        handle.addr,
+        max_batch,
+        if stream { ", streamed rounds" } else { "" }
+    );
+    if let Some(m) = handle.metrics_addr() {
+        println!("metrics on http://{m}/metrics (JSON at /metrics.json)");
+    }
+
+    // Demo clients: two connections whose requests overlap, so sequences
+    // join and finish mid-generation (continuous batching in action).
+    let addr = handle.addr;
+    let mut joins: Vec<std::thread::JoinHandle<usize>> = Vec::new();
+    for t in 0..2u64 {
+        let reqs = n_req.div_ceil(2);
+        let seed = c.sim.seed ^ (t + 9);
+        joins.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).expect("connect");
+            let mut rng = Xoshiro256::seeded(seed);
+            let mut tokens = 0usize;
+            for _ in 0..reqs {
+                let mut req = vec![n_gen as f32];
+                for _ in 0..p_len {
+                    req.push(rng.next_below(vocab as u64) as f32);
+                }
+                tokens += cl.infer(&req).expect("decode").len();
+            }
+            tokens
+        }));
+    }
+    let generated: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let m = handle.shutdown();
+    println!("generated {generated} tokens over {n_req} requests");
+    println!("{}", m.report(c.mac.clock_mhz * 1e6).render());
     Ok(())
 }

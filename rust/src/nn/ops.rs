@@ -36,6 +36,23 @@ pub fn softmax_last_dim(t: &Tensor) -> Tensor {
     }
 }
 
+/// Causal (lower-triangular) softmax over a square rank-2 score matrix:
+/// row `i` is softmaxed over columns `0..=i` and zero elsewhere — the
+/// autoregressive attention mask. The single definition behind the graph
+/// IR's `CausalSoftmax` node, shared by `Graph::eval_float` and the
+/// compiled-plan executor so the two cannot drift (DESIGN.md §13).
+pub fn causal_softmax(t: &Tensor) -> Tensor {
+    assert_eq!(t.rank(), 2, "causal_softmax expects a rank-2 score matrix");
+    let (rows, cols) = (t.shape[0], t.shape[1]);
+    assert_eq!(rows, cols, "causal_softmax expects square scores [s][s]");
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let probs = softmax(&t.data[r * cols..r * cols + r + 1]);
+        out[r * cols..r * cols + r + 1].copy_from_slice(&probs);
+    }
+    Tensor::from_vec(&t.shape, out)
+}
+
 /// Layer normalization over the last dimension of a rank-1 or rank-2
 /// tensor: `y = (x − μ)/√(σ² + eps)·γ + β` per row, population variance.
 /// The single definition behind the graph IR's `LayerNorm` node.
@@ -219,6 +236,25 @@ mod tests {
         for r in 0..2 {
             let s: f32 = (0..2).map(|c| p.at2(r, c)).sum();
             assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_masks_the_upper_triangle() {
+        let t = Tensor::from_vec(&[3, 3], vec![1.0, 9.0, 9.0, 0.5, 0.5, 9.0, 1.0, 2.0, 3.0]);
+        let p = causal_softmax(&t);
+        // Row 0: only the diagonal entry is live.
+        assert_eq!(p.at2(0, 0), 1.0);
+        assert_eq!(p.at2(0, 1), 0.0);
+        assert_eq!(p.at2(0, 2), 0.0);
+        // Row 1: softmax over the first two (equal) scores, col 2 masked.
+        assert!((p.at2(1, 0) - 0.5).abs() < 1e-6);
+        assert!((p.at2(1, 1) - 0.5).abs() < 1e-6);
+        assert_eq!(p.at2(1, 2), 0.0);
+        // Row 2 matches the unmasked softmax of the full row.
+        let full = softmax(&[1.0, 2.0, 3.0]);
+        for c in 0..3 {
+            assert!((p.at2(2, c) - full[c]).abs() < 1e-6);
         }
     }
 

@@ -10,8 +10,14 @@
 //! output projection onto its own weight-stationary macro tile grid.
 //! [`TransformerBlock::forward`] is the float golden
 //! `Graph::from_transformer_block` is checked against.
+//!
+//! [`DecoderModel`] stacks blocks into a GPT-style causal decoder
+//! (token embedding + positional table + N blocks + LM head); its
+//! [`DecoderModel::forward_causal`] is the float golden behind
+//! `Graph::from_decoder` and the KV-cache decode engine's calibration
+//! (DESIGN.md §13).
 
-use crate::nn::ops::{layer_norm, softmax_last_dim};
+use crate::nn::ops::{causal_softmax, layer_norm, softmax_last_dim};
 use crate::nn::tensor::Tensor;
 use crate::util::rng::{Rng, Xoshiro256};
 
@@ -178,6 +184,154 @@ impl TransformerBlock {
         }
         layer_norm(&f2, &self.ln2_gamma, &self.ln2_beta, LN_EPS)
     }
+
+    /// Causal (autoregressive) float forward: identical to
+    /// [`TransformerBlock::forward`] except row `i` of every head's score
+    /// matrix only attends to columns `0..=i` ([`causal_softmax`]).
+    pub fn forward_causal(&self, x: &Tensor) -> Tensor {
+        self.forward_causal_traced(x).out
+    }
+
+    /// Causal forward that also returns the intermediates the decode
+    /// engine's activation-boundary calibration needs (DESIGN.md §13):
+    /// per-head post-bias Q rows, per-head context rows, the post-LN1
+    /// hidden, and the post-ReLU FFN activation.
+    pub fn forward_causal_traced(&self, x: &Tensor) -> CausalTrace {
+        assert_eq!(x.rank(), 2);
+        assert_eq!(x.shape[1], self.d_model, "input width vs d_model");
+        let dh = self.d_head();
+        let mut attn = Tensor::zeros(&[x.shape[0], self.d_model]);
+        let mut qs = Vec::with_capacity(self.heads);
+        let mut ctxs = Vec::with_capacity(self.heads);
+        for i in 0..self.heads {
+            let mut q = matmul(x, &self.wq[i]);
+            add_bias_rows(&mut q, &self.bq[i]);
+            let mut k = matmul(x, &self.wk[i]);
+            add_bias_rows(&mut k, &self.bk[i]);
+            let mut v = matmul(x, &self.wv[i]);
+            add_bias_rows(&mut v, &self.bv[i]);
+            let scores = matmul_t(&q, &k).map(|s| s / (dh as f32).sqrt());
+            let probs = causal_softmax(&scores);
+            let ctx = matmul(&probs, &v);
+            let head_out = matmul(&ctx, &self.wo[i]);
+            for (a, h) in attn.data.iter_mut().zip(&head_out.data) {
+                *a += h;
+            }
+            qs.push(q);
+            ctxs.push(ctx);
+        }
+        add_bias_rows(&mut attn, &self.b_o);
+        for (a, xv) in attn.data.iter_mut().zip(&x.data) {
+            *a += xv;
+        }
+        let h1 = layer_norm(&attn, &self.ln1_gamma, &self.ln1_beta, LN_EPS);
+
+        let mut f = matmul(&h1, &self.w_ff1);
+        add_bias_rows(&mut f, &self.b_ff1);
+        let f_relu = f.map(|v| v.max(0.0));
+        let mut f2 = matmul(&f_relu, &self.w_ff2);
+        add_bias_rows(&mut f2, &self.b_ff2);
+        for (o, h) in f2.data.iter_mut().zip(&h1.data) {
+            *o += h;
+        }
+        let out = layer_norm(&f2, &self.ln2_gamma, &self.ln2_beta, LN_EPS);
+        CausalTrace { q: qs, ctx: ctxs, h1, f_relu, out }
+    }
+}
+
+/// Intermediates of one causal block forward, captured for the decode
+/// engine's activation-boundary calibration (DESIGN.md §13).
+pub struct CausalTrace {
+    /// Per-head post-bias query rows `[seq][d_head]`.
+    pub q: Vec<Tensor>,
+    /// Per-head attention-context rows `[seq][d_head]`.
+    pub ctx: Vec<Tensor>,
+    /// Post-LN1 hidden `[seq][d_model]` (FFN-expand input boundary).
+    pub h1: Tensor,
+    /// Post-ReLU FFN activation `[seq][d_ff]` (FFN-contract boundary).
+    pub f_relu: Tensor,
+    /// Block output `[seq][d_model]`.
+    pub out: Tensor,
+}
+
+/// A GPT-style causal decoder: token embedding + deterministic sinusoid
+/// positional table + a stack of [`TransformerBlock`]s run causally + a
+/// linear LM head over the vocabulary (DESIGN.md §13).
+pub struct DecoderModel {
+    pub d_model: usize,
+    pub vocab: usize,
+    /// Longest sequence the positional table (and any KV cache built from
+    /// this model) supports.
+    pub max_seq: usize,
+    pub blocks: Vec<TransformerBlock>,
+    /// Token embedding rows `[vocab][d_model]`.
+    pub embed: Tensor,
+    /// Sinusoid positional table `[max_seq][d_model]`.
+    pub pos: Tensor,
+    /// LM head, `w_cols` layout `[d_model][vocab]`.
+    pub w_head: Tensor,
+    pub b_head: Vec<f32>,
+}
+
+impl DecoderModel {
+    /// Random small-scale init; blocks get decorrelated per-layer seeds.
+    pub fn new(
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        vocab: usize,
+        n_layers: usize,
+        max_seq: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_layers > 0 && vocab > 0 && max_seq > 0);
+        let mut rng = Xoshiro256::seeded(seed ^ 0xDEC0_DE);
+        let s = 1.0 / (d_model as f32).sqrt();
+        let embed = rand_cols(vocab, d_model, s, &mut rng);
+        let w_head = rand_cols(d_model, vocab, s, &mut rng);
+        let b_head = rand_vec(vocab, 0.05, &mut rng);
+        // Classic fixed sinusoid table: bounded, deterministic, no training.
+        let mut pos = Tensor::zeros(&[max_seq, d_model]);
+        for p in 0..max_seq {
+            for i in 0..d_model {
+                let freq = 1.0 / 10_000f32.powf((2 * (i / 2)) as f32 / d_model as f32);
+                let angle = p as f32 * freq;
+                *pos.at2_mut(p, i) = if i % 2 == 0 { angle.sin() } else { angle.cos() };
+            }
+        }
+        let blocks = (0..n_layers)
+            .map(|l| TransformerBlock::new(d_model, heads, d_ff, seed.wrapping_add(l as u64 * 977)))
+            .collect();
+        Self { d_model, vocab, max_seq, blocks, embed, pos, w_head, b_head }
+    }
+
+    /// Embedding of one token at one position: token row + positional row.
+    pub fn embed_token(&self, tok: usize, p: usize) -> Vec<f32> {
+        assert!(tok < self.vocab, "token {tok} outside vocab {}", self.vocab);
+        assert!(p < self.max_seq, "position {p} outside max_seq {}", self.max_seq);
+        (0..self.d_model).map(|i| self.embed.at2(tok, i) + self.pos.at2(p, i)).collect()
+    }
+
+    /// Embed a whole token sequence into `[seq][d_model]`.
+    pub fn embed_seq(&self, tokens: &[usize]) -> Tensor {
+        let mut data = Vec::with_capacity(tokens.len() * self.d_model);
+        for (p, &t) in tokens.iter().enumerate() {
+            data.extend(self.embed_token(t, p));
+        }
+        Tensor::from_vec(&[tokens.len(), self.d_model], data)
+    }
+
+    /// Float golden: causal forward over a full prefix, returning the LM
+    /// logits `[seq][vocab]` (row `i` = next-token logits after token `i`).
+    pub fn forward_causal(&self, tokens: &[usize]) -> Tensor {
+        let mut x = self.embed_seq(tokens);
+        for block in &self.blocks {
+            x = block.forward_causal(&x);
+        }
+        let mut logits = matmul(&x, &self.w_head);
+        add_bias_rows(&mut logits, &self.b_head);
+        logits
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +359,42 @@ mod tests {
     #[should_panic]
     fn heads_must_divide_d_model() {
         let _ = TransformerBlock::new(10, 3, 8, 1);
+    }
+
+    /// Causality: appending a token must not change any earlier row of the
+    /// causal forward — the invariant the KV-cache engine exploits.
+    #[test]
+    fn causal_forward_is_prefix_stable() {
+        let model = DecoderModel::new(16, 4, 24, 11, 2, 8, 42);
+        let toks = [3usize, 7, 1, 9, 0];
+        let full = model.forward_causal(&toks);
+        assert_eq!(full.shape, vec![5, 11]);
+        for p in 1..toks.len() {
+            let prefix = model.forward_causal(&toks[..p]);
+            for r in 0..p {
+                for c in 0..11 {
+                    let (a, b) = (prefix.at2(r, c), full.at2(r, c));
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "row {r} col {c} drifted: {a} vs {b} (prefix {p})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// On a single-token sequence the causal mask is a no-op, so causal and
+    /// full forward agree exactly.
+    #[test]
+    fn causal_equals_full_on_length_one() {
+        let block = TransformerBlock::new(8, 2, 12, 5);
+        let mut rng = Xoshiro256::seeded(9);
+        let x = Tensor::from_vec(&[1, 8], (0..8).map(|_| rng.next_f32() - 0.5).collect());
+        let full = block.forward(&x);
+        let causal = block.forward_causal(&x);
+        for (a, b) in full.data.iter().zip(&causal.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     /// The per-head output-projection *sum* equals the textbook

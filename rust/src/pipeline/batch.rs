@@ -190,6 +190,104 @@ pub fn run_vector(
     Ok(out)
 }
 
+/// [`run_vector`] over the *live* top-left `live_k × live_n` region of a
+/// placed grid whose resident K×N is larger — the KV-cache ragged-shape
+/// path (DESIGN.md §13). Dead row/column tiles are skipped entirely: no
+/// ops, no cycles, no noise draws. `acts` holds exactly the `live_k` live
+/// activation codes.
+///
+/// Tile noise keys use the **full-grid** column stride (`rt·n_ct + ct`), so
+/// a tile keeps the same substream index as the live region grows — which
+/// is what makes a ragged run over the live prefix bit-identical to the
+/// same-keyed run at any later (larger) live size, and keeps step-by-step
+/// decode replayable (DESIGN.md §9/§13).
+///
+/// A signed activation boundary (`zero_point() != 0`) requires
+/// `live_k == K`: the `zp·Σw` restore sums weight codes over all K rows,
+/// which only cancels the padding when every row tile actually ran.
+/// (Decode satisfies this by construction: score grids are fully live in K
+/// = d_h, and context grids carry zp=0 softmax-probability params.)
+pub fn run_vector_ragged(
+    pool: &MacroPool,
+    layer: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    live_k: usize,
+    live_n: usize,
+    ctx: &mut StreamCtx,
+    stats: &mut ExecStats,
+) -> Result<Vec<f32>, MapError> {
+    let lin = layer.linear();
+    let (k, n) = (lin.k, lin.n);
+    if live_k == 0 || live_k > k || live_n == 0 || live_n > n {
+        return Err(MapError::Shape(format!(
+            "live region {live_k}×{live_n} vs placed grid {k}×{n}"
+        )));
+    }
+    if acts.len() != live_k {
+        return Err(MapError::Shape(format!(
+            "activation length {} vs live K {live_k}",
+            acts.len()
+        )));
+    }
+    let zp = lin.act_zero();
+    if zp != 0 && live_k != k {
+        return Err(MapError::Shape(format!(
+            "signed boundary (zp={zp}) needs a fully-live K ({live_k} vs {k})"
+        )));
+    }
+    let rows = lin.rows_per_tile();
+    let engines = lin.engines_per_tile();
+    let n_ct = lin.n_col_tiles();
+    let n_rt_live = live_k.div_ceil(rows);
+    let n_ct_live = live_n.div_ceil(engines);
+    let deq = lin.a_params.scale * lin.w_params.scale;
+
+    ctx.tile_acts.resize(rows, 0);
+    let mut out = vec![0f32; live_n];
+    for rt in 0..n_rt_live {
+        let _span = crate::span!("row_tile", "rt" => rt, "item" => key.item);
+        let r0 = rt * rows;
+        let upper = (r0 + rows).min(live_k);
+        ctx.tile_acts.fill(0);
+        ctx.tile_acts[..upper - r0].copy_from_slice(&acts[r0..upper]);
+        ctx.scratch.prepare(pool.cfg(), &ctx.tile_acts)?;
+        for ct in 0..n_ct_live {
+            let slot = layer.slot(rt, ct);
+            // Full-grid tile stride: stable keys as the live region grows.
+            let mut rng = noise_stream(key.seed, key.epoch, key.item, (rt * n_ct + ct) as u64);
+            pool.op_prepared_into(slot, &mut rng, &mut ctx.scratch, &mut ctx.op)?;
+            let c0 = ct * engines;
+            for (e, &v) in ctx.op.values.iter().enumerate() {
+                let col = c0 + e;
+                if col < live_n {
+                    out[col] += v as f32 * deq;
+                }
+            }
+            let (sh, co) = pool.locate(slot);
+            let w = pool.shard(sh).core_weights(co)?;
+            account_core_op_into(
+                pool.cfg(),
+                w,
+                &ctx.tile_acts,
+                &ctx.op.stats,
+                stats,
+                &mut ctx.folded,
+            );
+        }
+    }
+    // Same zero-point + bias tail as `run_vector`, over the live columns.
+    if zp != 0 {
+        for (col, o) in out.iter_mut().enumerate() {
+            *o -= (zp * lin.col_sum(col)) as f32 * deq;
+        }
+    }
+    for (o, b) in out.iter_mut().zip(&lin.bias) {
+        *o += b;
+    }
+    Ok(out)
+}
+
 /// Run a worker's whole chunk of activation vectors through the
 /// batch-transposed popcount kernel (DESIGN.md §11): one
 /// [`OpScratch::prepare_batch`] per row tile serves every item, and each
@@ -522,6 +620,120 @@ mod tests {
         let bad = vec![vec![0i64; 63]];
         assert!(matches!(
             exec.run_q(&pool, &placed, &bad),
+            Err(MapError::Shape(_))
+        ));
+    }
+
+    /// Fully-live ragged run is bit-identical to `run_vector` — same tiles,
+    /// same noise keys — noise on or off.
+    #[test]
+    fn ragged_fully_live_equals_run_vector() {
+        for noise in [false, true] {
+            let mut cfg = Config::default();
+            cfg.noise.enabled = noise;
+            cfg.enhance = EnhanceConfig::both();
+            let (k, n) = (130, 20);
+            let lin = rand_layer(&cfg, k, n, 11);
+            let acts = lin.quantize_acts(
+                &(0..k).map(|i| (i as f32 * 0.17).sin().abs()).collect::<Vec<_>>(),
+            );
+            let mut pool = MacroPool::new(cfg.clone());
+            let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+            let key = StreamKey { seed: 5, epoch: 2, item: 3 };
+            let mut ctx = StreamCtx::new(&cfg);
+            let mut s1 = ExecStats::default();
+            let want = run_vector(&pool, &placed, key, &acts, &mut ctx, &mut s1).unwrap();
+            let mut s2 = ExecStats::default();
+            let got =
+                run_vector_ragged(&pool, &placed, key, &acts, k, n, &mut ctx, &mut s2).unwrap();
+            assert_eq!(got, want, "noise={noise}");
+            assert_eq!(s1.core_ops, s2.core_ops);
+        }
+    }
+
+    /// Noise-free, zp=0: a ragged run over the live prefix of a grid whose
+    /// dead region is zero weights matches the full run truncated — and
+    /// skips the dead tiles' ops entirely.
+    #[test]
+    fn ragged_live_prefix_matches_truncated_full_run() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let (k, n) = (130, 40); // 3×3 tile grid (64-row, 16-engine tiles)
+        let (live_k, live_n) = (64, 20); // 1×2 live tiles
+        let mut rng = Xoshiro256::seeded(77);
+        let mut data = vec![0f32; k * n];
+        for r in 0..live_k {
+            for c in 0..live_n {
+                data[r * n + c] = rng.next_f32() - 0.5;
+            }
+        }
+        let wp = crate::nn::quant::QuantParams::signed(0.5, cfg.mac.weight_bits);
+        let ap = crate::nn::quant::QuantParams::unsigned(1.0, cfg.mac.act_bits); // zp = 0
+        let lin = CimLinear::with_params(
+            &Tensor::from_vec(&[k, n], data),
+            vec![0.0; n],
+            wp,
+            ap,
+            &cfg,
+        );
+        let mut acts = vec![0i64; k];
+        for (i, a) in acts.iter_mut().enumerate().take(live_k) {
+            *a = (i % 15) as i64;
+        }
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+        let key = StreamKey { seed: 1, epoch: 0, item: 0 };
+        let mut ctx = StreamCtx::new(&cfg);
+        let mut s_full = ExecStats::default();
+        let full = run_vector(&pool, &placed, key, &acts, &mut ctx, &mut s_full).unwrap();
+        let mut s_rag = ExecStats::default();
+        let got = run_vector_ragged(
+            &pool,
+            &placed,
+            key,
+            &acts[..live_k],
+            live_k,
+            live_n,
+            &mut ctx,
+            &mut s_rag,
+        )
+        .unwrap();
+        assert_eq!(got.as_slice(), &full[..live_n]);
+        assert_eq!(s_full.core_ops, 9, "full run touches every tile");
+        assert_eq!(s_rag.core_ops, 2, "ragged run touches only live tiles");
+        assert!(s_rag.total_cycles < s_full.total_cycles);
+    }
+
+    /// Ragged shape contract: bad live bounds and signed boundaries with a
+    /// partial K are rejected.
+    #[test]
+    fn ragged_shape_errors_are_reported() {
+        let cfg = Config::default();
+        let w = Tensor::from_vec(&[64, 16], vec![0.01; 64 * 16]);
+        let lin = CimLinear::with_params(
+            &w,
+            vec![0.0; 16],
+            crate::nn::quant::QuantParams::signed(0.01, cfg.mac.weight_bits),
+            crate::nn::quant::QuantParams::signed_acts(1.0, cfg.mac.act_bits), // zp ≠ 0
+            &cfg,
+        );
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+        let key = StreamKey { seed: 0, epoch: 0, item: 0 };
+        let mut ctx = StreamCtx::new(&cfg);
+        let mut stats = ExecStats::default();
+        let acts = vec![1i64; 32];
+        assert!(matches!(
+            run_vector_ragged(&pool, &placed, key, &acts, 32, 8, &mut ctx, &mut stats),
+            Err(MapError::Shape(_))
+        ), "zp != 0 with partial K must be refused");
+        assert!(matches!(
+            run_vector_ragged(&pool, &placed, key, &acts, 0, 8, &mut ctx, &mut stats),
+            Err(MapError::Shape(_))
+        ));
+        assert!(matches!(
+            run_vector_ragged(&pool, &placed, key, &acts, 64, 17, &mut ctx, &mut stats),
             Err(MapError::Shape(_))
         ));
     }

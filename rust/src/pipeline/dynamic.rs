@@ -24,9 +24,10 @@ use crate::cim::MacroError;
 use crate::config::Config;
 use crate::energy::weight_load_energy;
 use crate::mapping::executor::CimLinear;
-use crate::mapping::ExecStats;
+use crate::mapping::{ExecStats, MapError};
 use crate::nn::quant::QuantParams;
 use crate::nn::tensor::Tensor;
+use crate::pipeline::batch::{run_vector, run_vector_ragged, StreamCtx, StreamKey};
 use crate::pipeline::pool::{MacroPool, PlacedLinear};
 
 /// A placed tile grid with swappable weights on its own dedicated shards.
@@ -96,6 +97,87 @@ impl DynamicLinear {
         stats.total_cycles += tiles * weight_load_cycles(self.pool.cfg());
         stats.energy.add(&weight_load_energy(self.pool.cfg(), tiles));
         Ok(())
+    }
+
+    /// Partial swap for the KV-cache append path (DESIGN.md §13): stage
+    /// `w_cols` under **caller-chosen** weight params (the cache's running
+    /// max-abs scale, monotone across appends) and reload only the tiles
+    /// covering the element region `rows × cols`. When the scale is
+    /// unchanged, every element outside the dirty strip quantizes to its
+    /// previous code, so the narrow reload is bit-equal to a full one; the
+    /// cache reloads everything live whenever its scale grows. Charges only
+    /// the tiles actually written.
+    pub fn reload_region(
+        &mut self,
+        w_cols: &Tensor,
+        w_params: QuantParams,
+        a_params: QuantParams,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+        stats: &mut ExecStats,
+    ) -> Result<u64, MacroError> {
+        let n = self.placed.linear().n;
+        let lin =
+            CimLinear::with_params(w_cols, vec![0.0; n], w_params, a_params, self.pool.cfg());
+        let rpt = lin.rows_per_tile();
+        let ept = lin.engines_per_tile();
+        let rts = rows.start / rpt..rows.end.div_ceil(rpt);
+        let cts = cols.start / ept..cols.end.div_ceil(ept);
+        let written = self.placed.reload_tiles(&mut self.pool, lin, rts, cts)?;
+        self.reloads += 1;
+        stats.weight_loads += written;
+        stats.total_cycles += written * weight_load_cycles(self.pool.cfg());
+        stats.energy.add(&weight_load_energy(self.pool.cfg(), written));
+        Ok(written)
+    }
+
+    /// Run one quantized vector over the live `live_k × live_n` corner of
+    /// the resident grid ([`run_vector_ragged`]): the KV-cache MatMul whose
+    /// live shape grows with the decode position while the placed grid
+    /// stays `K×N`-stationary.
+    pub fn run_ragged(
+        &self,
+        key: StreamKey,
+        acts: &[i64],
+        live_k: usize,
+        live_n: usize,
+        ctx: &mut StreamCtx,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<f32>, MapError> {
+        run_vector_ragged(&self.pool, &self.placed, key, acts, live_k, live_n, ctx, stats)
+    }
+
+    /// One dynamic-weight item, reload-to-results under a single `&mut`
+    /// borrow: swap in `w_cols` ([`DynamicLinear::reload`]) and stream every
+    /// quantized row of the item through the freshly resident grid. Row `r`
+    /// uses substream key `(seed, epoch, item_base + r, tile)`.
+    ///
+    /// This is the per-(item, tile) reload barrier the compiled plans rely
+    /// on (DESIGN.md §10/§13): because the reload and all of the item's row
+    /// ops happen inside one exclusive borrow, the borrow checker makes it
+    /// impossible for a second stream sharing this layer (behind the
+    /// `CompiledLayer` Mutex) to interleave its own reload between this
+    /// item's swap and its ops — the contention property pinned by
+    /// `tests/dynamic_contention.rs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_item(
+        &mut self,
+        w_cols: &Tensor,
+        a_params: QuantParams,
+        rows_q: &[Vec<i64>],
+        seed: u64,
+        epoch: u64,
+        item_base: u64,
+        ctx: &mut StreamCtx,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<Vec<f32>>, MapError> {
+        self.reload(w_cols, a_params, stats)?;
+        let mut out = Vec::with_capacity(rows_q.len());
+        for (r, acts) in rows_q.iter().enumerate() {
+            let key = StreamKey { seed, epoch, item: item_base + r as u64 };
+            out.push(run_vector(&self.pool, &self.placed, key, acts, ctx, stats)?);
+        }
+        Ok(out)
     }
 }
 

@@ -1,0 +1,358 @@
+//! Per-sequence quantized K/V slabs for autoregressive decoding
+//! (DESIGN.md §13).
+//!
+//! Attention at decode step `p` multiplies the new query against every
+//! cached key (`q·Kᵀ`, a `d_h × (p+1)` ragged shape) and the softmax
+//! probabilities against every cached value (`probs·V`, `(p+1) × d_h`).
+//! Both operands are runtime tensors that *grow by one vector per step* —
+//! the shape [`crate::pipeline::DynamicLinear`] cannot express with its
+//! fixed-K×N per-call reload. [`KvCache`] closes the gap: a full-size
+//! `max_seq` grid placed once, a float slab mirroring it, and an append
+//! path that requantizes **incrementally**:
+//!
+//! * The weight scale is a *running max-abs* over every vector appended so
+//!   far — monotone, so it either stays put or grows.
+//! * Scale unchanged ⇒ every previously-written element requantizes to its
+//!   exact previous code (quantization is a pure function of value and
+//!   params), so only the new row/column strip reloads
+//!   ([`DynamicLinear::reload_region`]) — the per-token reload cost is one
+//!   tile strip, not the whole grid.
+//! * Scale grew ⇒ the whole live region reloads under the new scale.
+//! * The dead region is zeros, which quantize to code 0 under any scale,
+//!   so ragged runs ([`DynamicLinear::run_ragged`]) skip those tiles
+//!   entirely and still match a full-grid run bit for bit.
+//!
+//! A keys cache stores vectors as **columns** of a `[d_h][max_seq]` grid
+//! (so `run` computes `q·Kᵀ` scores over the live positions, fully live in
+//! K); a values cache stores them as **rows** of a `[max_seq][d_h]` grid
+//! (so `run` computes `probs·V`, fully live in N). The values boundary must
+//! be zero-point-free (softmax probabilities, `unsigned(1.0)`): dead
+//! positions pad with code 0 and contribute nothing.
+
+use crate::cim::MacroError;
+use crate::config::Config;
+use crate::mapping::executor::CimLinear;
+use crate::mapping::{ExecStats, MapError};
+use crate::nn::quant::QuantParams;
+use crate::nn::tensor::Tensor;
+use crate::pipeline::batch::{StreamCtx, StreamKey};
+use crate::pipeline::dynamic::DynamicLinear;
+
+/// Which axis of the placed grid an appended vector occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Append {
+    /// Keys: vector `p` is column `p` of a `[d_h][max_seq]` grid.
+    Col,
+    /// Values: vector `p` is row `p` of a `[max_seq][d_h]` grid.
+    Row,
+}
+
+/// One sequence's quantized K or V slab on its own dedicated grid.
+pub struct KvCache {
+    grid: DynamicLinear,
+    /// Float mirror of the resident grid (`[k][n]`, dead region zeros).
+    slab: Tensor,
+    a_params: QuantParams,
+    axis: Append,
+    /// Vector length `d_h`.
+    d: usize,
+    max_seq: usize,
+    /// Vectors appended so far (the live sequence length).
+    live: usize,
+    /// Running max-abs over every element appended so far (monotone).
+    running_max: f32,
+    /// Grid-scale requantizations forced by a running-max growth.
+    rescales: u64,
+}
+
+impl KvCache {
+    fn place(
+        cfg: &Config,
+        shape: [usize; 2],
+        axis: Append,
+        d: usize,
+        max_seq: usize,
+        fab_base: usize,
+        a_params: QuantParams,
+    ) -> Result<Self, MacroError> {
+        let slab = Tensor::zeros(&shape);
+        let stage = CimLinear::with_params(
+            &slab,
+            vec![0.0; shape[1]],
+            QuantParams::signed(0.0, cfg.mac.weight_bits),
+            a_params,
+            cfg,
+        );
+        let grid = DynamicLinear::place(stage, cfg, fab_base)?;
+        Ok(Self { grid, slab, a_params, axis, d, max_seq, live: 0, running_max: 0.0, rescales: 0 })
+    }
+
+    /// A keys cache: `[d_h][max_seq]` grid, one appended key per column.
+    /// `a_params` is the query boundary (signed is fine — K is fully live).
+    pub fn keys(
+        cfg: &Config,
+        d_h: usize,
+        max_seq: usize,
+        fab_base: usize,
+        a_params: QuantParams,
+    ) -> Result<Self, MacroError> {
+        Self::place(cfg, [d_h, max_seq], Append::Col, d_h, max_seq, fab_base, a_params)
+    }
+
+    /// A values cache: `[max_seq][d_h]` grid, one appended value per row.
+    /// `a_params` must be zero-point-free (softmax probabilities,
+    /// `unsigned`): ragged runs pad dead positions with code 0.
+    pub fn values(
+        cfg: &Config,
+        d_h: usize,
+        max_seq: usize,
+        fab_base: usize,
+        a_params: QuantParams,
+    ) -> Result<Self, MacroError> {
+        assert_eq!(
+            a_params.zero_point(),
+            0,
+            "values cache needs a zero-point-free activation boundary"
+        );
+        Self::place(cfg, [max_seq, d_h], Append::Row, d_h, max_seq, fab_base, a_params)
+    }
+
+    /// Live sequence length (vectors appended so far).
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// The resident grid (counters, current `CimLinear`).
+    pub fn grid(&self) -> &DynamicLinear {
+        &self.grid
+    }
+
+    /// The resident weight params (running-max scale of the last append).
+    pub fn w_params(&self) -> QuantParams {
+        self.grid.linear().w_params
+    }
+
+    /// Running max-abs over everything appended so far.
+    pub fn running_max(&self) -> f32 {
+        self.running_max
+    }
+
+    /// Appends that forced a whole-live-region requantization.
+    pub fn rescales(&self) -> u64 {
+        self.rescales
+    }
+
+    /// Quantize an activation vector at this cache's boundary.
+    pub fn quantize_acts(&self, x: &[f32]) -> Vec<i64> {
+        self.grid.linear().quantize_acts(x)
+    }
+
+    /// Append one vector at the next position: update the float slab and
+    /// the running max, requantize under the (possibly grown) running-max
+    /// scale, and reload only what changed — the new strip when the scale
+    /// held, the whole live region when it grew (DESIGN.md §13). Returns
+    /// the position the vector landed on; reload cycles/energy/loads are
+    /// charged to `stats`.
+    pub fn append(&mut self, v: &[f32], stats: &mut ExecStats) -> Result<usize, MacroError> {
+        assert_eq!(v.len(), self.d, "appended vector length vs d_h");
+        assert!(self.live < self.max_seq, "KV cache overflow: max_seq {}", self.max_seq);
+        let p = self.live;
+        match self.axis {
+            Append::Col => {
+                for (r, &x) in v.iter().enumerate() {
+                    *self.slab.at2_mut(r, p) = x;
+                }
+            }
+            Append::Row => {
+                for (c, &x) in v.iter().enumerate() {
+                    *self.slab.at2_mut(p, c) = x;
+                }
+            }
+        }
+        let vec_max = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+        self.running_max = self.running_max.max(vec_max);
+        let wp = QuantParams::signed(self.running_max, self.grid.pool().cfg().mac.weight_bits);
+        let grew = wp.scale != self.grid.linear().w_params.scale;
+        self.live = p + 1;
+        let (rows, cols) = match (self.axis, grew) {
+            // Scale held: the dirty strip is just the new vector.
+            (Append::Col, false) => (0..self.d, p..p + 1),
+            (Append::Row, false) => (p..p + 1, 0..self.d),
+            // Scale grew: every live code changes.
+            (Append::Col, true) => (0..self.d, 0..self.live),
+            (Append::Row, true) => (0..self.live, 0..self.d),
+        };
+        if grew {
+            self.rescales += 1;
+        }
+        self.grid.reload_region(&self.slab, wp, self.a_params, rows, cols, stats)?;
+        Ok(p)
+    }
+
+    /// Run one quantized activation vector against the live region: scores
+    /// `q·Kᵀ[..live]` for a keys cache, `probs·V[..live]` for values.
+    pub fn run(
+        &self,
+        key: StreamKey,
+        acts_q: &[i64],
+        ctx: &mut StreamCtx,
+        stats: &mut ExecStats,
+    ) -> Result<Vec<f32>, MapError> {
+        let (live_k, live_n) = match self.axis {
+            Append::Col => (self.d, self.live),
+            Append::Row => (self.live, self.d),
+        };
+        self.grid.run_ragged(key, acts_q, live_k, live_n, ctx, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnhanceConfig;
+    use crate::mapping::NativeBackend;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn rand_vec(rng: &mut Xoshiro256, d: usize, amp: f32) -> Vec<f32> {
+        (0..d).map(|_| (rng.next_f32() - 0.5) * amp).collect()
+    }
+
+    /// After every append, the keys cache's live scores equal a fresh
+    /// full-K×live CimLinear over the same vectors (noise-free) — the
+    /// incremental requantize+partial-reload path introduces no drift at
+    /// matching scales.
+    #[test]
+    fn keys_cache_matches_fresh_layer_at_every_position() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let (d, max_seq) = (16, 40);
+        let ap = QuantParams::signed_acts(1.0, cfg.mac.act_bits);
+        let mut kv = KvCache::keys(&cfg, d, max_seq, 900, ap).unwrap();
+        let mut rng = Xoshiro256::seeded(4);
+        let mut stats = ExecStats::default();
+        let mut ctx = StreamCtx::new(&cfg);
+        let mut cols: Vec<Vec<f32>> = Vec::new();
+        for step in 0..10usize {
+            let kvec = rand_vec(&mut rng, d, 1.0 + step as f32 * 0.1);
+            cols.push(kvec.clone());
+            kv.append(&kvec, &mut stats).unwrap();
+            assert_eq!(kv.live(), step + 1);
+
+            let q = rand_vec(&mut rng, d, 1.0);
+            let acts = kv.quantize_acts(&q);
+            let key = StreamKey { seed: 3, epoch: step as u64, item: 0 };
+            let got = kv.run(key, &acts, &mut ctx, &mut stats).unwrap();
+
+            // Oracle: a fresh layer over exactly the live columns, under
+            // the cache's (running-max) weight params.
+            let mut w = Tensor::zeros(&[d, step + 1]);
+            for (c, col) in cols.iter().enumerate() {
+                for (r, &x) in col.iter().enumerate() {
+                    *w.at2_mut(r, c) = x;
+                }
+            }
+            let fresh =
+                CimLinear::with_params(&w, vec![0.0; step + 1], kv.w_params(), ap, &cfg);
+            let mut nat = NativeBackend::new(cfg.clone());
+            let want = fresh.run_batch(&mut nat, &[q]).unwrap().remove(0);
+            assert_eq!(got, want, "step {step}");
+        }
+        assert!(stats.weight_loads > 0);
+    }
+
+    /// Values cache: probs·V at growing positions matches the fresh-layer
+    /// oracle, and appends under a held scale reload exactly one strip.
+    #[test]
+    fn values_cache_matches_fresh_layer_and_amortizes_reloads() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        cfg.enhance = EnhanceConfig::both();
+        let (d, max_seq) = (16, 80);
+        let ap = QuantParams::unsigned(1.0, cfg.mac.act_bits);
+        let mut kv = KvCache::values(&cfg, d, max_seq, 901, ap).unwrap();
+        let mut rng = Xoshiro256::seeded(9);
+        let mut stats = ExecStats::default();
+        let mut ctx = StreamCtx::new(&cfg);
+        let mut vals: Vec<Vec<f32>> = Vec::new();
+        // The first vector pins the running max at exactly 1.0; later ones
+        // stay strictly inside it, so the scale holds and each append
+        // reloads exactly one strip.
+        for step in 0..8usize {
+            let vvec: Vec<f32> = if step == 0 {
+                (0..d).map(|i| if i % 2 == 0 { 1.0f32 } else { -1.0 }).collect()
+            } else {
+                rand_vec(&mut rng, d, 1.5) // |x| ≤ 0.75 < 1.0
+            };
+            vals.push(vvec.clone());
+            let before = stats.weight_loads;
+            kv.append(&vvec, &mut stats).unwrap();
+            if step > 0 {
+                let strip_tiles = (d as u64).div_ceil(cfg.mac.engines as u64);
+                assert_eq!(
+                    stats.weight_loads - before,
+                    strip_tiles,
+                    "held scale must reload one row strip (step {step})"
+                );
+            }
+
+            let live = step + 1;
+            let probs: Vec<f32> = (0..live).map(|i| 1.0 / (i + 1) as f32).collect();
+            let acts = kv.quantize_acts(&probs);
+            let key = StreamKey { seed: 7, epoch: step as u64, item: 0 };
+            let got = kv.run(key, &acts, &mut ctx, &mut stats).unwrap();
+
+            let mut w = Tensor::zeros(&[live, d]);
+            for (r, row) in vals.iter().enumerate() {
+                for (c, &x) in row.iter().enumerate() {
+                    *w.at2_mut(r, c) = x;
+                }
+            }
+            let fresh = CimLinear::with_params(&w, vec![0.0; d], kv.w_params(), ap, &cfg);
+            let mut nat = NativeBackend::new(cfg.clone());
+            let want = fresh.run_batch(&mut nat, &[probs]).unwrap().remove(0);
+            assert_eq!(got, want, "step {step}");
+        }
+        assert_eq!(kv.rescales(), 1, "only the first append should grow the scale");
+    }
+
+    /// The running-max scale is monotone and, once every vector is in,
+    /// bit-equal to a one-shot calibration of the full sequence.
+    #[test]
+    fn running_scale_converges_to_one_shot() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let (d, n) = (8, 12);
+        let ap = QuantParams::signed_acts(1.0, cfg.mac.act_bits);
+        let mut kv = KvCache::keys(&cfg, d, 16, 902, ap).unwrap();
+        let mut rng = Xoshiro256::seeded(1);
+        let mut stats = ExecStats::default();
+        let mut all: Vec<f32> = Vec::new();
+        let mut prev_scale = 0.0f32;
+        for _ in 0..n {
+            let v = rand_vec(&mut rng, d, 2.0);
+            all.extend(&v);
+            kv.append(&v, &mut stats).unwrap();
+            assert!(kv.w_params().scale >= prev_scale, "running scale is monotone");
+            prev_scale = kv.w_params().scale;
+        }
+        let one_shot = QuantParams::signed(
+            all.iter().fold(0f32, |m, x| m.max(x.abs())),
+            cfg.mac.weight_bits,
+        );
+        assert_eq!(kv.w_params().scale, one_shot.scale, "final scale is the one-shot scale");
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn append_past_max_seq_panics() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let ap = QuantParams::unsigned(1.0, cfg.mac.act_bits);
+        let mut kv = KvCache::values(&cfg, 4, 2, 903, ap).unwrap();
+        let mut stats = ExecStats::default();
+        for _ in 0..3 {
+            kv.append(&[0.1, 0.2, 0.3, 0.4], &mut stats).unwrap();
+        }
+    }
+}

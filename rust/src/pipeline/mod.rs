@@ -49,10 +49,12 @@ pub mod backend;
 pub mod batch;
 pub mod deploy;
 pub mod dynamic;
+pub mod kv_cache;
 pub mod pool;
 
 pub use backend::PoolBackend;
-pub use batch::{noise_stream, run_vector, BatchExecutor, StreamCtx, StreamKey};
+pub use batch::{noise_stream, run_vector, run_vector_ragged, BatchExecutor, StreamCtx, StreamKey};
 pub use deploy::PipelineDeployment;
 pub use dynamic::DynamicLinear;
+pub use kv_cache::KvCache;
 pub use pool::{MacroPool, PlacedLinear};

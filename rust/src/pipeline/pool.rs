@@ -314,6 +314,42 @@ impl PlacedLinear {
         self.lin = lin;
         Ok(())
     }
+
+    /// Partial reload: swap only the tiles in `rts × cts` (row-tile /
+    /// col-tile ranges) and make `lin` the layer's tiler/dequant source.
+    /// Returns the number of tiles written.
+    ///
+    /// Caller contract (the KV-cache append path, DESIGN.md §13): outside
+    /// the given tile region, `lin`'s quantized codes must be identical to
+    /// the resident layer's — quantization is a pure function of value and
+    /// params, so appending rows/columns under an unchanged scale leaves
+    /// every previously-written tile's codes bitwise intact, and reloading
+    /// just the dirty strip is bit-equal to a full [`PlacedLinear::reload`].
+    pub fn reload_tiles(
+        &mut self,
+        pool: &mut MacroPool,
+        lin: CimLinear,
+        rts: std::ops::Range<usize>,
+        cts: std::ops::Range<usize>,
+    ) -> Result<u64, MacroError> {
+        assert_eq!(
+            (lin.k, lin.n),
+            (self.lin.k, self.lin.n),
+            "reload_tiles must preserve the placed layer's K×N shape"
+        );
+        let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
+        assert_eq!(n_rt * n_ct, self.slots.len(), "reload_tiles must preserve the tile grid");
+        assert!(rts.end <= n_rt && cts.end <= n_ct, "tile region out of grid bounds");
+        let mut written = 0u64;
+        for rt in rts {
+            for ct in cts.clone() {
+                pool.reload_slot(self.slots[rt * n_ct + ct], lin.tile_block(rt, ct))?;
+                written += 1;
+            }
+        }
+        self.lin = lin;
+        Ok(written)
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +440,65 @@ mod tests {
         let want = pool.shard(0).ideal_codes(0, &acts).unwrap();
         assert_eq!(out.codes, want);
         assert_eq!(pool.shard(0).core_weights(0).unwrap().to_signed(), w2);
+    }
+
+    /// Reloading only the dirty tile strip leaves the array bit-identical
+    /// to a full reload when the untouched tiles' codes are unchanged —
+    /// the KV-cache append contract (DESIGN.md §13).
+    #[test]
+    fn partial_reload_matches_full_reload() {
+        let mut cfg = Config::default();
+        cfg.noise.enabled = false;
+        let (k, n) = (130, 20); // 3 row tiles × 2 col tiles
+        let mut rng = Xoshiro256::seeded(21);
+        let mut w1: Vec<f32> =
+            (0..k * n).map(|_| crate::util::rng::Rng::next_f32(&mut rng) - 0.5).collect();
+        // Zero the last row tile: "dead" rows quantize to code 0 under any
+        // scale, so growing into them later changes only that strip.
+        for r in 100..k {
+            for c in 0..n {
+                w1[r * n + c] = 0.0;
+            }
+        }
+        let mut w2 = w1.clone();
+        for r in 100..k {
+            for c in 0..n {
+                w2[r * n + c] = 0.3; // the appended rows
+            }
+        }
+        let max_abs = w2.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let wp = crate::nn::quant::QuantParams::signed(max_abs, cfg.mac.weight_bits);
+        let ap = crate::nn::quant::QuantParams::signed_acts(1.0, cfg.mac.act_bits);
+        let stage = |data: &[f32]| {
+            CimLinear::with_params(
+                &Tensor::from_vec(&[k, n], data.to_vec()),
+                vec![0.0; n],
+                wp,
+                ap,
+                &cfg,
+            )
+        };
+
+        // Board A: place w1, partially reload just row tile 2 with w2.
+        let mut pool_a = MacroPool::new(cfg.clone());
+        let mut placed_a = PlacedLinear::place(stage(&w1), &mut pool_a).unwrap();
+        let written = placed_a.reload_tiles(&mut pool_a, stage(&w2), 2..3, 0..2).unwrap();
+        assert_eq!(written, 2, "one row-tile strip × two col tiles");
+
+        // Board B: place w2 directly (same fab base ⇒ same dies).
+        let mut pool_b = MacroPool::new(cfg.clone());
+        let placed_b = PlacedLinear::place(stage(&w2), &mut pool_b).unwrap();
+        for rt in 0..3 {
+            for ct in 0..2 {
+                let (sa, ca) = pool_a.locate(placed_a.slot(rt, ct));
+                let (sb, cb) = pool_b.locate(placed_b.slot(rt, ct));
+                assert_eq!(
+                    pool_a.shard(sa).core_weights(ca).unwrap().to_signed(),
+                    pool_b.shard(sb).core_weights(cb).unwrap().to_signed(),
+                    "tile ({rt},{ct}) after partial reload"
+                );
+            }
+        }
     }
 
     #[test]

@@ -128,6 +128,97 @@ pub fn device() -> &'static DeviceCounters {
     DEVICE.get_or_init(|| DeviceCounters::new(global()))
 }
 
+/// Cached handles for the autoregressive-decode series (DESIGN.md §13),
+/// fed once per token step at `DecodePlan::finish_step` — the exact point
+/// each session merges its per-step [`ExecStats`] — so the decode series
+/// equal the summed session stats bit for bit (same per-step chunks,
+/// same order; `tests/telemetry_e2e.rs`).
+#[derive(Debug)]
+pub struct DecodeCounters {
+    /// Generation rounds (`ContinuousBatcher::step_all` calls with work).
+    pub steps: Arc<Counter>,
+    /// Token steps executed (one per session per round, prefill included).
+    pub tokens: Arc<Counter>,
+    /// Decode sessions created.
+    pub sessions: Arc<Counter>,
+    /// Sessions currently holding a batcher slot.
+    pub active: Arc<Gauge>,
+    pub core_ops: Arc<Counter>,
+    pub device_cycles: Arc<Counter>,
+    /// Static-grid loads + KV-cache strip/rescale reloads, decode only.
+    pub weight_loads: Arc<Counter>,
+    pub clipped: Arc<Counter>,
+    energy_array_fj: Arc<FloatCounter>,
+    energy_dtc_fj: Arc<FloatCounter>,
+    energy_path_fj: Arc<FloatCounter>,
+    energy_sa_ctrl_fj: Arc<FloatCounter>,
+    /// Derived: exact component re-sum on every record (see
+    /// [`DeviceCounters`] for why a running total would drift).
+    energy_fj_total: Arc<FloatCounter>,
+}
+
+impl DecodeCounters {
+    fn new(reg: &Registry) -> Self {
+        DecodeCounters {
+            steps: reg.counter("cim_decode_steps_total", "Continuous-batching generation rounds"),
+            tokens: reg.counter("cim_decode_tokens_total", "Decoder token steps executed"),
+            sessions: reg.counter("cim_decode_sessions_total", "Decode sessions created"),
+            active: reg.gauge("cim_decode_active_sessions", "Sessions holding a batcher slot"),
+            core_ops: reg.counter("cim_decode_core_ops_total", "Core ops on the decode path"),
+            device_cycles: reg
+                .counter("cim_decode_device_cycles_total", "Device cycles on the decode path"),
+            weight_loads: reg.counter(
+                "cim_decode_weight_loads_total",
+                "Weight tile loads (static grids + KV-cache reloads) on the decode path",
+            ),
+            clipped: reg.counter("cim_decode_clipped_total", "Clipping events on the decode path"),
+            energy_array_fj: reg
+                .float_counter("cim_decode_energy_array_fj_total", "Decode array energy (fJ)"),
+            energy_dtc_fj: reg
+                .float_counter("cim_decode_energy_dtc_fj_total", "Decode DTC energy (fJ)"),
+            energy_path_fj: reg
+                .float_counter("cim_decode_energy_path_fj_total", "Decode pulse-path energy (fJ)"),
+            energy_sa_ctrl_fj: reg.float_counter(
+                "cim_decode_energy_sa_ctrl_fj_total",
+                "Decode sense-amp + control energy (fJ)",
+            ),
+            energy_fj_total: reg.float_counter(
+                "cim_decode_energy_fj_total",
+                "Total decode energy (fJ), exact component re-sum",
+            ),
+        }
+    }
+
+    /// Fold one token step's [`ExecStats`] in and bump the token counter.
+    pub fn record_step(&self, s: &ExecStats) {
+        self.tokens.inc();
+        self.core_ops.add(s.core_ops);
+        self.device_cycles.add(s.total_cycles);
+        self.weight_loads.add(s.weight_loads);
+        self.clipped.add(s.clipped);
+        self.energy_array_fj.add(s.energy.array_fj);
+        self.energy_dtc_fj.add(s.energy.dtc_fj);
+        self.energy_path_fj.add(s.energy.path_fj);
+        self.energy_sa_ctrl_fj.add(s.energy.sa_ctrl_fj);
+        self.energy_fj_total.set(self.energy_fj());
+    }
+
+    /// Exact total-energy re-sum in `EnergyBreakdown::total_fj` order.
+    pub fn energy_fj(&self) -> f64 {
+        self.energy_array_fj.get()
+            + self.energy_dtc_fj.get()
+            + self.energy_path_fj.get()
+            + self.energy_sa_ctrl_fj.get()
+    }
+}
+
+static DECODE: OnceLock<DecodeCounters> = OnceLock::new();
+
+/// Cached process-wide decode counter handles (global registry).
+pub fn decode() -> &'static DecodeCounters {
+    DECODE.get_or_init(|| DecodeCounters::new(global()))
+}
+
 /// Cached per-layer counter handles (`layer`, `kind` labels), created
 /// once at plan-compile time and recorded at the plan's per-layer
 /// `ExecStats` merge points — per-layer cycle/op series therefore equal
@@ -224,6 +315,39 @@ mod tests {
         // re-sum reproduces ExecStats::energy_fj exactly.
         assert_eq!(dev.energy_fj().to_bits(), total.energy_fj().to_bits());
         assert_eq!(dev.energy_fj_total.get().to_bits(), total.energy_fj().to_bits());
+    }
+
+    /// The decode series fold per-step `ExecStats` chunks exactly like the
+    /// device series — same per-component accumulation, same bit-exact
+    /// total re-sum — and count one token per recorded step.
+    #[test]
+    fn decode_counters_track_step_stats_exactly() {
+        let reg = Registry::new();
+        let dec = DecodeCounters::new(&reg);
+        let mut total = ExecStats::default();
+        for i in 0..40u64 {
+            let chunk = ExecStats {
+                core_ops: 2 * i + 1,
+                weight_loads: i % 5,
+                total_cycles: 13 * i,
+                energy: EnergyBreakdown {
+                    array_fj: 0.21 * i as f64,
+                    dtc_fj: 1.0 / (i as f64 + 2.0),
+                    path_fj: 0.5,
+                    sa_ctrl_fj: 0.031 * i as f64 + 0.2,
+                },
+                clipped: i % 4,
+            };
+            total.merge(&chunk);
+            dec.record_step(&chunk);
+        }
+        assert_eq!(dec.tokens.get(), 40);
+        assert_eq!(dec.core_ops.get(), total.core_ops);
+        assert_eq!(dec.device_cycles.get(), total.total_cycles);
+        assert_eq!(dec.weight_loads.get(), total.weight_loads);
+        assert_eq!(dec.clipped.get(), total.clipped);
+        assert_eq!(dec.energy_fj().to_bits(), total.energy_fj().to_bits());
+        assert_eq!(dec.energy_fj_total.get().to_bits(), total.energy_fj().to_bits());
     }
 
     #[test]

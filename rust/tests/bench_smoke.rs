@@ -19,16 +19,16 @@
 use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, JsonField};
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
-use cimsim::cim::timing::finalize_cycles;
+use cimsim::cim::timing::{finalize_cycles, weight_load_cycles};
 use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
-use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
+use cimsim::compiler::{argmax, compile, CompileOptions, DecodePlan, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::mapping::{account_core_op_into, ExecStats, NativeBackend};
 use cimsim::nn::dataset::random_image;
 use cimsim::nn::resnet::ResNet20;
 use cimsim::nn::tensor::Tensor;
-use cimsim::nn::transformer::TransformerBlock;
+use cimsim::nn::transformer::{DecoderModel, TransformerBlock};
 use cimsim::pipeline::{
     noise_stream, run_vector, BatchExecutor, MacroPool, PlacedLinear, StreamCtx, StreamKey,
 };
@@ -553,6 +553,69 @@ fn refresh_telemetry_row() {
     write_rows("BENCH_telemetry.json", &[json_row(&fields)]);
 }
 
+fn refresh_decode_row() {
+    // Same shapes as benches/decode_throughput.rs (single run): a smoke row
+    // describes the exact workload the release bench and the gate use.
+    let (prefill, decode) = (16usize, 48usize);
+    let (d_model, heads, d_ff, layers, vocab) = (16usize, 2usize, 32usize, 2usize, 32usize);
+    let mut cfg = Config::default();
+    cfg.enhance = EnhanceConfig::both();
+    cfg.noise.enabled = false;
+    let max_seq = prefill + decode;
+    let model = DecoderModel::new(d_model, heads, d_ff, vocab, layers, max_seq, 42);
+    let cal: Vec<Vec<usize>> = vec![
+        (0..8).map(|i| (i * 5 + 3) % vocab).collect(),
+        (0..6).map(|i| (i * 7 + 1) % vocab).collect(),
+    ];
+    let plan = DecodePlan::new(model, &cal, &cfg, None).unwrap();
+    let prompt: Vec<usize> = (0..prefill).map(|i| (i * 11 + 2) % vocab).collect();
+
+    let mut s = plan.session(0).unwrap();
+    let t0 = Instant::now();
+    for &t in &prompt[..prefill - 1] {
+        black_box(plan.step(&mut s, t).unwrap());
+    }
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut next = prompt[prefill - 1];
+    let mut token_lat: Vec<f64> = Vec::with_capacity(decode);
+    for _ in 0..decode {
+        let t0 = Instant::now();
+        let logits = plan.step(&mut s, next).unwrap();
+        token_lat.push(t0.elapsed().as_secs_f64());
+        next = argmax(&logits);
+    }
+    let decode_s: f64 = token_lat.iter().sum();
+    token_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let st = s.stats();
+    let reload_frac =
+        (st.weight_loads * weight_load_cycles(&cfg)) as f64 / st.total_cycles.max(1) as f64;
+
+    let mut fields = vec![
+        JsonField::Str("bench", "decode_throughput"),
+        JsonField::Str("config", "prefill16_decode48"),
+        JsonField::Int("d_model", d_model as i64),
+        JsonField::Int("heads", heads as i64),
+        JsonField::Int("d_ff", d_ff as i64),
+        JsonField::Int("layers", layers as i64),
+        JsonField::Int("vocab", vocab as i64),
+        JsonField::Int("prefill", prefill as i64),
+        JsonField::Int("decode", decode as i64),
+        JsonField::Int("runs", 1),
+        JsonField::Int("static_tiles", plan.static_tiles() as i64),
+        JsonField::Num("tok_per_s", decode as f64 / decode_s),
+        JsonField::Num("prefill_ms", prefill_s * 1e3),
+        JsonField::Num("token_p50_ms", cimsim::bench::percentile(&token_lat, 0.50) * 1e3),
+        JsonField::Num("token_p99_ms", cimsim::bench::percentile(&token_lat, 0.99) * 1e3),
+        JsonField::Num("reload_cycle_frac", reload_frac),
+        JsonField::Num(
+            "reloads_per_token",
+            st.weight_loads as f64 / (prefill + decode - 1) as f64,
+        ),
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_decode.json", &[json_row(&fields)]);
+}
+
 /// If `BENCH_baseline.json` is still the bootstrap stub, arm the
 /// bench-regression gate from the freshly-measured rows. Quietly a no-op
 /// when `python3` is unavailable (the CI python job arms it instead).
@@ -612,6 +675,10 @@ fn bench_trajectory_has_no_placeholders() {
     {
         refresh_telemetry_row();
     }
+    if needs_refresh("BENCH_decode.json") || lacks_field("BENCH_decode.json", "reload_cycle_frac")
+    {
+        refresh_decode_row();
+    }
     for f in [
         "BENCH_kernel.json",
         "BENCH_pipeline.json",
@@ -619,6 +686,7 @@ fn bench_trajectory_has_no_placeholders() {
         "BENCH_stream.json",
         "BENCH_attention.json",
         "BENCH_telemetry.json",
+        "BENCH_decode.json",
     ] {
         let text = std::fs::read_to_string(bench_json_path(f)).unwrap();
         assert!(
@@ -635,6 +703,13 @@ fn bench_trajectory_has_no_placeholders() {
     assert!(
         kernel.contains("popcount_batch_ms") && kernel.contains("batch_vs_walk_speedup"),
         "BENCH_kernel.json lacks the popcount-kernel trajectory row"
+    );
+    // The decode trajectory reports throughput with its reload-cycle share
+    // (DESIGN.md §13).
+    let dec = std::fs::read_to_string(bench_json_path("BENCH_decode.json")).unwrap();
+    assert!(
+        dec.contains("tok_per_s") && dec.contains("reload_cycle_frac"),
+        "BENCH_decode.json lacks the decode-throughput trajectory row"
     );
     // The measured telemetry row (from whichever profile wrote it last)
     // must honor the DESIGN.md §12 overhead budget.

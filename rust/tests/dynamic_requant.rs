@@ -1,0 +1,152 @@
+//! Regression tests for dynamic-weight requantization (DESIGN.md §10/§13):
+//!
+//! 1. **Drift bound.** The KV cache's incremental running-max-abs
+//!    requantization never lets a resident weight drift further from its
+//!    float value than the documented bound — half the current scale LSB,
+//!    which is itself ≤ half the one-shot (full-data) scale because the
+//!    running max is monotone and ends AT the one-shot max.
+//! 2. **Golden fixture.** The zp = 0 one-shot reload path
+//!    ([`DynamicLinear::reload`] + full-grid run — the PR-5 attention
+//!    substrate) is pinned bit-for-bit by a generated-on-first-run JSON
+//!    fixture of output f32 bit patterns, so a refactor of the requant
+//!    path cannot silently change its arithmetic.
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::ExecStats;
+use cimsim::nn::quant::QuantParams;
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{DynamicLinear, KvCache, StreamCtx};
+use cimsim::util::rng::{Rng, Xoshiro256};
+use std::path::PathBuf;
+
+fn noise_free_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+    cfg
+}
+
+/// After every append, every live resident code must round-trip to within
+/// half the CURRENT scale of its float value — and since the running max
+/// grows monotonically to exactly the all-data max, the current scale is
+/// bounded by the one-shot calibration scale: the documented drift bound
+/// `|dequant(code) − w| ≤ scale_oneshot / 2`.
+#[test]
+fn running_requant_drift_stays_within_documented_bound() {
+    let cfg = noise_free_cfg();
+    let (d, steps) = (8usize, 10usize);
+    let ap = QuantParams::unsigned(1.0, cfg.mac.act_bits);
+    let mut kv = KvCache::values(&cfg, d, steps, 71, ap).unwrap();
+    let mut stats = ExecStats::default();
+
+    let mut rng = Xoshiro256::seeded(404);
+    let mut slab: Vec<Vec<f32>> = Vec::new();
+    for p in 0..steps {
+        // Growing amplitude forces repeated rescales (worst case for drift).
+        let amp = 0.25 * (p + 1) as f32;
+        let row: Vec<f32> = (0..d).map(|_| (rng.next_f32() - 0.5) * 2.0 * amp).collect();
+        kv.append(&row, &mut stats).unwrap();
+        slab.push(row);
+
+        let wp = kv.w_params();
+        let lin = kv.grid().linear();
+        let (rpt, ept) = (lin.rows_per_tile(), lin.engines_per_tile());
+        for (r, row) in slab.iter().enumerate() {
+            for (c, &w) in row.iter().enumerate() {
+                let code = lin.tile_block(r / rpt, c / ept)[r % rpt][c % ept];
+                let err = (code as f32 * wp.scale - w).abs();
+                assert!(
+                    err <= wp.scale / 2.0 + 1e-6,
+                    "pos {p}: resident weight ({r},{c}) drifted {err} > {}/2",
+                    wp.scale
+                );
+            }
+        }
+    }
+
+    // The running scale ends bit-equal to the one-shot calibration: zero
+    // residual drift once all data has been seen.
+    let flat: Vec<f32> = slab.into_iter().flatten().collect();
+    let one_shot = QuantParams::signed(
+        Tensor::from_vec(&[steps, d], flat).max_abs(),
+        cfg.mac.weight_bits,
+    );
+    assert_eq!(kv.w_params().scale.to_bits(), one_shot.scale.to_bits());
+    assert!(kv.rescales() >= 2, "growing amplitudes must force rescales");
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/dynamic_requant.json")
+}
+
+/// Minimal JSON for the fixture: `{"bits":[u32,...]}`.
+fn render_bits(bits: &[u32]) -> String {
+    let body: Vec<String> = bits.iter().map(|b| b.to_string()).collect();
+    format!("{{\"bits\":[{}]}}\n", body.join(","))
+}
+
+fn parse_bits(s: &str) -> Vec<u32> {
+    let open = s.find('[').expect("fixture missing '['");
+    let close = s.rfind(']').expect("fixture missing ']'");
+    s[open + 1..close]
+        .split(',')
+        .map(|t| t.trim().parse::<u32>().expect("fixture entry"))
+        .collect()
+}
+
+/// Pin the zp = 0 one-shot requant-and-reload path bit-for-bit. The
+/// fixture self-arms: the first run writes the observed f32 bit patterns,
+/// later runs must reproduce them exactly. Delete the file to re-arm
+/// after an INTENTIONAL arithmetic change.
+#[test]
+fn zp_zero_reload_path_matches_golden_fixture() {
+    let cfg = noise_free_cfg();
+    let (k, n) = (100usize, 20usize);
+    // Unsigned activation boundary: zero-point-free (the PR-5 default for
+    // post-ReLU operands).
+    let ap = QuantParams::unsigned(1.0, cfg.mac.act_bits);
+    assert_eq!(ap.zero_point(), 0);
+    let stage = CimLinear::with_params(
+        &Tensor::zeros(&[k, n]),
+        vec![0.0; n],
+        QuantParams::signed(0.0, cfg.mac.weight_bits),
+        ap,
+        &cfg,
+    );
+    let mut dl = DynamicLinear::place(stage, &cfg, 9).unwrap();
+
+    let mut rng = Xoshiro256::seeded(777);
+    let mut stats = ExecStats::default();
+    let mut ctx = StreamCtx::new(&cfg);
+    let mut out_bits: Vec<u32> = Vec::new();
+    for call in 0..3u64 {
+        let w = Tensor::from_vec(
+            &[k, n],
+            (0..k * n).map(|_| (rng.next_f32() - 0.5) * 1.5).collect(),
+        );
+        let x: Vec<f32> = (0..k).map(|i| ((i as f32) * 0.17 + call as f32).sin().abs()).collect();
+        let rows = vec![dl.linear().quantize_acts(&x)];
+        let got = dl
+            .run_item(&w, ap, &rows, 31, call, 0, &mut ctx, &mut stats)
+            .unwrap()
+            .remove(0);
+        out_bits.extend(got.iter().map(|v| v.to_bits()));
+    }
+    assert_eq!(dl.reloads(), 3);
+    assert_eq!(out_bits.len(), 3 * n);
+
+    let path = golden_path();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        let want = parse_bits(&text);
+        assert_eq!(
+            out_bits, want,
+            "zp=0 dynamic reload outputs drifted from the golden fixture {path:?}; \
+             delete the file to re-arm after an intentional change"
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, render_bits(&out_bits)).unwrap();
+        eprintln!("armed golden fixture {path:?} ({} values)", out_bits.len());
+    }
+}

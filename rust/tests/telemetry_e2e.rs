@@ -20,6 +20,12 @@
 //!    coalesced batch holds exactly one item and the served execution is
 //!    chunk-for-chunk identical to the reference `run_streamed_flat`
 //!    calls (same merge order ⇒ same f64 accumulation).
+//!
+//! The same test then serves an autoregressive decoder (`serve_decode`)
+//! and asserts the `cim_decode_*` series (DESIGN.md §13) against a
+//! per-step in-process replay — again scraping BEFORE the replay, which
+//! feeds the very same global decode counters, and again sequential so
+//! the per-step f64 accumulation order is replayable.
 
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
@@ -194,4 +200,108 @@ fn scraped_metrics_equal_reference_exec_stats_exactly() {
             .unwrap_or_else(|| panic!("no scraped series {name}"));
         assert_eq!(got.1, layer.observed().total_cycles, "{name}");
     }
+
+    // ===== decode path: serve --decode, cim_decode_* exactness ==========
+    use cimsim::compiler::DecodePlan;
+    use cimsim::coordinator::serve_decode;
+    use cimsim::nn::transformer::DecoderModel;
+
+    let mut dcfg = Config::default();
+    dcfg.noise.enabled = true; // decode determinism holds noise-on (§13)
+    dcfg.enhance = EnhanceConfig::both();
+    let dec_cal = vec![vec![1usize, 2, 3, 4], vec![5, 6, 7]];
+    let dec_model = || DecoderModel::new(16, 2, 24, 11, 2, 12, 42);
+    let plan_serve = DecodePlan::new(dec_model(), &dec_cal, &dcfg, Some(0xD0)).unwrap();
+    // An identically-constructed plan for the replay (construction is
+    // deterministic, so its sessions are bit-equal to the served ones).
+    let plan_ref = DecodePlan::new(dec_model(), &dec_cal, &dcfg, Some(0xD0)).unwrap();
+
+    let dh = serve_decode(
+        plan_serve,
+        ServeConfig {
+            max_batch: 4,
+            stream: true,
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let dmetrics_addr = dh.metrics_addr().expect("decode metrics listener requested");
+
+    // Strictly sequential requests: the global decode counters then
+    // accumulate per-step chunks in a replayable order (request 0's steps,
+    // then request 1's, …) — the property the energy bit-check needs.
+    let dreqs: [(Vec<usize>, usize); 3] = [(vec![1, 2, 3], 4), (vec![5, 6], 3), (vec![7], 5)];
+    let mut dclient = Client::connect(dh.addr).unwrap();
+    let mut dreplies: Vec<Vec<f32>> = Vec::new();
+    for (prompt, n_gen) in &dreqs {
+        let mut req = vec![*n_gen as f32];
+        req.extend(prompt.iter().map(|&t| t as f32));
+        let out = dclient.infer(&req).unwrap();
+        assert_eq!(out.len(), *n_gen, "decode reply carries the generated tokens");
+        dreplies.push(out);
+    }
+
+    // Scrape BEFORE the in-process reference replay: plan_ref's sessions
+    // feed the very same global cim_decode_* series.
+    let (dstatus, dtext) = http_get(dmetrics_addr, "/metrics");
+    assert!(dstatus.contains("200"), "decode scrape failed: {dstatus}");
+    dh.shutdown();
+
+    // Replay mirroring the served execution exactly: same session ids
+    // (admission order), same token steps, and per-step stats accumulated
+    // component-wise in the same order the telemetry recorder used.
+    let mut ref_tokens = 0u64;
+    let mut ref_ops = 0u64;
+    let mut ref_cycles = 0u64;
+    let mut ref_loads = 0u64;
+    let mut ref_clipped = 0u64;
+    let mut comp = [0f64; 4];
+    for (id, (prompt, n_gen)) in dreqs.iter().enumerate() {
+        let mut s = plan_ref.session(id as u64).unwrap();
+        let mut generated: Vec<usize> = Vec::new();
+        let mut fed = 0usize;
+        while fed < prompt.len() || generated.len() < *n_gen {
+            let tok = if fed < prompt.len() { prompt[fed] } else { *generated.last().unwrap() };
+            plan_ref.step(&mut s, tok).unwrap();
+            let c = s.last_step_stats();
+            ref_tokens += 1;
+            ref_ops += c.core_ops;
+            ref_cycles += c.total_cycles;
+            ref_loads += c.weight_loads;
+            ref_clipped += c.clipped;
+            comp[0] += c.energy.array_fj;
+            comp[1] += c.energy.dtc_fj;
+            comp[2] += c.energy.path_fj;
+            comp[3] += c.energy.sa_ctrl_fj;
+            if fed < prompt.len() {
+                fed += 1;
+            }
+            if fed == prompt.len() && generated.len() < *n_gen {
+                generated.push(cimsim::compiler::argmax(s.last_logits()));
+            }
+        }
+        let served: Vec<usize> = dreplies[id].iter().map(|&v| v as usize).collect();
+        assert_eq!(generated, served, "served tokens must equal the replay (session {id})");
+    }
+    let total_steps: u64 = dreqs.iter().map(|(p, g)| (p.len() + g - 1) as u64).sum();
+    assert_eq!(ref_tokens, total_steps);
+    assert!(ref_loads > 0, "decoding must reload KV strips");
+
+    assert_eq!(series_u64(&dtext, "cim_decode_tokens_total"), ref_tokens, "token steps");
+    // Sequential requests ⇒ every generation round held exactly one item.
+    assert_eq!(series_u64(&dtext, "cim_decode_steps_total"), ref_tokens, "rounds");
+    assert_eq!(series_u64(&dtext, "cim_decode_sessions_total"), dreqs.len() as u64);
+    assert_eq!(series_u64(&dtext, "cim_decode_active_sessions"), 0, "everything drained");
+    assert_eq!(series_u64(&dtext, "cim_decode_core_ops_total"), ref_ops, "decode core ops");
+    assert_eq!(series_u64(&dtext, "cim_decode_device_cycles_total"), ref_cycles, "cycles");
+    assert_eq!(series_u64(&dtext, "cim_decode_weight_loads_total"), ref_loads, "KV reloads");
+    assert_eq!(series_u64(&dtext, "cim_decode_clipped_total"), ref_clipped, "clip events");
+    let ref_energy = comp[0] + comp[1] + comp[2] + comp[3];
+    let got_denergy: f64 = series(&dtext, "cim_decode_energy_fj_total");
+    assert_eq!(
+        got_denergy.to_bits(),
+        ref_energy.to_bits(),
+        "decode energy must round-trip bit-exactly: scraped {got_denergy} vs {ref_energy}"
+    );
 }
