@@ -13,12 +13,19 @@
 //! * `batch`    — the batch-transposed popcount path (`BatchExecutor::run_q`
 //!   routing whole chunks through `prepare_batch`), 1 worker so the
 //!   comparison isolates the kernel, not threading.
+//! * tier sweep — the same batched pass once per *available* SIMD kernel
+//!   tier (DESIGN.md §14: swar, and avx2/avx512/neon where the host has
+//!   them), pinned via `BatchExecutor::set_tier`. Noise-free only: with
+//!   noise every tier routes through the same per-item template kernel.
 //!
 //! With noise on the closed-form envelope does not apply: walk and popcount
 //! collapse onto the same template kernel, and those rows mainly track the
 //! noisy per-op path over time.
 //!
-//! Writes the headline rows to `BENCH_kernel.json` at the repo root.
+//! Writes the headline rows to `BENCH_kernel.json` at the repo root: the
+//! noise-free row gains one `{tier}_batch_ms` field per available tier plus
+//! `simd_vs_popcount_speedup` (popcount batch time over the best SIMD
+//! tier's).
 //! Run: `cargo bench --bench kernel_hotpath` (CIMSIM_BENCH_FAST=1 to trim).
 
 use cimsim::bench::{
@@ -27,7 +34,7 @@ use cimsim::bench::{
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
 use cimsim::cim::timing::finalize_cycles;
-use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
+use cimsim::cim::{golden, CoreOpResult, KernelTier, NoiseDraw, OpScratch};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::nn::tensor::Tensor;
@@ -150,9 +157,11 @@ fn main() {
             }
         });
 
-        // --- per-op popcount kernel (the current default) ---
+        // --- per-op popcount kernel (pinned: the dispatched default may be
+        //     a SIMD tier, and this row is the portable baseline) ---
         let mut op_rng = Xoshiro256::seeded(3);
         let mut scratch = OpScratch::new(&cfg.mac);
+        scratch.set_tier(KernelTier::Popcount);
         let popcount =
             b.run_slow(&format!("popcount per-op 144x32 b{batch} {label}"), 10, || {
                 for acts in &acts_q {
@@ -179,10 +188,40 @@ fn main() {
         // --- batch-transposed popcount (1 worker: isolate the kernel, not
         //     threading; noise-free only — the noisy leg measures the
         //     per-item fallback the executor actually takes) ---
-        let exec = BatchExecutor::new(1, 3);
+        let mut exec = BatchExecutor::new(1, 3);
+        exec.set_tier(KernelTier::Popcount);
         let batched = b.run_slow(&format!("popcount batch  144x32 b{batch} {label}"), 10, || {
             black_box(exec.run_q(&pool, &placed, &acts_q).unwrap());
         });
+
+        // --- SIMD tier sweep (DESIGN.md §14). The dispatcher is a process-
+        //     wide `OnceLock`, so tiers are pinned per executor rather than
+        //     re-read from CIMSIM_KERNEL. ---
+        let mut tier_ms: Vec<(&'static str, f64)> = Vec::new();
+        if !noise {
+            for t in KernelTier::ALL {
+                if !(t.simd() && t.available()) {
+                    continue;
+                }
+                let key = match t {
+                    KernelTier::Swar => "swar_batch_ms",
+                    KernelTier::Avx2 => "avx2_batch_ms",
+                    KernelTier::Avx512 => "avx512_batch_ms",
+                    KernelTier::Neon => "neon_batch_ms",
+                    _ => continue,
+                };
+                let mut exec_t = BatchExecutor::new(1, 3);
+                exec_t.set_tier(t);
+                let m = b.run_slow(
+                    &format!("{:<8} batch  144x32 b{batch} {label}", t.name()),
+                    10,
+                    || {
+                        black_box(exec_t.run_q(&pool, &placed, &acts_q).unwrap());
+                    },
+                );
+                tier_ms.push((key, m.mean_s));
+            }
+        }
 
         let mut fields = vec![
             JsonField::Str("bench", "kernel_hotpath"),
@@ -197,6 +236,14 @@ fn main() {
             JsonField::Num("speedup_vs_walk", walk.mean_s / popcount.mean_s),
             JsonField::Num("batch_vs_walk_speedup", walk.mean_s / batched.mean_s),
         ];
+        for &(key, s) in &tier_ms {
+            fields.push(JsonField::Num(key, s * 1e3));
+        }
+        if let Some(best) =
+            tier_ms.iter().map(|&(_, s)| s).min_by(|a, b| a.partial_cmp(b).unwrap())
+        {
+            fields.push(JsonField::Num("simd_vs_popcount_speedup", batched.mean_s / best));
+        }
         fields.extend(provenance_fields());
         let row = json_row(&fields);
         println!("{row}");

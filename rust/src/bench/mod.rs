@@ -216,11 +216,13 @@ pub fn host_threads() -> i64 {
 }
 
 /// The shared provenance tail every bench row ends with: build profile,
-/// measurement source, host thread count, and the fast-mode flag.
-pub fn provenance_fields() -> [JsonField<'static>; 4] {
+/// measurement source, the dispatched MAC kernel tier, host thread count,
+/// and the fast-mode flag.
+pub fn provenance_fields() -> [JsonField<'static>; 5] {
     [
         JsonField::Str("profile", build_profile()),
         JsonField::Str("source", "measured"),
+        JsonField::Str("kernel", crate::cim::simd::kernel_tier().name()),
         JsonField::Int("threads", host_threads()),
         JsonField::Str("fast", if fast_mode() { "1" } else { "0" }),
     ]

@@ -39,6 +39,9 @@ pub struct OpScratch {
     batch_kernel: BatchKernelScratch,
     /// Per-item phases of the batched kernel.
     batch_phase: Vec<MacPhase>,
+    /// Replay buffer for the batched-prepared fallback path (keeps the warm
+    /// loop allocation-free — DESIGN.md §14).
+    acts_buf: Vec<i64>,
 }
 
 impl OpScratch {
@@ -49,6 +52,7 @@ impl OpScratch {
             kernel: KernelScratch::new(mac),
             batch_kernel: BatchKernelScratch::default(),
             batch_phase: Vec::new(),
+            acts_buf: Vec::new(),
         }
     }
 
@@ -64,6 +68,20 @@ impl OpScratch {
     /// [`KernelScratch::set_row_walk`]. Bench trajectory / test witness only.
     pub fn set_row_walk(&mut self, on: bool) {
         self.kernel.set_row_walk(on);
+    }
+
+    /// Pin both kernels (single-tile and batched) to one tier — see
+    /// [`KernelScratch::set_tier`] (DESIGN.md §14). Panics on a tier this
+    /// host cannot run; persists across prepares.
+    pub fn set_tier(&mut self, tier: crate::cim::simd::KernelTier) {
+        self.kernel.set_tier(tier);
+        self.batch_kernel.set_tier(tier);
+    }
+
+    /// The tier the batched kernel is pinned to.
+    #[inline]
+    pub fn tier(&self) -> crate::cim::simd::KernelTier {
+        self.batch_kernel.tier()
     }
 
     /// Load one activation tile into the kernel scratch (validation, folding,
@@ -286,7 +304,10 @@ impl MacroSim {
         scratch: &mut OpScratch,
         outs: &mut Vec<CoreOpResult>,
     ) -> Result<(), MacroError> {
-        if KernelScratch::closed_form_capable(&self.cfg) && self.fab.is_ideal() {
+        if KernelScratch::closed_form_capable(&self.cfg)
+            && self.fab.is_ideal()
+            && scratch.batch_kernel.tier().batched()
+        {
             return self.core_op_batch_closed_form(core, batch, scratch, outs);
         }
         outs.resize_with(batch.len(), CoreOpResult::default);
@@ -372,21 +393,20 @@ impl MacroSim {
             }
             return Ok(());
         }
-        // Fallback (noise-free but non-ideal fab or non-dyadic gains):
-        // replay each stored tile through the single-tile prepared path.
+        // Fallback (noise-free but non-ideal fab, non-dyadic gains, or a
+        // non-batched tier pin): replay each stored tile through the
+        // single-tile prepared path. The replay goes through the scratch's
+        // reused buffer, not a fresh Vec — the warm loop stays
+        // allocation-free (DESIGN.md §14).
         for i in 0..b {
-            let acts: Vec<i64> = scratch.batch_kernel.item_acts(i).to_vec();
-            scratch.prepare(&self.cfg, &acts)?;
-            mac_phase_prepared_into(
-                &self.cfg,
-                core,
-                w,
-                &self.fab,
-                &scratch.draw,
-                &mut scratch.kernel,
-                &mut scratch.phase,
-            );
-            self.finish_op(core, w, &scratch.phase, &scratch.draw, &mut outs[i]);
+            let OpScratch { draw, phase, kernel, batch_kernel, acts_buf, .. } = scratch;
+            acts_buf.clear();
+            acts_buf.extend_from_slice(batch_kernel.item_acts(i));
+            kernel
+                .prepare(&self.cfg, acts_buf)
+                .map_err(|ActRangeError { row, value }| MacroError::BadAct { row, value })?;
+            mac_phase_prepared_into(&self.cfg, core, w, &self.fab, draw, kernel, phase);
+            self.finish_op(core, w, phase, draw, &mut outs[i]);
         }
         Ok(())
     }

@@ -13,12 +13,14 @@ pub mod engine;
 pub mod golden;
 pub mod macro_unit;
 pub mod noise;
+pub mod simd;
 pub mod timing;
 pub mod weights;
 
 pub use engine::{BatchKernelScratch, KernelScratch, OpStats};
 pub use macro_unit::{CoreOpResult, MacroError, MacroSim, OpScratch};
 pub use noise::{Fabrication, NoiseDraw};
+pub use simd::KernelTier;
 pub use weights::{BitPlanes, CoreWeights};
 
 /// Signal-margin metrics (Fig. 2 right): SM = step − 2σ′ with the step in

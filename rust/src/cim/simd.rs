@@ -1,0 +1,557 @@
+//! Runtime-dispatched SIMD tiers for the bit-plane popcount MAC kernel
+//! (DESIGN.md §14).
+//!
+//! The closed-form kernel (DESIGN.md §11) reduces every (act-bit `j`,
+//! weight-bit `k`) plane pair to two horizontal popcounts over the same
+//! word stream: `total = Σ popcount(a ∧ w)` and `diff = Σ popcount(a ∧ w ∧
+//! x)`, where `x` is the per-engine XOR of the activation-sign and
+//! weight-sign masks (a set bit = the signs disagree, so the product
+//! discharges RBLB). [`and_popcount_split`] is that fused primitive, in
+//! several implementations — "tiers" — selected once per process:
+//!
+//! | tier       | implementation                              | availability |
+//! |------------|---------------------------------------------|--------------|
+//! | `scalar`   | general pulse walk (closed form disabled)   | always       |
+//! | `walk`     | PR-3 per-row `trailing_zeros` walk          | always       |
+//! | `popcount` | per-word `u64::count_ones` loop (PR 6)      | always       |
+//! | `swar`     | batched SWAR nibble counts, Harley-Seal-style deferred reduction | always |
+//! | `avx2`     | Muła nibble-LUT `vpshufb` + `vpsadbw`       | x86-64 with AVX2 |
+//! | `avx512`   | `vpopcntq` (AVX-512 VPOPCNTDQ)              | x86-64 with AVX512F+VPOPCNTDQ, `avx512` cargo feature |
+//! | `neon`     | `vcnt.8` + widening pairwise adds           | aarch64      |
+//!
+//! Every tier accumulates the same integer partials in exact integer
+//! arithmetic — reassociating a sum of popcounts is exact, unlike f64 — so
+//! the final scaled f64 expressions of DESIGN.md §11 are unchanged and all
+//! tiers are bit-identical to the scalar oracle (property-tested in
+//! `tests/kernel_equivalence.rs`).
+//!
+//! Dispatch: [`kernel_tier`] resolves once per process — the
+//! `CIMSIM_KERNEL` environment variable when set (failing fast on an
+//! unknown or unavailable tier; no silent fallback), best-available
+//! detection via `is_x86_feature_detected!` otherwise — caches the choice,
+//! and publishes it as the `cim_kernel_tier` info gauge. Individual
+//! scratches can still be pinned to any *available* tier with `set_tier`
+//! (the bench sweep and the equivalence suite use this).
+
+use std::sync::OnceLock;
+
+/// Longest per-engine word run the kernel routes through the SIMD tiers
+/// using a stack-allocated XOR-stream buffer (64 words = 4096 rows, far
+/// above any configured geometry). Longer runs fall back to the per-word
+/// popcount arm rather than allocating on the hot path.
+pub const MAX_RUN_WORDS: usize = 64;
+
+/// One implementation tier of the MAC kernel. `Scalar`/`Walk`/`Popcount`
+/// name the pre-existing kernel arms (general walk, PR-3 row walk, PR-6
+/// per-word popcount); the rest select [`and_popcount_split`] backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    Scalar,
+    Walk,
+    Popcount,
+    Swar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl KernelTier {
+    pub const ALL: [KernelTier; 7] = [
+        KernelTier::Scalar,
+        KernelTier::Walk,
+        KernelTier::Popcount,
+        KernelTier::Swar,
+        KernelTier::Avx2,
+        KernelTier::Avx512,
+        KernelTier::Neon,
+    ];
+
+    /// Stable lowercase name — the `CIMSIM_KERNEL` value, the telemetry
+    /// gauge label, and the bench-row `kernel` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Walk => "walk",
+            KernelTier::Popcount => "popcount",
+            KernelTier::Swar => "swar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Avx512 => "avx512",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Whether the tier evaluates the closed-form integer path at all
+    /// (`scalar` deliberately disables it to force the general pulse walk).
+    #[inline]
+    pub fn closed_form(self) -> bool {
+        !matches!(self, KernelTier::Scalar)
+    }
+
+    /// Whether the tier supports the batch-transposed kernel
+    /// (`mac_phase_batch_into`); the row walk has no batched arm.
+    #[inline]
+    pub fn batched(self) -> bool {
+        !matches!(self, KernelTier::Scalar | KernelTier::Walk)
+    }
+
+    /// Whether the tier routes plane pairs through [`and_popcount_split`]
+    /// word runs (as opposed to the named pre-existing kernel arms).
+    #[inline]
+    pub fn simd(self) -> bool {
+        matches!(
+            self,
+            KernelTier::Swar | KernelTier::Avx2 | KernelTier::Avx512 | KernelTier::Neon
+        )
+    }
+
+    /// Whether this tier can run on this host *as compiled* (CPU features,
+    /// target architecture, cargo features, Miri).
+    pub fn available(self) -> bool {
+        match self {
+            KernelTier::Scalar | KernelTier::Walk | KernelTier::Popcount | KernelTier::Swar => {
+                true
+            }
+            KernelTier::Avx2 => hw_avx2(),
+            KernelTier::Avx512 => hw_avx512(),
+            KernelTier::Neon => hw_neon(),
+        }
+    }
+
+    /// Human-readable reason a tier is unavailable (used by the fail-fast
+    /// override error). Meaningless for available tiers.
+    pub fn unavailable_reason(self) -> &'static str {
+        if cfg!(miri) && self.simd() && !matches!(self, KernelTier::Swar) {
+            return "hardware SIMD tiers are disabled under Miri";
+        }
+        match self {
+            KernelTier::Avx2 => "host CPU does not report AVX2",
+            KernelTier::Avx512 if cfg!(feature = "avx512") => {
+                "host CPU does not report AVX-512F + VPOPCNTDQ"
+            }
+            KernelTier::Avx512 => "built without the `avx512` cargo feature",
+            KernelTier::Neon => "NEON requires an aarch64 host",
+            _ => "always available",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelTier {
+    type Err = ();
+
+    fn from_str(s: &str) -> Result<Self, ()> {
+        let s = s.trim().to_ascii_lowercase();
+        KernelTier::ALL
+            .iter()
+            .copied()
+            .find(|t| t.name() == s)
+            .ok_or(())
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn hw_avx2() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+fn hw_avx2() -> bool {
+    false
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512", not(miri)))]
+fn hw_avx512() -> bool {
+    std::is_x86_feature_detected!("avx512f")
+        && std::is_x86_feature_detected!("avx512vpopcntdq")
+}
+
+#[cfg(not(all(target_arch = "x86_64", feature = "avx512", not(miri))))]
+fn hw_avx512() -> bool {
+    false
+}
+
+fn hw_neon() -> bool {
+    // NEON is baseline on aarch64 targets; no runtime probe needed.
+    cfg!(all(target_arch = "aarch64", not(miri)))
+}
+
+/// Best tier this host supports: widest vector popcount first, portable
+/// SWAR as the floor.
+pub fn detect() -> KernelTier {
+    if hw_avx512() {
+        KernelTier::Avx512
+    } else if hw_avx2() {
+        KernelTier::Avx2
+    } else if hw_neon() {
+        KernelTier::Neon
+    } else {
+        KernelTier::Swar
+    }
+}
+
+static TIER: OnceLock<KernelTier> = OnceLock::new();
+
+fn resolve() -> Result<KernelTier, String> {
+    match std::env::var("CIMSIM_KERNEL") {
+        Ok(name) => {
+            let tier: KernelTier = name.parse().map_err(|()| {
+                format!(
+                    "CIMSIM_KERNEL={name}: unknown kernel tier (expected one of \
+                     scalar/walk/popcount/swar/avx2/avx512/neon)"
+                )
+            })?;
+            if !tier.available() {
+                return Err(format!(
+                    "CIMSIM_KERNEL={name}: tier `{tier}` is not available on this host \
+                     ({}); refusing to fall back silently",
+                    tier.unavailable_reason()
+                ));
+            }
+            Ok(tier)
+        }
+        Err(_) => Ok(detect()),
+    }
+}
+
+/// The process-wide kernel tier, resolved once (env override or
+/// detection), with the choice published to the `cim_kernel_tier` info
+/// gauge. Errors instead of panicking on a bad `CIMSIM_KERNEL` — the CLI
+/// calls this early to fail fast with a readable message.
+pub fn try_kernel_tier() -> Result<KernelTier, String> {
+    if let Some(&t) = TIER.get() {
+        return Ok(t);
+    }
+    let resolved = resolve()?;
+    let t = *TIER.get_or_init(|| {
+        crate::telemetry::global()
+            .gauge_family(
+                "cim_kernel_tier",
+                "Dispatched MAC kernel tier (info gauge: 1 on the active tier label)",
+                &["tier"],
+            )
+            .with(&[resolved.name()])
+            .set(1);
+        resolved
+    });
+    Ok(t)
+}
+
+/// Infallible form of [`try_kernel_tier`] for library-internal call sites;
+/// panics with the same message on a bad `CIMSIM_KERNEL`.
+pub fn kernel_tier() -> KernelTier {
+    match try_kernel_tier() {
+        Ok(t) => t,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fused AND + popcount horizontal sums over equal-length word runs:
+/// returns `(Σ popcount(a[i] ∧ b[i]), Σ popcount(a[i] ∧ b[i] ∧ x[i]))`.
+///
+/// Exact for every tier — the counts are integers and integer addition
+/// reassociates freely — so tier choice can never change kernel output.
+/// Non-SIMD tiers route to the portable SWAR backend (they never call this
+/// in the kernel, but the primitive stays total for tests and benches).
+#[inline]
+pub fn and_popcount_split(tier: KernelTier, a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), x.len());
+    debug_assert!(tier.available(), "dispatched an unavailable tier");
+    match tier {
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        // SAFETY: `available()` checked AVX2 via `is_x86_feature_detected!`
+        // before this tier could be selected or pinned.
+        KernelTier::Avx2 => unsafe { avx2_split(a, b, x) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512", not(miri)))]
+        // SAFETY: as above, for AVX-512F + VPOPCNTDQ.
+        KernelTier::Avx512 => unsafe { avx512_split(a, b, x) },
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        KernelTier::Neon => neon_split(a, b, x),
+        _ => swar_split(a, b, x),
+    }
+}
+
+/// Per-byte popcounts of `w`, one count per byte lane (0..=8 each): the
+/// classic SWAR reduction stopped before the horizontal multiply.
+#[inline(always)]
+fn nibble_counts(w: u64) -> u64 {
+    let x = w - ((w >> 1) & 0x5555_5555_5555_5555);
+    let x = (x & 0x3333_3333_3333_3333) + ((x >> 2) & 0x3333_3333_3333_3333);
+    (x + (x >> 4)) & 0x0f0f_0f0f_0f0f_0f0f
+}
+
+/// Portable SWAR backend: byte-lane counts accumulate across up to 31
+/// words (8·31 = 248 ≤ 255, no lane overflow) before one widening
+/// horizontal reduction — the Harley-Seal idea of deferring the expensive
+/// reduction across a block, in stable scalar Rust.
+fn swar_split(a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+    const BLOCK: usize = 31;
+    let n = a.len();
+    let (mut total, mut diff) = (0u64, 0u64);
+    let mut i = 0;
+    while i < n {
+        let end = (i + BLOCK).min(n);
+        let (mut am, mut ad) = (0u64, 0u64);
+        while i < end {
+            let m = a[i] & b[i];
+            am += nibble_counts(m);
+            ad += nibble_counts(m & x[i]);
+            i += 1;
+        }
+        total += horizontal_bytes(am);
+        diff += horizontal_bytes(ad);
+    }
+    (total, diff)
+}
+
+/// Sum the 8 byte lanes of a SWAR accumulator. Widen to u16 lanes first:
+/// the lane *sum* can reach 8·248 = 1984, past a byte, so the one-multiply
+/// byte trick would truncate.
+#[inline(always)]
+fn horizontal_bytes(acc: u64) -> u64 {
+    let pairs = (acc & 0x00ff_00ff_00ff_00ff) + ((acc >> 8) & 0x00ff_00ff_00ff_00ff);
+    (pairs.wrapping_mul(0x0001_0001_0001_0001)) >> 48
+}
+
+/// AVX2 backend: Muła's nibble-LUT byte popcount (`vpshufb` against a
+/// 0..=4 table for each nibble) with `vpsadbw` folding the byte counts
+/// into u64 lanes every iteration, 4 words per vector.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_split(a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut accm = _mm256_setzero_si256();
+    let mut accd = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let vx = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let m = _mm256_and_si256(va, vb);
+        let d = _mm256_and_si256(m, vx);
+        let cm = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lut, _mm256_and_si256(m, low)),
+            _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi64::<4>(m), low)),
+        );
+        let cd = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lut, _mm256_and_si256(d, low)),
+            _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi64::<4>(d), low)),
+        );
+        accm = _mm256_add_epi64(accm, _mm256_sad_epu8(cm, zero));
+        accd = _mm256_add_epi64(accd, _mm256_sad_epu8(cd, zero));
+        i += 4;
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accm);
+    let mut total: u64 = lanes.iter().sum();
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accd);
+    let mut diff: u64 = lanes.iter().sum();
+    while i < n {
+        let m = a[i] & b[i];
+        total += m.count_ones() as u64;
+        diff += (m & x[i]).count_ones() as u64;
+        i += 1;
+    }
+    (total, diff)
+}
+
+/// AVX-512 backend: native 64-bit-lane popcount (`vpopcntq`), 8 words per
+/// vector. Compiled only with the off-by-default `avx512` cargo feature
+/// (the intrinsics need a newer stable rustc than the crate's MSRV).
+#[cfg(all(target_arch = "x86_64", feature = "avx512", not(miri)))]
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn avx512_split(a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let mut accm = _mm512_setzero_si512();
+    let mut accd = _mm512_setzero_si512();
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm512_loadu_si512(a.as_ptr().add(i) as *const _);
+        let vb = _mm512_loadu_si512(b.as_ptr().add(i) as *const _);
+        let vx = _mm512_loadu_si512(x.as_ptr().add(i) as *const _);
+        let m = _mm512_and_si512(va, vb);
+        let d = _mm512_and_si512(m, vx);
+        accm = _mm512_add_epi64(accm, _mm512_popcnt_epi64(m));
+        accd = _mm512_add_epi64(accd, _mm512_popcnt_epi64(d));
+        i += 8;
+    }
+    let mut total = _mm512_reduce_add_epi64(accm) as u64;
+    let mut diff = _mm512_reduce_add_epi64(accd) as u64;
+    while i < n {
+        let m = a[i] & b[i];
+        total += m.count_ones() as u64;
+        diff += (m & x[i]).count_ones() as u64;
+        i += 1;
+    }
+    (total, diff)
+}
+
+/// NEON backend: `vcnt.8` byte popcounts with a widening horizontal add
+/// per 2-word vector (byte counts ≤ 8 each; the u16 horizontal sum tops
+/// out at 128, far from overflow).
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+fn neon_split(a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+    use core::arch::aarch64::*;
+    let n = a.len();
+    let (mut total, mut diff) = (0u64, 0u64);
+    let mut i = 0;
+    // SAFETY: NEON is baseline on aarch64; loads stay in-bounds (i + 2 <= n).
+    unsafe {
+        while i + 2 <= n {
+            let m = vandq_u64(vld1q_u64(a.as_ptr().add(i)), vld1q_u64(b.as_ptr().add(i)));
+            let d = vandq_u64(m, vld1q_u64(x.as_ptr().add(i)));
+            total += vaddvq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(m)))) as u64;
+            diff += vaddvq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(d)))) as u64;
+            i += 2;
+        }
+    }
+    while i < n {
+        let m = a[i] & b[i];
+        total += m.count_ones() as u64;
+        diff += (m & x[i]).count_ones() as u64;
+        i += 1;
+    }
+    (total, diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn reference(a: &[u64], b: &[u64], x: &[u64]) -> (u64, u64) {
+        let (mut total, mut diff) = (0u64, 0u64);
+        for i in 0..a.len() {
+            let m = a[i] & b[i];
+            total += m.count_ones() as u64;
+            diff += (m & x[i]).count_ones() as u64;
+        }
+        (total, diff)
+    }
+
+    fn testable_tiers() -> Vec<KernelTier> {
+        KernelTier::ALL
+            .iter()
+            .copied()
+            .filter(|t| t.simd() && t.available())
+            .collect()
+    }
+
+    /// Every available SIMD tier matches the per-word reference on random,
+    /// degenerate, and boundary-length inputs — including lengths around
+    /// the vector width, the SWAR block (31), and a single top-word bit.
+    #[test]
+    fn every_available_tier_matches_reference() {
+        let mut rng = Xoshiro256::seeded(0xC1A0_5EED);
+        let lens =
+            [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 30, 31, 32, 33, 62, 63, 64, 65, 100];
+        for &len in &lens {
+            for pattern in 0..4 {
+                let gen = |rng: &mut Xoshiro256, fill: u64| -> Vec<u64> {
+                    match pattern {
+                        0 => (0..len).map(|_| rng.next_u64()).collect(),
+                        1 => vec![0u64; len],
+                        2 => vec![fill; len],
+                        // Single bit in the top word only.
+                        _ => {
+                            let mut v = vec![0u64; len];
+                            if let Some(last) = v.last_mut() {
+                                *last = 1u64 << (rng.next_below(64));
+                            }
+                            v
+                        }
+                    }
+                };
+                let a = gen(&mut rng, u64::MAX);
+                let b = gen(&mut rng, u64::MAX);
+                let x = gen(&mut rng, 0xAAAA_AAAA_AAAA_AAAA);
+                let want = reference(&a, &b, &x);
+                for tier in testable_tiers() {
+                    let got = and_popcount_split(tier, &a, &b, &x);
+                    assert_eq!(got, want, "tier {tier} len {len} pattern {pattern}");
+                }
+            }
+        }
+    }
+
+    /// All-ones runs longer than one SWAR block stress the byte-lane
+    /// saturation bound (31 words × 8 = 248 per lane) and the widening
+    /// horizontal reduction (block sums up to 1984 > u8).
+    #[test]
+    fn swar_block_boundary_is_exact() {
+        for len in [30usize, 31, 32, 61, 62, 63, 93, 124] {
+            let ones = vec![u64::MAX; len];
+            let (total, diff) = swar_split(&ones, &ones, &ones);
+            assert_eq!(total, 64 * len as u64, "len {len}");
+            assert_eq!(diff, 64 * len as u64, "len {len}");
+            let zeros = vec![0u64; len];
+            assert_eq!(swar_split(&ones, &ones, &zeros), (64 * len as u64, 0));
+        }
+    }
+
+    #[test]
+    fn detect_returns_an_available_simd_tier() {
+        let t = detect();
+        assert!(t.available(), "detected tier must be available");
+        assert!(t.simd(), "detection never picks a scalar arm");
+    }
+
+    #[test]
+    fn tier_names_round_trip_and_unknown_is_rejected() {
+        for t in KernelTier::ALL {
+            assert_eq!(t.name().parse::<KernelTier>(), Ok(t));
+            assert_eq!(t.name().to_uppercase().parse::<KernelTier>(), Ok(t));
+        }
+        assert!("sse9000".parse::<KernelTier>().is_err());
+        assert!("".parse::<KernelTier>().is_err());
+    }
+
+    #[test]
+    fn unavailable_tiers_carry_a_reason() {
+        for t in KernelTier::ALL {
+            if !t.available() {
+                assert!(
+                    !t.unavailable_reason().is_empty(),
+                    "tier {t} must explain its unavailability"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier_capability_flags_are_consistent() {
+        use KernelTier::*;
+        assert!(!Scalar.closed_form() && !Scalar.batched() && !Scalar.simd());
+        assert!(Walk.closed_form() && !Walk.batched() && !Walk.simd());
+        assert!(Popcount.closed_form() && Popcount.batched() && !Popcount.simd());
+        for t in [Swar, Avx2, Avx512, Neon] {
+            assert!(t.closed_form() && t.batched() && t.simd(), "tier {t}");
+        }
+        // The portable floor is unconditionally available.
+        assert!(Swar.available());
+    }
+
+    #[test]
+    fn kernel_tier_resolves_and_is_stable() {
+        // Whatever the environment forced (the CI tier matrix sets
+        // CIMSIM_KERNEL), the resolved tier must be available and cached.
+        let t = kernel_tier();
+        assert!(t.available());
+        assert_eq!(kernel_tier(), t);
+        assert_eq!(try_kernel_tier(), Ok(t));
+    }
+}

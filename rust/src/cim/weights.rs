@@ -121,6 +121,26 @@ impl BitPlanes {
     pub fn val_col(&self, engine: usize) -> &[i16] {
         &self.val[engine * self.rows..(engine + 1) * self.rows]
     }
+
+    /// The whole contiguous word run of the union mask for `engine`
+    /// (length `words`) — the SIMD tiers consume runs, not single words.
+    #[inline]
+    pub fn any_words(&self, engine: usize) -> &[u64] {
+        &self.any[engine * self.words..(engine + 1) * self.words]
+    }
+
+    /// The whole contiguous word run of the positive-sign mask for `engine`.
+    #[inline]
+    pub fn sign_words(&self, engine: usize) -> &[u64] {
+        &self.sign_pos[engine * self.words..(engine + 1) * self.words]
+    }
+
+    /// The whole contiguous word run of the bit-`k` plane for `engine`.
+    #[inline]
+    pub fn plane_words(&self, engine: usize, k: usize) -> &[u64] {
+        let base = (engine * self.kbits + k) * self.words;
+        &self.plane[base..base + self.words]
+    }
 }
 
 /// Weights resident in one core's SRAM array.

@@ -543,11 +543,20 @@ impl CompiledPlan {
         );
         if self.layers[li].is_dynamic() {
             let epoch = self.exec.reserve_epochs(1);
-            let mut ctx = StreamCtx::new(&self.cfg);
+            // Pooled context: per-request dynamic layers (the serve path)
+            // reuse the executor's scratch instead of reallocating one per
+            // call (DESIGN.md §14).
+            let mut ctx = self.exec.acquire_ctx(&self.cfg);
             let mut acc = StageAcc::default();
+            let mut res = Ok(());
             for fl in flights.iter_mut() {
-                self.run_dynamic_layer_item(li, epoch, fl, &mut ctx, &mut acc)?;
+                res = self.run_dynamic_layer_item(li, epoch, fl, &mut ctx, &mut acc);
+                if res.is_err() {
+                    break;
+                }
             }
+            self.exec.release_ctx(ctx);
+            res?;
             let layer = &mut self.layers[li];
             layer.predicted_cycles += acc.predicted;
             layer.observed.merge(&acc.stats);

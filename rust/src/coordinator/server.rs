@@ -687,6 +687,12 @@ fn collect_batch(jobs: &BoundedQueue<Job>, cfg: &ServeConfig) -> Vec<Job> {
 
 fn handle_connection(mut s: TcpStream, jobs: &BoundedQueue<Job>) -> std::io::Result<()> {
     s.set_nodelay(true)?;
+    // Per-connection request/response buffers, reused across the keep-alive
+    // loop: after the first request a connection's steady state allocates
+    // only the Job's input vector it hands off (the job outlives this frame
+    // — DESIGN.md §14).
+    let mut buf: Vec<u8> = Vec::new();
+    let mut out: Vec<u8> = Vec::new();
     loop {
         let mut head = [0u8; 8];
         if s.read_exact(&mut head).is_err() {
@@ -697,7 +703,7 @@ fn handle_connection(mut s: TcpStream, jobs: &BoundedQueue<Job>) -> std::io::Res
         if magic != REQ_MAGIC || n > 1 << 20 {
             return Ok(()); // protocol error: drop connection
         }
-        let mut buf = vec![0u8; n * 4];
+        buf.resize(n * 4, 0);
         s.read_exact(&mut buf)?;
         let input: Vec<f32> = buf
             .chunks_exact(4)
@@ -713,7 +719,7 @@ fn handle_connection(mut s: TcpStream, jobs: &BoundedQueue<Job>) -> std::io::Res
                 Ok(()) => (reply_rx.recv().unwrap_or_default(), false),
                 Err(_job) => (Vec::new(), true),
             };
-        let mut out = Vec::with_capacity(8 + logits.len() * 4);
+        out.clear();
         out.extend_from_slice(&RESP_MAGIC.to_le_bytes());
         out.extend_from_slice(&(logits.len() as u32).to_le_bytes());
         for v in &logits {

@@ -127,10 +127,14 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    // Resolve the MAC kernel tier up front: a bad CIMSIM_KERNEL override
+    // fails fast here with the full error instead of panicking mid-run.
+    let tier = cimsim::cim::simd::try_kernel_tier()?;
     let cfg = build_config(args)?;
     match args.cmd.as_str() {
         "info" => {
             println!("cimsim v{} — {} mode", cimsim::VERSION, cfg.enhance.label());
+            println!("kernel: {tier} (override with CIMSIM_KERNEL=scalar|walk|popcount|swar|avx2|avx512|neon)");
             println!(
                 "macro: {} cores x {} engines x {} rows = {:.0} Kb, {}b:{}b, {}-b readout",
                 cfg.mac.cores, cfg.mac.engines, cfg.mac.rows, cfg.mac.macro_kb(),
@@ -185,6 +189,7 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         "serve" => {
             let mut c = cfg.clone();
             c.enhance = EnhanceConfig::both();
+            println!("kernel tier: {tier}");
             if args.flag("decode") {
                 return serve_decode_demo(args, &c);
             }

@@ -47,6 +47,7 @@ use crate::pipeline::pool::{MacroPool, PlacedLinear};
 use crate::util::rng::{SplitMix64, Xoshiro256};
 use crate::util::threadpool::{default_workers, parallel_chunks};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Derive the dynamic-noise substream for one core op, keyed on
 /// `(seed, epoch, item, tile)` — the determinism contract of DESIGN.md §9.
@@ -80,6 +81,7 @@ pub struct StreamKey {
 /// Reusable per-worker buffers for the vector hot path: one per thread
 /// (executor worker or scheduler stage), never shared across
 /// differently-shaped configurations.
+#[derive(Debug)]
 pub struct StreamCtx {
     scratch: OpScratch,
     op: CoreOpResult,
@@ -124,6 +126,23 @@ pub fn run_vector(
     ctx: &mut StreamCtx,
     stats: &mut ExecStats,
 ) -> Result<Vec<f32>, MapError> {
+    let mut out = Vec::new();
+    run_vector_into(pool, layer, key, acts, ctx, stats, &mut out)?;
+    Ok(out)
+}
+
+/// [`run_vector`] writing into a caller-owned buffer (`out` is resized to
+/// `N` and zero-filled): the warm serve loop reuses one reply row per
+/// connection and performs no allocations (DESIGN.md §14).
+pub fn run_vector_into(
+    pool: &MacroPool,
+    layer: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    ctx: &mut StreamCtx,
+    stats: &mut ExecStats,
+    out: &mut Vec<f32>,
+) -> Result<(), MapError> {
     let lin = layer.linear();
     let (k, n) = (lin.k, lin.n);
     if acts.len() != k {
@@ -135,7 +154,8 @@ pub fn run_vector(
     let deq = lin.a_params.scale * lin.w_params.scale;
 
     ctx.tile_acts.resize(rows, 0);
-    let mut out = vec![0f32; n];
+    out.resize(n, 0.0);
+    out.fill(0.0);
     for rt in 0..n_rt {
         // Tile-granularity span. Disabled cost is one relaxed load per row
         // tile; the guard never touches `rng`, so noisy outputs stay
@@ -187,7 +207,7 @@ pub fn run_vector(
     for (o, b) in out.iter_mut().zip(&lin.bias) {
         *o += b;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// [`run_vector`] over the *live* top-left `live_k × live_n` region of a
@@ -217,6 +237,26 @@ pub fn run_vector_ragged(
     ctx: &mut StreamCtx,
     stats: &mut ExecStats,
 ) -> Result<Vec<f32>, MapError> {
+    let mut out = Vec::new();
+    run_vector_ragged_into(pool, layer, key, acts, live_k, live_n, ctx, stats, &mut out)?;
+    Ok(out)
+}
+
+/// [`run_vector_ragged`] writing into a caller-owned buffer (resized to
+/// `live_n` and zero-filled) — the decode steady state reuses its reply
+/// rows the same way the serve loop does (DESIGN.md §14).
+#[allow(clippy::too_many_arguments)]
+pub fn run_vector_ragged_into(
+    pool: &MacroPool,
+    layer: &PlacedLinear,
+    key: StreamKey,
+    acts: &[i64],
+    live_k: usize,
+    live_n: usize,
+    ctx: &mut StreamCtx,
+    stats: &mut ExecStats,
+    out: &mut Vec<f32>,
+) -> Result<(), MapError> {
     let lin = layer.linear();
     let (k, n) = (lin.k, lin.n);
     if live_k == 0 || live_k > k || live_n == 0 || live_n > n {
@@ -244,7 +284,8 @@ pub fn run_vector_ragged(
     let deq = lin.a_params.scale * lin.w_params.scale;
 
     ctx.tile_acts.resize(rows, 0);
-    let mut out = vec![0f32; live_n];
+    out.resize(live_n, 0.0);
+    out.fill(0.0);
     for rt in 0..n_rt_live {
         let _span = crate::span!("row_tile", "rt" => rt, "item" => key.item);
         let r0 = rt * rows;
@@ -285,7 +326,7 @@ pub fn run_vector_ragged(
     for (o, b) in out.iter_mut().zip(&lin.bias) {
         *o += b;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Run a worker's whole chunk of activation vectors through the
@@ -300,15 +341,17 @@ pub fn run_vector_ragged(
 /// [`run_vector`], so outputs are bit-identical to the per-item path; the
 /// f64 energy tallies in `stats` may reassociate across items (integer
 /// counters are order-independent sums either way).
-fn run_vectors_closed_form(
+fn run_vectors_closed_form_into(
     pool: &MacroPool,
     layer: &PlacedLinear,
     acts_chunk: &[Vec<i64>],
     ctx: &mut StreamCtx,
     stats: &mut ExecStats,
-) -> Result<Vec<Vec<f32>>, MapError> {
+    out: &mut [Vec<f32>],
+) -> Result<(), MapError> {
     let lin = layer.linear();
     let (k, n) = (lin.k, lin.n);
+    debug_assert_eq!(out.len(), acts_chunk.len(), "one output row per item");
     // Item-order shape validation, so the first bad vector reports exactly
     // as it would from the per-item path.
     for acts in acts_chunk {
@@ -325,7 +368,10 @@ fn run_vectors_closed_form(
     let deq = lin.a_params.scale * lin.w_params.scale;
     let b = acts_chunk.len();
 
-    let mut out: Vec<Vec<f32>> = (0..b).map(|_| vec![0f32; n]).collect();
+    for row in out.iter_mut() {
+        row.resize(n, 0.0);
+        row.fill(0.0);
+    }
     ctx.tile_acts_b.resize_with(b, Vec::new);
     for rt in 0..n_rt {
         let r0 = rt * rows;
@@ -374,7 +420,7 @@ fn run_vectors_closed_form(
             *o += bias;
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Batch-parallel runner over a [`MacroPool`]. Each `run_q` call advances
@@ -388,13 +434,55 @@ pub struct BatchExecutor {
     workers: usize,
     seed: u64,
     epoch: AtomicU64,
+    /// Kernel tier override applied to every context this executor hands
+    /// out (`None` runs the dispatched tier). Benches sweep tiers with
+    /// [`BatchExecutor::set_tier`]; the tier-equivalence tests pin the
+    /// batched path; serving leaves it unset.
+    tier: Option<crate::cim::simd::KernelTier>,
+    /// Reusable [`StreamCtx`]s, one acquired per run (or per worker chunk):
+    /// after warmup every run reuses a pooled context instead of
+    /// reallocating scratch state, which is what keeps the serve steady
+    /// state allocation-free (DESIGN.md §14, `tests/alloc_steady_state.rs`).
+    ctxs: Mutex<Vec<StreamCtx>>,
 }
 
 impl BatchExecutor {
     /// `workers == 0` selects `util::threadpool::default_workers()`.
     pub fn new(workers: usize, seed: u64) -> Self {
         let workers = if workers == 0 { default_workers() } else { workers };
-        Self { workers, seed, epoch: AtomicU64::new(0) }
+        Self { workers, seed, epoch: AtomicU64::new(0), tier: None, ctxs: Mutex::new(Vec::new()) }
+    }
+
+    /// Pin every op this executor runs to `tier` (which must be available
+    /// on this host — [`crate::cim::OpScratch::set_tier`] panics otherwise).
+    /// Tiers without a batched kernel arm (scalar, walk) route every batch
+    /// through the per-item path.
+    pub fn set_tier(&mut self, tier: crate::cim::simd::KernelTier) {
+        self.tier = Some(tier);
+        // Drop pooled contexts so none keeps a previously-pinned tier.
+        self.ctxs.lock().expect("ctx pool poisoned").clear();
+    }
+
+    /// The kernel tier this executor's ops run on.
+    pub fn tier(&self) -> crate::cim::simd::KernelTier {
+        self.tier.unwrap_or_else(crate::cim::simd::kernel_tier)
+    }
+
+    /// Take a context from the pool (or build the pool's first few during
+    /// warmup). Contexts are returned via [`BatchExecutor::release_ctx`]
+    /// even on error paths, so the pool converges to one context per
+    /// concurrently-running worker and then stops allocating.
+    pub(crate) fn acquire_ctx(&self, cfg: &Config) -> StreamCtx {
+        let pooled = self.ctxs.lock().expect("ctx pool poisoned").pop();
+        let mut ctx = pooled.unwrap_or_else(|| StreamCtx::new(cfg));
+        if let Some(t) = self.tier {
+            ctx.scratch.set_tier(t);
+        }
+        ctx
+    }
+
+    pub(crate) fn release_ctx(&self, ctx: StreamCtx) {
+        self.ctxs.lock().expect("ctx pool poisoned").push(ctx);
     }
 
     pub fn workers(&self) -> usize {
@@ -434,6 +522,24 @@ impl BatchExecutor {
         self.run_q_at(pool, layer, acts_q, epoch, 0)
     }
 
+    /// [`BatchExecutor::run_q`] writing into caller-owned buffers: `outs`
+    /// is resized to one row per item (rows reused across calls), and the
+    /// op counters are merged into `stats` without clearing it. After
+    /// warmup this path performs zero allocations per call at `workers == 1`
+    /// (DESIGN.md §14, proven by `tests/alloc_steady_state.rs`) — the serve
+    /// loop's steady state.
+    pub fn run_q_into(
+        &self,
+        pool: &MacroPool,
+        layer: &PlacedLinear,
+        acts_q: &[Vec<i64>],
+        outs: &mut Vec<Vec<f32>>,
+        stats: &mut ExecStats,
+    ) -> Result<(), MapError> {
+        let epoch = self.reserve_epochs(1);
+        self.run_q_at_into(pool, layer, acts_q, epoch, 0, outs, stats)
+    }
+
     /// [`BatchExecutor::run_q`] with an explicit epoch and a base item
     /// index: vector `i` of `acts_q` uses substream key
     /// `(seed, epoch, item_base + i, tile)`. The streaming scheduler calls
@@ -447,6 +553,26 @@ impl BatchExecutor {
         epoch: u64,
         item_base: u64,
     ) -> Result<(Vec<Vec<f32>>, ExecStats), MapError> {
+        let mut outs = Vec::new();
+        let mut stats = ExecStats::default();
+        self.run_q_at_into(pool, layer, acts_q, epoch, item_base, &mut outs, &mut stats)?;
+        Ok((outs, stats))
+    }
+
+    /// [`BatchExecutor::run_q_at`] into caller-owned buffers (see
+    /// [`BatchExecutor::run_q_into`]). Bit-identical to the allocating form
+    /// for every worker count: chunking, substream keys, and accumulation
+    /// order are unchanged.
+    pub fn run_q_at_into(
+        &self,
+        pool: &MacroPool,
+        layer: &PlacedLinear,
+        acts_q: &[Vec<i64>],
+        epoch: u64,
+        item_base: u64,
+        outs: &mut Vec<Vec<f32>>,
+        stats: &mut ExecStats,
+    ) -> Result<(), MapError> {
         // Off the per-op path: one counter add + one span guard per run_q
         // call (a whole batch chunk), nothing per item or per tile.
         crate::telemetry::device().exec_items.add(acts_q.len() as u64);
@@ -456,36 +582,82 @@ impl BatchExecutor {
             "epoch" => epoch,
         );
         // Noise-free layers inside the popcount exactness envelope route each
-        // worker's chunk through the batch-transposed kernel (DESIGN.md §11);
-        // noisy layers must replay per-(item, tile) substreams and stay on
-        // the per-item path.
-        let batch_ok =
-            !pool.cfg().noise.enabled && KernelScratch::closed_form_capable(pool.cfg());
+        // worker's chunk through the batch-transposed kernel (DESIGN.md §11)
+        // — provided the dispatched tier has a batched arm; noisy layers must
+        // replay per-(item, tile) substreams and stay on the per-item path.
+        let batch_ok = !pool.cfg().noise.enabled
+            && KernelScratch::closed_form_capable(pool.cfg())
+            && self.tier().batched();
+        outs.resize_with(acts_q.len(), Vec::new);
+
+        if self.workers == 1 || acts_q.len() <= 1 {
+            // Sequential: run inline on a pooled context instead of going
+            // through `parallel_chunks` (whose single-chunk path still
+            // allocates a result Vec) — this is the allocation-free steady
+            // state (DESIGN.md §14).
+            let mut ctx = self.acquire_ctx(pool.cfg());
+            let res = if batch_ok && acts_q.len() > 1 {
+                run_vectors_closed_form_into(pool, layer, acts_q, &mut ctx, stats, outs)
+            } else {
+                let mut res = Ok(());
+                for (i, acts) in acts_q.iter().enumerate() {
+                    let key = StreamKey { seed: self.seed, epoch, item: item_base + i as u64 };
+                    res = run_vector_into(pool, layer, key, acts, &mut ctx, stats, &mut outs[i]);
+                    if res.is_err() {
+                        break;
+                    }
+                }
+                res
+            };
+            self.release_ctx(ctx);
+            return res;
+        }
+
         let chunks = parallel_chunks(acts_q.len(), self.workers, |_w, start, end| {
-            let mut ctx = StreamCtx::new(pool.cfg());
+            let mut ctx = self.acquire_ctx(pool.cfg());
             let mut stats = ExecStats::default();
-            if batch_ok && end - start > 1 {
-                let out_rows =
-                    run_vectors_closed_form(pool, layer, &acts_q[start..end], &mut ctx, &mut stats)?;
-                return Ok((out_rows, stats));
-            }
-            let mut out_rows: Vec<Vec<f32>> = Vec::with_capacity(end - start);
-            for (i, acts) in acts_q[start..end].iter().enumerate() {
-                let key =
-                    StreamKey { seed: self.seed, epoch, item: item_base + (start + i) as u64 };
-                out_rows.push(run_vector(pool, layer, key, acts, &mut ctx, &mut stats)?);
-            }
-            Ok((out_rows, stats))
+            let mut out_rows: Vec<Vec<f32>> = Vec::new();
+            let res = if batch_ok && end - start > 1 {
+                out_rows.resize_with(end - start, Vec::new);
+                run_vectors_closed_form_into(
+                    pool,
+                    layer,
+                    &acts_q[start..end],
+                    &mut ctx,
+                    &mut stats,
+                    &mut out_rows,
+                )
+            } else {
+                let mut res = Ok(());
+                for (i, acts) in acts_q[start..end].iter().enumerate() {
+                    let key = StreamKey {
+                        seed: self.seed,
+                        epoch,
+                        item: item_base + (start + i) as u64,
+                    };
+                    let mut row = Vec::new();
+                    res = run_vector_into(pool, layer, key, acts, &mut ctx, &mut stats, &mut row);
+                    if res.is_err() {
+                        break;
+                    }
+                    out_rows.push(row);
+                }
+                res
+            };
+            self.release_ctx(ctx);
+            res.map(|()| (out_rows, stats))
         });
 
-        let mut all = Vec::with_capacity(acts_q.len());
-        let mut stats = ExecStats::default();
+        let mut idx = 0;
         for chunk in chunks {
             let (rows_out, s) = chunk?;
-            all.extend(rows_out);
+            for row in rows_out {
+                outs[idx] = row;
+                idx += 1;
+            }
             stats.merge(&s);
         }
-        Ok((all, stats))
+        Ok(())
     }
 
     /// Float convenience: quantize with the layer's activation params first.

@@ -53,7 +53,10 @@ pub mod kv_cache;
 pub mod pool;
 
 pub use backend::PoolBackend;
-pub use batch::{noise_stream, run_vector, run_vector_ragged, BatchExecutor, StreamCtx, StreamKey};
+pub use batch::{
+    noise_stream, run_vector, run_vector_into, run_vector_ragged, run_vector_ragged_into,
+    BatchExecutor, StreamCtx, StreamKey,
+};
 pub use deploy::PipelineDeployment;
 pub use dynamic::DynamicLinear;
 pub use kv_cache::KvCache;

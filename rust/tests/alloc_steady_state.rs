@@ -1,0 +1,122 @@
+//! Zero-allocation steady state (DESIGN.md §14): after warmup, the serve
+//! loop's per-request path — `BatchExecutor::run_q_into` at one worker into
+//! caller-owned buffers — performs NO heap allocations, on both the
+//! batch-transposed closed-form leg (noise off) and the per-item template
+//! leg (noise on).
+//!
+//! Proven with a counting `#[global_allocator]` wrapped around `System`:
+//! tracking is off during setup and warmup, then armed for N more requests,
+//! after which the allocation counter must still read zero.
+//!
+//! This file deliberately holds exactly ONE `#[test]`: the counter is
+//! process-global, and a sibling test allocating on another harness thread
+//! inside the tracked window would poison the count.
+
+use cimsim::config::{Config, EnhanceConfig};
+use cimsim::mapping::executor::CimLinear;
+use cimsim::mapping::ExecStats;
+use cimsim::nn::tensor::Tensor;
+use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+use cimsim::util::rng::Xoshiro256;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static TRACK: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    // Frees are legal in the steady state (they cannot grow the heap); only
+    // acquisitions are counted.
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Run `reqs` batched requests through `exec` reusing the same buffers —
+/// the shape of the warm serve loop.
+fn drive(
+    exec: &BatchExecutor,
+    pool: &MacroPool,
+    placed: &PlacedLinear,
+    acts_q: &[Vec<i64>],
+    outs: &mut Vec<Vec<f32>>,
+    stats: &mut ExecStats,
+    reqs: usize,
+) {
+    for _ in 0..reqs {
+        exec.run_q_into(pool, placed, acts_q, outs, stats).unwrap();
+    }
+}
+
+#[test]
+fn warm_serve_requests_do_not_allocate() {
+    let (k, n, batch) = (144usize, 32usize, 8usize);
+    for noise in [false, true] {
+        let mut cfg = Config::default();
+        cfg.enhance = EnhanceConfig::both();
+        cfg.noise.enabled = noise;
+
+        let mut rng = Xoshiro256::seeded(17);
+        let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+        let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+        let acts_q: Vec<Vec<i64>> = (0..batch)
+            .map(|i| {
+                lin.quantize_acts(
+                    &(0..k).map(|j| ((i * 7 + j * 3) % 17) as f32 / 17.0).collect::<Vec<f32>>(),
+                )
+            })
+            .collect();
+        let mut pool = MacroPool::new(cfg.clone());
+        let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+
+        // workers == 1 is the inline steady-state path; more workers hand
+        // chunks to freshly-spawned scoped threads (thread stacks allocate
+        // by construction, so the zero-alloc contract is per-worker).
+        let exec = BatchExecutor::new(1, 9);
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let mut stats = ExecStats::default();
+
+        // Warmup: context pool, output rows, scratch geometry, telemetry
+        // registry — everything allocates here or never.
+        drive(&exec, &pool, &placed, &acts_q, &mut outs, &mut stats, 3);
+
+        ALLOCS.store(0, Ordering::SeqCst);
+        TRACK.store(true, Ordering::SeqCst);
+        drive(&exec, &pool, &placed, &acts_q, &mut outs, &mut stats, 25);
+        TRACK.store(false, Ordering::SeqCst);
+
+        let allocs = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            allocs, 0,
+            "noise={noise}: {allocs} heap allocations across 25 warm serve requests \
+             (DESIGN.md §14 requires an allocation-free steady state)"
+        );
+        assert!(outs.len() == batch && outs.iter().all(|r| r.len() == n));
+    }
+}

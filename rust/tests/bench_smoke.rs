@@ -20,7 +20,7 @@ use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, Jso
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
 use cimsim::cim::timing::{finalize_cycles, weight_load_cycles};
-use cimsim::cim::{golden, CoreOpResult, NoiseDraw, OpScratch};
+use cimsim::cim::{golden, CoreOpResult, KernelTier, NoiseDraw, OpScratch};
 use cimsim::compiler::{argmax, compile, CompileOptions, DecodePlan, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::mapping::executor::CimLinear;
@@ -180,9 +180,11 @@ fn refresh_kernel_row() {
             }
         });
 
-        // Popcount per-op path (the current default kernel, DESIGN.md §11).
+        // Popcount per-op path (DESIGN.md §11), pinned: the dispatched
+        // default may be a SIMD tier and this row is the portable baseline.
         let mut op_rng = Xoshiro256::seeded(3);
         let mut scratch = OpScratch::new(&cfg.mac);
+        scratch.set_tier(KernelTier::Popcount);
         let popcount_s = time_mean(3, || {
             for acts in &acts_q {
                 for rt in 0..n_rt {
@@ -206,10 +208,35 @@ fn refresh_kernel_row() {
         });
 
         // Batch-transposed popcount path (1 worker isolates the kernel).
-        let exec = BatchExecutor::new(1, 3);
+        let mut exec = BatchExecutor::new(1, 3);
+        exec.set_tier(KernelTier::Popcount);
         let batch_s = time_mean(3, || {
             black_box(exec.run_q(&pool, &placed, &acts_q).unwrap());
         });
+
+        // SIMD tier sweep (noise-free only), mirroring
+        // benches/kernel_hotpath.rs: one batched pass per available tier.
+        let mut tier_ms: Vec<(&'static str, f64)> = Vec::new();
+        if !noise {
+            for t in KernelTier::ALL {
+                if !(t.simd() && t.available()) {
+                    continue;
+                }
+                let key = match t {
+                    KernelTier::Swar => "swar_batch_ms",
+                    KernelTier::Avx2 => "avx2_batch_ms",
+                    KernelTier::Avx512 => "avx512_batch_ms",
+                    KernelTier::Neon => "neon_batch_ms",
+                    _ => continue,
+                };
+                let mut exec_t = BatchExecutor::new(1, 3);
+                exec_t.set_tier(t);
+                let s = time_mean(3, || {
+                    black_box(exec_t.run_q(&pool, &placed, &acts_q).unwrap());
+                });
+                tier_ms.push((key, s));
+            }
+        }
 
         let mut fields = vec![
             JsonField::Str("bench", "kernel_hotpath"),
@@ -224,6 +251,14 @@ fn refresh_kernel_row() {
             JsonField::Num("speedup_vs_walk", walk_s / popcount_s),
             JsonField::Num("batch_vs_walk_speedup", walk_s / batch_s),
         ];
+        for &(key, s) in &tier_ms {
+            fields.push(JsonField::Num(key, s * 1e3));
+        }
+        if let Some(best) =
+            tier_ms.iter().map(|&(_, s)| s).min_by(|a, b| a.partial_cmp(b).unwrap())
+        {
+            fields.push(JsonField::Num("simd_vs_popcount_speedup", batch_s / best));
+        }
         fields.extend(provenance_fields());
         rows.push(json_row(&fields));
     }
@@ -651,9 +686,10 @@ fn arm_baseline_if_bootstrap() {
 /// One test (not several) so the six refreshes never race on the files.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
-    // The kernel file also refreshes on schema drift: a measured pre-§11
-    // row has no popcount column and would fail the trajectory assertion.
-    if needs_refresh("BENCH_kernel.json") || lacks_field("BENCH_kernel.json", "popcount_batch_ms")
+    // The kernel file also refreshes on schema drift: a measured pre-§14
+    // row has no SIMD tier columns and would fail the trajectory assertion.
+    if needs_refresh("BENCH_kernel.json")
+        || lacks_field("BENCH_kernel.json", "simd_vs_popcount_speedup")
     {
         refresh_kernel_row();
     }
@@ -703,6 +739,12 @@ fn bench_trajectory_has_no_placeholders() {
     assert!(
         kernel.contains("popcount_batch_ms") && kernel.contains("batch_vs_walk_speedup"),
         "BENCH_kernel.json lacks the popcount-kernel trajectory row"
+    );
+    // The SIMD tier sweep (DESIGN.md §14): the portable SWAR tier is
+    // unconditionally available, so its column must always be present.
+    assert!(
+        kernel.contains("swar_batch_ms") && kernel.contains("simd_vs_popcount_speedup"),
+        "BENCH_kernel.json lacks the SIMD kernel-tier sweep columns"
     );
     // The decode trajectory reports throughput with its reload-cycle share
     // (DESIGN.md §13).

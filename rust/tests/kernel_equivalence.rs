@@ -12,7 +12,7 @@
 use cimsim::cim::adc::readout_into;
 use cimsim::cim::engine::{mac_phase_into, MacPhase};
 use cimsim::cim::timing::finalize_cycles;
-use cimsim::cim::{golden, CoreOpResult, CoreWeights, MacroSim, NoiseDraw, OpScratch};
+use cimsim::cim::{golden, CoreOpResult, CoreWeights, KernelTier, MacroSim, NoiseDraw, OpScratch};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::prop_assert;
 use cimsim::util::proptest::check;
@@ -321,6 +321,158 @@ fn popcount_multithreaded_bit_identity() {
             assert_eq!(got.codes, want[i].codes, "batch workers {workers} op {i}");
             assert_eq!(got.values, want[i].values, "batch workers {workers} op {i}");
             assert_eq!(got.stats, want[i].stats, "batch workers {workers} op {i}");
+        }
+    }
+}
+
+/// Every kernel tier this host can run (DESIGN.md §14). The portable set
+/// (scalar/walk/popcount/swar) is always here; avx2/avx512/neon join on
+/// hosts that have them.
+fn available_tiers() -> Vec<KernelTier> {
+    KernelTier::ALL.iter().copied().filter(|t| t.available()).collect()
+}
+
+/// The tentpole property: EVERY available kernel tier is bit-identical to
+/// the legacy scalar oracle — codes, values, stats — across all four
+/// enhancement modes, noise on and off, and odd geometries (rows not a
+/// multiple of 64), over the same degenerate weight/activation patterns as
+/// the rest of the suite. Exactness argument: every tier accumulates the
+/// same integer popcount partials (integer addition reassociates freely),
+/// so the final f64 expressions are evaluated on identical inputs.
+#[test]
+fn property_every_tier_matches_scalar_oracle() {
+    let tiers = available_tiers();
+    check("tiers-vs-scalar", 48, |g| {
+        let mut cfg = Config::default();
+        // Odd top words (70 = 64+6, 129 = 2·64+1) and one exact multiple.
+        cfg.mac.rows = *g.pick(&[70usize, 129, 128]);
+        cfg.enhance = g.pick(&MODES)();
+        let noise = g.bool();
+        cfg.noise.enabled = noise;
+        let core = g.usize_in(0, cfg.mac.cores - 1);
+        let wp = g.usize_in(0, 3);
+        let ap = g.usize_in(0, 5);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0x71E5);
+        let w_rows = gen_weights(&cfg, &mut rng, wp);
+        let acts = gen_acts(&cfg, &mut rng, ap);
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
+        let w = CoreWeights::from_signed(&cfg.mac, &w_rows).unwrap();
+
+        // One draw, replayed per tier by reseeding: `core_op_into` redraws
+        // from the RNG exactly like `NoiseDraw::draw` (same fill order).
+        let dseed = g.case_seed ^ 0xD0_11;
+        let draw = if noise {
+            NoiseDraw::draw(&cfg.mac, &mut Xoshiro256::seeded(dseed))
+        } else {
+            NoiseDraw::zeros(&cfg.mac)
+        };
+        let want = legacy_core_op(&cfg, &sim, core, &w, &acts, &draw);
+
+        for &tier in &tiers {
+            let mut scratch = OpScratch::new(&cfg.mac);
+            scratch.set_tier(tier);
+            let mut rng_t = Xoshiro256::seeded(dseed);
+            let mut got = CoreOpResult::default();
+            sim.core_op_into(core, &acts, &mut rng_t, &mut scratch, &mut got)
+                .map_err(|e| format!("{e}"))?;
+            let tag = format!(
+                "tier {tier} mode {} noise {noise} rows {} wp {wp} ap {ap}",
+                cfg.enhance.label(),
+                cfg.mac.rows
+            );
+            prop_assert!(got.codes == want.codes, "codes differ ({tag})");
+            prop_assert!(got.values == want.values, "values differ ({tag})");
+            prop_assert!(got.stats == want.stats, "stats differ ({tag})");
+        }
+        Ok(())
+    });
+}
+
+/// The batch-transposed kernel under every batch-capable tier: same tiles,
+/// same scalar-oracle anchor, including the all-zero and single-top-bit
+/// degenerate activations on an odd geometry.
+#[test]
+fn property_batched_tiers_match_scalar_oracle() {
+    let tiers: Vec<KernelTier> =
+        available_tiers().into_iter().filter(|t| t.batched()).collect();
+    check("batched-tiers-vs-scalar", 24, |g| {
+        let mut cfg = Config::default();
+        cfg.mac.rows = 70;
+        cfg.enhance = g.pick(&MODES)();
+        cfg.noise.enabled = false; // the batched envelope is noise-free
+        let core = g.usize_in(0, cfg.mac.cores - 1);
+        let wp = g.usize_in(0, 3);
+
+        let mut rng = Xoshiro256::seeded(g.case_seed ^ 0xBA7C);
+        let w_rows = gen_weights(&cfg, &mut rng, wp);
+        let mut sim = MacroSim::new(cfg.clone());
+        sim.load_core(core, &w_rows).map_err(|e| format!("load: {e}"))?;
+        let w = CoreWeights::from_signed(&cfg.mac, &w_rows).unwrap();
+        let draw = NoiseDraw::zeros(&cfg.mac);
+
+        let batch: Vec<Vec<i64>> = (0..=5).map(|ap| gen_acts(&cfg, &mut rng, ap)).collect();
+        let mut want = Vec::new();
+        for acts in &batch {
+            want.push(legacy_core_op(&cfg, &sim, core, &w, acts, &draw));
+        }
+
+        for &tier in &tiers {
+            let mut scratch = OpScratch::new(&cfg.mac);
+            scratch.set_tier(tier);
+            let mut rng_b = Xoshiro256::seeded(1);
+            let mut outs = Vec::new();
+            sim.core_op_batch_into(core, &batch, &mut rng_b, &mut scratch, &mut outs)
+                .map_err(|e| format!("{e}"))?;
+            for (ap, got) in outs.iter().enumerate() {
+                let tag =
+                    format!("tier {tier} mode {} wp {wp} ap {ap}", cfg.enhance.label());
+                prop_assert!(got.codes == want[ap].codes, "codes differ ({tag})");
+                prop_assert!(got.values == want[ap].values, "values differ ({tag})");
+                prop_assert!(got.stats == want[ap].stats, "stats differ ({tag})");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tier × worker-count invariance through the pooled executor: every
+/// batch-capable tier at 1, 2 and 5 workers produces the same bits as the
+/// popcount tier at 1 worker (transitively anchored to the scalar oracle).
+#[test]
+fn executor_tiers_bit_identical_across_worker_counts() {
+    use cimsim::mapping::executor::CimLinear;
+    use cimsim::nn::tensor::Tensor;
+    use cimsim::pipeline::{BatchExecutor, MacroPool, PlacedLinear};
+
+    let mut cfg = Config::default();
+    cfg.noise.enabled = false;
+    cfg.enhance = EnhanceConfig::both();
+    let (k, n) = (144, 32);
+    let mut rng = Xoshiro256::seeded(31);
+    let w = Tensor::from_vec(&[k, n], (0..k * n).map(|_| rng.next_f32() - 0.5).collect());
+    let lin = CimLinear::new(&w, vec![0.0; n], 1.0, &cfg);
+    let acts_q: Vec<Vec<i64>> = (0..11)
+        .map(|_| {
+            lin.quantize_acts(&(0..k).map(|_| rng.next_f32()).collect::<Vec<f32>>())
+        })
+        .collect();
+    let mut pool = MacroPool::new(cfg.clone());
+    let placed = PlacedLinear::place(lin, &mut pool).unwrap();
+
+    let mut base = BatchExecutor::new(1, 77);
+    base.set_tier(KernelTier::Popcount);
+    base.set_epoch(0);
+    let (want, _) = base.run_q(&pool, &placed, &acts_q).unwrap();
+
+    for tier in available_tiers() {
+        for workers in [1usize, 2, 5] {
+            let mut exec = BatchExecutor::new(workers, 77);
+            exec.set_tier(tier);
+            exec.set_epoch(0);
+            let (got, _) = exec.run_q(&pool, &placed, &acts_q).unwrap();
+            assert_eq!(got, want, "tier {tier} workers {workers}");
         }
     }
 }

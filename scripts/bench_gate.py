@@ -16,8 +16,8 @@ Row identity  : file + every string field except source/note/fast (the
                 row and a nightly full-depth row with different shapes key
                 separately instead of colliding on one baseline entry.
 Gated metrics : any metric with a `_ms` name component (lower is better),
-                *_per_s and speedup* (higher is better) — always floats.
-                Other numeric fields are informational.
+                *_per_s, speedup* and *_speedup (higher is better) —
+                always floats. Other numeric fields are informational.
 Tolerance     : CIMSIM_BENCH_TOL (fractional, default 0.25 = 25%).
 Eligibility   : any row with source=="measured" (debug and release rows
                 both arm the gate, under separate per-profile keys).
@@ -60,7 +60,7 @@ def metric_direction(name):
     # Latency: a '_ms' component anywhere (barrier_p99_ms, forward_ms_per_item).
     if name.endswith("_ms") or "_ms_" in name:
         return "down"
-    if "_per_s" in name or name.startswith("speedup"):
+    if "_per_s" in name or name.startswith("speedup") or name.endswith("_speedup"):
         return "up"
     return None
 
@@ -200,6 +200,8 @@ def self_test():
     assert row_key("f", dict(r1, peak_busy_stages=3)) == row_key("f", dict(r1, peak_busy_stages=7))
     assert row_key("f", dict(r1, workers=4)) == row_key("f", dict(r1, workers=8))
     assert row_key("f", dict(r1, threads=4)) == row_key("f", dict(r1, threads=16))
+    assert row_key("f", dict(r1, kernel="swar")) != row_key("f", dict(r1, kernel="avx2")), \
+        "kernel tiers must baseline separately"
     assert key_profile(row_key("f", r1)) == "release"
     assert key_profile("BENCH_x.json bench=b") is None
     assert eligible({"source": "measured", "profile": "debug"}), \
@@ -210,6 +212,14 @@ def self_test():
     assert metric_direction("est_device_ms_per_img") == "down"
     assert metric_direction("img_per_s") == "up"
     assert metric_direction("tiles") is None
+    # SIMD kernel-tier sweep (BENCH_kernel.json): per-tier batch times gate
+    # downward, the derived vs-popcount ratio gates upward, and the
+    # dispatched-tier provenance string joins the row identity (an avx2 row
+    # must never share a baseline entry with a swar row).
+    assert metric_direction("swar_batch_ms") == "down"
+    assert metric_direction("avx2_batch_ms") == "down"
+    assert metric_direction("batch_vs_walk_speedup") == "up"
+    assert metric_direction("simd_vs_popcount_speedup") == "up"
     # Telemetry-overhead rows: sweep times gate, the derived percentages
     # are informational (a ratio of two gated numbers would double-count).
     assert metric_direction("raw_sweep_ms") == "down"
