@@ -6,7 +6,7 @@
 
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::{argmax, MlpDeployment};
-use cimsim::coordinator::{serve, Client, ServeConfig};
+use cimsim::coordinator::{Client, ServeConfig, ServeFrontend};
 use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::{train, Mlp};
@@ -28,15 +28,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // Serve on the simulated macro with dynamic batching.
     let backend = Box::new(NativeBackend::new(cfg.clone()));
-    let handle = serve(
-        dep,
-        backend,
-        ServeConfig {
-            max_batch: 16,
-            max_wait: std::time::Duration::from_millis(1),
-            ..ServeConfig::default()
-        },
-    )?;
+    let handle = ServeConfig::builder()
+        .max_batch(16)
+        .max_wait(std::time::Duration::from_millis(1))
+        .serve(ServeFrontend::Backend { deployment: dep, backend })?;
     println!("serving on {} (max batch 16, 1 ms window)", handle.addr);
 
     // 8 concurrent clients.

@@ -11,7 +11,7 @@
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::argmax;
-use cimsim::coordinator::{serve_plan, Client, ServeConfig};
+use cimsim::coordinator::{Client, ServeConfig, ServeFrontend};
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::{train, Mlp};
 use cimsim::nn::tensor::Tensor;
@@ -41,12 +41,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // Serve the compiled plan: tiles resident, batch fan-out across workers
     // (worker count is the plan's CompileOptions::workers — 0 = auto).
-    let serve_cfg = ServeConfig {
-        max_batch: 32,
-        max_wait: std::time::Duration::from_millis(1),
-        ..ServeConfig::default()
-    };
-    let handle = serve_plan(plan, serve_cfg)?;
+    let handle = ServeConfig::builder()
+        .max_batch(32)
+        .max_wait(std::time::Duration::from_millis(1))
+        .serve(ServeFrontend::Plan(plan))?;
     println!("serving on {} (compiled plan, max batch 32, 1 ms window)", handle.addr);
 
     // 8 concurrent clients.

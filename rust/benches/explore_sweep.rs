@@ -1,0 +1,58 @@
+//! Design-space exploration throughput (DESIGN.md §15): expand the
+//! built-in default grid, score every candidate on the MLP workload with
+//! the analytic cost model, and mark the Pareto frontier. The headline
+//! metric is `points_per_s` — candidates fully scored per second — which
+//! gates the "no simulation in the inner loop" property: a regression here
+//! means per-candidate work stopped being lower + placement arithmetic.
+//! Writes the row to `BENCH_explore.json`.
+//!
+//! Run: `cargo bench --bench explore_sweep` (CIMSIM_BENCH_FAST=1 to trim).
+
+use cimsim::bench::{bench_json_path, black_box, json_row, provenance_fields, Bench, JsonField};
+use cimsim::explore::{frontier_consistent, run_sweep, SweepSpace, Workload};
+
+fn main() {
+    let b = Bench::default();
+    let fast = std::env::var("CIMSIM_BENCH_FAST").ok().as_deref() == Some("1");
+
+    let space = SweepSpace::default_grid();
+    let workload = Workload::Mlp;
+    let n_candidates = space.len();
+
+    // One checked run up front: the measured loop must be scoring a real,
+    // dominance-consistent sweep, not an early-erroring one.
+    let result = run_sweep(workload, &space).expect("default grid sweeps the MLP workload");
+    assert!(frontier_consistent(&result.points));
+    let n_points = result.points.len();
+    let n_frontier = result.n_frontier;
+    let n_skipped = result.skipped.len();
+
+    let m = b.run_slow(
+        &format!("sweep {n_candidates} candidates (mlp)"),
+        if fast { 3 } else { 8 },
+        || {
+            black_box(run_sweep(workload, &space).unwrap());
+        },
+    );
+
+    let mut fields = vec![
+        JsonField::Str("bench", "explore_sweep"),
+        JsonField::Str("workload", workload.name()),
+        JsonField::Str("space", "default_grid"),
+        JsonField::Int("candidates", n_candidates as i64),
+        JsonField::Int("points", n_points as i64),
+        JsonField::Int("frontier", n_frontier as i64),
+        JsonField::Int("skipped", n_skipped as i64),
+        JsonField::Num("sweep_ms", m.mean_s * 1e3),
+        JsonField::Num("points_per_s", n_points as f64 / m.mean_s),
+    ];
+    fields.extend(provenance_fields());
+    let row = json_row(&fields);
+    println!("{row}");
+
+    let path = bench_json_path("BENCH_explore.json");
+    match std::fs::write(&path, format!("{row}\n")) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -1,19 +1,20 @@
 //! Cycle/throughput model (DESIGN.md §3). One macro op =
 //! 1 precharge cycle + MAC phase (pulse-width dependent) + `adc_bits`
 //! readout cycles. The Fig. 6 throughput range (6.82–8.53 GOPS/Kb) emerges
-//! from the activation-magnitude dependence of the MAC phase.
+//! from the activation-magnitude dependence of the MAC phase. All
+//! functions take the hardware point (`&HwSpec`); a `&Config` coerces.
 
 use crate::cim::engine::OpStats;
-use crate::config::Config;
+use crate::config::HwSpec;
 
 /// Total cycles for a core op with the given MAC-phase cycle count.
 #[inline]
-pub fn op_cycles(cfg: &Config, mac_cycles: u64) -> u64 {
+pub fn op_cycles(cfg: &HwSpec, mac_cycles: u64) -> u64 {
     1 + mac_cycles + cfg.mac.adc_bits as u64
 }
 
 /// Fill `stats.total_cycles` from its MAC-phase fields.
-pub fn finalize_cycles(cfg: &Config, stats: &mut OpStats) {
+pub fn finalize_cycles(cfg: &HwSpec, stats: &mut OpStats) {
     stats.total_cycles = op_cycles(cfg, stats.mac_cycles);
 }
 
@@ -26,7 +27,7 @@ pub fn finalize_cycles(cfg: &Config, stats: &mut OpStats) {
 /// This mirrors `engine::mac_phase_into` width accounting exactly: every
 /// row whose folded activation is non-zero pulses, and the widest pulse is
 /// the top weight-bit SL of the largest effective magnitude.
-pub fn op_cycles_for_acts(cfg: &Config, acts: &[i64]) -> u64 {
+pub fn op_cycles_for_acts(cfg: &HwSpec, acts: &[i64]) -> u64 {
     let kbits = (cfg.mac.weight_bits as usize).saturating_sub(1);
     let s = cfg.enhance.dtc_scale();
     let mut wmax = 0.0f64;
@@ -49,25 +50,25 @@ pub fn op_cycles_for_acts(cfg: &Config, acts: &[i64]) -> u64 {
 /// placed tile charges `weight_load_cycles` to the device total, exactly
 /// like a MAC op charges [`op_cycles`].
 #[inline]
-pub fn weight_load_cycles(cfg: &Config) -> u64 {
+pub fn weight_load_cycles(cfg: &HwSpec) -> u64 {
     cfg.mac.rows as u64
 }
 
 /// Seconds for `cycles` at the configured clock.
 #[inline]
-pub fn cycles_to_seconds(cfg: &Config, cycles: u64) -> f64 {
+pub fn cycles_to_seconds(cfg: &HwSpec, cycles: u64) -> f64 {
     cycles as f64 / (cfg.mac.clock_mhz * 1e6)
 }
 
 /// Throughput in GOPS for one macro op (all cores fire together) that took
 /// `cycles` clock cycles.
-pub fn gops(cfg: &Config, cycles: u64) -> f64 {
+pub fn gops(cfg: &HwSpec, cycles: u64) -> f64 {
     let ops = cfg.mac.ops_per_op() as f64;
     ops / cycles_to_seconds(cfg, cycles) / 1e9
 }
 
 /// Memory-normalized throughput, GOPS/Kb (the Fig. 6 metric).
-pub fn gops_per_kb(cfg: &Config, cycles: u64) -> f64 {
+pub fn gops_per_kb(cfg: &HwSpec, cycles: u64) -> f64 {
     gops(cfg, cycles) / cfg.mac.macro_kb()
 }
 

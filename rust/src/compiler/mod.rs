@@ -71,7 +71,8 @@ pub use decode::{
 };
 pub use ir::{transpose_rows_to_cols, Graph, Node, NodeId, Op};
 pub use lower::{calibrate, lower, Calibration, CompileError, LayerKind, LoweredLayer};
-pub use place::{ActivationProfile, CostReport, LayerCost, Placer};
+pub use place::{ActivationProfile, CostReport, LayerCost, Placer, SlotHost, VirtualPool};
 pub use plan::{
-    compile, CompileOptions, CompiledLayer, CompiledPlan, StreamOptions, StreamOutcome,
+    compile, estimate_cost, estimate_cost_lowered, CompileOptions, CompiledLayer, CompiledPlan,
+    StreamOptions, StreamOutcome,
 };

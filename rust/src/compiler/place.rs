@@ -22,7 +22,7 @@
 
 use crate::cim::engine::OpStats;
 use crate::cim::timing::{self, op_cycles_for_acts, weight_load_cycles};
-use crate::config::Config;
+use crate::config::HwSpec;
 use crate::energy::{core_op_energy, weight_load_energy};
 use crate::mapping::executor::CimLinear;
 use crate::pipeline::dynamic::DynamicLinear;
@@ -40,20 +40,20 @@ pub struct ActivationProfile {
 
 impl ActivationProfile {
     /// Dense random 4-b inputs (the paper's dense measurement condition).
-    pub fn dense(cfg: &Config) -> Self {
+    pub fn dense(cfg: &HwSpec) -> Self {
         Self { density: 1.0, mean_mag: cfg.mac.act_max() as f64 / 2.0 }
     }
 
     /// Post-ReLU-like inputs: half the rows zero, small magnitudes — the
     /// Fig. 5 sparsity operating point and the default for NN layers.
-    pub fn relu_like(cfg: &Config) -> Self {
+    pub fn relu_like(cfg: &HwSpec) -> Self {
         Self { density: 0.5, mean_mag: cfg.mac.act_max() as f64 / 4.0 }
     }
 }
 
 /// Worst-case effective activation magnitude after folding — what the
 /// static cycle estimate schedules for.
-fn worst_eff_mag(cfg: &Config) -> i64 {
+fn worst_eff_mag(cfg: &HwSpec) -> i64 {
     if cfg.enhance.fold {
         cfg.enhance.fold_offset.max(cfg.mac.act_max() - cfg.enhance.fold_offset)
     } else {
@@ -63,7 +63,7 @@ fn worst_eff_mag(cfg: &Config) -> i64 {
 
 /// Worst-case nominal pulse width in τ0 (largest effective magnitude on the
 /// top weight-bit source line).
-fn worst_width_tau0(cfg: &Config) -> f64 {
+fn worst_width_tau0(cfg: &HwSpec) -> f64 {
     let kbits = (cfg.mac.weight_bits as usize).saturating_sub(1);
     if kbits == 0 {
         return 0.0;
@@ -71,15 +71,27 @@ fn worst_width_tau0(cfg: &Config) -> f64 {
     worst_eff_mag(cfg) as f64 * (1u64 << (kbits - 1)) as f64 * cfg.enhance.dtc_scale()
 }
 
+/// Worst-case ADC clipping penalty in bits: how far the largest folded,
+/// DTC-scaled MAC signal overshoots the conversion full scale —
+/// `log2(rows · worst_eff_mag · w_mag_max · s / VPP)`, clamped at 0 when
+/// the signal fits. This is the accuracy-proxy ingredient of the explore
+/// harness (DESIGN.md §15): enhancement gains signal margin for typical
+/// sparse outputs by letting the worst-case output clip.
+pub fn worst_clip_penalty_bits(cfg: &HwSpec) -> f64 {
+    let worst = (cfg.mac.rows as i64 * worst_eff_mag(cfg) * cfg.mac.w_mag_max()) as f64;
+    let ratio = worst * cfg.enhance.dtc_scale() / cfg.mac.vpp_units();
+    ratio.log2().max(0.0)
+}
+
 /// Static worst-case cycle count of one core op (upper bound; exact when
 /// every tile has at least one worst-case-magnitude activation).
-pub fn static_op_cycles(cfg: &Config) -> u64 {
+pub fn static_op_cycles(cfg: &HwSpec) -> u64 {
     timing::op_cycles(cfg, crate::cim::engine::mac_cycles(cfg, worst_width_tau0(cfg)))
 }
 
 /// Estimated activity counters of one core op on a tile whose weights sum
 /// to `sum_abs_w` (Σ|w| over the rows×engines block), under `profile`.
-pub fn estimated_op_stats(cfg: &Config, profile: &ActivationProfile, sum_abs_w: f64) -> OpStats {
+pub fn estimated_op_stats(cfg: &HwSpec, profile: &ActivationProfile, sum_abs_w: f64) -> OpStats {
     let mac = &cfg.mac;
     let kbits = (mac.weight_bits as usize).saturating_sub(1);
     let s = cfg.enhance.dtc_scale();
@@ -116,7 +128,7 @@ pub fn estimated_op_stats(cfg: &Config, profile: &ActivationProfile, sum_abs_w: 
 /// Exact cycle cost of running quantized activation vectors through a tiled
 /// layer: for every vector and row tile, the padded tile's op cycles times
 /// the column-tile count. This is the number the device will report.
-pub fn predicted_tile_cycles(cfg: &Config, lin: &CimLinear, acts_q: &[Vec<i64>]) -> u64 {
+pub fn predicted_tile_cycles(cfg: &HwSpec, lin: &CimLinear, acts_q: &[Vec<i64>]) -> u64 {
     let rows = lin.rows_per_tile();
     let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
     let mut tile = vec![0i64; rows];
@@ -135,7 +147,7 @@ pub fn predicted_tile_cycles(cfg: &Config, lin: &CimLinear, acts_q: &[Vec<i64>])
 }
 
 /// Static per-layer cost estimate, produced at placement time.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerCost {
     pub name: String,
     pub kind: &'static str,
@@ -169,7 +181,7 @@ impl LayerCost {
 }
 
 /// Whole-network placement + cost summary.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CostReport {
     pub layers: Vec<LayerCost>,
     pub total_tiles: usize,
@@ -221,7 +233,7 @@ impl CostReport {
     /// Render the per-layer breakdown (+ totals row) as a table; device
     /// time from the configured clock. Reload cycles (dynamic-weight
     /// layers) are broken out from compute cycles.
-    pub fn table(&self, cfg: &Config) -> Table {
+    pub fn table(&self, cfg: &HwSpec) -> Table {
         let ms = |cycles: u64| cycles as f64 / (cfg.mac.clock_mhz * 1e6) * 1e3;
         let mut t = Table::new(
             &format!(
@@ -273,6 +285,97 @@ impl CostReport {
     }
 }
 
+/// Core-slot accounting the placer packs against. [`MacroPool`] implements
+/// it by building real `MacroSim` shards; [`VirtualPool`] implements the
+/// identical allocation arithmetic with bare counters, so the explore
+/// harness (DESIGN.md §15) can run the exact placement/cost code path for
+/// thousands of candidate `HwSpec`s without instantiating simulators.
+pub trait SlotHost {
+    fn n_shards(&self) -> usize;
+    /// Free (unclaimed) cores on a resident shard (0 for absent shards).
+    fn free_cores_on(&self, shard: usize) -> usize;
+    /// Grow to at least `n_shards` shards.
+    fn grow_to(&mut self, n_shards: usize);
+    /// Claim the first free core on a resident shard (`None` when absent
+    /// or full).
+    fn alloc_slot_on_shard(&mut self, shard: usize) -> Option<usize>;
+}
+
+impl SlotHost for MacroPool {
+    fn n_shards(&self) -> usize {
+        MacroPool::n_shards(self)
+    }
+
+    fn free_cores_on(&self, shard: usize) -> usize {
+        MacroPool::free_cores_on(self, shard)
+    }
+
+    fn grow_to(&mut self, n_shards: usize) {
+        MacroPool::grow_to(self, n_shards)
+    }
+
+    fn alloc_slot_on_shard(&mut self, shard: usize) -> Option<usize> {
+        MacroPool::alloc_slot_on_shard(self, shard)
+    }
+}
+
+/// Counters-only slot host: the allocation state of a [`MacroPool`] (shard
+/// count, per-shard claimed cores, dense slot numbering) without the
+/// simulator shards behind it. Placing a network on a `VirtualPool` visits
+/// the same shard choices — and therefore produces the same [`LayerCost`]s
+/// and [`CostReport`] — as placing it on a real pool of the same geometry.
+#[derive(Clone, Debug)]
+pub struct VirtualPool {
+    cores: usize,
+    used: Vec<usize>,
+}
+
+impl VirtualPool {
+    /// An empty virtual board with `cores` slots per shard.
+    pub fn new(cores: usize) -> Self {
+        Self { cores: cores.max(1), used: Vec::new() }
+    }
+
+    /// Slots claimed so far.
+    pub fn slots_loaded(&self) -> usize {
+        self.used.iter().sum()
+    }
+}
+
+impl SlotHost for VirtualPool {
+    fn n_shards(&self) -> usize {
+        self.used.len()
+    }
+
+    fn free_cores_on(&self, shard: usize) -> usize {
+        self.used.get(shard).map_or(0, |&u| self.cores - u)
+    }
+
+    fn grow_to(&mut self, n_shards: usize) {
+        if self.used.len() < n_shards {
+            self.used.resize(n_shards, 0);
+        }
+    }
+
+    fn alloc_slot_on_shard(&mut self, shard: usize) -> Option<usize> {
+        let cores = self.cores;
+        let u = self.used.get_mut(shard)?;
+        if *u >= cores {
+            return None;
+        }
+        let slot = shard * cores + *u;
+        *u += 1;
+        Some(slot)
+    }
+}
+
+/// Shards a dedicated dynamic-weight mini-pool allocates for `tiles` tiles:
+/// [`crate::pipeline::pool::PlacedLinear::place`] claims slots densely on a
+/// fresh pool, growing one shard per `cores` tiles.
+pub fn dynamic_pool_shards(cfg: &HwSpec, tiles: usize) -> usize {
+    tiles.div_ceil(cfg.mac.cores.max(1))
+}
+
 /// The cost-model-driven placer: packs each tile onto the least-loaded
 /// shard (by accumulated estimated cycles) with a free core, growing the
 /// pool when every resident shard is full. `compile` pre-sizes the pool to
@@ -289,19 +392,22 @@ impl Placer {
         Self { profile, shard_load: Vec::new() }
     }
 
-    /// Place one lowered layer's tiles and return the placed layer plus its
-    /// static cost estimate.
-    pub fn place_layer(
+    /// Pack one lowered layer's tiles onto `host` and return the chosen
+    /// slots (in `(rt, ct)` order) plus the static cost estimate. This is
+    /// the whole placement decision — [`Placer::place_layer`] adds only the
+    /// weight loading, so a [`VirtualPool`] host reproduces a real pool's
+    /// placement and costs exactly.
+    pub fn plan_layer<H: SlotHost>(
         &mut self,
-        pool: &mut MacroPool,
-        lin: CimLinear,
+        host: &mut H,
+        cfg: &HwSpec,
+        lin: &CimLinear,
         name: &str,
         kind: &'static str,
         vectors_per_input: usize,
-    ) -> Result<(PlacedLinear, LayerCost), crate::cim::MacroError> {
-        let cfg = pool.cfg().clone();
+    ) -> (Vec<usize>, LayerCost) {
         let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
-        let op_cycles = static_op_cycles(&cfg);
+        let op_cycles = static_op_cycles(cfg);
         let tile_cost = (op_cycles * vectors_per_input as u64) as f64;
 
         let mut slots = Vec::with_capacity(n_rt * n_ct);
@@ -315,13 +421,13 @@ impl Placer {
                     .flat_map(|row| row.iter())
                     .map(|&w| w.unsigned_abs() as f64)
                     .sum();
-                let st = estimated_op_stats(&cfg, &self.profile, sum_abs_w);
-                est_energy_per_vector += core_op_energy(&cfg, &st).total_fj();
+                let st = estimated_op_stats(cfg, &self.profile, sum_abs_w);
+                est_energy_per_vector += core_op_energy(cfg, &st).total_fj();
 
-                self.shard_load.resize(pool.n_shards().max(self.shard_load.len()), 0.0);
+                self.shard_load.resize(host.n_shards().max(self.shard_load.len()), 0.0);
                 let mut best: Option<usize> = None;
-                for s in 0..pool.n_shards() {
-                    if pool.free_cores_on(s) == 0 {
+                for s in 0..host.n_shards() {
+                    if host.free_cores_on(s) == 0 {
                         continue;
                     }
                     let better = match best {
@@ -335,13 +441,13 @@ impl Placer {
                 let shard = match best {
                     Some(s) => s,
                     None => {
-                        let s = pool.n_shards();
-                        pool.grow_to(s + 1);
+                        let s = host.n_shards();
+                        host.grow_to(s + 1);
                         self.shard_load.resize(s + 1, 0.0);
                         s
                     }
                 };
-                let slot = pool
+                let slot = host
                     .alloc_slot_on_shard(shard)
                     .expect("placer picked a shard with a free core");
                 self.shard_load[shard] += tile_cost;
@@ -365,6 +471,21 @@ impl Placer {
             dynamic: false,
             shards_used: shards_used.len(),
         };
+        (slots, cost)
+    }
+
+    /// Place one lowered layer's tiles and return the placed layer plus its
+    /// static cost estimate.
+    pub fn place_layer(
+        &mut self,
+        pool: &mut MacroPool,
+        lin: CimLinear,
+        name: &str,
+        kind: &'static str,
+        vectors_per_input: usize,
+    ) -> Result<(PlacedLinear, LayerCost), crate::cim::MacroError> {
+        let cfg = pool.cfg().clone();
+        let (slots, cost) = self.plan_layer(pool, &cfg, &lin, name, kind, vectors_per_input);
         let placed = PlacedLinear::place_with(lin, pool, slots)?;
         Ok((placed, cost))
     }
@@ -380,12 +501,30 @@ impl Placer {
     /// (`tiles × weight_load_cycles` + the SRAM write energy).
     pub fn place_dynamic_layer(
         &mut self,
-        cfg: &Config,
+        cfg: &crate::config::Config,
         lin: CimLinear,
         name: &str,
         vectors_per_input: usize,
         fab_base: usize,
     ) -> Result<(DynamicLinear, LayerCost), crate::cim::MacroError> {
+        let mut cost = self.dynamic_layer_cost(cfg, &lin, name, vectors_per_input);
+        let dyn_lin = DynamicLinear::place(lin, cfg, fab_base)?;
+        debug_assert_eq!(cost.shards_used, dyn_lin.pool().n_shards());
+        cost.shards_used = dyn_lin.pool().n_shards();
+        Ok((dyn_lin, cost))
+    }
+
+    /// Static cost estimate of a dynamic-weight layer's grid without
+    /// placing it — the shared primitive of [`Placer::place_dynamic_layer`]
+    /// and the explore harness's virtual scorer. `shards_used` is the
+    /// dedicated mini-pool's [`dynamic_pool_shards`] count.
+    pub fn dynamic_layer_cost(
+        &self,
+        cfg: &HwSpec,
+        lin: &CimLinear,
+        name: &str,
+        vectors_per_input: usize,
+    ) -> LayerCost {
         let (n_rt, n_ct) = (lin.n_row_tiles(), lin.n_col_tiles());
         let tiles = (n_rt * n_ct) as u64;
         let op_cycles = static_op_cycles(cfg);
@@ -394,13 +533,11 @@ impl Placer {
             cfg.mac.rows as f64 * cfg.mac.engines as f64 * cfg.mac.w_mag_max() as f64 / 2.0;
         let st = estimated_op_stats(cfg, &self.profile, sum_abs_w);
         let est_energy_per_vector = tiles as f64 * core_op_energy(cfg, &st).total_fj();
-        let (k, n) = (lin.k, lin.n);
-        let dyn_lin = DynamicLinear::place(lin, cfg, fab_base)?;
-        let cost = LayerCost {
+        LayerCost {
             name: name.to_string(),
             kind: "matmul",
-            k,
-            n,
+            k: lin.k,
+            n: lin.n,
             n_rt,
             n_ct,
             vectors_per_input,
@@ -409,9 +546,8 @@ impl Placer {
             est_reload_cycles_per_input: tiles * weight_load_cycles(cfg),
             est_reload_energy_fj_per_input: weight_load_energy(cfg, tiles).total_fj(),
             dynamic: true,
-            shards_used: dyn_lin.pool().n_shards(),
-        };
-        Ok((dyn_lin, cost))
+            shards_used: dynamic_pool_shards(cfg, n_rt * n_ct),
+        }
     }
 
     /// Accumulated estimated cycles per shard (the balance the placer keeps).

@@ -25,7 +25,9 @@
 
 use crate::compiler::ir::{dequantize, transpose_rows_to_cols, Graph, NodeId, Op};
 use crate::compiler::lower::{calibrate, lower, CompileError, LayerKind, LoweredLayer};
-use crate::compiler::place::{predicted_tile_cycles, ActivationProfile, CostReport, Placer};
+use crate::compiler::place::{
+    predicted_tile_cycles, ActivationProfile, CostReport, Placer, SlotHost, VirtualPool,
+};
 use crate::config::Config;
 use crate::mapping::executor::{patches_to_rows, rows_to_chw, CimLinear};
 use crate::mapping::{ExecStats, MapError};
@@ -344,10 +346,83 @@ pub fn compile(
     })
 }
 
+/// Analytic cost of `graph` on `cfg` without building any simulator state:
+/// calibrates, lowers, and runs [`compile`]'s placement loop against a
+/// counters-only [`VirtualPool`]. The returned report is bit-identical to
+/// `compile(..).cost_report()` for the same inputs (asserted by
+/// `tests/hwspec_explore.rs`) — the exactness claim the explore harness
+/// (DESIGN.md §15) rests on.
+pub fn estimate_cost(
+    graph: &Graph,
+    cal_inputs: &[Tensor],
+    cfg: &Config,
+    opts: &CompileOptions,
+) -> Result<CostReport, CompileError> {
+    let shapes = graph.infer_shapes().map_err(CompileError::Structure)?;
+    check_quantize_structure(graph)?;
+    let cal = calibrate(graph, cal_inputs)?;
+    let lowered = lower(graph, &shapes, &cal, cfg)?;
+    Ok(estimate_cost_lowered(&lowered, cfg, opts))
+}
+
+/// The cost-only core of [`estimate_cost`]: place an already-lowered
+/// network on a [`VirtualPool`] (same pre-sizing, same least-loaded shard
+/// choices, same f64 accumulation order as [`compile`]) and return the
+/// [`CostReport`]. The explore harness calls this once per candidate after
+/// sharing a single calibration pass across the sweep.
+pub fn estimate_cost_lowered(
+    lowered: &[LoweredLayer],
+    cfg: &Config,
+    opts: &CompileOptions,
+) -> CostReport {
+    let mut pool = VirtualPool::new(cfg.mac.cores);
+    let needed_tiles: usize = lowered
+        .iter()
+        .filter(|l| !l.kind.is_dynamic())
+        .map(|l| l.lin.n_row_tiles() * l.lin.n_col_tiles())
+        .sum();
+    pool.grow_to(needed_tiles.div_ceil(cfg.mac.cores.max(1)));
+    let profile = opts.profile.unwrap_or_else(|| ActivationProfile::relu_like(cfg));
+    let mut placer = Placer::new(profile);
+    let mut report_layers = Vec::with_capacity(lowered.len());
+    let mut total_tiles = 0usize;
+    let mut n_dynamic_shards = 0usize;
+    for l in lowered {
+        total_tiles += l.lin.n_row_tiles() * l.lin.n_col_tiles();
+        let cost = if l.kind.is_dynamic() {
+            let cost = placer.dynamic_layer_cost(cfg, &l.lin, &l.name, l.vectors_per_input);
+            n_dynamic_shards += cost.shards_used;
+            cost
+        } else {
+            let kind_label = match l.kind {
+                LayerKind::Conv { .. } => "conv",
+                _ => "linear",
+            };
+            let (_slots, cost) = placer.plan_layer(
+                &mut pool,
+                cfg,
+                &l.lin,
+                &l.name,
+                kind_label,
+                l.vectors_per_input,
+            );
+            cost
+        };
+        report_layers.push(cost);
+    }
+    CostReport {
+        layers: report_layers,
+        total_tiles,
+        n_shards: pool.n_shards(),
+        n_dynamic_shards,
+        weight_kb: total_tiles as f64 * cfg.mac.core_kb(),
+    }
+}
+
 /// `Quantize` nodes may only feed `Conv2d`/`Linear`/`MatMul` streamed
 /// operands (they are fused into the placed layer), may not chain, and may
 /// not be the graph output.
-fn check_quantize_structure(graph: &Graph) -> Result<(), CompileError> {
+pub(crate) fn check_quantize_structure(graph: &Graph) -> Result<(), CompileError> {
     for node in &graph.nodes {
         let is_cim =
             matches!(node.op, Op::Conv2d { .. } | Op::Linear { .. } | Op::MatMul { .. });

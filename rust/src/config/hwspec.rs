@@ -1,0 +1,657 @@
+//! `HwSpec` — one coherent description of a candidate CIM macro.
+//!
+//! Everything the analytic cost model needs to price a hardware point lives
+//! here: array geometry and clocking ([`MacroConfig`]), the signal-margin
+//! enhancement gains ([`EnhanceConfig`]), the calibrated component energy
+//! constants ([`EnergyConfig`]), the published calibration anchors the
+//! energy solver targets ([`CalibAnchors`]), the reference SAR ADC used for
+//! baseline comparisons ([`SarAdcRef`]), and tech-node scaling hooks
+//! ([`TechScale`]). The paper's macro is exactly
+//! [`HwSpec::paper_default()`]; the design-space exploration harness
+//! (`crate::explore`, DESIGN.md §15) sweeps everything else.
+//!
+//! [`crate::config::Config`] embeds an `HwSpec` and derefs to it, so
+//! `cfg.mac.rows`-style access works unchanged across the codebase while
+//! hardware-only consumers (`cim::timing`, `energy`, the placer) can take
+//! `&HwSpec` directly — a `&Config` coerces.
+
+use crate::config::ConfigError;
+use crate::util::tomlcfg::Doc;
+
+/// Macro geometry + clocking. Paper values are the defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MacroConfig {
+    /// Number of analog CIM cores in the macro (paper: 4).
+    pub cores: usize,
+    /// Column-wise dot-product engines per core (paper: 16).
+    pub engines: usize,
+    /// Weight rows accumulated per engine, i.e. the analog accumulation
+    /// parallelism (paper: 64).
+    pub rows: usize,
+    /// Activation precision in bits (paper: 4, unsigned after ReLU).
+    pub act_bits: u32,
+    /// Weight precision in bits incl. sign (paper: 4 = 1 sign + 3 magnitude).
+    pub weight_bits: u32,
+    /// Readout precision of the cell-embedded ADC (paper: 9, signed).
+    pub adc_bits: u32,
+    /// Clock frequency in MHz (paper: 100–200; default to the max).
+    pub clock_mhz: f64,
+    /// DTC LSB as a fraction of the clock period: τ0 = T_clk · tau_frac.
+    pub tau_frac: f64,
+}
+
+impl Default for MacroConfig {
+    fn default() -> Self {
+        Self {
+            cores: 4,
+            engines: 16,
+            rows: 64,
+            act_bits: 4,
+            weight_bits: 4,
+            adc_bits: 9,
+            clock_mhz: 200.0,
+            tau_frac: 1.0 / 16.0,
+        }
+    }
+}
+
+impl MacroConfig {
+    /// Maximum unsigned activation value (15 for 4-b).
+    pub fn act_max(&self) -> i64 {
+        (1i64 << self.act_bits) - 1
+    }
+
+    /// Maximum weight magnitude (7 for 4-b sign-magnitude).
+    pub fn w_mag_max(&self) -> i64 {
+        (1i64 << (self.weight_bits - 1)) - 1
+    }
+
+    /// One-sided MAC dynamic range in product units without folding:
+    /// rows · act_max · w_mag_max (paper: 64·15·7 = 6720).
+    pub fn mac_range(&self) -> i64 {
+        self.rows as i64 * self.act_max() * self.w_mag_max()
+    }
+
+    /// Bit-line voltage headroom VPP_MAC expressed in u. Chosen so that the
+    /// unfolded worst-case MAC exactly fits (scale 1.0): 6720 u.
+    pub fn vpp_units(&self) -> f64 {
+        self.mac_range() as f64
+    }
+
+    /// Differential ADC full-scale in u (RBL−RBLB spans ±VPP).
+    pub fn adc_fullscale_units(&self) -> f64 {
+        2.0 * self.vpp_units()
+    }
+
+    /// Number of ADC output codes (512 for 9-b).
+    pub fn adc_codes(&self) -> i64 {
+        1i64 << self.adc_bits
+    }
+
+    /// ADC LSB in u (fixed in voltage regardless of DTC scale — this is the
+    /// boosted-clipping invariant).
+    pub fn adc_lsb_units(&self) -> f64 {
+        self.adc_fullscale_units() / self.adc_codes() as f64
+    }
+
+    /// Weights stored per core (bits): engines·rows·weight_bits.
+    pub fn core_kb(&self) -> f64 {
+        (self.engines * self.rows * self.weight_bits as usize) as f64 / 1024.0
+    }
+
+    /// Total macro capacity in Kb (paper: 16).
+    pub fn macro_kb(&self) -> f64 {
+        self.core_kb() * self.cores as f64
+    }
+
+    /// MACs per macro operation (all cores fire together).
+    pub fn macs_per_op(&self) -> usize {
+        self.cores * self.engines * self.rows
+    }
+
+    /// Ops per macro operation (1 MAC = 2 ops, the paper's convention).
+    pub fn ops_per_op(&self) -> usize {
+        2 * self.macs_per_op()
+    }
+}
+
+/// Signal-margin enhancement techniques (Fig. 4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnhanceConfig {
+    /// MAC-folding: subtract `fold_offset` from every activation and compute
+    /// in sign-magnitude; restore `fold_offset·ΣW` digitally.
+    pub fold: bool,
+    /// Boosted-clipping: 2× DTC pulse resolution with fixed ADC full scale.
+    pub boost: bool,
+    /// The folded constant (paper: 8 = half the activation range).
+    pub fold_offset: i64,
+    /// DTC gain applied when folding (paper: ×1.87; exactly 13440/7168).
+    pub fold_gain: f64,
+    /// Extra DTC gain applied when boosting (paper: ×2).
+    pub boost_gain: f64,
+}
+
+impl Default for EnhanceConfig {
+    fn default() -> Self {
+        Self {
+            fold: false,
+            boost: false,
+            fold_offset: 8,
+            fold_gain: 1.875,
+            boost_gain: 2.0,
+        }
+    }
+}
+
+impl EnhanceConfig {
+    pub fn both() -> Self {
+        Self { fold: true, boost: true, ..Self::default() }
+    }
+
+    pub fn fold_only() -> Self {
+        Self { fold: true, ..Self::default() }
+    }
+
+    pub fn boost_only() -> Self {
+        Self { boost: true, ..Self::default() }
+    }
+
+    /// Effective DTC time scale s = τ/τ0.
+    pub fn dtc_scale(&self) -> f64 {
+        let mut s = 1.0;
+        if self.fold {
+            s *= self.fold_gain;
+        }
+        if self.boost {
+            s *= self.boost_gain;
+        }
+        s
+    }
+
+    pub fn label(&self) -> &'static str {
+        match (self.fold, self.boost) {
+            (false, false) => "baseline",
+            (true, false) => "fold",
+            (false, true) => "boost",
+            (true, true) => "fold+boost",
+        }
+    }
+}
+
+/// Component energy model constants, all in femtojoules, calibrated so that
+/// dense 4b:4b random workloads measure 95.6 TOPS/W and 90 %-sparse ones
+/// 137.5 TOPS/W, apportioned per the Fig. 7 power breakdown (see
+/// `energy::calibrate`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyConfig {
+    /// Control logic energy per clock cycle per core, fJ.
+    pub e_ctrl_cycle: f64,
+    /// Sense-amp energy per comparison, fJ.
+    pub e_sa_cmp: f64,
+    /// DTC energy per generated pulse (fixed part), fJ.
+    pub e_dtc_pulse: f64,
+    /// DTC + driver energy per τ0-second of pulse width, fJ.
+    pub e_dtc_tau: f64,
+    /// Pulse-path energy per SL toggle, fJ.
+    pub e_path_toggle: f64,
+    /// Bit-line (MOM cap) discharge + precharge-restore energy per u, fJ.
+    pub e_array_unit: f64,
+    /// Fixed per-op array overhead (ADC readout discharge + precharge), fJ.
+    pub e_array_fixed: f64,
+    /// SRAM write energy per weight bit, fJ — the dynamic-weight reload
+    /// cost (DESIGN.md §10). Not calibrated against the paper (it reports
+    /// no write energy); a representative 28 nm SRAM write figure.
+    pub e_w_write: f64,
+    /// Area of the 16 Kb reference macro in mm² (paper: consistent 0.121
+    /// from both ends of the 790–1136 TOPS/W/mm² range). Other capacities
+    /// scale it linearly via [`HwSpec::macro_area_mm2`].
+    pub area_mm2: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        // Frozen output of `cimsim calibrate` (see energy::calibrate tests).
+        Self {
+            e_ctrl_cycle: 25.5018,
+            e_sa_cmp: 2.0,
+            e_dtc_pulse: 7.9163,
+            e_dtc_tau: 0.423183,
+            e_path_toggle: 10.00279,
+            e_array_unit: 0.0116119,
+            e_array_fixed: 12269.08,
+            e_w_write: 1.2,
+            area_mm2: 0.121,
+        }
+    }
+}
+
+/// Published calibration anchors the energy solver (`energy::calibrate`)
+/// targets: the paper's two measured efficiency points and the Fig. 7
+/// power breakdown. These used to live as loose `pub const`s in
+/// `energy::calibrate`; scoping them here lets a swept candidate carry its
+/// own anchors (e.g. a ReRAM-flavored backend with a different breakdown).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibAnchors {
+    /// Measured dense (0 % sparsity) efficiency anchor, TOPS/W (paper: 95.6).
+    pub dense_tops_w: f64,
+    /// Measured sparse efficiency anchor, TOPS/W (paper: 137.5).
+    pub sparse_tops_w: f64,
+    /// Input-activation sparsity of the sparse anchor (paper: 90 %).
+    pub sparse_fraction: f64,
+    /// Fig. 7 average power breakdown at the dense anchor, fractions of the
+    /// total in the order `[array, pulse path, DTC, SA + control]`.
+    pub power_split: [f64; 4],
+    /// Sense-amp comparison energy pinned during solving, fJ (the SA share
+    /// is folded into the control term of the split).
+    pub e_sa_fj: f64,
+    /// Fraction of the DTC power attributed to fixed per-pulse cost (the
+    /// remainder scales with pulse width).
+    pub dtc_pulse_split: f64,
+}
+
+impl Default for CalibAnchors {
+    fn default() -> Self {
+        Self {
+            dense_tops_w: 95.6,
+            sparse_tops_w: 137.5,
+            sparse_fraction: 0.9,
+            power_split: [0.6475, 0.1793, 0.1419, 0.0313],
+            e_sa_fj: 2.0,
+            dtc_pulse_split: 0.5,
+        }
+    }
+}
+
+/// Reference 40 nm SAR ADC used by the published-baseline comparisons
+/// (`energy::baselines`): a conventional readout to normalize competing
+/// macros against. Previously the loose `SAR_*` consts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SarAdcRef {
+    /// Unit DAC capacitance, fF.
+    pub cu_ff: f64,
+    /// Supply voltage, V.
+    pub vdd: f64,
+    /// Comparator + logic energy per decision, fJ.
+    pub e_cmp_fj: f64,
+}
+
+impl Default for SarAdcRef {
+    fn default() -> Self {
+        Self { cu_ff: 1.8, vdd: 0.9, e_cmp_fj: 5.0 }
+    }
+}
+
+/// Tech-node scaling hooks for swept candidates. The calibrated energy
+/// constants describe the paper's 28 nm silicon; a sweep point at another
+/// node multiplies them wholesale rather than re-deriving each one. Scales
+/// are folded into the constants once by [`HwSpec::normalized`]; the paper
+/// default's unit scales make normalization the identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TechScale {
+    /// Nominal process node, nm (informational; joins sweep reports).
+    pub node_nm: f64,
+    /// Multiplier applied to every energy constant (CV² scaling).
+    pub energy_scale: f64,
+    /// Multiplier applied to the reference macro area.
+    pub area_scale: f64,
+}
+
+impl Default for TechScale {
+    fn default() -> Self {
+        Self { node_nm: 28.0, energy_scale: 1.0, area_scale: 1.0 }
+    }
+}
+
+/// One complete candidate hardware point: everything the analytic cost
+/// model consumes, and nothing the simulator-only layers (noise, runtime
+/// knobs) need. See the module docs for the field groups.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HwSpec {
+    pub mac: MacroConfig,
+    pub enhance: EnhanceConfig,
+    pub energy: EnergyConfig,
+    pub anchors: CalibAnchors,
+    pub sar: SarAdcRef,
+    pub tech: TechScale,
+}
+
+impl HwSpec {
+    /// The measured silicon of the source paper: 16 Kb, 4 cores × 16
+    /// engines × 64 rows, 9-b cell-embedded ADC, 200 MHz, with the frozen
+    /// calibrated energy constants. Identical to `HwSpec::default()`; the
+    /// named constructor exists so call sites state intent and tests can
+    /// assert the equivalence.
+    pub fn paper_default() -> Self {
+        Self::default()
+    }
+
+    /// Total silicon area of one macro instance in mm²: `energy.area_mm2`
+    /// prices the paper's 16 Kb reference, capacity scales it linearly, and
+    /// `tech.area_scale` rescales for other nodes.
+    pub fn macro_area_mm2(&self) -> f64 {
+        self.energy.area_mm2 * (self.mac.macro_kb() / 16.0) * self.tech.area_scale
+    }
+
+    /// Fold the tech-node hooks into the constants they scale, returning a
+    /// spec with unit scales. Sweep candidates normalize once at load, so
+    /// the cost model itself never special-cases tech scaling; the paper
+    /// default is a fixed point of this map.
+    pub fn normalized(&self) -> Self {
+        let mut s = self.clone();
+        let es = s.tech.energy_scale;
+        s.energy.e_ctrl_cycle *= es;
+        s.energy.e_sa_cmp *= es;
+        s.energy.e_dtc_pulse *= es;
+        s.energy.e_dtc_tau *= es;
+        s.energy.e_path_toggle *= es;
+        s.energy.e_array_unit *= es;
+        s.energy.e_array_fixed *= es;
+        s.energy.e_w_write *= es;
+        s.energy.area_mm2 *= s.tech.area_scale;
+        s.tech.energy_scale = 1.0;
+        s.tech.area_scale = 1.0;
+        s
+    }
+
+    /// Overlay recognized hardware keys from a parsed TOML document. The
+    /// caller (`Config::overlay` or the explore sweep loader) has already
+    /// rejected unknown keys against [`HW_KEYS`].
+    pub fn overlay(&mut self, doc: &Doc) -> Result<(), ConfigError> {
+        macro_rules! ov {
+            ($field:expr, usize, $key:expr) => {
+                if let Some(v) = doc.usize($key) { $field = v; }
+            };
+            ($field:expr, u32, $key:expr) => {
+                if let Some(v) = doc.i64($key) { $field = v as u32; }
+            };
+            ($field:expr, i64, $key:expr) => {
+                if let Some(v) = doc.i64($key) { $field = v; }
+            };
+            ($field:expr, f64, $key:expr) => {
+                if let Some(v) = doc.f64($key) { $field = v; }
+            };
+            ($field:expr, bool, $key:expr) => {
+                if let Some(v) = doc.bool($key) { $field = v; }
+            };
+        }
+        ov!(self.mac.cores, usize, "macro.cores");
+        ov!(self.mac.engines, usize, "macro.engines");
+        ov!(self.mac.rows, usize, "macro.rows");
+        ov!(self.mac.act_bits, u32, "macro.act_bits");
+        ov!(self.mac.weight_bits, u32, "macro.weight_bits");
+        ov!(self.mac.adc_bits, u32, "macro.adc_bits");
+        ov!(self.mac.clock_mhz, f64, "macro.clock_mhz");
+        ov!(self.mac.tau_frac, f64, "macro.tau_frac");
+        ov!(self.enhance.fold, bool, "enhance.fold");
+        ov!(self.enhance.boost, bool, "enhance.boost");
+        ov!(self.enhance.fold_offset, i64, "enhance.fold_offset");
+        ov!(self.enhance.fold_gain, f64, "enhance.fold_gain");
+        ov!(self.enhance.boost_gain, f64, "enhance.boost_gain");
+        ov!(self.energy.e_ctrl_cycle, f64, "energy.e_ctrl_cycle");
+        ov!(self.energy.e_sa_cmp, f64, "energy.e_sa_cmp");
+        ov!(self.energy.e_dtc_pulse, f64, "energy.e_dtc_pulse");
+        ov!(self.energy.e_dtc_tau, f64, "energy.e_dtc_tau");
+        ov!(self.energy.e_path_toggle, f64, "energy.e_path_toggle");
+        ov!(self.energy.e_array_unit, f64, "energy.e_array_unit");
+        ov!(self.energy.e_array_fixed, f64, "energy.e_array_fixed");
+        ov!(self.energy.e_w_write, f64, "energy.e_w_write");
+        ov!(self.energy.area_mm2, f64, "energy.area_mm2");
+        ov!(self.anchors.dense_tops_w, f64, "anchors.dense_tops_w");
+        ov!(self.anchors.sparse_tops_w, f64, "anchors.sparse_tops_w");
+        ov!(self.anchors.sparse_fraction, f64, "anchors.sparse_fraction");
+        ov!(self.anchors.power_split[0], f64, "anchors.split_array");
+        ov!(self.anchors.power_split[1], f64, "anchors.split_path");
+        ov!(self.anchors.power_split[2], f64, "anchors.split_dtc");
+        ov!(self.anchors.power_split[3], f64, "anchors.split_sactrl");
+        ov!(self.anchors.e_sa_fj, f64, "anchors.e_sa_fj");
+        ov!(self.anchors.dtc_pulse_split, f64, "anchors.dtc_pulse_split");
+        ov!(self.sar.cu_ff, f64, "sar.cu_ff");
+        ov!(self.sar.vdd, f64, "sar.vdd");
+        ov!(self.sar.e_cmp_fj, f64, "sar.e_cmp_fj");
+        ov!(self.tech.node_nm, f64, "tech.node_nm");
+        ov!(self.tech.energy_scale, f64, "tech.energy_scale");
+        ov!(self.tech.area_scale, f64, "tech.area_scale");
+        Ok(())
+    }
+
+    /// Serialize every hardware key as TOML that [`HwSpec::overlay`]
+    /// re-reads exactly (floats print in Rust's shortest round-trip form).
+    /// This is the explore harness's provenance format: each Pareto point
+    /// records the spec that produced it.
+    pub fn to_toml(&self) -> String {
+        let m = &self.mac;
+        let e = &self.enhance;
+        let en = &self.energy;
+        let a = &self.anchors;
+        let s = &self.sar;
+        let t = &self.tech;
+        format!(
+            "[macro]\n\
+             cores = {}\nengines = {}\nrows = {}\n\
+             act_bits = {}\nweight_bits = {}\nadc_bits = {}\n\
+             clock_mhz = {}\ntau_frac = {}\n\
+             \n[enhance]\n\
+             fold = {}\nboost = {}\nfold_offset = {}\n\
+             fold_gain = {}\nboost_gain = {}\n\
+             \n[energy]\n\
+             e_ctrl_cycle = {}\ne_sa_cmp = {}\ne_dtc_pulse = {}\n\
+             e_dtc_tau = {}\ne_path_toggle = {}\ne_array_unit = {}\n\
+             e_array_fixed = {}\ne_w_write = {}\narea_mm2 = {}\n\
+             \n[anchors]\n\
+             dense_tops_w = {}\nsparse_tops_w = {}\nsparse_fraction = {}\n\
+             split_array = {}\nsplit_path = {}\nsplit_dtc = {}\nsplit_sactrl = {}\n\
+             e_sa_fj = {}\ndtc_pulse_split = {}\n\
+             \n[sar]\n\
+             cu_ff = {}\nvdd = {}\ne_cmp_fj = {}\n\
+             \n[tech]\n\
+             node_nm = {}\nenergy_scale = {}\narea_scale = {}\n",
+            m.cores,
+            m.engines,
+            m.rows,
+            m.act_bits,
+            m.weight_bits,
+            m.adc_bits,
+            m.clock_mhz,
+            m.tau_frac,
+            e.fold,
+            e.boost,
+            e.fold_offset,
+            e.fold_gain,
+            e.boost_gain,
+            en.e_ctrl_cycle,
+            en.e_sa_cmp,
+            en.e_dtc_pulse,
+            en.e_dtc_tau,
+            en.e_path_toggle,
+            en.e_array_unit,
+            en.e_array_fixed,
+            en.e_w_write,
+            en.area_mm2,
+            a.dense_tops_w,
+            a.sparse_tops_w,
+            a.sparse_fraction,
+            a.power_split[0],
+            a.power_split[1],
+            a.power_split[2],
+            a.power_split[3],
+            a.e_sa_fj,
+            a.dtc_pulse_split,
+            s.cu_ff,
+            s.vdd,
+            s.e_cmp_fj,
+            t.node_nm,
+            t.energy_scale,
+            t.area_scale,
+        )
+    }
+
+    /// Validate the hardware description (geometry, precision ranges,
+    /// gains, anchors, scales). `Config::validate` adds the noise checks.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let inv = |m: String| Err(ConfigError::Invalid(m));
+        if self.mac.cores == 0 || self.mac.engines == 0 || self.mac.rows == 0 {
+            return inv("macro geometry must be non-zero".into());
+        }
+        if !(1..=8).contains(&self.mac.act_bits) {
+            return inv(format!("act_bits {} out of range 1..=8", self.mac.act_bits));
+        }
+        if !(2..=8).contains(&self.mac.weight_bits) {
+            return inv(format!("weight_bits {} out of range 2..=8", self.mac.weight_bits));
+        }
+        if !(4..=12).contains(&self.mac.adc_bits) {
+            return inv(format!("adc_bits {} out of range 4..=12", self.mac.adc_bits));
+        }
+        if self.mac.clock_mhz <= 0.0 || self.mac.tau_frac <= 0.0 {
+            return inv("clock_mhz and tau_frac must be positive".into());
+        }
+        if self.enhance.fold_offset < 0 || self.enhance.fold_offset > self.mac.act_max() {
+            return inv(format!(
+                "fold_offset {} outside activation range",
+                self.enhance.fold_offset
+            ));
+        }
+        if self.enhance.fold_gain <= 0.0 || self.enhance.boost_gain <= 0.0 {
+            return inv("enhancement gains must be positive".into());
+        }
+        if self.anchors.dense_tops_w <= 0.0 || self.anchors.sparse_tops_w <= 0.0 {
+            return inv("anchor efficiencies must be positive".into());
+        }
+        if !(0.0..1.0).contains(&self.anchors.sparse_fraction) {
+            return inv(format!(
+                "anchors.sparse_fraction {} out of range [0, 1)",
+                self.anchors.sparse_fraction
+            ));
+        }
+        let split_sum: f64 = self.anchors.power_split.iter().sum();
+        if self.anchors.power_split.iter().any(|&f| f <= 0.0)
+            || (split_sum - 1.0).abs() > 1e-6
+        {
+            return inv(format!(
+                "anchors power split must be positive fractions summing to 1 (got sum {split_sum})"
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.anchors.dtc_pulse_split) {
+            return inv("anchors.dtc_pulse_split must be in [0, 1]".into());
+        }
+        if self.sar.cu_ff <= 0.0 || self.sar.vdd <= 0.0 || self.sar.e_cmp_fj <= 0.0 {
+            return inv("sar reference parameters must be positive".into());
+        }
+        if self.tech.node_nm <= 0.0
+            || self.tech.energy_scale <= 0.0
+            || self.tech.area_scale <= 0.0
+        {
+            return inv("tech node and scales must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Every TOML key [`HwSpec::overlay`] consumes, grouped by section. The
+/// `Config` overlay and the explore sweep loader both reject anything else
+/// so typos never silently fall back to defaults.
+pub const HW_KEYS: &[&str] = &[
+    "macro.cores",
+    "macro.engines",
+    "macro.rows",
+    "macro.act_bits",
+    "macro.weight_bits",
+    "macro.adc_bits",
+    "macro.clock_mhz",
+    "macro.tau_frac",
+    "enhance.fold",
+    "enhance.boost",
+    "enhance.fold_offset",
+    "enhance.fold_gain",
+    "enhance.boost_gain",
+    "energy.e_ctrl_cycle",
+    "energy.e_sa_cmp",
+    "energy.e_dtc_pulse",
+    "energy.e_dtc_tau",
+    "energy.e_path_toggle",
+    "energy.e_array_unit",
+    "energy.e_array_fixed",
+    "energy.e_w_write",
+    "energy.area_mm2",
+    "anchors.dense_tops_w",
+    "anchors.sparse_tops_w",
+    "anchors.sparse_fraction",
+    "anchors.split_array",
+    "anchors.split_path",
+    "anchors.split_dtc",
+    "anchors.split_sactrl",
+    "anchors.e_sa_fj",
+    "anchors.dtc_pulse_split",
+    "sar.cu_ff",
+    "sar.vdd",
+    "sar.e_cmp_fj",
+    "tech.node_nm",
+    "tech.energy_scale",
+    "tech.area_scale",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_default_and_valid() {
+        let hw = HwSpec::paper_default();
+        assert_eq!(hw, HwSpec::default());
+        hw.validate().unwrap();
+        assert!((hw.macro_area_mm2() - 0.121).abs() < 1e-12);
+        // The anchors carry the paper's published numbers.
+        assert_eq!(hw.anchors.dense_tops_w, 95.6);
+        assert_eq!(hw.anchors.sparse_tops_w, 137.5);
+        assert!((hw.anchors.power_split.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalization_is_identity_at_unit_scales() {
+        let hw = HwSpec::paper_default();
+        assert_eq!(hw.normalized(), hw);
+    }
+
+    #[test]
+    fn normalization_folds_tech_scales() {
+        let mut hw = HwSpec::paper_default();
+        hw.tech.energy_scale = 0.5;
+        hw.tech.area_scale = 2.0;
+        let n = hw.normalized();
+        assert_eq!(n.tech.energy_scale, 1.0);
+        assert_eq!(n.tech.area_scale, 1.0);
+        assert!((n.energy.e_ctrl_cycle - hw.energy.e_ctrl_cycle * 0.5).abs() < 1e-12);
+        assert!((n.energy.area_mm2 - hw.energy.area_mm2 * 2.0).abs() < 1e-12);
+        // Folding then measuring equals measuring with the hooks live.
+        assert!((n.macro_area_mm2() - hw.macro_area_mm2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_serialization_round_trips() {
+        let mut hw = HwSpec::paper_default();
+        hw.mac.rows = 128;
+        hw.mac.adc_bits = 7;
+        hw.enhance.fold = true;
+        hw.energy.e_w_write = 2.625;
+        hw.anchors.sparse_fraction = 0.875;
+        hw.tech.node_nm = 16.0;
+        let text = hw.to_toml();
+        let doc = Doc::parse(&text).unwrap();
+        for k in doc.keys() {
+            assert!(HW_KEYS.contains(&k), "serializer emitted unknown key {k}");
+        }
+        let mut back = HwSpec::default();
+        back.overlay(&doc).unwrap();
+        assert_eq!(back, hw);
+        // And the serializer emits every known key, so defaults can't hide.
+        for k in HW_KEYS {
+            assert!(doc.get(k).is_some(), "serializer dropped {k}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_anchor_split() {
+        let mut hw = HwSpec::paper_default();
+        hw.anchors.power_split = [0.5, 0.2, 0.2, 0.2];
+        assert!(hw.validate().is_err());
+    }
+}

@@ -13,169 +13,20 @@
 //! With these normalizations, one unit of the ideal product `act·|w|`
 //! discharges exactly `scale` u, where `scale` is the configured DTC gain
 //! (1.0 baseline, ×1.875 with MAC-folding, ×2 with boosted-clipping).
+//!
+//! The hardware description itself lives in [`HwSpec`] (DESIGN.md §15):
+//! [`Config`] embeds one under `hw` and [derefs](std::ops::Deref) to it, so
+//! `cfg.mac.rows`-style access keeps working while the analytic layers
+//! (`cim::timing`, `energy`, the placer) take `&HwSpec` directly.
+
+mod hwspec;
+
+pub use hwspec::{
+    CalibAnchors, EnergyConfig, EnhanceConfig, HwSpec, MacroConfig, SarAdcRef, TechScale, HW_KEYS,
+};
 
 use crate::util::tomlcfg::Doc;
 use std::path::Path;
-
-/// Macro geometry + clocking. Paper values are the defaults.
-#[derive(Clone, Debug, PartialEq)]
-pub struct MacroConfig {
-    /// Number of analog CIM cores in the macro (paper: 4).
-    pub cores: usize,
-    /// Column-wise dot-product engines per core (paper: 16).
-    pub engines: usize,
-    /// Weight rows accumulated per engine, i.e. the analog accumulation
-    /// parallelism (paper: 64).
-    pub rows: usize,
-    /// Activation precision in bits (paper: 4, unsigned after ReLU).
-    pub act_bits: u32,
-    /// Weight precision in bits incl. sign (paper: 4 = 1 sign + 3 magnitude).
-    pub weight_bits: u32,
-    /// Readout precision of the cell-embedded ADC (paper: 9, signed).
-    pub adc_bits: u32,
-    /// Clock frequency in MHz (paper: 100–200; default to the max).
-    pub clock_mhz: f64,
-    /// DTC LSB as a fraction of the clock period: τ0 = T_clk · tau_frac.
-    pub tau_frac: f64,
-}
-
-impl Default for MacroConfig {
-    fn default() -> Self {
-        Self {
-            cores: 4,
-            engines: 16,
-            rows: 64,
-            act_bits: 4,
-            weight_bits: 4,
-            adc_bits: 9,
-            clock_mhz: 200.0,
-            tau_frac: 1.0 / 16.0,
-        }
-    }
-}
-
-impl MacroConfig {
-    /// Maximum unsigned activation value (15 for 4-b).
-    pub fn act_max(&self) -> i64 {
-        (1i64 << self.act_bits) - 1
-    }
-
-    /// Maximum weight magnitude (7 for 4-b sign-magnitude).
-    pub fn w_mag_max(&self) -> i64 {
-        (1i64 << (self.weight_bits - 1)) - 1
-    }
-
-    /// One-sided MAC dynamic range in product units without folding:
-    /// rows · act_max · w_mag_max (paper: 64·15·7 = 6720).
-    pub fn mac_range(&self) -> i64 {
-        self.rows as i64 * self.act_max() * self.w_mag_max()
-    }
-
-    /// Bit-line voltage headroom VPP_MAC expressed in u. Chosen so that the
-    /// unfolded worst-case MAC exactly fits (scale 1.0): 6720 u.
-    pub fn vpp_units(&self) -> f64 {
-        self.mac_range() as f64
-    }
-
-    /// Differential ADC full-scale in u (RBL−RBLB spans ±VPP).
-    pub fn adc_fullscale_units(&self) -> f64 {
-        2.0 * self.vpp_units()
-    }
-
-    /// Number of ADC output codes (512 for 9-b).
-    pub fn adc_codes(&self) -> i64 {
-        1i64 << self.adc_bits
-    }
-
-    /// ADC LSB in u (fixed in voltage regardless of DTC scale — this is the
-    /// boosted-clipping invariant).
-    pub fn adc_lsb_units(&self) -> f64 {
-        self.adc_fullscale_units() / self.adc_codes() as f64
-    }
-
-    /// Weights stored per core (bits): engines·rows·weight_bits.
-    pub fn core_kb(&self) -> f64 {
-        (self.engines * self.rows * self.weight_bits as usize) as f64 / 1024.0
-    }
-
-    /// Total macro capacity in Kb (paper: 16).
-    pub fn macro_kb(&self) -> f64 {
-        self.core_kb() * self.cores as f64
-    }
-
-    /// MACs per macro operation (all cores fire together).
-    pub fn macs_per_op(&self) -> usize {
-        self.cores * self.engines * self.rows
-    }
-
-    /// Ops per macro operation (1 MAC = 2 ops, the paper's convention).
-    pub fn ops_per_op(&self) -> usize {
-        2 * self.macs_per_op()
-    }
-}
-
-/// Signal-margin enhancement techniques (Fig. 4).
-#[derive(Clone, Debug, PartialEq)]
-pub struct EnhanceConfig {
-    /// MAC-folding: subtract `fold_offset` from every activation and compute
-    /// in sign-magnitude; restore `fold_offset·ΣW` digitally.
-    pub fold: bool,
-    /// Boosted-clipping: 2× DTC pulse resolution with fixed ADC full scale.
-    pub boost: bool,
-    /// The folded constant (paper: 8 = half the activation range).
-    pub fold_offset: i64,
-    /// DTC gain applied when folding (paper: ×1.87; exactly 13440/7168).
-    pub fold_gain: f64,
-    /// Extra DTC gain applied when boosting (paper: ×2).
-    pub boost_gain: f64,
-}
-
-impl Default for EnhanceConfig {
-    fn default() -> Self {
-        Self {
-            fold: false,
-            boost: false,
-            fold_offset: 8,
-            fold_gain: 1.875,
-            boost_gain: 2.0,
-        }
-    }
-}
-
-impl EnhanceConfig {
-    pub fn both() -> Self {
-        Self { fold: true, boost: true, ..Self::default() }
-    }
-
-    pub fn fold_only() -> Self {
-        Self { fold: true, ..Self::default() }
-    }
-
-    pub fn boost_only() -> Self {
-        Self { boost: true, ..Self::default() }
-    }
-
-    /// Effective DTC time scale s = τ/τ0.
-    pub fn dtc_scale(&self) -> f64 {
-        let mut s = 1.0;
-        if self.fold {
-            s *= self.fold_gain;
-        }
-        if self.boost {
-            s *= self.boost_gain;
-        }
-        s
-    }
-
-    pub fn label(&self) -> &'static str {
-        match (self.fold, self.boost) {
-            (false, false) => "baseline",
-            (true, false) => "fold",
-            (false, true) => "boost",
-            (true, true) => "fold+boost",
-        }
-    }
-}
 
 /// Statistical noise model (DESIGN.md §3). Calibrated values — derived by
 /// `cimsim calibrate` against the paper's two measured accuracy anchors
@@ -240,52 +91,6 @@ impl NoiseConfig {
     }
 }
 
-/// Component energy model constants, all in femtojoules, calibrated so that
-/// dense 4b:4b random workloads measure 95.6 TOPS/W and 90 %-sparse ones
-/// 137.5 TOPS/W, apportioned per the Fig. 7 power breakdown (see
-/// `energy::calibrate`).
-#[derive(Clone, Debug, PartialEq)]
-pub struct EnergyConfig {
-    /// Control logic energy per clock cycle per core, fJ.
-    pub e_ctrl_cycle: f64,
-    /// Sense-amp energy per comparison, fJ.
-    pub e_sa_cmp: f64,
-    /// DTC energy per generated pulse (fixed part), fJ.
-    pub e_dtc_pulse: f64,
-    /// DTC + driver energy per τ0-second of pulse width, fJ.
-    pub e_dtc_tau: f64,
-    /// Pulse-path energy per SL toggle, fJ.
-    pub e_path_toggle: f64,
-    /// Bit-line (MOM cap) discharge + precharge-restore energy per u, fJ.
-    pub e_array_unit: f64,
-    /// Fixed per-op array overhead (ADC readout discharge + precharge), fJ.
-    pub e_array_fixed: f64,
-    /// SRAM write energy per weight bit, fJ — the dynamic-weight reload
-    /// cost (DESIGN.md §10). Not calibrated against the paper (it reports
-    /// no write energy); a representative 28 nm SRAM write figure.
-    pub e_w_write: f64,
-    /// Macro area in mm² (paper: consistent 0.121 from both ends of the
-    /// 790–1136 TOPS/W/mm² range).
-    pub area_mm2: f64,
-}
-
-impl Default for EnergyConfig {
-    fn default() -> Self {
-        // Frozen output of `cimsim calibrate` (see energy::calibrate tests).
-        Self {
-            e_ctrl_cycle: 25.5018,
-            e_sa_cmp: 2.0,
-            e_dtc_pulse: 7.9163,
-            e_dtc_tau: 0.423183,
-            e_path_toggle: 10.00279,
-            e_array_unit: 0.0116119,
-            e_array_fixed: 12269.08,
-            e_w_write: 1.2,
-            area_mm2: 0.121,
-        }
-    }
-}
-
 /// Simulation/runtime knobs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -310,14 +115,29 @@ impl Default for SimConfig {
     }
 }
 
-/// Top-level configuration bundle.
+/// Top-level configuration bundle: the hardware point ([`HwSpec`]) plus the
+/// simulator-only layers (noise model, runtime knobs).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
-    pub mac: MacroConfig,
-    pub enhance: EnhanceConfig,
+    /// The candidate hardware. `Config` derefs here, so `cfg.mac`,
+    /// `cfg.enhance` and `cfg.energy` read through transparently.
+    pub hw: HwSpec,
     pub noise: NoiseConfig,
-    pub energy: EnergyConfig,
     pub sim: SimConfig,
+}
+
+impl std::ops::Deref for Config {
+    type Target = HwSpec;
+
+    fn deref(&self) -> &HwSpec {
+        &self.hw
+    }
+}
+
+impl std::ops::DerefMut for Config {
+    fn deref_mut(&mut self) -> &mut HwSpec {
+        &mut self.hw
+    }
 }
 
 #[derive(Debug)]
@@ -340,6 +160,13 @@ impl std::fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl Config {
+    /// A config running `hw` with default noise and runtime knobs — how the
+    /// explore harness wraps a swept candidate for the compiler layers that
+    /// take a full `Config`.
+    pub fn from_hw(hw: HwSpec) -> Self {
+        Self { hw, ..Self::default() }
+    }
+
     /// Load from a TOML file, overlaying onto defaults.
     pub fn from_toml_file(path: &Path) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path).map_err(ConfigError::Io)?;
@@ -354,27 +181,22 @@ impl Config {
         Ok(c)
     }
 
-    /// Overlay recognized keys from a parsed document. Unknown keys are an
-    /// error so typos never silently fall back to defaults.
+    /// Overlay recognized keys from a parsed document: hardware sections
+    /// via [`HwSpec::overlay`], noise/sim here. Unknown keys are an error
+    /// so typos never silently fall back to defaults.
     pub fn overlay(&mut self, doc: &Doc) -> Result<(), ConfigError> {
-        let known = |k: &str| KNOWN_KEYS.contains(&k);
         for k in doc.keys() {
-            if !known(k) {
+            if !KNOWN_KEYS.contains(&k) && !HW_KEYS.contains(&k) {
                 return Err(ConfigError::Invalid(format!("unknown config key `{k}`")));
             }
         }
+        self.hw.overlay(doc)?;
         macro_rules! ov {
             ($field:expr, usize, $key:expr) => {
                 if let Some(v) = doc.usize($key) { $field = v; }
             };
-            ($field:expr, u32, $key:expr) => {
-                if let Some(v) = doc.i64($key) { $field = v as u32; }
-            };
             ($field:expr, u64, $key:expr) => {
                 if let Some(v) = doc.i64($key) { $field = v as u64; }
-            };
-            ($field:expr, i64, $key:expr) => {
-                if let Some(v) = doc.i64($key) { $field = v; }
             };
             ($field:expr, f64, $key:expr) => {
                 if let Some(v) = doc.f64($key) { $field = v; }
@@ -386,19 +208,6 @@ impl Config {
                 if let Some(v) = doc.str($key) { $field = v.to_string(); }
             };
         }
-        ov!(self.mac.cores, usize, "macro.cores");
-        ov!(self.mac.engines, usize, "macro.engines");
-        ov!(self.mac.rows, usize, "macro.rows");
-        ov!(self.mac.act_bits, u32, "macro.act_bits");
-        ov!(self.mac.weight_bits, u32, "macro.weight_bits");
-        ov!(self.mac.adc_bits, u32, "macro.adc_bits");
-        ov!(self.mac.clock_mhz, f64, "macro.clock_mhz");
-        ov!(self.mac.tau_frac, f64, "macro.tau_frac");
-        ov!(self.enhance.fold, bool, "enhance.fold");
-        ov!(self.enhance.boost, bool, "enhance.boost");
-        ov!(self.enhance.fold_offset, i64, "enhance.fold_offset");
-        ov!(self.enhance.fold_gain, f64, "enhance.fold_gain");
-        ov!(self.enhance.boost_gain, f64, "enhance.boost_gain");
         ov!(self.noise.enabled, bool, "noise.enabled");
         ov!(self.noise.sigma_cell, f64, "noise.sigma_cell");
         ov!(self.noise.sigma_t_floor, f64, "noise.sigma_t_floor");
@@ -411,15 +220,6 @@ impl Config {
         ov!(self.noise.sigma_step_static, f64, "noise.sigma_step_static");
         ov!(self.noise.sigma_cap, f64, "noise.sigma_cap");
         ov!(self.noise.fab_seed, u64, "noise.fab_seed");
-        ov!(self.energy.e_ctrl_cycle, f64, "energy.e_ctrl_cycle");
-        ov!(self.energy.e_sa_cmp, f64, "energy.e_sa_cmp");
-        ov!(self.energy.e_dtc_pulse, f64, "energy.e_dtc_pulse");
-        ov!(self.energy.e_dtc_tau, f64, "energy.e_dtc_tau");
-        ov!(self.energy.e_path_toggle, f64, "energy.e_path_toggle");
-        ov!(self.energy.e_array_unit, f64, "energy.e_array_unit");
-        ov!(self.energy.e_array_fixed, f64, "energy.e_array_fixed");
-        ov!(self.energy.e_w_write, f64, "energy.e_w_write");
-        ov!(self.energy.area_mm2, f64, "energy.area_mm2");
         ov!(self.sim.seed, u64, "sim.seed");
         ov!(self.sim.workers, usize, "sim.workers");
         ov!(self.sim.artifacts_dir, str, "sim.artifacts_dir");
@@ -428,28 +228,8 @@ impl Config {
     }
 
     pub fn validate(&self) -> Result<(), ConfigError> {
+        self.hw.validate()?;
         let inv = |m: String| Err(ConfigError::Invalid(m));
-        if self.mac.cores == 0 || self.mac.engines == 0 || self.mac.rows == 0 {
-            return inv("macro geometry must be non-zero".into());
-        }
-        if !(1..=8).contains(&self.mac.act_bits) {
-            return inv(format!("act_bits {} out of range 1..=8", self.mac.act_bits));
-        }
-        if !(2..=8).contains(&self.mac.weight_bits) {
-            return inv(format!("weight_bits {} out of range 2..=8", self.mac.weight_bits));
-        }
-        if !(4..=12).contains(&self.mac.adc_bits) {
-            return inv(format!("adc_bits {} out of range 4..=12", self.mac.adc_bits));
-        }
-        if self.mac.clock_mhz <= 0.0 || self.mac.tau_frac <= 0.0 {
-            return inv("clock_mhz and tau_frac must be positive".into());
-        }
-        if self.enhance.fold_offset < 0 || self.enhance.fold_offset > self.mac.act_max() {
-            return inv(format!("fold_offset {} outside activation range", self.enhance.fold_offset));
-        }
-        if self.enhance.fold_gain <= 0.0 || self.enhance.boost_gain <= 0.0 {
-            return inv("enhancement gains must be positive".into());
-        }
         for (name, v) in [
             ("sigma_cell", self.noise.sigma_cell),
             ("sigma_t_floor", self.noise.sigma_t_floor),
@@ -471,20 +251,9 @@ impl Config {
     }
 }
 
+/// Simulator-only keys ([`Config::overlay`] consumes these itself; the
+/// hardware sections live in [`HW_KEYS`]).
 const KNOWN_KEYS: &[&str] = &[
-    "macro.cores",
-    "macro.engines",
-    "macro.rows",
-    "macro.act_bits",
-    "macro.weight_bits",
-    "macro.adc_bits",
-    "macro.clock_mhz",
-    "macro.tau_frac",
-    "enhance.fold",
-    "enhance.boost",
-    "enhance.fold_offset",
-    "enhance.fold_gain",
-    "enhance.boost_gain",
     "noise.enabled",
     "noise.sigma_cell",
     "noise.sigma_t_floor",
@@ -497,15 +266,6 @@ const KNOWN_KEYS: &[&str] = &[
     "noise.sigma_step_static",
     "noise.sigma_cap",
     "noise.fab_seed",
-    "energy.e_ctrl_cycle",
-    "energy.e_sa_cmp",
-    "energy.e_dtc_pulse",
-    "energy.e_dtc_tau",
-    "energy.e_path_toggle",
-    "energy.e_array_unit",
-    "energy.e_array_fixed",
-    "energy.e_w_write",
-    "energy.area_mm2",
     "sim.seed",
     "sim.workers",
     "sim.artifacts_dir",
@@ -536,6 +296,16 @@ mod tests {
         assert!((e.dtc_scale() - 3.75).abs() < 1e-12);
         assert_eq!(e.label(), "fold+boost");
         assert_eq!(EnhanceConfig::default().label(), "baseline");
+    }
+
+    #[test]
+    fn config_derefs_to_its_hw_spec() {
+        let mut c = Config::default();
+        assert_eq!(c.hw, HwSpec::paper_default());
+        // Read and write through the deref, as the whole codebase does.
+        assert_eq!(c.mac.rows, 64);
+        c.enhance = EnhanceConfig::both();
+        assert!(c.hw.enhance.fold && c.hw.enhance.boost);
     }
 
     #[test]
@@ -581,14 +351,17 @@ mod tests {
         assert!(Config::from_toml_str("[macro]\nclock_mhz = -1.0\n").is_err());
         assert!(Config::from_toml_str("[noise]\nsigma_cell = -0.1\n").is_err());
         assert!(Config::from_toml_str("[enhance]\nfold_offset = 99\n").is_err());
+        assert!(Config::from_toml_str("[tech]\nenergy_scale = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[anchors]\nsparse_fraction = 1.5\n").is_err());
     }
 
     #[test]
     fn every_known_key_is_actually_consumed() {
-        // Build a doc that sets every known key and confirm overlay accepts
-        // each one (guards KNOWN_KEYS and the ov! table against drift).
+        // Build a doc that sets every known key (hardware + simulator) and
+        // confirm overlay accepts each one (guards the key tables and the
+        // ov! lists against drift).
         let mut by_section: std::collections::BTreeMap<&str, Vec<String>> = Default::default();
-        for k in KNOWN_KEYS {
+        for k in KNOWN_KEYS.iter().chain(HW_KEYS) {
             let (section, key) = k.split_once('.').unwrap();
             let v = match *k {
                 "sim.artifacts_dir" | "sim.out_dir" => "\"x\"".to_string(),
@@ -598,8 +371,13 @@ mod tests {
                 "macro.adc_bits" => "9".to_string(),
                 "enhance.fold_offset" => "8".to_string(),
                 "noise.fab_seed" | "sim.seed" | "sim.workers" => "3".to_string(),
+                // The four split fractions must sum to 1 for validation.
+                "anchors.split_array" | "anchors.split_path" | "anchors.split_dtc"
+                | "anchors.split_sactrl" => "0.25".to_string(),
                 "noise.t_knee" | "enhance.fold_gain" | "enhance.boost_gain" | "macro.clock_mhz"
-                | "macro.tau_frac" | "energy.area_mm2" => "0.5".to_string(),
+                | "macro.tau_frac" | "energy.area_mm2" | "tech.node_nm" | "tech.energy_scale"
+                | "tech.area_scale" | "sar.cu_ff" | "sar.vdd" | "sar.e_cmp_fj"
+                | "anchors.dense_tops_w" | "anchors.sparse_tops_w" => "0.5".to_string(),
                 _ => "0.25".to_string(),
             };
             by_section.entry(section).or_default().push(format!("{key} = {v}"));
@@ -612,5 +390,7 @@ mod tests {
         assert_eq!(c.mac.cores, 2);
         assert_eq!(c.sim.artifacts_dir, "x");
         assert_eq!(c.energy.area_mm2, 0.5);
+        assert_eq!(c.anchors.power_split, [0.25; 4]);
+        assert_eq!(c.tech.node_nm, 0.5);
     }
 }

@@ -8,6 +8,8 @@ pub mod server;
 pub use deployment::MlpDeployment;
 pub use metrics::{Metrics, MetricsReport};
 pub use server::{
-    serve, serve_decode, serve_engine, serve_pipeline, serve_plan, BackendEngine, Client,
-    InferenceEngine, ServeConfig, ServerHandle,
+    serve_engine, serve_frontend, BackendEngine, Client, InferenceEngine, ServeConfig,
+    ServeConfigBuilder, ServeFrontend, ServerHandle,
 };
+#[allow(deprecated)]
+pub use server::{serve, serve_decode, serve_pipeline, serve_plan};

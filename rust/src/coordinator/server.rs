@@ -83,6 +83,123 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    /// Start a builder at the defaults — the one construction path for
+    /// serve configuration (`ServeConfig { .. }` literals and the
+    /// positional entry points are deprecated in its favor).
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+}
+
+/// Builder for [`ServeConfig`], with [`ServeConfigBuilder::serve`] as the
+/// unified typed-front-end entry point:
+///
+/// ```no_run
+/// use cimsim::coordinator::{ServeConfig, ServeFrontend};
+/// # fn demo(plan: cimsim::compiler::CompiledPlan) -> std::io::Result<()> {
+/// let handle = ServeConfig::builder()
+///     .max_batch(32)
+///     .stream(true)
+///     .serve(ServeFrontend::Plan(plan))?;
+/// # drop(handle); Ok(()) }
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Most requests one coalesced batch may hold.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Longest the batcher waits to fill a batch after its first job.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    /// Admission queue capacity (backpressure bound).
+    pub fn max_queue(mut self, n: usize) -> Self {
+        self.cfg.max_queue = n;
+        self
+    }
+
+    /// Worker threads for engines the server builds itself (0 = auto).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Execute coalesced batches through the streaming scheduler.
+    pub fn stream(mut self, on: bool) -> Self {
+        self.cfg.stream = on;
+        self
+    }
+
+    /// Bind a metrics HTTP side listener (DESIGN.md §12).
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.metrics_addr = Some(addr.into());
+        self
+    }
+
+    /// Option-valued variant of [`ServeConfigBuilder::metrics_addr`] for
+    /// callers plumbing an optional CLI flag through.
+    pub fn metrics_addr_opt(mut self, addr: Option<String>) -> Self {
+        self.cfg.metrics_addr = addr;
+        self
+    }
+
+    /// Finish without serving (for call sites that hold a config).
+    pub fn build(self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// Start serving `frontend` on an ephemeral local port with this
+    /// configuration.
+    pub fn serve(self, frontend: ServeFrontend) -> std::io::Result<ServerHandle> {
+        serve_frontend(frontend, self.cfg)
+    }
+}
+
+/// What to serve — the typed selection the four positional entry points
+/// (`serve`, `serve_pipeline`, `serve_plan`, `serve_decode`) used to
+/// encode by function name.
+pub enum ServeFrontend {
+    /// The classic path: a quantized MLP on a single `CimBackend`.
+    Backend { deployment: MlpDeployment, backend: Box<dyn CimBackend + Send> },
+    /// Pooled batched pipeline (weights placed once on a macro pool).
+    Pipeline { deployment: MlpDeployment, sim: Config },
+    /// Any graph-compiled plan (weights resident on its pool).
+    Plan(crate::compiler::CompiledPlan),
+    /// Autoregressive decode with token-level continuous batching
+    /// (DESIGN.md §13); `max_batch` is the slot count.
+    Decode(crate::compiler::DecodePlan),
+    /// A custom [`InferenceEngine`].
+    Engine(Box<dyn InferenceEngine>),
+}
+
+/// Serve a typed front end — the single dispatch behind
+/// [`ServeConfigBuilder::serve`] and the deprecated positional wrappers.
+pub fn serve_frontend(frontend: ServeFrontend, cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    match frontend {
+        ServeFrontend::Backend { deployment, backend } => {
+            serve_engine(Box::new(BackendEngine { dep: deployment, backend }), cfg)
+        }
+        ServeFrontend::Pipeline { deployment, sim } => {
+            let engine = PipelineDeployment::new(deployment, sim, cfg.workers)
+                .map_err(std::io::Error::other)?;
+            serve_engine(Box::new(engine), cfg)
+        }
+        ServeFrontend::Plan(plan) => serve_engine(Box::new(plan), cfg),
+        ServeFrontend::Decode(plan) => serve_decode_impl(plan, cfg),
+        ServeFrontend::Engine(engine) => serve_engine(engine, cfg),
+    }
+}
+
 /// A batch-inference engine the serve loop drives: one call per coalesced
 /// batch, plus cumulative device counters the loop diffs for metrics.
 pub trait InferenceEngine: Send {
@@ -282,26 +399,26 @@ impl ServerHandle {
 
 /// Start serving on an ephemeral local port with the classic single-backend
 /// engine. The backend and deployment move into the inference thread.
+#[deprecated(note = "use `ServeConfig::builder().serve(ServeFrontend::Backend { .. })`")]
 pub fn serve(
     deployment: MlpDeployment,
     backend: Box<dyn CimBackend + Send>,
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
-    serve_engine(Box::new(BackendEngine { dep: deployment, backend }), cfg)
+    serve_frontend(ServeFrontend::Backend { deployment, backend }, cfg)
 }
 
 /// Batched pipeline serving: builds a `PipelineDeployment` (weights placed
 /// once on a macro pool) and coalesces queued jobs — up to
 /// `ServeConfig::max_batch` per window — into one pooled pipeline call
 /// (streamed through the plan scheduler when `cfg.stream` is set).
+#[deprecated(note = "use `ServeConfig::builder().serve(ServeFrontend::Pipeline { .. })`")]
 pub fn serve_pipeline(
     deployment: MlpDeployment,
     sim_cfg: Config,
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
-    let engine =
-        PipelineDeployment::new(deployment, sim_cfg, cfg.workers).map_err(std::io::Error::other)?;
-    serve_engine(Box::new(engine), cfg)
+    serve_frontend(ServeFrontend::Pipeline { deployment, sim: sim_cfg }, cfg)
 }
 
 /// Serve any compiled network: the plan (weights already resident on its
@@ -312,11 +429,12 @@ pub fn serve_pipeline(
 /// (`CompileOptions::workers`); `ServeConfig::workers` is ignored on this
 /// path (it only configures engines the server builds itself, as
 /// [`serve_pipeline`] does).
+#[deprecated(note = "use `ServeConfig::builder().serve(ServeFrontend::Plan(plan))`")]
 pub fn serve_plan(
     plan: crate::compiler::CompiledPlan,
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
-    serve_engine(Box::new(plan), cfg)
+    serve_frontend(ServeFrontend::Plan(plan), cfg)
 }
 
 /// Autoregressive decode serving (DESIGN.md §13): the inference thread
@@ -334,7 +452,15 @@ pub fn serve_plan(
 /// token ids...]` as f32; reply = the generated token ids as f32 (empty
 /// = refused or malformed). Sequences are deterministic per admission
 /// index (DESIGN.md §9/§13), so sequential requests replay bit-exactly.
+#[deprecated(note = "use `ServeConfig::builder().serve(ServeFrontend::Decode(plan))`")]
 pub fn serve_decode(
+    plan: crate::compiler::DecodePlan,
+    cfg: ServeConfig,
+) -> std::io::Result<ServerHandle> {
+    serve_frontend(ServeFrontend::Decode(plan), cfg)
+}
+
+fn serve_decode_impl(
     plan: crate::compiler::DecodePlan,
     cfg: ServeConfig,
 ) -> std::io::Result<ServerHandle> {
@@ -792,7 +918,9 @@ mod tests {
         let expected = dep.run_digital(&[data[0].0.clone()]);
 
         let backend = Box::new(DigitalBackend::new(Config::default()));
-        let handle = serve(dep, backend, ServeConfig::default()).unwrap();
+        let handle = ServeConfig::builder()
+            .serve(ServeFrontend::Backend { deployment: dep, backend })
+            .unwrap();
 
         let mut client = Client::connect(handle.addr).unwrap();
         let logits = client.infer(&data[0].0).unwrap();
@@ -855,12 +983,11 @@ mod tests {
         };
 
         for stream in [false, true] {
-            let handle = serve_pipeline(
-                dep.clone(),
-                cfg.clone(),
-                ServeConfig { workers: 2, stream, ..ServeConfig::default() },
-            )
-            .unwrap();
+            let handle = ServeConfig::builder()
+                .workers(2)
+                .stream(stream)
+                .serve(ServeFrontend::Pipeline { deployment: dep.clone(), sim: cfg.clone() })
+                .unwrap();
             let mut client = Client::connect(handle.addr).unwrap();
             let logits = client.infer(&data[0].0).unwrap();
             assert_eq!(logits, expected[0], "stream={stream}");
@@ -907,7 +1034,8 @@ mod tests {
         };
 
         let plan = compile(graph, &cal, &cfg, &opts).unwrap();
-        let handle = serve_plan(plan, ServeConfig::default()).unwrap();
+        let handle =
+            ServeConfig::builder().serve(ServeFrontend::Plan(plan)).unwrap();
         let mut client = Client::connect(handle.addr).unwrap();
         let logits = client.infer(&data[0].0).unwrap();
         assert_eq!(logits, expected[0]);

@@ -5,7 +5,7 @@
 //! is partially illegible in the source text — the MOM-capacitor/pre-charge
 //! share is taken as the remainder (documented in DESIGN.md §8).
 
-use crate::config::Config;
+use crate::config::HwSpec;
 
 /// Fig. 7 area breakdown fractions.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -41,14 +41,14 @@ impl AreaBreakdown {
 
 /// Normalized energy-based area efficiency, TOPS/W/mm² (the Fig. 6 metric
 /// per [7]).
-pub fn area_efficiency(cfg: &Config, tops_per_watt: f64) -> f64 {
+pub fn area_efficiency(cfg: &HwSpec, tops_per_watt: f64) -> f64 {
     tops_per_watt / cfg.energy.area_mm2
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::HwSpec;
 
     #[test]
     fn breakdown_sums_to_one() {

@@ -155,15 +155,28 @@ pub fn sar_adc_energy_fj(bits: u32, cu_ff: f64, vdd: f64, e_cmp_fj: f64) -> f64 
     dac + cmp_logic
 }
 
-/// Default 40 nm SAR parameters used across the harness.
+/// Default 40 nm SAR unit capacitance. Frozen from
+/// `HwSpec::paper_default().sar.cu_ff`.
+#[deprecated(note = "use `cfg.sar.cu_ff` (`config::SarAdcRef`)")]
 pub const SAR_CU_FF: f64 = 1.8;
+/// Default 40 nm SAR supply. Frozen from `HwSpec::paper_default().sar.vdd`.
+#[deprecated(note = "use `cfg.sar.vdd` (`config::SarAdcRef`)")]
 pub const SAR_VDD: f64 = 0.9;
+/// Default 40 nm SAR comparator energy per decision. Frozen from
+/// `HwSpec::paper_default().sar.e_cmp_fj`.
+#[deprecated(note = "use `cfg.sar.e_cmp_fj` (`config::SarAdcRef`)")]
 pub const SAR_E_CMP_FJ: f64 = 5.0;
 
-/// Readout energy per MAC when a separate `bits`-b SAR serves `acc`
-/// accumulations per conversion.
+/// Readout energy per MAC when a separate `bits`-b SAR (parameterized by
+/// `sar`) serves `acc` accumulations per conversion.
+pub fn sar_readout_fj_per_mac_with(sar: &crate::config::SarAdcRef, bits: u32, acc: u32) -> f64 {
+    sar_adc_energy_fj(bits, sar.cu_ff, sar.vdd, sar.e_cmp_fj) / acc as f64
+}
+
+/// Readout energy per MAC under the paper-default reference SAR
+/// ([`crate::config::HwSpec::paper_default`]'s `sar` field).
 pub fn sar_readout_fj_per_mac(bits: u32, acc: u32) -> f64 {
-    sar_adc_energy_fj(bits, SAR_CU_FF, SAR_VDD, SAR_E_CMP_FJ) / acc as f64
+    sar_readout_fj_per_mac_with(&crate::config::SarAdcRef::default(), bits, acc)
 }
 
 /// Number of analog MAC-ADC cycles + shift-add passes a design needs to
@@ -193,8 +206,9 @@ mod tests {
 
     #[test]
     fn sar_energy_scales_exponentially_with_bits() {
-        let e8 = sar_adc_energy_fj(8, SAR_CU_FF, SAR_VDD, SAR_E_CMP_FJ);
-        let e9 = sar_adc_energy_fj(9, SAR_CU_FF, SAR_VDD, SAR_E_CMP_FJ);
+        let sar = crate::config::SarAdcRef::default();
+        let e8 = sar_adc_energy_fj(8, sar.cu_ff, sar.vdd, sar.e_cmp_fj);
+        let e9 = sar_adc_energy_fj(9, sar.cu_ff, sar.vdd, sar.e_cmp_fj);
         assert!(e9 / e8 > 1.8 && e9 / e8 < 2.1);
         // 8-b, 40 nm-ish: a few hundred fJ.
         assert!(e8 > 200.0 && e8 < 500.0, "{e8}");
@@ -220,5 +234,19 @@ mod tests {
         let sar_16acc = sar_readout_fj_per_mac(5, 16);
         let sar_64acc_9b = sar_readout_fj_per_mac(9, 64);
         assert!(sar_64acc_9b > sar_16acc, "9b SAR is the expensive case");
+        // The explicit-parameter path agrees with the paper-default one.
+        let sar = crate::config::SarAdcRef::default();
+        assert_eq!(sar_readout_fj_per_mac_with(&sar, 9, 64), sar_64acc_9b);
+    }
+
+    /// The deprecated consts stay frozen at the paper-default SAR fields
+    /// they re-export.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_sar_consts_match_paper_default() {
+        let sar = crate::config::HwSpec::paper_default().sar;
+        assert_eq!(SAR_CU_FF, sar.cu_ff);
+        assert_eq!(SAR_VDD, sar.vdd);
+        assert_eq!(SAR_E_CMP_FJ, sar.e_cmp_fj);
     }
 }

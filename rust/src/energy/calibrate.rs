@@ -18,17 +18,26 @@ use crate::cim::{MacroSim, OpStats};
 use crate::config::{Config, EnergyConfig};
 use crate::util::rng::{Rng, Xoshiro256};
 
-/// Paper anchors.
+/// Paper anchor, frozen from `HwSpec::paper_default().anchors.dense_tops_w`.
+#[deprecated(note = "use `cfg.anchors.dense_tops_w` (`config::CalibAnchors`)")]
 pub const DENSE_TOPS_W: f64 = 95.6;
+/// Paper anchor, frozen from `HwSpec::paper_default().anchors.sparse_tops_w`.
+#[deprecated(note = "use `cfg.anchors.sparse_tops_w` (`config::CalibAnchors`)")]
 pub const SPARSE_TOPS_W: f64 = 137.5;
+/// Paper anchor, frozen from `HwSpec::paper_default().anchors.sparse_fraction`.
+#[deprecated(note = "use `cfg.anchors.sparse_fraction` (`config::CalibAnchors`)")]
 pub const SPARSE_FRACTION: f64 = 0.9;
-/// Fig. 7 dense power breakdown: array, pulse path, DTC, SA+ctrl.
+/// Fig. 7 dense power breakdown: array, pulse path, DTC, SA+ctrl. Frozen
+/// from `HwSpec::paper_default().anchors.power_split`.
+#[deprecated(note = "use `cfg.anchors.power_split` (`config::CalibAnchors`)")]
 pub const POWER_SPLIT: [f64; 4] = [0.6475, 0.1793, 0.1419, 0.0313];
-/// SA comparison energy is fixed a-priori (a 40 nm strong-arm latch is a
-/// few fJ per decision); the solver back-fills control energy around it.
+/// SA comparison energy pinned a-priori (a 40 nm strong-arm latch is a few
+/// fJ per decision). Frozen from `HwSpec::paper_default().anchors.e_sa_fj`.
+#[deprecated(note = "use `cfg.anchors.e_sa_fj` (`config::CalibAnchors`)")]
 pub const E_SA_FJ: f64 = 2.0;
-/// Fraction of DTC energy attributed to the per-pulse fixed cost (the rest
-/// scales with total pulse width).
+/// Fraction of DTC energy attributed to the per-pulse fixed cost. Frozen
+/// from `HwSpec::paper_default().anchors.dtc_pulse_split`.
+#[deprecated(note = "use `cfg.anchors.dtc_pulse_split` (`config::CalibAnchors`)")]
 pub const DTC_PULSE_SPLIT: f64 = 0.5;
 
 /// Mean per-core-op activity for a random workload with the given input
@@ -94,27 +103,30 @@ impl std::fmt::Display for CalibrationError {
 
 impl std::error::Error for CalibrationError {}
 
-/// Solve the energy constants from the anchors (see module docs).
+/// Solve the energy constants from the configured anchors
+/// (`cfg.anchors`, the paper's published numbers by default — see module
+/// docs).
 pub fn solve(cfg: &Config) -> Result<EnergyConfig, CalibrationError> {
+    let anchors = &cfg.anchors;
     let trials = 400;
     let dense = mean_stats(cfg, 0.0, trials, 0xCA11);
-    let sparse = mean_stats(cfg, SPARSE_FRACTION, trials, 0xCA11);
+    let sparse = mean_stats(cfg, anchors.sparse_fraction, trials, 0xCA11);
 
     // Per-core-op energy targets (fJ): macro op = `cores` core ops.
     let ops = cfg.mac.ops_per_op() as f64 / cfg.mac.cores as f64;
-    let e_dense = ops / DENSE_TOPS_W * 1e3; // ops / (TOPS/W) in fJ
-    let e_sparse = ops / SPARSE_TOPS_W * 1e3;
+    let e_dense = ops / anchors.dense_tops_w * 1e3; // ops / (TOPS/W) in fJ
+    let e_sparse = ops / anchors.sparse_tops_w * 1e3;
 
-    let [f_array, f_path, f_dtc, f_sactrl] = POWER_SPLIT;
+    let [f_array, f_path, f_dtc, f_sactrl] = anchors.power_split;
     let a_d = f_array * e_dense;
     let p_d = f_path * e_dense;
     let d_d = f_dtc * e_dense;
     let s_d = f_sactrl * e_dense;
 
     let e_path_toggle = p_d / dense.sl_toggles as f64;
-    let e_dtc_pulse = DTC_PULSE_SPLIT * d_d / dense.dtc_pulses as f64;
-    let e_dtc_tau = (1.0 - DTC_PULSE_SPLIT) * d_d / dense.dtc_tau_sum;
-    let e_sa_cmp = E_SA_FJ;
+    let e_dtc_pulse = anchors.dtc_pulse_split * d_d / dense.dtc_pulses as f64;
+    let e_dtc_tau = (1.0 - anchors.dtc_pulse_split) * d_d / dense.dtc_tau_sum;
+    let e_sa_cmp = anchors.e_sa_fj;
     let e_ctrl_cycle = (s_d - e_sa_cmp * dense.sa_compares as f64) / dense.total_cycles as f64;
     if e_ctrl_cycle <= 0.0 {
         return Err(CalibrationError(format!(
@@ -181,10 +193,11 @@ mod tests {
         let solved = solve(&cfg).unwrap();
         let mut c2 = cfg.clone();
         c2.energy = solved;
+        let a = cfg.anchors.clone();
         let dense = measured_efficiency(&c2, 0.0, 400, 0xCA11);
-        let sparse = measured_efficiency(&c2, SPARSE_FRACTION, 400, 0xCA11);
-        assert!((dense - DENSE_TOPS_W).abs() < 1.0, "dense {dense}");
-        assert!((sparse - SPARSE_TOPS_W).abs() < 2.0, "sparse {sparse}");
+        let sparse = measured_efficiency(&c2, a.sparse_fraction, 400, 0xCA11);
+        assert!((dense - a.dense_tops_w).abs() < 1.0, "dense {dense}");
+        assert!((sparse - a.sparse_tops_w).abs() < 2.0, "sparse {sparse}");
     }
 
     #[test]
@@ -196,7 +209,7 @@ mod tests {
         let stats = mean_stats(&c2, 0.0, 400, 0xCA11);
         let b = super::super::core_op_energy(&c2, &stats);
         let f = b.fractions();
-        for (got, want) in f.iter().zip(POWER_SPLIT) {
+        for (got, want) in f.iter().zip(cfg.anchors.power_split) {
             assert!((got - want).abs() < 0.01, "fraction {got} vs {want}");
         }
     }
@@ -221,6 +234,20 @@ mod tests {
         close(solved.e_path_toggle, frozen.e_path_toggle, "e_path_toggle");
         close(solved.e_array_unit, frozen.e_array_unit, "e_array_unit");
         close(solved.e_array_fixed, frozen.e_array_fixed, "e_array_fixed");
+    }
+
+    /// The deprecated consts must stay frozen at the paper-default anchor
+    /// fields they re-export, so downstream code migrates without drift.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_consts_match_paper_default_anchors() {
+        let a = crate::config::HwSpec::paper_default().anchors;
+        assert_eq!(DENSE_TOPS_W, a.dense_tops_w);
+        assert_eq!(SPARSE_TOPS_W, a.sparse_tops_w);
+        assert_eq!(SPARSE_FRACTION, a.sparse_fraction);
+        assert_eq!(POWER_SPLIT, a.power_split);
+        assert_eq!(E_SA_FJ, a.e_sa_fj);
+        assert_eq!(DTC_PULSE_SPLIT, a.dtc_pulse_split);
     }
 
     #[test]

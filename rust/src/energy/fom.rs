@@ -3,7 +3,7 @@
 //! evaluated at average performance, where
 //! `OUT-ratio = readout precision / full output precision` per [7].
 
-use crate::config::Config;
+use crate::config::HwSpec;
 
 /// Full output precision of an `act_bits × w_bits` MAC accumulated over
 /// `rows` terms: act + w + log2(rows) bits.
@@ -12,7 +12,7 @@ pub fn full_output_bits(act_bits: u32, w_bits: u32, rows: usize) -> f64 {
 }
 
 /// OUT-ratio for the configured macro (9 / 14 for the default geometry).
-pub fn out_ratio(cfg: &Config) -> f64 {
+pub fn out_ratio(cfg: &HwSpec) -> f64 {
     cfg.mac.adc_bits as f64
         / full_output_bits(cfg.mac.act_bits, cfg.mac.weight_bits, cfg.mac.rows)
 }
@@ -49,7 +49,7 @@ pub fn fom_avg(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::HwSpec;
 
     #[test]
     fn default_out_ratio_is_9_over_14() {

@@ -12,7 +12,7 @@ pub mod calibrate;
 pub mod fom;
 
 use crate::cim::OpStats;
-use crate::config::Config;
+use crate::config::HwSpec;
 
 /// Energy of one core op, split by the Fig. 7 power-breakdown groups (fJ).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -50,7 +50,7 @@ impl EnergyBreakdown {
 }
 
 /// Energy of one core operation from its activity counters.
-pub fn core_op_energy(cfg: &Config, s: &OpStats) -> EnergyBreakdown {
+pub fn core_op_energy(cfg: &HwSpec, s: &OpStats) -> EnergyBreakdown {
     let e = &cfg.energy;
     EnergyBreakdown {
         array_fj: e.e_array_unit * (s.mac_discharge_u + s.adc_discharge_u) + e.e_array_fixed,
@@ -64,7 +64,7 @@ pub fn core_op_energy(cfg: &Config, s: &OpStats) -> EnergyBreakdown {
 /// Energy of writing `tiles` full core weight arrays — the dynamic-weight
 /// reload cost (DESIGN.md §10). Pure SRAM write activity, booked to the
 /// array group: `tiles · rows · engines · weight_bits · e_w_write`.
-pub fn weight_load_energy(cfg: &Config, tiles: u64) -> EnergyBreakdown {
+pub fn weight_load_energy(cfg: &HwSpec, tiles: u64) -> EnergyBreakdown {
     let bits_per_core =
         (cfg.mac.rows * cfg.mac.engines * cfg.mac.weight_bits as usize) as f64;
     EnergyBreakdown {
@@ -81,21 +81,21 @@ pub fn tops_per_watt(ops: f64, energy_fj: f64) -> f64 {
 
 /// Energy efficiency of a workload characterized by a mean per-core-op
 /// breakdown: all `cores` fire per macro op, each op is `ops_per_op` OPs.
-pub fn efficiency_tops_w(cfg: &Config, mean_core_op: &EnergyBreakdown) -> f64 {
+pub fn efficiency_tops_w(cfg: &HwSpec, mean_core_op: &EnergyBreakdown) -> f64 {
     let ops = cfg.mac.ops_per_op() as f64;
     let macro_fj = mean_core_op.total_fj() * cfg.mac.cores as f64;
     tops_per_watt(ops, macro_fj)
 }
 
 /// Average power in µW at a given op issue rate (ops/s per core).
-pub fn power_uw(cfg: &Config, mean_core_op: &EnergyBreakdown, macro_ops_per_s: f64) -> f64 {
+pub fn power_uw(cfg: &HwSpec, mean_core_op: &EnergyBreakdown, macro_ops_per_s: f64) -> f64 {
     mean_core_op.total_fj() * cfg.mac.cores as f64 * 1e-15 * macro_ops_per_s * 1e6
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Config;
+    use crate::config::HwSpec;
 
     fn stats_like_dense() -> OpStats {
         OpStats {

@@ -1,0 +1,174 @@
+//! Design-space exploration harness (DESIGN.md §15).
+//!
+//! The paper's 137.5 TOPS/W macro is one point in a hardware design
+//! space: array geometry, ADC resolution, DTC gains, and energy constants
+//! all trade off against latency, area, and accuracy. This module sweeps
+//! that space analytically:
+//!
+//! 1. [`space::SweepSpace`] — candidate [`crate::config::HwSpec`] points
+//!    from a TOML grid file (or the built-in 96-point default grid);
+//! 2. [`workload::Workload`] — one calibrated graph per workload class
+//!    (MLP, ResNet-20, transformer block, decode);
+//! 3. [`score`] — each candidate is lowered with the real compiler and
+//!    costed by [`crate::compiler::estimate_cost_lowered`], the *exact*
+//!    noise-free placement cost model `compile` itself reports
+//!    (bit-identical, asserted by `tests/hwspec_explore.rs`) — no
+//!    simulation in the inner loop;
+//! 4. [`pareto`] — the frontier of TOPS/W × latency × area ×
+//!    accuracy-proxy, emitted as JSON by `cimsim explore`.
+//!
+//! Calibration (float network evaluation) runs **once** per sweep — it is
+//! hardware-independent — so the per-candidate loop is lower + place
+//! arithmetic only, thousands of points per second
+//! (`BENCH_explore.json`).
+
+pub mod pareto;
+pub mod score;
+pub mod space;
+pub mod workload;
+
+pub use pareto::{dominates, frontier_consistent, mark_frontier};
+pub use score::{accuracy_proxy_bits, ExplorePoint};
+pub use space::{Axis, Candidate, Expansion, SpaceError, SweepSpace};
+pub use workload::Workload;
+
+use crate::compiler::lower::{calibrate, lower, CompileError};
+use crate::compiler::plan::check_quantize_structure;
+use crate::compiler::{estimate_cost_lowered, CompileOptions};
+use crate::config::Config;
+
+/// A sweep failure: the space didn't expand or the workload didn't
+/// compile at the base point.
+#[derive(Debug)]
+pub enum ExploreError {
+    Space(SpaceError),
+    Compile(CompileError),
+}
+
+impl std::fmt::Display for ExploreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExploreError::Space(e) => write!(f, "{e}"),
+            ExploreError::Compile(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExploreError {}
+
+impl From<SpaceError> for ExploreError {
+    fn from(e: SpaceError) -> Self {
+        ExploreError::Space(e)
+    }
+}
+
+impl From<CompileError> for ExploreError {
+    fn from(e: CompileError) -> Self {
+        ExploreError::Compile(e)
+    }
+}
+
+/// A completed sweep: every scored candidate (frontier flags set), plus
+/// the combinations that were skipped and why.
+#[derive(Debug)]
+pub struct SweepResult {
+    pub workload: Workload,
+    pub points: Vec<ExplorePoint>,
+    pub n_frontier: usize,
+    /// `(label, reason)` per skipped candidate: failed [`crate::config::HwSpec::validate`]
+    /// or failed to lower the workload (e.g. activation bits too narrow).
+    pub skipped: Vec<(String, String)>,
+}
+
+impl SweepResult {
+    /// The whole sweep as one JSON document.
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> =
+            self.points.iter().map(|p| format!("    {}", p.to_json())).collect();
+        let skipped: Vec<String> = self
+            .skipped
+            .iter()
+            .map(|(label, reason)| {
+                use crate::bench::{json_row, JsonField};
+                format!(
+                    "    {}",
+                    json_row(&[
+                        JsonField::Str("label", label),
+                        JsonField::Str("reason", reason),
+                    ])
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"workload\": \"{}\",\n  \"n_points\": {},\n  \"n_frontier\": {},\n  \
+             \"points\": [\n{}\n  ],\n  \"skipped\": [\n{}\n  ]\n}}\n",
+            self.workload.name(),
+            self.points.len(),
+            self.n_frontier,
+            rows.join(",\n"),
+            skipped.join(",\n"),
+        )
+    }
+
+    /// Just the frontier, in scoring order.
+    pub fn frontier(&self) -> impl Iterator<Item = &ExplorePoint> {
+        self.points.iter().filter(|p| p.on_frontier)
+    }
+}
+
+/// Run a sweep: expand `space`, score every valid candidate on `workload`
+/// with the exact analytic cost model, and mark the Pareto frontier.
+///
+/// ```
+/// use cimsim::explore::{run_sweep, SweepSpace, Workload};
+///
+/// let space = SweepSpace::parse("[sweep]\nmacro.rows = [32, 64]\n").unwrap();
+/// let result = run_sweep(Workload::Mlp, &space).unwrap();
+/// assert_eq!(result.points.len(), 2);
+/// assert!(result.n_frontier >= 1);
+/// ```
+pub fn run_sweep(workload: Workload, space: &SweepSpace) -> Result<SweepResult, ExploreError> {
+    let (graph, cal_inputs) = workload.build();
+    let shapes = graph.infer_shapes().map_err(CompileError::Structure)?;
+    check_quantize_structure(&graph)?;
+    // Calibration is float evaluation of the workload graph — independent
+    // of the candidate hardware, so it runs once for the whole sweep.
+    let cal = calibrate(&graph, &cal_inputs)?;
+
+    let expansion = space.expand()?;
+    let mut skipped = expansion.skipped;
+    let opts = CompileOptions::default();
+    let mut points = Vec::with_capacity(expansion.candidates.len());
+    for Candidate { label, hw } in expansion.candidates {
+        let cfg = Config::from_hw(hw);
+        match lower(&graph, &shapes, &cal, &cfg) {
+            Ok(lowered) => {
+                let report = estimate_cost_lowered(&lowered, &cfg, &opts);
+                points.push(score::score(label, &cfg.hw, &report));
+            }
+            Err(e) => skipped.push((label, e.to_string())),
+        }
+    }
+    let n_frontier = mark_frontier(&mut points);
+    Ok(SweepResult { workload, points, n_frontier, skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_point_sweep_scores_and_marks_a_consistent_frontier() {
+        let space = SweepSpace::parse("[sweep]\nmacro.rows = [32, 64, 128]\n").unwrap();
+        let result = run_sweep(Workload::Mlp, &space).unwrap();
+        assert_eq!(result.points.len(), 3);
+        assert!(result.n_frontier >= 1);
+        assert!(frontier_consistent(&result.points));
+        assert!(result.points.iter().all(|p| {
+            p.tops_w > 0.0 && p.latency_ms > 0.0 && p.area_mm2 > 0.0 && p.accuracy_bits > 0.0
+        }));
+        let json = result.to_json();
+        assert!(json.contains("\"workload\": \"mlp\""));
+        assert!(json.contains("\"n_points\": 3"));
+    }
+}

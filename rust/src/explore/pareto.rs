@@ -1,0 +1,113 @@
+//! Pareto dominance over the four sweep objectives.
+//!
+//! Point `a` **dominates** `b` iff `a` is at least as good on every
+//! objective (TOPS/W ↑, latency ↓, area ↓, accuracy bits ↑) and strictly
+//! better on at least one. The frontier is the set of non-dominated
+//! points. Equal-objective duplicates don't dominate each other, so ties
+//! all stay on the frontier (DESIGN.md §15).
+
+use crate::explore::score::ExplorePoint;
+
+/// `a` dominates `b` under (TOPS/W ↑, latency ↓, area ↓, accuracy ↑).
+pub fn dominates(a: &ExplorePoint, b: &ExplorePoint) -> bool {
+    let ge = a.tops_w >= b.tops_w
+        && a.latency_ms <= b.latency_ms
+        && a.area_mm2 <= b.area_mm2
+        && a.accuracy_bits >= b.accuracy_bits;
+    let gt = a.tops_w > b.tops_w
+        || a.latency_ms < b.latency_ms
+        || a.area_mm2 < b.area_mm2
+        || a.accuracy_bits > b.accuracy_bits;
+    ge && gt
+}
+
+/// Set `on_frontier` on every non-dominated point; returns the frontier
+/// size. O(n²), fine at sweep scale (hundreds of points).
+pub fn mark_frontier(points: &mut [ExplorePoint]) -> usize {
+    let n = points.len();
+    let mut on = vec![true; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&points[j], &points[i]) {
+                on[i] = false;
+                break;
+            }
+        }
+    }
+    let mut count = 0;
+    for (p, flag) in points.iter_mut().zip(&on) {
+        p.on_frontier = *flag;
+        if *flag {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Dominance consistency of a marked sweep — what `explore-smoke` asserts:
+/// no frontier point is dominated by any point, and every off-frontier
+/// point is dominated by some frontier point.
+pub fn frontier_consistent(points: &[ExplorePoint]) -> bool {
+    points.iter().all(|p| {
+        if p.on_frontier {
+            !points.iter().any(|q| dominates(q, p))
+        } else {
+            points.iter().any(|q| q.on_frontier && dominates(q, p))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(tops_w: f64, latency_ms: f64, area_mm2: f64, accuracy_bits: f64) -> ExplorePoint {
+        ExplorePoint {
+            label: String::new(),
+            rows: 64,
+            engines: 16,
+            cores: 4,
+            adc_bits: 9,
+            tops_w,
+            latency_ms,
+            area_mm2,
+            accuracy_bits,
+            cycles_per_input: 0,
+            energy_fj_per_input: 0.0,
+            total_tiles: 0,
+            n_shards: 0,
+            n_dynamic_shards: 0,
+            on_frontier: false,
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_ties_survive() {
+        let a = point(100.0, 1.0, 1.0, 9.0);
+        let worse = point(90.0, 2.0, 1.0, 9.0);
+        let tie = point(100.0, 1.0, 1.0, 9.0);
+        let tradeoff = point(120.0, 2.0, 1.0, 9.0);
+        assert!(dominates(&a, &worse));
+        assert!(!dominates(&worse, &a));
+        assert!(!dominates(&a, &tie) && !dominates(&tie, &a));
+        assert!(!dominates(&a, &tradeoff) && !dominates(&tradeoff, &a));
+    }
+
+    #[test]
+    fn frontier_marks_non_dominated_points_consistently() {
+        let mut pts = vec![
+            point(100.0, 1.0, 1.0, 9.0), // frontier
+            point(90.0, 2.0, 1.0, 9.0),  // dominated by [0]
+            point(120.0, 2.0, 1.0, 9.0), // frontier (tops_w tradeoff)
+            point(100.0, 1.0, 2.0, 9.0), // dominated by [0]
+        ];
+        let n = mark_frontier(&mut pts);
+        assert_eq!(n, 2);
+        assert!(pts[0].on_frontier && pts[2].on_frontier);
+        assert!(!pts[1].on_frontier && !pts[3].on_frontier);
+        assert!(frontier_consistent(&pts));
+        // Corrupt a flag: consistency must fail.
+        pts[1].on_frontier = true;
+        assert!(!frontier_consistent(&pts));
+    }
+}

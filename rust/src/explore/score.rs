@@ -1,0 +1,146 @@
+//! Analytic scoring of one hardware candidate on one workload.
+//!
+//! No simulation runs here: the score is
+//! [`crate::compiler::estimate_cost_lowered`]'s [`CostReport`] — the exact
+//! placement-time cost model (`compile` produces the bit-identical report,
+//! asserted by `tests/hwspec_explore.rs`) — reduced to the four sweep
+//! objectives:
+//!
+//! * **TOPS/W** — padded device ops per input over estimated energy per
+//!   input (reload energy included).
+//! * **Latency** — serial-device milliseconds per input at the candidate's
+//!   clock (compute + reload cycles).
+//! * **Area** — resident shards (shared + dedicated dynamic) times the
+//!   candidate's [`HwSpec::macro_area_mm2`].
+//! * **Accuracy proxy** — effective output bits: ADC resolution minus the
+//!   worst-case clipping penalty the DTC gain buys its signal margin with,
+//!   capped by the full-precision output width (DESIGN.md §15).
+
+use crate::compiler::place::{worst_clip_penalty_bits, CostReport};
+use crate::config::HwSpec;
+use crate::energy::fom::full_output_bits;
+use crate::energy::tops_per_watt;
+
+/// One scored candidate: the sweep label, the geometry summary, the four
+/// objectives, and the raw cost-model totals they were derived from.
+#[derive(Clone, Debug)]
+pub struct ExplorePoint {
+    pub label: String,
+    pub rows: usize,
+    pub engines: usize,
+    pub cores: usize,
+    pub adc_bits: u32,
+    /// Objective: throughput efficiency (maximize).
+    pub tops_w: f64,
+    /// Objective: serial-device latency per input, ms (minimize).
+    pub latency_ms: f64,
+    /// Objective: resident silicon, mm² (minimize).
+    pub area_mm2: f64,
+    /// Objective: accuracy proxy in effective output bits (maximize).
+    pub accuracy_bits: f64,
+    /// Compute + reload device cycles per input.
+    pub cycles_per_input: u64,
+    /// All-in estimated energy per input, fJ.
+    pub energy_fj_per_input: f64,
+    pub total_tiles: usize,
+    pub n_shards: usize,
+    pub n_dynamic_shards: usize,
+    /// On the Pareto frontier of the sweep (set by
+    /// [`crate::explore::pareto::mark_frontier`]).
+    pub on_frontier: bool,
+}
+
+/// Accuracy proxy in effective output bits — see DESIGN.md §15 for the
+/// derivation. The ADC resolves `adc_bits`; the DTC gain `s` scales the
+/// worst-case folded MAC signal to `worst · s / vpp` of the conversion
+/// range, and everything past full scale clips, costing
+/// `log2(worst · s / vpp)` worst-case bits (zero when the signal fits).
+/// The proxy is that effective resolution, capped by the full-precision
+/// output width `act_bits + weight_bits + log2(rows)`.
+pub fn accuracy_proxy_bits(hw: &HwSpec) -> f64 {
+    let adc = hw.mac.adc_bits as f64;
+    let full = full_output_bits(hw.mac.act_bits, hw.mac.weight_bits, hw.mac.rows);
+    (adc - worst_clip_penalty_bits(hw)).min(full)
+}
+
+/// Reduce a candidate's [`CostReport`] to an [`ExplorePoint`].
+pub fn score(label: String, hw: &HwSpec, report: &CostReport) -> ExplorePoint {
+    let cycles = report.total_est_cycles_per_input() + report.total_est_reload_cycles_per_input();
+    let energy_fj = report.total_est_energy_fj_per_input();
+    // Padded device ops per input: every placed tile fires rows×engines
+    // MACs per vector regardless of logical shape — the same convention as
+    // the paper's TOPS numbers (and `MacroConfig::ops_per_op` per core).
+    let ops_per_tile_op = 2.0 * hw.mac.rows as f64 * hw.mac.engines as f64;
+    let ops: f64 = report
+        .layers
+        .iter()
+        .map(|l| (l.vectors_per_input * l.n_rt * l.n_ct) as f64 * ops_per_tile_op)
+        .sum();
+    let shards = report.n_shards + report.n_dynamic_shards;
+    ExplorePoint {
+        label,
+        rows: hw.mac.rows,
+        engines: hw.mac.engines,
+        cores: hw.mac.cores,
+        adc_bits: hw.mac.adc_bits,
+        tops_w: tops_per_watt(ops, energy_fj),
+        latency_ms: crate::cim::timing::cycles_to_seconds(hw, cycles) * 1e3,
+        area_mm2: shards as f64 * hw.macro_area_mm2(),
+        accuracy_bits: accuracy_proxy_bits(hw),
+        cycles_per_input: cycles,
+        energy_fj_per_input: energy_fj,
+        total_tiles: report.total_tiles,
+        n_shards: report.n_shards,
+        n_dynamic_shards: report.n_dynamic_shards,
+        on_frontier: false,
+    }
+}
+
+impl ExplorePoint {
+    /// One flat JSON object (the environment vendors no `serde`).
+    pub fn to_json(&self) -> String {
+        use crate::bench::{json_row, JsonField};
+        json_row(&[
+            JsonField::Str("label", &self.label),
+            JsonField::Int("rows", self.rows as i64),
+            JsonField::Int("engines", self.engines as i64),
+            JsonField::Int("cores", self.cores as i64),
+            JsonField::Int("adc_bits", self.adc_bits as i64),
+            JsonField::Num("tops_w", self.tops_w),
+            JsonField::Num("latency_ms", self.latency_ms),
+            JsonField::Num("area_mm2", self.area_mm2),
+            JsonField::Num("accuracy_bits", self.accuracy_bits),
+            JsonField::Int("cycles_per_input", self.cycles_per_input as i64),
+            JsonField::Num("energy_fj_per_input", self.energy_fj_per_input),
+            JsonField::Int("total_tiles", self.total_tiles as i64),
+            JsonField::Int("n_shards", self.n_shards as i64),
+            JsonField::Int("n_dynamic_shards", self.n_dynamic_shards as i64),
+            JsonField::Int("on_frontier", i64::from(self.on_frontier)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_proxy_is_adc_bits_without_enhancement() {
+        let mut hw = HwSpec::paper_default();
+        hw.enhance = crate::config::EnhanceConfig { fold: false, boost: false, ..hw.enhance };
+        // s = 1 and the worst-case signal exactly fills VPP: no penalty.
+        assert_eq!(accuracy_proxy_bits(&hw), hw.mac.adc_bits as f64);
+    }
+
+    #[test]
+    fn accuracy_proxy_monotone_in_adc_bits_and_penalizes_boost_clipping() {
+        let base = HwSpec::paper_default();
+        let mut more = base.clone();
+        more.mac.adc_bits = 10;
+        assert!(accuracy_proxy_bits(&more) > accuracy_proxy_bits(&base));
+        // Paper default (fold+boost): gain 3.75× vs folding's 15/8 range
+        // shrink leaves exactly the boost factor 2× past full scale — one
+        // worst-case bit traded for typical-case signal margin.
+        assert!((accuracy_proxy_bits(&base) - (base.mac.adc_bits as f64 - 1.0)).abs() < 1e-12);
+    }
+}

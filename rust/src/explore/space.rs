@@ -1,0 +1,326 @@
+//! Sweep-space definition: which hardware keys vary, over which values.
+//!
+//! A space file is the same TOML subset `cimsim.toml` uses
+//! ([`crate::util::tomlcfg`]), with two sections:
+//!
+//! ```toml
+//! [base]                      # fixed overrides applied to every candidate
+//! macro.clock_mhz = 250.0
+//!
+//! [sweep]                     # axes; the sweep is the cross product
+//! macro.rows     = [32, 64, 128, 256]
+//! macro.engines  = [8, 16, 32]
+//! macro.cores    = [2, 4]
+//! macro.adc_bits = [7, 8, 9, 10]
+//! ```
+//!
+//! Keys are the dotted [`crate::config::HW_KEYS`] names. Every candidate
+//! starts from [`HwSpec::paper_default`], applies `[base]`, then one value
+//! per axis, and must pass [`HwSpec::validate`]; combinations that don't
+//! (e.g. a `fold_offset` outside a swept `act_bits` range) are skipped
+//! with a recorded reason rather than aborting the sweep.
+
+use crate::config::{HwSpec, HW_KEYS};
+use crate::util::tomlcfg::{Doc, ParseError, Value};
+
+/// Integer-typed hardware keys: sweep/base values must be TOML ints
+/// ([`HwSpec::overlay`] ignores floats for these, which would silently
+/// no-op the axis).
+const INT_KEYS: &[&str] = &[
+    "macro.cores",
+    "macro.engines",
+    "macro.rows",
+    "macro.act_bits",
+    "macro.weight_bits",
+    "macro.adc_bits",
+    "enhance.fold_offset",
+];
+
+/// Boolean-typed hardware keys.
+const BOOL_KEYS: &[&str] = &["enhance.fold", "enhance.boost"];
+
+/// A sweep-space or expansion error. Syntax errors keep the TOML parser's
+/// line numbers; semantic errors name the offending key.
+#[derive(Debug)]
+pub enum SpaceError {
+    /// TOML syntax error (carries the 1-based line number).
+    Parse(ParseError),
+    /// Structurally valid TOML that doesn't describe a sweep space.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SpaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpaceError::Parse(e) => write!(f, "{e}"),
+            SpaceError::Invalid(msg) => write!(f, "invalid sweep space: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpaceError {}
+
+impl From<ParseError> for SpaceError {
+    fn from(e: ParseError) -> Self {
+        SpaceError::Parse(e)
+    }
+}
+
+/// One sweep axis: a hardware key and its candidate values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<Value>,
+}
+
+/// A parsed sweep space: fixed `[base]` overrides plus `[sweep]` axes.
+/// Axes are held in sorted key order, so expansion is deterministic
+/// regardless of file layout.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepSpace {
+    pub base: Vec<(String, Value)>,
+    pub axes: Vec<Axis>,
+}
+
+/// One expanded candidate: a human-readable `key=value` label and the
+/// validated hardware point.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub label: String,
+    pub hw: HwSpec,
+}
+
+/// The result of expanding a [`SweepSpace`]: valid candidates plus the
+/// `(label, reason)` of every grid combination that failed validation —
+/// surfaced so a sweep never silently shrinks.
+#[derive(Clone, Debug, Default)]
+pub struct Expansion {
+    pub candidates: Vec<Candidate>,
+    pub skipped: Vec<(String, String)>,
+}
+
+fn check_value_type(key: &str, v: &Value) -> Result<(), SpaceError> {
+    let ok = if INT_KEYS.contains(&key) {
+        matches!(v, Value::Int(_))
+    } else if BOOL_KEYS.contains(&key) {
+        matches!(v, Value::Bool(_))
+    } else {
+        matches!(v, Value::Int(_) | Value::Float(_))
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(SpaceError::Invalid(format!("wrong value type for `{key}`: {v:?}")))
+    }
+}
+
+fn check_hw_key(key: &str) -> Result<(), SpaceError> {
+    if HW_KEYS.contains(&key) {
+        Ok(())
+    } else {
+        Err(SpaceError::Invalid(format!("unknown hardware key `{key}`")))
+    }
+}
+
+impl SweepSpace {
+    /// Parse a space file. Syntax errors carry line numbers; unknown keys,
+    /// wrong value types, and empty axes are rejected.
+    pub fn parse(text: &str) -> Result<SweepSpace, SpaceError> {
+        let doc = Doc::parse(text)?;
+        let mut base = Vec::new();
+        let mut axes = Vec::new();
+        for key in doc.keys() {
+            let v = doc.get(key).expect("listed key resolves");
+            if let Some(hw_key) = key.strip_prefix("base.") {
+                check_hw_key(hw_key)?;
+                check_value_type(hw_key, v)?;
+                base.push((hw_key.to_string(), v.clone()));
+            } else if let Some(hw_key) = key.strip_prefix("sweep.") {
+                check_hw_key(hw_key)?;
+                let values = match v {
+                    Value::Array(items) if items.is_empty() => {
+                        return Err(SpaceError::Invalid(format!("empty axis `{hw_key}`")));
+                    }
+                    Value::Array(items) => items.clone(),
+                    scalar => vec![scalar.clone()],
+                };
+                for item in &values {
+                    check_value_type(hw_key, item)?;
+                }
+                axes.push(Axis { key: hw_key.to_string(), values });
+            } else {
+                return Err(SpaceError::Invalid(format!(
+                    "key `{key}` is outside [base]/[sweep]"
+                )));
+            }
+        }
+        // `Doc` iterates sorted; keep that order explicit for readers.
+        base.sort_by(|a, b| a.0.cmp(&b.0));
+        axes.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(SweepSpace { base, axes })
+    }
+
+    /// The built-in grid: array geometry × parallelism × ADC resolution
+    /// around the paper's point (which the grid contains), 96 candidates.
+    pub fn default_grid() -> SweepSpace {
+        let ints = |xs: &[i64]| xs.iter().map(|&i| Value::Int(i)).collect::<Vec<_>>();
+        SweepSpace {
+            base: Vec::new(),
+            axes: vec![
+                Axis { key: "macro.adc_bits".into(), values: ints(&[7, 8, 9, 10]) },
+                Axis { key: "macro.cores".into(), values: ints(&[2, 4]) },
+                Axis { key: "macro.engines".into(), values: ints(&[8, 16, 32]) },
+                Axis { key: "macro.rows".into(), values: ints(&[32, 64, 128, 256]) },
+            ],
+        }
+    }
+
+    /// Grid size before validation (product of axis lengths; 1 when there
+    /// are no axes — the base point alone).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a space always expands to at least the base point
+    }
+
+    /// Serialize back to the space-file TOML ([`SweepSpace::parse`] of the
+    /// output reproduces `self` — asserted by the round-trip tests).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        if !self.base.is_empty() {
+            out.push_str("[base]\n");
+            for (k, v) in &self.base {
+                out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+            }
+        }
+        out.push_str("[sweep]\n");
+        for axis in &self.axes {
+            let vals: Vec<String> = axis.values.iter().map(fmt_value).collect();
+            out.push_str(&format!("{} = [{}]\n", axis.key, vals.join(", ")));
+        }
+        out
+    }
+
+    /// Expand the cross product into validated hardware points. Axis
+    /// values cycle with the last axis fastest (row-major over the sorted
+    /// axes), so candidate order is deterministic.
+    pub fn expand(&self) -> Result<Expansion, SpaceError> {
+        let mut base_doc = Doc::default();
+        for (k, v) in &self.base {
+            base_doc.set(k, v.clone());
+        }
+        let mut base_hw = HwSpec::paper_default();
+        base_hw
+            .overlay(&base_doc)
+            .map_err(|e| SpaceError::Invalid(format!("[base] overlay failed: {e}")))?;
+
+        let n = self.len();
+        let mut out = Expansion::default();
+        for idx in 0..n {
+            // Mixed-radix digits of `idx`, last axis fastest.
+            let mut rem = idx;
+            let mut picks = vec![0usize; self.axes.len()];
+            for (a, axis) in self.axes.iter().enumerate().rev() {
+                picks[a] = rem % axis.values.len();
+                rem /= axis.values.len();
+            }
+            let mut doc = Doc::default();
+            let mut label_parts = Vec::with_capacity(self.axes.len());
+            for (a, axis) in self.axes.iter().enumerate() {
+                let v = &axis.values[picks[a]];
+                doc.set(&axis.key, v.clone());
+                label_parts.push(format!("{}={}", axis.key, fmt_value(v)));
+            }
+            let label =
+                if label_parts.is_empty() { "base".to_string() } else { label_parts.join(" ") };
+            let mut hw = base_hw.clone();
+            hw.overlay(&doc)
+                .map_err(|e| SpaceError::Invalid(format!("axis overlay failed: {e}")))?;
+            match hw.validate() {
+                Ok(()) => out.candidates.push(Candidate { label, hw }),
+                Err(e) => out.skipped.push((label, e.to_string())),
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn fmt_value(v: &Value) -> String {
+    match v {
+        Value::Int(i) => format!("{i}"),
+        Value::Float(f) => {
+            // Keep a float marker so parse → serialize → parse preserves
+            // the Int/Float distinction.
+            let s = format!("{f}");
+            if s.contains('.') || s.contains('e') || s.contains('E') {
+                s
+            } else {
+                format!("{s}.0")
+            }
+        }
+        Value::Bool(b) => format!("{b}"),
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(fmt_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_contains_the_paper_point_and_enough_of_them() {
+        let space = SweepSpace::default_grid();
+        assert!(space.len() >= 64, "grid {} < 64 points", space.len());
+        let exp = space.expand().unwrap();
+        assert_eq!(exp.candidates.len(), space.len(), "default grid all-valid");
+        let paper = HwSpec::paper_default();
+        assert!(
+            exp.candidates.iter().any(|c| c.hw == paper),
+            "paper point missing from the default grid"
+        );
+    }
+
+    #[test]
+    fn parse_serialize_parse_round_trips() {
+        let space = SweepSpace::parse(
+            "[base]\nmacro.clock_mhz = 250.0\n[sweep]\nmacro.rows = [32, 64]\nmacro.adc_bits = [8, 9]\n",
+        )
+        .unwrap();
+        let re = SweepSpace::parse(&space.to_toml()).unwrap();
+        assert_eq!(space, re);
+        assert_eq!(space.len(), 4);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_wrong_types_and_bad_syntax() {
+        let e = SweepSpace::parse("[sweep]\nmacro.rowz = [1]\n").unwrap_err();
+        assert!(matches!(e, SpaceError::Invalid(ref m) if m.contains("macro.rowz")), "{e}");
+        let e = SweepSpace::parse("[sweep]\nmacro.rows = [64.5]\n").unwrap_err();
+        assert!(matches!(e, SpaceError::Invalid(_)), "{e}");
+        let e = SweepSpace::parse("[sweep]\nmacro.rows = []\n").unwrap_err();
+        assert!(matches!(e, SpaceError::Invalid(ref m) if m.contains("empty axis")), "{e}");
+        let e = SweepSpace::parse("[other]\nx = 1\n").unwrap_err();
+        assert!(matches!(e, SpaceError::Invalid(_)), "{e}");
+        // Syntax errors keep the TOML parser's line numbers.
+        let e = SweepSpace::parse("[sweep]\nbroken\n").unwrap_err();
+        match e {
+            SpaceError::Parse(p) => assert_eq!(p.line, 2),
+            other => panic!("expected parse error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn invalid_combinations_skip_with_reasons() {
+        // act_bits=2 makes fold_offset=8 (the paper default) out of range.
+        let space = SweepSpace::parse("[sweep]\nmacro.act_bits = [2, 4]\n").unwrap();
+        let exp = space.expand().unwrap();
+        assert_eq!(exp.candidates.len() + exp.skipped.len(), 2);
+        assert_eq!(exp.skipped.len(), 1, "skipped: {:?}", exp.skipped);
+    }
+}

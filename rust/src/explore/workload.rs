@@ -1,0 +1,110 @@
+//! The fixed workload menu the sweep scores against: one representative
+//! network per roadmap workload class, each with a deterministic
+//! calibration set (seeded [`crate::util::rng::Xoshiro256`] data), so two
+//! runs of the same sweep produce identical frontiers.
+
+use crate::compiler::Graph;
+use crate::nn::mlp::Mlp;
+use crate::nn::resnet::ResNet20;
+use crate::nn::tensor::Tensor;
+use crate::nn::transformer::{DecoderModel, TransformerBlock};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// A named candidate workload for `cimsim explore`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// 3-layer MLP on 12×12 inputs (the training-demo shape).
+    Mlp,
+    /// The paper's Fig. 1 mapping workload: CIFAR-shaped ResNet-20.
+    Resnet20,
+    /// One MHA+FFN encoder block — the dynamic-weight (`MatMul`) workload.
+    Transformer,
+    /// A 2-layer GPT-style causal decoder prefix (the KV-cache class,
+    /// scored here as its fixed-shape compile-path graph).
+    Decode,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 4] =
+        [Workload::Mlp, Workload::Resnet20, Workload::Transformer, Workload::Decode];
+
+    /// CLI name (`--workload <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Mlp => "mlp",
+            Workload::Resnet20 => "resnet20",
+            Workload::Transformer => "transformer",
+            Workload::Decode => "decode",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Workload> {
+        Self::ALL.into_iter().find(|w| w.name() == name)
+    }
+
+    /// Build the graph plus its deterministic calibration inputs.
+    pub fn build(self) -> (Graph, Vec<Tensor>) {
+        match self {
+            Workload::Mlp => {
+                let mlp = Mlp::new(&[144, 32, 10], 7);
+                let graph = Graph::from_mlp(&mlp);
+                let cal = (0..4).map(|i| random_vec(144, 0x3A11 + i)).collect();
+                (graph, cal)
+            }
+            Workload::Resnet20 => {
+                let net = ResNet20::new(3);
+                let graph = Graph::from_resnet20(&net);
+                let cal = vec![crate::nn::dataset::random_image(&[3, 32, 32], 21)];
+                (graph, cal)
+            }
+            Workload::Transformer => {
+                let block = TransformerBlock::new(32, 4, 64, 42);
+                let seq = 8;
+                let graph = Graph::from_transformer_block(&block, seq);
+                let cal = (0..3).map(|i| random_seq(seq, 32, 0x7E11 + i)).collect();
+                (graph, cal)
+            }
+            Workload::Decode => {
+                let model = DecoderModel::new(16, 2, 32, 32, 2, 24, 42);
+                let seq = 16;
+                let graph = Graph::from_decoder(&model, seq);
+                let mut rng = Xoshiro256::seeded(0xDE_C0DE);
+                let cal = (0..3)
+                    .map(|_| {
+                        let toks: Vec<usize> =
+                            (0..seq).map(|_| (rng.next_u64() % 32) as usize).collect();
+                        model.embed_seq(&toks)
+                    })
+                    .collect();
+                (graph, cal)
+            }
+        }
+    }
+}
+
+fn random_vec(n: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seeded(seed);
+    Tensor::from_vec(&[n], (0..n).map(|_| rng.next_f32()).collect())
+}
+
+fn random_seq(seq: usize, d: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seeded(seed);
+    Tensor::from_vec(&[seq, d], (0..seq * d).map(|_| (rng.next_f32() - 0.5) * 2.0).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_graphs_build() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::from_name(w.name()), Some(w));
+            let (graph, cal) = w.build();
+            assert!(!graph.nodes.is_empty());
+            assert!(!cal.is_empty());
+            graph.infer_shapes().unwrap();
+        }
+        assert_eq!(Workload::from_name("nope"), None);
+    }
+}

@@ -134,6 +134,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod explore;
 pub mod harness;
 pub mod mapping;
 pub mod nn;

@@ -1,7 +1,7 @@
 //! `cimsim` CLI — leader entrypoint of the L3 coordinator.
 
 use cimsim::config::{Config, EnhanceConfig};
-use cimsim::coordinator::{serve, serve_pipeline, Client, MlpDeployment, ServeConfig};
+use cimsim::coordinator::{Client, MlpDeployment, ServeConfig, ServeFrontend};
 use cimsim::harness::{ablation, accuracy, figs};
 use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::BlobDataset;
@@ -72,6 +72,17 @@ fn spec() -> Cli {
                     OptSpec { name: "trace-out", value_name: Some("FILE"), default: Some("trace.json"), help: "trace output file (open in Perfetto / chrome://tracing)" },
                     OptSpec { name: "batch", value_name: Some("N"), default: Some("16"), help: "items per traced batch" },
                     OptSpec { name: "workers", value_name: Some("N"), default: Some("2"), help: "plan worker threads" },
+                ]),
+                positional: None,
+            },
+            CmdSpec {
+                name: "explore",
+                about: "sweep a hardware design space, emit the Pareto frontier JSON",
+                opts: common(vec![
+                    OptSpec { name: "workload", value_name: Some("NAME"), default: Some("resnet20"), help: "mlp | resnet20 | transformer | decode" },
+                    OptSpec { name: "space", value_name: Some("FILE"), default: None, help: "sweep-space TOML (default: built-in 96-point grid)" },
+                    OptSpec { name: "json-out", value_name: Some("FILE"), default: None, help: "sweep JSON path (default: <out>/explore_<workload>.json)" },
+                    OptSpec { name: "frontier-only", value_name: None, default: None, help: "print only Pareto-frontier points" },
                 ]),
                 positional: None,
             },
@@ -219,17 +230,13 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 let opts = CompileOptions { workers, ..Default::default() };
                 let plan = compile(graph, &cal_t, &c, &opts).map_err(std::io::Error::other)?;
                 println!("{}", plan.cost_report().table(&c).to_markdown());
-                let h = cimsim::coordinator::serve_plan(
-                    plan,
-                    ServeConfig {
-                        max_batch,
-                        max_queue,
-                        workers,
-                        stream,
-                        metrics_addr: metrics_addr.clone(),
-                        ..Default::default()
-                    },
-                )?;
+                let h = ServeConfig::builder()
+                    .max_batch(max_batch)
+                    .max_queue(max_queue)
+                    .workers(workers)
+                    .stream(stream)
+                    .metrics_addr_opt(metrics_addr.clone())
+                    .serve(ServeFrontend::Plan(plan))?;
                 println!(
                     "serving on {} (graph-compiled plan{})",
                     h.addr,
@@ -239,29 +246,22 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             } else if args.flag("pipeline") {
                 let workers = args.get_usize("workers")?;
                 let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
-                let serve_cfg = ServeConfig {
-                    max_batch,
-                    max_queue,
-                    workers,
-                    metrics_addr: metrics_addr.clone(),
-                    ..Default::default()
-                };
-                let h = serve_pipeline(dep, c.clone(), serve_cfg)?;
+                let h = ServeConfig::builder()
+                    .max_batch(max_batch)
+                    .max_queue(max_queue)
+                    .workers(workers)
+                    .metrics_addr_opt(metrics_addr.clone())
+                    .serve(ServeFrontend::Pipeline { deployment: dep, sim: c.clone() })?;
                 println!("serving on {} (pooled pipeline)", h.addr);
                 h
             } else {
                 let dep = MlpDeployment::quantize(&mlp, &cal, 1.0);
                 let backend = Box::new(NativeBackend::new(c.clone()));
-                let h = serve(
-                    dep,
-                    backend,
-                    ServeConfig {
-                        max_batch,
-                        max_queue,
-                        metrics_addr: metrics_addr.clone(),
-                        ..Default::default()
-                    },
-                )?;
+                let h = ServeConfig::builder()
+                    .max_batch(max_batch)
+                    .max_queue(max_queue)
+                    .metrics_addr_opt(metrics_addr.clone())
+                    .serve(ServeFrontend::Backend { deployment: dep, backend })?;
                 println!("serving on {}", h.addr);
                 h
             };
@@ -334,6 +334,67 @@ fn run(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 "wrote {spans} spans to {out_path} — load it at ui.perfetto.dev or chrome://tracing"
             );
         }
+        "explore" => {
+            use cimsim::explore::{run_sweep, SweepSpace, Workload};
+            let wname = args.get_string("workload");
+            let workload = Workload::from_name(&wname).ok_or_else(|| {
+                std::io::Error::other(format!(
+                    "unknown workload `{wname}` (mlp | resnet20 | transformer | decode)"
+                ))
+            })?;
+            let space = match args.get("space") {
+                Some(path) => SweepSpace::parse(&std::fs::read_to_string(path)?)?,
+                None => SweepSpace::default_grid(),
+            };
+            println!(
+                "sweeping {} candidate hardware points on `{}` (analytic cost model)...",
+                space.len(),
+                workload.name()
+            );
+            let result = run_sweep(workload, &space)?;
+            if !result.skipped.is_empty() {
+                println!("skipped {} invalid candidate(s):", result.skipped.len());
+                for (label, reason) in &result.skipped {
+                    println!("  {label}: {reason}");
+                }
+            }
+            println!(
+                "{:<52} {:>9} {:>11} {:>9} {:>8}",
+                "candidate", "TOPS/W", "latency ms", "mm2", "eff bits"
+            );
+            let frontier_only = args.flag("frontier-only");
+            for pt in &result.points {
+                if frontier_only && !pt.on_frontier {
+                    continue;
+                }
+                println!(
+                    "{:<52} {:>9.1} {:>11.3} {:>9.3} {:>8.2}{}",
+                    pt.label,
+                    pt.tops_w,
+                    pt.latency_ms,
+                    pt.area_mm2,
+                    pt.accuracy_bits,
+                    if pt.on_frontier { "  *" } else { "" }
+                );
+            }
+            println!(
+                "{} of {} points on the Pareto frontier (*)",
+                result.n_frontier,
+                result.points.len()
+            );
+            let out_path = match args.get("json-out") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => Path::new(&cfg.sim.out_dir)
+                    .join(format!("explore_{}.json", workload.name())),
+            };
+            if let Some(dir) = out_path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(&out_path, result.to_json())?;
+            println!("wrote {}", out_path.display());
+        }
         "selftest" => {
             let mut c = cfg.clone();
             c.noise.enabled = false;
@@ -388,10 +449,12 @@ fn serve_decode_demo(args: &Args, c: &Config) -> Result<(), Box<dyn std::error::
         plan.sites()
     );
 
-    let handle = cimsim::coordinator::serve_decode(
-        plan,
-        ServeConfig { max_batch, max_queue, stream, metrics_addr, ..Default::default() },
-    )?;
+    let handle = ServeConfig::builder()
+        .max_batch(max_batch)
+        .max_queue(max_queue)
+        .stream(stream)
+        .metrics_addr_opt(metrics_addr)
+        .serve(ServeFrontend::Decode(plan))?;
     println!(
         "serving decode on {} ({} slots{})",
         handle.addr,

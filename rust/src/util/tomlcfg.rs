@@ -123,6 +123,13 @@ impl Doc {
         self.map.get(key)
     }
 
+    /// Insert or replace a dotted key — programmatic `Doc` construction,
+    /// used by the explore harness to build per-candidate overlay docs
+    /// without a TOML round-trip.
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.map.insert(key.to_string(), value);
+    }
+
     pub fn f64(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(Value::as_f64)
     }

@@ -651,6 +651,32 @@ fn refresh_decode_row() {
     write_rows("BENCH_decode.json", &[json_row(&fields)]);
 }
 
+fn refresh_explore_row() {
+    // Same sweep as benches/explore_sweep.rs (single timed run): default
+    // grid on the MLP workload, scored analytically.
+    use cimsim::explore::{frontier_consistent, run_sweep, SweepSpace, Workload};
+    let space = SweepSpace::default_grid();
+    let workload = Workload::Mlp;
+    let t0 = Instant::now();
+    let result = run_sweep(workload, &space).unwrap();
+    let sweep_s = t0.elapsed().as_secs_f64();
+    assert!(frontier_consistent(&result.points));
+
+    let mut fields = vec![
+        JsonField::Str("bench", "explore_sweep"),
+        JsonField::Str("workload", workload.name()),
+        JsonField::Str("space", "default_grid"),
+        JsonField::Int("candidates", space.len() as i64),
+        JsonField::Int("points", result.points.len() as i64),
+        JsonField::Int("frontier", result.n_frontier as i64),
+        JsonField::Int("skipped", result.skipped.len() as i64),
+        JsonField::Num("sweep_ms", sweep_s * 1e3),
+        JsonField::Num("points_per_s", result.points.len() as f64 / sweep_s),
+    ];
+    fields.extend(provenance_fields());
+    write_rows("BENCH_explore.json", &[json_row(&fields)]);
+}
+
 /// If `BENCH_baseline.json` is still the bootstrap stub, arm the
 /// bench-regression gate from the freshly-measured rows. Quietly a no-op
 /// when `python3` is unavailable (the CI python job arms it instead).
@@ -683,7 +709,7 @@ fn arm_baseline_if_bootstrap() {
     }
 }
 
-/// One test (not several) so the six refreshes never race on the files.
+/// One test (not several) so the per-file refreshes never race.
 #[test]
 fn bench_trajectory_has_no_placeholders() {
     // The kernel file also refreshes on schema drift: a measured pre-§14
@@ -715,6 +741,9 @@ fn bench_trajectory_has_no_placeholders() {
     {
         refresh_decode_row();
     }
+    if needs_refresh("BENCH_explore.json") || lacks_field("BENCH_explore.json", "points_per_s") {
+        refresh_explore_row();
+    }
     for f in [
         "BENCH_kernel.json",
         "BENCH_pipeline.json",
@@ -723,6 +752,7 @@ fn bench_trajectory_has_no_placeholders() {
         "BENCH_attention.json",
         "BENCH_telemetry.json",
         "BENCH_decode.json",
+        "BENCH_explore.json",
     ] {
         let text = std::fs::read_to_string(bench_json_path(f)).unwrap();
         assert!(
@@ -752,6 +782,12 @@ fn bench_trajectory_has_no_placeholders() {
     assert!(
         dec.contains("tok_per_s") && dec.contains("reload_cycle_frac"),
         "BENCH_decode.json lacks the decode-throughput trajectory row"
+    );
+    // The explore trajectory reports sweep throughput (DESIGN.md §15).
+    let exp = std::fs::read_to_string(bench_json_path("BENCH_explore.json")).unwrap();
+    assert!(
+        exp.contains("points_per_s") && exp.contains("\"frontier\""),
+        "BENCH_explore.json lacks the design-space sweep trajectory row"
     );
     // The measured telemetry row (from whichever profile wrote it last)
     // must honor the DESIGN.md §12 overhead budget.

@@ -1,0 +1,166 @@
+//! HwSpec and explore-harness acceptance tests (DESIGN.md §15).
+//!
+//! The design-space sweep scores candidates with the *analytic* cost model
+//! only, so the whole harness rests on one claim: for any spec,
+//! [`estimate_cost`] returns the bit-identical [`CostReport`] that
+//! [`compile`] itself would attach to the plan. These tests pin that
+//! equivalence at `HwSpec::paper_default()` for ResNet-20 and the
+//! transformer block (per-layer, via `PartialEq` on every field), fuzz it
+//! over random valid geometries, and exercise the TOML round-trips the
+//! `cimsim explore` CLI depends on.
+
+use cimsim::compiler::{compile, estimate_cost, CompileOptions, CostReport, Graph};
+use cimsim::config::{Config, HwSpec};
+use cimsim::explore::{frontier_consistent, run_sweep, SweepSpace, Workload};
+use cimsim::nn::tensor::Tensor;
+use cimsim::util::proptest::check;
+use cimsim::util::tomlcfg::Doc;
+
+/// Compile the graph and also run the analytic estimator on an identical
+/// copy; return both reports.
+fn both_reports(graph: Graph, cal: &[Tensor], cfg: &Config) -> (CostReport, CostReport) {
+    let opts = CompileOptions::default();
+    let estimated = estimate_cost(&graph, cal, cfg, &opts).expect("estimate_cost");
+    let plan = compile(graph, cal, cfg, &opts).expect("compile");
+    (plan.cost_report().clone(), estimated)
+}
+
+#[test]
+fn paper_default_estimate_matches_compile_bit_for_bit_on_resnet20() {
+    let (graph, cal) = Workload::Resnet20.build();
+    let cfg = Config::from_hw(HwSpec::paper_default());
+    let (compiled, estimated) = both_reports(graph, &cal, &cfg);
+
+    // Per-layer first, so a mismatch names the layer instead of dumping
+    // two whole reports.
+    assert_eq!(compiled.layers.len(), estimated.layers.len());
+    for (c, e) in compiled.layers.iter().zip(&estimated.layers) {
+        assert_eq!(c, e, "layer {} diverged between compile and estimate", c.name);
+    }
+    assert_eq!(compiled, estimated);
+
+    // Pinned paper-point facts: if these drift, the cost model changed and
+    // DESIGN.md §15 / BENCH baselines need revisiting.
+    assert_eq!(compiled.layers.len(), 22);
+    assert_eq!(compiled.total_tiles, 282);
+    assert_eq!(compiled.n_shards, 71);
+    assert_eq!(compiled.n_dynamic_shards, 0);
+}
+
+#[test]
+fn paper_default_estimate_matches_compile_bit_for_bit_on_transformer() {
+    let (graph, cal) = Workload::Transformer.build();
+    let cfg = Config::from_hw(HwSpec::paper_default());
+    let (compiled, estimated) = both_reports(graph, &cal, &cfg);
+
+    for (c, e) in compiled.layers.iter().zip(&estimated.layers) {
+        assert_eq!(c, e, "layer {} diverged between compile and estimate", c.name);
+    }
+    assert_eq!(compiled, estimated);
+
+    // The block's attention matmuls are dynamic-weight layers: the
+    // estimator must reproduce their dedicated-shard accounting too.
+    assert!(compiled.layers.iter().any(|l| l.dynamic));
+    assert!(compiled.n_dynamic_shards > 0);
+}
+
+#[test]
+fn estimate_matches_compile_across_random_valid_geometries() {
+    let (graph, cal) = Workload::Mlp.build();
+    check("estimate_cost == compile cost report", 12, |g| {
+        let mut hw = HwSpec::paper_default();
+        hw.mac.rows = *g.pick(&[32, 64, 128, 256]);
+        hw.mac.cores = *g.pick(&[1, 2, 4, 8]);
+        hw.mac.engines = *g.pick(&[4, 8, 16, 32]);
+        hw.mac.adc_bits = *g.pick(&[6, 8, 9, 10, 12]);
+        hw.enhance.fold = g.bool();
+        hw.enhance.boost = g.bool();
+        if !hw.enhance.fold {
+            hw.enhance.fold_offset = 0;
+        }
+        hw.validate().map_err(|e| format!("invalid case: {e}"))?;
+        let cfg = Config::from_hw(hw);
+        let (compiled, estimated) = both_reports(graph.clone(), &cal, &cfg);
+        if compiled != estimated {
+            return Err(format!(
+                "reports diverged at rows={} cores={} engines={}",
+                cfg.mac.rows, cfg.mac.cores, cfg.mac.engines
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hwspec_toml_round_trips_through_overlay() {
+    let base = HwSpec::paper_default();
+    let doc = Doc::parse(&base.to_toml()).expect("paper_default serializes to valid TOML");
+    let mut re = HwSpec::default();
+    re.overlay(&doc).unwrap();
+    assert_eq!(re, base);
+
+    // A mutated spec must round-trip too (float shortest-form printing,
+    // bools, and every section header survive parse → overlay).
+    let mut hw = base.clone();
+    hw.mac.rows = 128;
+    hw.mac.adc_bits = 7;
+    hw.enhance.boost = false;
+    hw.energy.e_sa_cmp *= 1.25;
+    hw.anchors.dense_tops_w = 99.5;
+    let doc = Doc::parse(&hw.to_toml()).unwrap();
+    let mut re = HwSpec::default();
+    re.overlay(&doc).unwrap();
+    assert_eq!(re, hw);
+}
+
+#[test]
+fn sweep_space_round_trips_and_rejects_bad_input_with_line_numbers() {
+    let text = "[base]\nmacro.engines = 8\n\n[sweep]\nmacro.rows = [32, 64, 128]\nmacro.adc_bits = [8, 9]\n";
+    let space = SweepSpace::parse(text).unwrap();
+    assert_eq!(space.len(), 6);
+    let reparsed = SweepSpace::parse(&space.to_toml()).unwrap();
+    assert_eq!(reparsed, space);
+    assert_eq!(reparsed.to_toml(), space.to_toml());
+
+    // Syntax errors carry 1-based line numbers from the TOML layer.
+    let err = SweepSpace::parse("[sweep]\nmacro.rows = [32,\n").unwrap_err();
+    assert!(err.to_string().contains("line 2"), "got: {err}");
+
+    // Unknown hardware keys and wrong-typed values are rejected up front —
+    // `HwSpec::overlay` would silently ignore them mid-sweep otherwise.
+    assert!(SweepSpace::parse("[sweep]\nmacro.nonsense = [1, 2]\n").is_err());
+    assert!(SweepSpace::parse("[sweep]\nmacro.rows = [32.5, 64.0]\n").is_err());
+}
+
+#[test]
+fn default_grid_is_acceptance_sized_and_contains_the_paper_point() {
+    let space = SweepSpace::default_grid();
+    assert!(space.len() >= 64, "default grid has {} points", space.len());
+    let expansion = space.expand().unwrap();
+    assert!(expansion.candidates.len() >= 64);
+    let paper = HwSpec::paper_default();
+    assert!(
+        expansion.candidates.iter().any(|c| c.hw == paper),
+        "default grid must include the paper's silicon as one candidate"
+    );
+}
+
+#[test]
+fn resnet20_sweep_produces_a_consistent_frontier() {
+    let space =
+        SweepSpace::parse("[sweep]\nmacro.rows = [32, 64, 128]\nmacro.adc_bits = [8, 9]\n")
+            .unwrap();
+    let result = run_sweep(Workload::Resnet20, &space).unwrap();
+    assert_eq!(result.points.len(), 6);
+    assert!(result.n_frontier >= 1);
+    assert!(frontier_consistent(&result.points));
+    assert_eq!(result.n_frontier, result.frontier().count());
+    // The paper geometry (rows=64, adc=9) is in this grid; its score must
+    // carry the 8.0-effective-bit proxy derived in DESIGN.md §15.
+    let paper = result
+        .points
+        .iter()
+        .find(|p| p.rows == 64 && p.adc_bits == 9)
+        .expect("paper point scored");
+    assert!((paper.accuracy_bits - 8.0).abs() < 1e-12);
+}

@@ -4,7 +4,7 @@
 
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::{argmax, MlpDeployment};
-use cimsim::coordinator::{serve, Client, ServeConfig};
+use cimsim::coordinator::{Client, ServeConfig, ServeFrontend};
 use cimsim::harness::accuracy::sigma_error_pct;
 use cimsim::mapping::{CimBackend, DigitalBackend, NativeBackend};
 use cimsim::nn::dataset::BlobDataset;
@@ -116,7 +116,9 @@ fn serving_under_concurrent_load() {
     let _ = expected; // noise differs per draw; we check shape+stability below
 
     let backend = Box::new(NativeBackend::new(cfg.clone()));
-    let handle = serve(dep, backend, ServeConfig::default()).unwrap();
+    let handle = ServeConfig::builder()
+        .serve(ServeFrontend::Backend { deployment: dep, backend })
+        .unwrap();
     let addr = handle.addr;
     let mut joins = Vec::new();
     for t in 0..3 {

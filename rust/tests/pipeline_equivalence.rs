@@ -7,7 +7,7 @@ use cimsim::cim::weights::CoreWeights;
 use cimsim::cim::{golden, CoreOpResult, OpScratch};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::MlpDeployment;
-use cimsim::coordinator::{serve_pipeline, Client, ServeConfig};
+use cimsim::coordinator::{Client, ServeConfig, ServeFrontend};
 use cimsim::mapping::executor::CimLinear;
 use cimsim::mapping::NativeBackend;
 use cimsim::nn::dataset::BlobDataset;
@@ -156,13 +156,12 @@ fn concurrent_clients_get_single_client_results_and_batches_coalesce() {
 
     let n_clients = 6usize;
     let rounds = 4usize;
-    let serve_cfg = ServeConfig {
-        max_batch: n_clients,
-        max_wait: std::time::Duration::from_millis(200),
-        workers: 2,
-        ..ServeConfig::default()
-    };
-    let handle = serve_pipeline(dep, cfg, serve_cfg).unwrap();
+    let handle = ServeConfig::builder()
+        .max_batch(n_clients)
+        .max_wait(std::time::Duration::from_millis(200))
+        .workers(2)
+        .serve(ServeFrontend::Pipeline { deployment: dep, sim: cfg })
+        .unwrap();
     let addr = handle.addr;
 
     let mut joins = Vec::new();

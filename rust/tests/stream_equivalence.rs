@@ -11,7 +11,7 @@ use cimsim::compiler::{compile, CompileOptions, Graph, StreamOptions};
 use cimsim::config::{Config, EnhanceConfig};
 use cimsim::coordinator::deployment::MlpDeployment;
 use cimsim::coordinator::{
-    serve_engine, serve_plan, BackendEngine, Client, InferenceEngine, ServeConfig,
+    serve_engine, BackendEngine, Client, InferenceEngine, ServeConfig, ServeFrontend,
 };
 use cimsim::mapping::{DigitalBackend, MapError};
 use cimsim::nn::dataset::{random_image, BlobDataset};
@@ -175,14 +175,13 @@ fn streamed_serve_soak_no_drops_and_pipelines() {
     };
 
     let plan = compile(graph, &cal, &cfg, &opts).unwrap();
-    let serve_cfg = ServeConfig {
-        max_batch: 8,
-        max_wait: Duration::from_millis(20),
-        max_queue: 4, // far below the request count: backpressure territory
-        stream: true,
-        ..ServeConfig::default()
-    };
-    let handle = serve_plan(plan, serve_cfg).unwrap();
+    let handle = ServeConfig::builder()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(20))
+        .max_queue(4) // far below the request count: backpressure territory
+        .stream(true)
+        .serve(ServeFrontend::Plan(plan))
+        .unwrap();
     let addr = handle.addr;
 
     let n_clients = 8usize;
@@ -270,12 +269,11 @@ fn shutdown_drains_admitted_requests() {
     };
     // max_batch 1 + a slow engine: most of the N requests are still in the
     // admission queue when shutdown lands.
-    let serve_cfg = ServeConfig {
-        max_batch: 1,
-        max_wait: Duration::from_millis(1),
-        max_queue: 64,
-        ..ServeConfig::default()
-    };
+    let serve_cfg = ServeConfig::builder()
+        .max_batch(1)
+        .max_wait(Duration::from_millis(1))
+        .max_queue(64)
+        .build();
     let handle = serve_engine(Box::new(engine), serve_cfg).unwrap();
     let addr = handle.addr;
 

@@ -29,7 +29,7 @@
 
 use cimsim::compiler::{compile, CompileOptions, Graph};
 use cimsim::config::{Config, EnhanceConfig};
-use cimsim::coordinator::{serve_plan, Client, ServeConfig};
+use cimsim::coordinator::{Client, ServeConfig, ServeFrontend};
 use cimsim::nn::dataset::BlobDataset;
 use cimsim::nn::mlp::{train, Mlp};
 use cimsim::nn::tensor::Tensor;
@@ -88,17 +88,13 @@ fn scraped_metrics_equal_reference_exec_stats_exactly() {
     let inputs: Vec<Vec<f32>> = data.iter().take(5).map(|(x, _)| x.clone()).collect();
 
     let plan = compile(Graph::from_mlp(&mlp), &cal, &cfg, &opts).unwrap();
-    let handle = serve_plan(
-        plan,
-        ServeConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-            stream: true,
-            metrics_addr: Some("127.0.0.1:0".to_string()),
-            ..ServeConfig::default()
-        },
-    )
-    .unwrap();
+    let handle = ServeConfig::builder()
+        .max_batch(8)
+        .max_wait(Duration::from_millis(2))
+        .stream(true)
+        .metrics_addr("127.0.0.1:0")
+        .serve(ServeFrontend::Plan(plan))
+        .unwrap();
     let metrics_addr = handle.metrics_addr().expect("metrics listener requested");
 
     // -- drive: one blocking client, strictly sequential -----------------
@@ -203,7 +199,6 @@ fn scraped_metrics_equal_reference_exec_stats_exactly() {
 
     // ===== decode path: serve --decode, cim_decode_* exactness ==========
     use cimsim::compiler::DecodePlan;
-    use cimsim::coordinator::serve_decode;
     use cimsim::nn::transformer::DecoderModel;
 
     let mut dcfg = Config::default();
@@ -216,16 +211,12 @@ fn scraped_metrics_equal_reference_exec_stats_exactly() {
     // deterministic, so its sessions are bit-equal to the served ones).
     let plan_ref = DecodePlan::new(dec_model(), &dec_cal, &dcfg, Some(0xD0)).unwrap();
 
-    let dh = serve_decode(
-        plan_serve,
-        ServeConfig {
-            max_batch: 4,
-            stream: true,
-            metrics_addr: Some("127.0.0.1:0".to_string()),
-            ..ServeConfig::default()
-        },
-    )
-    .unwrap();
+    let dh = ServeConfig::builder()
+        .max_batch(4)
+        .stream(true)
+        .metrics_addr("127.0.0.1:0")
+        .serve(ServeFrontend::Decode(plan_serve))
+        .unwrap();
     let dmetrics_addr = dh.metrics_addr().expect("decode metrics listener requested");
 
     // Strictly sequential requests: the global decode counters then
